@@ -1,0 +1,61 @@
+//! Memory-regression check for the PJRT runtime: 20k op executions must
+//! not grow RSS (the upstream xla crate's literal-path `execute` leaked
+//! every input buffer — see EXPERIMENTS.md §Perf change #2; our
+//! `buffer_from_host_buffer` + `execute_b` path is leak-free).
+//!
+//!     cargo run --release --example leaktest [run|literal]
+
+use rsc::runtime::{Backend, XlaBackend, Value};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() {
+        if l.starts_with("VmRSS") {
+            let kb: f64 = l.split_whitespace().nth(1).unwrap().parse().unwrap();
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = XlaBackend::load("tiny")?;
+    let v = 128usize;
+    let d = 16usize;
+    let a1 = Value::mat_f32(v, d, vec![0.5; v * d]);
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "run".into());
+    let start = rss_mb();
+    println!("mode {mode}: start {start:.1} MB");
+    match mode.as_str() {
+        "literal" => {
+            for i in 0..200_000 {
+                let l = xla::Literal::vec1(&vec![0.5f32; v * d])
+                    .reshape(&[v as i64, d as i64])
+                    .unwrap();
+                std::hint::black_box(&l);
+                if i % 50_000 == 0 {
+                    println!("iter {i}: {:.1} MB", rss_mb());
+                }
+            }
+        }
+        _ => {
+            for i in 0..20_000 {
+                let out = b.run("add_16", &[a1.clone(), a1.clone()])?;
+                std::hint::black_box(&out);
+                if i % 5_000 == 0 {
+                    println!("iter {i}: {:.1} MB", rss_mb());
+                }
+            }
+        }
+    }
+    let end = rss_mb();
+    println!("end {end:.1} MB");
+    // allow warmup growth (compile caches) but not a per-call leak
+    assert!(
+        end - start < 120.0,
+        "RSS grew {:.1} MB over the loop — leak regression",
+        end - start
+    );
+    println!("leaktest OK");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT driver: lower the whole op catalog to HLO text + manifest.json.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Layout:
+  artifacts/<dataset>/<op>.hlo.txt
+  artifacts/<dataset>/manifest.json   # shapes + metadata the rust runtime
+                                      # validates against its own config
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--datasets a,b]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(dt)]
+
+
+def lower_op(op: model.OpSpec):
+    lowered = jax.jit(op.fn).lower(*op.args)
+    text = to_hlo_text(lowered)
+    out_avals = jax.eval_shape(op.fn, *op.args)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    entry = {
+        "name": op.name,
+        "file": f"{op.name}.hlo.txt",
+        "inputs": [
+            {"dtype": _dtype_name(a.dtype), "shape": list(a.shape)}
+            for a in op.args
+        ],
+        "outputs": [
+            {"dtype": _dtype_name(a.dtype), "shape": list(a.shape)}
+            for a in out_avals
+        ],
+        "meta": op.meta,
+    }
+    return text, entry
+
+
+def emit_dataset(cfg: model.DatasetCfg, out_dir: str, fwd_caps: bool) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    ops = model.build_catalog(cfg, fwd_caps=fwd_caps)
+    entries = []
+    t0 = time.time()
+    for i, op in enumerate(ops):
+        text, entry = lower_op(op)
+        with open(os.path.join(out_dir, entry["file"]), "w") as f:
+            f.write(text)
+        entries.append(entry)
+    manifest = {
+        "dataset": {
+            "name": cfg.name,
+            "v": cfg.v,
+            "e": cfg.e,
+            "m": cfg.full.m,
+            "d_in": cfg.d_in,
+            "d_h": cfg.d_h,
+            "n_class": cfg.n_class,
+            "multilabel": cfg.multilabel,
+            "layers": cfg.layers,
+            "gcnii_layers": cfg.gcnii_layers,
+            "gcnii_alpha": cfg.gcnii_alpha,
+            "gcnii_lambda": cfg.gcnii_lambda,
+            "saint_v": cfg.saint_v,
+            "saint_m": cfg.saint_m,
+            "caps": cfg.full.caps,
+            "saint_caps": cfg.saint.caps if cfg.saint_v else [],
+        },
+        "ops": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"  {cfg.name}: {len(entries)} ops in {time.time() - t0:.1f}s -> {out_dir}"
+    )
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument(
+        "--datasets",
+        default="tiny,reddit-sim,yelp-sim,proteins-sim,products-sim",
+        help="comma-separated subset of dataset configs to emit",
+    )
+    args = p.parse_args()
+    names = [n for n in args.datasets.split(",") if n]
+    t0 = time.time()
+    for name in names:
+        cfg = model.DATASETS[name]
+        # Table 1 needs reduced-cap *forward* ops: reddit + tiny only.
+        fwd_caps = name in ("reddit-sim", "tiny")
+        emit_dataset(cfg, os.path.join(args.out, name), fwd_caps)
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""L1 Pallas dense-matmul and row-norm kernels (interpret=True).
+
+``matmul`` is the classic MXU-aligned tiled kernel: the grid walks
+(m/bm, n/bn, k/bk) tiles, accumulating partial products into the output
+tile across the k dimension (k is the innermost, sequential grid axis).
+Tile sizes default to 128 — the MXU systolic-array edge — and inputs are
+zero-padded up to tile multiples by the wrapper, so any shape works.
+
+``row_norms`` computes per-row L2 norms with a row-tiled grid; it is the
+allocator's input (\\|nabla H_i\\|_2 in Eq. 4a) and must be cheap.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a, b):
+    return (a + b - 1) // b
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm, pn = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn
+    if (pm, pn) == (m, n):
+        return x
+    return jnp.pad(x, ((0, pm - m), (0, pn - n)))
+
+
+def matmul(x, y, bm=128, bn=128, bk=128):
+    """Tiled matmul: f32 accumulate, MXU-aligned 128x128x128 tiles."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    xp = _pad2(x, bm, bk)
+    yp = _pad2(y, bk, bn)
+    gm, gn, gk = xp.shape[0] // bm, yp.shape[1] // bn, xp.shape[1] // bk
+
+    def kernel(x_ref, y_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], yp.shape[1]), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def row_norms(x, block_rows=1024):
+    """Per-row L2 norms, row-tiled."""
+    m, d = x.shape
+    pm = _cdiv(m, block_rows) * block_rows
+    xp = jnp.pad(x, ((0, pm - m), (0, 0))) if pm != m else x
+
+    def kernel(x_ref, o_ref):
+        v = x_ref[...]
+        o_ref[...] = jnp.sqrt(jnp.sum(v * v, axis=1))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(pm // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pm,), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m]

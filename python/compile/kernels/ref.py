@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness references: pytest checks each Pallas kernel
+against the functions here, and the Rust native backend (rust/src/runtime/
+native.rs) mirrors the same semantics so the XLA executables can be
+cross-checked end-to-end.
+
+Sparse-matrix convention (shared with the Rust side):
+  A sparse matrix is an edge list ``(src, dst, w)`` of equal-length 1-D
+  arrays.  ``spmm(src, dst, w, x)[v] = sum_{e: dst[e]=v} w[e] * x[src[e]]``
+  i.e. out = S @ x where S[dst[e], src[e]] += w[e].  Padding edges use
+  ``w = 0`` (and any valid src/dst index), so padded buckets are exact.
+"""
+
+import jax.numpy as jnp
+
+
+def spmm_ref(src, dst, w, x, n_out):
+    """Edge-list SpMM: out[v] = sum over incoming edges of w * x[src]."""
+    msgs = x[src] * w[:, None]
+    return jnp.zeros((n_out, x.shape[1]), x.dtype).at[dst].add(msgs)
+
+
+def spmm_mean_ref(src, dst, x, n_out):
+    """SpMM_MEAN (Appendix A.3): mean reducer over incoming neighbours.
+
+    Equivalent to D^-1 A x where D counts incoming edges; rows with no
+    incoming edge produce zeros (0/1 guard) to avoid NaN.
+    """
+    ones = jnp.ones((src.shape[0],), x.dtype)
+    deg = jnp.zeros((n_out,), x.dtype).at[dst].add(ones)
+    summed = jnp.zeros((n_out, x.shape[1]), x.dtype).at[dst].add(x[src])
+    return summed / jnp.maximum(deg, 1.0)[:, None]
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu_bwd_ref(out, g):
+    """d/dx relu given the *output* (mask out>0 == pre-activation>0)."""
+    return g * (out > 0.0).astype(g.dtype)
+
+
+def row_norms_ref(x):
+    """L2 norm of each row."""
+    return jnp.sqrt(jnp.sum(x * x, axis=1))
+
+
+def approx_spmm_ref(src, dst, w, x, n_out, keep):
+    """Column-row sampled SpMM: drop every edge whose *source* row is not
+    in the keep set (top-k column-row pair selection of Section 3.2).
+
+    ``keep`` is a boolean [n_in] mask.  This is the oracle the padded
+    bucket executables must match: selecting pairs S keeps exactly the
+    edges with src in S.
+    """
+    w_sel = w * keep[src].astype(w.dtype)
+    return spmm_ref(src, dst, w_sel, x, n_out)
+
+
+def softmax_xent_ref(logits, labels, mask):
+    """Masked mean softmax cross-entropy -> (loss, dlogits)."""
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - zmax
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    logp = z - lse
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    onehot = jnp.zeros_like(logits).at[jnp.arange(logits.shape[0]), labels].set(1.0)
+    loss = -jnp.sum(jnp.sum(onehot * logp, axis=1) * mask) / n
+    dlogits = (jnp.exp(logp) - onehot) * (mask / n)[:, None]
+    return loss, dlogits
+
+
+def bce_logits_ref(logits, labels, mask):
+    """Masked mean binary cross-entropy with logits -> (loss, dlogits)."""
+    n = jnp.maximum(jnp.sum(mask), 1.0) * logits.shape[1]
+    # log(1+exp(x)) stable form
+    sp = jnp.maximum(logits, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    loss = jnp.sum((sp - logits * labels) * mask[:, None]) / n
+    sig = 1.0 / (1.0 + jnp.exp(-logits))
+    dlogits = (sig - labels) * (mask / n)[:, None]
+    return loss, dlogits
+
+
+def adam_ref(w, m, v, g, t, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    w2 = w - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return w2, m2, v2

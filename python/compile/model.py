@@ -1,0 +1,560 @@
+"""L2: the GNN op catalog.
+
+The Rust coordinator (L3) performs manual per-op backprop: every forward
+layer, every fused (ReLU-mask + SpMM-transpose) backward op, every loss,
+Adam update and row-norm reduction is a *separate* jitted jax function that
+``aot.py`` lowers to one HLO-text executable.  This file defines those
+functions with shapes baked per dataset config, plus the configs themselves.
+
+Why per-op executables?  RSC's contribution is a *dispatch policy*: which
+backward-SpMM variant (exact, or a top-k-sampled edge bucket) runs at each
+layer each step is decided at runtime by the greedy allocator + cache +
+switching schedule.  Static-shape AOT compilation then requires one
+executable per (dims, edge-capacity bucket) — the bucket ladder below.
+
+All sparse ops share the edge-list convention of ``kernels/ref.py``; the
+approximated ops are the *same* computation over a smaller, padded edge
+array (padding has w == 0), so a bucket executable is exact for whatever
+edge subset the coordinator feeds it.
+
+Models (paper Section 6.1):
+  GCN      H' = relu(SpMM(A_hat, H W))                     (Eq. 1)
+  SAGE     H' = relu(H W1 + SpMM_MEAN(A, H) W2)            (Eq. 6)
+  GCNII    H' = relu(((1-a) SpMM(A_hat,H) + a H0)((1-b_l)I + b_l W))
+  GraphSAINT = SAGE backbone on random-walk subgraphs (padded to caps).
+
+The backward op that RSC approximates is always the SpMM against the
+transposed adjacency (Section 3.1): nabla_in = SpMM(A^T, nabla_out-ish).
+"""
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+# Edge-capacity bucket ladder: fractions of the full edge count.  The
+# coordinator picks the smallest bucket >= the sampled edge count, so
+# wall-clock cost of the approximated op scales with retained edges.
+BUCKET_FRACTIONS = (
+    1 / 16,
+    1 / 8,
+    3 / 16,
+    1 / 4,
+    3 / 8,
+    1 / 2,
+    3 / 4,
+    1.0,
+)
+
+
+def bucket_caps(m_edges: int) -> list:
+    caps = sorted({max(1, math.ceil(f * m_edges)) for f in BUCKET_FRACTIONS})
+    if caps[-1] != m_edges:
+        caps[-1] = m_edges
+    return caps
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphShape:
+    """A (node-count, edge-count) pair with its bucket ladder."""
+
+    v: int
+    m: int  # directed edges incl. self-loops
+
+    @property
+    def caps(self):
+        return bucket_caps(self.m)
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetCfg:
+    """Mirrors rust/src/data/synth.rs — single source of truth is checked
+    at artifact-load time (rust asserts manifest dims match)."""
+
+    name: str
+    v: int
+    e: int  # undirected-expanded directed edges, WITHOUT self-loops
+    d_in: int
+    d_h: int
+    n_class: int
+    multilabel: bool
+    layers: int = 3
+    gcnii_layers: int = 4
+    gcnii_alpha: float = 0.1
+    gcnii_lambda: float = 0.5
+    # GraphSAINT padded-subgraph caps (0 = no saint ops for this dataset)
+    saint_v: int = 0
+    saint_m: int = 0
+
+    @property
+    def full(self) -> GraphShape:
+        return GraphShape(self.v, self.e + self.v)  # + self-loops
+
+    @property
+    def saint(self) -> GraphShape:
+        return GraphShape(self.saint_v, self.saint_m)
+
+
+# Scaled-down synthetic stand-ins for Reddit / Yelp / ogbn-proteins /
+# ogbn-products (see DESIGN.md Substitutions).  Edge counts are exact:
+# the rust SBM generator emits exactly `e` directed edges.
+DATASETS = {
+    "reddit-sim": DatasetCfg(
+        name="reddit-sim", v=6000, e=150000, d_in=64, d_h=64, n_class=16,
+        multilabel=False, saint_v=1536, saint_m=24576,
+    ),
+    "yelp-sim": DatasetCfg(
+        name="yelp-sim", v=8000, e=80000, d_in=64, d_h=64, n_class=20,
+        multilabel=True, saint_v=2048, saint_m=16384,
+    ),
+    "proteins-sim": DatasetCfg(
+        name="proteins-sim", v=4000, e=200000, d_in=32, d_h=64, n_class=8,
+        multilabel=True,
+    ),
+    "products-sim": DatasetCfg(
+        name="products-sim", v=20000, e=400000, d_in=64, d_h=64, n_class=16,
+        multilabel=False, saint_v=4096, saint_m=49152,
+    ),
+}
+
+# A tiny config for fast tests / CI.
+DATASETS["tiny"] = DatasetCfg(
+    name="tiny", v=128, e=1024, d_in=16, d_h=16, n_class=4,
+    multilabel=False, saint_v=64, saint_m=256,
+)
+
+
+@dataclasses.dataclass
+class OpSpec:
+    """One AOT executable: a jax function + example input shapes."""
+
+    name: str
+    fn: Callable[..., Any]
+    args: list  # of jax.ShapeDtypeStruct
+    meta: dict
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _edges(m):
+    return [_i32(m), _i32(m), _f32(m)]
+
+
+# --------------------------------------------------------------------------
+# Forward ops
+# --------------------------------------------------------------------------
+
+
+def gcn_fwd_fn(v, relu):
+    def fn(h, w, src, dst, ew):
+        j = ref.matmul_ref(h, w)
+        p = ref.spmm_ref(src, dst, ew, j, v)
+        return (ref.relu_ref(p) if relu else p,)
+
+    return fn
+
+
+def sage_fwd_fn(v, relu):
+    def fn(h, w1, w2, src, dst, ew):
+        m = ref.spmm_ref(src, dst, ew, h, v)  # mean weights baked into ew
+        p = ref.matmul_ref(h, w1) + ref.matmul_ref(m, w2)
+        return ((ref.relu_ref(p) if relu else p), m)
+
+    return fn
+
+
+def gcnii_fwd_fn(v, alpha, beta):
+    def fn(h, h0, w, src, dst, ew):
+        p = ref.spmm_ref(src, dst, ew, h, v)
+        u = (1.0 - alpha) * p + alpha * h0
+        z = (1.0 - beta) * u + beta * ref.matmul_ref(u, w)
+        return (ref.relu_ref(z), u)
+
+    return fn
+
+
+def dense_fwd_fn(relu):
+    def fn(x, w):
+        p = ref.matmul_ref(x, w)
+        return (ref.relu_ref(p) if relu else p,)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Backward ops.  The spmm_bwd_* family is THE op RSC approximates: it runs
+# over whatever (possibly sampled + padded) transposed edge list the
+# coordinator dispatches, at one of the bucket capacities.
+# --------------------------------------------------------------------------
+
+
+def spmm_bwd_mask_fn(v):
+    """Fused ReLU-backward + SpMM^T: gj = SpMM(edges, g .* [h_out>0])."""
+
+    def fn(h_out, g_out, src, dst, ew):
+        gp = ref.relu_bwd_ref(h_out, g_out)
+        return (ref.spmm_ref(src, dst, ew, gp, v),)
+
+    return fn
+
+
+def spmm_bwd_nomask_fn(v):
+    """SpMM^T without activation mask (output layer)."""
+
+    def fn(g_out, src, dst, ew):
+        return (ref.spmm_ref(src, dst, ew, g_out, v),)
+
+    return fn
+
+
+def spmm_bwd_acc_fn(v):
+    """acc + SpMM^T(g): used by SAGE/GCNII where the input grad is the sum
+    of a dense term and the (approximated) sparse term."""
+
+    def fn(acc, g, src, dst, ew):
+        return (acc + ref.spmm_ref(src, dst, ew, g, v),)
+
+    return fn
+
+
+def gcn_bwd_mm_fn():
+    """Given gj = d(H W), produce (gw, gh)."""
+
+    def fn(h, gj, w):
+        gw = ref.matmul_ref(h.T, gj)
+        gh = ref.matmul_ref(gj, w.T)
+        return gw, gh
+
+    return fn
+
+
+def sage_bwd_pre_fn(masked):
+    """SAGE backward, dense part.  gp = g .* mask; returns the two weight
+    grads, the grad wrt the mean-aggregated m (input to the approximated
+    SpMM^T), and the dense partial of the input grad."""
+
+    def fn(h_out, g_out, h, m, w1, w2):
+        gp = ref.relu_bwd_ref(h_out, g_out) if masked else g_out
+        gw1 = ref.matmul_ref(h.T, gp)
+        gw2 = ref.matmul_ref(m.T, gp)
+        gm = ref.matmul_ref(gp, w2.T)
+        gh_a = ref.matmul_ref(gp, w1.T)
+        return gw1, gw2, gm, gh_a
+
+    def fn_nomask(g_out, h, m, w1, w2):
+        return fn(None, g_out, h, m, w1, w2)
+
+    if masked:
+        return fn
+    return fn_nomask
+
+
+def gcnii_bwd_pre_fn(alpha, beta):
+    """GCNII backward, dense part: returns (gw, gp, gh0c) where gp feeds
+    the approximated SpMM^T and gh0c accumulates into nabla H0."""
+
+    def fn(h_out, g_out, u, w):
+        gz = ref.relu_bwd_ref(h_out, g_out)
+        gu = (1.0 - beta) * gz + beta * ref.matmul_ref(gz, w.T)
+        gw = beta * ref.matmul_ref(u.T, gz)
+        gp = (1.0 - alpha) * gu
+        gh0c = alpha * gu
+        return gw, gp, gh0c
+
+    return fn
+
+
+def dense_bwd_fn(masked):
+    def fn(x, out, g, w):
+        gp = ref.relu_bwd_ref(out, g) if masked else g
+        gw = ref.matmul_ref(x.T, gp)
+        gx = ref.matmul_ref(gp, w.T)
+        return gw, gx
+
+    def fn_nomask(x, g, w):
+        return fn(x, None, g, w)
+
+    if masked:
+        return fn
+    return fn_nomask
+
+
+def add_fn():
+    def fn(a, b):
+        return (a + b,)
+
+    return fn
+
+
+def loss_softmax_fn():
+    def fn(logits, labels, mask):
+        return ref.softmax_xent_ref(logits, labels, mask)
+
+    return fn
+
+
+def loss_bce_fn():
+    def fn(logits, labels, mask):
+        return ref.bce_logits_ref(logits, labels, mask)
+
+    return fn
+
+
+def adam_fn():
+    def fn(w, m, v, g, t, lr):
+        return ref.adam_ref(w, m, v, g, t, lr)
+
+    return fn
+
+
+def row_norms_fn():
+    def fn(g):
+        return (ref.row_norms_ref(g),)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Catalog assembly
+# --------------------------------------------------------------------------
+
+
+def gcnii_beta(cfg: DatasetCfg, layer: int) -> float:
+    """beta_l = log(lambda/l + 1) (Chen et al., 2020); layer is 1-based."""
+    return math.log(cfg.gcnii_lambda / layer + 1.0)
+
+
+def _fwd_ops(cfg: DatasetCfg, g: GraphShape, prefix: str) -> list:
+    """Forward ops for one graph shape (full graph or SAINT subgraph)."""
+    v, m = g.v, g.m
+    dims = [cfg.d_in] + [cfg.d_h] * (cfg.layers - 1) + [cfg.n_class]
+    ops = []
+    seen = set()
+
+    def emit(name, fn, args, **meta):
+        if name in seen:
+            return
+        seen.add(name)
+        ops.append(OpSpec(name, fn, args, dict(meta)))
+
+    # GCN + SAGE per-layer forwards (shared across layers w/ equal dims)
+    for l in range(cfg.layers):
+        din, dout = dims[l], dims[l + 1]
+        relu = l < cfg.layers - 1
+        tag = f"{din}x{dout}_{'relu' if relu else 'lin'}"
+        emit(
+            f"{prefix}gcn_fwd_{tag}",
+            gcn_fwd_fn(v, relu),
+            [_f32(v, din), _f32(din, dout)] + _edges(m),
+            kind="gcn_fwd", din=din, dout=dout, relu=relu, cap=m,
+        )
+        emit(
+            f"{prefix}sage_fwd_{tag}",
+            sage_fwd_fn(v, relu),
+            [_f32(v, din), _f32(din, dout), _f32(din, dout)] + _edges(m),
+            kind="sage_fwd", din=din, dout=dout, relu=relu, cap=m,
+        )
+    # GCNII stack: in-proj, L propagation layers at d_h, out-proj
+    emit(
+        f"{prefix}dense_fwd_{cfg.d_in}x{cfg.d_h}_relu",
+        dense_fwd_fn(True),
+        [_f32(v, cfg.d_in), _f32(cfg.d_in, cfg.d_h)],
+        kind="dense_fwd", din=cfg.d_in, dout=cfg.d_h, relu=True,
+    )
+    emit(
+        f"{prefix}dense_fwd_{cfg.d_h}x{cfg.n_class}_lin",
+        dense_fwd_fn(False),
+        [_f32(v, cfg.d_h), _f32(cfg.d_h, cfg.n_class)],
+        kind="dense_fwd", din=cfg.d_h, dout=cfg.n_class, relu=False,
+    )
+    for l in range(1, cfg.gcnii_layers + 1):
+        emit(
+            f"{prefix}gcnii_fwd_{cfg.d_h}_l{l}",
+            gcnii_fwd_fn(v, cfg.gcnii_alpha, gcnii_beta(cfg, l)),
+            [_f32(v, cfg.d_h), _f32(v, cfg.d_h), _f32(cfg.d_h, cfg.d_h)]
+            + _edges(m),
+            kind="gcnii_fwd", d=cfg.d_h, layer=l, cap=m,
+            alpha=cfg.gcnii_alpha, beta=gcnii_beta(cfg, l),
+        )
+    return ops
+
+
+def _bwd_ops(cfg: DatasetCfg, g: GraphShape, prefix: str) -> list:
+    v = g.v
+    dims = [cfg.d_in] + [cfg.d_h] * (cfg.layers - 1) + [cfg.n_class]
+    ops = []
+    seen = set()
+
+    def emit(name, fn, args, **meta):
+        if name in seen:
+            return
+        seen.add(name)
+        ops.append(OpSpec(name, fn, args, dict(meta)))
+
+    # The approximated family: one executable per (dim, variant, cap).
+    # Backward-SpMM grads only ever have width d_h or n_class (layer-1
+    # inputs never need grads — Appendix A.3).
+    bwd_dims = sorted({cfg.d_h, cfg.n_class})
+    for d in bwd_dims:
+        for cap in g.caps:
+            emit(
+                f"{prefix}spmm_bwd_mask_{d}_cap{cap}",
+                spmm_bwd_mask_fn(v),
+                [_f32(v, d), _f32(v, d)] + _edges(cap),
+                kind="spmm_bwd_mask", d=d, cap=cap,
+            )
+            emit(
+                f"{prefix}spmm_bwd_nomask_{d}_cap{cap}",
+                spmm_bwd_nomask_fn(v),
+                [_f32(v, d)] + _edges(cap),
+                kind="spmm_bwd_nomask", d=d, cap=cap,
+            )
+            emit(
+                f"{prefix}spmm_bwd_acc_{d}_cap{cap}",
+                spmm_bwd_acc_fn(v),
+                [_f32(v, d), _f32(v, d)] + _edges(cap),
+                kind="spmm_bwd_acc", d=d, cap=cap,
+            )
+    # Dense backward pieces
+    for l in range(cfg.layers):
+        din, dout = dims[l], dims[l + 1]
+        emit(
+            f"{prefix}gcn_bwd_mm_{din}x{dout}",
+            gcn_bwd_mm_fn(),
+            [_f32(v, din), _f32(v, dout), _f32(din, dout)],
+            kind="gcn_bwd_mm", din=din, dout=dout,
+        )
+        masked = l < cfg.layers - 1
+        if masked:
+            emit(
+                f"{prefix}sage_bwd_pre_mask_{din}x{dout}",
+                sage_bwd_pre_fn(True),
+                [_f32(v, dout), _f32(v, dout), _f32(v, din), _f32(v, din),
+                 _f32(din, dout), _f32(din, dout)],
+                kind="sage_bwd_pre_mask", din=din, dout=dout,
+            )
+        else:
+            emit(
+                f"{prefix}sage_bwd_pre_nomask_{din}x{dout}",
+                sage_bwd_pre_fn(False),
+                [_f32(v, dout), _f32(v, din), _f32(v, din),
+                 _f32(din, dout), _f32(din, dout)],
+                kind="sage_bwd_pre_nomask", din=din, dout=dout,
+            )
+    for l in range(1, cfg.gcnii_layers + 1):
+        emit(
+            f"{prefix}gcnii_bwd_pre_{cfg.d_h}_l{l}",
+            gcnii_bwd_pre_fn(cfg.gcnii_alpha, gcnii_beta(cfg, l)),
+            [_f32(v, cfg.d_h)] * 3 + [_f32(cfg.d_h, cfg.d_h)],
+            kind="gcnii_bwd_pre", d=cfg.d_h, layer=l,
+            alpha=cfg.gcnii_alpha, beta=gcnii_beta(cfg, l),
+        )
+    emit(
+        f"{prefix}dense_bwd_mask_{cfg.d_in}x{cfg.d_h}",
+        dense_bwd_fn(True),
+        [_f32(v, cfg.d_in), _f32(v, cfg.d_h), _f32(v, cfg.d_h),
+         _f32(cfg.d_in, cfg.d_h)],
+        kind="dense_bwd_mask", din=cfg.d_in, dout=cfg.d_h,
+    )
+    emit(
+        f"{prefix}dense_bwd_nomask_{cfg.d_h}x{cfg.n_class}",
+        dense_bwd_fn(False),
+        [_f32(v, cfg.d_h), _f32(v, cfg.n_class), _f32(cfg.d_h, cfg.n_class)],
+        kind="dense_bwd_nomask", din=cfg.d_h, dout=cfg.n_class,
+    )
+    # Elementwise add (grad accumulation), losses, row norms
+    for d in sorted({cfg.d_h, cfg.n_class}):
+        emit(f"{prefix}add_{d}", add_fn(), [_f32(v, d), _f32(v, d)],
+             kind="add", d=d)
+        emit(f"{prefix}row_norms_{d}", row_norms_fn(), [_f32(v, d)],
+             kind="row_norms", d=d)
+    if cfg.multilabel:
+        emit(
+            f"{prefix}loss_bce",
+            loss_bce_fn(),
+            [_f32(v, cfg.n_class), _f32(v, cfg.n_class), _f32(v)],
+            kind="loss_bce", c=cfg.n_class,
+        )
+    else:
+        emit(
+            f"{prefix}loss_softmax",
+            loss_softmax_fn(),
+            [_f32(v, cfg.n_class), _i32(v), _f32(v)],
+            kind="loss_softmax", c=cfg.n_class,
+        )
+    return ops
+
+
+def _adam_ops(cfg: DatasetCfg) -> list:
+    """Adam is per-weight-shape; graph-independent."""
+    dims = [cfg.d_in] + [cfg.d_h] * (cfg.layers - 1) + [cfg.n_class]
+    shapes = set()
+    for l in range(cfg.layers):
+        shapes.add((dims[l], dims[l + 1]))
+    shapes.add((cfg.d_in, cfg.d_h))
+    shapes.add((cfg.d_h, cfg.d_h))
+    shapes.add((cfg.d_h, cfg.n_class))
+    ops = []
+    for (r, c) in sorted(shapes):
+        ops.append(
+            OpSpec(
+                f"adam_{r}x{c}",
+                adam_fn(),
+                [_f32(r, c)] * 4 + [_f32(), _f32()],
+                {"kind": "adam", "rows": r, "cols": c},
+            )
+        )
+    return ops
+
+
+def _fwd_cap_ops(cfg: DatasetCfg, g: GraphShape) -> list:
+    """Forward GCN ops at reduced edge caps — used only by the Table 1
+    experiment (approximating the *forward* pass, which the paper shows
+    is catastrophically biased)."""
+    v = g.v
+    dims = [cfg.d_in] + [cfg.d_h] * (cfg.layers - 1) + [cfg.n_class]
+    ops = []
+    seen = set()
+    for l in range(cfg.layers):
+        din, dout = dims[l], dims[l + 1]
+        relu = l < cfg.layers - 1
+        for cap in g.caps[:-1]:  # full cap already emitted by _fwd_ops
+            name = f"gcn_fwd_{din}x{dout}_{'relu' if relu else 'lin'}_cap{cap}"
+            if name in seen:
+                continue
+            seen.add(name)
+            ops.append(
+                OpSpec(
+                    name,
+                    gcn_fwd_fn(v, relu),
+                    [_f32(v, din), _f32(din, dout)] + _edges(cap),
+                    {"kind": "gcn_fwd", "din": din, "dout": dout,
+                     "relu": relu, "cap": cap},
+                )
+            )
+    return ops
+
+
+def build_catalog(cfg: DatasetCfg, fwd_caps: bool = False) -> list:
+    """Every executable for one dataset: full-batch ops, optional SAINT
+    subgraph ops, Adam, and (optionally) reduced-cap forward ops."""
+    ops = []
+    ops += _fwd_ops(cfg, cfg.full, "")
+    ops += _bwd_ops(cfg, cfg.full, "")
+    if cfg.saint_v > 0:
+        ops += _fwd_ops(cfg, cfg.saint, "saint_")
+        ops += _bwd_ops(cfg, cfg.saint, "saint_")
+    ops += _adam_ops(cfg)
+    if fwd_caps:
+        ops += _fwd_cap_ops(cfg, cfg.full)
+    return ops

@@ -1,0 +1,248 @@
+# pytest: L2 catalog ops — shape contracts, composition against a
+# straight-line jnp reference model, and Prop 3.1 (backward-only
+# approximation yields unbiased gradients).
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.DATASETS["tiny"]
+
+
+def rand_inputs(rng, specs):
+    out = []
+    for s in specs:
+        if s.dtype == jnp.int32:
+            hi = max(int(np.prod(s.shape)), 2)
+            out.append(jnp.asarray(rng.integers(0, min(hi, 4), s.shape), jnp.int32))
+        else:
+            out.append(jnp.asarray(rng.normal(size=s.shape), jnp.float32))
+    return out
+
+
+def test_catalog_builds_and_names_unique():
+    ops = model.build_catalog(CFG, fwd_caps=True)
+    names = [o.name for o in ops]
+    assert len(names) == len(set(names))
+    assert len(ops) > 100
+    kinds = {o.meta["kind"] for o in ops}
+    for k in [
+        "gcn_fwd", "sage_fwd", "gcnii_fwd", "dense_fwd", "spmm_bwd_mask",
+        "spmm_bwd_nomask", "spmm_bwd_acc", "gcn_bwd_mm", "sage_bwd_pre_mask",
+        "sage_bwd_pre_nomask", "gcnii_bwd_pre", "dense_bwd_mask",
+        "dense_bwd_nomask", "add", "row_norms", "loss_softmax", "adam",
+    ]:
+        assert k in kinds, k
+
+
+def test_every_op_evaluates_at_example_shapes():
+    """eval_shape already ran at lowering; here we actually execute each op
+    once on random inputs and check output shapes match the advertised
+    shapes."""
+    rng = np.random.default_rng(0)
+    ops = model.build_catalog(CFG, fwd_caps=False)
+    for op in ops:
+        args = rand_inputs(rng, op.args)
+        out = op.fn(*args)
+        if not isinstance(out, (tuple, list)):
+            out = (out,)
+        shapes = [tuple(np.asarray(o).shape) for o in out]
+        want = jax.eval_shape(op.fn, *op.args)
+        if not isinstance(want, (tuple, list)):
+            want = (want,)
+        assert shapes == [tuple(w.shape) for w in want], op.name
+
+
+def test_bucket_caps_monotone_and_end_at_m():
+    caps = model.bucket_caps(1000)
+    assert caps == sorted(set(caps))
+    assert caps[-1] == 1000
+    assert caps[0] >= 1
+
+
+def test_gcn_fwd_composition_matches_manual():
+    rng = np.random.default_rng(1)
+    v, din, dout, e = CFG.v, CFG.d_in, CFG.d_h, CFG.full.m
+    fn = model.gcn_fwd_fn(v, relu=True)
+    h = jnp.asarray(rng.normal(size=(v, din)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(din, dout)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    ew = jnp.asarray(rng.normal(size=e), jnp.float32)
+    (got,) = fn(h, w, src, dst, ew)
+    want = ref.relu_ref(ref.spmm_ref(src, dst, ew, h @ w, v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_gcn_backward_ops_match_jax_autodiff():
+    """The manual backward decomposition (spmm_bwd_mask + gcn_bwd_mm) must
+    equal jax.grad of the fused layer."""
+    rng = np.random.default_rng(2)
+    v, din, dout, e = 30, 8, 6, 90
+    h = jnp.asarray(rng.normal(size=(v, din)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(din, dout)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    ew = jnp.asarray(rng.normal(size=e), jnp.float32)
+    g_out = jnp.asarray(rng.normal(size=(v, dout)), jnp.float32)
+
+    def layer(h, w):
+        return ref.relu_ref(ref.spmm_ref(src, dst, ew, h @ w, v))
+
+    h_out = layer(h, w)
+    want_gh, want_gw = jax.vjp(layer, h, w)[1](g_out)
+
+    # manual: transposed edges = (src=dst_row, dst=col) of the matrix
+    # S[dst,src] — transpose swaps roles.
+    gj = model.spmm_bwd_mask_fn(v)(h_out, g_out, dst, src, ew)[0]
+    gw, gh = model.gcn_bwd_mm_fn()(h, gj, w)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(want_gw), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(want_gh), atol=1e-3)
+
+
+def test_sage_backward_matches_autodiff():
+    rng = np.random.default_rng(3)
+    v, din, dout, e = 25, 7, 5, 70
+    h = jnp.asarray(rng.normal(size=(v, din)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(din, dout)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(din, dout)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    ew = jnp.asarray(rng.normal(size=e), jnp.float32)
+    g_out = jnp.asarray(rng.normal(size=(v, dout)), jnp.float32)
+
+    def layer(h, w1, w2):
+        m = ref.spmm_ref(src, dst, ew, h, v)
+        return ref.relu_ref(h @ w1 + m @ w2)
+
+    h_out, m = model.sage_fwd_fn(v, relu=True)(h, w1, w2, src, dst, ew)
+    want_gh, want_gw1, want_gw2 = jax.vjp(layer, h, w1, w2)[1](g_out)
+
+    gw1, gw2, gm, gh_a = model.sage_bwd_pre_fn(True)(h_out, g_out, h, m, w1, w2)
+    (gh,) = model.spmm_bwd_acc_fn(v)(gh_a, gm, dst, src, ew)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(want_gw1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw2), np.asarray(want_gw2), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(want_gh), atol=1e-3)
+
+
+def test_gcnii_backward_matches_autodiff():
+    rng = np.random.default_rng(4)
+    v, d, e = 20, 6, 60
+    alpha, beta = 0.1, model.gcnii_beta(CFG, 2)
+    h = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, d)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    ew = jnp.asarray(rng.normal(size=e), jnp.float32)
+    g_out = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+
+    def layer(h, h0, w):
+        p = ref.spmm_ref(src, dst, ew, h, v)
+        u = (1 - alpha) * p + alpha * h0
+        z = (1 - beta) * u + beta * u @ w
+        return ref.relu_ref(z)
+
+    h_out, u = model.gcnii_fwd_fn(v, alpha, beta)(h, h0, w, src, dst, ew)
+    want_gh, want_gh0, want_gw = jax.vjp(layer, h, h0, w)[1](g_out)
+
+    gw, gp, gh0c = model.gcnii_bwd_pre_fn(alpha, beta)(h_out, g_out, u, w)
+    (gh,) = model.spmm_bwd_nomask_fn(v)(gp, dst, src, ew)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(want_gw), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gh0c), np.asarray(want_gh0), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(want_gh), atol=1e-3)
+
+
+def test_prop31_backward_only_approx_is_unbiased():
+    """Proposition 3.1: with an unbiased estimator (Drineas probability
+    sampling) applied ONLY in the backward pass, E[grad] == exact grad.
+    Monte-Carlo check on a 1-layer GCN."""
+    rng = np.random.default_rng(7)
+    v, din, dout, e = 12, 5, 3, 50
+    h = jnp.asarray(rng.normal(size=(v, din)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(din, dout)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    ew = jnp.asarray(rng.normal(size=e), jnp.float32)
+    g_out = jnp.asarray(rng.normal(size=(v, dout)), jnp.float32)
+
+    h_out = model.gcn_fwd_fn(v, relu=True)(h, w, src, dst, ew)[0]
+    # exact gradient wrt J = H W
+    gp = ref.relu_bwd_ref(h_out, g_out)
+    exact_gj = ref.spmm_ref(dst, src, ew, gp, v)
+
+    # column-row pair i of A^T = row i of A = edges with dst == i (matrix
+    # rows are dst).  p_i ∝ ‖A^T_{:,i}‖‖gp_i‖.
+    ew_np = np.asarray(ew)
+    dst_np = np.asarray(dst)
+    col_norm = np.zeros(v)
+    for i in range(v):
+        col_norm[i] = math.sqrt(float((ew_np[dst_np == i] ** 2).sum()))
+    gp_norm = np.linalg.norm(np.asarray(gp), axis=1)
+    scores = col_norm * gp_norm
+    p = scores / scores.sum()
+
+    k, trials = 3, 1500
+    acc = np.zeros((v, dout), np.float64)
+    for _ in range(trials):
+        picks = rng.choice(v, size=k, p=p)
+        scale = np.zeros(v, np.float32)
+        for i in picks:
+            scale[i] += 1.0 / (k * p[i])
+        ew_scaled = ew * jnp.asarray(scale)[dst]
+        approx_gj = ref.spmm_ref(dst, src, ew_scaled, gp, v)
+        acc += np.asarray(approx_gj, np.float64)
+    mean = acc / trials
+    scale_ref = np.abs(np.asarray(exact_gj)).max() + 0.1
+    assert np.abs(mean - np.asarray(exact_gj)).max() / scale_ref < 0.12
+
+
+def test_forward_approx_is_biased_through_relu():
+    """The converse of Prop 3.1 (Section 3.1.2): the SAME unbiased
+    estimator applied in the FORWARD pass gives biased activations,
+    because E[relu(x)] != relu(E[x])."""
+    rng = np.random.default_rng(8)
+    v, din, dout, e = 10, 4, 3, 40
+    h = jnp.asarray(rng.normal(size=(v, din)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(din, dout)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    ew = jnp.asarray(rng.normal(size=e), jnp.float32)
+
+    exact = model.gcn_fwd_fn(v, relu=True)(h, w, src, dst, ew)[0]
+    j = h @ w
+    ew_np = np.asarray(ew)
+    dst_np = np.asarray(dst)
+    col_norm = np.zeros(v)
+    for i in range(v):
+        col_norm[i] = math.sqrt(float((ew_np[dst_np == i] ** 2).sum()))
+    # here the "rows" of the product are J rows: pair i weights ‖J_i‖
+    jn = np.linalg.norm(np.asarray(j), axis=1)
+    # forward spmm edges: out[dst] += w x[src]; pair index = src column
+    src_np = np.asarray(src)
+    col_norm_src = np.zeros(v)
+    for i in range(v):
+        col_norm_src[i] = math.sqrt(float((ew_np[src_np == i] ** 2).sum()))
+    scores = col_norm_src * jn
+    p = scores / max(scores.sum(), 1e-9)
+
+    k, trials = 2, 1200
+    acc = np.zeros((v, dout), np.float64)
+    for _ in range(trials):
+        picks = rng.choice(v, size=k, p=p)
+        scale = np.zeros(v, np.float32)
+        for i in picks:
+            scale[i] += 1.0 / (k * p[i])
+        ew_scaled = ew * jnp.asarray(scale)[src]
+        approx = ref.relu_ref(ref.spmm_ref(src, dst, ew_scaled, j, v))
+        acc += np.asarray(approx, np.float64)
+    mean = acc / trials
+    bias = np.abs(mean - np.asarray(exact)).max()
+    scale_ref = np.abs(np.asarray(exact)).max() + 0.1
+    # relative bias should be clearly nonzero (vs <0.12 in the bwd test)
+    assert bias / scale_ref > 0.2, f"expected visible bias, got {bias / scale_ref}"

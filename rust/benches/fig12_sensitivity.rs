@@ -1,0 +1,57 @@
+//! Figure 12: hyperparameter sensitivity of RSC (GraphSAGE on
+//! proteins-sim): the budget C, the greedy step size alpha, and the
+//! switch-back point.  Shape to hold: larger C = better metric / less
+//! speedup; alpha barely matters; later switch-back = faster but larger
+//! drop.
+
+use rsc::bench::harness::{header, BenchScale};
+use rsc::bench::support::{run_trials, RunStats};
+use rsc::coordinator::RscConfig;
+use rsc::model::ops::ModelKind;
+use rsc::runtime::XlaBackend;
+use rsc::util::stats::Table;
+
+fn main() -> anyhow::Result<()> {
+    header("fig12", "sensitivity: C, alpha, switch point (SAGE, proteins-sim)");
+    let scale = BenchScale::from_env(1, 60);
+    let dataset = "proteins-sim";
+    let model = ModelKind::Sage;
+    let b = XlaBackend::load(dataset)?;
+    let base = run_trials(&b, dataset, model, RscConfig::baseline(), scale.epochs, scale.trials)?;
+    println!("baseline: {} @ {:.2}s\n", base.metric_pm(), base.wall_mean());
+    let run = |rsc: RscConfig| -> anyhow::Result<RunStats> {
+        run_trials(&b, dataset, model, rsc, scale.epochs, scale.trials)
+    };
+
+    let mut t = Table::new(vec!["knob", "value", "AUC", "speedup"]);
+    for c in [0.1, 0.3, 0.5] {
+        let r = run(RscConfig { budget_c: c, ..Default::default() })?;
+        t.row(vec![
+            "budget C".into(),
+            format!("{c}"),
+            r.metric_pm(),
+            format!("{:.2}x", base.wall_mean() / r.wall_mean()),
+        ]);
+    }
+    for alpha in [0.01, 0.02, 0.05, 0.1] {
+        let r = run(RscConfig { budget_c: 0.3, alpha, ..Default::default() })?;
+        t.row(vec![
+            "step alpha".into(),
+            format!("{alpha}"),
+            r.metric_pm(),
+            format!("{:.2}x", base.wall_mean() / r.wall_mean()),
+        ]);
+    }
+    for sw in [0.6, 0.7, 0.8, 0.9, 1.0] {
+        let r = run(RscConfig { budget_c: 0.3, switch_frac: sw, ..Default::default() })?;
+        t.row(vec![
+            "switch at".into(),
+            format!("{:.0}%", sw * 100.0),
+            r.metric_pm(),
+            format!("{:.2}x", base.wall_mean() / r.wall_mean()),
+        ]);
+    }
+    t.print();
+    println!("paper (Fig. 12): C trades metric for speed; alpha ~flat; later switch = faster/worse");
+    Ok(())
+}

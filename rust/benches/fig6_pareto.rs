@@ -1,0 +1,78 @@
+//! Figures 6 / 9 / 10: the accuracy-efficiency Pareto frontier of RSC's
+//! greedy allocation vs the uniform baseline, sweeping the budget C with
+//! caching and switching DISABLED (the paper's protocol for this figure).
+//!
+//! Default: GCN on reddit-sim (Fig. 6).  RSC_BENCH_FULL=1 adds
+//! proteins-sim (Fig. 9) and yelp-sim (Fig. 10) with SAGE and GCNII.
+//!
+//! Shape to hold: greedy sits above uniform, most visibly at high speedup.
+
+use rsc::bench::harness::{header, BenchScale};
+use rsc::bench::support::{run_trials, RunStats};
+use rsc::coordinator::{AllocKind, RscConfig};
+use rsc::model::ops::ModelKind;
+use rsc::runtime::XlaBackend;
+use rsc::util::stats::Table;
+
+fn main() -> anyhow::Result<()> {
+    header("fig6/9/10", "Pareto: greedy vs uniform allocation, no cache/switch");
+    let scale = BenchScale::from_env(1, 50);
+    let budgets = [0.05, 0.1, 0.2, 0.3, 0.5];
+    let mut combos: Vec<(&str, ModelKind)> = vec![("reddit-sim", ModelKind::Gcn)];
+    if scale.full {
+        combos.extend([
+            ("proteins-sim", ModelKind::Gcn),
+            ("proteins-sim", ModelKind::Sage),
+            ("proteins-sim", ModelKind::Gcnii),
+            ("yelp-sim", ModelKind::Gcn),
+            ("yelp-sim", ModelKind::Sage),
+            ("yelp-sim", ModelKind::Gcnii),
+        ]);
+    }
+    for (dataset, model) in combos {
+        let b = XlaBackend::load(dataset)?;
+        let base = run_trials(
+            &b,
+            dataset,
+            model,
+            RscConfig::baseline(),
+            scale.epochs,
+            scale.trials,
+        )?;
+        println!(
+            "\n{} / {}  (baseline {} @ {:.2}s)",
+            model.name(),
+            dataset,
+            base.metric_pm(),
+            base.wall_mean()
+        );
+        let mut t = Table::new(vec!["C", "strategy", "metric", "speedup"]);
+        for alloc in [AllocKind::Greedy, AllocKind::Uniform] {
+            for &c in &budgets {
+                let r: RunStats = run_trials(
+                    &b,
+                    dataset,
+                    model,
+                    RscConfig {
+                        budget_c: c,
+                        allocator: alloc,
+                        refresh_every: 1, // caching off
+                        switch_frac: 1.0, // switching off
+                        ..Default::default()
+                    },
+                    scale.epochs,
+                    scale.trials,
+                )?;
+                t.row(vec![
+                    format!("{c}"),
+                    format!("{alloc:?}"),
+                    r.metric_pm(),
+                    format!("{:.2}x", base.wall_mean() / r.wall_mean()),
+                ]);
+            }
+        }
+        t.print();
+    }
+    println!("\npaper (Fig. 6/9/10): greedy Pareto-dominates uniform, esp. at high speedup");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Table 11: running time of the greedy allocation algorithm — must be
+//! negligible next to the training step it dispatches (paper: 20-60ms at
+//! 233k-2.4M nodes; proportionally less here).  Also reports the exact-DP
+//! solver for the optimality-gap ablation (DESIGN.md).
+
+use rsc::allocator::{evaluate, Allocator, DpExact, GreedyAllocator, LayerScores, UniformAllocator};
+use rsc::bench::harness::{bench_fn, header, BenchScale};
+use rsc::bench::support::PAPER_DATASETS;
+use rsc::data::load_or_generate;
+use rsc::sampling::pair_scores;
+use rsc::util::rng::Rng;
+use rsc::util::stats::Table;
+
+fn layers_for(dataset: &str, sites: usize, rng: &mut Rng) -> anyhow::Result<Vec<LayerScores>> {
+    let ds = load_or_generate(dataset, 0)?;
+    let matrix = ds.adj.gcn_normalize();
+    let col = matrix.row_norms();
+    let nnz: Vec<u32> = (0..matrix.n).map(|r| matrix.row_nnz(r) as u32).collect();
+    Ok((0..sites)
+        .map(|_| {
+            let g: Vec<f32> = (0..matrix.n).map(|_| rng.f32()).collect();
+            LayerScores { scores: pair_scores(&col, &g), nnz: nnz.clone(), d: ds.cfg.d_h }
+        })
+        .collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    header("table11", "greedy allocator runtime (+ DP gap on tiny)");
+    let scale = BenchScale::from_env(1, 0);
+    let iters = if scale.full { 50 } else { 15 };
+    let mut rng = Rng::new(0xA110C);
+    let mut t = Table::new(vec!["dataset", "model", "sites", "greedy ms", "uniform ms"]);
+    for dataset in PAPER_DATASETS {
+        for (model, sites) in [("GCN", 3usize), ("GraphSAGE", 2), ("GCNII", 4)] {
+            let layers = layers_for(dataset, sites, &mut rng)?;
+            let g = bench_fn("greedy", 1, iters, || {
+                GreedyAllocator::default().allocate(&layers, 0.1)
+            });
+            let u = bench_fn("uniform", 1, iters, || {
+                UniformAllocator.allocate(&layers, 0.1)
+            });
+            t.row(vec![
+                dataset.to_string(),
+                model.to_string(),
+                sites.to_string(),
+                format!("{:.2}", g.median_ms),
+                format!("{:.4}", u.median_ms),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper (Table 11): 0.02-0.06s at 233k-2.4M nodes — negligible either way\n");
+
+    // optimality gap vs exact DP (coarse grid so DP stays tractable)
+    let layers = layers_for("tiny", 3, &mut rng)?;
+    let mut t2 = Table::new(vec!["C", "greedy kept", "dp kept", "gap"]);
+    for c in [0.1, 0.3, 0.5] {
+        let kg = GreedyAllocator { alpha: 0.05, min_frac: 0.02 }.allocate(&layers, c);
+        let kd = DpExact { alpha: 0.05, min_frac: 0.02, ..Default::default() }
+            .allocate(&layers, c);
+        let (kept_g, _) = evaluate(&layers, &kg);
+        let (kept_d, _) = evaluate(&layers, &kd);
+        t2.row(vec![
+            format!("{c}"),
+            format!("{kept_g:.4}"),
+            format!("{kept_d:.4}"),
+            format!("{:.2}%", 100.0 * (kept_d - kept_g) / kept_d.max(1e-9)),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Table 2: operation-level efficiency — wall-clock of a single backward
+//! SpMM / SpMM_MEAN, exact vs RSC-sampled (C=0.1), per dataset.
+//!
+//! Paper: bwd SpMM speedups 11.6x / 3.49x / 2.89x / 8.98x and SpMM_MEAN
+//! 5.92x / 1.75x / 8.26x / 4.43x.  The shape to hold: multi-x per-op
+//! speedups that vary with the dataset's degree skew, with the fwd op
+//! unchanged.
+
+use rsc::allocator::{Allocator, GreedyAllocator, LayerScores};
+use rsc::bench::harness::{bench_fn, header, BenchScale};
+use rsc::bench::support::PAPER_DATASETS;
+use rsc::data::load_or_generate;
+use rsc::graph::Csr;
+use rsc::model::ops::edge_values;
+use rsc::runtime::{Backend, Value, XlaBackend};
+use rsc::sampling::{pair_scores, top_k_indices, Selection};
+use rsc::util::rng::Rng;
+use rsc::util::stats::Table;
+
+struct OpRow {
+    fwd_ms: f64,
+    bwd_exact_ms: f64,
+    bwd_rsc_ms: f64,
+    cap: usize,
+}
+
+fn measure(
+    b: &XlaBackend,
+    matrix: &Csr,
+    caps: &[usize],
+    d: usize,
+    iters: usize,
+    budget_c: f64,
+    rng: &mut Rng,
+) -> anyhow::Result<OpRow> {
+    let v = matrix.n;
+    let m = *caps.last().unwrap();
+    let g = Value::mat_f32(v, d, (0..v * d).map(|_| rng.normal_f32()).collect());
+
+    // exact backward (= a full-edge SpMM, the same op the fwd pass runs)
+    let exact = Selection::exact(matrix, caps);
+    let (es, ed, ew) = edge_values(&exact.edges);
+    let op = format!("spmm_bwd_nomask_{d}_cap{m}");
+    b.run(&op, &[g.clone(), es.clone(), ed.clone(), ew.clone()])?;
+    let bwd_exact =
+        bench_fn(&op, 1, iters, || {
+            b.run(&op, &[g.clone(), es.clone(), ed.clone(), ew.clone()]).unwrap()
+        });
+
+    // fwd cost == the same spmm shape (reported for the fwd/bwd split)
+    let fwd_ms = bwd_exact.median_ms;
+
+    // RSC: allocate k under C for this single op, sample, pick bucket
+    let col = matrix.row_norms();
+    let gnorm: Vec<f32> = (0..v).map(|_| rng.f32()).collect();
+    let layer = LayerScores {
+        scores: pair_scores(&col, &gnorm),
+        nnz: (0..v).map(|r| matrix.row_nnz(r) as u32).collect(),
+        d,
+    };
+    let ks = GreedyAllocator::default().allocate(std::slice::from_ref(&layer), budget_c);
+    let rows = top_k_indices(&layer.scores, ks[0]);
+    let sel = Selection::build(matrix, rows, caps);
+    let (ss, sd, sw) = edge_values(&sel.edges);
+    let op_s = format!("spmm_bwd_nomask_{d}_cap{}", sel.cap);
+    b.run(&op_s, &[g.clone(), ss.clone(), sd.clone(), sw.clone()])?;
+    let bwd_rsc = bench_fn(&op_s, 1, iters, || {
+        b.run(&op_s, &[g.clone(), ss.clone(), sd.clone(), sw.clone()]).unwrap()
+    });
+
+    Ok(OpRow {
+        fwd_ms,
+        bwd_exact_ms: bwd_exact.median_ms,
+        bwd_rsc_ms: bwd_rsc.median_ms,
+        cap: sel.cap,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    header("table2", "per-op backward SpMM / SpMM_MEAN speedup at C=0.1");
+    let scale = BenchScale::from_env(1, 0);
+    let iters = if scale.full { 50 } else { 15 };
+    let mut t = Table::new(vec![
+        "dataset", "op", "fwd ms", "bwd ms", "+RSC bwd ms", "speedup", "bucket",
+    ]);
+    let mut rng = Rng::new(0xB2);
+    for name in PAPER_DATASETS {
+        let b = XlaBackend::load(name)?;
+        let ds = load_or_generate(name, 0)?;
+        let caps = b.manifest().dataset.caps.clone();
+        let d = ds.cfg.d_h;
+        for (label, matrix) in [
+            ("SpMM", ds.adj.gcn_normalize()),
+            ("SpMM_MEAN", ds.adj.mean_normalize()),
+        ] {
+            let r = measure(&b, &matrix, &caps, d, iters, 0.1, &mut rng)?;
+            t.row(vec![
+                name.to_string(),
+                label.to_string(),
+                format!("{:.2}", r.fwd_ms),
+                format!("{:.2}", r.bwd_exact_ms),
+                format!("{:.2}", r.bwd_rsc_ms),
+                format!("{:.2}x", r.bwd_exact_ms / r.bwd_rsc_ms),
+                format!("{}/{}", r.cap, caps.last().unwrap()),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper (Table 2): bwd speedups 11.6/3.5/2.9/9.0x (SpMM), 5.9/1.8/8.3/4.4x (MEAN)");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Exact reference solver for Eq. (4) on small instances.
+//!
+//! The paper notes the problem "can be solved by dynamic programming"
+//! but that DP is too slow to be practical — we build it anyway as the
+//! optimality oracle the greedy solver is tested against, and to measure
+//! the greedy/exact gap (reported by the table11 bench).
+//!
+//! Formulation: each layer chooses k_l from the step grid
+//! {k_min, k_min+step, ..., |V|}; maximize kept score subject to total
+//! FLOPs <= budget.  DP over layers with FLOPs compressed to the distinct
+//! reachable values (exact, not discretized) — exponential in the worst
+//! case, fine for the test sizes it exists for.
+
+use crate::allocator::{total_budget, Allocator, LayerPrefix, LayerScores};
+use std::collections::HashMap;
+
+pub struct DpExact {
+    pub alpha: f64,
+    pub min_frac: f64,
+    /// Safety valve: max states per DP layer before giving up (falls back
+    /// to greedy-compatible truncation of dominated states).
+    pub max_states: usize,
+}
+
+impl Default for DpExact {
+    fn default() -> Self {
+        DpExact { alpha: 0.02, min_frac: 0.02, max_states: 2_000_000 }
+    }
+}
+
+impl Allocator for DpExact {
+    fn allocate(&self, layers: &[LayerScores], budget_c: f64) -> Vec<usize> {
+        let budget = total_budget(layers, budget_c);
+        let prefixes: Vec<LayerPrefix> =
+            layers.iter().map(LayerPrefix::new).collect();
+        let v = layers.first().map(|l| l.scores.len()).unwrap_or(0);
+        let step = ((self.alpha * v as f64).round() as usize).max(1);
+        let k_min = ((self.min_frac * v as f64).round() as usize).max(1);
+
+        // grid of candidate k per layer (descending from |V|)
+        let grid: Vec<usize> = {
+            let mut g = vec![];
+            let mut k = v;
+            loop {
+                g.push(k);
+                if k <= k_min {
+                    break;
+                }
+                k = k.saturating_sub(step).max(k_min);
+            }
+            g
+        };
+
+        // DP state: flops -> (best kept score, choice path)
+        let mut states: HashMap<u64, (f64, Vec<usize>)> = HashMap::new();
+        states.insert(0, (0.0, vec![]));
+        for p in &prefixes {
+            let mut next: HashMap<u64, (f64, Vec<usize>)> = HashMap::new();
+            for (&flops, (kept, path)) in &states {
+                for &k in &grid {
+                    let nf = flops + p.flops(k);
+                    if nf > budget {
+                        continue;
+                    }
+                    let nk = kept + p.kept(k);
+                    let entry = next.entry(nf);
+                    match entry {
+                        std::collections::hash_map::Entry::Occupied(mut e) => {
+                            if nk > e.get().0 {
+                                let mut np = path.clone();
+                                np.push(k);
+                                e.insert((nk, np));
+                            }
+                        }
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            let mut np = path.clone();
+                            np.push(k);
+                            e.insert((nk, np));
+                        }
+                    }
+                }
+            }
+            assert!(
+                next.len() <= self.max_states,
+                "DP state explosion ({} states): use greedy",
+                next.len()
+            );
+            // prune dominated states: sort by flops asc, keep monotone kept
+            let mut items: Vec<(u64, (f64, Vec<usize>))> = next.into_iter().collect();
+            items.sort_by_key(|(f, _)| *f);
+            let mut pruned: Vec<(u64, (f64, Vec<usize>))> = Vec::new();
+            let mut best_kept = f64::NEG_INFINITY;
+            for (f, (kept, path)) in items {
+                if kept > best_kept {
+                    best_kept = kept;
+                    pruned.push((f, (kept, path)));
+                }
+            }
+            states = pruned.into_iter().collect();
+        }
+
+        states
+            .into_values()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .map(|(_, path)| path)
+            .unwrap_or_else(|| vec![k_min; layers.len()])
+    }
+
+    fn name(&self) -> &'static str {
+        "dp-exact"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::{evaluate, GreedyAllocator};
+    use crate::util::prop;
+
+    #[test]
+    fn dp_dominates_greedy() {
+        // DP is optimal on the same grid, so its kept score must be >=
+        // greedy's for every feasible instance.
+        prop::check("dp-optimal", 10, |rng| {
+            let v = rng.range(8, 30);
+            let layers: Vec<LayerScores> = (0..rng.range(1, 4))
+                .map(|_| LayerScores {
+                    scores: (0..v).map(|_| rng.f32()).collect(),
+                    nnz: (0..v).map(|_| rng.below(5) as u32 + 1).collect(),
+                    d: rng.range(1, 16),
+                })
+                .collect();
+            let c = 0.2 + 0.6 * rng.f64();
+            let alpha = 0.1; // coarse grid keeps DP small
+            let g = GreedyAllocator { alpha, min_frac: 0.1 };
+            let d = DpExact { alpha, min_frac: 0.1, ..Default::default() };
+            let kg = g.allocate(&layers, c);
+            let kd = d.allocate(&layers, c);
+            let (kept_g, flops_g) = evaluate(&layers, &kg);
+            let (kept_d, flops_d) = evaluate(&layers, &kd);
+            let budget = crate::allocator::total_budget(&layers, c);
+            assert!(flops_d <= budget);
+            if flops_g <= budget {
+                assert!(
+                    kept_d >= kept_g - 1e-9,
+                    "dp {kept_d} < greedy {kept_g}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn dp_single_layer_exact() {
+        // single layer: optimum = largest k fitting the budget
+        let layers = vec![LayerScores {
+            scores: vec![1.0; 10],
+            nnz: vec![1; 10],
+            d: 1,
+        }];
+        let d = DpExact { alpha: 0.1, min_frac: 0.1, ..Default::default() };
+        let ks = d.allocate(&layers, 0.55);
+        assert_eq!(ks, vec![5]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Algorithm 1: greedy descent.  Start with k_l = |V| everywhere; each
+//! move reduces one layer's k by the step α|V|, choosing the layer whose
+//! dropped (normalized) score mass is minimal; stop once total FLOPs fit
+//! the budget.  With the precomputed prefix sums every move costs O(L),
+//! so a full allocation is O(V log V · L) dominated by the argsort — the
+//! "runs super fast" claim of Section 3.2.1 (verified in Table 11's bench).
+
+use crate::allocator::{total_budget, Allocator, LayerPrefix, LayerScores};
+
+pub struct GreedyAllocator {
+    /// Step size α as a fraction of |V| (paper default 0.02).
+    pub alpha: f64,
+    /// Lower bound on k_l as a fraction of |V| (keeps every layer from
+    /// collapsing to zero pairs; paper's plots bottom out near one step).
+    pub min_frac: f64,
+}
+
+impl Default for GreedyAllocator {
+    fn default() -> Self {
+        GreedyAllocator { alpha: 0.02, min_frac: 0.02 }
+    }
+}
+
+impl Allocator for GreedyAllocator {
+    fn allocate(&self, layers: &[LayerScores], budget_c: f64) -> Vec<usize> {
+        let budget = total_budget(layers, budget_c);
+        let prefixes: Vec<LayerPrefix> =
+            layers.iter().map(LayerPrefix::new).collect();
+        let v = layers.first().map(|l| l.scores.len()).unwrap_or(0);
+        let step = ((self.alpha * v as f64).round() as usize).max(1);
+        let k_min = ((self.min_frac * v as f64).round() as usize).max(1);
+
+        let mut ks: Vec<usize> = vec![v; layers.len()];
+        let mut flops: u64 = prefixes.iter().map(|p| p.flops(v)).sum();
+
+        while flops > budget {
+            // pick the layer whose next step drops the least score mass
+            let mut best: Option<(usize, f64)> = None;
+            for (l, p) in prefixes.iter().enumerate() {
+                if ks[l] <= k_min {
+                    continue;
+                }
+                let next = ks[l].saturating_sub(step).max(k_min);
+                let dropped = p.kept(ks[l]) - p.kept(next);
+                // tie-break toward the layer freeing more FLOPs
+                let better = match best {
+                    None => true,
+                    Some((bl, bd)) => {
+                        dropped < bd
+                            || (dropped == bd
+                                && p.flops(ks[l]) - p.flops(next)
+                                    > prefixes[bl].flops(ks[bl])
+                                        - prefixes[bl].flops(
+                                            ks[bl].saturating_sub(step).max(k_min),
+                                        ))
+                    }
+                };
+                if better {
+                    best = Some((l, dropped));
+                }
+            }
+            let Some((l, _)) = best else {
+                break; // every layer at floor; budget unreachable
+            };
+            let next = ks[l].saturating_sub(step).max(k_min);
+            flops -= prefixes[l].flops(ks[l]) - prefixes[l].flops(next);
+            ks[l] = next;
+        }
+        ks
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::{evaluate, total_budget};
+    use crate::util::prop;
+
+    fn layers_random(rng: &mut crate::util::rng::Rng, l: usize, v: usize) -> Vec<LayerScores> {
+        (0..l)
+            .map(|_| LayerScores {
+                scores: (0..v).map(|_| rng.f32()).collect(),
+                nnz: (0..v).map(|_| rng.below(9) as u32 + 1).collect(),
+                d: rng.range(1, 64),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn respects_budget() {
+        prop::check("greedy-budget", 25, |rng| {
+            let nl = rng.range(1, 5);
+            let nv = rng.range(10, 120);
+            let layers = layers_random(rng, nl, nv);
+            let c = 0.05 + 0.9 * rng.f64();
+            let alloc = GreedyAllocator::default();
+            let ks = alloc.allocate(&layers, c);
+            let (_, flops) = evaluate(&layers, &ks);
+            let budget = total_budget(&layers, c);
+            // feasible unless floored out
+            let v = layers[0].scores.len();
+            let k_min = ((alloc.min_frac * v as f64).round() as usize).max(1);
+            if ks.iter().any(|&k| k > k_min) || flops <= budget {
+                assert!(
+                    flops <= budget,
+                    "flops {flops} > budget {budget} with ks {ks:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn full_budget_keeps_everything() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let layers = layers_random(&mut rng, 3, 50);
+        let ks = GreedyAllocator::default().allocate(&layers, 1.0);
+        assert!(ks.iter().all(|&k| k == 50));
+    }
+
+    #[test]
+    fn protects_important_layer() {
+        // layer 0 has all the score mass; layer 1 is noise. Under a tight
+        // budget greedy should cut layer 1 far more.
+        let layers = vec![
+            LayerScores {
+                scores: (0..100).map(|i| 100.0 - i as f32).collect(),
+                nnz: vec![5; 100],
+                d: 8,
+            },
+            LayerScores {
+                scores: vec![0.01; 100],
+                nnz: vec![5; 100],
+                d: 8,
+            },
+        ];
+        let ks = GreedyAllocator::default().allocate(&layers, 0.3);
+        assert!(
+            ks[0] > 2 * ks[1],
+            "expected layer 0 protected: {ks:?}"
+        );
+    }
+
+    #[test]
+    fn monotone_in_budget() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let layers = layers_random(&mut rng, 3, 80);
+        let a = GreedyAllocator::default();
+        let (kept_lo, _) = evaluate(&layers, &a.allocate(&layers, 0.1));
+        let (kept_hi, _) = evaluate(&layers, &a.allocate(&layers, 0.5));
+        assert!(kept_hi >= kept_lo);
+    }
+}

@@ -1,0 +1,149 @@
+//! Layer-wise computation-resource allocation (paper Section 3.2, Eq. 4).
+//!
+//! Given per-pair scores s_i = ‖A^T_{:,i}‖·‖dH^{(l+1)}_{i,:}‖ and costs
+//! nnz_i for every layer, choose k_l (pairs kept per layer) minimizing the
+//! total normalized dropped score subject to
+//!
+//! ```text
+//! sum_l sum_{i in Top_{k_l}} nnz_i * d_l  <=  C * sum_l m * d_l
+//! ```
+//!
+//! Three strategies: the paper's greedy (Alg. 1), an exact DP/brute-force
+//! reference for small instances, and the uniform baseline (k_l = C·|V|)
+//! that Figure 6 compares against.
+
+pub mod dp;
+pub mod greedy;
+pub mod uniform;
+
+pub use dp::DpExact;
+pub use greedy::GreedyAllocator;
+pub use uniform::UniformAllocator;
+
+use crate::sampling::topk::argsort_desc;
+
+/// Per-layer allocation inputs.
+#[derive(Debug, Clone)]
+pub struct LayerScores {
+    /// Pair scores s_i (length |V|), NOT normalized.
+    pub scores: Vec<f32>,
+    /// Pair costs nnz_i (length |V|): out-degree of row i in A_hat.
+    pub nnz: Vec<u32>,
+    /// Hidden width d_l of the gradient this SpMM processes.
+    pub d: usize,
+}
+
+/// Precomputed sorted order + prefix sums for O(1) greedy moves.
+#[derive(Debug, Clone)]
+pub struct LayerPrefix {
+    /// Pair indices in descending score order.
+    pub order: Vec<u32>,
+    /// score_prefix[j] = sum of top-j normalized scores (normalized by the
+    /// layer's total score mass, matching Eq. 4a's relative error).
+    pub score_prefix: Vec<f64>,
+    /// nnz_prefix[j] = sum of top-j pair costs.
+    pub nnz_prefix: Vec<u64>,
+    pub d: usize,
+}
+
+impl LayerPrefix {
+    pub fn new(layer: &LayerScores) -> LayerPrefix {
+        let order = argsort_desc(&layer.scores);
+        let total: f64 = layer.scores.iter().map(|&s| s as f64).sum();
+        let norm = if total > 0.0 { total } else { 1.0 };
+        let mut score_prefix = Vec::with_capacity(order.len() + 1);
+        let mut nnz_prefix = Vec::with_capacity(order.len() + 1);
+        score_prefix.push(0.0);
+        nnz_prefix.push(0);
+        let (mut sacc, mut nacc) = (0f64, 0u64);
+        for &i in &order {
+            sacc += layer.scores[i as usize] as f64 / norm;
+            nacc += layer.nnz[i as usize] as u64;
+            score_prefix.push(sacc);
+            nnz_prefix.push(nacc);
+        }
+        LayerPrefix { order, score_prefix, nnz_prefix, d: layer.d }
+    }
+
+    /// FLOPs of keeping the top-k pairs.
+    pub fn flops(&self, k: usize) -> u64 {
+        self.nnz_prefix[k] * self.d as u64
+    }
+
+    /// Kept (normalized) score mass of the top-k pairs.
+    pub fn kept(&self, k: usize) -> f64 {
+        self.score_prefix[k]
+    }
+
+    /// Top-k pair indices.
+    pub fn top(&self, k: usize) -> Vec<u32> {
+        self.order[..k].to_vec()
+    }
+}
+
+/// Total FLOPs budget: C * sum_l m * d_l (Eq. 4b RHS).
+pub fn total_budget(layers: &[LayerScores], c: f64) -> u64 {
+    let total: u64 = layers
+        .iter()
+        .map(|l| l.nnz.iter().map(|&n| n as u64).sum::<u64>() * l.d as u64)
+        .sum();
+    (c * total as f64).floor() as u64
+}
+
+/// An allocation strategy: returns k_l per layer.
+pub trait Allocator {
+    fn allocate(&self, layers: &[LayerScores], budget_c: f64) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Objective value (total kept normalized score — higher is better) and
+/// feasibility helper shared by tests/benches.
+pub fn evaluate(layers: &[LayerScores], ks: &[usize]) -> (f64, u64) {
+    let mut kept = 0f64;
+    let mut flops = 0u64;
+    for (l, &k) in layers.iter().zip(ks) {
+        let p = LayerPrefix::new(l);
+        kept += p.kept(k);
+        flops += p.flops(k);
+    }
+    (kept, flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn toy_layers() -> Vec<LayerScores> {
+        vec![
+            LayerScores {
+                scores: vec![10.0, 1.0, 5.0, 0.5],
+                nnz: vec![4, 1, 2, 1],
+                d: 2,
+            },
+            LayerScores {
+                scores: vec![1.0, 1.0, 1.0, 1.0],
+                nnz: vec![2, 2, 2, 2],
+                d: 4,
+            },
+        ]
+    }
+
+    #[test]
+    fn prefix_sums() {
+        let l = &toy_layers()[0];
+        let p = LayerPrefix::new(l);
+        assert_eq!(p.order, vec![0, 2, 1, 3]);
+        assert_eq!(p.nnz_prefix, vec![0, 4, 6, 7, 8]);
+        assert!((p.kept(4) - 1.0).abs() < 1e-9);
+        assert!((p.kept(2) - 15.0 / 16.5).abs() < 1e-9);
+        assert_eq!(p.flops(2), 12);
+    }
+
+    #[test]
+    fn budget_math() {
+        let layers = toy_layers();
+        // total = 8*2 + 8*4 = 48
+        assert_eq!(total_budget(&layers, 1.0), 48);
+        assert_eq!(total_budget(&layers, 0.5), 24);
+    }
+}

@@ -1,0 +1,41 @@
+//! The uniform baseline of Section 6.2.2: k_l = C·|V| for every layer.
+//! This is what Figure 6/9/10 compare the greedy allocator against — note
+//! it cannot control FLOPs (the whole point of Eq. 4b): the same k keeps
+//! different FLOPs depending on which pairs score high.
+
+use crate::allocator::{Allocator, LayerScores};
+
+pub struct UniformAllocator;
+
+impl Allocator for UniformAllocator {
+    fn allocate(&self, layers: &[LayerScores], budget_c: f64) -> Vec<usize> {
+        layers
+            .iter()
+            .map(|l| {
+                let v = l.scores.len();
+                ((budget_c * v as f64).round() as usize).clamp(1, v)
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_uniform() {
+        let layers = vec![
+            LayerScores { scores: vec![1.0; 100], nnz: vec![1; 100], d: 4 },
+            LayerScores { scores: vec![9.0; 100], nnz: vec![7; 100], d: 8 },
+        ];
+        let ks = UniformAllocator.allocate(&layers, 0.25);
+        assert_eq!(ks, vec![25, 25]);
+        let ks = UniformAllocator.allocate(&layers, 1.0);
+        assert_eq!(ks, vec![100, 100]);
+    }
+}

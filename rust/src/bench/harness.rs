@@ -1,0 +1,97 @@
+//! Mini-criterion: time a closure with warmup, report mean/std/median,
+//! and print rows in a consistent format every bench target shares.
+
+use crate::util::stats;
+use crate::util::timer::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms ±{:>8.3} (median {:.3}, min {:.3}, n={})",
+            self.name, self.mean_ms, self.std_ms, self.median_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn bench_fn<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let sw = Stopwatch::start();
+        std::hint::black_box(f());
+        times.push(sw.ms());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_ms: stats::mean(&times),
+        std_ms: stats::std_dev(&times),
+        median_ms: stats::median(&times),
+        min_ms: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Standard bench-target header so `cargo bench` output is self-labelling.
+pub fn header(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+}
+
+/// Parse the common bench flags from env (benches can't take CLI args
+/// uniformly under `cargo bench`): RSC_BENCH_TRIALS, RSC_BENCH_EPOCHS,
+/// RSC_BENCH_FULL=1 for paper-scale runs.
+pub struct BenchScale {
+    pub trials: usize,
+    pub epochs: usize,
+    pub full: bool,
+}
+
+impl BenchScale {
+    pub fn from_env(default_trials: usize, default_epochs: usize) -> BenchScale {
+        let get = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<usize>().ok());
+        let full = std::env::var("RSC_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+        let mut s = BenchScale {
+            trials: get("RSC_BENCH_TRIALS").unwrap_or(default_trials),
+            epochs: get("RSC_BENCH_EPOCHS").unwrap_or(default_epochs),
+            full,
+        };
+        if full {
+            s.trials = s.trials.max(5);
+            s.epochs = s.epochs.max(300);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let r = bench_fn("sleep", 1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.9, "{}", r.mean_ms);
+        assert!(r.min_ms <= r.median_ms);
+        assert!(r.summary().contains("sleep"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Measurement harness (criterion replacement): warmup + repeated timing
+//! with summary stats, plus helpers shared by the per-table bench targets.
+
+pub mod harness;
+pub mod support;
+
+pub use harness::{bench_fn, BenchResult};

@@ -1,0 +1,116 @@
+//! Shared plumbing for the per-table/figure bench targets.
+
+use crate::coordinator::RscConfig;
+use crate::data::{load_or_generate, Dataset};
+use crate::model::ops::ModelKind;
+use crate::runtime::Backend;
+use crate::train::{train, TrainConfig, TrainResult};
+use crate::util::stats;
+use crate::Result;
+
+/// Multi-trial training outcome.
+pub struct RunStats {
+    pub metrics: Vec<f64>,
+    pub walls: Vec<f64>,
+    pub last: Option<TrainResult>,
+}
+
+impl RunStats {
+    /// "95.33±0.04" with metrics scaled to percent.
+    pub fn metric_pm(&self) -> String {
+        let pct: Vec<f64> = self.metrics.iter().map(|m| m * 100.0).collect();
+        format!("{:.2}±{:.2}", stats::mean(&pct), stats::std_dev(&pct))
+    }
+
+    pub fn wall_mean(&self) -> f64 {
+        stats::mean(&self.walls)
+    }
+
+    pub fn metric_mean(&self) -> f64 {
+        stats::mean(&self.metrics)
+    }
+}
+
+/// Train `trials` seeds and collect metric + wall-clock.
+pub fn run_trials(
+    backend: &dyn Backend,
+    dataset: &str,
+    model: ModelKind,
+    rsc: RscConfig,
+    epochs: usize,
+    trials: usize,
+) -> Result<RunStats> {
+    let mut metrics = Vec::new();
+    let mut walls = Vec::new();
+    let mut last = None;
+    for t in 0..trials.max(1) {
+        let ds = load_or_generate(dataset, t as u64)?;
+        let cfg = TrainConfig {
+            model,
+            epochs,
+            lr: 0.01,
+            seed: t as u64,
+            rsc: rsc.clone(),
+            eval_every: (epochs / 10).max(1),
+            verbose: false,
+            saint_subgraphs: 8,
+            saint_batches_per_epoch: 4,
+        };
+        let res = train(backend, &ds, &cfg)?;
+        metrics.push(res.test_metric);
+        walls.push(res.train_wall_s);
+        last = Some(res);
+    }
+    Ok(RunStats { metrics, walls, last })
+}
+
+/// One (baseline, rsc) pair; returns (base, rsc, speedup).
+pub fn run_pair(
+    backend: &dyn Backend,
+    dataset: &str,
+    model: ModelKind,
+    rsc: RscConfig,
+    epochs: usize,
+    trials: usize,
+) -> Result<(RunStats, RunStats, f64)> {
+    let base = run_trials(backend, dataset, model, RscConfig::baseline(), epochs, trials)?;
+    let with = run_trials(backend, dataset, model, rsc, epochs, trials)?;
+    let speedup = base.wall_mean() / with.wall_mean().max(1e-9);
+    Ok((base, with, speedup))
+}
+
+/// Datasets in the paper's column order.
+pub const PAPER_DATASETS: [&str; 4] =
+    ["reddit-sim", "yelp-sim", "proteins-sim", "products-sim"];
+
+/// Paper budgets per (model, dataset) — Table 3's C column.
+pub fn paper_budget(model: ModelKind, dataset: &str) -> f64 {
+    match (model, dataset) {
+        (ModelKind::Saint, "products-sim") => 0.3,
+        (ModelKind::Saint, _) => 0.1,
+        (ModelKind::Gcn, "reddit-sim") | (ModelKind::Gcn, "yelp-sim") => 0.1,
+        (ModelKind::Gcn, _) => 0.3,
+        (ModelKind::Sage, "proteins-sim") => 0.3,
+        (ModelKind::Sage, _) => 0.1,
+        (ModelKind::Gcnii, "reddit-sim") => 0.3,
+        (ModelKind::Gcnii, "proteins-sim") => 0.5,
+        (ModelKind::Gcnii, _) => 0.1,
+    }
+}
+
+/// `ds` has a usable dataset/model pairing in the paper's Table 3.
+pub fn paper_cell_exists(model: ModelKind, dataset: &str) -> bool {
+    !matches!(
+        (model, dataset),
+        (ModelKind::Saint, "proteins-sim") | (ModelKind::Gcnii, "products-sim")
+    )
+}
+
+/// Load the dataset's graph once (for op-level benches).
+pub fn dataset_and_backend(
+    name: &str,
+) -> Result<(Dataset, crate::runtime::XlaBackend)> {
+    let b = crate::runtime::XlaBackend::load(name)?;
+    let ds = load_or_generate(name, 0)?;
+    Ok((ds, b))
+}

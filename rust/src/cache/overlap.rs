@@ -1,0 +1,149 @@
+//! Figure 4's diagnostic: how similar are the top-k selections across
+//! nearby iterations?  The paper reports it as an AUC score — treat the
+//! *membership* of a pair in the later selection as the binary label and
+//! the earlier step's scores as the prediction; AUC 1.0 means the earlier
+//! ranking perfectly predicts the later top-k set.
+
+/// ROC-AUC of `scores` against binary `labels` (1 = positive).
+/// Ties handled by the rank-sum (Mann–Whitney U) formulation.
+pub fn ranking_auc(scores: &[f32], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return f64::NAN;
+    }
+    // ranks with tie-averaging
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut rank = vec![0f64; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0; // 1-based average rank
+        for &k in &idx[i..=j] {
+            rank[k] = avg;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 = labels
+        .iter()
+        .zip(&rank)
+        .filter(|(&l, _)| l)
+        .map(|(_, &r)| r)
+        .sum();
+    let u = rank_sum_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Tracks per-layer selection stability across steps (the Figure 4 curve).
+#[derive(Debug)]
+pub struct OverlapTracker {
+    /// Previous snapshot per layer: (step, scores at that step).
+    prev: Vec<Option<(u64, Vec<f32>)>>,
+    /// Gap between compared iterations (paper: 10).
+    pub gap: u64,
+    /// Collected (layer, step, auc) samples.
+    pub samples: Vec<(usize, u64, f64)>,
+}
+
+impl OverlapTracker {
+    pub fn new(layers: usize, gap: u64) -> OverlapTracker {
+        OverlapTracker {
+            prev: (0..layers).map(|_| None).collect(),
+            gap,
+            samples: Vec::new(),
+        }
+    }
+
+    /// Record the scores and current top-k membership at `step`; if a
+    /// snapshot from `gap` steps ago exists, emit an AUC sample comparing
+    /// the old scores to the new membership.
+    pub fn observe(&mut self, layer: usize, step: u64, scores: &[f32], topk: &[u32]) {
+        if let Some((s0, old_scores)) = &self.prev[layer] {
+            if step.saturating_sub(*s0) >= self.gap {
+                let mut labels = vec![false; scores.len()];
+                for &i in topk {
+                    labels[i as usize] = true;
+                }
+                let auc = ranking_auc(old_scores, &labels);
+                if !auc.is_nan() {
+                    self.samples.push((layer, step, auc));
+                }
+                self.prev[layer] = Some((step, scores.to_vec()));
+            }
+        } else {
+            self.prev[layer] = Some((step, scores.to_vec()));
+        }
+    }
+
+    pub fn mean_auc(&self, layer: usize) -> f64 {
+        let xs: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|(l, _, _)| *l == layer)
+            .map(|(_, _, a)| *a)
+            .collect();
+        crate::util::stats::mean(&xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation() {
+        let scores = vec![0.9, 0.8, 0.2, 0.1];
+        let labels = vec![true, true, false, false];
+        assert!((ranking_auc(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_is_zero() {
+        let scores = vec![0.1, 0.2, 0.8, 0.9];
+        let labels = vec![true, true, false, false];
+        assert!(ranking_auc(&scores, &labels).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_is_half() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let n = 4000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.chance(0.3)).collect();
+        let auc = ranking_auc(&scores, &labels);
+        assert!((auc - 0.5).abs() < 0.03, "auc={auc}");
+    }
+
+    #[test]
+    fn ties_average() {
+        let scores = vec![0.5, 0.5];
+        let labels = vec![true, false];
+        assert!((ranking_auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_nan() {
+        assert!(ranking_auc(&[1.0], &[true]).is_nan());
+    }
+
+    #[test]
+    fn tracker_emits_after_gap() {
+        let mut t = OverlapTracker::new(1, 10);
+        let scores = vec![0.9, 0.8, 0.1, 0.0];
+        t.observe(0, 0, &scores, &[0, 1]);
+        assert!(t.samples.is_empty());
+        for s in 1..10 {
+            t.observe(0, s, &scores, &[0, 1]);
+        }
+        assert!(t.samples.is_empty());
+        t.observe(0, 10, &scores, &[0, 1]);
+        assert_eq!(t.samples.len(), 1);
+        assert!((t.samples[0].2 - 1.0).abs() < 1e-12);
+        assert!((t.mean_auc(0) - 1.0).abs() < 1e-12);
+    }
+}

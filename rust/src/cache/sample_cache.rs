@@ -1,0 +1,170 @@
+//! Per-layer cache of sampled (sliced + padded) sparse matrices.
+//!
+//! Slicing the sparse matrix dominates the sampling cost (Figure 5); the
+//! top-k indices barely move between nearby iterations (Figure 4), so RSC
+//! re-samples only every `refresh_every` steps and reuses the cached
+//! Selection in between.  A refresh is also forced whenever the allocator
+//! hands the layer a different k.
+
+use crate::graph::Csr;
+use crate::sampling::Selection;
+
+#[derive(Debug)]
+struct Entry {
+    selection: Selection,
+    built_at_step: u64,
+    k: usize,
+}
+
+#[derive(Debug)]
+pub struct SampleCache {
+    entries: Vec<Option<Entry>>,
+    /// Steps between refreshes (paper default: 10). 1 = caching disabled.
+    pub refresh_every: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl SampleCache {
+    pub fn new(layers: usize, refresh_every: u64) -> SampleCache {
+        assert!(refresh_every >= 1);
+        SampleCache {
+            entries: (0..layers).map(|_| None).collect(),
+            refresh_every,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// True if layer needs (re)building at `step` for the given k.
+    pub fn stale(&self, layer: usize, step: u64, k: usize) -> bool {
+        match &self.entries[layer] {
+            None => true,
+            Some(e) => e.k != k || step.saturating_sub(e.built_at_step) >= self.refresh_every,
+        }
+    }
+
+    /// Get the cached selection, or rebuild via `rows_fn` (which returns
+    /// the freshly selected pair rows).  `adj` is the matrix being sampled
+    /// (A_hat in row-major; edges are emitted in transposed orientation).
+    pub fn get_or_build(
+        &mut self,
+        layer: usize,
+        step: u64,
+        k: usize,
+        adj: &Csr,
+        caps: &[usize],
+        rows_fn: impl FnOnce() -> Vec<u32>,
+    ) -> &Selection {
+        if self.stale(layer, step, k) {
+            self.misses += 1;
+            let sel = Selection::build(adj, rows_fn(), caps);
+            self.entries[layer] = Some(Entry { selection: sel, built_at_step: step, k });
+        } else {
+            self.hits += 1;
+        }
+        &self.entries[layer].as_ref().unwrap().selection
+    }
+
+    pub fn peek(&self, layer: usize) -> Option<&Selection> {
+        self.entries[layer].as_ref().map(|e| &e.selection)
+    }
+
+    pub fn invalidate_all(&mut self) {
+        for e in self.entries.iter_mut() {
+            *e = None;
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn adj() -> Csr {
+        let mut rng = Rng::new(5);
+        Csr::random(30, 90, &mut rng)
+    }
+
+    #[test]
+    fn caches_between_refreshes() {
+        let a = adj();
+        let caps = vec![a.nnz()];
+        let mut cache = SampleCache::new(2, 10);
+        let mut builds = 0;
+        for step in 0..25 {
+            cache.get_or_build(0, step, 5, &a, &caps, || {
+                builds += 1;
+                vec![0, 1, 2, 3, 4]
+            });
+        }
+        // refreshes at steps 0, 10, 20
+        assert_eq!(builds, 3);
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 3);
+        assert_eq!(hits, 22);
+    }
+
+    #[test]
+    fn k_change_forces_rebuild() {
+        let a = adj();
+        let caps = vec![a.nnz()];
+        let mut cache = SampleCache::new(1, 100);
+        let mut builds = 0;
+        cache.get_or_build(0, 0, 5, &a, &caps, || {
+            builds += 1;
+            (0..5).collect()
+        });
+        cache.get_or_build(0, 1, 6, &a, &caps, || {
+            builds += 1;
+            (0..6).collect()
+        });
+        cache.get_or_build(0, 2, 6, &a, &caps, || {
+            builds += 1;
+            (0..6).collect()
+        });
+        assert_eq!(builds, 2);
+    }
+
+    #[test]
+    fn refresh_every_one_disables_caching() {
+        let a = adj();
+        let caps = vec![a.nnz()];
+        let mut cache = SampleCache::new(1, 1);
+        let mut builds = 0;
+        for step in 0..5 {
+            cache.get_or_build(0, step, 3, &a, &caps, || {
+                builds += 1;
+                (0..3).collect()
+            });
+        }
+        assert_eq!(builds, 5);
+        assert_eq!(cache.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn layers_independent() {
+        let a = adj();
+        let caps = vec![a.nnz()];
+        let mut cache = SampleCache::new(3, 10);
+        cache.get_or_build(0, 0, 2, &a, &caps, || vec![0, 1]);
+        assert!(cache.peek(0).is_some());
+        assert!(cache.peek(1).is_none());
+        cache.invalidate_all();
+        assert!(cache.peek(0).is_none());
+    }
+}

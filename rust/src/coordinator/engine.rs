@@ -1,0 +1,382 @@
+//! The per-run RSC engine.
+//!
+//! Lifecycle per training step (full-batch: step == epoch):
+//!
+//! 1. The trainer asks [`RscEngine::norms_wanted`] — on allocation steps
+//!    it computes gradient row-norms (via the `row_norms_{d}` executable)
+//!    during backward and feeds them back with `observe_norms`.
+//! 2. Each backward-SpMM site calls [`RscEngine::plan`]: during the exact
+//!    phase (switching, Section 3.3.2) or before any norms exist, the plan
+//!    is the exact full-edge selection; otherwise the greedy/uniform
+//!    allocator's `k_l` picks the top-k pairs, the sample cache either
+//!    reuses the sliced matrix or rebuilds it (Section 3.3.1), and the
+//!    plan is the padded bucket selection.
+//!
+//! Gradient norms are one allocation-interval stale by construction — the
+//! same staleness the caching mechanism itself exploits (Figure 4).
+
+use crate::allocator::{Allocator, DpExact, GreedyAllocator, LayerScores, UniformAllocator};
+use crate::cache::{OverlapTracker, SampleCache};
+use crate::graph::Csr;
+use crate::sampling::{pair_scores, top_k_indices, Selection};
+use crate::util::timer::Stopwatch;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocKind {
+    Greedy,
+    Uniform,
+    Dp,
+}
+
+impl AllocKind {
+    pub fn parse(s: &str) -> Option<AllocKind> {
+        Some(match s {
+            "greedy" => AllocKind::Greedy,
+            "uniform" => AllocKind::Uniform,
+            "dp" => AllocKind::Dp,
+            _ => return None,
+        })
+    }
+}
+
+/// Tunables (paper Section 6.1 defaults).
+#[derive(Debug, Clone)]
+pub struct RscConfig {
+    /// Master switch: false = train exactly (the baseline).
+    pub enabled: bool,
+    /// FLOPs budget C in (0, 1].
+    pub budget_c: f64,
+    /// Greedy step size alpha (fraction of |V|).
+    pub alpha: f64,
+    /// Re-sample cached matrices every R steps (1 = caching off).
+    pub refresh_every: u64,
+    /// Re-run the allocator every N steps.
+    pub alloc_every: u64,
+    /// Fraction of steps trained approximately before switching back to
+    /// exact ops (1.0 = switching off).
+    pub switch_frac: f64,
+    pub allocator: AllocKind,
+}
+
+impl Default for RscConfig {
+    fn default() -> Self {
+        RscConfig {
+            enabled: true,
+            budget_c: 0.1,
+            alpha: 0.02,
+            refresh_every: 10,
+            alloc_every: 10,
+            switch_frac: 0.8,
+            allocator: AllocKind::Greedy,
+        }
+    }
+}
+
+impl RscConfig {
+    pub fn baseline() -> RscConfig {
+        RscConfig { enabled: false, ..Default::default() }
+    }
+}
+
+/// What a backward-SpMM site should execute this step.
+pub enum Plan<'a> {
+    /// Run the exact executable over the full transposed edge list.
+    Exact(&'a Selection),
+    /// Run the bucket executable for `selection.cap` edges.
+    Approx(&'a Selection),
+}
+
+impl<'a> Plan<'a> {
+    pub fn selection(&self) -> &'a Selection {
+        match self {
+            Plan::Exact(s) | Plan::Approx(s) => s,
+        }
+    }
+
+    pub fn is_approx(&self) -> bool {
+        matches!(self, Plan::Approx(_))
+    }
+}
+
+pub struct RscEngine {
+    pub cfg: RscConfig,
+    total_steps: u64,
+    /// Gradient width d_l per site (allocator cost model).
+    widths: Vec<usize>,
+    /// Static pair column-norms ‖A^T_{:,i}‖ = row norms of the matrix.
+    col_norms: Vec<f32>,
+    /// Static pair costs nnz_i = row nnz of the matrix.
+    nnz: Vec<u32>,
+    /// Node degrees (diagnostics for Figure 8).
+    degrees: Vec<u32>,
+    /// Current allocation k_l per site.
+    ks: Vec<usize>,
+    /// Latest observed gradient row-norms per site.
+    grad_norms: Vec<Option<Vec<f32>>>,
+    cache: SampleCache,
+    last_alloc: Option<u64>,
+    // ---- diagnostics ----
+    pub overlap: OverlapTracker,
+    /// (step, k per site) after every allocator run (Figure 7).
+    pub alloc_history: Vec<(u64, Vec<usize>)>,
+    /// (site, step, mean degree of picked pairs) at each refresh (Fig. 8).
+    pub picked_degrees: Vec<(usize, u64, f64)>,
+    /// Cumulative allocator wall-time (Table 11).
+    pub alloc_ms: f64,
+    /// Cumulative sampling/slicing wall-time.
+    pub sample_ms: f64,
+    /// Steps that ran approx vs exact (speedup accounting).
+    pub approx_steps: u64,
+    pub exact_steps: u64,
+}
+
+impl RscEngine {
+    /// `matrix` is the normalized adjacency the model's SpMMs use
+    /// (row-major); `widths` the gradient width per backward-SpMM site.
+    pub fn new(
+        cfg: RscConfig,
+        matrix: &Csr,
+        widths: Vec<usize>,
+        total_steps: u64,
+    ) -> RscEngine {
+        let sites = widths.len();
+        let col_norms = matrix.row_norms();
+        let nnz: Vec<u32> = (0..matrix.n).map(|r| matrix.row_nnz(r) as u32).collect();
+        let refresh = cfg.refresh_every.max(1);
+        RscEngine {
+            total_steps,
+            widths,
+            degrees: nnz.clone(),
+            col_norms,
+            nnz,
+            ks: vec![matrix.n; sites],
+            grad_norms: (0..sites).map(|_| None).collect(),
+            cache: SampleCache::new(sites, refresh),
+            last_alloc: None,
+            overlap: OverlapTracker::new(sites, 10),
+            alloc_history: Vec::new(),
+            picked_degrees: Vec::new(),
+            alloc_ms: 0.0,
+            sample_ms: 0.0,
+            approx_steps: 0,
+            exact_steps: 0,
+            cfg,
+        }
+    }
+
+    /// Is `step` in the final exact phase (switching mechanism)?
+    pub fn in_exact_phase(&self, step: u64) -> bool {
+        if !self.cfg.enabled {
+            return true;
+        }
+        if self.cfg.switch_frac >= 1.0 {
+            return false;
+        }
+        step as f64 >= self.cfg.switch_frac * self.total_steps as f64
+    }
+
+    /// Should the trainer compute gradient row-norms this step?
+    pub fn norms_wanted(&self, step: u64) -> bool {
+        self.cfg.enabled
+            && !self.in_exact_phase(step + 1)
+            && step % self.cfg.alloc_every == 0
+    }
+
+    /// Feed back the row-norms of the gradient entering site `site`.
+    pub fn observe_norms(&mut self, site: usize, norms: Vec<f32>) {
+        debug_assert_eq!(norms.len(), self.col_norms.len());
+        self.grad_norms[site] = Some(norms);
+    }
+
+    /// True once every site has observed norms (approx can start).
+    fn ready(&self) -> bool {
+        self.grad_norms.iter().all(|n| n.is_some())
+    }
+
+    fn reallocate(&mut self, step: u64) {
+        let layers: Vec<LayerScores> = (0..self.widths.len())
+            .map(|s| LayerScores {
+                scores: pair_scores(
+                    &self.col_norms,
+                    self.grad_norms[s].as_ref().unwrap(),
+                ),
+                nnz: self.nnz.clone(),
+                d: self.widths[s],
+            })
+            .collect();
+        let sw = Stopwatch::start();
+        self.ks = match self.cfg.allocator {
+            AllocKind::Greedy => GreedyAllocator {
+                alpha: self.cfg.alpha,
+                ..Default::default()
+            }
+            .allocate(&layers, self.cfg.budget_c),
+            AllocKind::Uniform => UniformAllocator.allocate(&layers, self.cfg.budget_c),
+            AllocKind::Dp => DpExact {
+                alpha: self.cfg.alpha.max(0.05),
+                ..Default::default()
+            }
+            .allocate(&layers, self.cfg.budget_c),
+        };
+        self.alloc_ms += sw.ms();
+        self.alloc_history.push((step, self.ks.clone()));
+        self.last_alloc = Some(step);
+    }
+
+    /// Decide the plan for backward-SpMM `site` at `step`.
+    pub fn plan<'a>(
+        &'a mut self,
+        site: usize,
+        step: u64,
+        matrix: &Csr,
+        caps: &[usize],
+        exact: &'a Selection,
+    ) -> Plan<'a> {
+        if self.in_exact_phase(step) || !self.ready() {
+            if site == 0 {
+                self.exact_steps += 1;
+            }
+            return Plan::Exact(exact);
+        }
+        if site == 0 {
+            self.approx_steps += 1;
+            let due = self
+                .last_alloc
+                .map(|s| step.saturating_sub(s) >= self.cfg.alloc_every)
+                .unwrap_or(true);
+            if due {
+                self.reallocate(step);
+            }
+        }
+        let k = self.ks[site];
+        if self.cache.stale(site, step, k) {
+            let sw = Stopwatch::start();
+            let scores = pair_scores(
+                &self.col_norms,
+                self.grad_norms[site].as_ref().unwrap(),
+            );
+            let rows = top_k_indices(&scores, k);
+            // diagnostics
+            self.overlap.observe(site, step, &scores, &rows);
+            let mean_deg = rows
+                .iter()
+                .map(|&r| self.degrees[r as usize] as f64)
+                .sum::<f64>()
+                / rows.len().max(1) as f64;
+            self.picked_degrees.push((site, step, mean_deg));
+            let sel = self
+                .cache
+                .get_or_build(site, step, k, matrix, caps, move || rows);
+            self.sample_ms += sw.ms();
+            Plan::Approx(sel)
+        } else {
+            let sel = self
+                .cache
+                .get_or_build(site, step, k, matrix, caps, || unreachable!());
+            Plan::Approx(sel)
+        }
+    }
+
+    pub fn ks(&self) -> &[usize] {
+        &self.ks
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(cfg: RscConfig, steps: u64) -> (RscEngine, Csr, Vec<usize>, Selection) {
+        let mut rng = Rng::new(3);
+        let m = Csr::random(40, 160, &mut rng);
+        let caps = vec![m.nnz() / 4, m.nnz() / 2, m.nnz()];
+        let exact = Selection::exact(&m, &caps);
+        let e = RscEngine::new(cfg, &m, vec![8, 8], steps);
+        (e, m, caps, exact)
+    }
+
+    #[test]
+    fn disabled_is_always_exact() {
+        let (mut e, m, caps, exact) = setup(RscConfig::baseline(), 100);
+        for step in 0..5 {
+            let p = e.plan(0, step, &m, &caps, &exact);
+            assert!(!p.is_approx());
+        }
+        assert!(!e.norms_wanted(0));
+    }
+
+    #[test]
+    fn exact_until_norms_then_approx() {
+        let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+        let (mut e, m, caps, exact) = setup(cfg, 100);
+        assert!(e.norms_wanted(0));
+        assert!(!e.plan(0, 0, &m, &caps, &exact).is_approx());
+        e.observe_norms(0, vec![1.0; 40]);
+        e.observe_norms(1, vec![1.0; 40]);
+        let p = e.plan(0, 1, &m, &caps, &exact);
+        assert!(p.is_approx());
+        assert!(p.selection().nnz < m.nnz()); // C=0.1 cuts most edges
+        assert_eq!(e.alloc_history.len(), 1);
+    }
+
+    #[test]
+    fn switching_returns_to_exact() {
+        let cfg = RscConfig { switch_frac: 0.8, ..Default::default() };
+        let (mut e, m, caps, exact) = setup(cfg, 10);
+        e.observe_norms(0, vec![1.0; 40]);
+        e.observe_norms(1, vec![1.0; 40]);
+        assert!(e.plan(0, 5, &m, &caps, &exact).is_approx());
+        assert!(!e.plan(0, 8, &m, &caps, &exact).is_approx());
+        assert!(!e.plan(0, 9, &m, &caps, &exact).is_approx());
+        assert!(!e.norms_wanted(9));
+    }
+
+    #[test]
+    fn caching_reuses_between_refreshes() {
+        let cfg = RscConfig { switch_frac: 1.0, refresh_every: 10, ..Default::default() };
+        let (mut e, m, caps, exact) = setup(cfg, 1000);
+        e.observe_norms(0, vec![1.0; 40]);
+        e.observe_norms(1, vec![1.0; 40]);
+        for step in 1..21 {
+            e.plan(0, step, &m, &caps, &exact);
+            e.plan(1, step, &m, &caps, &exact);
+        }
+        let (hits, misses) = e.cache_stats();
+        assert!(misses <= 6, "misses={misses}"); // ~2 sites * 2-3 refreshes
+        assert!(hits >= 34, "hits={hits}");
+    }
+
+    #[test]
+    fn uniform_allocator_uses_c_fraction() {
+        let cfg = RscConfig {
+            switch_frac: 1.0,
+            allocator: AllocKind::Uniform,
+            budget_c: 0.5,
+            ..Default::default()
+        };
+        let (mut e, m, caps, exact) = setup(cfg, 100);
+        e.observe_norms(0, vec![1.0; 40]);
+        e.observe_norms(1, vec![1.0; 40]);
+        e.plan(0, 1, &m, &caps, &exact);
+        assert_eq!(e.ks(), &[20, 20]);
+    }
+
+    #[test]
+    fn fig8_and_fig7_diagnostics_populate() {
+        let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+        let (mut e, m, caps, exact) = setup(cfg, 1000);
+        e.observe_norms(0, vec![1.0; 40]);
+        e.observe_norms(1, vec![1.0; 40]);
+        for step in 1..30 {
+            e.plan(0, step, &m, &caps, &exact);
+        }
+        assert!(!e.alloc_history.is_empty());
+        assert!(!e.picked_degrees.is_empty());
+        assert!(e.alloc_ms >= 0.0);
+    }
+}

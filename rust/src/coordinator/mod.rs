@@ -1,0 +1,11 @@
+//! The RSC coordinator: decides, per backward-SpMM site per step, which
+//! executable runs (exact full-edge, or a top-k-sampled padded bucket),
+//! combining the paper's three mechanisms:
+//!
+//! * layer-wise resource allocation (Section 3.2, Algorithm 1),
+//! * epoch-wise sample caching (Section 3.3.1),
+//! * exact-switchback for the final training stage (Section 3.3.2).
+
+pub mod engine;
+
+pub use engine::{AllocKind, Plan, RscConfig, RscEngine};

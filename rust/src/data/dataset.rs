@@ -1,0 +1,123 @@
+//! Core dataset representation shared by the trainer, the coordinator and
+//! every bench target.
+
+use crate::graph::Csr;
+use anyhow::{ensure, Result};
+
+/// Mirrors `python/compile/model.py::DatasetCfg`; the runtime asserts the
+/// manifest's echo of these dims matches at artifact-load time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetCfg {
+    pub name: String,
+    pub v: usize,
+    pub e: usize, // directed edges WITHOUT self-loops
+    pub d_in: usize,
+    pub d_h: usize,
+    pub n_class: usize,
+    pub multilabel: bool,
+    pub layers: usize,
+    pub gcnii_layers: usize,
+    pub gcnii_alpha: f32,
+    pub gcnii_lambda: f32,
+    pub saint_v: usize,
+    pub saint_m: usize,
+    // generation parameters (rust-side only)
+    pub clusters: usize,
+    pub p_intra: f64,
+    pub skew: f64,
+    pub train_frac: f64,
+    pub feature_strength: f32,
+    pub label_noise: f64,
+}
+
+impl DatasetCfg {
+    /// Edge count including self-loops — the `m` every full-batch
+    /// executable is compiled for.
+    pub fn m(&self) -> usize {
+        self.e + self.v
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Labels {
+    /// One class id per node.
+    MultiClass(Vec<i32>),
+    /// Dense V×C {0,1} matrix, row-major.
+    MultiLabel(Vec<f32>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub cfg: DatasetCfg,
+    /// Raw symmetric adjacency, no self-loops, unit weights.
+    pub adj: Csr,
+    /// V × d_in, row-major.
+    pub features: Vec<f32>,
+    pub labels: Labels,
+    /// Split assignment per node.
+    pub split: Vec<Split>,
+    /// Ground-truth cluster per node (diagnostics only).
+    pub cluster: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn mask(&self, which: Split) -> Vec<f32> {
+        self.split
+            .iter()
+            .map(|&s| if s == which { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    pub fn count(&self, which: Split) -> usize {
+        self.split.iter().filter(|&&s| s == which).count()
+    }
+
+    pub fn labels_i32(&self) -> Result<&[i32]> {
+        match &self.labels {
+            Labels::MultiClass(l) => Ok(l),
+            _ => anyhow::bail!("dataset {} is multilabel", self.cfg.name),
+        }
+    }
+
+    pub fn labels_f32(&self) -> Result<&[f32]> {
+        match &self.labels {
+            Labels::MultiLabel(l) => Ok(l),
+            _ => anyhow::bail!("dataset {} is multiclass", self.cfg.name),
+        }
+    }
+
+    /// Structural sanity used by tests and at load time.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.cfg;
+        ensure!(self.adj.n == c.v, "adjacency size mismatch");
+        ensure!(self.adj.nnz() == c.e, "edge count mismatch");
+        ensure!(self.features.len() == c.v * c.d_in, "feature shape");
+        ensure!(self.split.len() == c.v, "split len");
+        match &self.labels {
+            Labels::MultiClass(l) => {
+                ensure!(!c.multilabel, "label kind mismatch");
+                ensure!(l.len() == c.v, "labels len");
+                ensure!(
+                    l.iter().all(|&x| (0..c.n_class as i32).contains(&x)),
+                    "label out of range"
+                );
+            }
+            Labels::MultiLabel(l) => {
+                ensure!(c.multilabel, "label kind mismatch");
+                ensure!(l.len() == c.v * c.n_class, "labels shape");
+                ensure!(
+                    l.iter().all(|&x| x == 0.0 || x == 1.0),
+                    "labels not binary"
+                );
+            }
+        }
+        Ok(())
+    }
+}

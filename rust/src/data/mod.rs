@@ -1,0 +1,10 @@
+//! Dataset substrate: synthetic stand-ins for the paper's four benchmarks
+//! plus the GraphSAINT random-walk subgraph sampler.
+
+pub mod dataset;
+pub mod saint;
+pub mod synth;
+
+pub use dataset::{Dataset, DatasetCfg, Labels, Split};
+pub use saint::{SaintSampler, Subgraph};
+pub use synth::{dataset_cfg, load_or_generate, ALL_DATASETS};

@@ -1,0 +1,503 @@
+//! Compressed Sparse Row matrices and COO edge lists.
+//!
+//! Conventions (shared with `python/compile/kernels/ref.py` and the native
+//! backend): an entry `(r, c, w)` of a matrix `S` contributes
+//! `out[r] += w * x[c]` under SpMM.  The edge-list form used by the XLA
+//! executables stores that entry as `src = c, dst = r`.
+//!
+//! The paper's Figure 5 "slicing" operation — rebuilding Rowptr/Col when
+//! only a subset of *columns* is kept — is [`Csr::slice_rows_of`] on the
+//! transposed matrix: RSC selects column-row pairs of Â^T, i.e. rows of Â,
+//! and the retained FLOPs are exactly the nnz of the selected rows.
+
+use crate::util::rng::Rng;
+
+/// COO edge list, ready to feed an XLA spmm executable (after padding to a
+/// bucket capacity).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EdgeList {
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub w: Vec<f32>,
+}
+
+impl EdgeList {
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        EdgeList {
+            src: Vec::with_capacity(n),
+            dst: Vec::with_capacity(n),
+            w: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn push(&mut self, src: i32, dst: i32, w: f32) {
+        self.src.push(src);
+        self.dst.push(dst);
+        self.w.push(w);
+    }
+
+    /// Zero-pad (w = 0, indices 0) up to `cap` entries in place.
+    pub fn pad_to(&mut self, cap: usize) {
+        assert!(cap >= self.len(), "cap {cap} < len {}", self.len());
+        self.src.resize(cap, 0);
+        self.dst.resize(cap, 0);
+        self.w.resize(cap, 0.0);
+    }
+}
+
+/// Square CSR matrix (adjacency-shaped).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub n: usize,
+    pub rowptr: Vec<usize>,
+    pub col: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from (row, col, val) triples; duplicates are summed.
+    pub fn from_triples(n: usize, mut triples: Vec<(u32, u32, f32)>) -> Csr {
+        triples.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut rowptr = vec![0usize; n + 1];
+        let mut col = Vec::with_capacity(triples.len());
+        let mut val: Vec<f32> = Vec::with_capacity(triples.len());
+        for &(r, c, w) in &triples {
+            debug_assert!((r as usize) < n && (c as usize) < n);
+            col.push(c);
+            val.push(w);
+            rowptr[r as usize + 1] += 1;
+        }
+        // prefix-sum rowptr
+        for i in 0..n {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut m = Csr { n, rowptr, col, val };
+        m.merge_duplicates();
+        m
+    }
+
+    fn merge_duplicates(&mut self) {
+        let mut new_rowptr = vec![0usize; self.n + 1];
+        let mut new_col = Vec::with_capacity(self.col.len());
+        let mut new_val = Vec::with_capacity(self.val.len());
+        for r in 0..self.n {
+            let (lo, hi) = (self.rowptr[r], self.rowptr[r + 1]);
+            let mut i = lo;
+            while i < hi {
+                let c = self.col[i];
+                let mut w = self.val[i];
+                let mut j = i + 1;
+                while j < hi && self.col[j] == c {
+                    w += self.val[j];
+                    j += 1;
+                }
+                new_col.push(c);
+                new_val.push(w);
+                i = j;
+            }
+            new_rowptr[r + 1] = new_col.len();
+        }
+        self.rowptr = new_rowptr;
+        self.col = new_col;
+        self.val = new_val;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.rowptr[r], self.rowptr[r + 1]);
+        (&self.col[lo..hi], &self.val[lo..hi])
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.rowptr[r + 1] - self.rowptr[r]
+    }
+
+    /// Structural invariant check (used by property tests).
+    pub fn validate(&self) -> bool {
+        if self.rowptr.len() != self.n + 1 || self.rowptr[0] != 0 {
+            return false;
+        }
+        if *self.rowptr.last().unwrap() != self.col.len() || self.col.len() != self.val.len() {
+            return false;
+        }
+        for r in 0..self.n {
+            if self.rowptr[r] > self.rowptr[r + 1] {
+                return false;
+            }
+            let (cols, _) = self.row(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return false; // strictly sorted, no duplicates
+                }
+            }
+            if cols.iter().any(|&c| c as usize >= self.n) {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n + 1];
+        for &c in &self.col {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n {
+            counts[i + 1] += counts[i];
+        }
+        let rowptr = counts.clone();
+        let mut cursor = counts;
+        let mut col = vec![0u32; self.nnz()];
+        let mut val = vec![0f32; self.nnz()];
+        for r in 0..self.n {
+            let (cs, ws) = self.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                let slot = cursor[c as usize];
+                col[slot] = r as u32;
+                val[slot] = w;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { n: self.n, rowptr, col, val }
+    }
+
+    /// A + I (unit diagonal added; existing diagonal summed).
+    pub fn add_self_loops(&self) -> Csr {
+        let mut triples = Vec::with_capacity(self.nnz() + self.n);
+        for r in 0..self.n {
+            let (cs, ws) = self.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                triples.push((r as u32, c, w));
+            }
+            triples.push((r as u32, r as u32, 1.0));
+        }
+        Csr::from_triples(self.n, triples)
+    }
+
+    /// GCN normalization: D^{-1/2} (A + I) D^{-1/2}, D = deg(A + I).
+    pub fn gcn_normalize(&self) -> Csr {
+        let a = self.add_self_loops();
+        let mut deg = vec![0f32; a.n];
+        for r in 0..a.n {
+            let (_, ws) = a.row(r);
+            deg[r] = ws.iter().sum::<f32>();
+        }
+        let inv_sqrt: Vec<f32> = deg
+            .iter()
+            .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+            .collect();
+        let mut out = a.clone();
+        for r in 0..a.n {
+            let (lo, hi) = (a.rowptr[r], a.rowptr[r + 1]);
+            for i in lo..hi {
+                out.val[i] = inv_sqrt[r] * a.val[i] * inv_sqrt[a.col[i] as usize];
+            }
+        }
+        out
+    }
+
+    /// MEAN normalization (Appendix A.3): D^{-1} (A + I) — each row of the
+    /// result averages over in-neighbours incl. self.
+    pub fn mean_normalize(&self) -> Csr {
+        let a = self.add_self_loops();
+        let mut out = a.clone();
+        for r in 0..a.n {
+            let (lo, hi) = (a.rowptr[r], a.rowptr[r + 1]);
+            let deg = (hi - lo) as f32;
+            for i in lo..hi {
+                out.val[i] = a.val[i] / deg;
+            }
+        }
+        out
+    }
+
+    /// L2 norm of each row's values.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.n)
+            .map(|r| {
+                let (_, ws) = self.row(r);
+                ws.iter().map(|w| w * w).sum::<f32>().sqrt()
+            })
+            .collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.val.iter().map(|w| w * w).sum::<f32>().sqrt()
+    }
+
+    /// Full edge list for `out[r] += w * x[c]` (src = col, dst = row).
+    pub fn to_edge_list(&self) -> EdgeList {
+        let mut e = EdgeList::with_capacity(self.nnz());
+        for r in 0..self.n {
+            let (cs, ws) = self.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                e.push(c as i32, r as i32, w);
+            }
+        }
+        e
+    }
+
+    /// Edge list of the *transpose* restricted to the given rows of self —
+    /// the RSC sampled backward operand.  For every selected row `i` of
+    /// this matrix, entry (i, u, w) becomes the transposed edge
+    /// `out[u] += w * g[i]`, i.e. `src = i, dst = u`.
+    ///
+    /// Cost is O(sum of selected rows' nnz): this is the cheap,
+    /// cache-amortized realization of the paper's Figure 5 slicing.
+    pub fn transposed_edges_for_rows(&self, rows: &[u32]) -> EdgeList {
+        let nnz: usize = rows.iter().map(|&r| self.row_nnz(r as usize)).sum();
+        let mut e = EdgeList::with_capacity(nnz);
+        for &r in rows {
+            let (cs, ws) = self.row(r as usize);
+            for (&c, &w) in cs.iter().zip(ws) {
+                e.push(r as i32, c as i32, w);
+            }
+        }
+        e
+    }
+
+    /// Paper Figure 5: rebuild a CSR keeping only the given columns
+    /// (re-processing Rowptr/Col/Val).  Provided for the slicing-cost
+    /// benchmark; the hot path uses `transposed_edges_for_rows`.
+    pub fn slice_columns(&self, keep: &[bool]) -> Csr {
+        assert_eq!(keep.len(), self.n);
+        let mut rowptr = vec![0usize; self.n + 1];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for r in 0..self.n {
+            let (cs, ws) = self.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                if keep[c as usize] {
+                    col.push(c);
+                    val.push(w);
+                }
+            }
+            rowptr[r + 1] = col.len();
+        }
+        Csr { n: self.n, rowptr, col, val }
+    }
+
+    /// Dense dump (tests only).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0f32; self.n]; self.n];
+        for r in 0..self.n {
+            let (cs, ws) = self.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                d[r][c as usize] += w;
+            }
+        }
+        d
+    }
+
+    /// Random sparse matrix (tests / property checks).
+    pub fn random(n: usize, nnz: usize, rng: &mut Rng) -> Csr {
+        let mut triples = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            triples.push((
+                rng.below(n) as u32,
+                rng.below(n) as u32,
+                rng.normal_f32(),
+            ));
+        }
+        Csr::from_triples(n, triples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn small() -> Csr {
+        // Figure 3's 4-node example matrix A^T (values 1.0).
+        // rows: 0:{1}, 1:{0,2,3}, 2:{1}, 3:{1,2}  (an arbitrary sparse pattern)
+        Csr::from_triples(
+            4,
+            vec![
+                (0, 1, 1.0),
+                (1, 0, 1.0),
+                (1, 2, 1.0),
+                (1, 3, 1.0),
+                (2, 1, 1.0),
+                (3, 1, 1.0),
+                (3, 2, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let m = small();
+        assert!(m.validate());
+        assert_eq!(m.nnz(), 7);
+        assert_eq!(m.row_nnz(1), 3);
+    }
+
+    #[test]
+    fn duplicates_merge() {
+        let m = Csr::from_triples(2, vec![(0, 1, 1.0), (0, 1, 2.0), (1, 0, 0.5)]);
+        assert!(m.validate());
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row(0), (&[1u32][..], &[3.0f32][..]));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(11);
+        for _ in 0..10 {
+            let m = Csr::random(20, 60, &mut rng);
+            assert!(m.transpose().validate());
+            assert_eq!(m.transpose().transpose(), m);
+        }
+    }
+
+    #[test]
+    fn self_loops_diag() {
+        let m = small().add_self_loops();
+        assert!(m.validate());
+        for r in 0..4 {
+            let (cs, _) = m.row(r);
+            assert!(cs.contains(&(r as u32)));
+        }
+        assert_eq!(m.nnz(), 11);
+    }
+
+    #[test]
+    fn gcn_normalize_symmetric_rows_sum() {
+        // For a symmetric A, Â should be symmetric too.
+        let a = Csr::from_triples(
+            3,
+            vec![(0, 1, 1.0), (1, 0, 1.0), (1, 2, 1.0), (2, 1, 1.0)],
+        );
+        let norm = a.gcn_normalize();
+        let d = norm.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((d[i][j] - d[j][i]).abs() < 1e-6);
+            }
+        }
+        // known value: hat a_01 = 1/sqrt(2*3)
+        assert!((d[0][1] - 1.0 / (6.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_normalize_rows_sum_to_one() {
+        let m = small().mean_normalize();
+        for r in 0..4 {
+            let (_, ws) = m.row(r);
+            let s: f32 = ws.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn edge_list_matches_dense() {
+        let m = small();
+        let e = m.to_edge_list();
+        assert_eq!(e.len(), m.nnz());
+        let d = m.to_dense();
+        for i in 0..e.len() {
+            assert_eq!(d[e.dst[i] as usize][e.src[i] as usize], e.w[i]);
+        }
+    }
+
+    #[test]
+    fn transposed_edges_selected_rows() {
+        let m = small();
+        let e = m.transposed_edges_for_rows(&[1, 3]);
+        assert_eq!(e.len(), m.row_nnz(1) + m.row_nnz(3));
+        // all srcs are from the selected set
+        assert!(e.src.iter().all(|&s| s == 1 || s == 3));
+    }
+
+    #[test]
+    fn slice_columns_matches_dense_masking() {
+        let m = small();
+        let keep = vec![false, true, false, true];
+        let s = m.slice_columns(&keep);
+        assert!(s.validate());
+        let d0 = m.to_dense();
+        let d1 = s.to_dense();
+        for r in 0..4 {
+            for c in 0..4 {
+                let want = if keep[c] { d0[r][c] } else { 0.0 };
+                assert_eq!(d1[r][c], want);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_edges() {
+        let mut e = small().to_edge_list();
+        let n0 = e.len();
+        e.pad_to(n0 + 5);
+        assert_eq!(e.len(), n0 + 5);
+        assert!(e.w[n0..].iter().all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn prop_csr_invariants_random() {
+        prop::check("csr-invariants", 40, |rng| {
+            let n = rng.range(1, 40);
+            let nnz = rng.below(4 * n + 1);
+            let m = Csr::random(n, nnz, rng);
+            assert!(m.validate());
+            assert!(m.transpose().validate());
+            assert!(m.gcn_normalize().validate());
+            // fro norm matches dense
+            let dense_sq: f32 = m
+                .to_dense()
+                .iter()
+                .flatten()
+                .map(|w| w * w)
+                .sum();
+            assert!((m.fro_norm() - dense_sq.sqrt()).abs() < 1e-3);
+        });
+    }
+
+    #[test]
+    fn prop_transposed_edges_equal_slice_semantics() {
+        // transposed_edges_for_rows(S) must equal the full transposed edge
+        // list of the column-sliced transpose — the Figure 5 equivalence.
+        prop::check("slice-equivalence", 30, |rng| {
+            let n = rng.range(2, 30);
+            let m = Csr::random(n, 3 * n, rng);
+            let mut keep = vec![false; n];
+            let sel: Vec<u32> = (0..n)
+                .filter(|_| rng.chance(0.4))
+                .map(|i| i as u32)
+                .collect();
+            for &s in &sel {
+                keep[s as usize] = true;
+            }
+            let t = m.transpose();
+            let sliced = t.slice_columns(&keep); // keep columns of A^T = rows of A
+            let mut a: Vec<(i32, i32, f32)> = {
+                let e = m.transposed_edges_for_rows(&sel);
+                (0..e.len()).map(|i| (e.src[i], e.dst[i], e.w[i])).collect()
+            };
+            let mut b: Vec<(i32, i32, f32)> = {
+                let e = sliced.to_edge_list();
+                (0..e.len())
+                    .filter(|&i| e.w[i] != 0.0)
+                    .map(|i| (e.src[i], e.dst[i], e.w[i]))
+                    .collect()
+            };
+            a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert_eq!(a, b);
+        });
+    }
+}

@@ -1,0 +1,212 @@
+//! Synthetic graph generation: a degree-skewed stochastic block model.
+//!
+//! Real-world graphs are cluster-structured, which makes the adjacency
+//! matrix low-rank — the property (paper Appendix A.1, Thm. A.1) that makes
+//! column-row sampling accurate for GNNs.  The SBM reproduces that
+//! structure; a power-law node-weight skew reproduces the heavy-tailed
+//! degree distributions of Reddit/ogbn-products, which is what makes
+//! "FLOPs depend on *which* pairs you pick" (Figure 3) non-trivial.
+//!
+//! The generator emits *exactly* `e_directed` directed edges (each
+//! undirected pair expands to two), because the AOT executables bake the
+//! edge count into their shapes.
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone)]
+pub struct SbmConfig {
+    pub v: usize,
+    /// Directed edge count (must be even; undirected pairs × 2).
+    pub e_directed: usize,
+    pub clusters: usize,
+    /// Probability that an edge is intra-cluster.
+    pub p_intra: f64,
+    /// Power-law exponent for node weights (0 = uniform degrees).
+    pub skew: f64,
+    pub seed: u64,
+}
+
+/// Output: symmetric unweighted adjacency (no self-loops) + cluster labels.
+pub struct SbmGraph {
+    pub adj: Csr,
+    pub cluster: Vec<usize>,
+}
+
+/// Weighted sampler over a cluster's nodes via cumulative sums.
+struct ClusterSampler {
+    nodes: Vec<u32>,
+    cum: Vec<f64>,
+}
+
+impl ClusterSampler {
+    fn new(nodes: Vec<u32>, skew: f64) -> Self {
+        let mut cum = Vec::with_capacity(nodes.len());
+        let mut acc = 0.0;
+        for (rank, _) in nodes.iter().enumerate() {
+            // Zipf-ish weight: (rank+1)^-skew
+            acc += ((rank + 1) as f64).powf(-skew);
+            cum.push(acc);
+        }
+        ClusterSampler { nodes, cum }
+    }
+
+    fn draw(&self, rng: &mut Rng) -> u32 {
+        let total = *self.cum.last().unwrap();
+        let target = rng.f64() * total;
+        let idx = self.cum.partition_point(|&c| c < target);
+        self.nodes[idx.min(self.nodes.len() - 1)]
+    }
+}
+
+pub fn generate_sbm(cfg: &SbmConfig) -> SbmGraph {
+    assert!(cfg.e_directed % 2 == 0, "e_directed must be even");
+    assert!(cfg.v >= 2 * cfg.clusters, "need >= 2 nodes per cluster");
+    let pairs_needed = cfg.e_directed / 2;
+    let max_pairs = cfg.v * (cfg.v - 1) / 2;
+    assert!(
+        pairs_needed <= max_pairs / 2,
+        "too dense: {pairs_needed} pairs on {} nodes",
+        cfg.v
+    );
+    let mut rng = Rng::new(cfg.seed);
+
+    // Assign nodes to clusters contiguously, then shuffle assignment so
+    // node ids don't encode clusters.
+    let mut cluster = vec![0usize; cfg.v];
+    for (i, c) in cluster.iter_mut().enumerate() {
+        *c = i % cfg.clusters;
+    }
+    rng.shuffle(&mut cluster);
+
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); cfg.clusters];
+    for (node, &c) in cluster.iter().enumerate() {
+        members[c].push(node as u32);
+    }
+    let samplers: Vec<ClusterSampler> = members
+        .into_iter()
+        .map(|nodes| ClusterSampler::new(nodes, cfg.skew))
+        .collect();
+
+    let mut seen: HashSet<(u32, u32)> = HashSet::with_capacity(pairs_needed * 2);
+    let mut triples = Vec::with_capacity(cfg.e_directed);
+    let mut guard = 0usize;
+    while seen.len() < pairs_needed {
+        guard += 1;
+        assert!(
+            guard < pairs_needed * 200 + 10_000,
+            "SBM sampling failed to find enough distinct pairs"
+        );
+        let (a, b) = if rng.chance(cfg.p_intra) {
+            let c = rng.below(cfg.clusters);
+            (samplers[c].draw(&mut rng), samplers[c].draw(&mut rng))
+        } else {
+            let c1 = rng.below(cfg.clusters);
+            let mut c2 = rng.below(cfg.clusters);
+            while c2 == c1 && cfg.clusters > 1 {
+                c2 = rng.below(cfg.clusters);
+            }
+            (samplers[c1].draw(&mut rng), samplers[c2].draw(&mut rng))
+        };
+        if a == b {
+            continue;
+        }
+        let key = (a.min(b), a.max(b));
+        if seen.insert(key) {
+            triples.push((a, b, 1.0f32));
+            triples.push((b, a, 1.0f32));
+        }
+    }
+    let adj = Csr::from_triples(cfg.v, triples);
+    debug_assert_eq!(adj.nnz(), cfg.e_directed);
+    SbmGraph { adj, cluster }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cfg() -> SbmConfig {
+        SbmConfig {
+            v: 200,
+            e_directed: 2000,
+            clusters: 4,
+            p_intra: 0.85,
+            skew: 0.8,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn exact_edge_count_and_symmetry() {
+        let g = generate_sbm(&cfg());
+        assert_eq!(g.adj.nnz(), 2000);
+        assert!(g.adj.validate());
+        assert_eq!(g.adj.transpose(), g.adj); // symmetric
+        // no self loops
+        for r in 0..g.adj.n {
+            let (cs, _) = g.adj.row(r);
+            assert!(!cs.contains(&(r as u32)));
+        }
+    }
+
+    #[test]
+    fn cluster_structure_dominates() {
+        let g = generate_sbm(&cfg());
+        let mut intra = 0usize;
+        for r in 0..g.adj.n {
+            let (cs, _) = g.adj.row(r);
+            for &c in cs {
+                if g.cluster[r] == g.cluster[c as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        let frac = intra as f64 / g.adj.nnz() as f64;
+        assert!(frac > 0.7, "intra fraction {frac}");
+    }
+
+    #[test]
+    fn degrees_are_skewed() {
+        let g = generate_sbm(&cfg());
+        let mut degs: Vec<usize> = (0..g.adj.n).map(|r| g.adj.row_nnz(r)).collect();
+        degs.sort_unstable();
+        let top10: usize = degs[degs.len() - 20..].iter().sum();
+        let bot50pct: usize = degs[..degs.len() / 2].iter().sum();
+        // top-10% of nodes carry more edges than the bottom half
+        assert!(top10 > bot50pct, "top10={top10} bot50={bot50pct}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_sbm(&cfg());
+        let b = generate_sbm(&cfg());
+        assert_eq!(a.adj, b.adj);
+        assert_eq!(a.cluster, b.cluster);
+        let mut c2 = cfg();
+        c2.seed = 43;
+        let c = generate_sbm(&c2);
+        assert_ne!(a.adj, c.adj);
+    }
+
+    #[test]
+    fn prop_generator_invariants() {
+        prop::check("sbm-invariants", 10, |rng| {
+            let v = rng.range(20, 80);
+            let e = 2 * rng.range(v, 3 * v);
+            let g = generate_sbm(&SbmConfig {
+                v,
+                e_directed: e,
+                clusters: rng.range(2, 6),
+                p_intra: 0.8,
+                skew: rng.f64(),
+                seed: rng.next_u64(),
+            });
+            assert_eq!(g.adj.nnz(), e);
+            assert!(g.adj.validate());
+            assert_eq!(g.adj.transpose(), g.adj);
+        });
+    }
+}

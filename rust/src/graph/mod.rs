@@ -1,0 +1,9 @@
+//! Sparse-matrix substrate: CSR storage, edge lists (the exchange format
+//! with the XLA executables), normalizations, and the synthetic graph
+//! generator.
+
+pub mod csr;
+pub mod generate;
+
+pub use csr::{Csr, EdgeList};
+pub use generate::{generate_sbm, SbmConfig};

@@ -1,0 +1,33 @@
+//! # RSC — Randomized Sparse Computations for GNN training
+//!
+//! Rust + JAX + Pallas reproduction of *"RSC: Accelerating Graph Neural
+//! Networks Training via Randomized Sparse Computations"* (ICML 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: training loop, the paper's
+//!   greedy resource allocator (Alg. 1), the sample cache, the switching
+//!   schedule, top-k column-row sampling, CSR slicing, datasets, metrics,
+//!   CLI, and the PJRT runtime that loads the AOT op catalog.
+//! * **L2 (python/compile/model.py)** — every GNN op as a jitted jax
+//!   function, AOT-lowered to HLO text per dataset config.
+//! * **L1 (python/compile/kernels/)** — Pallas SpMM / matmul kernels
+//!   (interpret=True) validated against pure-jnp oracles.
+//!
+//! Python never runs at training time: `make artifacts` once, then the
+//! `rsc` binary is self-contained.
+
+pub mod util;
+pub mod graph;
+pub mod data;
+pub mod sampling;
+pub mod allocator;
+pub mod cache;
+pub mod runtime;
+pub mod model;
+pub mod coordinator;
+pub mod train;
+pub mod profile;
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,208 @@
+//! `rsc` — the RSC coordinator CLI.
+//!
+//! Subcommands:
+//!   train     train a model with or without RSC and report metrics
+//!   profile   op-level timing breakdown (Figure 1 style)
+//!   inspect   list a dataset's artifact catalog
+//!   datagen   generate + describe a synthetic dataset
+//!
+//! Examples:
+//!   rsc train --dataset reddit-sim --model gcn --epochs 200 --rsc --budget 0.1
+//!   rsc train --dataset tiny --model sage --backend native
+//!   rsc profile --dataset reddit-sim
+//!   rsc inspect --dataset tiny
+
+use anyhow::{anyhow, bail, Result};
+use rsc::coordinator::{AllocKind, RscConfig};
+use rsc::data::load_or_generate;
+use rsc::model::ops::ModelKind;
+use rsc::runtime::{Backend, NativeBackend, XlaBackend};
+use rsc::train::{train, TrainConfig};
+use rsc::util::cli::Args;
+
+fn main() {
+    // silence TFRT client chatter on the default path
+    if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "3");
+    }
+    let args = Args::parse_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match cmd.as_str() {
+        "train" => run(cmd_train(&args)),
+        "profile" => run(cmd_profile(&args)),
+        "inspect" => run(cmd_inspect(&args)),
+        "datagen" => run(cmd_datagen(&args)),
+        "bench" => {
+            eprintln!("use `cargo bench` — one target per paper table/figure");
+            0
+        }
+        _ => {
+            eprintln!("usage: rsc <train|profile|inspect|datagen> [--flags] (see README.md)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn load_backend(kind: &str, dataset: &str) -> Result<Box<dyn Backend>> {
+    Ok(match kind {
+        "xla" => Box::new(XlaBackend::load(dataset)?),
+        "native" => Box::new(NativeBackend::load(dataset)?),
+        other => bail!("unknown backend {other:?} (xla|native)"),
+    })
+}
+
+fn rsc_config(args: &Args) -> Result<RscConfig> {
+    let enabled = args.bool_or("rsc", false)?;
+    Ok(RscConfig {
+        enabled,
+        budget_c: args.f64_or("budget", 0.1)?,
+        alpha: args.f64_or("alpha", 0.02)?,
+        refresh_every: if args.bool_or("no-cache", false)? {
+            1
+        } else {
+            args.u64_or("refresh-every", 10)?
+        },
+        alloc_every: args.u64_or("alloc-every", 10)?,
+        switch_frac: if args.bool_or("no-switch", false)? {
+            1.0
+        } else {
+            args.f64_or("switch-frac", 0.8)?
+        },
+        allocator: AllocKind::parse(&args.str_or("allocator", "greedy"))
+            .ok_or_else(|| anyhow!("bad --allocator (greedy|uniform|dp)"))?,
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "tiny");
+    let backend = load_backend(&args.str_or("backend", "xla"), &dataset)?;
+    let model = ModelKind::parse(&args.str_or("model", "gcn"))
+        .ok_or_else(|| anyhow!("bad --model (gcn|sage|gcnii|saint)"))?;
+    let seed = args.u64_or("seed", 0)?;
+    let ds = load_or_generate(&dataset, seed)?;
+    let cfg = TrainConfig {
+        model,
+        epochs: args.usize_or("epochs", 100)?,
+        lr: args.f64_or("lr", 0.01)? as f32,
+        seed,
+        rsc: rsc_config(args)?,
+        eval_every: args.usize_or("eval-every", 5)?,
+        verbose: args.bool_or("verbose", true)?,
+        saint_subgraphs: args.usize_or("saint-subgraphs", 8)?,
+        saint_batches_per_epoch: args.usize_or("saint-batches", 4)?,
+    };
+    args.finish()?;
+
+    println!(
+        "training {} on {} ({} backend, rsc={})",
+        model.name(),
+        dataset,
+        backend.backend_name(),
+        cfg.rsc.enabled
+    );
+    let res = train(backend.as_ref(), &ds, &cfg)?;
+    println!("\n== result ==");
+    println!(
+        "test {} = {:.4} (best val {:.4})",
+        res.metric.name(),
+        res.test_metric,
+        res.best_val
+    );
+    println!("train wall: {:.2}s", res.train_wall_s);
+    println!(
+        "cache hits/misses: {}/{}  alloc {:.1}ms  sampling {:.1}ms",
+        res.cache_hits, res.cache_misses, res.alloc_ms, res.sample_ms
+    );
+    println!("op-class time (ms total):");
+    for label in res.tb.labels().map(str::to_string).collect::<Vec<_>>() {
+        println!(
+            "  {label:<10} {:>10.1} ms  ({} calls)",
+            res.tb.total_ms(&label),
+            res.tb.count(&label)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "tiny");
+    let backend = load_backend(&args.str_or("backend", "xla"), &dataset)?;
+    let iters = args.usize_or("iters", 20)?;
+    let seed = args.u64_or("seed", 0)?;
+    args.finish()?;
+    let ds = load_or_generate(&dataset, seed)?;
+    let p = rsc::profile::profile_gcn_step(backend.as_ref(), &ds, iters)?;
+    println!(
+        "dataset {dataset}: SpMM {:.2}ms MatMul {:.2}ms other {:.2}ms",
+        p.spmm_ms, p.matmul_ms, p.other_ms
+    );
+    println!("SpMM share of step: {:.1}%", 100.0 * p.spmm_share());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "tiny");
+    let backend = load_backend(&args.str_or("backend", "xla"), &dataset)?;
+    args.finish()?;
+    let m = backend.manifest();
+    println!(
+        "dataset {} : V={} E={} M={} d_in={} d_h={} C={} multilabel={}",
+        m.dataset.name,
+        m.dataset.v,
+        m.dataset.e,
+        m.dataset.m,
+        m.dataset.d_in,
+        m.dataset.d_h,
+        m.dataset.n_class,
+        m.dataset.multilabel
+    );
+    println!("bucket ladder: {:?}", m.dataset.caps);
+    if !m.dataset.saint_caps.is_empty() {
+        println!("saint ladder:  {:?}", m.dataset.saint_caps);
+    }
+    println!("{} ops:", m.ops.len());
+    for (name, op) in &m.ops {
+        println!(
+            "  {name:<44} {:>2} in, {:>2} out   kind={}",
+            op.inputs.len(),
+            op.outputs.len(),
+            op.kind()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "tiny");
+    let seed = args.u64_or("seed", 0)?;
+    args.finish()?;
+    let ds = load_or_generate(&dataset, seed)?;
+    let degs: Vec<f64> = (0..ds.cfg.v).map(|r| ds.adj.row_nnz(r) as f64).collect();
+    println!("dataset {}:", ds.cfg.name);
+    println!("  V={} E={} clusters={}", ds.cfg.v, ds.adj.nnz(), ds.cfg.clusters);
+    println!(
+        "  degree: mean {:.1} p50 {:.0} p99 {:.0} max {:.0}",
+        rsc::util::stats::mean(&degs),
+        rsc::util::stats::percentile(&degs, 50.0),
+        rsc::util::stats::percentile(&degs, 99.0),
+        rsc::util::stats::percentile(&degs, 100.0),
+    );
+    println!(
+        "  splits: train {} val {} test {}",
+        ds.count(rsc::data::Split::Train),
+        ds.count(rsc::data::Split::Val),
+        ds.count(rsc::data::Split::Test)
+    );
+    Ok(())
+}

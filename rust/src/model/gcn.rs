@@ -1,0 +1,192 @@
+//! GCN (Kipf & Welling, 2017) with manual per-op backprop over the AOT
+//! catalog.  Forward: H' = relu(SpMM(A_hat, H W)) per layer (no relu on
+//! the output layer).  Backward: every nabla(HW) = SpMM(A_hat^T, ...) is
+//! routed through the RSC engine's plan — exact or sampled bucket.
+//!
+//! Optionally the *forward* SpMMs can run on sampled edges too (the
+//! `fwd_sel` argument) — only used by the Table 1 experiment, which shows
+//! why that is a bad idea (bias through the nonlinearity).
+
+use crate::coordinator::RscEngine;
+use crate::data::DatasetCfg;
+use crate::graph::Csr;
+use crate::model::ops::{edge_values, GraphBufs, OpNames};
+use crate::model::params::{Param, ParamSet};
+use crate::runtime::{Backend, Value};
+use crate::sampling::Selection;
+use crate::util::rng::Rng;
+use crate::util::timer::TimeBook;
+use crate::Result;
+
+pub struct GcnModel {
+    pub dims: Vec<usize>,
+    pub names: OpNames,
+    pub params: ParamSet,
+    pub multilabel: bool,
+}
+
+impl GcnModel {
+    pub fn new(cfg: &DatasetCfg, names: OpNames, rng: &mut Rng) -> GcnModel {
+        let mut dims = vec![cfg.d_in];
+        dims.extend(std::iter::repeat(cfg.d_h).take(cfg.layers - 1));
+        dims.push(cfg.n_class);
+        let mut params = ParamSet::default();
+        for l in 0..cfg.layers {
+            params.add(Param::glorot(&format!("w{l}"), dims[l], dims[l + 1], rng));
+        }
+        GcnModel { dims, names, params, multilabel: cfg.multilabel }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Forward pass; returns activations [h0 = x, h1, ..., hL].
+    /// `fwd_sel`: per-layer sampled selections for forward approximation
+    /// (Table 1); None = exact forward (the normal RSC configuration).
+    pub fn forward(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        fwd_sel: Option<&[Selection]>,
+        tb: &mut TimeBook,
+    ) -> Result<Vec<Value>> {
+        let l_total = self.layers();
+        let mut acts = vec![x.clone()];
+        for l in 0..l_total {
+            let relu = l < l_total - 1;
+            let w = self.params.get(l).value();
+            let h = acts[l].clone();
+            let out = tb.scope("fwd", || -> Result<Vec<Value>> {
+                match fwd_sel {
+                    None => {
+                        let op = self.names.gcn_fwd(self.dims[l], self.dims[l + 1], relu);
+                        let (s, d, ww) = bufs.fwd.clone();
+                        let t = bufs.fwd_tags;
+                        b.run_tagged(&op, &[h, w, s, d, ww], &[0, 0, t, t + 1, t + 2])
+                    }
+                    Some(sels) => {
+                        let sel = &sels[l];
+                        let op = if sel.cap == *bufs.caps.last().unwrap() {
+                            self.names.gcn_fwd(self.dims[l], self.dims[l + 1], relu)
+                        } else {
+                            self.names.gcn_fwd_cap(
+                                self.dims[l],
+                                self.dims[l + 1],
+                                relu,
+                                sel.cap,
+                            )
+                        };
+                        let (s, d, ww) = edge_values(&sel.edges);
+                        let t = sel.tag;
+                        b.run_tagged(&op, &[h, w, s, d, ww], &[0, 0, t, t + 1, t + 2])
+                    }
+                }
+            })?;
+            acts.push(out.into_iter().next().unwrap());
+        }
+        Ok(acts)
+    }
+
+    /// Inference logits.
+    pub fn logits(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        tb: &mut TimeBook,
+    ) -> Result<Value> {
+        Ok(self.forward(b, x, bufs, None, tb)?.pop().unwrap())
+    }
+
+    /// One training step: forward, loss, RSC-planned backward, Adam.
+    /// Returns the (masked mean) training loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        b: &dyn Backend,
+        x: &Value,
+        labels: &Value,
+        mask: &Value,
+        bufs: &GraphBufs,
+        engine: &mut RscEngine,
+        step: u64,
+        lr: f32,
+        tb: &mut TimeBook,
+        fwd_sel: Option<&[Selection]>,
+    ) -> Result<f32> {
+        let l_total = self.layers();
+        let acts = self.forward(b, x, bufs, fwd_sel, tb)?;
+        let loss_out = tb.scope("loss", || {
+            b.run(
+                &self.names.loss(self.multilabel),
+                &[acts[l_total].clone(), labels.clone(), mask.clone()],
+            )
+        })?;
+        let loss = loss_out[0].item_f32()?;
+        let mut g = loss_out.into_iter().nth(1).unwrap();
+
+        let mut grads: Vec<Option<Value>> = (0..l_total).map(|_| None).collect();
+        for l in (0..l_total).rev() {
+            let d = self.dims[l + 1];
+            if engine.norms_wanted(step) {
+                let norms = tb.scope("norms", || {
+                    b.run(&self.names.row_norms(d), &[g.clone()])
+                })?;
+                engine.observe_norms(l, norms.into_iter().next().unwrap().into_f32s()?);
+            }
+            let (cap, ev, t) =
+                plan_edges(engine, l, step, &bufs.matrix, &bufs.caps, &bufs.exact);
+            let gj = tb.scope("bwd_spmm", || -> Result<Vec<Value>> {
+                if l == l_total - 1 {
+                    let op = self.names.spmm_bwd_nomask(d, cap);
+                    b.run_tagged(&op, &[g.clone(), ev.0, ev.1, ev.2], &[0, t, t + 1, t + 2])
+                } else {
+                    let op = self.names.spmm_bwd_mask(d, cap);
+                    b.run_tagged(
+                        &op,
+                        &[acts[l + 1].clone(), g.clone(), ev.0, ev.1, ev.2],
+                        &[0, 0, t, t + 1, t + 2],
+                    )
+                }
+            })?;
+            let gj = gj.into_iter().next().unwrap();
+            let mm = tb.scope("bwd_dense", || {
+                b.run(
+                    &self.names.gcn_bwd_mm(self.dims[l], self.dims[l + 1]),
+                    &[acts[l].clone(), gj, self.params.get(l).value()],
+                )
+            })?;
+            let mut it = mm.into_iter();
+            grads[l] = Some(it.next().unwrap());
+            g = it.next().unwrap();
+        }
+        let grads: Vec<Value> = grads.into_iter().map(|g| g.unwrap()).collect();
+        tb.scope("adam", || self.params.adam_all(b, grads, lr))?;
+        Ok(loss)
+    }
+}
+
+/// Resolve the engine plan into (bucket cap, edge Values, immutability
+/// tag), releasing the engine borrow before the caller touches it again.
+pub(crate) fn plan_edges(
+    engine: &mut RscEngine,
+    site: usize,
+    step: u64,
+    matrix: &Csr,
+    caps: &[usize],
+    exact: &Selection,
+) -> (usize, (Value, Value, Value), u64) {
+    let plan = engine.plan(site, step, matrix, caps, exact);
+    let sel = plan.selection();
+    if std::env::var_os("RSC_DEBUG_PLAN").is_some() {
+        eprintln!(
+            "step {step} site {site}: {} cap {} nnz {}",
+            if plan.is_approx() { "approx" } else { "exact" },
+            sel.cap,
+            sel.nnz
+        );
+    }
+    (sel.cap, edge_values(&sel.edges), sel.tag)
+}

@@ -1,0 +1,217 @@
+//! GCNII (Chen et al., 2020): deep GCN with initial residual and identity
+//! mapping.
+//!
+//! ```text
+//! H^(l+1) = relu( ((1-a) SpMM(A_hat, H^l) + a H^0) ((1-b_l) I + b_l W^l) )
+//! ```
+//!
+//! with an input projection H^0 = relu(X W_in) and output projection
+//! logits = H^L W_out.  Every propagation layer's backward SpMM is an RSC
+//! site; nabla H^0 accumulates a residual contribution from every layer.
+
+use crate::coordinator::RscEngine;
+use crate::data::DatasetCfg;
+use crate::model::gcn::plan_edges;
+use crate::model::ops::{GraphBufs, OpNames};
+use crate::model::params::{Param, ParamSet};
+use crate::runtime::{Backend, Value};
+use crate::util::rng::Rng;
+use crate::util::timer::TimeBook;
+use crate::Result;
+
+pub struct GcniiModel {
+    pub d_in: usize,
+    pub d_h: usize,
+    pub n_class: usize,
+    pub depth: usize,
+    pub names: OpNames,
+    /// params[0] = W_in, params[1..=depth] = W_l, params[depth+1] = W_out.
+    pub params: ParamSet,
+    pub multilabel: bool,
+}
+
+impl GcniiModel {
+    pub fn new(cfg: &DatasetCfg, names: OpNames, rng: &mut Rng) -> GcniiModel {
+        let mut params = ParamSet::default();
+        params.add(Param::glorot("w_in", cfg.d_in, cfg.d_h, rng));
+        for l in 1..=cfg.gcnii_layers {
+            params.add(Param::glorot(&format!("w{l}"), cfg.d_h, cfg.d_h, rng));
+        }
+        params.add(Param::glorot("w_out", cfg.d_h, cfg.n_class, rng));
+        GcniiModel {
+            d_in: cfg.d_in,
+            d_h: cfg.d_h,
+            n_class: cfg.n_class,
+            depth: cfg.gcnii_layers,
+            names,
+            params,
+            multilabel: cfg.multilabel,
+        }
+    }
+
+    /// Returns (acts, us, logits): acts[l] = activation after layer l
+    /// (acts[0] = H^0), us[l-1] = the pre-mapping residual mix U of layer l.
+    pub fn forward(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        tb: &mut TimeBook,
+    ) -> Result<(Vec<Value>, Vec<Value>, Value)> {
+        let h0 = tb.scope("fwd", || {
+            b.run(
+                &self.names.dense_fwd(self.d_in, self.d_h, true),
+                &[x.clone(), self.params.get(0).value()],
+            )
+        })?;
+        let h0 = h0.into_iter().next().unwrap();
+        let mut acts = vec![h0.clone()];
+        let mut us = Vec::with_capacity(self.depth);
+        for l in 1..=self.depth {
+            let (s, d, w) = bufs.fwd.clone();
+            let t = bufs.fwd_tags;
+            let out = tb.scope("fwd", || {
+                b.run_tagged(
+                    &self.names.gcnii_fwd(self.d_h, l),
+                    &[
+                        acts[l - 1].clone(),
+                        h0.clone(),
+                        self.params.get(l).value(),
+                        s,
+                        d,
+                        w,
+                    ],
+                    &[0, 0, 0, t, t + 1, t + 2],
+                )
+            })?;
+            let mut it = out.into_iter();
+            acts.push(it.next().unwrap());
+            us.push(it.next().unwrap());
+        }
+        let logits = tb.scope("fwd", || {
+            b.run(
+                &self.names.dense_fwd(self.d_h, self.n_class, false),
+                &[acts[self.depth].clone(), self.params.get(self.depth + 1).value()],
+            )
+        })?;
+        Ok((acts, us, logits.into_iter().next().unwrap()))
+    }
+
+    pub fn logits(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        tb: &mut TimeBook,
+    ) -> Result<Value> {
+        Ok(self.forward(b, x, bufs, tb)?.2)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        b: &dyn Backend,
+        x: &Value,
+        labels: &Value,
+        mask: &Value,
+        bufs: &GraphBufs,
+        engine: &mut RscEngine,
+        step: u64,
+        lr: f32,
+        tb: &mut TimeBook,
+    ) -> Result<f32> {
+        let (acts, us, logits) = self.forward(b, x, bufs, tb)?;
+        let v = acts[0].shape()[0];
+        let loss_out = tb.scope("loss", || {
+            b.run(
+                &self.names.loss(self.multilabel),
+                &[logits, labels.clone(), mask.clone()],
+            )
+        })?;
+        let loss = loss_out[0].item_f32()?;
+        let glogits = loss_out.into_iter().nth(1).unwrap();
+
+        let n_params = self.depth + 2;
+        let mut grads: Vec<Option<Value>> = (0..n_params).map(|_| None).collect();
+
+        // output projection (no relu)
+        let out = tb.scope("bwd_dense", || {
+            b.run(
+                &self.names.dense_bwd(self.d_h, self.n_class, false),
+                &[
+                    acts[self.depth].clone(),
+                    glogits,
+                    self.params.get(self.depth + 1).value(),
+                ],
+            )
+        })?;
+        let mut it = out.into_iter();
+        grads[self.depth + 1] = Some(it.next().unwrap());
+        let mut g = it.next().unwrap();
+
+        let mut gh0_acc = Value::zeros_f32(&[v, self.d_h]);
+        for l in (1..=self.depth).rev() {
+            let out = tb.scope("bwd_dense", || {
+                b.run(
+                    &self.names.gcnii_bwd_pre(self.d_h, l),
+                    &[
+                        acts[l].clone(),
+                        g.clone(),
+                        us[l - 1].clone(),
+                        self.params.get(l).value(),
+                    ],
+                )
+            })?;
+            let mut it = out.into_iter();
+            grads[l] = Some(it.next().unwrap());
+            let gp = it.next().unwrap();
+            let gh0c = it.next().unwrap();
+            gh0_acc = tb
+                .scope("bwd_dense", || {
+                    b.run(&self.names.add(self.d_h), &[gh0_acc.clone(), gh0c])
+                })?
+                .into_iter()
+                .next()
+                .unwrap();
+
+            let site = l - 1;
+            if engine.norms_wanted(step) {
+                let norms = tb.scope("norms", || {
+                    b.run(&self.names.row_norms(self.d_h), &[gp.clone()])
+                })?;
+                engine.observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
+            }
+            let (cap, ev, t) =
+                plan_edges(engine, site, step, &bufs.matrix, &bufs.caps, &bufs.exact);
+            let out = tb.scope("bwd_spmm", || {
+                b.run_tagged(
+                    &self.names.spmm_bwd_nomask(self.d_h, cap),
+                    &[gp, ev.0, ev.1, ev.2],
+                    &[0, t, t + 1, t + 2],
+                )
+            })?;
+            g = out.into_iter().next().unwrap();
+        }
+        // layer 1's input is H^0 itself: its spmm output joins the residual sum
+        gh0_acc = tb
+            .scope("bwd_dense", || {
+                b.run(&self.names.add(self.d_h), &[gh0_acc.clone(), g.clone()])
+            })?
+            .into_iter()
+            .next()
+            .unwrap();
+
+        // input projection (relu)
+        let out = tb.scope("bwd_dense", || {
+            b.run(
+                &self.names.dense_bwd(self.d_in, self.d_h, true),
+                &[x.clone(), acts[0].clone(), gh0_acc, self.params.get(0).value()],
+            )
+        })?;
+        grads[0] = Some(out.into_iter().next().unwrap());
+
+        let grads: Vec<Value> = grads.into_iter().map(|g| g.unwrap()).collect();
+        tb.scope("adam", || self.params.adam_all(b, grads, lr))?;
+        Ok(loss)
+    }
+}

@@ -1,0 +1,16 @@
+//! Model layer: parameter storage, op-name mapping onto the AOT catalog,
+//! and the manual per-op forward/backward orchestration for GCN,
+//! GraphSAGE (MEAN) and GCNII.
+//!
+//! Backward passes route every SpMM^T through a [`crate::coordinator`]
+//! plan, which is where RSC's approximation (or the exact path) is
+//! decided — the models themselves are policy-free.
+
+pub mod gcn;
+pub mod gcnii;
+pub mod ops;
+pub mod params;
+pub mod sage;
+
+pub use ops::{edge_values, GraphBufs, ModelKind, OpNames};
+pub use params::{Param, ParamSet};

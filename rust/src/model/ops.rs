@@ -1,0 +1,273 @@
+//! Op-name mapping onto the AOT catalog + shared graph buffers.
+//!
+//! Names must match `python/compile/model.py` exactly; the integration
+//! tests run every referenced op against the manifest so a drift fails
+//! loudly.
+
+use crate::data::DatasetCfg;
+use crate::graph::{Csr, EdgeList};
+use crate::runtime::Value;
+use crate::sampling::Selection;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Gcn,
+    Sage,
+    Gcnii,
+    /// GraphSAINT = SAGE backbone on padded random-walk subgraphs.
+    Saint,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        Some(match s {
+            "gcn" => ModelKind::Gcn,
+            "sage" | "graphsage" => ModelKind::Sage,
+            "gcnii" => ModelKind::Gcnii,
+            "saint" | "graphsaint" => ModelKind::Saint,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Sage => "sage",
+            ModelKind::Gcnii => "gcnii",
+            ModelKind::Saint => "saint",
+        }
+    }
+
+    /// Number of approximable backward-SpMM sites.
+    pub fn n_spmm_bwd(&self, cfg: &DatasetCfg) -> usize {
+        match self {
+            ModelKind::Gcn => cfg.layers,
+            // SAGE layer 1's input needs no grad (Appendix A.3)
+            ModelKind::Sage | ModelKind::Saint => cfg.layers - 1,
+            ModelKind::Gcnii => cfg.gcnii_layers,
+        }
+    }
+
+    /// Gradient width at backward-SpMM site `i` (sites ordered from the
+    /// *first* layer upward).
+    pub fn spmm_width(&self, cfg: &DatasetCfg, site: usize) -> usize {
+        match self {
+            // GCN site l processes nabla(H W) of layer l: width = dout_l
+            ModelKind::Gcn => {
+                if site == cfg.layers - 1 {
+                    cfg.n_class
+                } else {
+                    cfg.d_h
+                }
+            }
+            // SAGE sites are layers 1..L: the grad wrt the mean-aggregated
+            // input, width = d_in of the layer = d_h
+            ModelKind::Sage | ModelKind::Saint => cfg.d_h,
+            ModelKind::Gcnii => cfg.d_h,
+        }
+    }
+}
+
+/// Op-name builders for one (dataset, graph-shape) pair.  `prefix` is ""
+/// for full-batch ops and "saint_" for subgraph ops.
+#[derive(Debug, Clone)]
+pub struct OpNames {
+    pub prefix: &'static str,
+}
+
+impl OpNames {
+    pub fn full() -> OpNames {
+        OpNames { prefix: "" }
+    }
+
+    pub fn saint() -> OpNames {
+        OpNames { prefix: "saint_" }
+    }
+
+    fn relu_tag(relu: bool) -> &'static str {
+        if relu {
+            "relu"
+        } else {
+            "lin"
+        }
+    }
+
+    pub fn gcn_fwd(&self, din: usize, dout: usize, relu: bool) -> String {
+        format!("{}gcn_fwd_{din}x{dout}_{}", self.prefix, Self::relu_tag(relu))
+    }
+
+    /// Reduced-cap forward (Table 1 only).
+    pub fn gcn_fwd_cap(&self, din: usize, dout: usize, relu: bool, cap: usize) -> String {
+        format!(
+            "{}gcn_fwd_{din}x{dout}_{}_cap{cap}",
+            self.prefix,
+            Self::relu_tag(relu)
+        )
+    }
+
+    pub fn sage_fwd(&self, din: usize, dout: usize, relu: bool) -> String {
+        format!("{}sage_fwd_{din}x{dout}_{}", self.prefix, Self::relu_tag(relu))
+    }
+
+    pub fn gcnii_fwd(&self, d: usize, layer1: usize) -> String {
+        format!("{}gcnii_fwd_{d}_l{layer1}", self.prefix)
+    }
+
+    pub fn dense_fwd(&self, din: usize, dout: usize, relu: bool) -> String {
+        format!("{}dense_fwd_{din}x{dout}_{}", self.prefix, Self::relu_tag(relu))
+    }
+
+    pub fn spmm_bwd_mask(&self, d: usize, cap: usize) -> String {
+        format!("{}spmm_bwd_mask_{d}_cap{cap}", self.prefix)
+    }
+
+    pub fn spmm_bwd_nomask(&self, d: usize, cap: usize) -> String {
+        format!("{}spmm_bwd_nomask_{d}_cap{cap}", self.prefix)
+    }
+
+    pub fn spmm_bwd_acc(&self, d: usize, cap: usize) -> String {
+        format!("{}spmm_bwd_acc_{d}_cap{cap}", self.prefix)
+    }
+
+    pub fn gcn_bwd_mm(&self, din: usize, dout: usize) -> String {
+        format!("{}gcn_bwd_mm_{din}x{dout}", self.prefix)
+    }
+
+    pub fn sage_bwd_pre(&self, din: usize, dout: usize, masked: bool) -> String {
+        format!(
+            "{}sage_bwd_pre_{}_{din}x{dout}",
+            self.prefix,
+            if masked { "mask" } else { "nomask" }
+        )
+    }
+
+    pub fn gcnii_bwd_pre(&self, d: usize, layer1: usize) -> String {
+        format!("{}gcnii_bwd_pre_{d}_l{layer1}", self.prefix)
+    }
+
+    pub fn dense_bwd(&self, din: usize, dout: usize, masked: bool) -> String {
+        format!(
+            "{}dense_bwd_{}_{din}x{dout}",
+            self.prefix,
+            if masked { "mask" } else { "nomask" }
+        )
+    }
+
+    pub fn add(&self, d: usize) -> String {
+        format!("{}add_{d}", self.prefix)
+    }
+
+    pub fn row_norms(&self, d: usize) -> String {
+        format!("{}row_norms_{d}", self.prefix)
+    }
+
+    pub fn loss(&self, multilabel: bool) -> String {
+        format!(
+            "{}{}",
+            self.prefix,
+            if multilabel { "loss_bce" } else { "loss_softmax" }
+        )
+    }
+}
+
+/// Edge list -> the three Values an spmm-style op consumes.
+pub fn edge_values(e: &EdgeList) -> (Value, Value, Value) {
+    (
+        Value::vec_i32(e.src.clone()),
+        Value::vec_i32(e.dst.clone()),
+        Value::vec_f32(e.w.clone()),
+    )
+}
+
+/// Per-run graph buffers: the normalized matrix, its forward edge values
+/// and the exact backward selection (full transposed edges).
+pub struct GraphBufs {
+    /// Normalized matrix, row-major (GCN: sym-norm Â; SAGE: mean matrix).
+    pub matrix: Csr,
+    /// Forward edges (src=col, dst=row) as ready-made Values.
+    pub fwd: (Value, Value, Value),
+    /// Immutability tags for `fwd` (static across the whole run — the XLA
+    /// backend keeps the device buffers resident; see run_tagged).
+    pub fwd_tags: u64,
+    /// Full transposed edges for the exact backward path.
+    pub exact: Selection,
+    /// Bucket ladder for this graph shape.
+    pub caps: Vec<usize>,
+}
+
+impl GraphBufs {
+    pub fn new(matrix: Csr, caps: Vec<usize>) -> GraphBufs {
+        let fwd_edges = matrix.to_edge_list();
+        assert_eq!(
+            fwd_edges.len(),
+            *caps.last().expect("empty caps"),
+            "forward edges must fill the top bucket exactly"
+        );
+        let exact = Selection::exact(&matrix, &caps);
+        GraphBufs {
+            fwd: edge_values(&fwd_edges),
+            fwd_tags: crate::sampling::selection::fresh_tags(),
+            exact,
+            matrix,
+            caps,
+        }
+    }
+
+    /// As above but for padded SAINT subgraphs: the matrix may have fewer
+    /// real edges than the executables' full capacity.
+    pub fn new_padded(matrix: Csr, caps: Vec<usize>) -> GraphBufs {
+        let mut fwd_edges = matrix.to_edge_list();
+        fwd_edges.pad_to(*caps.last().expect("empty caps"));
+        let exact = Selection::exact(&matrix, &caps);
+        GraphBufs {
+            fwd: edge_values(&fwd_edges),
+            fwd_tags: crate::sampling::selection::fresh_tags(),
+            exact,
+            matrix,
+            caps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn names_match_python_conventions() {
+        let n = OpNames::full();
+        assert_eq!(n.gcn_fwd(64, 16, false), "gcn_fwd_64x16_lin");
+        assert_eq!(n.gcn_fwd(64, 64, true), "gcn_fwd_64x64_relu");
+        assert_eq!(n.spmm_bwd_mask(64, 1024), "spmm_bwd_mask_64_cap1024");
+        assert_eq!(n.sage_bwd_pre(64, 16, false), "sage_bwd_pre_nomask_64x16");
+        assert_eq!(n.gcnii_fwd(64, 3), "gcnii_fwd_64_l3");
+        assert_eq!(n.loss(true), "loss_bce");
+        let s = OpNames::saint();
+        assert_eq!(s.add(16), "saint_add_16");
+    }
+
+    #[test]
+    fn model_kind_metadata() {
+        let cfg = crate::data::dataset_cfg("tiny").unwrap();
+        assert_eq!(ModelKind::Gcn.n_spmm_bwd(&cfg), 3);
+        assert_eq!(ModelKind::Sage.n_spmm_bwd(&cfg), 2);
+        assert_eq!(ModelKind::Gcnii.n_spmm_bwd(&cfg), 4);
+        assert_eq!(ModelKind::Gcn.spmm_width(&cfg, 2), cfg.n_class);
+        assert_eq!(ModelKind::Gcn.spmm_width(&cfg, 0), cfg.d_h);
+        assert_eq!(ModelKind::Sage.spmm_width(&cfg, 1), cfg.d_h);
+        assert!(ModelKind::parse("graphsage") == Some(ModelKind::Sage));
+        assert!(ModelKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn graph_bufs_exact_covers_everything() {
+        let mut rng = Rng::new(7);
+        let m = Csr::random(10, 28, &mut rng);
+        let nnz = m.nnz();
+        let bufs = GraphBufs::new(m, vec![nnz / 2, nnz]);
+        assert_eq!(bufs.exact.nnz, nnz);
+        assert_eq!(bufs.exact.cap, nnz);
+        assert_eq!(bufs.fwd.0.len(), nnz);
+    }
+}

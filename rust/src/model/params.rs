@@ -1,0 +1,130 @@
+//! Weights + Adam state, updated through the AOT `adam_{r}x{c}` ops.
+
+use crate::runtime::{Backend, Value};
+use crate::util::rng::Rng;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub w: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Param {
+    /// Glorot/Xavier-uniform initialization.
+    pub fn glorot(name: &str, rows: usize, cols: usize, rng: &mut Rng) -> Param {
+        let limit = (6.0 / (rows + cols) as f64).sqrt();
+        let w = (0..rows * cols)
+            .map(|_| ((rng.f64() * 2.0 - 1.0) * limit) as f32)
+            .collect();
+        Param {
+            name: name.to_string(),
+            rows,
+            cols,
+            w,
+            m: vec![0.0; rows * cols],
+            v: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn value(&self) -> Value {
+        Value::mat_f32(self.rows, self.cols, self.w.clone())
+    }
+
+    /// Apply one Adam step through the backend op.
+    pub fn adam_step(
+        &mut self,
+        backend: &dyn Backend,
+        grad: Value,
+        t: u64,
+        lr: f32,
+    ) -> Result<()> {
+        let op = format!("adam_{}x{}", self.rows, self.cols);
+        let out = backend.run(
+            &op,
+            &[
+                self.value(),
+                Value::mat_f32(self.rows, self.cols, self.m.clone()),
+                Value::mat_f32(self.rows, self.cols, self.v.clone()),
+                grad,
+                Value::scalar_f32(t as f32),
+                Value::scalar_f32(lr),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.w = it.next().unwrap().into_f32s()?;
+        self.m = it.next().unwrap().into_f32s()?;
+        self.v = it.next().unwrap().into_f32s()?;
+        Ok(())
+    }
+}
+
+/// A named collection of parameters plus the global Adam step counter.
+#[derive(Debug, Clone, Default)]
+pub struct ParamSet {
+    pub params: Vec<Param>,
+    pub step: u64,
+}
+
+impl ParamSet {
+    pub fn add(&mut self, p: Param) -> usize {
+        self.params.push(p);
+        self.params.len() - 1
+    }
+
+    pub fn get(&self, i: usize) -> &Param {
+        &self.params[i]
+    }
+
+    /// Update every parameter with its gradient (same order as `params`).
+    pub fn adam_all(
+        &mut self,
+        backend: &dyn Backend,
+        grads: Vec<Value>,
+        lr: f32,
+    ) -> Result<()> {
+        assert_eq!(grads.len(), self.params.len(), "gradient count mismatch");
+        self.step += 1;
+        for (p, g) in self.params.iter_mut().zip(grads) {
+            p.adam_step(backend, g, self.step, lr)?;
+        }
+        Ok(())
+    }
+
+    pub fn count_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.rows * p.cols).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_bounds_and_determinism() {
+        let mut rng = Rng::new(1);
+        let p = Param::glorot("w", 20, 30, &mut rng);
+        let limit = (6.0 / 50.0f64).sqrt() as f32;
+        assert!(p.w.iter().all(|&x| x.abs() <= limit));
+        assert!(p.w.iter().any(|&x| x != 0.0));
+        let mut rng2 = Rng::new(1);
+        let p2 = Param::glorot("w", 20, 30, &mut rng2);
+        assert_eq!(p.w, p2.w);
+    }
+
+    #[test]
+    fn paramset_bookkeeping() {
+        let mut rng = Rng::new(2);
+        let mut ps = ParamSet::default();
+        let i = ps.add(Param::glorot("a", 4, 4, &mut rng));
+        let j = ps.add(Param::glorot("b", 4, 2, &mut rng));
+        assert_eq!(i, 0);
+        assert_eq!(j, 1);
+        assert_eq!(ps.count_scalars(), 16 + 8);
+        assert_eq!(ps.get(1).cols, 2);
+    }
+}

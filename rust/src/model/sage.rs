@@ -1,0 +1,166 @@
+//! GraphSAGE with the MEAN aggregator (Hamilton et al., 2017; paper
+//! Appendix A.3): H' = relu(H W1 + SpMM_MEAN(A, H) W2).
+//!
+//! The mean normalization is baked into the edge weights of
+//! `GraphBufs.matrix` (D^-1 (A+I)), so the same spmm executables serve —
+//! which is exactly how the paper's SpMM_MEAN analysis works out (the
+//! column norm of pair i becomes ~1/sqrt(deg_i) automatically).
+//!
+//! The first layer's SpMM input is X, which needs no gradient, so SAGE
+//! has `layers - 1` backward-SpMM sites (site i = layer i+1).
+//!
+//! Also the backbone for GraphSAINT (same ops with the `saint_` prefix on
+//! padded subgraphs).
+
+use crate::coordinator::RscEngine;
+use crate::data::DatasetCfg;
+use crate::model::gcn::plan_edges;
+use crate::model::ops::{GraphBufs, OpNames};
+use crate::model::params::{Param, ParamSet};
+use crate::runtime::{Backend, Value};
+use crate::util::rng::Rng;
+use crate::util::timer::TimeBook;
+use crate::Result;
+
+pub struct SageModel {
+    pub dims: Vec<usize>,
+    pub names: OpNames,
+    /// params[2l] = W1 of layer l, params[2l+1] = W2 of layer l.
+    pub params: ParamSet,
+    pub multilabel: bool,
+}
+
+impl SageModel {
+    pub fn new(cfg: &DatasetCfg, names: OpNames, rng: &mut Rng) -> SageModel {
+        let mut dims = vec![cfg.d_in];
+        dims.extend(std::iter::repeat(cfg.d_h).take(cfg.layers - 1));
+        dims.push(cfg.n_class);
+        let mut params = ParamSet::default();
+        for l in 0..cfg.layers {
+            params.add(Param::glorot(&format!("w1_{l}"), dims[l], dims[l + 1], rng));
+            params.add(Param::glorot(&format!("w2_{l}"), dims[l], dims[l + 1], rng));
+        }
+        SageModel { dims, names, params, multilabel: cfg.multilabel }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Returns (activations [h0..hL], aggregated means [m0..m_{L-1}]).
+    pub fn forward(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        tb: &mut TimeBook,
+    ) -> Result<(Vec<Value>, Vec<Value>)> {
+        let l_total = self.layers();
+        let mut acts = vec![x.clone()];
+        let mut ms = Vec::with_capacity(l_total);
+        for l in 0..l_total {
+            let relu = l < l_total - 1;
+            let op = self.names.sage_fwd(self.dims[l], self.dims[l + 1], relu);
+            let (s, d, w) = bufs.fwd.clone();
+            let t = bufs.fwd_tags;
+            let out = tb.scope("fwd", || {
+                b.run_tagged(
+                    &op,
+                    &[
+                        acts[l].clone(),
+                        self.params.get(2 * l).value(),
+                        self.params.get(2 * l + 1).value(),
+                        s,
+                        d,
+                        w,
+                    ],
+                    &[0, 0, 0, t, t + 1, t + 2],
+                )
+            })?;
+            let mut it = out.into_iter();
+            acts.push(it.next().unwrap());
+            ms.push(it.next().unwrap());
+        }
+        Ok((acts, ms))
+    }
+
+    pub fn logits(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        tb: &mut TimeBook,
+    ) -> Result<Value> {
+        Ok(self.forward(b, x, bufs, tb)?.0.pop().unwrap())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        b: &dyn Backend,
+        x: &Value,
+        labels: &Value,
+        mask: &Value,
+        bufs: &GraphBufs,
+        engine: &mut RscEngine,
+        step: u64,
+        lr: f32,
+        tb: &mut TimeBook,
+    ) -> Result<f32> {
+        let l_total = self.layers();
+        let (acts, ms) = self.forward(b, x, bufs, tb)?;
+        let loss_out = tb.scope("loss", || {
+            b.run(
+                &self.names.loss(self.multilabel),
+                &[acts[l_total].clone(), labels.clone(), mask.clone()],
+            )
+        })?;
+        let loss = loss_out[0].item_f32()?;
+        let mut g = loss_out.into_iter().nth(1).unwrap();
+
+        let mut grads: Vec<Option<Value>> = (0..2 * l_total).map(|_| None).collect();
+        for l in (0..l_total).rev() {
+            let masked = l < l_total - 1;
+            let op = self.names.sage_bwd_pre(self.dims[l], self.dims[l + 1], masked);
+            let w1 = self.params.get(2 * l).value();
+            let w2 = self.params.get(2 * l + 1).value();
+            let inputs: Vec<Value> = if masked {
+                vec![acts[l + 1].clone(), g.clone(), acts[l].clone(), ms[l].clone(), w1, w2]
+            } else {
+                vec![g.clone(), acts[l].clone(), ms[l].clone(), w1, w2]
+            };
+            let out = tb.scope("bwd_dense", || b.run(&op, &inputs))?;
+            let mut it = out.into_iter();
+            grads[2 * l] = Some(it.next().unwrap());
+            grads[2 * l + 1] = Some(it.next().unwrap());
+            let gm = it.next().unwrap();
+            let gh_a = it.next().unwrap();
+
+            if l > 0 {
+                let site = l - 1;
+                let d = self.dims[l];
+                if engine.norms_wanted(step) {
+                    let norms = tb.scope("norms", || {
+                        b.run(&self.names.row_norms(d), &[gm.clone()])
+                    })?;
+                    engine
+                        .observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
+                }
+                let (cap, ev, t) =
+                    plan_edges(engine, site, step, &bufs.matrix, &bufs.caps, &bufs.exact);
+                let op = self.names.spmm_bwd_acc(d, cap);
+                let out = tb.scope("bwd_spmm", || {
+                    b.run_tagged(
+                        &op,
+                        &[gh_a, gm, ev.0, ev.1, ev.2],
+                        &[0, 0, t, t + 1, t + 2],
+                    )
+                })?;
+                g = out.into_iter().next().unwrap();
+            }
+        }
+        let grads: Vec<Value> = grads.into_iter().map(|g| g.unwrap()).collect();
+        tb.scope("adam", || self.params.adam_all(b, grads, lr))?;
+        Ok(loss)
+    }
+}

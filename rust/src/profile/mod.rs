@@ -1,0 +1,103 @@
+//! Op-level profiling (Figure 1): time isolated SpMM / MatMul executables
+//! and report their share of a training step, per dataset.
+
+use crate::data::Dataset;
+use crate::model::ops::{ModelKind, OpNames};
+use crate::runtime::{Backend, Value};
+use crate::train::trainer::full_graph_bufs;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+use crate::Result;
+
+/// Timing of one op over `iters` runs (median of per-iter ms).
+pub fn time_op(
+    b: &dyn Backend,
+    op: &str,
+    inputs: &[Value],
+    warmup: usize,
+    iters: usize,
+) -> Result<f64> {
+    for _ in 0..warmup {
+        b.run(op, inputs)?;
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        b.run(op, inputs)?;
+        times.push(sw.ms());
+    }
+    Ok(crate::util::stats::median(&times))
+}
+
+/// Per-op-class timings of a GCN training step (Figure 1's breakdown).
+pub struct StepProfile {
+    /// Pure SpMM time per step (all layers, fwd+bwd).
+    pub spmm_ms: f64,
+    /// Pure dense-matmul time per step.
+    pub matmul_ms: f64,
+    /// Everything else (loss, adam, relu — approximated as residual).
+    pub other_ms: f64,
+}
+
+impl StepProfile {
+    pub fn spmm_share(&self) -> f64 {
+        self.spmm_ms / (self.spmm_ms + self.matmul_ms + self.other_ms)
+    }
+}
+
+/// Measure the SpMM vs MatMul split for a GCN step on `ds` by timing the
+/// isolated backward-spmm (full cap == a pure spmm over all edges) and
+/// the dense pieces.
+pub fn profile_gcn_step(b: &dyn Backend, ds: &Dataset, iters: usize) -> Result<StepProfile> {
+    let names = OpNames::full();
+    let bufs = full_graph_bufs(b, ds, ModelKind::Gcn);
+    let mut rng = Rng::new(7);
+    let v = ds.cfg.v;
+    let (dh, c) = (ds.cfg.d_h, ds.cfg.n_class);
+    let m = *bufs.caps.last().unwrap();
+
+    let g_h = Value::mat_f32(v, dh, (0..v * dh).map(|_| rng.normal_f32()).collect());
+    let g_c = Value::mat_f32(v, c, (0..v * c).map(|_| rng.normal_f32()).collect());
+    let (es, ed, ew) = bufs.fwd.clone();
+
+    // pure SpMM at width d_h and n_class (backward nomask == plain spmm)
+    let spmm_h = time_op(
+        b,
+        &names.spmm_bwd_nomask(dh, m),
+        &[g_h.clone(), es.clone(), ed.clone(), ew.clone()],
+        1,
+        iters,
+    )?;
+    let spmm_c = time_op(
+        b,
+        &names.spmm_bwd_nomask(c, m),
+        &[g_c.clone(), es, ed, ew],
+        1,
+        iters,
+    )?;
+
+    // dense matmul via gcn_bwd_mm (two matmuls of the layer shapes)
+    let w_h = Value::mat_f32(dh, dh, vec![0.01; dh * dh]);
+    let mm_h = time_op(
+        b,
+        &names.gcn_bwd_mm(dh, dh),
+        &[g_h.clone(), g_h.clone(), w_h],
+        1,
+        iters,
+    )?;
+    let w_c = Value::mat_f32(dh, c, vec![0.01; dh * c]);
+    let mm_c = time_op(
+        b,
+        &names.gcn_bwd_mm(dh, c),
+        &[g_h.clone(), g_c.clone(), w_c],
+        1,
+        iters,
+    )?;
+
+    // a GCN step runs L fwd spmm + L bwd spmm; L-1 at d_h, 1 at n_class
+    let l = ds.cfg.layers as f64;
+    let spmm_ms = 2.0 * ((l - 1.0) * spmm_h + spmm_c);
+    let matmul_ms = (l - 1.0) * mm_h + mm_c; // bwd pair ~ fwd+bwd dense cost
+    let other_ms = 0.1 * (spmm_ms + matmul_ms); // loss/adam/relu residual
+    Ok(StepProfile { spmm_ms, matmul_ms, other_ms })
+}

@@ -1,0 +1,202 @@
+//! Parse `artifacts/<dataset>/manifest.json` into typed op definitions and
+//! cross-check the dataset dims against the Rust-side config (the single
+//! source of truth lives in both `python/compile/model.py::DATASETS` and
+//! `rust/src/data/synth.rs`; this is where a drift would be caught).
+
+use crate::data::DatasetCfg;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct OpDef {
+    pub name: String,
+    /// HLO text file path (absolute).
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Raw metadata (kind, dims, cap, alpha/beta, ...).
+    pub meta: Json,
+}
+
+impl OpDef {
+    pub fn kind(&self) -> &str {
+        self.meta
+            .opt("kind")
+            .and_then(|j| match j {
+                Json::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .unwrap_or("")
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta.get(key)?.as_usize()
+    }
+
+    pub fn meta_f32(&self, key: &str) -> Result<f32> {
+        Ok(self.meta.get(key)?.as_f64()? as f32)
+    }
+
+    pub fn meta_bool(&self, key: &str) -> Result<bool> {
+        self.meta.get(key)?.as_bool()
+    }
+}
+
+/// Echo of the python DatasetCfg, as written into the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestDataset {
+    pub name: String,
+    pub v: usize,
+    pub e: usize,
+    pub m: usize,
+    pub d_in: usize,
+    pub d_h: usize,
+    pub n_class: usize,
+    pub multilabel: bool,
+    pub layers: usize,
+    pub gcnii_layers: usize,
+    pub saint_v: usize,
+    pub saint_m: usize,
+    /// Full-batch edge-capacity bucket ladder (ascending; last == m).
+    pub caps: Vec<usize>,
+    pub saint_caps: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dataset: ManifestDataset,
+    pub ops: BTreeMap<String, OpDef>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let root = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let d = root.get("dataset")?;
+        let caps = d
+            .get("caps")?
+            .as_arr()?
+            .iter()
+            .map(|j| j.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let saint_caps = d
+            .get("saint_caps")?
+            .as_arr()?
+            .iter()
+            .map(|j| j.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dataset = ManifestDataset {
+            name: d.get("name")?.as_str()?.to_string(),
+            v: d.get("v")?.as_usize()?,
+            e: d.get("e")?.as_usize()?,
+            m: d.get("m")?.as_usize()?,
+            d_in: d.get("d_in")?.as_usize()?,
+            d_h: d.get("d_h")?.as_usize()?,
+            n_class: d.get("n_class")?.as_usize()?,
+            multilabel: d.get("multilabel")?.as_bool()?,
+            layers: d.get("layers")?.as_usize()?,
+            gcnii_layers: d.get("gcnii_layers")?.as_usize()?,
+            saint_v: d.get("saint_v")?.as_usize()?,
+            saint_m: d.get("saint_m")?.as_usize()?,
+            caps,
+            saint_caps,
+        };
+
+        let mut ops = BTreeMap::new();
+        for op in root.get("ops")?.as_arr()? {
+            let name = op.get("name")?.as_str()?.to_string();
+            let spec = |key: &str| -> Result<Vec<TensorSpec>> {
+                op.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            dtype: t.get("dtype")?.as_str()?.to_string(),
+                            shape: t
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|s| s.as_usize())
+                                .collect::<Result<Vec<_>>>()?,
+                        })
+                    })
+                    .collect()
+            };
+            let def = OpDef {
+                file: dir.join(op.get("file")?.as_str()?),
+                inputs: spec("inputs")?,
+                outputs: spec("outputs")?,
+                meta: op.get("meta")?.clone(),
+                name: name.clone(),
+            };
+            ops.insert(name, def);
+        }
+        ensure!(!ops.is_empty(), "manifest has no ops");
+        ensure!(
+            *dataset.caps.last().unwrap() == dataset.m,
+            "cap ladder must end at m"
+        );
+        Ok(Manifest { dataset, ops })
+    }
+
+    /// Assert the python-side dims match the rust dataset config.
+    pub fn check_against(&self, cfg: &DatasetCfg) -> Result<()> {
+        let d = &self.dataset;
+        ensure!(d.name == cfg.name, "dataset name: {} vs {}", d.name, cfg.name);
+        ensure!(d.v == cfg.v && d.e == cfg.e && d.m == cfg.m(), "graph dims drift");
+        ensure!(
+            d.d_in == cfg.d_in && d.d_h == cfg.d_h && d.n_class == cfg.n_class,
+            "feature dims drift"
+        );
+        ensure!(d.multilabel == cfg.multilabel, "label kind drift");
+        ensure!(
+            d.layers == cfg.layers && d.gcnii_layers == cfg.gcnii_layers,
+            "layer count drift"
+        );
+        ensure!(
+            d.saint_v == cfg.saint_v && d.saint_m == cfg.saint_m,
+            "saint dims drift"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_tiny() -> Option<PathBuf> {
+        let p = crate::runtime::xla::artifacts_root().join("tiny");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn load_tiny_manifest() {
+        let Some(dir) = artifacts_tiny() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dataset.name, "tiny");
+        assert_eq!(m.dataset.v, 128);
+        assert!(m.ops.len() > 100);
+        let op = m.ops.get("gcn_fwd_16x16_relu").unwrap();
+        assert_eq!(op.kind(), "gcn_fwd");
+        assert_eq!(op.inputs[0].shape, vec![128, 16]);
+        assert!(op.file.exists());
+        // cross-check against rust config
+        let cfg = crate::data::dataset_cfg("tiny").unwrap();
+        m.check_against(&cfg).unwrap();
+    }
+}

@@ -1,0 +1,47 @@
+//! Runtime: loads the AOT op catalog (HLO text + manifest.json produced by
+//! `python/compile/aot.py`) onto the PJRT CPU client, and provides a pure
+//! Rust *native* backend implementing identical op semantics.
+//!
+//! Everything above this module talks to the [`Backend`] trait, so models,
+//! the coordinator and the trainer run unchanged on either backend; the
+//! integration tests cross-check XLA against native outputs.
+
+pub mod manifest;
+pub mod native;
+pub mod value;
+pub mod xla;
+
+pub use manifest::{Manifest, OpDef};
+pub use native::NativeBackend;
+pub use value::Value;
+pub use xla::XlaBackend;
+
+use crate::Result;
+
+/// Dispatch surface shared by the XLA (PJRT) and native backends.
+pub trait Backend {
+    /// Execute op `name` on `inputs`, returning the outputs in manifest
+    /// order.  Shapes are validated against the op definition.
+    fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>>;
+
+    /// Like [`Backend::run`], but inputs with a non-zero tag are promised
+    /// by the caller to be *immutable for that tag*: the backend may keep
+    /// their device buffers cached across calls (edge lists are static
+    /// between cache refreshes — the transfer dominates small ops).
+    /// Backends may ignore the tags; the default does.
+    fn run_tagged(&self, name: &str, inputs: &[Value], _tags: &[u64]) -> Result<Vec<Value>> {
+        self.run(name, inputs)
+    }
+
+    /// Op definition lookup (for shape/meta queries).
+    fn op(&self, name: &str) -> Result<&OpDef>;
+
+    /// The loaded manifest (dataset dims, bucket ladders, op table).
+    fn manifest(&self) -> &Manifest;
+
+    fn has_op(&self, name: &str) -> bool {
+        self.op(name).is_ok()
+    }
+
+    fn backend_name(&self) -> &'static str;
+}

@@ -1,0 +1,614 @@
+//! Pure-Rust backend: executes the op catalog with the exact semantics of
+//! `python/compile/kernels/ref.py` / `model.py`.
+//!
+//! Uses: (1) unit/integration testing without PJRT in the loop,
+//! (2) cross-checking every XLA executable's numerics, (3) a fallback so
+//! the whole coordinator stack runs even with no artifacts built.
+//! Dispatch is driven by the op's `meta.kind`, so native and XLA agree by
+//! construction on names, arities and shapes.
+
+use crate::runtime::manifest::{Manifest, OpDef};
+use crate::runtime::value::Value;
+use crate::runtime::Backend;
+use crate::Result;
+use anyhow::{anyhow, bail, ensure};
+use std::path::Path;
+
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl NativeBackend {
+    pub fn load(dataset: &str) -> Result<NativeBackend> {
+        Self::load_dir(&crate::runtime::xla::artifacts_root().join(dataset))
+    }
+
+    pub fn load_dir(dir: &Path) -> Result<NativeBackend> {
+        Ok(NativeBackend { manifest: Manifest::load(dir)? })
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> NativeBackend {
+        NativeBackend { manifest }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+// ---------------------------------------------------------------------
+// dense / sparse primitives (f32 host math)
+// ---------------------------------------------------------------------
+
+/// C[m,n] = A[m,k] @ B[k,n]  (ikj loop order for cache-friendliness)
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C[k,n] = A[m,k]^T @ B[m,n]
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; k * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[i * n..(i + 1) * n];
+            let crow = &mut c[l * n..(l + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C[m,k] = A[m,n] @ B[k,n]^T
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for l in 0..k {
+            let brow = &b[l * n..(l + 1) * n];
+            let mut acc = 0f32;
+            for j in 0..n {
+                acc += arow[j] * brow[j];
+            }
+            c[i * k + l] = acc;
+        }
+    }
+    c
+}
+
+/// out[dst[e]] += w[e] * x[src[e]]   (x: [vin,d], out: [vout,d])
+pub fn spmm(
+    src: &[i32],
+    dst: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    vout: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; vout * d];
+    for e in 0..src.len() {
+        let we = w[e];
+        if we == 0.0 {
+            continue;
+        }
+        let s = src[e] as usize;
+        let t = dst[e] as usize;
+        let xs = &x[s * d..(s + 1) * d];
+        let ot = &mut out[t * d..(t + 1) * d];
+        for j in 0..d {
+            ot[j] += we * xs[j];
+        }
+    }
+    out
+}
+
+pub fn relu(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// g .* (out > 0)
+pub fn relu_bwd(out: &[f32], g: &[f32]) -> Vec<f32> {
+    out.iter()
+        .zip(g)
+        .map(|(&o, &gv)| if o > 0.0 { gv } else { 0.0 })
+        .collect()
+}
+
+pub fn row_norms(x: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    (0..rows)
+        .map(|i| {
+            x[i * d..(i + 1) * d]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt()
+        })
+        .collect()
+}
+
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+) -> (f32, Vec<f32>) {
+    let n: f32 = mask.iter().sum::<f32>().max(1.0);
+    let mut dlogits = vec![0f32; v * c];
+    let mut loss = 0f32;
+    for i in 0..v {
+        let row = &logits[i * c..(i + 1) * c];
+        let zmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for &z in row {
+            sum += (z - zmax).exp();
+        }
+        let lse = sum.ln();
+        let y = labels[i] as usize;
+        let mi = mask[i];
+        loss -= (row[y] - zmax - lse) * mi / n;
+        for j in 0..c {
+            let p = (row[j] - zmax - lse).exp();
+            let onehot = if j == y { 1.0 } else { 0.0 };
+            dlogits[i * c + j] = (p - onehot) * mi / n;
+        }
+    }
+    (loss, dlogits)
+}
+
+pub fn bce_logits(
+    logits: &[f32],
+    labels: &[f32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+) -> (f32, Vec<f32>) {
+    let n: f32 = mask.iter().sum::<f32>().max(1.0) * c as f32;
+    let mut dlogits = vec![0f32; v * c];
+    let mut loss = 0f32;
+    for i in 0..v {
+        let mi = mask[i];
+        for j in 0..c {
+            let x = logits[i * c + j];
+            let y = labels[i * c + j];
+            let sp = x.max(0.0) + (-x.abs()).exp().ln_1p();
+            loss += (sp - x * y) * mi / n;
+            let sig = 1.0 / (1.0 + (-x).exp());
+            dlogits[i * c + j] = (sig - y) * mi / n;
+        }
+    }
+    (loss, dlogits)
+}
+
+pub fn adam(
+    w: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    t: f32,
+    lr: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let bc1 = 1.0 - B1.powf(t);
+    let bc2 = 1.0 - B2.powf(t);
+    let mut w2 = Vec::with_capacity(w.len());
+    let mut m2 = Vec::with_capacity(w.len());
+    let mut v2 = Vec::with_capacity(w.len());
+    for i in 0..w.len() {
+        let mi = B1 * m[i] + (1.0 - B1) * g[i];
+        let vi = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        w2.push(w[i] - lr * mhat / (vhat.sqrt() + EPS));
+        m2.push(mi);
+        v2.push(vi);
+    }
+    (w2, m2, v2)
+}
+
+// ---------------------------------------------------------------------
+// op dispatch
+// ---------------------------------------------------------------------
+
+fn f32m(v: &Value) -> Result<(&[f32], usize, usize)> {
+    let s = v.shape();
+    ensure!(s.len() == 2, "expected rank-2, got {s:?}");
+    Ok((v.f32s()?, s[0], s[1]))
+}
+
+impl NativeBackend {
+    fn dispatch(&self, def: &OpDef, inp: &[Value]) -> Result<Vec<Value>> {
+        let kind = def.kind();
+        match kind {
+            "gcn_fwd" => {
+                let (h, v, din) = f32m(&inp[0])?;
+                let (w, _, dout) = f32m(&inp[1])?;
+                let relu_on = def.meta_bool("relu")?;
+                let j = matmul(h, w, v, din, dout);
+                let p = spmm(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &j, dout, v);
+                let out = if relu_on { relu(&p) } else { p };
+                Ok(vec![Value::mat_f32(v, dout, out)])
+            }
+            "sage_fwd" => {
+                let (h, v, din) = f32m(&inp[0])?;
+                let (w1, _, dout) = f32m(&inp[1])?;
+                let (w2, _, _) = f32m(&inp[2])?;
+                let relu_on = def.meta_bool("relu")?;
+                let m = spmm(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, din, v);
+                let mut p = matmul(h, w1, v, din, dout);
+                let mw = matmul(&m, w2, v, din, dout);
+                for (a, b) in p.iter_mut().zip(&mw) {
+                    *a += b;
+                }
+                let out = if relu_on { relu(&p) } else { p };
+                Ok(vec![Value::mat_f32(v, dout, out), Value::mat_f32(v, din, m)])
+            }
+            "gcnii_fwd" => {
+                let (h, v, d) = f32m(&inp[0])?;
+                let (h0, _, _) = f32m(&inp[1])?;
+                let (w, _, _) = f32m(&inp[2])?;
+                let alpha = def.meta_f32("alpha")?;
+                let beta = def.meta_f32("beta")?;
+                let p = spmm(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, d, v);
+                let mut u = vec![0f32; v * d];
+                for i in 0..v * d {
+                    u[i] = (1.0 - alpha) * p[i] + alpha * h0[i];
+                }
+                let uw = matmul(&u, w, v, d, d);
+                let mut z = vec![0f32; v * d];
+                for i in 0..v * d {
+                    z[i] = (1.0 - beta) * u[i] + beta * uw[i];
+                }
+                Ok(vec![Value::mat_f32(v, d, relu(&z)), Value::mat_f32(v, d, u)])
+            }
+            "dense_fwd" => {
+                let (x, v, din) = f32m(&inp[0])?;
+                let (w, _, dout) = f32m(&inp[1])?;
+                let relu_on = def.meta_bool("relu")?;
+                let p = matmul(x, w, v, din, dout);
+                let out = if relu_on { relu(&p) } else { p };
+                Ok(vec![Value::mat_f32(v, dout, out)])
+            }
+            "spmm_bwd_mask" => {
+                let (hout, v, d) = f32m(&inp[0])?;
+                let (gout, _, _) = f32m(&inp[1])?;
+                let gp = relu_bwd(hout, gout);
+                let gj = spmm(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &gp, d, v);
+                Ok(vec![Value::mat_f32(v, d, gj)])
+            }
+            "spmm_bwd_nomask" => {
+                let (gout, v, d) = f32m(&inp[0])?;
+                let gj = spmm(inp[1].i32s()?, inp[2].i32s()?, inp[3].f32s()?, gout, d, v);
+                Ok(vec![Value::mat_f32(v, d, gj)])
+            }
+            "spmm_bwd_acc" => {
+                let (acc, v, d) = f32m(&inp[0])?;
+                let (g, _, _) = f32m(&inp[1])?;
+                let mut gj =
+                    spmm(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, g, d, v);
+                for (o, a) in gj.iter_mut().zip(acc) {
+                    *o += a;
+                }
+                Ok(vec![Value::mat_f32(v, d, gj)])
+            }
+            "gcn_bwd_mm" => {
+                let (h, v, din) = f32m(&inp[0])?;
+                let (gj, _, dout) = f32m(&inp[1])?;
+                let (w, _, _) = f32m(&inp[2])?;
+                let gw = matmul_tn(h, gj, v, din, dout);
+                let gh = matmul_nt(gj, w, v, dout, din);
+                Ok(vec![
+                    Value::mat_f32(din, dout, gw),
+                    Value::mat_f32(v, din, gh),
+                ])
+            }
+            "sage_bwd_pre_mask" | "sage_bwd_pre_nomask" => {
+                let masked = kind == "sage_bwd_pre_mask";
+                let (gp, v, din, dout, h, m, w1, w2);
+                if masked {
+                    let (hout, vv, dd) = f32m(&inp[0])?;
+                    let (gout, _, _) = f32m(&inp[1])?;
+                    gp = relu_bwd(hout, gout);
+                    v = vv;
+                    dout = dd;
+                    let (hh, _, di) = f32m(&inp[2])?;
+                    h = hh;
+                    din = di;
+                    m = f32m(&inp[3])?.0;
+                    w1 = f32m(&inp[4])?.0;
+                    w2 = f32m(&inp[5])?.0;
+                } else {
+                    let (gout, vv, dd) = f32m(&inp[0])?;
+                    gp = gout.to_vec();
+                    v = vv;
+                    dout = dd;
+                    let (hh, _, di) = f32m(&inp[1])?;
+                    h = hh;
+                    din = di;
+                    m = f32m(&inp[2])?.0;
+                    w1 = f32m(&inp[3])?.0;
+                    w2 = f32m(&inp[4])?.0;
+                }
+                let gw1 = matmul_tn(h, &gp, v, din, dout);
+                let gw2 = matmul_tn(m, &gp, v, din, dout);
+                let gm = matmul_nt(&gp, w2, v, dout, din);
+                let gh_a = matmul_nt(&gp, w1, v, dout, din);
+                Ok(vec![
+                    Value::mat_f32(din, dout, gw1),
+                    Value::mat_f32(din, dout, gw2),
+                    Value::mat_f32(v, din, gm),
+                    Value::mat_f32(v, din, gh_a),
+                ])
+            }
+            "gcnii_bwd_pre" => {
+                let (hout, v, d) = f32m(&inp[0])?;
+                let (gout, _, _) = f32m(&inp[1])?;
+                let (u, _, _) = f32m(&inp[2])?;
+                let (w, _, _) = f32m(&inp[3])?;
+                let alpha = def.meta_f32("alpha")?;
+                let beta = def.meta_f32("beta")?;
+                let gz = relu_bwd(hout, gout);
+                let gzw = matmul_nt(&gz, w, v, d, d);
+                let mut gu = vec![0f32; v * d];
+                for i in 0..v * d {
+                    gu[i] = (1.0 - beta) * gz[i] + beta * gzw[i];
+                }
+                let mut gw = matmul_tn(u, &gz, v, d, d);
+                for x in gw.iter_mut() {
+                    *x *= beta;
+                }
+                let mut gp = vec![0f32; v * d];
+                let mut gh0c = vec![0f32; v * d];
+                for i in 0..v * d {
+                    gp[i] = (1.0 - alpha) * gu[i];
+                    gh0c[i] = alpha * gu[i];
+                }
+                Ok(vec![
+                    Value::mat_f32(d, d, gw),
+                    Value::mat_f32(v, d, gp),
+                    Value::mat_f32(v, d, gh0c),
+                ])
+            }
+            "dense_bwd_mask" | "dense_bwd_nomask" => {
+                let masked = kind == "dense_bwd_mask";
+                let (x, v, din) = f32m(&inp[0])?;
+                let (gp, dout, w): (Vec<f32>, usize, &[f32]);
+                if masked {
+                    let (out, _, dd) = f32m(&inp[1])?;
+                    let (g, _, _) = f32m(&inp[2])?;
+                    gp = relu_bwd(out, g);
+                    dout = dd;
+                    w = f32m(&inp[3])?.0;
+                } else {
+                    let (g, _, dd) = f32m(&inp[1])?;
+                    gp = g.to_vec();
+                    dout = dd;
+                    w = f32m(&inp[2])?.0;
+                }
+                let gw = matmul_tn(x, &gp, v, din, dout);
+                let gx = matmul_nt(&gp, w, v, dout, din);
+                Ok(vec![
+                    Value::mat_f32(din, dout, gw),
+                    Value::mat_f32(v, din, gx),
+                ])
+            }
+            "add" => {
+                let (a, v, d) = f32m(&inp[0])?;
+                let (b, _, _) = f32m(&inp[1])?;
+                let out: Vec<f32> = a.iter().zip(b).map(|(x, y)| x + y).collect();
+                Ok(vec![Value::mat_f32(v, d, out)])
+            }
+            "row_norms" => {
+                let (g, v, d) = f32m(&inp[0])?;
+                Ok(vec![Value::vec_f32(row_norms(g, v, d))])
+            }
+            "loss_softmax" => {
+                let (logits, v, c) = f32m(&inp[0])?;
+                let labels = inp[1].i32s()?;
+                let mask = inp[2].f32s()?;
+                let (loss, dl) = softmax_xent(logits, labels, mask, v, c);
+                Ok(vec![Value::scalar_f32(loss), Value::mat_f32(v, c, dl)])
+            }
+            "loss_bce" => {
+                let (logits, v, c) = f32m(&inp[0])?;
+                let labels = inp[1].f32s()?;
+                let mask = inp[2].f32s()?;
+                let (loss, dl) = bce_logits(logits, labels, mask, v, c);
+                Ok(vec![Value::scalar_f32(loss), Value::mat_f32(v, c, dl)])
+            }
+            "adam" => {
+                let (w, r, c) = f32m(&inp[0])?;
+                let m = inp[1].f32s()?;
+                let v = inp[2].f32s()?;
+                let g = inp[3].f32s()?;
+                let t = inp[4].item_f32()?;
+                let lr = inp[5].item_f32()?;
+                let (w2, m2, v2) = adam(w, m, v, g, t, lr);
+                Ok(vec![
+                    Value::mat_f32(r, c, w2),
+                    Value::mat_f32(r, c, m2),
+                    Value::mat_f32(r, c, v2),
+                ])
+            }
+            other => bail!("native backend: unimplemented op kind {other:?}"),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let def = self
+            .manifest
+            .ops
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown op {name:?}"))?;
+        ensure!(
+            inputs.len() == def.inputs.len(),
+            "{name}: arity mismatch: {} vs {}",
+            inputs.len(),
+            def.inputs.len()
+        );
+        for (i, (v, spec)) in inputs.iter().zip(&def.inputs).enumerate() {
+            v.check_shape(&spec.dtype, &spec.shape, &format!("{name} input {i}"))?;
+        }
+        let out = self.dispatch(def, inputs)?;
+        for (v, spec) in out.iter().zip(&def.outputs) {
+            v.check_shape(&spec.dtype, &spec.shape, &format!("{name} output"))?;
+        }
+        Ok(out)
+    }
+
+    fn op(&self, name: &str) -> Result<&OpDef> {
+        self.manifest
+            .ops
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown op {name:?}"))
+            .map_err(Into::into)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = vec![1., 2., 3., 4.];
+        let id = vec![1., 0., 0., 1.];
+        assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+        // against hand result
+        let b = vec![5., 6., 7., 8.];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_transpose_variants_agree() {
+        prop::check("mm-transpose", 20, |rng| {
+            let (m, k, n) = (rng.range(1, 8), rng.range(1, 8), rng.range(1, 8));
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let c = matmul(&a, &b, m, k, n);
+            // A^T path: (A^T)^T B using matmul_tn with at = A^T
+            let mut at = vec![0f32; k * m];
+            for i in 0..m {
+                for j in 0..k {
+                    at[j * m + i] = a[i * k + j];
+                }
+            }
+            let c2 = matmul_tn(&at, &b, k, m, n);
+            prop::assert_close(&c, &c2, 1e-4, "tn");
+            // B^T path
+            let mut bt = vec![0f32; n * k];
+            for i in 0..k {
+                for j in 0..n {
+                    bt[j * k + i] = b[i * n + j];
+                }
+            }
+            let c3 = matmul_nt(&a, &bt, m, k, n);
+            prop::assert_close(&c, &c3, 1e-4, "nt");
+        });
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        prop::check("spmm-dense", 20, |rng| {
+            let v = rng.range(2, 20);
+            let d = rng.range(1, 6);
+            let ne = rng.below(5 * v);
+            let mut src = vec![];
+            let mut dst = vec![];
+            let mut w = vec![];
+            let mut dense = vec![0f32; v * v];
+            for _ in 0..ne {
+                let s = rng.below(v);
+                let t = rng.below(v);
+                let we = rng.normal_f32();
+                src.push(s as i32);
+                dst.push(t as i32);
+                w.push(we);
+                dense[t * v + s] += we;
+            }
+            let x = prop::vec_f32(rng, v * d, 1.0);
+            let got = spmm(&src, &dst, &w, &x, d, v);
+            let want = matmul(&dense, &x, v, v, d);
+            prop::assert_close(&got, &want, 1e-3, "spmm");
+        });
+    }
+
+    #[test]
+    fn softmax_grad_sums_to_zero_on_masked_rows() {
+        let mut rng = Rng::new(3);
+        let (v, c) = (10, 4);
+        let logits = prop::vec_f32(&mut rng, v * c, 2.0);
+        let labels: Vec<i32> = (0..v).map(|i| (i % c) as i32).collect();
+        let mut mask = vec![1.0f32; v];
+        mask[3] = 0.0;
+        let (loss, d) = softmax_xent(&logits, &labels, &mask, v, c);
+        assert!(loss > 0.0);
+        // each masked row's grad sums to 0 (softmax - onehot); unmasked rows too
+        for i in 0..v {
+            let s: f32 = d[i * c..(i + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+        // row 3 contributes nothing
+        assert!(d[3 * c..4 * c].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bce_loss_zero_when_confident_correct() {
+        let logits = vec![20.0, -20.0];
+        let labels = vec![1.0, 0.0];
+        let mask = vec![1.0];
+        let (loss, d) = bce_logits(&logits, &labels, &mask, 1, 2);
+        assert!(loss < 1e-6);
+        assert!(d.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn adam_moves_against_gradient() {
+        let w = vec![1.0, -1.0];
+        let m = vec![0.0, 0.0];
+        let v = vec![0.0, 0.0];
+        let g = vec![1.0, -1.0];
+        let (w2, _, _) = adam(&w, &m, &v, &g, 1.0, 0.1);
+        assert!(w2[0] < w[0]);
+        assert!(w2[1] > w[1]);
+    }
+
+    #[test]
+    fn relu_bwd_masks() {
+        assert_eq!(relu_bwd(&[1.0, 0.0, -2.0], &[5.0, 5.0, 5.0]), vec![5.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Host-side tensor values exchanged with the backends.
+
+use anyhow::{bail, ensure, Result};
+
+/// A dense host tensor: f32 or i32, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn vec_f32(data: Vec<f32>) -> Value {
+        let n = data.len();
+        Value::F32 { data, shape: vec![n] }
+    }
+
+    pub fn vec_i32(data: Vec<i32>) -> Value {
+        let n = data.len();
+        Value::I32 { data, shape: vec![n] }
+    }
+
+    pub fn mat_f32(rows: usize, cols: usize, data: Vec<f32>) -> Value {
+        assert_eq!(data.len(), rows * cols);
+        Value::F32 { data, shape: vec![rows, cols] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Value {
+        Value::F32 {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32 { data, .. } => data.len(),
+            Value::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32 { .. } => "f32",
+            Value::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 value, got f32"),
+        }
+    }
+
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    /// First element of a scalar (or any) f32 value.
+    pub fn item_f32(&self) -> Result<f32> {
+        let d = self.f32s()?;
+        ensure!(!d.is_empty(), "empty value");
+        Ok(d[0])
+    }
+
+    pub fn check_shape(&self, dtype: &str, shape: &[usize], what: &str) -> Result<()> {
+        ensure!(
+            self.dtype() == dtype,
+            "{what}: dtype mismatch: have {} want {dtype}",
+            self.dtype()
+        );
+        ensure!(
+            self.shape() == shape,
+            "{what}: shape mismatch: have {:?} want {:?}",
+            self.shape(),
+            shape
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let v = Value::mat_f32(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.len(), 6);
+        assert_eq!(v.dtype(), "f32");
+        assert!(v.i32s().is_err());
+        let s = Value::scalar_f32(7.0);
+        assert_eq!(s.item_f32().unwrap(), 7.0);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn shape_check() {
+        let v = Value::vec_i32(vec![1, 2, 3]);
+        assert!(v.check_shape("i32", &[3], "t").is_ok());
+        assert!(v.check_shape("f32", &[3], "t").is_err());
+        assert!(v.check_shape("i32", &[4], "t").is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT-backed op execution: HLO text -> XlaComputation -> compiled
+//! executable, lazily per op (startup only pays for the ops a run uses).
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py header for why).
+
+use crate::runtime::manifest::{Manifest, OpDef, TensorSpec};
+use crate::runtime::value::Value;
+use crate::runtime::Backend;
+use crate::Result;
+use anyhow::{anyhow, bail, ensure};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Root of the artifacts tree: $RSC_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var_os("RSC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Device buffers for tagged (caller-immutable) inputs; see
+    /// [`Backend::run_tagged`].  Bounded: cleared when it outgrows
+    /// `BUF_CACHE_MAX` entries.
+    buf_cache: RefCell<BTreeMap<u64, std::rc::Rc<xla::PjRtBuffer>>>,
+    /// Cumulative compile time (reported by `rsc inspect`).
+    pub compile_ms: RefCell<f64>,
+}
+
+const BUF_CACHE_MAX: usize = 128;
+
+impl XlaBackend {
+    /// Load the manifest for `dataset` from the artifacts root.
+    pub fn load(dataset: &str) -> Result<XlaBackend> {
+        Self::load_dir(&artifacts_root().join(dataset))
+    }
+
+    pub fn load_dir(dir: &Path) -> Result<XlaBackend> {
+        // On small/container CPU budgets the TFRT client's multi-threaded
+        // Eigen spin-waits pathologically (observed 5-10x wall-time noise
+        // on a 1-core cgroup).  Default to single-threaded unless the user
+        // set their own XLA_FLAGS.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+        }
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "3");
+        }
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(XlaBackend {
+            client,
+            manifest,
+            exes: RefCell::new(BTreeMap::new()),
+            buf_cache: RefCell::new(BTreeMap::new()),
+            compile_ms: RefCell::new(0.0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, def: &OpDef) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(&def.name) {
+            return Ok(exe.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let path = def
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {:?}", def.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", def.name))?;
+        let exe = std::rc::Rc::new(exe);
+        *self.compile_ms.borrow_mut() += t0.elapsed().as_secs_f64() * 1e3;
+        self.exes
+            .borrow_mut()
+            .insert(def.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of ops (used by benches to keep compile time out
+    /// of measured regions).
+    pub fn warmup<'a>(&self, names: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for n in names {
+            let def = self.op(n)?;
+            self.executable(&def.clone())?;
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    /// Host value -> device buffer.  NOTE: we deliberately avoid
+    /// `PjRtLoadedExecutable::execute` (literal path): the crate's C++
+    /// shim `release()`s the transferred input buffers and never frees
+    /// them, leaking every input of every call (~20 KB/op observed).
+    /// `buffer_from_host_buffer` + `execute_b` keeps ownership on the
+    /// Rust side, where Drop frees the device memory — and it also skips
+    /// one host copy (no intermediate Literal).  See EXPERIMENTS.md §Perf.
+    fn to_buffer(&self, v: &Value) -> Result<xla::PjRtBuffer> {
+        let buf = match v {
+            Value::F32 { data, shape } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(|e| anyhow!("transfer f32 {shape:?}: {e:?}"))?,
+            Value::I32 { data, shape } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(|e| anyhow!("transfer i32 {shape:?}: {e:?}"))?,
+        };
+        Ok(buf)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
+        let v = match spec.dtype.as_str() {
+            "f32" => Value::F32 {
+                data: lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("literal->f32: {e:?}"))?,
+                shape: spec.shape.clone(),
+            },
+            "i32" => Value::I32 {
+                data: lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("literal->i32: {e:?}"))?,
+                shape: spec.shape.clone(),
+            },
+            d => bail!("unsupported dtype {d}"),
+        };
+        ensure!(
+            v.len() == spec.shape.iter().product::<usize>(),
+            "output element count mismatch for {:?}",
+            spec
+        );
+        Ok(v)
+    }
+}
+
+impl XlaBackend {
+    fn run_impl(&self, name: &str, inputs: &[Value], tags: &[u64]) -> Result<Vec<Value>> {
+        let def = self
+            .manifest
+            .ops
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown op {name:?}"))?;
+        ensure!(
+            inputs.len() == def.inputs.len(),
+            "{name}: arity mismatch: {} vs {}",
+            inputs.len(),
+            def.inputs.len()
+        );
+        for (i, (v, spec)) in inputs.iter().zip(&def.inputs).enumerate() {
+            v.check_shape(&spec.dtype, &spec.shape, &format!("{name} input {i}"))?;
+        }
+        let exe = self.executable(def)?;
+        if self.buf_cache.borrow().len() > BUF_CACHE_MAX {
+            self.buf_cache.borrow_mut().clear();
+        }
+        let bufs: Vec<std::rc::Rc<xla::PjRtBuffer>> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, v)| -> Result<std::rc::Rc<xla::PjRtBuffer>> {
+                let tag = tags.get(i).copied().unwrap_or(0);
+                if tag != 0 {
+                    if let Some(b) = self.buf_cache.borrow().get(&tag) {
+                        return Ok(b.clone());
+                    }
+                }
+                let b = std::rc::Rc::new(self.to_buffer(v)?);
+                if tag != 0 {
+                    self.buf_cache.borrow_mut().insert(tag, b.clone());
+                }
+                Ok(b)
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute_b::<std::rc::Rc<xla::PjRtBuffer>>(&bufs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose {name}: {e:?}"))?;
+        ensure!(
+            parts.len() == def.outputs.len(),
+            "{name}: output arity {} vs manifest {}",
+            parts.len(),
+            def.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&def.outputs)
+            .map(|(lit, spec)| Self::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.run_impl(name, inputs, &[])
+    }
+
+    fn run_tagged(&self, name: &str, inputs: &[Value], tags: &[u64]) -> Result<Vec<Value>> {
+        self.run_impl(name, inputs, tags)
+    }
+
+    fn op(&self, name: &str) -> Result<&OpDef> {
+        self.manifest
+            .ops
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown op {name:?}"))
+            .map_err(Into::into)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> Option<XlaBackend> {
+        let dir = artifacts_root().join("tiny");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| XlaBackend::load_dir(&dir).unwrap())
+    }
+
+    #[test]
+    fn add_op_roundtrip() {
+        let Some(b) = backend() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let v = 128usize;
+        let d = 16usize;
+        let a = Value::mat_f32(v, d, (0..v * d).map(|i| i as f32).collect());
+        let c = Value::mat_f32(v, d, vec![1.0; v * d]);
+        let out = b.run("add_16", &[a.clone(), c]).unwrap();
+        assert_eq!(out.len(), 1);
+        let o = out[0].f32s().unwrap();
+        assert_eq!(o[0], 1.0);
+        assert_eq!(o[v * d - 1], (v * d - 1) as f32 + 1.0);
+    }
+
+    #[test]
+    fn arity_and_shape_validation() {
+        let Some(b) = backend() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        assert!(b.run("add_16", &[]).is_err());
+        let bad = Value::mat_f32(2, 2, vec![0.0; 4]);
+        assert!(b.run("add_16", &[bad.clone(), bad]).is_err());
+        assert!(b.run("no_such_op", &[]).is_err());
+    }
+
+    #[test]
+    fn lazy_compile_caches() {
+        let Some(b) = backend() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        assert_eq!(b.compiled_count(), 0);
+        let a = Value::mat_f32(128, 16, vec![0.0; 128 * 16]);
+        b.run("add_16", &[a.clone(), a.clone()]).unwrap();
+        assert_eq!(b.compiled_count(), 1);
+        b.run("add_16", &[a.clone(), a]).unwrap();
+        assert_eq!(b.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,19 @@
+//! Column-row pair sampling (paper Section 2.2 / 3.2).
+//!
+//! For the backward operand `SpMM(A_hat^T, dH)`, the i-th column-row pair
+//! is (A_hat^T[:,i], dH[i,:]) — selecting a pair set S keeps exactly the
+//! edges of A_hat whose *row* is in S, so the retained FLOPs are
+//! `sum_{i in S} nnz_i * d`.
+//!
+//! Two samplers:
+//! * [`topk`] — deterministic top-k by score ‖A^T_{:,i}‖·‖dH_{i,:}‖
+//!   (Adelman et al., 2021; what RSC uses).
+//! * [`probability`] — the Drineas et al. (2006) unbiased sampler with
+//!   1/(k·p_i) rescaling; the baseline used in the unbiasedness tests.
+
+pub mod probability;
+pub mod selection;
+pub mod topk;
+
+pub use selection::{pick_bucket, Selection};
+pub use topk::{argsort_desc, pair_scores, top_k_indices};

@@ -1,0 +1,107 @@
+//! Drineas et al. (2006) probability sampling: pairs drawn i.i.d. with
+//! p_i ∝ ‖X_{:,i}‖‖Y_{i,:}‖ and contributions rescaled by 1/(k·p_i) so the
+//! estimator is unbiased.  RSC itself uses deterministic top-k; this
+//! sampler exists as the classical baseline and powers the statistical
+//! unbiasedness tests (Prop. 3.1).
+
+use crate::graph::{Csr, EdgeList};
+use crate::util::rng::Rng;
+
+/// Sample k pairs with probability ∝ scores, returning the transposed
+/// edge list with 1/(k·p_i) scaling folded into the edge weights.
+/// Duplicate draws are merged by accumulating their scale factors.
+pub fn sample_scaled_edges(
+    adj: &Csr,
+    scores: &[f32],
+    k: usize,
+    rng: &mut Rng,
+) -> EdgeList {
+    assert_eq!(scores.len(), adj.n);
+    let total: f64 = scores.iter().map(|&s| s as f64).sum();
+    if total <= 0.0 || k == 0 {
+        return EdgeList::default();
+    }
+    // cumulative distribution for O(log n) draws
+    let mut cum = Vec::with_capacity(adj.n);
+    let mut acc = 0f64;
+    for &s in scores {
+        acc += s as f64;
+        cum.push(acc);
+    }
+    let mut scale_per_row: std::collections::HashMap<u32, f64> =
+        std::collections::HashMap::new();
+    for _ in 0..k {
+        let target = rng.f64() * total;
+        let i = cum.partition_point(|&c| c < target).min(adj.n - 1) as u32;
+        let p_i = scores[i as usize] as f64 / total;
+        if p_i > 0.0 {
+            *scale_per_row.entry(i).or_insert(0.0) += 1.0 / (k as f64 * p_i);
+        }
+    }
+    let mut edges = EdgeList::default();
+    let mut rows: Vec<u32> = scale_per_row.keys().copied().collect();
+    rows.sort_unstable();
+    for r in rows {
+        let scale = scale_per_row[&r] as f32;
+        let (cols, ws) = adj.row(r as usize);
+        for (&c, &w) in cols.iter().zip(ws) {
+            edges.push(r as i32, c as i32, w * scale);
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::spmm;
+    use crate::util::prop;
+
+    /// E[approx] == exact: the Drineas estimator must be unbiased.  This
+    /// is the statistical backbone of Prop 3.1.
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut rng = Rng::new(99);
+        let n = 12;
+        let d = 3;
+        let adj = Csr::random(n, 40, &mut rng);
+        let x = prop::vec_f32(&mut rng, n * d, 1.0);
+        // exact: spmm over full transposed edges
+        let all_rows: Vec<u32> = (0..n as u32).collect();
+        let full = adj.transposed_edges_for_rows(&all_rows);
+        let exact = spmm(&full.src, &full.dst, &full.w, &x, d, n);
+        // scores = column norms of A^T times row norms of x
+        let col_norms = adj.row_norms();
+        let xr = crate::runtime::native::row_norms(&x, n, d);
+        let scores = crate::sampling::pair_scores(&col_norms, &xr);
+        let trials = 3000;
+        let k = 4;
+        let mut mean = vec![0f64; n * d];
+        for _ in 0..trials {
+            let e = sample_scaled_edges(&adj, &scores, k, &mut rng);
+            let approx = spmm(&e.src, &e.dst, &e.w, &x, d, n);
+            for (m, a) in mean.iter_mut().zip(&approx) {
+                *m += *a as f64 / trials as f64;
+            }
+        }
+        // compare with loose tolerance (MC error ~ 1/sqrt(trials))
+        let scale: f64 = exact
+            .iter()
+            .map(|&v| (v as f64).abs())
+            .fold(0.1, f64::max);
+        for (m, e) in mean.iter().zip(&exact) {
+            assert!(
+                (m - *e as f64).abs() / scale < 0.15,
+                "bias too large: {m} vs {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_k_or_scores() {
+        let mut rng = Rng::new(1);
+        let adj = Csr::random(5, 10, &mut rng);
+        assert!(sample_scaled_edges(&adj, &[0.0; 5], 3, &mut rng).is_empty());
+        assert!(sample_scaled_edges(&adj, &[1.0; 5], 0, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,138 @@
+//! A realized pair selection: the chosen rows, their filtered transposed
+//! edge list, and the bucket the coordinator will dispatch to.
+
+use crate::graph::{Csr, EdgeList};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global immutability-tag allocator (see `Backend::run_tagged`): every
+/// Selection gets three fresh tags (src/dst/w), so a cached Selection's
+/// device buffers can be reused across steps and are naturally
+/// invalidated when a refresh builds a new Selection.
+static TAG_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+pub fn fresh_tags() -> u64 {
+    TAG_COUNTER.fetch_add(3, Ordering::Relaxed)
+}
+
+/// The result of sampling column-row pairs for one backward SpMM.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// Selected pair indices (rows of A_hat), descending score order.
+    pub rows: Vec<u32>,
+    /// Retained edges (transposed orientation, `src = pair row`), padded
+    /// to `cap`.
+    pub edges: EdgeList,
+    /// Unpadded retained edge count.
+    pub nnz: usize,
+    /// Bucket capacity the edges are padded to (an AOT-compiled size).
+    pub cap: usize,
+    /// Base immutability tag: (tag, tag+1, tag+2) = (src, dst, w).
+    pub tag: u64,
+}
+
+impl Selection {
+    /// Build from selected rows: gathers the rows' edges from `adj`
+    /// (transposed orientation) and pads to the smallest bucket >= nnz.
+    ///
+    /// This is the cache-refresh slow path; between refreshes the cached
+    /// Selection is reused as-is (Section 3.3.1).
+    pub fn build(adj: &Csr, rows: Vec<u32>, caps: &[usize]) -> Selection {
+        let mut edges = adj.transposed_edges_for_rows(&rows);
+        let nnz = edges.len();
+        let cap = pick_bucket(caps, nnz);
+        edges.pad_to(cap);
+        Selection { rows, edges, nnz, cap, tag: fresh_tags() }
+    }
+
+    /// The exact (no sampling) selection: every row, full edge list.
+    pub fn exact(adj: &Csr, caps: &[usize]) -> Selection {
+        let rows: Vec<u32> = (0..adj.n as u32).collect();
+        Selection::build(adj, rows, caps)
+    }
+
+    /// Retained FLOPs fraction relative to a full edge set of size m.
+    pub fn flops_fraction(&self, m: usize) -> f64 {
+        self.nnz as f64 / m as f64
+    }
+}
+
+/// Smallest capacity >= nnz; caps must be ascending and end >= nnz.
+pub fn pick_bucket(caps: &[usize], nnz: usize) -> usize {
+    for &c in caps {
+        if c >= nnz {
+            return c;
+        }
+    }
+    panic!(
+        "no bucket fits nnz {nnz} (largest cap {:?})",
+        caps.last()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_selection() {
+        let caps = [4, 8, 16];
+        assert_eq!(pick_bucket(&caps, 0), 4);
+        assert_eq!(pick_bucket(&caps, 4), 4);
+        assert_eq!(pick_bucket(&caps, 5), 8);
+        assert_eq!(pick_bucket(&caps, 16), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "no bucket")]
+    fn bucket_overflow_panics() {
+        pick_bucket(&[4, 8], 9);
+    }
+
+    #[test]
+    fn build_pads_and_counts() {
+        let mut rng = Rng::new(1);
+        let adj = Csr::random(20, 60, &mut rng);
+        let m = adj.nnz();
+        let caps = vec![m / 4, m / 2, m];
+        let rows: Vec<u32> = (0..10).collect();
+        let sel = Selection::build(&adj, rows.clone(), &caps);
+        let expect_nnz: usize = rows.iter().map(|&r| adj.row_nnz(r as usize)).sum();
+        assert_eq!(sel.nnz, expect_nnz);
+        assert_eq!(sel.edges.len(), sel.cap);
+        assert!(sel.cap >= sel.nnz);
+        // padding is null edges
+        assert!(sel.edges.w[sel.nnz..].iter().all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn exact_selection_is_everything() {
+        let mut rng = Rng::new(2);
+        let adj = Csr::random(15, 45, &mut rng);
+        let caps = vec![adj.nnz()];
+        let sel = Selection::exact(&adj, &caps);
+        assert_eq!(sel.nnz, adj.nnz());
+        assert_eq!(sel.cap, adj.nnz());
+        assert!((sel.flops_fraction(adj.nnz()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_selection_edges_src_in_rows() {
+        prop::check("selection-src", 20, |rng| {
+            let n = rng.range(2, 40);
+            let adj = Csr::random(n, 3 * n, rng);
+            let k = rng.below(n) + 1;
+            let rows: Vec<u32> = rng
+                .sample_distinct(n, k)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            let caps = vec![adj.nnz().max(1)];
+            let sel = Selection::build(&adj, rows.clone(), &caps);
+            for i in 0..sel.nnz {
+                assert!(rows.contains(&(sel.edges.src[i] as u32)));
+            }
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Deterministic top-k column-row pair selection (Section 2.2.1).
+
+/// Pair scores s_i = col_norms[i] * grad_norms[i]; the numerator of
+/// Eq. (3) / the objective terms of Eq. (4a).
+pub fn pair_scores(col_norms: &[f32], grad_norms: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(col_norms.len(), grad_norms.len());
+    col_norms
+        .iter()
+        .zip(grad_norms)
+        .map(|(&a, &g)| a * g)
+        .collect()
+}
+
+/// Indices of the k largest scores (ties broken by lower index for
+/// determinism).  O(n log n); n = |V| is small relative to everything
+/// else, and a full argsort is reused by the allocator's prefix sums.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<u32> {
+    let mut idx = argsort_desc(scores);
+    idx.truncate(k.min(scores.len()));
+    idx
+}
+
+/// All indices sorted by descending score (stable for ties).
+pub fn argsort_desc(scores: &[f32]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn picks_largest() {
+        let s = vec![0.1, 5.0, 3.0, 4.0];
+        assert_eq!(top_k_indices(&s, 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&s, 0), Vec::<u32>::new());
+        assert_eq!(top_k_indices(&s, 10).len(), 4);
+    }
+
+    #[test]
+    fn ties_deterministic() {
+        let s = vec![1.0, 1.0, 1.0];
+        assert_eq!(top_k_indices(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn scores_multiply() {
+        let s = pair_scores(&[2.0, 3.0], &[0.5, 1.0]);
+        assert_eq!(s, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn prop_topk_dominates_rest() {
+        prop::check("topk-dominates", 30, |rng| {
+            let n = rng.range(1, 100);
+            let s: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let k = rng.below(n + 1);
+            let top = top_k_indices(&s, k);
+            let min_top = top
+                .iter()
+                .map(|&i| s[i as usize])
+                .fold(f32::INFINITY, f32::min);
+            for i in 0..n as u32 {
+                if !top.contains(&i) {
+                    assert!(s[i as usize] <= min_top + 1e-7);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Evaluation metrics matching the paper's Table 3 columns:
+//! accuracy (Reddit, ogbn-products), F1-micro (Yelp), ROC-AUC
+//! (ogbn-proteins).
+
+use crate::cache::ranking_auc;
+use crate::data::{Dataset, Labels, Split};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Accuracy,
+    F1Micro,
+    RocAuc,
+}
+
+impl MetricKind {
+    pub fn for_dataset(ds: &Dataset) -> MetricKind {
+        match ds.cfg.name.as_str() {
+            "yelp-sim" => MetricKind::F1Micro,
+            "proteins-sim" => MetricKind::RocAuc,
+            _ => {
+                if ds.cfg.multilabel {
+                    MetricKind::F1Micro
+                } else {
+                    MetricKind::Accuracy
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Accuracy => "accuracy",
+            MetricKind::F1Micro => "f1-micro",
+            MetricKind::RocAuc => "auc",
+        }
+    }
+
+    /// Evaluate logits [v, c] on the nodes of `split`.
+    pub fn evaluate(&self, ds: &Dataset, logits: &[f32], split: Split) -> f64 {
+        let keep: Vec<bool> = ds.split.iter().map(|&s| s == split).collect();
+        match self {
+            MetricKind::Accuracy => {
+                let Labels::MultiClass(labels) = &ds.labels else {
+                    return f64::NAN;
+                };
+                accuracy(logits, labels, &keep, ds.cfg.n_class)
+            }
+            MetricKind::F1Micro => {
+                let Labels::MultiLabel(labels) = &ds.labels else {
+                    return f64::NAN;
+                };
+                f1_micro(logits, labels, &keep, ds.cfg.n_class)
+            }
+            MetricKind::RocAuc => {
+                let Labels::MultiLabel(labels) = &ds.labels else {
+                    return f64::NAN;
+                };
+                mean_auc(logits, labels, &keep, ds.cfg.n_class)
+            }
+        }
+    }
+}
+
+/// Multi-class accuracy: fraction of kept nodes whose argmax matches.
+pub fn accuracy(logits: &[f32], labels: &[i32], keep: &[bool], c: usize) -> f64 {
+    let (mut hit, mut total) = (0usize, 0usize);
+    for (i, &k) in keep.iter().enumerate() {
+        if !k {
+            continue;
+        }
+        let row = &logits[i * c..(i + 1) * c];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap();
+        hit += (pred == labels[i]) as usize;
+        total += 1;
+    }
+    if total == 0 {
+        f64::NAN
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+/// Micro-averaged F1 for multi-label: predictions = logit > 0
+/// (sigmoid > 0.5).
+pub fn f1_micro(logits: &[f32], labels: &[f32], keep: &[bool], c: usize) -> f64 {
+    let (mut tp, mut fp, mut fnn) = (0usize, 0usize, 0usize);
+    for (i, &k) in keep.iter().enumerate() {
+        if !k {
+            continue;
+        }
+        for j in 0..c {
+            let pred = logits[i * c + j] > 0.0;
+            let truth = labels[i * c + j] > 0.5;
+            match (pred, truth) {
+                (true, true) => tp += 1,
+                (true, false) => fp += 1,
+                (false, true) => fnn += 1,
+                _ => {}
+            }
+        }
+    }
+    let denom = 2 * tp + fp + fnn;
+    if denom == 0 {
+        f64::NAN
+    } else {
+        2.0 * tp as f64 / denom as f64
+    }
+}
+
+/// Mean per-class ROC-AUC over kept nodes (classes with one label value
+/// are skipped, like sklearn's behaviour on degenerate columns).
+pub fn mean_auc(logits: &[f32], labels: &[f32], keep: &[bool], c: usize) -> f64 {
+    let mut aucs = Vec::new();
+    for j in 0..c {
+        let mut scores = Vec::new();
+        let mut lab = Vec::new();
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                scores.push(logits[i * c + j]);
+                lab.push(labels[i * c + j] > 0.5);
+            }
+        }
+        let a = ranking_auc(&scores, &lab);
+        if !a.is_nan() {
+            aucs.push(a);
+        }
+    }
+    if aucs.is_empty() {
+        f64::NAN
+    } else {
+        aucs.iter().sum::<f64>() / aucs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        // 3 nodes, 2 classes
+        let logits = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0];
+        let labels = vec![0, 1, 1];
+        let keep = vec![true, true, true];
+        assert!((accuracy(&logits, &labels, &keep, 2) - 2.0 / 3.0).abs() < 1e-12);
+        let keep2 = vec![true, true, false];
+        assert!((accuracy(&logits, &labels, &keep2, 2) - 1.0).abs() < 1e-12);
+        assert!(accuracy(&logits, &labels, &[false; 3], 2).is_nan());
+    }
+
+    #[test]
+    fn f1_perfect_and_mixed() {
+        let logits = vec![5.0, -5.0, -5.0, 5.0];
+        let labels = vec![1.0, 0.0, 0.0, 1.0];
+        let keep = vec![true, true];
+        assert!((f1_micro(&logits, &labels, &keep, 2) - 1.0).abs() < 1e-12);
+        // one FP, one FN
+        let logits2 = vec![5.0, 5.0, -5.0, -5.0];
+        let f1 = f1_micro(&logits2, &labels, &keep, 2);
+        assert!((f1 - 2.0 * 1.0 / (2.0 + 1.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_mean_over_classes() {
+        // class 0 perfectly ranked, class 1 inverted
+        let logits = vec![0.9, 0.1, 0.1, 0.9];
+        let labels = vec![1.0, 0.0, 0.0, 1.0];
+        let keep = vec![true, true];
+        // each class has 1 pos, 1 neg: class0 auc=1, class1: scores 0.1(neg=0... )
+        let auc = mean_auc(&logits, &labels, &keep, 2);
+        assert!((auc - 1.0).abs() < 1e-12);
+    }
+}

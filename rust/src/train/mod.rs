@@ -1,0 +1,7 @@
+//! Training loop, evaluation metrics and result reporting.
+
+pub mod metrics;
+pub mod trainer;
+
+pub use metrics::{accuracy, f1_micro, mean_auc, MetricKind};
+pub use trainer::{train, TrainConfig, TrainResult};

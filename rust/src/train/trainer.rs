@@ -1,0 +1,341 @@
+//! The training loop: full-batch (GCN / GraphSAGE / GCNII) and
+//! GraphSAINT mini-batch, with the RSC engine in the backward path.
+//!
+//! Reports everything the paper's tables and figures need: the metric at
+//! the best-validation epoch, wall-clock, per-op-class time attribution,
+//! the allocation history (Fig. 7), picked-pair degrees (Fig. 8),
+//! selection-overlap AUC (Fig. 4), and allocator/sampling overhead
+//! (Table 11).
+
+use crate::coordinator::{RscConfig, RscEngine};
+use crate::data::{Dataset, Labels, SaintSampler, Split};
+use crate::model::gcn::GcnModel;
+use crate::model::gcnii::GcniiModel;
+use crate::model::ops::{GraphBufs, ModelKind, OpNames};
+use crate::model::sage::SageModel;
+use crate::runtime::{Backend, Value};
+use crate::train::metrics::MetricKind;
+use crate::util::rng::Rng;
+use crate::util::timer::{Stopwatch, TimeBook};
+use crate::Result;
+use anyhow::ensure;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: ModelKind,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub rsc: RscConfig,
+    /// Evaluate val/test every N epochs (also at the last epoch).
+    pub eval_every: usize,
+    pub verbose: bool,
+    /// GraphSAINT: number of pre-sampled subgraphs and batches per epoch.
+    pub saint_subgraphs: usize,
+    pub saint_batches_per_epoch: usize,
+}
+
+impl TrainConfig {
+    pub fn new(model: ModelKind) -> TrainConfig {
+        TrainConfig {
+            model,
+            epochs: 100,
+            lr: 0.01,
+            seed: 0,
+            rsc: RscConfig::baseline(),
+            eval_every: 5,
+            verbose: false,
+            saint_subgraphs: 8,
+            saint_batches_per_epoch: 4,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TrainResult {
+    /// Test metric at the best-validation epoch (paper's protocol).
+    pub test_metric: f64,
+    pub best_val: f64,
+    pub metric: MetricKind,
+    pub loss_curve: Vec<f32>,
+    /// (epoch, val metric) samples.
+    pub val_curve: Vec<(usize, f64)>,
+    /// Wall-clock of the training loop only (excludes setup + final eval).
+    pub train_wall_s: f64,
+    pub tb: TimeBook,
+    pub alloc_history: Vec<(u64, Vec<usize>)>,
+    pub picked_degrees: Vec<(usize, u64, f64)>,
+    pub overlap_samples: Vec<(usize, u64, f64)>,
+    pub alloc_ms: f64,
+    pub sample_ms: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Build the normalized matrix + buffers for a model on the full graph.
+pub fn full_graph_bufs(b: &dyn Backend, ds: &Dataset, model: ModelKind) -> GraphBufs {
+    let matrix = match model {
+        ModelKind::Gcn | ModelKind::Gcnii => ds.adj.gcn_normalize(),
+        ModelKind::Sage | ModelKind::Saint => ds.adj.mean_normalize(),
+    };
+    GraphBufs::new(matrix, b.manifest().dataset.caps.clone())
+}
+
+fn labels_value(ds: &Dataset) -> Value {
+    match &ds.labels {
+        Labels::MultiClass(l) => Value::vec_i32(l.clone()),
+        Labels::MultiLabel(l) => Value::mat_f32(ds.cfg.v, ds.cfg.n_class, l.clone()),
+    }
+}
+
+/// Train per `cfg` on `backend`; the single entry point used by the CLI,
+/// the examples and every bench.
+pub fn train(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+    b.manifest().check_against(&ds.cfg)?;
+    match cfg.model {
+        ModelKind::Saint => train_saint(b, ds, cfg),
+        _ => train_full_batch(b, ds, cfg),
+    }
+}
+
+fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+    let mut rng = Rng::new(cfg.seed ^ 0x7A31);
+    let names = OpNames::full();
+    let bufs = full_graph_bufs(b, ds, cfg.model);
+    let x = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
+    let labels = labels_value(ds);
+    let train_mask = Value::vec_f32(ds.mask(Split::Train));
+    let metric = MetricKind::for_dataset(ds);
+
+    let widths: Vec<usize> = (0..cfg.model.n_spmm_bwd(&ds.cfg))
+        .map(|s| cfg.model.spmm_width(&ds.cfg, s))
+        .collect();
+    let mut engine = RscEngine::new(cfg.rsc.clone(), &bufs.matrix, widths, cfg.epochs as u64);
+
+    enum AnyModel {
+        Gcn(GcnModel),
+        Sage(SageModel),
+        Gcnii(GcniiModel),
+    }
+    let mut model = match cfg.model {
+        ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(&ds.cfg, names, &mut rng)),
+        ModelKind::Sage => AnyModel::Sage(SageModel::new(&ds.cfg, names, &mut rng)),
+        ModelKind::Gcnii => AnyModel::Gcnii(GcniiModel::new(&ds.cfg, names, &mut rng)),
+        ModelKind::Saint => unreachable!(),
+    };
+
+    let mut tb = TimeBook::new();
+    let mut loss_curve = Vec::with_capacity(cfg.epochs);
+    let mut val_curve = Vec::new();
+    let mut best_val = f64::NEG_INFINITY;
+    let mut test_at_best = f64::NAN;
+    let sw = Stopwatch::start();
+    let mut eval_tb = TimeBook::new();
+
+    for epoch in 0..cfg.epochs {
+        let step = epoch as u64;
+        let loss = match &mut model {
+            AnyModel::Gcn(m) => m.train_step(
+                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb, None,
+            )?,
+            AnyModel::Sage(m) => m.train_step(
+                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
+            )?,
+            AnyModel::Gcnii(m) => m.train_step(
+                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
+            )?,
+        };
+        ensure!(loss.is_finite(), "loss diverged at epoch {epoch}: {loss}");
+        loss_curve.push(loss);
+
+        if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+            let logits = match &model {
+                AnyModel::Gcn(m) => m.logits(b, &x, &bufs, &mut eval_tb)?,
+                AnyModel::Sage(m) => m.logits(b, &x, &bufs, &mut eval_tb)?,
+                AnyModel::Gcnii(m) => m.logits(b, &x, &bufs, &mut eval_tb)?,
+            };
+            let lf = logits.f32s()?;
+            let val = metric.evaluate(ds, lf, Split::Val);
+            let test = metric.evaluate(ds, lf, Split::Test);
+            val_curve.push((epoch, val));
+            if val > best_val {
+                best_val = val;
+                test_at_best = test;
+            }
+            if cfg.verbose {
+                println!(
+                    "epoch {epoch:4} loss {loss:.4} val {val:.4} test {test:.4} ks {:?}",
+                    engine.ks()
+                );
+            }
+        }
+    }
+    let train_wall_s = sw.elapsed().as_secs_f64() - eval_tb.grand_total_ms() / 1e3;
+    let (cache_hits, cache_misses) = engine.cache_stats();
+    Ok(TrainResult {
+        test_metric: test_at_best,
+        best_val,
+        metric,
+        loss_curve,
+        val_curve,
+        train_wall_s,
+        tb,
+        alloc_history: engine.alloc_history.clone(),
+        picked_degrees: engine.picked_degrees.clone(),
+        overlap_samples: engine.overlap.samples.clone(),
+        alloc_ms: engine.alloc_ms,
+        sample_ms: engine.sample_ms,
+        cache_hits,
+        cache_misses,
+    })
+}
+
+/// GraphSAINT: pre-sample subgraphs offline (paper footnote 1), train on
+/// padded subgraphs with a per-subgraph RSC engine, evaluate full-batch.
+fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+    ensure!(ds.cfg.saint_v > 0, "dataset {} has no SAINT config", ds.cfg.name);
+    let mut rng = Rng::new(cfg.seed ^ 0x5417);
+    let metric = MetricKind::for_dataset(ds);
+
+    // --- offline sampling ---
+    let sampler = SaintSampler::for_dataset(ds);
+    let n_sub = cfg.saint_subgraphs;
+    let mut subs = Vec::with_capacity(n_sub);
+    for _ in 0..n_sub {
+        subs.push(sampler.sample(ds, &mut rng));
+    }
+    let saint_caps = b.manifest().dataset.saint_caps.clone();
+    let sub_bufs: Vec<GraphBufs> = subs
+        .iter()
+        .map(|sg| {
+            // pad the local matrix to saint_v nodes before normalizing
+            let mut triples = Vec::with_capacity(sg.adj.nnz());
+            for r in 0..sg.adj.n {
+                let (cs, ws) = sg.adj.row(r);
+                for (&c, &w) in cs.iter().zip(ws) {
+                    triples.push((r as u32, c, w));
+                }
+            }
+            let padded = crate::graph::Csr::from_triples(ds.cfg.saint_v, triples);
+            GraphBufs::new_padded(padded.mean_normalize(), saint_caps.clone())
+        })
+        .collect();
+    let sub_x: Vec<Value> = subs
+        .iter()
+        .map(|sg| Value::mat_f32(ds.cfg.saint_v, ds.cfg.d_in, sg.features(ds)))
+        .collect();
+    let sub_labels: Vec<Value> = subs
+        .iter()
+        .map(|sg| match &ds.labels {
+            Labels::MultiClass(_) => Value::vec_i32(sg.labels_i32(ds)),
+            Labels::MultiLabel(_) => {
+                Value::mat_f32(ds.cfg.saint_v, ds.cfg.n_class, sg.labels_f32(ds))
+            }
+        })
+        .collect();
+    let sub_mask: Vec<Value> = subs
+        .iter()
+        .map(|sg| Value::vec_f32(sg.train_mask(ds)))
+        .collect();
+
+    // per-subgraph engines (caching is per sampled graph)
+    let total_uses =
+        (cfg.epochs * cfg.saint_batches_per_epoch).div_ceil(n_sub) as u64;
+    let widths: Vec<usize> = (0..ModelKind::Sage.n_spmm_bwd(&ds.cfg))
+        .map(|s| ModelKind::Sage.spmm_width(&ds.cfg, s))
+        .collect();
+    let mut engines: Vec<RscEngine> = sub_bufs
+        .iter()
+        .map(|bufs| RscEngine::new(cfg.rsc.clone(), &bufs.matrix, widths.clone(), total_uses))
+        .collect();
+    let mut uses = vec![0u64; n_sub];
+
+    let mut model = SageModel::new(&ds.cfg, OpNames::saint(), &mut rng);
+
+    // full-graph eval buffers
+    let eval_bufs = full_graph_bufs(b, ds, ModelKind::Sage);
+    let x_full = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
+
+    let mut tb = TimeBook::new();
+    let mut eval_tb = TimeBook::new();
+    let mut loss_curve = Vec::new();
+    let mut val_curve = Vec::new();
+    let mut best_val = f64::NEG_INFINITY;
+    let mut test_at_best = f64::NAN;
+    let sw = Stopwatch::start();
+    let mut batch_cursor = 0usize;
+
+    for epoch in 0..cfg.epochs {
+        let mut epoch_loss = 0f32;
+        for _ in 0..cfg.saint_batches_per_epoch {
+            let i = batch_cursor % n_sub;
+            batch_cursor += 1;
+            let step = uses[i];
+            uses[i] += 1;
+            let loss = model.train_step(
+                b,
+                &sub_x[i],
+                &sub_labels[i],
+                &sub_mask[i],
+                &sub_bufs[i],
+                &mut engines[i],
+                step,
+                cfg.lr,
+                &mut tb,
+            )?;
+            ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
+            epoch_loss += loss;
+        }
+        loss_curve.push(epoch_loss / cfg.saint_batches_per_epoch as f32);
+
+        if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+            // evaluate with full-batch ops: same weights, full prefix names
+            let saved = std::mem::replace(&mut model.names, OpNames::full());
+            let logits = model.logits(b, &x_full, &eval_bufs, &mut eval_tb)?;
+            model.names = saved;
+            let lf = logits.f32s()?;
+            let val = metric.evaluate(ds, lf, Split::Val);
+            let test = metric.evaluate(ds, lf, Split::Test);
+            val_curve.push((epoch, val));
+            if val > best_val {
+                best_val = val;
+                test_at_best = test;
+            }
+            if cfg.verbose {
+                println!("epoch {epoch:4} loss {:.4} val {val:.4} test {test:.4}",
+                    loss_curve.last().unwrap());
+            }
+        }
+    }
+    let train_wall_s = sw.elapsed().as_secs_f64() - eval_tb.grand_total_ms() / 1e3;
+    let mut alloc_history = Vec::new();
+    let mut picked = Vec::new();
+    let mut overlap = Vec::new();
+    let (mut hits, mut misses, mut alloc_ms, mut sample_ms) = (0, 0, 0.0, 0.0);
+    for e in &engines {
+        alloc_history.extend(e.alloc_history.iter().cloned());
+        picked.extend(e.picked_degrees.iter().cloned());
+        overlap.extend(e.overlap.samples.iter().cloned());
+        let (h, m) = e.cache_stats();
+        hits += h;
+        misses += m;
+        alloc_ms += e.alloc_ms;
+        sample_ms += e.sample_ms;
+    }
+    Ok(TrainResult {
+        test_metric: test_at_best,
+        best_val,
+        metric,
+        loss_curve,
+        val_curve,
+        train_wall_s,
+        tb,
+        alloc_history,
+        picked_degrees: picked,
+        overlap_samples: overlap,
+        alloc_ms,
+        sample_ms,
+        cache_hits: hits,
+        cache_misses: misses,
+    })
+}

@@ -1,0 +1,155 @@
+//! Tiny CLI argument parser (clap replacement).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Typed accessors with defaults; unknown-flag detection via
+//! [`Args::finish`].
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = S>, S: Into<String>>(items: I) -> Args {
+        let mut a = Args::default();
+        let mut it = items.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(body.to_string(), v);
+                } else {
+                    a.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{key}: bad integer {s:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{key}: bad integer {s:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{key}: bad float {s:?}: {e}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => match s.as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                _ => bail!("--{key}: bad bool {s:?}"),
+            },
+        }
+    }
+
+    /// Comma-separated list.
+    pub fn list_or(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Error on any flag never queried (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !seen.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_forms() {
+        let a = Args::parse(["train", "--epochs", "50", "--budget=0.1", "--cache"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 50);
+        assert_eq!(a.f64_or("budget", 1.0).unwrap(), 0.1);
+        assert!(a.bool_or("cache", false).unwrap());
+        assert_eq!(a.usize_or("missing", 9).unwrap(), 9);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(["--oops", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(["--datasets", "a,b,c"]);
+        assert_eq!(a.list_or("datasets", ""), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = Args::parse(["--n", "xyz"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

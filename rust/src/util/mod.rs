@@ -1,0 +1,11 @@
+//! Foundational substrates built in-repo (the offline image carries no
+//! serde/clap/criterion/proptest/rand, so we implement what we need):
+//! JSON, RNG, CLI parsing, statistics, a tiny property-test harness and
+//! wall-clock timers.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,87 @@
+//! Minimal property-based-testing harness (proptest replacement).
+//!
+//! A property is a closure over a seeded [`Rng`]; [`check`] runs it for N
+//! seeds and, on failure, reports the failing seed so the case replays
+//! deterministically (`check_seed`).  No shrinking — generators are kept
+//! small instead.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: u64 = 64;
+
+/// Run `prop` for `cases` generated inputs; panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with prop::check_seed({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay one case.
+pub fn check_seed<F: FnOnce(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// Generator helpers.
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal_f32() * scale).collect()
+}
+
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0_f32.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() / denom <= tol,
+            "{what}: mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 32, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check("always-false", 4, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn close_assertion() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at 0")]
+    fn close_assertion_fails() {
+        assert_close(&[1.0], &[2.0], 1e-5, "t");
+    }
+}

@@ -1,0 +1,140 @@
+//! Summary statistics + fixed-width table printing (the reporting half of
+//! the criterion replacement; the measurement half is `bench::harness`).
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// p-th percentile (linear interpolation), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// "mean±std" with sensible digits.
+pub fn fmt_mean_std(xs: &[f64]) -> String {
+    format!("{:.2}±{:.2}", mean(xs), std_dev(xs))
+}
+
+/// Fixed-width ASCII table writer used by every bench target so the
+/// regenerated tables read like the paper's.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(c);
+                for _ in c.chars().count()..width[i] {
+                    out.push(' ');
+                }
+                out.push(' ');
+            }
+            out.push_str("|\n");
+        };
+        fmt_row(&self.headers, &mut out);
+        for (i, w) in width.iter().enumerate() {
+            out.push_str(if i == 0 { "|" } else { "|" });
+            for _ in 0..w + 2 {
+                out.push('-');
+            }
+        }
+        out.push_str("|\n");
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.2909944487358056).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(vec!["model", "acc"]);
+        t.row(vec!["GCN", "95.33"]);
+        t.row(vec!["GraphSAGE", "96.61"]);
+        let s = t.render();
+        assert!(s.contains("| GCN       |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_width() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

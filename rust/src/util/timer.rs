@@ -1,0 +1,130 @@
+//! Wall-clock timing: a scoped stopwatch plus a label→duration accumulator
+//! used by the trainer to attribute step time to op classes (SpMM fwd,
+//! SpMM bwd, MatMul, loss, Adam, sampling, allocation) — the raw data for
+//! Figure 1, Table 2 and every speedup column.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates durations per label.
+#[derive(Debug, Default, Clone)]
+pub struct TimeBook {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl TimeBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, label: &str, d: Duration) {
+        *self.totals.entry(label.to_string()).or_default() += d;
+        *self.counts.entry(label.to_string()).or_default() += 1;
+    }
+
+    /// Time `f`, attributing its duration to `label`.
+    pub fn scope<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(label, t0.elapsed());
+        out
+    }
+
+    pub fn total_ms(&self, label: &str) -> f64 {
+        self.totals
+            .get(label)
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
+    }
+
+    pub fn count(&self, label: &str) -> u64 {
+        self.counts.get(label).copied().unwrap_or(0)
+    }
+
+    pub fn mean_ms(&self, label: &str) -> f64 {
+        let c = self.count(label);
+        if c == 0 {
+            0.0
+        } else {
+            self.total_ms(label) / c as f64
+        }
+    }
+
+    pub fn labels(&self) -> impl Iterator<Item = &str> {
+        self.totals.keys().map(|s| s.as_str())
+    }
+
+    pub fn grand_total_ms(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64() * 1e3).sum()
+    }
+
+    pub fn merge(&mut self, other: &TimeBook) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.totals.clear();
+        self.counts.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut tb = TimeBook::new();
+        tb.add("spmm", Duration::from_millis(10));
+        tb.add("spmm", Duration::from_millis(20));
+        tb.add("mm", Duration::from_millis(5));
+        assert_eq!(tb.count("spmm"), 2);
+        assert!((tb.total_ms("spmm") - 30.0).abs() < 1e-9);
+        assert!((tb.mean_ms("spmm") - 15.0).abs() < 1e-9);
+        assert!((tb.grand_total_ms() - 35.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scope_measures() {
+        let mut tb = TimeBook::new();
+        let v = tb.scope("work", || {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(tb.total_ms("work") >= 1.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = TimeBook::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = TimeBook::new();
+        b.add("x", Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+    }
+}

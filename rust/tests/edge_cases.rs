@@ -1,0 +1,222 @@
+//! Edge-case and failure-injection tests across modules: degenerate
+//! graphs, extreme budgets, scheduler boundaries, malformed inputs.
+
+use rsc::allocator::{evaluate, Allocator, GreedyAllocator, LayerScores};
+use rsc::cache::{ranking_auc, SampleCache};
+use rsc::coordinator::{RscConfig, RscEngine};
+use rsc::data::{load_or_generate, Split};
+use rsc::graph::{Csr, EdgeList};
+use rsc::runtime::native;
+use rsc::sampling::Selection;
+use rsc::train::metrics::{accuracy, f1_micro, mean_auc};
+use rsc::util::json::Json;
+use rsc::util::rng::Rng;
+
+#[test]
+fn csr_isolated_nodes_normalize_cleanly() {
+    // node 2 has no edges at all; normalizations must not NaN
+    let m = Csr::from_triples(4, vec![(0, 1, 1.0), (1, 0, 1.0)]);
+    let gcn = m.gcn_normalize();
+    assert!(gcn.validate());
+    assert!(gcn.val.iter().all(|w| w.is_finite()));
+    // isolated node keeps exactly its self-loop
+    let (cs, ws) = gcn.row(2);
+    assert_eq!(cs, &[2u32]);
+    assert!((ws[0] - 1.0).abs() < 1e-6);
+    let mean = m.mean_normalize();
+    assert!(mean.val.iter().all(|w| w.is_finite()));
+}
+
+#[test]
+fn csr_empty_matrix() {
+    let m = Csr::from_triples(3, vec![]);
+    assert!(m.validate());
+    assert_eq!(m.nnz(), 0);
+    assert_eq!(m.transpose(), m);
+    assert_eq!(m.fro_norm(), 0.0);
+    let sel = Selection::build(&m, vec![0, 1, 2], &[1]);
+    assert_eq!(sel.nnz, 0);
+    assert_eq!(sel.cap, 1); // pads to the smallest bucket
+}
+
+#[test]
+fn spmm_empty_edges_is_zero() {
+    let out = native::spmm(&[], &[], &[], &[1.0, 2.0], 1, 2);
+    assert_eq!(out, vec![0.0, 0.0]);
+}
+
+#[test]
+fn edgelist_pad_to_same_len_is_noop() {
+    let mut e = EdgeList::default();
+    e.push(0, 1, 0.5);
+    e.pad_to(1);
+    assert_eq!(e.len(), 1);
+}
+
+#[test]
+fn greedy_extreme_budgets() {
+    let layers = vec![LayerScores {
+        scores: vec![1.0; 20],
+        nnz: vec![2; 20],
+        d: 4,
+    }];
+    let a = GreedyAllocator::default();
+    // C=1: keep everything
+    assert_eq!(a.allocate(&layers, 1.0), vec![20]);
+    // C≈0: floors at min_frac without panicking
+    let ks = a.allocate(&layers, 1e-9);
+    assert!(ks[0] >= 1);
+    let (_, flops) = evaluate(&layers, &ks);
+    assert!(flops > 0);
+}
+
+#[test]
+fn greedy_empty_layers() {
+    let ks = GreedyAllocator::default().allocate(&[], 0.5);
+    assert!(ks.is_empty());
+}
+
+#[test]
+fn engine_single_site_and_c_one() {
+    let mut rng = Rng::new(1);
+    let m = Csr::random(30, 120, &mut rng);
+    let caps = vec![m.nnz() / 2, m.nnz()];
+    let exact = Selection::exact(&m, &caps);
+    let mut e = RscEngine::new(
+        RscConfig { budget_c: 1.0, switch_frac: 1.0, ..Default::default() },
+        &m,
+        vec![8],
+        100,
+    );
+    e.observe_norms(0, vec![1.0; 30]);
+    // C=1.0 keeps all pairs -> approx plan with the full bucket
+    let p = e.plan(0, 1, &m, &caps, &exact);
+    assert!(p.is_approx());
+    assert_eq!(p.selection().nnz, m.nnz());
+}
+
+#[test]
+fn engine_alloc_every_schedule() {
+    let mut rng = Rng::new(2);
+    let m = Csr::random(20, 80, &mut rng);
+    let e = RscEngine::new(
+        RscConfig { alloc_every: 7, switch_frac: 1.0, ..Default::default() },
+        &m,
+        vec![4],
+        1000,
+    );
+    assert!(e.norms_wanted(0));
+    assert!(!e.norms_wanted(1));
+    assert!(e.norms_wanted(7));
+    assert!(e.norms_wanted(14));
+}
+
+#[test]
+fn sample_cache_invalidate_all() {
+    let mut rng = Rng::new(3);
+    let m = Csr::random(10, 30, &mut rng);
+    let caps = vec![m.nnz()];
+    let mut c = SampleCache::new(1, 100);
+    c.get_or_build(0, 0, 3, &m, &caps, || vec![0, 1, 2]);
+    assert!(!c.stale(0, 1, 3));
+    c.invalidate_all();
+    assert!(c.stale(0, 1, 3));
+}
+
+#[test]
+fn selection_tags_are_unique() {
+    let mut rng = Rng::new(4);
+    let m = Csr::random(10, 30, &mut rng);
+    let caps = vec![m.nnz()];
+    let a = Selection::build(&m, vec![0, 1], &caps);
+    let b = Selection::build(&m, vec![0, 1], &caps);
+    assert_ne!(a.tag, b.tag);
+    // tags span 3 slots (src/dst/w) without overlap
+    assert!(b.tag >= a.tag + 3 || a.tag >= b.tag + 3);
+}
+
+#[test]
+fn metrics_degenerate_inputs() {
+    // all-one-class AUC is NaN, empty keep-set accuracy is NaN
+    assert!(mean_auc(&[1.0, 0.0], &[1.0, 1.0], &[true], 2).is_nan());
+    assert!(accuracy(&[], &[], &[], 3).is_nan());
+    assert!(f1_micro(&[-1.0], &[0.0], &[true], 1).is_nan()); // no preds, no truths
+    assert!(ranking_auc(&[], &[]).is_nan());
+}
+
+#[test]
+fn json_number_formats() {
+    for (src, want) in [
+        ("0", 0.0),
+        ("-0", 0.0),
+        ("1e3", 1000.0),
+        ("2.5E-2", 0.025),
+        ("123456789012345", 123456789012345.0),
+    ] {
+        assert_eq!(Json::parse(src).unwrap(), Json::Num(want), "{src}");
+    }
+    assert!(Json::parse("01abc").is_err());
+}
+
+#[test]
+fn rng_range_single_element() {
+    let mut r = Rng::new(5);
+    assert_eq!(r.range(7, 8), 7);
+    assert_eq!(r.below(1), 0);
+}
+
+#[test]
+fn dataset_splits_are_exhaustive_and_disjoint() {
+    let ds = load_or_generate("tiny", 42).unwrap();
+    let total = ds.count(Split::Train) + ds.count(Split::Val) + ds.count(Split::Test);
+    assert_eq!(total, ds.cfg.v);
+}
+
+#[test]
+fn softmax_loss_masked_out_rows_do_not_contribute() {
+    let logits = vec![10.0, -10.0, -3.0, 3.0];
+    let labels = vec![0, 0]; // row 1 is wrong on purpose but masked out
+    let (loss_masked, _) = native::softmax_xent(&logits, &labels, &[1.0, 0.0], 2, 2);
+    let (loss_row0, _) = native::softmax_xent(&logits[..2], &labels[..1], &[1.0], 1, 2);
+    assert!((loss_masked - loss_row0).abs() < 1e-6);
+}
+
+#[test]
+fn adam_t_must_not_divide_by_zero() {
+    // t = 1 is the first valid step (bias correction 1 - beta^1 > 0)
+    let (w2, _, _) = native::adam(&[1.0], &[0.0], &[0.0], &[1.0], 1.0, 0.1);
+    assert!(w2[0].is_finite());
+}
+
+#[test]
+fn bucket_ladder_from_manifest_is_sorted_unique() {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let b = rsc::runtime::NativeBackend::load("tiny").unwrap();
+    use rsc::runtime::Backend as _;
+    let caps = &b.manifest().dataset.caps;
+    let mut sorted = caps.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(*caps, sorted);
+}
+
+#[test]
+fn backend_rejects_malformed_calls() {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    use rsc::runtime::{Backend, NativeBackend, Value};
+    let b = NativeBackend::load("tiny").unwrap();
+    // wrong dtype
+    let f = Value::vec_f32(vec![0.0; 128]);
+    let bad = b.run("loss_softmax", &[f.clone(), f.clone(), f.clone()]);
+    assert!(bad.is_err());
+    // wrong arity
+    assert!(b.run("add_16", &[f]).is_err());
+    // unknown op
+    assert!(b.run("definitely_not_an_op", &[]).is_err());
+}

@@ -1,0 +1,198 @@
+//! Cross-module property tests (in-repo `util::prop` harness): invariants
+//! that must hold for arbitrary graphs/scores/configs.
+
+use rsc::allocator::{evaluate, total_budget, Allocator, GreedyAllocator, LayerScores};
+use rsc::cache::ranking_auc;
+use rsc::graph::{generate_sbm, Csr, SbmConfig};
+use rsc::runtime::native;
+use rsc::sampling::{pick_bucket, top_k_indices, Selection};
+use rsc::util::json::Json;
+use rsc::util::prop;
+use rsc::util::rng::Rng;
+
+#[test]
+fn prop_spmm_linear_in_weights() {
+    // spmm(a*w) == a * spmm(w): the scaling property the Drineas
+    // estimator relies on.
+    prop::check("spmm-linear", 30, |rng| {
+        let v = rng.range(2, 30);
+        let d = rng.range(1, 6);
+        let e = rng.below(4 * v) + 1;
+        let src: Vec<i32> = (0..e).map(|_| rng.below(v) as i32).collect();
+        let dst: Vec<i32> = (0..e).map(|_| rng.below(v) as i32).collect();
+        let w: Vec<f32> = (0..e).map(|_| rng.normal_f32()).collect();
+        let x = prop::vec_f32(rng, v * d, 1.0);
+        let a = 1.0 + rng.f32();
+        let w2: Vec<f32> = w.iter().map(|&q| q * a).collect();
+        let y1 = native::spmm(&src, &dst, &w2, &x, d, v);
+        let y0 = native::spmm(&src, &dst, &w, &x, d, v);
+        let scaled: Vec<f32> = y0.iter().map(|&q| q * a).collect();
+        prop::assert_close(&y1, &scaled, 1e-3, "linear");
+    });
+}
+
+#[test]
+fn prop_selection_partition_sums_to_exact() {
+    // spmm over selected rows + spmm over the complement == exact spmm.
+    prop::check("selection-partition", 20, |rng| {
+        let v = rng.range(2, 25);
+        let adj = Csr::random(v, 3 * v, rng);
+        let d = rng.range(1, 5);
+        let x = prop::vec_f32(rng, v * d, 1.0);
+        let caps = vec![adj.nnz().max(1)];
+        let k = rng.below(v + 1);
+        let scores: Vec<f32> = (0..v).map(|_| rng.f32()).collect();
+        let rows = top_k_indices(&scores, k);
+        let comp: Vec<u32> = (0..v as u32).filter(|r| !rows.contains(r)).collect();
+        let s1 = Selection::build(&adj, rows, &caps);
+        let s2 = Selection::build(&adj, comp, &caps);
+        let full = Selection::exact(&adj, &caps);
+        let run = |s: &Selection| {
+            native::spmm(&s.edges.src, &s.edges.dst, &s.edges.w, &x, d, v)
+        };
+        let y1 = run(&s1);
+        let y2 = run(&s2);
+        let yf = run(&full);
+        let sum: Vec<f32> = y1.iter().zip(&y2).map(|(a, b)| a + b).collect();
+        prop::assert_close(&sum, &yf, 1e-3, "partition");
+    });
+}
+
+#[test]
+fn prop_greedy_never_exceeds_budget_when_feasible() {
+    prop::check("greedy-feasible", 30, |rng| {
+        let v = rng.range(10, 80);
+        let l = rng.range(1, 5);
+        let layers: Vec<LayerScores> = (0..l)
+            .map(|_| LayerScores {
+                scores: (0..v).map(|_| rng.f32()).collect(),
+                nnz: (0..v).map(|_| rng.below(8) as u32 + 1).collect(),
+                d: rng.range(1, 32),
+            })
+            .collect();
+        let c = 0.1 + 0.85 * rng.f64();
+        let alloc = GreedyAllocator::default();
+        let ks = alloc.allocate(&layers, c);
+        let (_, flops) = evaluate(&layers, &ks);
+        let budget = total_budget(&layers, c);
+        let k_min = ((alloc.min_frac * v as f64).round() as usize).max(1);
+        let floored = ks.iter().all(|&k| k <= k_min);
+        assert!(flops <= budget || floored, "infeasible non-floored allocation");
+        // ks ordered sanely
+        assert!(ks.iter().all(|&k| k >= 1 && k <= v));
+    });
+}
+
+#[test]
+fn prop_bucket_pick_is_tight() {
+    prop::check("bucket-tight", 50, |rng| {
+        let mut caps: Vec<usize> = (0..rng.range(1, 8)).map(|_| rng.range(1, 1000)).collect();
+        caps.sort_unstable();
+        caps.dedup();
+        let nnz = rng.below(*caps.last().unwrap() + 1);
+        let cap = pick_bucket(&caps, nnz);
+        assert!(cap >= nnz);
+        // tight: no smaller cap fits
+        for &c in &caps {
+            if c < cap {
+                assert!(c < nnz);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_auc_invariant_to_monotone_transforms() {
+    prop::check("auc-monotone", 30, |rng| {
+        let n = rng.range(4, 60);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        if !labels.iter().any(|&l| l) || labels.iter().all(|&l| l) {
+            return;
+        }
+        let a1 = ranking_auc(&scores, &labels);
+        let transformed: Vec<f32> = scores.iter().map(|&s| 3.0 * s + 1.0).collect();
+        let a2 = ranking_auc(&transformed, &labels);
+        assert!((a1 - a2).abs() < 1e-9);
+        // reversing scores flips auc
+        let neg: Vec<f32> = scores.iter().map(|&s| -s).collect();
+        let a3 = ranking_auc(&neg, &labels);
+        assert!((a1 + a3 - 1.0).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Num((rng.normal() * 100.0).round()),
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Null,
+            3 => Json::Str(
+                (0..rng.below(10))
+                    .map(|_| char::from(b'a' + rng.below(26) as u8))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop::check("json-roundtrip", 60, |rng| {
+        let v = gen(rng, 3);
+        let v2 = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+    });
+}
+
+#[test]
+fn prop_sbm_normalizations_preserve_structure() {
+    prop::check("normalize-structure", 10, |rng| {
+        let v = rng.range(20, 60);
+        let max_pairs = v * (v - 1) / 4; // generator's density guard
+        let g = generate_sbm(&SbmConfig {
+            v,
+            e_directed: 2 * rng.range(v, (2 * v).min(max_pairs)),
+            clusters: rng.range(2, 5),
+            p_intra: 0.8,
+            skew: 0.5,
+            seed: rng.next_u64(),
+        });
+        let gcn = g.adj.gcn_normalize();
+        let mean = g.adj.mean_normalize();
+        // same sparsity pattern (adj + self loops)
+        assert_eq!(gcn.nnz(), g.adj.nnz() + v);
+        assert_eq!(mean.nnz(), g.adj.nnz() + v);
+        // all weights positive and bounded by 1
+        assert!(gcn.val.iter().all(|&w| w > 0.0 && w <= 1.0 + 1e-6));
+        assert!(mean.val.iter().all(|&w| w > 0.0 && w <= 1.0 + 1e-6));
+        // mean rows sum to 1
+        for r in 0..v {
+            let (_, ws) = mean.row(r);
+            let s: f32 = ws.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_topk_nnz_monotone_in_k() {
+    // more pairs kept => more retained edges (the allocator's cost model
+    // must be monotone for greedy to terminate).
+    prop::check("topk-monotone", 20, |rng| {
+        let v = rng.range(5, 40);
+        let adj = Csr::random(v, 4 * v, rng);
+        let scores: Vec<f32> = (0..v).map(|_| rng.f32()).collect();
+        let caps = vec![adj.nnz().max(1)];
+        let mut last = 0;
+        for k in [v / 4, v / 2, v] {
+            let sel = Selection::build(&adj, top_k_indices(&scores, k), &caps);
+            assert!(sel.nnz >= last);
+            last = sel.nnz;
+        }
+        assert_eq!(last, adj.nnz());
+    });
+}

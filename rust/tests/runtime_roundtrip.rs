@@ -1,0 +1,183 @@
+//! XLA-vs-native numerics: for every op *kind* in the tiny catalog, run
+//! the same random inputs through both backends and require agreement.
+//! This is the contract that lets the rest of the test suite trust the
+//! cheap native backend as a stand-in for PJRT.
+
+use rsc::runtime::{Backend, NativeBackend, Value, XlaBackend};
+use rsc::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/tiny/manifest.json").exists()
+}
+
+fn rand_inputs(def: &rsc::runtime::OpDef, rng: &mut Rng) -> Vec<Value> {
+    // Adam's second-moment input must be non-negative (sqrt), so keep all
+    // adam f32 inputs positive.
+    let nonneg = def.kind() == "adam";
+    def.inputs
+        .iter()
+        .map(|spec| {
+            let n: usize = spec.shape.iter().product();
+            match spec.dtype.as_str() {
+                "i32" => {
+                    // index-ish inputs: node ids bounded by V, class labels
+                    // bounded by the op's class count
+                    let hi = if def.kind().starts_with("loss") {
+                        def.meta_usize("c").unwrap_or(4)
+                    } else {
+                        // edge src/dst must index rows of the node matrix:
+                        // bound by the first rank-2 f32 input's row count
+                        def.inputs
+                            .iter()
+                            .find(|s| s.dtype == "f32" && s.shape.len() == 2)
+                            .map(|s| s.shape[0])
+                            .unwrap_or(4)
+                    };
+                    Value::I32 {
+                        data: (0..n).map(|_| rng.below(hi) as i32).collect(),
+                        shape: spec.shape.clone(),
+                    }
+                }
+                _ => {
+                    // scalar t/lr inputs must be positive
+                    let data: Vec<f32> = if spec.shape.is_empty() {
+                        vec![1.0 + rng.f32()]
+                    } else if nonneg {
+                        (0..n).map(|_| rng.f32() * 0.5).collect()
+                    } else {
+                        (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+                    };
+                    Value::F32 { data, shape: spec.shape.clone() }
+                }
+            }
+        })
+        .collect()
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0f32.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() / denom < tol,
+            "{what}[{i}]: xla {x} vs native {y}"
+        );
+    }
+}
+
+#[test]
+fn every_op_kind_agrees_across_backends() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let xla = XlaBackend::load("tiny").unwrap();
+    let native = NativeBackend::load("tiny").unwrap();
+    let mut rng = Rng::new(0xBEEF);
+
+    // one representative op per kind (plus a sample of bwd-family caps)
+    let mut picked: Vec<String> = Vec::new();
+    let mut seen_kinds = std::collections::BTreeSet::new();
+    for (name, def) in &xla.manifest().ops {
+        let kind = def.kind().to_string();
+        let bwd = kind.starts_with("spmm_bwd");
+        if seen_kinds.insert(kind) || (bwd && rng.chance(0.3)) {
+            picked.push(name.clone());
+        }
+    }
+    assert!(picked.len() >= 15, "too few op kinds: {picked:?}");
+
+    for name in picked {
+        let def = xla.op(&name).unwrap().clone();
+        let inputs = rand_inputs(&def, &mut rng);
+        let a = xla.run(&name, &inputs).unwrap();
+        let b = native.run(&name, &inputs).unwrap();
+        assert_eq!(a.len(), b.len(), "{name} arity");
+        for (va, vb) in a.iter().zip(&b) {
+            match (va, vb) {
+                (Value::F32 { data: da, .. }, Value::F32 { data: db, .. }) => {
+                    close(da, db, 2e-3, &name)
+                }
+                (Value::I32 { data: da, .. }, Value::I32 { data: db, .. }) => {
+                    assert_eq!(da, db, "{name}")
+                }
+                _ => panic!("{name}: dtype mismatch across backends"),
+            }
+        }
+    }
+}
+
+#[test]
+fn padded_bucket_equals_exact_subset() {
+    // An approx executable fed a padded edge list must equal the native
+    // spmm over only the real edges — the padding contract end to end.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let xla = XlaBackend::load("tiny").unwrap();
+    let ds = &xla.manifest().dataset;
+    let (v, d_h, caps) = (ds.v, ds.d_h, ds.caps.clone());
+    let mut rng = Rng::new(7);
+    let cap = caps[1];
+    let real = cap / 2;
+    let mut src: Vec<i32> = (0..real).map(|_| rng.below(v) as i32).collect();
+    let mut dst: Vec<i32> = (0..real).map(|_| rng.below(v) as i32).collect();
+    let mut w: Vec<f32> = (0..real).map(|_| rng.normal_f32()).collect();
+    let g: Vec<f32> = (0..v * d_h).map(|_| rng.normal_f32()).collect();
+
+    let want = rsc::runtime::native::spmm(&src, &dst, &w, &g, d_h, v);
+
+    src.resize(cap, 0);
+    dst.resize(cap, 0);
+    w.resize(cap, 0.0);
+    let out = xla
+        .run(
+            &format!("spmm_bwd_nomask_{d_h}_cap{cap}"),
+            &[
+                Value::mat_f32(v, d_h, g),
+                Value::vec_i32(src),
+                Value::vec_i32(dst),
+                Value::vec_f32(w),
+            ],
+        )
+        .unwrap();
+    close(out[0].f32s().unwrap(), &want, 1e-3, "padded bucket");
+}
+
+#[test]
+fn manifest_matches_rust_catalog_expectations() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let b = NativeBackend::load("tiny").unwrap();
+    let caps = b.manifest().dataset.caps.clone();
+    let cfg = rsc::data::dataset_cfg("tiny").unwrap();
+    b.manifest().check_against(&cfg).unwrap();
+
+    // every op name the models will emit must exist in the manifest
+    let names = rsc::model::ops::OpNames::full();
+    let dims = [cfg.d_in, cfg.d_h, cfg.d_h, cfg.n_class];
+    for l in 0..cfg.layers {
+        let relu = l < cfg.layers - 1;
+        assert!(b.has_op(&names.gcn_fwd(dims[l], dims[l + 1], relu)));
+        assert!(b.has_op(&names.sage_fwd(dims[l], dims[l + 1], relu)));
+        assert!(b.has_op(&names.gcn_bwd_mm(dims[l], dims[l + 1])));
+    }
+    for &cap in &caps {
+        assert!(b.has_op(&names.spmm_bwd_mask(cfg.d_h, cap)));
+        assert!(b.has_op(&names.spmm_bwd_nomask(cfg.n_class, cap)));
+        assert!(b.has_op(&names.spmm_bwd_acc(cfg.d_h, cap)));
+    }
+    for l in 1..=cfg.gcnii_layers {
+        assert!(b.has_op(&names.gcnii_fwd(cfg.d_h, l)));
+        assert!(b.has_op(&names.gcnii_bwd_pre(cfg.d_h, l)));
+    }
+    assert!(b.has_op(&names.loss(cfg.multilabel)));
+    assert!(b.has_op(&names.row_norms(cfg.d_h)));
+    assert!(b.has_op("adam_16x16"));
+    // saint prefix ops
+    let saint = rsc::model::ops::OpNames::saint();
+    assert!(b.has_op(&saint.sage_fwd(cfg.d_in, cfg.d_h, true)));
+}

@@ -1,0 +1,174 @@
+//! End-to-end training tests on the tiny dataset: every model learns,
+//! RSC (allocation + caching + switching) preserves accuracy, and the
+//! coordinator's bookkeeping matches expectations.
+
+use rsc::coordinator::{AllocKind, RscConfig};
+use rsc::data::load_or_generate;
+use rsc::model::ops::ModelKind;
+use rsc::runtime::{NativeBackend, XlaBackend};
+use rsc::train::{train, TrainConfig};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/tiny/manifest.json").exists()
+}
+
+fn cfg(model: ModelKind, epochs: usize, rsc: RscConfig) -> TrainConfig {
+    TrainConfig {
+        model,
+        epochs,
+        lr: 0.01,
+        seed: 1,
+        rsc,
+        eval_every: 10,
+        verbose: false,
+        saint_subgraphs: 4,
+        saint_batches_per_epoch: 2,
+    }
+}
+
+#[test]
+fn all_models_learn_on_native_backend() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let b = NativeBackend::load("tiny").unwrap();
+    let ds = load_or_generate("tiny", 1).unwrap();
+    for model in [ModelKind::Gcn, ModelKind::Sage, ModelKind::Gcnii, ModelKind::Saint] {
+        let res = train(&b, &ds, &cfg(model, 40, RscConfig::baseline())).unwrap();
+        // tiny has 4 well-separated clusters: anything learning at all
+        // clears 0.6; random is 0.25.
+        assert!(
+            res.test_metric > 0.6,
+            "{:?} failed to learn: {}",
+            model,
+            res.test_metric
+        );
+        // loss decreased
+        let first = res.loss_curve[0];
+        let last = *res.loss_curve.last().unwrap();
+        assert!(last < first * 0.8, "{model:?}: loss {first} -> {last}");
+        // baseline must not touch the RSC machinery
+        assert_eq!(res.cache_misses, 0);
+        assert!(res.alloc_history.is_empty());
+    }
+}
+
+#[test]
+fn rsc_full_mechanism_keeps_accuracy() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let b = NativeBackend::load("tiny").unwrap();
+    let ds = load_or_generate("tiny", 2).unwrap();
+    let baseline = train(&b, &ds, &cfg(ModelKind::Gcn, 60, RscConfig::baseline())).unwrap();
+    let rsc = train(
+        &b,
+        &ds,
+        &cfg(ModelKind::Gcn, 60, RscConfig { budget_c: 0.3, ..Default::default() }),
+    )
+    .unwrap();
+    assert!(
+        rsc.test_metric > baseline.test_metric - 0.08,
+        "rsc {} vs baseline {}",
+        rsc.test_metric,
+        baseline.test_metric
+    );
+    // mechanisms actually engaged
+    assert!(rsc.cache_misses > 0);
+    assert!(rsc.cache_hits > rsc.cache_misses, "caching should dominate");
+    assert!(!rsc.alloc_history.is_empty());
+    assert!(!rsc.picked_degrees.is_empty());
+    // switching: last 20% of steps are exact -> fewer approx steps
+    let (_, ks) = rsc.alloc_history.last().unwrap();
+    assert_eq!(ks.len(), 3); // one k per GCN layer
+}
+
+#[test]
+fn uniform_allocator_and_no_cache_variants_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let b = NativeBackend::load("tiny").unwrap();
+    let ds = load_or_generate("tiny", 3).unwrap();
+    for rsc in [
+        RscConfig {
+            allocator: AllocKind::Uniform,
+            budget_c: 0.5,
+            ..Default::default()
+        },
+        RscConfig { refresh_every: 1, ..Default::default() }, // caching off
+        RscConfig { switch_frac: 1.0, ..Default::default() }, // switching off
+        RscConfig { allocator: AllocKind::Dp, budget_c: 0.5, alpha: 0.25, ..Default::default() },
+    ] {
+        let res = train(&b, &ds, &cfg(ModelKind::Sage, 30, rsc)).unwrap();
+        assert!(res.test_metric > 0.5, "{}", res.test_metric);
+    }
+}
+
+#[test]
+fn xla_backend_trains_gcn_with_rsc() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let b = XlaBackend::load("tiny").unwrap();
+    let ds = load_or_generate("tiny", 4).unwrap();
+    let res = train(
+        &b,
+        &ds,
+        &cfg(ModelKind::Gcn, 30, RscConfig { budget_c: 0.3, ..Default::default() }),
+    )
+    .unwrap();
+    assert!(res.test_metric > 0.6, "{}", res.test_metric);
+    assert!(res.cache_hits > 0);
+}
+
+#[test]
+fn xla_and_native_backends_agree_on_training_trajectory() {
+    // Same seed, same config: the loss curves should track closely for
+    // the first epochs (f32 divergence grows with depth of training).
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let ds = load_or_generate("tiny", 5).unwrap();
+    let xla = XlaBackend::load("tiny").unwrap();
+    let nat = NativeBackend::load("tiny").unwrap();
+    let c = cfg(ModelKind::Gcn, 8, RscConfig::baseline());
+    let a = train(&xla, &ds, &c).unwrap();
+    let b = train(&nat, &ds, &c).unwrap();
+    for (i, (x, y)) in a.loss_curve.iter().zip(&b.loss_curve).enumerate() {
+        assert!(
+            (x - y).abs() / y.abs().max(1.0) < 0.05,
+            "epoch {i}: xla {x} vs native {y}"
+        );
+    }
+}
+
+#[test]
+fn overlap_auc_is_high_on_stable_training() {
+    // Figure 4's claim: top-k selections are stable across 10-step gaps.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let b = NativeBackend::load("tiny").unwrap();
+    let ds = load_or_generate("tiny", 6).unwrap();
+    let res = train(
+        &b,
+        &ds,
+        &cfg(
+            ModelKind::Gcn,
+            80,
+            RscConfig { switch_frac: 1.0, budget_c: 0.3, ..Default::default() },
+        ),
+    )
+    .unwrap();
+    assert!(!res.overlap_samples.is_empty());
+    let mean: f64 = res.overlap_samples.iter().map(|(_, _, a)| a).sum::<f64>()
+        / res.overlap_samples.len() as f64;
+    assert!(mean > 0.75, "selection overlap AUC too low: {mean}");
+}
