@@ -1,0 +1,49 @@
+//! Sequential vs parallel native runtime: per-op wall-clock for the
+//! sparse hot kernels (SpMM, dense matmuls, row norms, CSR transpose,
+//! Figure 5 slicing, top-k argsort) on the paper's synthetic graphs.
+//!
+//! Shape to hold: on the largest graph (products-sim, |V|=20k, |E|=400k)
+//! with >= 4 worker threads the SpMM/MatMul rows should clear 2x.  The
+//! parallel results are byte-identical to the sequential ones (DESIGN.md
+//! §Parallel runtime), so every speedup here is "free" accuracy-wise.
+//!
+//! Thread count: RSC_THREADS env var, else auto-detected.
+
+use rsc::bench::harness::{header, BenchScale};
+use rsc::bench::support::native_seq_vs_par;
+use rsc::util::parallel::Parallelism;
+use rsc::util::stats::Table;
+
+fn main() -> anyhow::Result<()> {
+    let par = Parallelism::auto();
+    header(
+        "par_speedup",
+        &format!(
+            "native kernels, sequential vs {} worker threads",
+            par.threads()
+        ),
+    );
+    if !par.is_parallel() {
+        println!("only one core available: parallel path == sequential path");
+    }
+    let scale = BenchScale::from_env(1, 0);
+    let iters = if scale.full { 30 } else { 10 };
+    let mut t = Table::new(vec!["dataset", "op", "seq ms", "par ms", "speedup"]);
+    for dataset in ["reddit-sim", "products-sim"] {
+        for r in native_seq_vs_par(dataset, iters, par)? {
+            t.row(vec![
+                dataset.to_string(),
+                r.op.clone(),
+                format!("{:.3}", r.seq_ms),
+                format!("{:.3}", r.par_ms),
+                format!("{:.2}x", r.speedup()),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "target: >=2x on products-sim SpMM/MatMul with >=4 threads \
+         (identical outputs; RSC's sampling speedups in table2 stack on top)"
+    );
+    Ok(())
+}

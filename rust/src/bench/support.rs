@@ -1,10 +1,17 @@
-//! Shared plumbing for the per-table/figure bench targets.
+//! Shared plumbing for the per-table/figure bench targets, including the
+//! sequential-vs-parallel native-kernel comparison behind
+//! `benches/par_speedup.rs` and the native section of
+//! `benches/table2_op_speedup.rs`.
 
+use crate::bench::harness::bench_fn;
 use crate::coordinator::RscConfig;
 use crate::data::{load_or_generate, Dataset};
 use crate::model::ops::ModelKind;
-use crate::runtime::Backend;
+use crate::runtime::{native, Backend};
+use crate::sampling::topk::argsort_desc_with;
 use crate::train::{train, TrainConfig, TrainResult};
+use crate::util::parallel::Parallelism;
+use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::Result;
 
@@ -113,4 +120,167 @@ pub fn dataset_and_backend(
     let b = crate::runtime::XlaBackend::load(name)?;
     let ds = load_or_generate(name, 0)?;
     Ok((ds, b))
+}
+
+// ---------------------------------------------------------------------
+// sequential vs parallel native kernels
+// ---------------------------------------------------------------------
+
+/// One op of the sequential-vs-parallel native-runtime comparison.
+pub struct SeqParRow {
+    pub op: String,
+    pub seq_ms: f64,
+    pub par_ms: f64,
+}
+
+impl SeqParRow {
+    pub fn speedup(&self) -> f64 {
+        self.seq_ms / self.par_ms.max(1e-9)
+    }
+}
+
+/// Time the native hot-path kernels on `dataset`'s GCN-normalized graph,
+/// sequentially and with `par` workers (median of `iters` runs each).
+/// Covers the per-op families Table 2 reports: the forward/backward SpMM,
+/// the dense matmuls of a layer, gradient row-norms, CSR transpose, the
+/// Figure 5 row slicing, and the top-k argsort.
+pub fn native_seq_vs_par(
+    dataset: &str,
+    iters: usize,
+    par: Parallelism,
+) -> Result<Vec<SeqParRow>> {
+    let seq = Parallelism::sequential();
+    let ds = load_or_generate(dataset, 0)?;
+    let matrix = ds.adj.gcn_normalize();
+    let (v, d) = (matrix.n, ds.cfg.d_h);
+    let edges = matrix.to_edge_list();
+    let mut rng = Rng::new(0xA11);
+    let x: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+    let wmat: Vec<f32> = (0..d * d).map(|_| rng.normal_f32() * 0.1).collect();
+
+    let mut rows = Vec::new();
+    let mut pair = |op: &str, mut seq_run: Box<dyn FnMut()>, mut par_run: Box<dyn FnMut()>| {
+        let s = bench_fn(&format!("{op} seq"), 1, iters, &mut seq_run);
+        let p = bench_fn(&format!("{op} par"), 1, iters, &mut par_run);
+        rows.push(SeqParRow {
+            op: op.to_string(),
+            seq_ms: s.median_ms,
+            par_ms: p.median_ms,
+        });
+    };
+
+    pair(
+        &format!("SpMM fwd (m={}, d={d})", edges.len()),
+        Box::new({
+            let (e, x) = (edges.clone(), x.clone());
+            move || {
+                std::hint::black_box(native::spmm(&e.src, &e.dst, &e.w, &x, d, v));
+            }
+        }),
+        Box::new({
+            let (e, x) = (edges.clone(), x.clone());
+            move || {
+                std::hint::black_box(native::spmm_par(&e.src, &e.dst, &e.w, &x, d, v, par));
+            }
+        }),
+    );
+    pair(
+        &format!("MatMul ({v}x{d} @ {d}x{d})"),
+        Box::new({
+            let (x, wm) = (x.clone(), wmat.clone());
+            move || {
+                std::hint::black_box(native::matmul(&x, &wm, v, d, d));
+            }
+        }),
+        Box::new({
+            let (x, wm) = (x.clone(), wmat.clone());
+            move || {
+                std::hint::black_box(native::matmul_par(&x, &wm, v, d, d, par));
+            }
+        }),
+    );
+    pair(
+        &format!("MatMul^T (grad, {d}x{v} @ {v}x{d})"),
+        Box::new({
+            let x = x.clone();
+            move || {
+                std::hint::black_box(native::matmul_tn(&x, &x, v, d, d));
+            }
+        }),
+        Box::new({
+            let x = x.clone();
+            move || {
+                std::hint::black_box(native::matmul_tn_par(&x, &x, v, d, d, par));
+            }
+        }),
+    );
+    pair(
+        &format!("row_norms ({v}x{d})"),
+        Box::new({
+            let x = x.clone();
+            move || {
+                std::hint::black_box(native::row_norms(&x, v, d));
+            }
+        }),
+        Box::new({
+            let x = x.clone();
+            move || {
+                std::hint::black_box(native::row_norms_par(&x, v, d, par));
+            }
+        }),
+    );
+    pair(
+        &format!("CSR transpose (nnz={})", matrix.nnz()),
+        Box::new({
+            let m = matrix.clone();
+            move || {
+                std::hint::black_box(m.transpose_with(seq));
+            }
+        }),
+        Box::new({
+            let m = matrix.clone();
+            move || {
+                std::hint::black_box(m.transpose_with(par));
+            }
+        }),
+    );
+    // Figure 5 slicing: gather the top-half rows by score (the RSC
+    // backward operand rebuild the sample cache pays on refresh)
+    let scores = matrix.row_norms_with(seq);
+    let sel_rows: Vec<u32> = {
+        let mut idx = argsort_desc_with(&scores, seq);
+        idx.truncate(v / 2);
+        idx
+    };
+    pair(
+        &format!("slice rows (k={})", sel_rows.len()),
+        Box::new({
+            let (m, r) = (matrix.clone(), sel_rows.clone());
+            move || {
+                std::hint::black_box(m.transposed_edges_for_rows_with(&r, seq));
+            }
+        }),
+        Box::new({
+            let (m, r) = (matrix.clone(), sel_rows.clone());
+            move || {
+                std::hint::black_box(m.transposed_edges_for_rows_with(&r, par));
+            }
+        }),
+    );
+    pair(
+        &format!("top-k argsort (n={v})"),
+        Box::new({
+            let s = scores.clone();
+            move || {
+                std::hint::black_box(argsort_desc_with(&s, seq));
+            }
+        }),
+        Box::new({
+            let s = scores.clone();
+            move || {
+                std::hint::black_box(argsort_desc_with(&s, par));
+            }
+        }),
+    );
+    Ok(rows)
 }

@@ -5,9 +5,16 @@
 //! re-samples only every `refresh_every` steps and reuses the cached
 //! Selection in between.  A refresh is also forced whenever the allocator
 //! hands the layer a different k.
+//!
+//! A rebuild is the one place sampling touches the graph at scale, so
+//! [`SampleCache::get_or_build`] takes the caller's
+//! [`Parallelism`](crate::util::parallel::Parallelism) and forwards it to
+//! [`Selection::build_with`] — the cache hit path stays allocation- and
+//! thread-free.
 
 use crate::graph::Csr;
 use crate::sampling::Selection;
+use crate::util::parallel::Parallelism;
 
 #[derive(Debug)]
 struct Entry {
@@ -46,7 +53,8 @@ impl SampleCache {
 
     /// Get the cached selection, or rebuild via `rows_fn` (which returns
     /// the freshly selected pair rows).  `adj` is the matrix being sampled
-    /// (A_hat in row-major; edges are emitted in transposed orientation).
+    /// (A_hat in row-major; edges are emitted in transposed orientation);
+    /// `par` drives the rebuild's parallel edge gather.
     pub fn get_or_build(
         &mut self,
         layer: usize,
@@ -54,11 +62,12 @@ impl SampleCache {
         k: usize,
         adj: &Csr,
         caps: &[usize],
+        par: Parallelism,
         rows_fn: impl FnOnce() -> Vec<u32>,
     ) -> &Selection {
         if self.stale(layer, step, k) {
             self.misses += 1;
-            let sel = Selection::build(adj, rows_fn(), caps);
+            let sel = Selection::build_with(adj, rows_fn(), caps, par);
             self.entries[layer] = Some(Entry { selection: sel, built_at_step: step, k });
         } else {
             self.hits += 1;
@@ -93,6 +102,7 @@ impl SampleCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::parallel;
     use crate::util::rng::Rng;
 
     fn adj() -> Csr {
@@ -107,7 +117,7 @@ mod tests {
         let mut cache = SampleCache::new(2, 10);
         let mut builds = 0;
         for step in 0..25 {
-            cache.get_or_build(0, step, 5, &a, &caps, || {
+            cache.get_or_build(0, step, 5, &a, &caps, parallel::global(), || {
                 builds += 1;
                 vec![0, 1, 2, 3, 4]
             });
@@ -125,15 +135,15 @@ mod tests {
         let caps = vec![a.nnz()];
         let mut cache = SampleCache::new(1, 100);
         let mut builds = 0;
-        cache.get_or_build(0, 0, 5, &a, &caps, || {
+        cache.get_or_build(0, 0, 5, &a, &caps, parallel::global(), || {
             builds += 1;
             (0..5).collect()
         });
-        cache.get_or_build(0, 1, 6, &a, &caps, || {
+        cache.get_or_build(0, 1, 6, &a, &caps, parallel::global(), || {
             builds += 1;
             (0..6).collect()
         });
-        cache.get_or_build(0, 2, 6, &a, &caps, || {
+        cache.get_or_build(0, 2, 6, &a, &caps, parallel::global(), || {
             builds += 1;
             (0..6).collect()
         });
@@ -147,7 +157,7 @@ mod tests {
         let mut cache = SampleCache::new(1, 1);
         let mut builds = 0;
         for step in 0..5 {
-            cache.get_or_build(0, step, 3, &a, &caps, || {
+            cache.get_or_build(0, step, 3, &a, &caps, parallel::global(), || {
                 builds += 1;
                 (0..3).collect()
             });
@@ -161,7 +171,7 @@ mod tests {
         let a = adj();
         let caps = vec![a.nnz()];
         let mut cache = SampleCache::new(3, 10);
-        cache.get_or_build(0, 0, 2, &a, &caps, || vec![0, 1]);
+        cache.get_or_build(0, 0, 2, &a, &caps, parallel::global(), || vec![0, 1]);
         assert!(cache.peek(0).is_some());
         assert!(cache.peek(1).is_none());
         cache.invalidate_all();

@@ -18,7 +18,9 @@
 use crate::allocator::{Allocator, DpExact, GreedyAllocator, LayerScores, UniformAllocator};
 use crate::cache::{OverlapTracker, SampleCache};
 use crate::graph::Csr;
-use crate::sampling::{pair_scores, top_k_indices, Selection};
+use crate::sampling::topk::{pair_scores_with, top_k_indices_with};
+use crate::sampling::Selection;
+use crate::util::parallel::{self, Parallelism};
 use crate::util::timer::Stopwatch;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,6 +117,10 @@ pub struct RscEngine {
     grad_norms: Vec<Option<Vec<f32>>>,
     cache: SampleCache,
     last_alloc: Option<u64>,
+    /// Thread-parallelism used for score computation, top-k sorts and
+    /// cache rebuilds (captured from the process default at construction;
+    /// see [`RscEngine::with_parallelism`]).
+    parallelism: Parallelism,
     // ---- diagnostics ----
     pub overlap: OverlapTracker,
     /// (step, k per site) after every allocator run (Figure 7).
@@ -153,6 +159,7 @@ impl RscEngine {
             grad_norms: (0..sites).map(|_| None).collect(),
             cache: SampleCache::new(sites, refresh),
             last_alloc: None,
+            parallelism: parallel::global(),
             overlap: OverlapTracker::new(sites, 10),
             alloc_history: Vec::new(),
             picked_degrees: Vec::new(),
@@ -162,6 +169,17 @@ impl RscEngine {
             exact_steps: 0,
             cfg,
         }
+    }
+
+    /// Override the engine's [`Parallelism`] (defaults to the process
+    /// global at construction time).
+    pub fn with_parallelism(mut self, par: Parallelism) -> RscEngine {
+        self.parallelism = par;
+        self
+    }
+
+    pub fn parallelism(&self) -> Parallelism {
+        self.parallelism
     }
 
     /// Is `step` in the final exact phase (switching mechanism)?
@@ -194,11 +212,13 @@ impl RscEngine {
     }
 
     fn reallocate(&mut self, step: u64) {
+        let par = self.parallelism;
         let layers: Vec<LayerScores> = (0..self.widths.len())
             .map(|s| LayerScores {
-                scores: pair_scores(
+                scores: pair_scores_with(
                     &self.col_norms,
                     self.grad_norms[s].as_ref().unwrap(),
+                    par,
                 ),
                 nnz: self.nnz.clone(),
                 d: self.widths[s],
@@ -249,13 +269,15 @@ impl RscEngine {
             }
         }
         let k = self.ks[site];
+        let par = self.parallelism;
         if self.cache.stale(site, step, k) {
             let sw = Stopwatch::start();
-            let scores = pair_scores(
+            let scores = pair_scores_with(
                 &self.col_norms,
                 self.grad_norms[site].as_ref().unwrap(),
+                par,
             );
-            let rows = top_k_indices(&scores, k);
+            let rows = top_k_indices_with(&scores, k, par);
             // diagnostics
             self.overlap.observe(site, step, &scores, &rows);
             let mean_deg = rows
@@ -266,13 +288,13 @@ impl RscEngine {
             self.picked_degrees.push((site, step, mean_deg));
             let sel = self
                 .cache
-                .get_or_build(site, step, k, matrix, caps, move || rows);
+                .get_or_build(site, step, k, matrix, caps, par, move || rows);
             self.sample_ms += sw.ms();
             Plan::Approx(sel)
         } else {
             let sel = self
                 .cache
-                .get_or_build(site, step, k, matrix, caps, || unreachable!());
+                .get_or_build(site, step, k, matrix, caps, par, || unreachable!());
             Plan::Approx(sel)
         }
     }

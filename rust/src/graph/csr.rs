@@ -6,11 +6,27 @@
 //! executables stores that entry as `src = c, dst = r`.
 //!
 //! The paper's Figure 5 "slicing" operation — rebuilding Rowptr/Col when
-//! only a subset of *columns* is kept — is [`Csr::slice_rows_of`] on the
-//! transposed matrix: RSC selects column-row pairs of Â^T, i.e. rows of Â,
-//! and the retained FLOPs are exactly the nnz of the selected rows.
+//! only a subset of *columns* is kept — is realized here two ways:
+//! [`Csr::slice_columns`] (the literal re-processing, kept for the
+//! slicing-cost benchmark) and [`Csr::transposed_edges_for_rows`] (the
+//! cheap row-gather on the transposed matrix the hot path uses): RSC
+//! selects column-row pairs of Â^T, i.e. rows of Â, and the retained
+//! FLOPs are exactly the nnz of the selected rows.
+//!
+//! # Parallelism
+//!
+//! The heavy builders (`from_triples` sort, `transpose`, the two slicing
+//! operations, `row_norms`) consult the process-wide
+//! [`Parallelism`](crate::util::parallel::Parallelism) default and fan out
+//! over rayon when the matrix is large enough; each also has an explicit
+//! `*_with` variant taking the config.  All parallel paths produce output
+//! byte-identical to the sequential one for any thread count: work is
+//! partitioned by disjoint output ranges and the triple sort is stable
+//! (see DESIGN.md §Parallel runtime).
 
+use crate::util::parallel::{self, Parallelism};
 use crate::util::rng::Rng;
+use rayon::prelude::*;
 
 /// COO edge list, ready to feed an XLA spmm executable (after padding to a
 /// bucket capacity).
@@ -64,8 +80,24 @@ pub struct Csr {
 
 impl Csr {
     /// Build from (row, col, val) triples; duplicates are summed.
-    pub fn from_triples(n: usize, mut triples: Vec<(u32, u32, f32)>) -> Csr {
-        triples.sort_unstable_by_key(|&(r, c, _)| (r, c));
+    /// Uses the process-wide [`Parallelism`] default for the sort.
+    pub fn from_triples(n: usize, triples: Vec<(u32, u32, f32)>) -> Csr {
+        Csr::from_triples_with(n, triples, parallel::global())
+    }
+
+    /// [`Csr::from_triples`] with an explicit parallelism config.  The
+    /// sort is *stable* on both paths, so duplicate (r, c) entries merge
+    /// in input order and results are identical sequential vs parallel.
+    pub fn from_triples_with(
+        n: usize,
+        mut triples: Vec<(u32, u32, f32)>,
+        par: Parallelism,
+    ) -> Csr {
+        if par.should_parallelize(triples.len()) {
+            triples.par_sort_by_key(|&(r, c, _)| (r, c));
+        } else {
+            triples.sort_by_key(|&(r, c, _)| (r, c));
+        }
         let mut rowptr = vec![0usize; n + 1];
         let mut col = Vec::with_capacity(triples.len());
         let mut val: Vec<f32> = Vec::with_capacity(triples.len());
@@ -148,7 +180,22 @@ impl Csr {
         true
     }
 
+    /// Transpose, using the process-wide [`Parallelism`] default.
     pub fn transpose(&self) -> Csr {
+        self.transpose_with(parallel::global())
+    }
+
+    /// [`Csr::transpose`] with an explicit parallelism config.
+    ///
+    /// The parallel path runs the same stable counting sort the
+    /// sequential cursor walk performs, but materializes only the slot
+    /// *permutation* sequentially (one u32 per entry, scratch-arena
+    /// backed); the heavy (col, val) scatter then becomes a parallel
+    /// ordered gather over disjoint slot ranges.  Slot assignment math
+    /// is unchanged, so the output is byte-identical for any worker
+    /// count.
+    pub fn transpose_with(&self, par: Parallelism) -> Csr {
+        let nnz = self.nnz();
         let mut counts = vec![0usize; self.n + 1];
         for &c in &self.col {
             counts[c as usize + 1] += 1;
@@ -156,19 +203,52 @@ impl Csr {
         for i in 0..self.n {
             counts[i + 1] += counts[i];
         }
-        let rowptr = counts.clone();
-        let mut cursor = counts;
-        let mut col = vec![0u32; self.nnz()];
-        let mut val = vec![0f32; self.nnz()];
-        for r in 0..self.n {
-            let (cs, ws) = self.row(r);
-            for (&c, &w) in cs.iter().zip(ws) {
-                let slot = cursor[c as usize];
-                col[slot] = r as u32;
-                val[slot] = w;
-                cursor[c as usize] += 1;
+        let rowptr = counts;
+        let mut col = vec![0u32; nnz];
+        let mut val = vec![0f32; nnz];
+        if !par.should_parallelize(nnz) || self.n == 0 {
+            let mut cursor = rowptr[..self.n].to_vec();
+            for r in 0..self.n {
+                let (cs, ws) = self.row(r);
+                for (&c, &w) in cs.iter().zip(ws) {
+                    let slot = cursor[c as usize];
+                    col[slot] = r as u32;
+                    val[slot] = w;
+                    cursor[c as usize] += 1;
+                }
             }
+            return Csr { n: self.n, rowptr, col, val };
         }
+        parallel::with_u32(nnz, |erow| {
+            // entry id -> source row (expansion of the source rowptr)
+            for r in 0..self.n {
+                for e in self.rowptr[r]..self.rowptr[r + 1] {
+                    erow[e] = r as u32;
+                }
+            }
+            parallel::with_u32(nnz, |order| {
+                // stable counting sort of entry ids by column
+                parallel::with_usize(self.n, |cursor| {
+                    cursor.copy_from_slice(&rowptr[..self.n]);
+                    for (e, &c) in self.col.iter().enumerate() {
+                        order[cursor[c as usize]] = e as u32;
+                        cursor[c as usize] += 1;
+                    }
+                });
+                let ch = par.chunk_rows(nnz);
+                col.par_chunks_mut(ch)
+                    .zip(val.par_chunks_mut(ch))
+                    .enumerate()
+                    .for_each(|(ci, (cc, vc))| {
+                        let base = ci * ch;
+                        for o in 0..cc.len() {
+                            let e = order[base + o] as usize;
+                            cc[o] = erow[e];
+                            vc[o] = self.val[e];
+                        }
+                    });
+            });
+        });
         Csr { n: self.n, rowptr, col, val }
     }
 
@@ -222,14 +302,22 @@ impl Csr {
         out
     }
 
-    /// L2 norm of each row's values.
+    /// L2 norm of each row's values (process-wide parallelism default).
     pub fn row_norms(&self) -> Vec<f32> {
-        (0..self.n)
-            .map(|r| {
-                let (_, ws) = self.row(r);
-                ws.iter().map(|w| w * w).sum::<f32>().sqrt()
-            })
-            .collect()
+        self.row_norms_with(parallel::global())
+    }
+
+    /// [`Csr::row_norms`] with an explicit parallelism config.
+    pub fn row_norms_with(&self, par: Parallelism) -> Vec<f32> {
+        let one = |r: usize| -> f32 {
+            let (_, ws) = self.row(r);
+            ws.iter().map(|w| w * w).sum::<f32>().sqrt()
+        };
+        if par.should_parallelize(self.nnz()) {
+            (0..self.n).into_par_iter().map(one).collect()
+        } else {
+            (0..self.n).map(one).collect()
+        }
     }
 
     /// Frobenius norm.
@@ -256,36 +344,132 @@ impl Csr {
     ///
     /// Cost is O(sum of selected rows' nnz): this is the cheap,
     /// cache-amortized realization of the paper's Figure 5 slicing.
+    /// Uses the process-wide [`Parallelism`] default; this is the sample
+    /// cache's refresh hot path.
     pub fn transposed_edges_for_rows(&self, rows: &[u32]) -> EdgeList {
+        self.transposed_edges_for_rows_with(rows, parallel::global())
+    }
+
+    /// [`Csr::transposed_edges_for_rows`] with an explicit parallelism
+    /// config: selected rows are split into ranges, each worker gathers
+    /// into its precomputed disjoint output slice (identical layout to
+    /// the sequential append order).
+    pub fn transposed_edges_for_rows_with(&self, rows: &[u32], par: Parallelism) -> EdgeList {
         let nnz: usize = rows.iter().map(|&r| self.row_nnz(r as usize)).sum();
-        let mut e = EdgeList::with_capacity(nnz);
-        for &r in rows {
-            let (cs, ws) = self.row(r as usize);
-            for (&c, &w) in cs.iter().zip(ws) {
-                e.push(r as i32, c as i32, w);
+        if !par.should_parallelize(nnz) || rows.is_empty() {
+            let mut e = EdgeList::with_capacity(nnz);
+            for &r in rows {
+                let (cs, ws) = self.row(r as usize);
+                for (&c, &w) in cs.iter().zip(ws) {
+                    e.push(r as i32, c as i32, w);
+                }
             }
+            return e;
         }
+        let mut e = EdgeList {
+            src: vec![0; nnz],
+            dst: vec![0; nnz],
+            w: vec![0.0; nnz],
+        };
+        let rchunk = par.chunk_rows(rows.len());
+        let row_chunks: Vec<&[u32]> = rows.chunks(rchunk).collect();
+        let sizes: Vec<usize> = row_chunks
+            .iter()
+            .map(|ch| ch.iter().map(|&r| self.row_nnz(r as usize)).sum())
+            .collect();
+        let src_chunks = parallel::split_varsize(&mut e.src, &sizes);
+        let dst_chunks = parallel::split_varsize(&mut e.dst, &sizes);
+        let w_chunks = parallel::split_varsize(&mut e.w, &sizes);
+        src_chunks
+            .into_par_iter()
+            .zip(dst_chunks)
+            .zip(w_chunks)
+            .zip(row_chunks)
+            .for_each(|(((sc, dc), wc), ch)| {
+                let mut k = 0;
+                for &r in ch {
+                    let (cs, ws) = self.row(r as usize);
+                    for (&c, &w) in cs.iter().zip(ws) {
+                        sc[k] = r as i32;
+                        dc[k] = c as i32;
+                        wc[k] = w;
+                        k += 1;
+                    }
+                }
+            });
         e
     }
 
     /// Paper Figure 5: rebuild a CSR keeping only the given columns
     /// (re-processing Rowptr/Col/Val).  Provided for the slicing-cost
-    /// benchmark; the hot path uses `transposed_edges_for_rows`.
+    /// benchmark; the hot path uses [`Csr::transposed_edges_for_rows`].
+    /// Uses the process-wide [`Parallelism`] default.
     pub fn slice_columns(&self, keep: &[bool]) -> Csr {
+        self.slice_columns_with(keep, parallel::global())
+    }
+
+    /// [`Csr::slice_columns`] with an explicit parallelism config
+    /// (two-pass: parallel per-row counts, prefix sum, parallel fill into
+    /// disjoint row ranges — same output as the sequential single pass).
+    pub fn slice_columns_with(&self, keep: &[bool], par: Parallelism) -> Csr {
         assert_eq!(keep.len(), self.n);
-        let mut rowptr = vec![0usize; self.n + 1];
-        let mut col = Vec::new();
-        let mut val = Vec::new();
-        for r in 0..self.n {
-            let (cs, ws) = self.row(r);
-            for (&c, &w) in cs.iter().zip(ws) {
-                if keep[c as usize] {
-                    col.push(c);
-                    val.push(w);
+        if !par.should_parallelize(self.nnz()) {
+            let mut rowptr = vec![0usize; self.n + 1];
+            let mut col = Vec::new();
+            let mut val = Vec::new();
+            for r in 0..self.n {
+                let (cs, ws) = self.row(r);
+                for (&c, &w) in cs.iter().zip(ws) {
+                    if keep[c as usize] {
+                        col.push(c);
+                        val.push(w);
+                    }
                 }
+                rowptr[r + 1] = col.len();
             }
-            rowptr[r + 1] = col.len();
+            return Csr { n: self.n, rowptr, col, val };
         }
+        // pass 1: kept-entry count per row
+        let counts: Vec<usize> = (0..self.n)
+            .into_par_iter()
+            .map(|r| {
+                let (cs, _) = self.row(r);
+                cs.iter().filter(|&&c| keep[c as usize]).count()
+            })
+            .collect();
+        let mut rowptr = vec![0usize; self.n + 1];
+        for r in 0..self.n {
+            rowptr[r + 1] = rowptr[r] + counts[r];
+        }
+        let kept_nnz = rowptr[self.n];
+        let mut col = vec![0u32; kept_nnz];
+        let mut val = vec![0f32; kept_nnz];
+        // pass 2: fill disjoint per-chunk output ranges
+        let rchunk = par.chunk_rows(self.n);
+        let starts: Vec<usize> = (0..self.n).step_by(rchunk).collect();
+        let sizes: Vec<usize> = starts
+            .iter()
+            .map(|&r0| rowptr[(r0 + rchunk).min(self.n)] - rowptr[r0])
+            .collect();
+        let col_chunks = parallel::split_varsize(&mut col, &sizes);
+        let val_chunks = parallel::split_varsize(&mut val, &sizes);
+        col_chunks
+            .into_par_iter()
+            .zip(val_chunks)
+            .zip(starts)
+            .for_each(|((cc, vc), r0)| {
+                let mut k = 0;
+                for r in r0..(r0 + rchunk).min(self.n) {
+                    let (cs, ws) = self.row(r);
+                    for (&c, &w) in cs.iter().zip(ws) {
+                        if keep[c as usize] {
+                            cc[k] = c;
+                            vc[k] = w;
+                            k += 1;
+                        }
+                    }
+                }
+            });
         Csr { n: self.n, rowptr, col, val }
     }
 
@@ -361,6 +545,35 @@ mod tests {
             assert!(m.transpose().validate());
             assert_eq!(m.transpose().transpose(), m);
         }
+    }
+
+    #[test]
+    fn parallel_builders_match_sequential() {
+        let seq = Parallelism::sequential();
+        let par = Parallelism::with_threads(4).with_grain(1);
+        let mut rng = Rng::new(31);
+        for trial in 0..10 {
+            let n = 5 + trial * 7;
+            let m = Csr::random(n, 4 * n, &mut rng);
+            assert_eq!(m.transpose_with(seq), m.transpose_with(par), "transpose n={n}");
+            assert_eq!(m.row_norms_with(seq), m.row_norms_with(par));
+            let keep: Vec<bool> = (0..n).map(|i| i % 3 != 0).collect();
+            assert_eq!(
+                m.slice_columns_with(&keep, seq),
+                m.slice_columns_with(&keep, par)
+            );
+            let rows: Vec<u32> = (0..n as u32).filter(|r| r % 2 == 0).collect();
+            assert_eq!(
+                m.transposed_edges_for_rows_with(&rows, seq),
+                m.transposed_edges_for_rows_with(&rows, par)
+            );
+        }
+        // degenerate shapes
+        let empty = Csr::from_triples_with(3, vec![], par);
+        assert!(empty.validate());
+        assert_eq!(empty.transpose_with(par), empty);
+        let single = Csr::from_triples_with(1, vec![(0, 0, 2.5)], par);
+        assert_eq!(single.transpose_with(seq), single.transpose_with(par));
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //!
 //! Python never runs at training time: `make artifacts` once, then the
 //! `rsc` binary is self-contained.
+//!
+//! The native backend's sparse hot paths (SpMM, dense matmuls, CSR
+//! slicing/transpose, top-k selection) execute on a rayon worker pool
+//! configured by [`util::parallel::Parallelism`]; parallel results are
+//! byte-identical to the single-threaded oracles for any thread count
+//! (DESIGN.md §Parallel runtime).
 
 pub mod util;
 pub mod graph;

@@ -6,9 +6,13 @@
 //!   inspect   list a dataset's artifact catalog
 //!   datagen   generate + describe a synthetic dataset
 //!
+//! Shared flags: `--threads N` caps the native runtime's worker pool
+//! (0 = auto-detect, honouring cgroup CPU quotas; results are identical
+//! for any value — see DESIGN.md §Parallel runtime).
+//!
 //! Examples:
 //!   rsc train --dataset reddit-sim --model gcn --epochs 200 --rsc --budget 0.1
-//!   rsc train --dataset tiny --model sage --backend native
+//!   rsc train --dataset tiny --model sage --backend native --threads 8
 //!   rsc profile --dataset reddit-sim
 //!   rsc inspect --dataset tiny
 
@@ -19,6 +23,7 @@ use rsc::model::ops::ModelKind;
 use rsc::runtime::{Backend, NativeBackend, XlaBackend};
 use rsc::train::{train, TrainConfig};
 use rsc::util::cli::Args;
+use rsc::util::parallel::{self, Parallelism};
 
 fn main() {
     // silence TFRT client chatter on the default path
@@ -54,6 +59,18 @@ fn run(r: Result<()>) -> i32 {
     }
 }
 
+/// `--threads N` (0 or absent = auto-detect); must run before any
+/// backend or engine is constructed so they capture the right default.
+fn apply_threads(args: &Args) -> Result<()> {
+    let n = args.usize_or("threads", 0)?;
+    parallel::set_global(if n == 0 {
+        Parallelism::auto()
+    } else {
+        Parallelism::with_threads(n)
+    });
+    Ok(())
+}
+
 fn load_backend(kind: &str, dataset: &str) -> Result<Box<dyn Backend>> {
     Ok(match kind {
         "xla" => Box::new(XlaBackend::load(dataset)?),
@@ -85,6 +102,7 @@ fn rsc_config(args: &Args) -> Result<RscConfig> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    apply_threads(args)?;
     let dataset = args.str_or("dataset", "tiny");
     let backend = load_backend(&args.str_or("backend", "xla"), &dataset)?;
     let model = ModelKind::parse(&args.str_or("model", "gcn"))
@@ -105,11 +123,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.finish()?;
 
     println!(
-        "training {} on {} ({} backend, rsc={})",
+        "training {} on {} ({} backend, rsc={}, threads={})",
         model.name(),
         dataset,
         backend.backend_name(),
-        cfg.rsc.enabled
+        cfg.rsc.enabled,
+        parallel::global().threads()
     );
     let res = train(backend.as_ref(), &ds, &cfg)?;
     println!("\n== result ==");
@@ -136,6 +155,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
+    apply_threads(args)?;
     let dataset = args.str_or("dataset", "tiny");
     let backend = load_backend(&args.str_or("backend", "xla"), &dataset)?;
     let iters = args.usize_or("iters", 20)?;
@@ -152,6 +172,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
+    apply_threads(args)?;
     let dataset = args.str_or("dataset", "tiny");
     let backend = load_backend(&args.str_or("backend", "xla"), &dataset)?;
     args.finish()?;
@@ -184,6 +205,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_datagen(args: &Args) -> Result<()> {
+    apply_threads(args)?;
     let dataset = args.str_or("dataset", "tiny");
     let seed = args.u64_or("seed", 0)?;
     args.finish()?;

@@ -1,14 +1,26 @@
 //! Runtime: loads the AOT op catalog (HLO text + manifest.json produced by
 //! `python/compile/aot.py`) onto the PJRT CPU client, and provides a pure
-//! Rust *native* backend implementing identical op semantics.
+//! Rust *native* backend implementing identical op semantics — including a
+//! rayon-parallel execution path for the sparse hot kernels (see
+//! DESIGN.md §Parallel runtime).
 //!
 //! Everything above this module talks to the [`Backend`] trait, so models,
 //! the coordinator and the trainer run unchanged on either backend; the
 //! integration tests cross-check XLA against native outputs.
+//!
+//! The PJRT backend binds the external `xla` crate, which the offline
+//! build image does not carry; it is therefore gated behind the `xla`
+//! cargo feature.  Default builds get an API-compatible stub whose
+//! constructors return a descriptive error, so every caller (CLI, benches,
+//! examples) compiles unchanged and degrades gracefully at runtime.
 
 pub mod manifest;
 pub mod native;
 pub mod value;
+#[cfg(feature = "xla")]
+pub mod xla;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
 pub mod xla;
 
 pub use manifest::{Manifest, OpDef};

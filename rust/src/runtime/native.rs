@@ -6,16 +6,37 @@
 //! the whole coordinator stack runs even with no artifacts built.
 //! Dispatch is driven by the op's `meta.kind`, so native and XLA agree by
 //! construction on names, arities and shapes.
+//!
+//! # Sequential oracles and the parallel path
+//!
+//! Every kernel exists twice: the original single-threaded function
+//! (`matmul`, `spmm`, ...) is the **oracle** — the reference semantics the
+//! property tests and the XLA cross-checks are written against — and a
+//! `*_par` variant that fans the same computation out over a rayon pool
+//! when the [`Parallelism`] gate says the work is large enough.
+//!
+//! The parallel variants are *byte-for-byte identical* to their oracles
+//! for any thread count: work is partitioned by **output rows** (each
+//! element's accumulation order is unchanged) and `spmm_par` groups edges
+//! with a stable counting sort so each output row sees its edges in the
+//! original order.  See DESIGN.md §Parallel runtime for the contract.
+//!
+//! Hot-loop temporaries (edge grouping tables, per-row loss partials) come
+//! from the per-thread scratch arena in [`crate::util::parallel`], so
+//! steady-state dispatch does not allocate beyond its output buffers.
 
 use crate::runtime::manifest::{Manifest, OpDef};
 use crate::runtime::value::Value;
 use crate::runtime::Backend;
+use crate::util::parallel::{self, Parallelism};
 use crate::Result;
 use anyhow::{anyhow, bail, ensure};
+use rayon::prelude::*;
 use std::path::Path;
 
 pub struct NativeBackend {
     manifest: Manifest,
+    par: Parallelism,
 }
 
 impl NativeBackend {
@@ -24,11 +45,25 @@ impl NativeBackend {
     }
 
     pub fn load_dir(dir: &Path) -> Result<NativeBackend> {
-        Ok(NativeBackend { manifest: Manifest::load(dir)? })
+        Ok(NativeBackend {
+            manifest: Manifest::load(dir)?,
+            par: parallel::global(),
+        })
     }
 
     pub fn from_manifest(manifest: Manifest) -> NativeBackend {
-        NativeBackend { manifest }
+        NativeBackend { manifest, par: parallel::global() }
+    }
+
+    /// Override the execution [`Parallelism`] (defaults to the process
+    /// global at construction time).
+    pub fn with_parallelism(mut self, par: Parallelism) -> NativeBackend {
+        self.par = par;
+        self
+    }
+
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -37,26 +72,32 @@ impl NativeBackend {
 }
 
 // ---------------------------------------------------------------------
-// dense / sparse primitives (f32 host math)
+// dense / sparse primitives (f32 host math) — sequential oracles
 // ---------------------------------------------------------------------
 
 /// C[m,n] = A[m,k] @ B[k,n]  (ikj loop order for cache-friendliness)
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0f32; m * n];
     for i in 0..m {
-        for l in 0..k {
-            let av = a[i * k + l];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[l * n..(l + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
+        matmul_row(a, b, k, n, i, &mut c[i * n..(i + 1) * n]);
     }
     c
+}
+
+/// One output row of [`matmul`]; shared verbatim by the parallel path so
+/// both orders of execution are identical per row.
+#[inline]
+fn matmul_row(a: &[f32], b: &[f32], k: usize, n: usize, i: usize, crow: &mut [f32]) {
+    for l in 0..k {
+        let av = a[i * k + l];
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &b[l * n..(l + 1) * n];
+        for j in 0..n {
+            crow[j] += av * brow[j];
+        }
+    }
 }
 
 /// C[k,n] = A[m,k]^T @ B[m,n]
@@ -78,21 +119,42 @@ pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     c
 }
 
+/// One output row (`l`) of [`matmul_tn`]: accumulates over `i` ascending,
+/// the same per-element order the sequential loop produces.
+#[inline]
+fn matmul_tn_row(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, l: usize, crow: &mut [f32]) {
+    for i in 0..m {
+        let av = a[i * k + l];
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &b[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] += av * brow[j];
+        }
+    }
+}
+
 /// C[m,k] = A[m,n] @ B[k,n]^T
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     let mut c = vec![0f32; m * k];
     for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for l in 0..k {
-            let brow = &b[l * n..(l + 1) * n];
-            let mut acc = 0f32;
-            for j in 0..n {
-                acc += arow[j] * brow[j];
-            }
-            c[i * k + l] = acc;
-        }
+        matmul_nt_row(a, b, n, k, i, &mut c[i * k..(i + 1) * k]);
     }
     c
+}
+
+#[inline]
+fn matmul_nt_row(a: &[f32], b: &[f32], n: usize, k: usize, i: usize, crow: &mut [f32]) {
+    let arow = &a[i * n..(i + 1) * n];
+    for l in 0..k {
+        let brow = &b[l * n..(l + 1) * n];
+        let mut acc = 0f32;
+        for j in 0..n {
+            acc += arow[j] * brow[j];
+        }
+        crow[l] = acc;
+    }
 }
 
 /// out[dst[e]] += w[e] * x[src[e]]   (x: [vin,d], out: [vout,d])
@@ -134,15 +196,16 @@ pub fn relu_bwd(out: &[f32], g: &[f32]) -> Vec<f32> {
 }
 
 pub fn row_norms(x: &[f32], rows: usize, d: usize) -> Vec<f32> {
-    (0..rows)
-        .map(|i| {
-            x[i * d..(i + 1) * d]
-                .iter()
-                .map(|v| v * v)
-                .sum::<f32>()
-                .sqrt()
-        })
-        .collect()
+    (0..rows).map(|i| row_norm_one(x, d, i)).collect()
+}
+
+#[inline]
+fn row_norm_one(x: &[f32], d: usize, i: usize) -> f32 {
+    x[i * d..(i + 1) * d]
+        .iter()
+        .map(|v| v * v)
+        .sum::<f32>()
+        .sqrt()
 }
 
 pub fn softmax_xent(
@@ -156,23 +219,39 @@ pub fn softmax_xent(
     let mut dlogits = vec![0f32; v * c];
     let mut loss = 0f32;
     for i in 0..v {
-        let row = &logits[i * c..(i + 1) * c];
-        let zmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0f32;
-        for &z in row {
-            sum += (z - zmax).exp();
-        }
-        let lse = sum.ln();
-        let y = labels[i] as usize;
-        let mi = mask[i];
-        loss -= (row[y] - zmax - lse) * mi / n;
-        for j in 0..c {
-            let p = (row[j] - zmax - lse).exp();
-            let onehot = if j == y { 1.0 } else { 0.0 };
-            dlogits[i * c + j] = (p - onehot) * mi / n;
-        }
+        let li = softmax_xent_row(logits, labels, mask, c, n, i, &mut dlogits[i * c..(i + 1) * c]);
+        loss -= li;
     }
     (loss, dlogits)
+}
+
+/// One row of [`softmax_xent`]: fills the gradient row, returns the
+/// (signed) log-likelihood contribution the caller subtracts.
+#[inline]
+fn softmax_xent_row(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    c: usize,
+    n: f32,
+    i: usize,
+    drow: &mut [f32],
+) -> f32 {
+    let row = &logits[i * c..(i + 1) * c];
+    let zmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for &z in row {
+        sum += (z - zmax).exp();
+    }
+    let lse = sum.ln();
+    let y = labels[i] as usize;
+    let mi = mask[i];
+    for j in 0..c {
+        let p = (row[j] - zmax - lse).exp();
+        let onehot = if j == y { 1.0 } else { 0.0 };
+        drow[j] = (p - onehot) * mi / n;
+    }
+    (row[y] - zmax - lse) * mi / n
 }
 
 pub fn bce_logits(
@@ -186,17 +265,35 @@ pub fn bce_logits(
     let mut dlogits = vec![0f32; v * c];
     let mut loss = 0f32;
     for i in 0..v {
-        let mi = mask[i];
-        for j in 0..c {
-            let x = logits[i * c + j];
-            let y = labels[i * c + j];
-            let sp = x.max(0.0) + (-x.abs()).exp().ln_1p();
-            loss += (sp - x * y) * mi / n;
-            let sig = 1.0 / (1.0 + (-x).exp());
-            dlogits[i * c + j] = (sig - y) * mi / n;
-        }
+        loss += bce_row(logits, labels, mask, c, n, i, &mut dlogits[i * c..(i + 1) * c]);
     }
     (loss, dlogits)
+}
+
+/// One row of [`bce_logits`]: fills the gradient row, returns the row's
+/// loss contribution (summed per row so the parallel path can reduce
+/// rows in a fixed order).
+#[inline]
+fn bce_row(
+    logits: &[f32],
+    labels: &[f32],
+    mask: &[f32],
+    c: usize,
+    n: f32,
+    i: usize,
+    drow: &mut [f32],
+) -> f32 {
+    let mi = mask[i];
+    let mut row_loss = 0f32;
+    for j in 0..c {
+        let x = logits[i * c + j];
+        let y = labels[i * c + j];
+        let sp = x.max(0.0) + (-x.abs()).exp().ln_1p();
+        row_loss += (sp - x * y) * mi / n;
+        let sig = 1.0 / (1.0 + (-x).exp());
+        drow[j] = (sig - y) * mi / n;
+    }
+    row_loss
 }
 
 pub fn adam(
@@ -228,6 +325,322 @@ pub fn adam(
 }
 
 // ---------------------------------------------------------------------
+// parallel kernels — identical results, row-partitioned execution
+// ---------------------------------------------------------------------
+
+/// Parallel [`matmul`]: output-row chunks; falls back to the oracle when
+/// the work is below the [`Parallelism`] grain.
+pub fn matmul_par(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, par: Parallelism) -> Vec<f32> {
+    if !par.should_parallelize(m * k * n) {
+        return matmul(a, b, m, k, n);
+    }
+    let mut c = vec![0f32; m * n];
+    let rows = par.chunk_rows(m);
+    c.par_chunks_mut(rows * n).enumerate().for_each(|(ci, chunk)| {
+        for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+            matmul_row(a, b, k, n, ci * rows + ri, crow);
+        }
+    });
+    c
+}
+
+/// Parallel [`matmul_tn`]: partitions the `k` output rows; each element
+/// still accumulates over `i` ascending, so results match the oracle
+/// bitwise.
+pub fn matmul_tn_par(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    par: Parallelism,
+) -> Vec<f32> {
+    if !par.should_parallelize(m * k * n) {
+        return matmul_tn(a, b, m, k, n);
+    }
+    let mut c = vec![0f32; k * n];
+    let rows = par.chunk_rows(k);
+    c.par_chunks_mut(rows * n).enumerate().for_each(|(ci, chunk)| {
+        for (rl, crow) in chunk.chunks_mut(n).enumerate() {
+            matmul_tn_row(a, b, m, k, n, ci * rows + rl, crow);
+        }
+    });
+    c
+}
+
+/// Parallel [`matmul_nt`]: output-row chunks.
+pub fn matmul_nt_par(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    par: Parallelism,
+) -> Vec<f32> {
+    if !par.should_parallelize(m * n * k) {
+        return matmul_nt(a, b, m, n, k);
+    }
+    let mut c = vec![0f32; m * k];
+    let rows = par.chunk_rows(m);
+    c.par_chunks_mut(rows * k).enumerate().for_each(|(ci, chunk)| {
+        for (ri, crow) in chunk.chunks_mut(k).enumerate() {
+            matmul_nt_row(a, b, n, k, ci * rows + ri, crow);
+        }
+    });
+    c
+}
+
+/// Parallel [`spmm`] over a COO edge list.
+///
+/// Edges are grouped by destination row with a stable counting sort
+/// (scratch-arena buffers, no steady-state allocation), then output rows
+/// are processed in parallel chunks.  Within each destination row the
+/// edges keep their original order, so every output element accumulates
+/// in exactly the sequence the sequential oracle uses — results are
+/// bitwise identical for any thread count, including padded edge lists
+/// (`w == 0` entries are skipped identically) and empty rows.
+pub fn spmm_par(
+    src: &[i32],
+    dst: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    vout: usize,
+    par: Parallelism,
+) -> Vec<f32> {
+    let ne = src.len();
+    if !par.should_parallelize(ne * d) {
+        return spmm(src, dst, w, x, d, vout);
+    }
+    let mut out = vec![0f32; vout * d];
+    parallel::with_usize(vout + 1, |rowptr| {
+        parallel::with_u32(ne, |order| {
+            // Stable counting sort of edge ids by destination row.
+            // Zero-weight (padding) edges are skipped *before* their dst
+            // is read — the sequential oracle never touches dst/src of a
+            // w == 0 edge, so sentinel indices in padding stay legal here
+            // too.
+            for (e, &t) in dst.iter().enumerate() {
+                if w[e] == 0.0 {
+                    continue;
+                }
+                rowptr[t as usize + 1] += 1;
+            }
+            for i in 0..vout {
+                rowptr[i + 1] += rowptr[i];
+            }
+            parallel::with_usize(vout, |cursor| {
+                cursor.copy_from_slice(&rowptr[..vout]);
+                for (e, &t) in dst.iter().enumerate() {
+                    if w[e] == 0.0 {
+                        continue;
+                    }
+                    let t = t as usize;
+                    order[cursor[t]] = e as u32;
+                    cursor[t] += 1;
+                }
+            });
+            let rows = par.chunk_rows(vout);
+            out.par_chunks_mut(rows * d).enumerate().for_each(|(ci, chunk)| {
+                for (rt, orow) in chunk.chunks_mut(d).enumerate() {
+                    let t = ci * rows + rt;
+                    for &eid in &order[rowptr[t]..rowptr[t + 1]] {
+                        let e = eid as usize;
+                        let we = w[e];
+                        let s = src[e] as usize;
+                        let xs = &x[s * d..(s + 1) * d];
+                        for j in 0..d {
+                            orow[j] += we * xs[j];
+                        }
+                    }
+                }
+            });
+        });
+    });
+    out
+}
+
+/// Parallel [`relu`].
+pub fn relu_par(x: &[f32], par: Parallelism) -> Vec<f32> {
+    if !par.should_parallelize(x.len()) {
+        return relu(x);
+    }
+    x.par_iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// Parallel [`relu_bwd`].
+pub fn relu_bwd_par(out: &[f32], g: &[f32], par: Parallelism) -> Vec<f32> {
+    if !par.should_parallelize(out.len()) {
+        return relu_bwd(out, g);
+    }
+    out.par_iter()
+        .zip(g.par_iter())
+        .map(|(&o, &gv)| if o > 0.0 { gv } else { 0.0 })
+        .collect()
+}
+
+/// Elementwise `a + b` (the `add` op).
+pub fn add_par(a: &[f32], b: &[f32], par: Parallelism) -> Vec<f32> {
+    if !par.should_parallelize(a.len()) {
+        return a.iter().zip(b).map(|(x, y)| x + y).collect();
+    }
+    a.par_iter().zip(b.par_iter()).map(|(x, y)| x + y).collect()
+}
+
+/// Elementwise `a[i] += b[i]` in place.
+pub fn add_assign_par(a: &mut [f32], b: &[f32], par: Parallelism) {
+    if !par.should_parallelize(a.len()) {
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        return;
+    }
+    let ch = par.chunk_rows(a.len());
+    a.par_chunks_mut(ch)
+        .zip(b.par_chunks(ch))
+        .for_each(|(ac, bc)| {
+            for (x, y) in ac.iter_mut().zip(bc) {
+                *x += y;
+            }
+        });
+}
+
+/// Elementwise `ca * a[i] + cb * b[i]` (GCNII residual mixes).
+pub fn lincomb_par(ca: f32, a: &[f32], cb: f32, b: &[f32], par: Parallelism) -> Vec<f32> {
+    if !par.should_parallelize(a.len()) {
+        return a.iter().zip(b).map(|(&x, &y)| ca * x + cb * y).collect();
+    }
+    a.par_iter()
+        .zip(b.par_iter())
+        .map(|(&x, &y)| ca * x + cb * y)
+        .collect()
+}
+
+/// Elementwise `c * a[i]`.
+pub fn scale_par(c: f32, a: &[f32], par: Parallelism) -> Vec<f32> {
+    if !par.should_parallelize(a.len()) {
+        return a.iter().map(|&x| c * x).collect();
+    }
+    a.par_iter().map(|&x| c * x).collect()
+}
+
+/// Parallel [`row_norms`].
+pub fn row_norms_par(x: &[f32], rows: usize, d: usize, par: Parallelism) -> Vec<f32> {
+    if !par.should_parallelize(rows * d) {
+        return row_norms(x, rows, d);
+    }
+    (0..rows)
+        .into_par_iter()
+        .map(|i| row_norm_one(x, d, i))
+        .collect()
+}
+
+/// Parallel [`softmax_xent`]: gradient rows are independent; per-row loss
+/// contributions are folded in ascending row order, matching the oracle's
+/// accumulation chain bitwise.
+pub fn softmax_xent_par(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+    par: Parallelism,
+) -> (f32, Vec<f32>) {
+    if !par.should_parallelize(v * c) {
+        return softmax_xent(logits, labels, mask, v, c);
+    }
+    let n: f32 = mask.iter().sum::<f32>().max(1.0);
+    let mut dlogits = vec![0f32; v * c];
+    parallel::with_f32(v, |row_ll| {
+        dlogits
+            .par_chunks_mut(c)
+            .zip(row_ll.par_iter_mut())
+            .enumerate()
+            .for_each(|(i, (drow, ll))| {
+                *ll = softmax_xent_row(logits, labels, mask, c, n, i, drow);
+            });
+        let mut loss = 0f32;
+        for &ll in row_ll.iter() {
+            loss -= ll;
+        }
+        (loss, std::mem::take(&mut dlogits))
+    })
+}
+
+/// Parallel [`bce_logits`] (same fixed row-order loss reduction).
+pub fn bce_logits_par(
+    logits: &[f32],
+    labels: &[f32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+    par: Parallelism,
+) -> (f32, Vec<f32>) {
+    if !par.should_parallelize(v * c) {
+        return bce_logits(logits, labels, mask, v, c);
+    }
+    let n: f32 = mask.iter().sum::<f32>().max(1.0) * c as f32;
+    let mut dlogits = vec![0f32; v * c];
+    parallel::with_f32(v, |row_loss| {
+        dlogits
+            .par_chunks_mut(c)
+            .zip(row_loss.par_iter_mut())
+            .enumerate()
+            .for_each(|(i, (drow, rl))| {
+                *rl = bce_row(logits, labels, mask, c, n, i, drow);
+            });
+        let mut loss = 0f32;
+        for &rl in row_loss.iter() {
+            loss += rl;
+        }
+        (loss, std::mem::take(&mut dlogits))
+    })
+}
+
+/// Parallel [`adam`]: elementwise, chunked over the parameter vector.
+pub fn adam_par(
+    w: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    t: f32,
+    lr: f32,
+    par: Parallelism,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    if !par.should_parallelize(w.len()) {
+        return adam(w, m, v, g, t, lr);
+    }
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let bc1 = 1.0 - B1.powf(t);
+    let bc2 = 1.0 - B2.powf(t);
+    let len = w.len();
+    let mut w2 = vec![0f32; len];
+    let mut m2 = vec![0f32; len];
+    let mut v2 = vec![0f32; len];
+    let ch = par.chunk_rows(len);
+    w2.par_chunks_mut(ch)
+        .zip(m2.par_chunks_mut(ch))
+        .zip(v2.par_chunks_mut(ch))
+        .enumerate()
+        .for_each(|(ci, ((wc, mc), vc))| {
+            let base = ci * ch;
+            for o in 0..wc.len() {
+                let i = base + o;
+                let mi = B1 * m[i] + (1.0 - B1) * g[i];
+                let vi = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                wc[o] = w[i] - lr * mhat / (vhat.sqrt() + EPS);
+                mc[o] = mi;
+                vc[o] = vi;
+            }
+        });
+    (w2, m2, v2)
+}
+
+// ---------------------------------------------------------------------
 // op dispatch
 // ---------------------------------------------------------------------
 
@@ -239,15 +652,16 @@ fn f32m(v: &Value) -> Result<(&[f32], usize, usize)> {
 
 impl NativeBackend {
     fn dispatch(&self, def: &OpDef, inp: &[Value]) -> Result<Vec<Value>> {
+        let par = self.par;
         let kind = def.kind();
         match kind {
             "gcn_fwd" => {
                 let (h, v, din) = f32m(&inp[0])?;
                 let (w, _, dout) = f32m(&inp[1])?;
                 let relu_on = def.meta_bool("relu")?;
-                let j = matmul(h, w, v, din, dout);
-                let p = spmm(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &j, dout, v);
-                let out = if relu_on { relu(&p) } else { p };
+                let j = matmul_par(h, w, v, din, dout, par);
+                let p = spmm_par(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &j, dout, v, par);
+                let out = if relu_on { relu_par(&p, par) } else { p };
                 Ok(vec![Value::mat_f32(v, dout, out)])
             }
             "sage_fwd" => {
@@ -255,13 +669,11 @@ impl NativeBackend {
                 let (w1, _, dout) = f32m(&inp[1])?;
                 let (w2, _, _) = f32m(&inp[2])?;
                 let relu_on = def.meta_bool("relu")?;
-                let m = spmm(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, din, v);
-                let mut p = matmul(h, w1, v, din, dout);
-                let mw = matmul(&m, w2, v, din, dout);
-                for (a, b) in p.iter_mut().zip(&mw) {
-                    *a += b;
-                }
-                let out = if relu_on { relu(&p) } else { p };
+                let m = spmm_par(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, din, v, par);
+                let mut p = matmul_par(h, w1, v, din, dout, par);
+                let mw = matmul_par(&m, w2, v, din, dout, par);
+                add_assign_par(&mut p, &mw, par);
+                let out = if relu_on { relu_par(&p, par) } else { p };
                 Ok(vec![Value::mat_f32(v, dout, out), Value::mat_f32(v, din, m)])
             }
             "gcnii_fwd" => {
@@ -270,54 +682,46 @@ impl NativeBackend {
                 let (w, _, _) = f32m(&inp[2])?;
                 let alpha = def.meta_f32("alpha")?;
                 let beta = def.meta_f32("beta")?;
-                let p = spmm(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, d, v);
-                let mut u = vec![0f32; v * d];
-                for i in 0..v * d {
-                    u[i] = (1.0 - alpha) * p[i] + alpha * h0[i];
-                }
-                let uw = matmul(&u, w, v, d, d);
-                let mut z = vec![0f32; v * d];
-                for i in 0..v * d {
-                    z[i] = (1.0 - beta) * u[i] + beta * uw[i];
-                }
-                Ok(vec![Value::mat_f32(v, d, relu(&z)), Value::mat_f32(v, d, u)])
+                let p = spmm_par(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, d, v, par);
+                let u = lincomb_par(1.0 - alpha, &p, alpha, h0, par);
+                let uw = matmul_par(&u, w, v, d, d, par);
+                let z = lincomb_par(1.0 - beta, &u, beta, &uw, par);
+                Ok(vec![Value::mat_f32(v, d, relu_par(&z, par)), Value::mat_f32(v, d, u)])
             }
             "dense_fwd" => {
                 let (x, v, din) = f32m(&inp[0])?;
                 let (w, _, dout) = f32m(&inp[1])?;
                 let relu_on = def.meta_bool("relu")?;
-                let p = matmul(x, w, v, din, dout);
-                let out = if relu_on { relu(&p) } else { p };
+                let p = matmul_par(x, w, v, din, dout, par);
+                let out = if relu_on { relu_par(&p, par) } else { p };
                 Ok(vec![Value::mat_f32(v, dout, out)])
             }
             "spmm_bwd_mask" => {
                 let (hout, v, d) = f32m(&inp[0])?;
                 let (gout, _, _) = f32m(&inp[1])?;
-                let gp = relu_bwd(hout, gout);
-                let gj = spmm(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &gp, d, v);
+                let gp = relu_bwd_par(hout, gout, par);
+                let gj = spmm_par(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &gp, d, v, par);
                 Ok(vec![Value::mat_f32(v, d, gj)])
             }
             "spmm_bwd_nomask" => {
                 let (gout, v, d) = f32m(&inp[0])?;
-                let gj = spmm(inp[1].i32s()?, inp[2].i32s()?, inp[3].f32s()?, gout, d, v);
+                let gj = spmm_par(inp[1].i32s()?, inp[2].i32s()?, inp[3].f32s()?, gout, d, v, par);
                 Ok(vec![Value::mat_f32(v, d, gj)])
             }
             "spmm_bwd_acc" => {
                 let (acc, v, d) = f32m(&inp[0])?;
                 let (g, _, _) = f32m(&inp[1])?;
                 let mut gj =
-                    spmm(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, g, d, v);
-                for (o, a) in gj.iter_mut().zip(acc) {
-                    *o += a;
-                }
+                    spmm_par(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, g, d, v, par);
+                add_assign_par(&mut gj, acc, par);
                 Ok(vec![Value::mat_f32(v, d, gj)])
             }
             "gcn_bwd_mm" => {
                 let (h, v, din) = f32m(&inp[0])?;
                 let (gj, _, dout) = f32m(&inp[1])?;
                 let (w, _, _) = f32m(&inp[2])?;
-                let gw = matmul_tn(h, gj, v, din, dout);
-                let gh = matmul_nt(gj, w, v, dout, din);
+                let gw = matmul_tn_par(h, gj, v, din, dout, par);
+                let gh = matmul_nt_par(gj, w, v, dout, din, par);
                 Ok(vec![
                     Value::mat_f32(din, dout, gw),
                     Value::mat_f32(v, din, gh),
@@ -329,7 +733,7 @@ impl NativeBackend {
                 if masked {
                     let (hout, vv, dd) = f32m(&inp[0])?;
                     let (gout, _, _) = f32m(&inp[1])?;
-                    gp = relu_bwd(hout, gout);
+                    gp = relu_bwd_par(hout, gout, par);
                     v = vv;
                     dout = dd;
                     let (hh, _, di) = f32m(&inp[2])?;
@@ -350,10 +754,10 @@ impl NativeBackend {
                     w1 = f32m(&inp[3])?.0;
                     w2 = f32m(&inp[4])?.0;
                 }
-                let gw1 = matmul_tn(h, &gp, v, din, dout);
-                let gw2 = matmul_tn(m, &gp, v, din, dout);
-                let gm = matmul_nt(&gp, w2, v, dout, din);
-                let gh_a = matmul_nt(&gp, w1, v, dout, din);
+                let gw1 = matmul_tn_par(h, &gp, v, din, dout, par);
+                let gw2 = matmul_tn_par(m, &gp, v, din, dout, par);
+                let gm = matmul_nt_par(&gp, w2, v, dout, din, par);
+                let gh_a = matmul_nt_par(&gp, w1, v, dout, din, par);
                 Ok(vec![
                     Value::mat_f32(din, dout, gw1),
                     Value::mat_f32(din, dout, gw2),
@@ -368,22 +772,12 @@ impl NativeBackend {
                 let (w, _, _) = f32m(&inp[3])?;
                 let alpha = def.meta_f32("alpha")?;
                 let beta = def.meta_f32("beta")?;
-                let gz = relu_bwd(hout, gout);
-                let gzw = matmul_nt(&gz, w, v, d, d);
-                let mut gu = vec![0f32; v * d];
-                for i in 0..v * d {
-                    gu[i] = (1.0 - beta) * gz[i] + beta * gzw[i];
-                }
-                let mut gw = matmul_tn(u, &gz, v, d, d);
-                for x in gw.iter_mut() {
-                    *x *= beta;
-                }
-                let mut gp = vec![0f32; v * d];
-                let mut gh0c = vec![0f32; v * d];
-                for i in 0..v * d {
-                    gp[i] = (1.0 - alpha) * gu[i];
-                    gh0c[i] = alpha * gu[i];
-                }
+                let gz = relu_bwd_par(hout, gout, par);
+                let gzw = matmul_nt_par(&gz, w, v, d, d, par);
+                let gu = lincomb_par(1.0 - beta, &gz, beta, &gzw, par);
+                let gw = scale_par(beta, &matmul_tn_par(u, &gz, v, d, d, par), par);
+                let gp = scale_par(1.0 - alpha, &gu, par);
+                let gh0c = scale_par(alpha, &gu, par);
                 Ok(vec![
                     Value::mat_f32(d, d, gw),
                     Value::mat_f32(v, d, gp),
@@ -397,7 +791,7 @@ impl NativeBackend {
                 if masked {
                     let (out, _, dd) = f32m(&inp[1])?;
                     let (g, _, _) = f32m(&inp[2])?;
-                    gp = relu_bwd(out, g);
+                    gp = relu_bwd_par(out, g, par);
                     dout = dd;
                     w = f32m(&inp[3])?.0;
                 } else {
@@ -406,8 +800,8 @@ impl NativeBackend {
                     dout = dd;
                     w = f32m(&inp[2])?.0;
                 }
-                let gw = matmul_tn(x, &gp, v, din, dout);
-                let gx = matmul_nt(&gp, w, v, dout, din);
+                let gw = matmul_tn_par(x, &gp, v, din, dout, par);
+                let gx = matmul_nt_par(&gp, w, v, dout, din, par);
                 Ok(vec![
                     Value::mat_f32(din, dout, gw),
                     Value::mat_f32(v, din, gx),
@@ -416,25 +810,24 @@ impl NativeBackend {
             "add" => {
                 let (a, v, d) = f32m(&inp[0])?;
                 let (b, _, _) = f32m(&inp[1])?;
-                let out: Vec<f32> = a.iter().zip(b).map(|(x, y)| x + y).collect();
-                Ok(vec![Value::mat_f32(v, d, out)])
+                Ok(vec![Value::mat_f32(v, d, add_par(a, b, par))])
             }
             "row_norms" => {
                 let (g, v, d) = f32m(&inp[0])?;
-                Ok(vec![Value::vec_f32(row_norms(g, v, d))])
+                Ok(vec![Value::vec_f32(row_norms_par(g, v, d, par))])
             }
             "loss_softmax" => {
                 let (logits, v, c) = f32m(&inp[0])?;
                 let labels = inp[1].i32s()?;
                 let mask = inp[2].f32s()?;
-                let (loss, dl) = softmax_xent(logits, labels, mask, v, c);
+                let (loss, dl) = softmax_xent_par(logits, labels, mask, v, c, par);
                 Ok(vec![Value::scalar_f32(loss), Value::mat_f32(v, c, dl)])
             }
             "loss_bce" => {
                 let (logits, v, c) = f32m(&inp[0])?;
                 let labels = inp[1].f32s()?;
                 let mask = inp[2].f32s()?;
-                let (loss, dl) = bce_logits(logits, labels, mask, v, c);
+                let (loss, dl) = bce_logits_par(logits, labels, mask, v, c, par);
                 Ok(vec![Value::scalar_f32(loss), Value::mat_f32(v, c, dl)])
             }
             "adam" => {
@@ -444,7 +837,7 @@ impl NativeBackend {
                 let g = inp[3].f32s()?;
                 let t = inp[4].item_f32()?;
                 let lr = inp[5].item_f32()?;
-                let (w2, m2, v2) = adam(w, m, v, g, t, lr);
+                let (w2, m2, v2) = adam_par(w, m, v, g, t, lr, par);
                 Ok(vec![
                     Value::mat_f32(r, c, w2),
                     Value::mat_f32(r, c, m2),
@@ -501,6 +894,13 @@ mod tests {
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng;
+
+    /// Parallel config used by the agreement tests: real fan-out (4
+    /// workers) with a grain of 1 so even tiny inputs take the parallel
+    /// path.
+    fn par4() -> Parallelism {
+        Parallelism::with_threads(4).with_grain(1)
+    }
 
     #[test]
     fn matmul_small() {
@@ -568,6 +968,107 @@ mod tests {
     }
 
     #[test]
+    fn par_matmul_family_is_bitwise_identical() {
+        prop::check("par-matmul-bitwise", 20, |rng| {
+            let (m, k, n) = (rng.range(1, 24), rng.range(1, 24), rng.range(1, 24));
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            assert_eq!(matmul(&a, &b, m, k, n), matmul_par(&a, &b, m, k, n, par4()));
+            assert_eq!(
+                matmul_tn(&a, &b, m, k, n),
+                matmul_tn_par(&a, &b, m, k, n, par4())
+            );
+            let bt = prop::vec_f32(rng, n * k, 1.0);
+            assert_eq!(
+                matmul_nt(&a, &bt, m, k, n),
+                matmul_nt_par(&a, &bt, m, k, n, par4())
+            );
+        });
+    }
+
+    #[test]
+    fn par_spmm_is_bitwise_identical() {
+        prop::check("par-spmm-bitwise", 20, |rng| {
+            let v = rng.range(1, 40);
+            let d = rng.range(1, 8);
+            let ne = rng.below(6 * v);
+            let src: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+            let dst: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+            // include zero weights to mimic padded buckets
+            let w: Vec<f32> = (0..ne)
+                .map(|_| if rng.chance(0.2) { 0.0 } else { rng.normal_f32() })
+                .collect();
+            let x = prop::vec_f32(rng, v * d, 1.0);
+            assert_eq!(
+                spmm(&src, &dst, &w, &x, d, v),
+                spmm_par(&src, &dst, &w, &x, d, v, par4())
+            );
+        });
+    }
+
+    #[test]
+    fn par_losses_and_adam_are_bitwise_identical() {
+        let mut rng = Rng::new(21);
+        let (v, c) = (33, 5);
+        let logits = prop::vec_f32(&mut rng, v * c, 2.0);
+        let labels: Vec<i32> = (0..v).map(|i| (i % c) as i32).collect();
+        let mask: Vec<f32> = (0..v).map(|i| (i % 3 != 0) as i32 as f32).collect();
+        assert_eq!(
+            softmax_xent(&logits, &labels, &mask, v, c),
+            softmax_xent_par(&logits, &labels, &mask, v, c, par4())
+        );
+        let flabels: Vec<f32> = (0..v * c).map(|i| (i % 2) as f32).collect();
+        assert_eq!(
+            bce_logits(&logits, &flabels, &mask, v, c),
+            bce_logits_par(&logits, &flabels, &mask, v, c, par4())
+        );
+        let n = 257;
+        let w = prop::vec_f32(&mut rng, n, 1.0);
+        let m = prop::vec_f32(&mut rng, n, 0.1);
+        let vv: Vec<f32> = (0..n).map(|_| rng.f32() * 0.1).collect();
+        let g = prop::vec_f32(&mut rng, n, 1.0);
+        assert_eq!(
+            adam(&w, &m, &vv, &g, 3.0, 0.01),
+            adam_par(&w, &m, &vv, &g, 3.0, 0.01, par4())
+        );
+    }
+
+    #[test]
+    fn par_elementwise_kernels_match() {
+        let mut rng = Rng::new(22);
+        let a = prop::vec_f32(&mut rng, 501, 1.0);
+        let b = prop::vec_f32(&mut rng, 501, 1.0);
+        assert_eq!(relu(&a), relu_par(&a, par4()));
+        assert_eq!(relu_bwd(&a, &b), relu_bwd_par(&a, &b, par4()));
+        let seq_add: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        assert_eq!(seq_add, add_par(&a, &b, par4()));
+        let mut acc = a.clone();
+        add_assign_par(&mut acc, &b, par4());
+        assert_eq!(seq_add, acc);
+        let seq_lin: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| 0.3 * x + 0.7 * y).collect();
+        assert_eq!(seq_lin, lincomb_par(0.3, &a, 0.7, &b, par4()));
+        assert_eq!(row_norms(&a, 3, 167), row_norms_par(&a, 3, 167, par4()));
+    }
+
+    #[test]
+    fn par_spmm_empty_and_single_row() {
+        // empty edge list
+        assert_eq!(
+            spmm_par(&[], &[], &[], &[1.0, 2.0], 1, 2, par4()),
+            vec![0.0, 0.0]
+        );
+        // single output row, all edges landing on it
+        let src = vec![0, 1, 0];
+        let dst = vec![0, 0, 0];
+        let w = vec![1.0, 2.0, 0.5];
+        let x = vec![1.0, 10.0];
+        assert_eq!(
+            spmm(&src, &dst, &w, &x, 1, 1),
+            spmm_par(&src, &dst, &w, &x, 1, 1, par4())
+        );
+    }
+
+    #[test]
     fn softmax_grad_sums_to_zero_on_masked_rows() {
         let mut rng = Rng::new(3);
         let (v, c) = (10, 4);
@@ -610,5 +1111,28 @@ mod tests {
     #[test]
     fn relu_bwd_masks() {
         assert_eq!(relu_bwd(&[1.0, 0.0, -2.0], &[5.0, 5.0, 5.0]), vec![5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn arena_reuse_kicks_in_across_spmm_calls() {
+        // snapshot deltas — counters are global and only increment, so
+        // this thread's ~21 reuses are a lower bound on the delta
+        let (reused0, _) = parallel::arena_stats();
+        let v = 64;
+        let d = 4;
+        let mut rng = Rng::new(9);
+        let src: Vec<i32> = (0..256).map(|_| rng.below(v) as i32).collect();
+        let dst: Vec<i32> = (0..256).map(|_| rng.below(v) as i32).collect();
+        let w: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        let x = prop::vec_f32(&mut rng, v * d, 1.0);
+        for _ in 0..8 {
+            spmm_par(&src, &dst, &w, &x, d, v, par4());
+        }
+        let (reused1, _) = parallel::arena_stats();
+        assert!(
+            reused1 - reused0 >= 10,
+            "scratch arena should reuse in steady state: delta {}",
+            reused1 - reused0
+        );
     }
 }

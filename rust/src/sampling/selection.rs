@@ -35,9 +35,23 @@ impl Selection {
     /// (transposed orientation) and pads to the smallest bucket >= nnz.
     ///
     /// This is the cache-refresh slow path; between refreshes the cached
-    /// Selection is reused as-is (Section 3.3.1).
+    /// Selection is reused as-is (Section 3.3.1).  The gather runs on the
+    /// process-wide [`Parallelism`](crate::util::parallel::Parallelism)
+    /// default; see [`Selection::build_with`] for explicit control.
     pub fn build(adj: &Csr, rows: Vec<u32>, caps: &[usize]) -> Selection {
-        let mut edges = adj.transposed_edges_for_rows(&rows);
+        Selection::build_with(adj, rows, caps, crate::util::parallel::global())
+    }
+
+    /// [`Selection::build`] with an explicit parallelism config (the edge
+    /// gather is the dominant cost — Figure 5's slicing — and partitions
+    /// the selected rows across workers deterministically).
+    pub fn build_with(
+        adj: &Csr,
+        rows: Vec<u32>,
+        caps: &[usize],
+        par: crate::util::parallel::Parallelism,
+    ) -> Selection {
+        let mut edges = adj.transposed_edges_for_rows_with(&rows, par);
         let nnz = edges.len();
         let cap = pick_bucket(caps, nnz);
         edges.pad_to(cap);

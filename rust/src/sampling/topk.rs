@@ -1,34 +1,76 @@
 //! Deterministic top-k column-row pair selection (Section 2.2.1).
+//!
+//! Score computation and the argsort fan out over the process-wide
+//! [`Parallelism`](crate::util::parallel::Parallelism) default for large
+//! graphs (`*_with` variants take it explicitly).  The comparator is
+//! total (ties broken by lower index), so the sorted order — and thus the
+//! selected pair set — is identical sequential vs parallel.
+
+use crate::util::parallel::{self, Parallelism};
+use rayon::prelude::*;
 
 /// Pair scores s_i = col_norms[i] * grad_norms[i]; the numerator of
 /// Eq. (3) / the objective terms of Eq. (4a).
 pub fn pair_scores(col_norms: &[f32], grad_norms: &[f32]) -> Vec<f32> {
+    pair_scores_with(col_norms, grad_norms, parallel::global())
+}
+
+/// [`pair_scores`] with an explicit parallelism config.
+pub fn pair_scores_with(col_norms: &[f32], grad_norms: &[f32], par: Parallelism) -> Vec<f32> {
     debug_assert_eq!(col_norms.len(), grad_norms.len());
-    col_norms
-        .iter()
-        .zip(grad_norms)
-        .map(|(&a, &g)| a * g)
-        .collect()
+    if par.should_parallelize(col_norms.len()) {
+        col_norms
+            .par_iter()
+            .zip(grad_norms.par_iter())
+            .map(|(&a, &g)| a * g)
+            .collect()
+    } else {
+        col_norms
+            .iter()
+            .zip(grad_norms)
+            .map(|(&a, &g)| a * g)
+            .collect()
+    }
 }
 
 /// Indices of the k largest scores (ties broken by lower index for
 /// determinism).  O(n log n); n = |V| is small relative to everything
 /// else, and a full argsort is reused by the allocator's prefix sums.
 pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<u32> {
-    let mut idx = argsort_desc(scores);
+    top_k_indices_with(scores, k, parallel::global())
+}
+
+/// [`top_k_indices`] with an explicit parallelism config.
+pub fn top_k_indices_with(scores: &[f32], k: usize, par: Parallelism) -> Vec<u32> {
+    let mut idx = argsort_desc_with(scores, par);
     idx.truncate(k.min(scores.len()));
     idx
 }
 
 /// All indices sorted by descending score (stable for ties).
 pub fn argsort_desc(scores: &[f32]) -> Vec<u32> {
+    argsort_desc_with(scores, parallel::global())
+}
+
+/// [`argsort_desc`] with an explicit parallelism config.  The
+/// comparator is a genuine total order — `f32::total_cmp` (NaNs sort
+/// deterministically instead of comparing "equal" to everything, which
+/// would let the two sort paths diverge or panic) plus an index
+/// tie-break — so sequential and parallel sorts return the same
+/// permutation.
+pub fn argsort_desc_with(scores: &[f32], par: Parallelism) -> Vec<u32> {
     let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
-    idx.sort_by(|&a, &b| {
-        scores[b as usize]
-            .partial_cmp(&scores[a as usize])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    let cmp = |a: &u32, b: &u32| {
+        scores[*b as usize]
+            .total_cmp(&scores[*a as usize])
+            .then(a.cmp(b))
+    };
+    // n log n comparisons, not n work units: gate on the raw length
+    if par.should_parallelize(scores.len()) {
+        idx.par_sort_by(cmp);
+    } else {
+        idx.sort_by(cmp);
+    }
     idx
 }
 
@@ -55,6 +97,40 @@ mod tests {
     fn scores_multiply() {
         let s = pair_scores(&[2.0, 3.0], &[0.5, 1.0]);
         assert_eq!(s, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn nan_scores_sort_deterministically() {
+        // total_cmp keeps the comparator a total order even with NaN
+        // (from e.g. an inf * 0 pair score in a diverged run): no panic,
+        // and sequential/parallel permutations agree
+        let seq = crate::util::parallel::Parallelism::sequential();
+        let par = crate::util::parallel::Parallelism::with_threads(4).with_grain(1);
+        let s = vec![1.0, f32::NAN, 0.5, f32::NAN, 2.0, f32::NEG_INFINITY];
+        let a = argsort_desc_with(&s, seq);
+        let b = argsort_desc_with(&s, par);
+        assert_eq!(a, b);
+        // every index present exactly once
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..s.len() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_sort_matches_sequential() {
+        let seq = crate::util::parallel::Parallelism::sequential();
+        let par = crate::util::parallel::Parallelism::with_threads(4).with_grain(1);
+        prop::check("argsort-par", 30, |rng| {
+            let n = rng.range(1, 200);
+            // duplicate-heavy scores to stress tie-breaking
+            let s: Vec<f32> = (0..n).map(|_| (rng.below(8) as f32) / 4.0).collect();
+            assert_eq!(argsort_desc_with(&s, seq), argsort_desc_with(&s, par));
+            let k = rng.below(n + 1);
+            assert_eq!(
+                top_k_indices_with(&s, k, seq),
+                top_k_indices_with(&s, k, par)
+            );
+        });
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::model::ops::{GraphBufs, ModelKind, OpNames};
 use crate::model::sage::SageModel;
 use crate::runtime::{Backend, Value};
 use crate::train::metrics::MetricKind;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::util::timer::{Stopwatch, TimeBook};
 use crate::Result;
@@ -70,6 +71,11 @@ pub struct TrainResult {
     pub sample_ms: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Worker threads of the run's [`parallel::Parallelism`] (1 =
+    /// sequential) — set the CLI's `--threads` or `RSC_THREADS` to
+    /// control it; results are identical either way (DESIGN.md
+    /// §Parallel runtime).
+    pub threads: usize,
 }
 
 /// Build the normalized matrix + buffers for a model on the full graph.
@@ -187,6 +193,7 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
         sample_ms: engine.sample_ms,
         cache_hits,
         cache_misses,
+        threads: parallel::global().threads(),
     })
 }
 
@@ -337,5 +344,6 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         sample_ms,
         cache_hits: hits,
         cache_misses: misses,
+        threads: parallel::global().threads(),
     })
 }

@@ -1,10 +1,12 @@
 //! Foundational substrates built in-repo (the offline image carries no
 //! serde/clap/criterion/proptest/rand, so we implement what we need):
-//! JSON, RNG, CLI parsing, statistics, a tiny property-test harness and
-//! wall-clock timers.
+//! JSON, RNG, CLI parsing, statistics, a tiny property-test harness,
+//! wall-clock timers, and the thread-parallelism substrate (rayon-backed
+//! config + per-thread scratch arena) the hot-path kernels share.
 
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

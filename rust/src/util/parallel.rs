@@ -1,0 +1,327 @@
+//! Thread-parallelism substrate for the sparse hot paths.
+//!
+//! Two pieces:
+//!
+//! * [`Parallelism`] — the configuration every parallel kernel takes:
+//!   thread count plus a *grain* (minimum work size, in scalar operations,
+//!   below which the sequential path runs).  A process-wide default is
+//!   held here ([`set_global`] / [`global`]) so deep call sites
+//!   (CSR slicing inside the sample cache, top-k sorts inside the engine)
+//!   inherit the CLI's `--threads` choice without signature churn.
+//! * a per-thread **scratch arena** ([`with_f32`], [`with_u32`],
+//!   [`with_usize`]) — reusable buffers for hot-loop temporaries (edge
+//!   grouping tables, cursors, per-row partials) so repeated kernel calls
+//!   stop allocating.  Buffers are thread-local, zeroed on hand-out, and
+//!   returned to the pool when the closure exits; [`arena_stats`] reports
+//!   reuse vs. fresh allocations.
+//!
+//! **Determinism contract** (see DESIGN.md §Parallel runtime): every
+//! parallel kernel in this crate partitions *output* rows (or uses a
+//! stable sort / stable counting order), so its result is byte-for-byte
+//! identical to the sequential oracle for *any* thread count.  The
+//! `Parallelism` value only decides how much hardware is used, never what
+//! is computed.
+//!
+//! Thread-count resolution ([`Parallelism::auto`]) respects restricted
+//! CPU budgets: `std::thread::available_parallelism` reads cgroup quotas
+//! on Linux, so a 1-core container runs sequentially — the same concern
+//! `runtime/xla.rs` handles for the TFRT Eigen pool.  The `RSC_THREADS`
+//! env var overrides detection.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+
+/// Default minimum work size (scalar ops) before a kernel goes parallel.
+/// Below this, thread fan-out costs more than the loop itself.
+pub const DEFAULT_GRAIN: usize = 1 << 14;
+
+/// How many parallel kernels may scale: a thread count and a work-size
+/// threshold.  Cheap to copy; carried by [`crate::runtime::NativeBackend`]
+/// and read from the process-wide default everywhere else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+    grain: usize,
+}
+
+impl Parallelism {
+    /// Single-threaded: every kernel takes its sequential path.
+    pub fn sequential() -> Parallelism {
+        Parallelism { threads: 1, grain: DEFAULT_GRAIN }
+    }
+
+    /// Exactly `n` workers (clamped to at least 1).
+    pub fn with_threads(n: usize) -> Parallelism {
+        Parallelism { threads: n.max(1), grain: DEFAULT_GRAIN }
+    }
+
+    /// Override the work-size threshold (tests use `with_grain(1)` to
+    /// force the parallel path on tiny inputs).
+    pub fn with_grain(mut self, grain: usize) -> Parallelism {
+        self.grain = grain.max(1);
+        self
+    }
+
+    /// Detect the usable core count: `RSC_THREADS` if set, else
+    /// `available_parallelism` (which honours cgroup CPU quotas).
+    pub fn auto() -> Parallelism {
+        if let Some(n) = std::env::var("RSC_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            return Parallelism::with_threads(n);
+        }
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Parallelism::with_threads(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn grain(&self) -> usize {
+        self.grain
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// Gate: should a kernel with `work` scalar operations fan out?
+    /// Also makes sure the worker pool exists before the caller uses it.
+    pub fn should_parallelize(&self, work: usize) -> bool {
+        if self.threads > 1 && work >= self.grain {
+            ensure_pool(self.threads);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Rows per parallel chunk when splitting `rows` output rows: a few
+    /// chunks per worker for load balance, never zero.
+    pub fn chunk_rows(&self, rows: usize) -> usize {
+        let chunks = (self.threads * 4).max(1);
+        rows.div_ceil(chunks).max(1)
+    }
+}
+
+impl Default for Parallelism {
+    /// The process-wide default (see [`global`]).
+    fn default() -> Parallelism {
+        global()
+    }
+}
+
+// ---------------------------------------------------------------------
+// process-wide default + worker pool
+// ---------------------------------------------------------------------
+
+static GLOBAL: RwLock<Option<Parallelism>> = RwLock::new(None);
+static POOL: OnceLock<usize> = OnceLock::new();
+
+/// Build the global rayon pool once, sized to the first configured
+/// thread count.  Later `Parallelism` values with a different count still
+/// compute identical results (determinism is thread-count independent);
+/// only the hardware utilisation is fixed at first use.
+fn ensure_pool(threads: usize) {
+    POOL.get_or_init(|| {
+        let _ = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .thread_name(|i| format!("rsc-par-{i}"))
+            .build_global();
+        threads
+    });
+}
+
+/// Set the process-wide default (the CLI's `--threads`, a test harness,
+/// or an embedding application).
+pub fn set_global(p: Parallelism) {
+    if p.is_parallel() {
+        ensure_pool(p.threads());
+    }
+    *GLOBAL.write().unwrap() = Some(p);
+}
+
+/// The process-wide default; resolves (and caches) [`Parallelism::auto`]
+/// on first use if nothing was set.
+pub fn global() -> Parallelism {
+    if let Some(p) = *GLOBAL.read().unwrap() {
+        return p;
+    }
+    let auto = Parallelism::auto();
+    let mut w = GLOBAL.write().unwrap();
+    *w.get_or_insert(auto)
+}
+
+// ---------------------------------------------------------------------
+// per-thread scratch arena
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Pools {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+    usizes: Vec<Vec<usize>>,
+}
+
+thread_local! {
+    static POOLS: RefCell<Pools> = RefCell::new(Pools::default());
+}
+
+/// Keep at most this many spare buffers per type per thread.
+const POOL_CAP: usize = 8;
+
+static ARENA_REUSED: AtomicU64 = AtomicU64::new(0);
+static ARENA_FRESH: AtomicU64 = AtomicU64::new(0);
+
+/// (buffers reused, buffers freshly allocated) since process start or the
+/// last [`reset_arena_stats`].  Reuse should dominate in steady state.
+pub fn arena_stats() -> (u64, u64) {
+    (
+        ARENA_REUSED.load(Ordering::Relaxed),
+        ARENA_FRESH.load(Ordering::Relaxed),
+    )
+}
+
+pub fn reset_arena_stats() {
+    ARENA_REUSED.store(0, Ordering::Relaxed);
+    ARENA_FRESH.store(0, Ordering::Relaxed);
+}
+
+macro_rules! arena_fn {
+    ($name:ident, $field:ident, $ty:ty, $zero:expr) => {
+        /// Run `f` with a zeroed scratch buffer of `len` elements drawn
+        /// from (and returned to) the calling thread's pool.
+        pub fn $name<R>(len: usize, f: impl FnOnce(&mut [$ty]) -> R) -> R {
+            let recycled = POOLS.with(|p| p.borrow_mut().$field.pop());
+            let mut buf = match recycled {
+                Some(b) => {
+                    ARENA_REUSED.fetch_add(1, Ordering::Relaxed);
+                    b
+                }
+                None => {
+                    ARENA_FRESH.fetch_add(1, Ordering::Relaxed);
+                    Vec::new()
+                }
+            };
+            buf.clear();
+            buf.resize(len, $zero);
+            let out = f(&mut buf);
+            POOLS.with(|p| {
+                let mut p = p.borrow_mut();
+                if p.$field.len() < POOL_CAP {
+                    p.$field.push(buf);
+                }
+            });
+            out
+        }
+    };
+}
+
+arena_fn!(with_f32, f32s, f32, 0.0);
+arena_fn!(with_u32, u32s, u32, 0);
+arena_fn!(with_usize, usizes, usize, 0);
+
+// ---------------------------------------------------------------------
+// slicing helper
+// ---------------------------------------------------------------------
+
+/// Split `s` into consecutive mutable chunks of the given sizes (which
+/// must sum to at most `s.len()`); used to hand each parallel worker a
+/// disjoint, variable-width output region.
+pub fn split_varsize<'a, T>(mut s: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let (head, tail) = s.split_at_mut(n);
+        out.push(head);
+        s = tail;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_never_parallelizes() {
+        let p = Parallelism::sequential();
+        assert!(!p.is_parallel());
+        assert!(!p.should_parallelize(usize::MAX));
+    }
+
+    #[test]
+    fn grain_gates_small_work() {
+        let p = Parallelism::with_threads(4);
+        assert!(!p.should_parallelize(p.grain() - 1));
+        assert!(p.should_parallelize(p.grain()));
+        let tiny = p.with_grain(1);
+        assert!(tiny.should_parallelize(1));
+    }
+
+    #[test]
+    fn chunk_rows_covers_everything() {
+        let p = Parallelism::with_threads(3);
+        for rows in [0usize, 1, 7, 100, 1001] {
+            let c = p.chunk_rows(rows);
+            assert!(c >= 1);
+            assert!(c * (rows.div_ceil(c.max(1)).max(1)) >= rows);
+        }
+    }
+
+    #[test]
+    fn arena_reuses_buffers() {
+        // snapshot deltas: the counters are process-global and other
+        // tests run concurrently, but they only ever increment
+        let (reused0, _) = arena_stats();
+        with_f32(128, |b| {
+            assert_eq!(b.len(), 128);
+            assert!(b.iter().all(|&x| x == 0.0));
+            b[0] = 5.0;
+        });
+        // second draw on this thread must come from the pool, zeroed again
+        with_f32(64, |b| {
+            assert_eq!(b.len(), 64);
+            assert!(b.iter().all(|&x| x == 0.0));
+        });
+        let (reused1, fresh1) = arena_stats();
+        assert!(
+            reused1 > reused0,
+            "expected a pool hit, got ({reused1}, {fresh1})"
+        );
+    }
+
+    #[test]
+    fn nested_arena_draws_are_distinct() {
+        with_u32(8, |a| {
+            a[0] = 1;
+            with_u32(8, |b| {
+                b[0] = 2;
+                assert_eq!(a[0], 1);
+            });
+            assert_eq!(a[0], 1);
+        });
+    }
+
+    #[test]
+    fn split_varsize_partitions() {
+        let mut v: Vec<u32> = (0..10).collect();
+        let parts = split_varsize(&mut v, &[3, 0, 4, 3]);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0], &[0, 1, 2]);
+        assert_eq!(parts[1], &[] as &[u32]);
+        assert_eq!(parts[2], &[3, 4, 5, 6]);
+        assert_eq!(parts[3], &[7, 8, 9]);
+    }
+
+    #[test]
+    fn auto_detects_at_least_one_thread() {
+        assert!(Parallelism::auto().threads() >= 1);
+        assert!(global().threads() >= 1);
+    }
+}

@@ -117,7 +117,7 @@ fn sample_cache_invalidate_all() {
     let m = Csr::random(10, 30, &mut rng);
     let caps = vec![m.nnz()];
     let mut c = SampleCache::new(1, 100);
-    c.get_or_build(0, 0, 3, &m, &caps, || vec![0, 1, 2]);
+    c.get_or_build(0, 0, 3, &m, &caps, rsc::util::parallel::global(), || vec![0, 1, 2]);
     assert!(!c.stale(0, 1, 3));
     c.invalidate_all();
     assert!(c.stale(0, 1, 3));

@@ -1,5 +1,8 @@
 //! Cross-module property tests (in-repo `util::prop` harness): invariants
-//! that must hold for arbitrary graphs/scores/configs.
+//! that must hold for arbitrary graphs/scores/configs — including the
+//! parallel-runtime contract: every `*_par` kernel and every parallel
+//! CSR builder must agree with its sequential oracle on arbitrary
+//! inputs (empty rows, single rows, padded edge lists included).
 
 use rsc::allocator::{evaluate, total_budget, Allocator, GreedyAllocator, LayerScores};
 use rsc::cache::ranking_auc;
@@ -7,8 +10,15 @@ use rsc::graph::{generate_sbm, Csr, SbmConfig};
 use rsc::runtime::native;
 use rsc::sampling::{pick_bucket, top_k_indices, Selection};
 use rsc::util::json::Json;
+use rsc::util::parallel::Parallelism;
 use rsc::util::prop;
 use rsc::util::rng::Rng;
+
+/// Forced-parallel config: 4 workers, grain 1 so even the smallest
+/// random instances exercise the parallel code path.
+fn par4() -> Parallelism {
+    Parallelism::with_threads(4).with_grain(1)
+}
 
 #[test]
 fn prop_spmm_linear_in_weights() {
@@ -175,6 +185,142 @@ fn prop_sbm_normalizations_preserve_structure() {
             let s: f32 = ws.iter().sum();
             assert!((s - 1.0).abs() < 1e-5);
         }
+    });
+}
+
+#[test]
+fn prop_parallel_spmm_agrees_with_sequential_oracle() {
+    // Random CSR matrices -> edge lists (naturally containing empty and
+    // heavy rows), padded to a bucket like the real backward operand.
+    prop::check("par-spmm-oracle", 40, |rng| {
+        let n = rng.range(1, 50);
+        let nnz = rng.below(5 * n);
+        let m = Csr::random(n, nnz, rng);
+        let d = rng.range(1, 9);
+        let mut e = m.to_edge_list();
+        if rng.chance(0.5) {
+            e.pad_to(e.len() + rng.below(2 * n + 1)); // padded-bucket case
+        }
+        let x = prop::vec_f32(rng, n * d, 1.0);
+        let seq = native::spmm(&e.src, &e.dst, &e.w, &x, d, n);
+        let par = native::spmm_par(&e.src, &e.dst, &e.w, &x, d, n, par4());
+        // the contract is bitwise, but assert with tolerance too so a
+        // future relaxation of the kernel fails with a readable diff
+        assert_eq!(seq, par, "bitwise");
+        prop::assert_close(&seq, &par, 1e-6, "tolerance");
+    });
+}
+
+#[test]
+fn prop_parallel_spmm_edge_cases() {
+    let p = par4();
+    // empty matrix: no edges at all
+    let empty = Csr::from_triples(4, vec![]);
+    let e = empty.to_edge_list();
+    let x = vec![1.0; 4 * 3];
+    assert_eq!(
+        native::spmm_par(&e.src, &e.dst, &e.w, &x, 3, 4, p),
+        vec![0.0; 12]
+    );
+    // single-row matrix (n = 1, self-loops only)
+    let single = Csr::from_triples(1, vec![(0, 0, 2.0), (0, 0, 3.0)]);
+    let e = single.to_edge_list();
+    assert_eq!(
+        native::spmm(&e.src, &e.dst, &e.w, &[1.5], 1, 1),
+        native::spmm_par(&e.src, &e.dst, &e.w, &[1.5], 1, 1, p)
+    );
+    // fully padded edge list (all weights zero) must be a no-op
+    let mut pad = rsc::graph::EdgeList::default();
+    pad.pad_to(17);
+    assert_eq!(
+        native::spmm_par(&pad.src, &pad.dst, &pad.w, &x, 3, 4, p),
+        vec![0.0; 12]
+    );
+    // zero-weight padding may carry sentinel indices outside [0, vout):
+    // the oracle never reads dst/src of a w == 0 edge, and neither may
+    // the parallel path
+    let src = vec![0, 99, -7];
+    let dst = vec![1, 99, -7];
+    let w = vec![2.0, 0.0, 0.0];
+    assert_eq!(
+        native::spmm(&src, &dst, &w, &x, 3, 4),
+        native::spmm_par(&src, &dst, &w, &x, 3, 4, p)
+    );
+}
+
+#[test]
+fn prop_parallel_matmuls_agree_with_sequential_oracle() {
+    prop::check("par-matmul-oracle", 30, |rng| {
+        let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        assert_eq!(
+            native::matmul(&a, &b, m, k, n),
+            native::matmul_par(&a, &b, m, k, n, par4())
+        );
+        assert_eq!(
+            native::matmul_tn(&a, &b, m, k, n),
+            native::matmul_tn_par(&a, &b, m, k, n, par4())
+        );
+        let bt = prop::vec_f32(rng, n * k, 1.0);
+        assert_eq!(
+            native::matmul_nt(&a, &bt, m, k, n),
+            native::matmul_nt_par(&a, &bt, m, k, n, par4())
+        );
+    });
+}
+
+#[test]
+fn prop_parallel_csr_builders_agree() {
+    let seq = Parallelism::sequential();
+    prop::check("par-csr-oracle", 30, |rng| {
+        let n = rng.range(1, 40);
+        let nnz = rng.below(4 * n + 1);
+        let triples: Vec<(u32, u32, f32)> = (0..nnz)
+            .map(|_| {
+                (
+                    rng.below(n) as u32,
+                    rng.below(n) as u32,
+                    rng.normal_f32(),
+                )
+            })
+            .collect();
+        let a = Csr::from_triples_with(n, triples.clone(), seq);
+        let b = Csr::from_triples_with(n, triples, par4());
+        assert_eq!(a, b, "from_triples");
+        assert_eq!(a.transpose_with(seq), a.transpose_with(par4()), "transpose");
+        assert_eq!(a.row_norms_with(seq), a.row_norms_with(par4()), "row_norms");
+        let keep: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        assert_eq!(
+            a.slice_columns_with(&keep, seq),
+            a.slice_columns_with(&keep, par4()),
+            "slice_columns"
+        );
+        let rows: Vec<u32> = (0..n as u32).filter(|_| rng.chance(0.5)).collect();
+        assert_eq!(
+            a.transposed_edges_for_rows_with(&rows, seq),
+            a.transposed_edges_for_rows_with(&rows, par4()),
+            "transposed_edges_for_rows"
+        );
+    });
+}
+
+#[test]
+fn prop_selection_build_is_parallelism_invariant() {
+    prop::check("par-selection", 20, |rng| {
+        let n = rng.range(2, 40);
+        let adj = Csr::random(n, 3 * n, rng);
+        let caps = vec![adj.nnz().max(1)];
+        let k = rng.below(n) + 1;
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let rows = top_k_indices(&scores, k);
+        let s = Selection::build_with(&adj, rows.clone(), &caps, Parallelism::sequential());
+        let p = Selection::build_with(&adj, rows, &caps, par4());
+        // tags are fresh per build; everything else must be identical
+        assert_eq!(s.rows, p.rows);
+        assert_eq!(s.edges, p.edges);
+        assert_eq!(s.nnz, p.nnz);
+        assert_eq!(s.cap, p.cap);
     });
 }
 
