@@ -10,7 +10,7 @@
 //! Thread count: RSC_THREADS env var, else auto-detected.
 
 use rsc::bench::harness::{header, BenchScale};
-use rsc::bench::support::native_seq_vs_par;
+use rsc::bench::support::{native_seq_vs_par, planned_vs_unplanned};
 use rsc::util::parallel::Parallelism;
 use rsc::util::stats::Table;
 
@@ -44,6 +44,37 @@ fn main() -> anyhow::Result<()> {
     println!(
         "target: >=2x on products-sim SpMM/MatMul with >=4 threads \
          (identical outputs; RSC's sampling speedups in table2 stack on top)"
+    );
+
+    header(
+        "par_speedup/plan",
+        "SpMM with per-call grouping vs a cached SpmmPlan (bitwise-equal outputs)",
+    );
+    let mut tp = Table::new(vec![
+        "dataset",
+        "nnz",
+        "unplanned ms",
+        "planned ms",
+        "speedup",
+        "plan build ms",
+        "break-even steps",
+    ]);
+    for dataset in ["reddit-sim", "products-sim"] {
+        let r = planned_vs_unplanned(dataset, iters, par)?;
+        tp.row(vec![
+            dataset.to_string(),
+            r.nnz.to_string(),
+            format!("{:.3}", r.unplanned_ms),
+            format!("{:.3}", r.planned_ms),
+            format!("{:.2}x", r.speedup()),
+            format!("{:.3}", r.build_ms),
+            format!("{:.1}", r.breakeven_steps()),
+        ]);
+    }
+    tp.print();
+    println!(
+        "the plan is built once per sample-cache refresh (epoch-wise), not per \
+         step: cached epochs pay the planned column only"
     );
     Ok(())
 }

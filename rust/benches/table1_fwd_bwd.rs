@@ -11,7 +11,7 @@ use rsc::coordinator::{AllocKind, RscConfig, RscEngine};
 use rsc::data::{load_or_generate, Split};
 use rsc::model::gcn::GcnModel;
 use rsc::model::ops::{ModelKind, OpNames};
-use rsc::runtime::{Backend, Value, XlaBackend};
+use rsc::runtime::{Backend, Value, Workspace, XlaBackend};
 use rsc::sampling::{top_k_indices, Selection};
 use rsc::train::metrics::MetricKind;
 use rsc::train::trainer::full_graph_bufs;
@@ -61,6 +61,7 @@ fn run_variant(
         .collect();
     let mut engine = RscEngine::new(rsc, &bufs.matrix, widths, epochs as u64);
     let mut tb = TimeBook::new();
+    let mut ws = Workspace::new();
     let mut best_val = f64::NEG_INFINITY;
     let mut test_at_best = f64::NAN;
     for epoch in 0..epochs {
@@ -74,11 +75,12 @@ fn run_variant(
             epoch as u64,
             0.01,
             &mut tb,
+            &mut ws,
             fwd_sel.as_deref(),
         )?;
         if epoch % 5 == 0 || epoch + 1 == epochs {
             // evaluation itself is EXACT in every variant
-            let logits = model.logits(b, &x, &bufs, &mut tb)?;
+            let logits = model.logits(b, &x, &bufs, &mut tb, &mut ws)?;
             let lf = logits.f32s()?;
             let val = metric.evaluate(&ds, lf, Split::Val);
             if val > best_val {

@@ -14,10 +14,9 @@
 
 use rsc::allocator::{Allocator, GreedyAllocator, LayerScores};
 use rsc::bench::harness::{bench_fn, header, BenchScale};
-use rsc::bench::support::{native_seq_vs_par, PAPER_DATASETS};
+use rsc::bench::support::{native_seq_vs_par, planned_vs_unplanned, PAPER_DATASETS};
 use rsc::data::load_or_generate;
 use rsc::graph::Csr;
-use rsc::model::ops::edge_values;
 use rsc::runtime::{Backend, Value, XlaBackend};
 use rsc::sampling::{pair_scores, top_k_indices, Selection};
 use rsc::util::parallel::Parallelism;
@@ -46,7 +45,7 @@ fn measure(
 
     // exact backward (= a full-edge SpMM, the same op the fwd pass runs)
     let exact = Selection::exact(matrix, caps);
-    let (es, ed, ew) = edge_values(&exact.edges);
+    let (es, ed, ew) = exact.vals.clone();
     let op = format!("spmm_bwd_nomask_{d}_cap{m}");
     b.run(&op, &[g.clone(), es.clone(), ed.clone(), ew.clone()])?;
     let bwd_exact =
@@ -68,7 +67,7 @@ fn measure(
     let ks = GreedyAllocator::default().allocate(std::slice::from_ref(&layer), budget_c);
     let rows = top_k_indices(&layer.scores, ks[0]);
     let sel = Selection::build(matrix, rows, caps);
-    let (ss, sd, sw) = edge_values(&sel.edges);
+    let (ss, sd, sw) = sel.vals.clone();
     let op_s = format!("spmm_bwd_nomask_{d}_cap{}", sel.cap);
     b.run(&op_s, &[g.clone(), ss.clone(), sd.clone(), sw.clone()])?;
     let bwd_rsc = bench_fn(&op_s, 1, iters, || {
@@ -106,6 +105,38 @@ fn main() -> anyhow::Result<()> {
         }
     }
     tn.print();
+
+    // -- section 1b: plan-cached vs per-call-grouped SpMM ---------------
+    header(
+        "table2a/plan",
+        "backward SpMM off a cached SpmmPlan vs per-call grouping",
+    );
+    let mut tpl = Table::new(vec![
+        "dataset",
+        "nnz",
+        "unplanned ms",
+        "planned ms",
+        "speedup",
+        "plan build ms",
+        "break-even steps",
+    ]);
+    for name in PAPER_DATASETS {
+        let r = planned_vs_unplanned(name, iters.min(10), par)?;
+        tpl.row(vec![
+            name.to_string(),
+            r.nnz.to_string(),
+            format!("{:.3}", r.unplanned_ms),
+            format!("{:.3}", r.planned_ms),
+            format!("{:.2}x", r.speedup()),
+            format!("{:.3}", r.build_ms),
+            format!("{:.1}", r.breakeven_steps()),
+        ]);
+    }
+    tpl.print();
+    println!(
+        "amortization: the plan build appears once per cache refresh (R steps), \
+         not per step — cached epochs execute the planned column only"
+    );
 
     // -- section 2: XLA executables, exact vs RSC-sampled bucket --------
     header("table2b", "per-op backward SpMM / SpMM_MEAN speedup at C=0.1");

@@ -7,7 +7,7 @@ use crate::bench::harness::bench_fn;
 use crate::coordinator::RscConfig;
 use crate::data::{load_or_generate, Dataset};
 use crate::model::ops::ModelKind;
-use crate::runtime::{native, Backend};
+use crate::runtime::{native, Backend, SpmmPlan};
 use crate::sampling::topk::argsort_desc_with;
 use crate::train::{train, TrainConfig, TrainResult};
 use crate::util::parallel::Parallelism;
@@ -283,4 +283,74 @@ pub fn native_seq_vs_par(
         }),
     );
     Ok(rows)
+}
+
+// ---------------------------------------------------------------------
+// planned vs unplanned SpMM (plan-cache amortization)
+// ---------------------------------------------------------------------
+
+/// One dataset's planned-vs-unplanned SpMM comparison: the per-call cost
+/// with per-call edge grouping (`spmm_par`), the per-call cost off a
+/// cached [`SpmmPlan`], and the one-off plan build cost the cache pays
+/// once per sample refresh.
+pub struct PlanRow {
+    pub d: usize,
+    pub nnz: usize,
+    pub build_ms: f64,
+    pub unplanned_ms: f64,
+    pub planned_ms: f64,
+}
+
+impl PlanRow {
+    pub fn speedup(&self) -> f64 {
+        self.unplanned_ms / self.planned_ms.max(1e-9)
+    }
+
+    /// Steps after which the one-off plan build has paid for itself
+    /// (infinite when the planned path isn't faster).
+    pub fn breakeven_steps(&self) -> f64 {
+        self.build_ms / (self.unplanned_ms - self.planned_ms).max(1e-9)
+    }
+}
+
+/// Measure planned vs unplanned backward SpMM on `dataset`'s
+/// GCN-normalized graph at gradient width d_h.  Outputs are bitwise
+/// identical (asserted); only where the grouping work happens differs.
+pub fn planned_vs_unplanned(
+    dataset: &str,
+    iters: usize,
+    par: Parallelism,
+) -> Result<PlanRow> {
+    let ds = load_or_generate(dataset, 0)?;
+    let matrix = ds.adj.gcn_normalize();
+    let (v, d) = (matrix.n, ds.cfg.d_h);
+    let edges = matrix.to_edge_list();
+    let mut rng = Rng::new(0x91A);
+    let x: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+
+    let unplanned = bench_fn("spmm unplanned", 1, iters, || {
+        std::hint::black_box(native::spmm_par(
+            &edges.src, &edges.dst, &edges.w, &x, d, v, par,
+        ));
+    });
+    let build = bench_fn("plan build", 1, iters.clamp(3, 10), || {
+        std::hint::black_box(SpmmPlan::build(&edges.dst, &edges.w, v, par));
+    });
+    let plan = SpmmPlan::build(&edges.dst, &edges.w, v, par);
+    let planned = bench_fn("spmm planned", 1, iters, || {
+        std::hint::black_box(native::spmm_planned(&plan, &edges.src, &edges.w, &x, d, par));
+    });
+    // the whole point: moving the grouping out changes nothing numerically
+    assert_eq!(
+        native::spmm_par(&edges.src, &edges.dst, &edges.w, &x, d, v, par),
+        native::spmm_planned(&plan, &edges.src, &edges.w, &x, d, par),
+        "planned SpMM must be bitwise identical"
+    );
+    Ok(PlanRow {
+        d,
+        nnz: plan.nnz(),
+        build_ms: build.median_ms,
+        unplanned_ms: unplanned.median_ms,
+        planned_ms: planned.median_ms,
+    })
 }

@@ -13,14 +13,21 @@ pub fn ranking_auc(scores: &[f32], labels: &[bool]) -> f64 {
     if n_pos == 0 || n_neg == 0 {
         return f64::NAN;
     }
-    // ranks with tie-averaging
+    // ranks with tie-averaging; total_cmp so NaN scores (possible when a
+    // diverging run feeds garbage norms) rank deterministically instead
+    // of panicking partial_cmp
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     let mut rank = vec![0f64; scores.len()];
     let mut i = 0;
     while i < idx.len() {
         let mut j = i;
-        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+        // tie grouping must use the same total order as the sort, so NaN
+        // runs average like any other tie (total_cmp equality differs
+        // from == only on NaN and the irrelevant -0.0/+0.0 split)
+        while j + 1 < idx.len()
+            && scores[idx[j + 1]].total_cmp(&scores[idx[i]]) == std::cmp::Ordering::Equal
+        {
             j += 1;
         }
         let avg = (i + j) as f64 / 2.0 + 1.0; // 1-based average rank
@@ -129,6 +136,19 @@ mod tests {
     #[test]
     fn degenerate_nan() {
         assert!(ranking_auc(&[1.0], &[true]).is_nan());
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic() {
+        // regression: partial_cmp(...).unwrap() used to panic here
+        let scores = vec![0.9, f32::NAN, 0.1, f32::NAN, 0.5];
+        let labels = vec![true, false, false, true, true];
+        let auc = ranking_auc(&scores, &labels);
+        assert!((0.0..=1.0).contains(&auc), "auc out of range: {auc}");
+        // all-NaN scores are one big tie -> AUC 1/2
+        let all_nan = vec![f32::NAN; 4];
+        let auc = ranking_auc(&all_nan, &[true, false, true, false]);
+        assert!((auc - 0.5).abs() < 1e-12, "tied NaNs should give 0.5: {auc}");
     }
 
     #[test]

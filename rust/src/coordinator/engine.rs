@@ -58,6 +58,10 @@ pub struct RscConfig {
     /// exact ops (1.0 = switching off).
     pub switch_frac: f64,
     pub allocator: AllocKind,
+    /// Cache SpMM execution plans alongside sampled/static edge lists
+    /// (`false` = the `--no-plan-cache` ablation: every SpMM re-groups
+    /// its edges per call, the pre-plan behavior).
+    pub plan_cache: bool,
 }
 
 impl Default for RscConfig {
@@ -70,6 +74,7 @@ impl Default for RscConfig {
             alloc_every: 10,
             switch_frac: 0.8,
             allocator: AllocKind::Greedy,
+            plan_cache: true,
         }
     }
 }

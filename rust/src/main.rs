@@ -8,7 +8,9 @@
 //!
 //! Shared flags: `--threads N` caps the native runtime's worker pool
 //! (0 = auto-detect, honouring cgroup CPU quotas; results are identical
-//! for any value — see DESIGN.md §Parallel runtime).
+//! for any value — see DESIGN.md §Parallel runtime).  `--no-plan-cache`
+//! ablates the SpMM plan cache (every kernel call re-groups its edges;
+//! results are bit-identical either way — DESIGN.md §Plan cache).
 //!
 //! Examples:
 //!   rsc train --dataset reddit-sim --model gcn --epochs 200 --rsc --budget 0.1
@@ -98,6 +100,9 @@ fn rsc_config(args: &Args) -> Result<RscConfig> {
         },
         allocator: AllocKind::parse(&args.str_or("allocator", "greedy"))
             .ok_or_else(|| anyhow!("bad --allocator (greedy|uniform|dp)"))?,
+        // Ablation parity with --no-cache: drop the SpMM plan cache so
+        // every kernel call re-groups its edges (the pre-plan behavior).
+        plan_cache: !args.bool_or("no-plan-cache", false)?,
     })
 }
 
@@ -142,6 +147,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "cache hits/misses: {}/{}  alloc {:.1}ms  sampling {:.1}ms",
         res.cache_hits, res.cache_misses, res.alloc_ms, res.sample_ms
+    );
+    println!(
+        "plan cache hits/builds: {}/{}  workspace reused/fresh: {}/{}",
+        res.plan_hits, res.plan_builds, res.ws.reused, res.ws.fresh
     );
     println!("op-class time (ms total):");
     for label in res.tb.labels().map(str::to_string).collect::<Vec<_>>() {

@@ -3,6 +3,13 @@
 //! the output layer).  Backward: every nabla(HW) = SpMM(A_hat^T, ...) is
 //! routed through the RSC engine's plan — exact or sampled bucket.
 //!
+//! Hot-loop contract (shared by all three models): ops run through
+//! [`Backend::run_ctx`] with *borrowed* inputs (no per-call cloning of
+//! activations, weights or edge lists), a cached [`SpmmPlan`] for the
+//! op's edge operand, and the trainer-owned [`Workspace`] — retired
+//! activations/gradients are recycled at the end of each step so the
+//! steady-state step allocates no tensor buffers.
+//!
 //! Optionally the *forward* SpMMs can run on sampled edges too (the
 //! `fwd_sel` argument) — only used by the Table 1 experiment, which shows
 //! why that is a bad idea (bias through the nonlinearity).
@@ -10,13 +17,14 @@
 use crate::coordinator::RscEngine;
 use crate::data::DatasetCfg;
 use crate::graph::Csr;
-use crate::model::ops::{edge_values, GraphBufs, OpNames};
+use crate::model::ops::{GraphBufs, OpNames};
 use crate::model::params::{Param, ParamSet};
-use crate::runtime::{Backend, Value};
+use crate::runtime::{Backend, ExecCtx, SpmmPlan, Value, Workspace};
 use crate::sampling::Selection;
 use crate::util::rng::Rng;
 use crate::util::timer::TimeBook;
 use crate::Result;
+use std::sync::Arc;
 
 pub struct GcnModel {
     pub dims: Vec<usize>,
@@ -41,7 +49,8 @@ impl GcnModel {
         self.dims.len() - 1
     }
 
-    /// Forward pass; returns activations [h0 = x, h1, ..., hL].
+    /// Forward pass; returns the layer outputs [h1, ..., hL] (the input
+    /// x is layer 0's activation and stays borrowed by the caller).
     /// `fwd_sel`: per-layer sampled selections for forward approximation
     /// (Table 1); None = exact forward (the normal RSC configuration).
     pub fn forward(
@@ -51,20 +60,30 @@ impl GcnModel {
         bufs: &GraphBufs,
         fwd_sel: Option<&[Selection]>,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<Vec<Value>> {
         let l_total = self.layers();
-        let mut acts = vec![x.clone()];
+        let mut hs: Vec<Value> = Vec::with_capacity(l_total);
         for l in 0..l_total {
             let relu = l < l_total - 1;
             let w = self.params.get(l).value();
-            let h = acts[l].clone();
+            let h: &Value = if l == 0 { x } else { &hs[l - 1] };
             let out = tb.scope("fwd", || -> Result<Vec<Value>> {
                 match fwd_sel {
                     None => {
                         let op = self.names.gcn_fwd(self.dims[l], self.dims[l + 1], relu);
-                        let (s, d, ww) = bufs.fwd.clone();
+                        let (s, d, ww) = &bufs.fwd;
                         let t = bufs.fwd_tags;
-                        b.run_tagged(&op, &[h, w, s, d, ww], &[0, 0, t, t + 1, t + 2])
+                        let plan = bufs.fwd_spmm_plan();
+                        b.run_ctx(
+                            &op,
+                            &[h, w, s, d, ww],
+                            ExecCtx {
+                                tags: &[0, 0, t, t + 1, t + 2],
+                                plan: plan.as_deref(),
+                                ws: Some(&mut *ws),
+                            },
+                        )
                     }
                     Some(sels) => {
                         let sel = &sels[l];
@@ -78,15 +97,23 @@ impl GcnModel {
                                 sel.cap,
                             )
                         };
-                        let (s, d, ww) = edge_values(&sel.edges);
+                        let (s, d, ww) = &sel.vals;
                         let t = sel.tag;
-                        b.run_tagged(&op, &[h, w, s, d, ww], &[0, 0, t, t + 1, t + 2])
+                        b.run_ctx(
+                            &op,
+                            &[h, w, s, d, ww],
+                            ExecCtx {
+                                tags: &[0, 0, t, t + 1, t + 2],
+                                plan: None,
+                                ws: Some(&mut *ws),
+                            },
+                        )
                     }
                 }
             })?;
-            acts.push(out.into_iter().next().unwrap());
+            hs.push(out.into_iter().next().unwrap());
         }
-        Ok(acts)
+        Ok(hs)
     }
 
     /// Inference logits.
@@ -96,8 +123,12 @@ impl GcnModel {
         x: &Value,
         bufs: &GraphBufs,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<Value> {
-        Ok(self.forward(b, x, bufs, None, tb)?.pop().unwrap())
+        let mut hs = self.forward(b, x, bufs, None, tb, ws)?;
+        let out = hs.pop().unwrap();
+        ws.recycle_all(hs);
+        Ok(out)
     }
 
     /// One training step: forward, loss, RSC-planned backward, Adam.
@@ -114,70 +145,100 @@ impl GcnModel {
         step: u64,
         lr: f32,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
         fwd_sel: Option<&[Selection]>,
     ) -> Result<f32> {
         let l_total = self.layers();
-        let acts = self.forward(b, x, bufs, fwd_sel, tb)?;
+        let hs = self.forward(b, x, bufs, fwd_sel, tb, ws)?;
         let loss_out = tb.scope("loss", || {
-            b.run(
+            b.run_ctx(
                 &self.names.loss(self.multilabel),
-                &[acts[l_total].clone(), labels.clone(), mask.clone()],
+                &[&hs[l_total - 1], labels, mask],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
         let loss = loss_out[0].item_f32()?;
-        let mut g = loss_out.into_iter().nth(1).unwrap();
+        let mut it = loss_out.into_iter();
+        ws.recycle(it.next().unwrap());
+        let mut g = it.next().unwrap();
 
         let mut grads: Vec<Option<Value>> = (0..l_total).map(|_| None).collect();
         for l in (0..l_total).rev() {
             let d = self.dims[l + 1];
             if engine.norms_wanted(step) {
                 let norms = tb.scope("norms", || {
-                    b.run(&self.names.row_norms(d), &[g.clone()])
+                    b.run_ctx(
+                        &self.names.row_norms(d),
+                        &[&g],
+                        ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                    )
                 })?;
                 engine.observe_norms(l, norms.into_iter().next().unwrap().into_f32s()?);
             }
-            let (cap, ev, t) =
+            let (cap, ev, t, sp) =
                 plan_edges(engine, l, step, &bufs.matrix, &bufs.caps, &bufs.exact);
             let gj = tb.scope("bwd_spmm", || -> Result<Vec<Value>> {
                 if l == l_total - 1 {
                     let op = self.names.spmm_bwd_nomask(d, cap);
-                    b.run_tagged(&op, &[g.clone(), ev.0, ev.1, ev.2], &[0, t, t + 1, t + 2])
+                    b.run_ctx(
+                        &op,
+                        &[&g, &ev.0, &ev.1, &ev.2],
+                        ExecCtx {
+                            tags: &[0, t, t + 1, t + 2],
+                            plan: sp.as_deref(),
+                            ws: Some(&mut *ws),
+                        },
+                    )
                 } else {
                     let op = self.names.spmm_bwd_mask(d, cap);
-                    b.run_tagged(
+                    b.run_ctx(
                         &op,
-                        &[acts[l + 1].clone(), g.clone(), ev.0, ev.1, ev.2],
-                        &[0, 0, t, t + 1, t + 2],
+                        &[&hs[l], &g, &ev.0, &ev.1, &ev.2],
+                        ExecCtx {
+                            tags: &[0, 0, t, t + 1, t + 2],
+                            plan: sp.as_deref(),
+                            ws: Some(&mut *ws),
+                        },
                     )
                 }
             })?;
             let gj = gj.into_iter().next().unwrap();
+            let h_in: &Value = if l == 0 { x } else { &hs[l - 1] };
             let mm = tb.scope("bwd_dense", || {
-                b.run(
+                b.run_ctx(
                     &self.names.gcn_bwd_mm(self.dims[l], self.dims[l + 1]),
-                    &[acts[l].clone(), gj, self.params.get(l).value()],
+                    &[h_in, &gj, self.params.get(l).value()],
+                    ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
                 )
             })?;
+            ws.recycle(gj);
             let mut it = mm.into_iter();
             grads[l] = Some(it.next().unwrap());
-            g = it.next().unwrap();
+            let g_new = it.next().unwrap();
+            ws.recycle(std::mem::replace(&mut g, g_new));
         }
         let grads: Vec<Value> = grads.into_iter().map(|g| g.unwrap()).collect();
-        tb.scope("adam", || self.params.adam_all(b, grads, lr))?;
+        tb.scope("adam", || self.params.adam_all(b, grads, lr, Some(&mut *ws)))?;
+        ws.recycle(g);
+        ws.recycle_all(hs);
         Ok(loss)
     }
 }
 
-/// Resolve the engine plan into (bucket cap, edge Values, immutability
-/// tag), releasing the engine borrow before the caller touches it again.
-pub(crate) fn plan_edges(
-    engine: &mut RscEngine,
+/// Resolve the engine plan into (bucket cap, borrowed edge Values,
+/// immutability tag, cached SpMM plan).  The edge Values stay borrowed
+/// from the engine's cached selection — no per-call cloning; the SpMM
+/// plan is `None` under the `--no-plan-cache` ablation.
+pub(crate) fn plan_edges<'a>(
+    engine: &'a mut RscEngine,
     site: usize,
     step: u64,
     matrix: &Csr,
     caps: &[usize],
-    exact: &Selection,
-) -> (usize, (Value, Value, Value), u64) {
+    exact: &'a Selection,
+) -> (usize, &'a (Value, Value, Value), u64, Option<Arc<SpmmPlan>>) {
+    let par = engine.parallelism();
+    let plan_cache = engine.cfg.plan_cache;
     let plan = engine.plan(site, step, matrix, caps, exact);
     let sel = plan.selection();
     if std::env::var_os("RSC_DEBUG_PLAN").is_some() {
@@ -188,5 +249,6 @@ pub(crate) fn plan_edges(
             sel.nnz
         );
     }
-    (sel.cap, edge_values(&sel.edges), sel.tag)
+    let spmm_plan = if plan_cache { Some(sel.spmm_plan(par)) } else { None };
+    (sel.cap, &sel.vals, sel.tag, spmm_plan)
 }

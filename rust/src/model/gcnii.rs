@@ -8,13 +8,15 @@
 //! with an input projection H^0 = relu(X W_in) and output projection
 //! logits = H^L W_out.  Every propagation layer's backward SpMM is an RSC
 //! site; nabla H^0 accumulates a residual contribution from every layer.
+//! Hot-loop contract as in `gcn.rs`: borrowed `run_ctx` inputs, cached
+//! SpMM plans, workspace-recycled outputs.
 
 use crate::coordinator::RscEngine;
 use crate::data::DatasetCfg;
 use crate::model::gcn::plan_edges;
 use crate::model::ops::{GraphBufs, OpNames};
 use crate::model::params::{Param, ParamSet};
-use crate::runtime::{Backend, Value};
+use crate::runtime::{Backend, ExecCtx, Value, Workspace};
 use crate::util::rng::Rng;
 use crate::util::timer::TimeBook;
 use crate::Result;
@@ -57,31 +59,32 @@ impl GcniiModel {
         x: &Value,
         bufs: &GraphBufs,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<(Vec<Value>, Vec<Value>, Value)> {
         let h0 = tb.scope("fwd", || {
-            b.run(
+            b.run_ctx(
                 &self.names.dense_fwd(self.d_in, self.d_h, true),
-                &[x.clone(), self.params.get(0).value()],
+                &[x, self.params.get(0).value()],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
         let h0 = h0.into_iter().next().unwrap();
-        let mut acts = vec![h0.clone()];
+        let mut acts = vec![h0];
         let mut us = Vec::with_capacity(self.depth);
         for l in 1..=self.depth {
-            let (s, d, w) = bufs.fwd.clone();
             let t = bufs.fwd_tags;
+            let plan = bufs.fwd_spmm_plan();
+            let wl = self.params.get(l).value();
             let out = tb.scope("fwd", || {
-                b.run_tagged(
+                let (s, d, w) = &bufs.fwd;
+                b.run_ctx(
                     &self.names.gcnii_fwd(self.d_h, l),
-                    &[
-                        acts[l - 1].clone(),
-                        h0.clone(),
-                        self.params.get(l).value(),
-                        s,
-                        d,
-                        w,
-                    ],
-                    &[0, 0, 0, t, t + 1, t + 2],
+                    &[&acts[l - 1], &acts[0], wl, s, d, w],
+                    ExecCtx {
+                        tags: &[0, 0, 0, t, t + 1, t + 2],
+                        plan: plan.as_deref(),
+                        ws: Some(&mut *ws),
+                    },
                 )
             })?;
             let mut it = out.into_iter();
@@ -89,9 +92,10 @@ impl GcniiModel {
             us.push(it.next().unwrap());
         }
         let logits = tb.scope("fwd", || {
-            b.run(
+            b.run_ctx(
                 &self.names.dense_fwd(self.d_h, self.n_class, false),
-                &[acts[self.depth].clone(), self.params.get(self.depth + 1).value()],
+                &[&acts[self.depth], self.params.get(self.depth + 1).value()],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
         Ok((acts, us, logits.into_iter().next().unwrap()))
@@ -103,8 +107,12 @@ impl GcniiModel {
         x: &Value,
         bufs: &GraphBufs,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<Value> {
-        Ok(self.forward(b, x, bufs, tb)?.2)
+        let (acts, us, logits) = self.forward(b, x, bufs, tb, ws)?;
+        ws.recycle_all(acts);
+        ws.recycle_all(us);
+        Ok(logits)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -119,99 +127,132 @@ impl GcniiModel {
         step: u64,
         lr: f32,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<f32> {
-        let (acts, us, logits) = self.forward(b, x, bufs, tb)?;
+        let (acts, us, logits) = self.forward(b, x, bufs, tb, ws)?;
         let v = acts[0].shape()[0];
         let loss_out = tb.scope("loss", || {
-            b.run(
+            b.run_ctx(
                 &self.names.loss(self.multilabel),
-                &[logits, labels.clone(), mask.clone()],
+                &[&logits, labels, mask],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
+        ws.recycle(logits);
         let loss = loss_out[0].item_f32()?;
-        let glogits = loss_out.into_iter().nth(1).unwrap();
+        let mut it = loss_out.into_iter();
+        ws.recycle(it.next().unwrap());
+        let glogits = it.next().unwrap();
 
         let n_params = self.depth + 2;
         let mut grads: Vec<Option<Value>> = (0..n_params).map(|_| None).collect();
 
         // output projection (no relu)
         let out = tb.scope("bwd_dense", || {
-            b.run(
+            b.run_ctx(
                 &self.names.dense_bwd(self.d_h, self.n_class, false),
                 &[
-                    acts[self.depth].clone(),
-                    glogits,
+                    &acts[self.depth],
+                    &glogits,
                     self.params.get(self.depth + 1).value(),
                 ],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
+        ws.recycle(glogits);
         let mut it = out.into_iter();
         grads[self.depth + 1] = Some(it.next().unwrap());
         let mut g = it.next().unwrap();
 
-        let mut gh0_acc = Value::zeros_f32(&[v, self.d_h]);
+        // the residual accumulator is the one buffer that must start at
+        // zero (everything else is fully overwritten by its kernel)
+        let mut gh0_acc = Value::mat_f32(v, self.d_h, ws.take_zeroed_f32(v * self.d_h));
         for l in (1..=self.depth).rev() {
             let out = tb.scope("bwd_dense", || {
-                b.run(
+                b.run_ctx(
                     &self.names.gcnii_bwd_pre(self.d_h, l),
-                    &[
-                        acts[l].clone(),
-                        g.clone(),
-                        us[l - 1].clone(),
-                        self.params.get(l).value(),
-                    ],
+                    &[&acts[l], &g, &us[l - 1], self.params.get(l).value()],
+                    ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
                 )
             })?;
             let mut it = out.into_iter();
             grads[l] = Some(it.next().unwrap());
             let gp = it.next().unwrap();
             let gh0c = it.next().unwrap();
-            gh0_acc = tb
+            let acc_new = tb
                 .scope("bwd_dense", || {
-                    b.run(&self.names.add(self.d_h), &[gh0_acc.clone(), gh0c])
+                    b.run_ctx(
+                        &self.names.add(self.d_h),
+                        &[&gh0_acc, &gh0c],
+                        ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                    )
                 })?
                 .into_iter()
                 .next()
                 .unwrap();
+            ws.recycle(std::mem::replace(&mut gh0_acc, acc_new));
+            ws.recycle(gh0c);
 
             let site = l - 1;
             if engine.norms_wanted(step) {
                 let norms = tb.scope("norms", || {
-                    b.run(&self.names.row_norms(self.d_h), &[gp.clone()])
+                    b.run_ctx(
+                        &self.names.row_norms(self.d_h),
+                        &[&gp],
+                        ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                    )
                 })?;
                 engine.observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
             }
-            let (cap, ev, t) =
+            let (cap, ev, t, sp) =
                 plan_edges(engine, site, step, &bufs.matrix, &bufs.caps, &bufs.exact);
             let out = tb.scope("bwd_spmm", || {
-                b.run_tagged(
+                b.run_ctx(
                     &self.names.spmm_bwd_nomask(self.d_h, cap),
-                    &[gp, ev.0, ev.1, ev.2],
-                    &[0, t, t + 1, t + 2],
+                    &[&gp, &ev.0, &ev.1, &ev.2],
+                    ExecCtx {
+                        tags: &[0, t, t + 1, t + 2],
+                        plan: sp.as_deref(),
+                        ws: Some(&mut *ws),
+                    },
                 )
             })?;
-            g = out.into_iter().next().unwrap();
+            ws.recycle(gp);
+            let g_new = out.into_iter().next().unwrap();
+            ws.recycle(std::mem::replace(&mut g, g_new));
         }
         // layer 1's input is H^0 itself: its spmm output joins the residual sum
-        gh0_acc = tb
+        let acc_new = tb
             .scope("bwd_dense", || {
-                b.run(&self.names.add(self.d_h), &[gh0_acc.clone(), g.clone()])
+                b.run_ctx(
+                    &self.names.add(self.d_h),
+                    &[&gh0_acc, &g],
+                    ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                )
             })?
             .into_iter()
             .next()
             .unwrap();
+        ws.recycle(std::mem::replace(&mut gh0_acc, acc_new));
+        ws.recycle(g);
 
         // input projection (relu)
         let out = tb.scope("bwd_dense", || {
-            b.run(
+            b.run_ctx(
                 &self.names.dense_bwd(self.d_in, self.d_h, true),
-                &[x.clone(), acts[0].clone(), gh0_acc, self.params.get(0).value()],
+                &[x, &acts[0], &gh0_acc, self.params.get(0).value()],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
-        grads[0] = Some(out.into_iter().next().unwrap());
+        ws.recycle(gh0_acc);
+        let mut it = out.into_iter();
+        grads[0] = Some(it.next().unwrap());
+        ws.recycle_all(it);
 
         let grads: Vec<Value> = grads.into_iter().map(|g| g.unwrap()).collect();
-        tb.scope("adam", || self.params.adam_all(b, grads, lr))?;
+        tb.scope("adam", || self.params.adam_all(b, grads, lr, Some(&mut *ws)))?;
+        ws.recycle_all(acts);
+        ws.recycle_all(us);
         Ok(loss)
     }
 }

@@ -6,8 +6,11 @@
 
 use crate::data::DatasetCfg;
 use crate::graph::{Csr, EdgeList};
-use crate::runtime::Value;
+use crate::runtime::plan::PlanCell;
+use crate::runtime::{SpmmPlan, Value};
 use crate::sampling::Selection;
+use crate::util::parallel::Parallelism;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelKind {
@@ -181,6 +184,14 @@ pub fn edge_values(e: &EdgeList) -> (Value, Value, Value) {
 
 /// Per-run graph buffers: the normalized matrix, its forward edge values
 /// and the exact backward selection (full transposed edges).
+///
+/// Both static edge lists carry plan caches: the forward edges get their
+/// own [`PlanCell`] here, the exact backward edges ride on
+/// [`Selection`]'s.  Built on first use, reused for the entire run —
+/// these two matrices never change, so cached epochs execute their SpMMs
+/// with zero grouping work.  `plan_cache` is the ablation switch
+/// (`--no-plan-cache`): off, every accessor returns `None` and the
+/// runtime falls back to per-call grouping.
 pub struct GraphBufs {
     /// Normalized matrix, row-major (GCN: sym-norm Â; SAGE: mean matrix).
     pub matrix: Csr,
@@ -193,6 +204,13 @@ pub struct GraphBufs {
     pub exact: Selection,
     /// Bucket ladder for this graph shape.
     pub caps: Vec<usize>,
+    /// Plan-cache ablation switch (default on).
+    pub plan_cache: bool,
+    /// Parallelism used to shape the forward plan's chunking (captured
+    /// from the process global at construction; see
+    /// [`GraphBufs::with_parallelism`]).
+    par: Parallelism,
+    fwd_plan: PlanCell,
 }
 
 impl GraphBufs {
@@ -210,6 +228,9 @@ impl GraphBufs {
             exact,
             matrix,
             caps,
+            plan_cache: true,
+            par: Parallelism::default(),
+            fwd_plan: PlanCell::new(),
         }
     }
 
@@ -225,7 +246,34 @@ impl GraphBufs {
             exact,
             matrix,
             caps,
+            plan_cache: true,
+            par: Parallelism::default(),
+            fwd_plan: PlanCell::new(),
         }
+    }
+
+    /// Override the [`Parallelism`] shaping the forward plan's chunk
+    /// layout (library users configuring threads per-instance rather
+    /// than via the process global; results are identical either way).
+    pub fn with_parallelism(mut self, par: Parallelism) -> GraphBufs {
+        self.par = par;
+        self
+    }
+
+    /// The cached plan for the forward edge list (`None` when the plan
+    /// cache is ablated away).
+    pub fn fwd_spmm_plan(&self) -> Option<Arc<SpmmPlan>> {
+        if !self.plan_cache {
+            return None;
+        }
+        let (_, dst, w) = &self.fwd;
+        Some(self.fwd_plan.get_or_build(
+            dst.i32s().expect("fwd dst is i32"),
+            w.f32s().expect("fwd w is f32"),
+            self.matrix.n,
+            self.fwd_tags,
+            self.par,
+        ))
     }
 }
 

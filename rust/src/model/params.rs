@@ -1,6 +1,13 @@
 //! Weights + Adam state, updated through the AOT `adam_{r}x{c}` ops.
+//!
+//! Parameters and optimizer moments are stored as backend [`Value`]s so
+//! the hot loop can pass them *borrowed* into [`Backend::run_ctx`] —
+//! before this, every Adam step cloned w/m/v just to build the op inputs.
+//! With a [`Workspace`] attached, the retired w/m/v buffers and the
+//! consumed gradients are recycled, so a steady-state optimizer step
+//! performs no buffer allocation at all.
 
-use crate::runtime::{Backend, Value};
+use crate::runtime::{Backend, ExecCtx, Value, Workspace};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -9,9 +16,9 @@ pub struct Param {
     pub name: String,
     pub rows: usize,
     pub cols: usize,
-    pub w: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
+    w: Value,
+    m: Value,
+    v: Value,
 }
 
 impl Param {
@@ -25,40 +32,49 @@ impl Param {
             name: name.to_string(),
             rows,
             cols,
-            w,
-            m: vec![0.0; rows * cols],
-            v: vec![0.0; rows * cols],
+            w: Value::mat_f32(rows, cols, w),
+            m: Value::mat_f32(rows, cols, vec![0.0; rows * cols]),
+            v: Value::mat_f32(rows, cols, vec![0.0; rows * cols]),
         }
     }
 
-    pub fn value(&self) -> Value {
-        Value::mat_f32(self.rows, self.cols, self.w.clone())
+    /// The current weights, borrowed (hot-path op input).
+    pub fn value(&self) -> &Value {
+        &self.w
     }
 
-    /// Apply one Adam step through the backend op.
+    /// The raw weight slice (tests, serialization).
+    pub fn weights(&self) -> &[f32] {
+        self.w.f32s().expect("param weights are f32")
+    }
+
+    /// Apply one Adam step through the backend op.  `grad` is consumed;
+    /// with a workspace, it and the retired w/m/v buffers are recycled.
     pub fn adam_step(
         &mut self,
         backend: &dyn Backend,
         grad: Value,
-        t: u64,
-        lr: f32,
+        t_val: &Value,
+        lr_val: &Value,
+        mut ws: Option<&mut Workspace>,
     ) -> Result<()> {
         let op = format!("adam_{}x{}", self.rows, self.cols);
-        let out = backend.run(
+        let out = backend.run_ctx(
             &op,
-            &[
-                self.value(),
-                Value::mat_f32(self.rows, self.cols, self.m.clone()),
-                Value::mat_f32(self.rows, self.cols, self.v.clone()),
-                grad,
-                Value::scalar_f32(t as f32),
-                Value::scalar_f32(lr),
-            ],
+            &[&self.w, &self.m, &self.v, &grad, t_val, lr_val],
+            ExecCtx {
+                tags: &[],
+                plan: None,
+                ws: ws.as_mut().map(|w| &mut **w),
+            },
         )?;
         let mut it = out.into_iter();
-        self.w = it.next().unwrap().into_f32s()?;
-        self.m = it.next().unwrap().into_f32s()?;
-        self.v = it.next().unwrap().into_f32s()?;
+        let old_w = std::mem::replace(&mut self.w, it.next().unwrap());
+        let old_m = std::mem::replace(&mut self.m, it.next().unwrap());
+        let old_v = std::mem::replace(&mut self.v, it.next().unwrap());
+        if let Some(ws) = ws {
+            ws.recycle_all([old_w, old_m, old_v, grad]);
+        }
         Ok(())
     }
 }
@@ -86,11 +102,14 @@ impl ParamSet {
         backend: &dyn Backend,
         grads: Vec<Value>,
         lr: f32,
+        mut ws: Option<&mut Workspace>,
     ) -> Result<()> {
         assert_eq!(grads.len(), self.params.len(), "gradient count mismatch");
         self.step += 1;
+        let t_val = Value::scalar_f32(self.step as f32);
+        let lr_val = Value::scalar_f32(lr);
         for (p, g) in self.params.iter_mut().zip(grads) {
-            p.adam_step(backend, g, self.step, lr)?;
+            p.adam_step(backend, g, &t_val, &lr_val, ws.as_mut().map(|w| &mut **w))?;
         }
         Ok(())
     }
@@ -109,11 +128,12 @@ mod tests {
         let mut rng = Rng::new(1);
         let p = Param::glorot("w", 20, 30, &mut rng);
         let limit = (6.0 / 50.0f64).sqrt() as f32;
-        assert!(p.w.iter().all(|&x| x.abs() <= limit));
-        assert!(p.w.iter().any(|&x| x != 0.0));
+        assert!(p.weights().iter().all(|&x| x.abs() <= limit));
+        assert!(p.weights().iter().any(|&x| x != 0.0));
+        assert_eq!(p.value().shape(), &[20, 30]);
         let mut rng2 = Rng::new(1);
         let p2 = Param::glorot("w", 20, 30, &mut rng2);
-        assert_eq!(p.w, p2.w);
+        assert_eq!(p.weights(), p2.weights());
     }
 
     #[test]

@@ -10,14 +10,15 @@
 //! has `layers - 1` backward-SpMM sites (site i = layer i+1).
 //!
 //! Also the backbone for GraphSAINT (same ops with the `saint_` prefix on
-//! padded subgraphs).
+//! padded subgraphs).  Hot-loop contract as in `gcn.rs`: borrowed
+//! `run_ctx` inputs, cached SpMM plans, workspace-recycled outputs.
 
 use crate::coordinator::RscEngine;
 use crate::data::DatasetCfg;
 use crate::model::gcn::plan_edges;
 use crate::model::ops::{GraphBufs, OpNames};
 use crate::model::params::{Param, ParamSet};
-use crate::runtime::{Backend, Value};
+use crate::runtime::{Backend, ExecCtx, Value, Workspace};
 use crate::util::rng::Rng;
 use crate::util::timer::TimeBook;
 use crate::Result;
@@ -47,41 +48,44 @@ impl SageModel {
         self.dims.len() - 1
     }
 
-    /// Returns (activations [h0..hL], aggregated means [m0..m_{L-1}]).
+    /// Returns (layer outputs [h1..hL], aggregated means [m0..m_{L-1}]);
+    /// the input x stays borrowed by the caller.
     pub fn forward(
         &self,
         b: &dyn Backend,
         x: &Value,
         bufs: &GraphBufs,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<(Vec<Value>, Vec<Value>)> {
         let l_total = self.layers();
-        let mut acts = vec![x.clone()];
+        let mut hs: Vec<Value> = Vec::with_capacity(l_total);
         let mut ms = Vec::with_capacity(l_total);
         for l in 0..l_total {
             let relu = l < l_total - 1;
             let op = self.names.sage_fwd(self.dims[l], self.dims[l + 1], relu);
-            let (s, d, w) = bufs.fwd.clone();
+            let h: &Value = if l == 0 { x } else { &hs[l - 1] };
+            let w1 = self.params.get(2 * l).value();
+            let w2 = self.params.get(2 * l + 1).value();
             let t = bufs.fwd_tags;
+            let plan = bufs.fwd_spmm_plan();
             let out = tb.scope("fwd", || {
-                b.run_tagged(
+                let (s, d, w) = &bufs.fwd;
+                b.run_ctx(
                     &op,
-                    &[
-                        acts[l].clone(),
-                        self.params.get(2 * l).value(),
-                        self.params.get(2 * l + 1).value(),
-                        s,
-                        d,
-                        w,
-                    ],
-                    &[0, 0, 0, t, t + 1, t + 2],
+                    &[h, w1, w2, s, d, w],
+                    ExecCtx {
+                        tags: &[0, 0, 0, t, t + 1, t + 2],
+                        plan: plan.as_deref(),
+                        ws: Some(&mut *ws),
+                    },
                 )
             })?;
             let mut it = out.into_iter();
-            acts.push(it.next().unwrap());
+            hs.push(it.next().unwrap());
             ms.push(it.next().unwrap());
         }
-        Ok((acts, ms))
+        Ok((hs, ms))
     }
 
     pub fn logits(
@@ -90,8 +94,13 @@ impl SageModel {
         x: &Value,
         bufs: &GraphBufs,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<Value> {
-        Ok(self.forward(b, x, bufs, tb)?.0.pop().unwrap())
+        let (mut hs, ms) = self.forward(b, x, bufs, tb, ws)?;
+        let out = hs.pop().unwrap();
+        ws.recycle_all(hs);
+        ws.recycle_all(ms);
+        Ok(out)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -106,17 +115,21 @@ impl SageModel {
         step: u64,
         lr: f32,
         tb: &mut TimeBook,
+        ws: &mut Workspace,
     ) -> Result<f32> {
         let l_total = self.layers();
-        let (acts, ms) = self.forward(b, x, bufs, tb)?;
+        let (hs, ms) = self.forward(b, x, bufs, tb, ws)?;
         let loss_out = tb.scope("loss", || {
-            b.run(
+            b.run_ctx(
                 &self.names.loss(self.multilabel),
-                &[acts[l_total].clone(), labels.clone(), mask.clone()],
+                &[&hs[l_total - 1], labels, mask],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
         let loss = loss_out[0].item_f32()?;
-        let mut g = loss_out.into_iter().nth(1).unwrap();
+        let mut it = loss_out.into_iter();
+        ws.recycle(it.next().unwrap());
+        let mut g = it.next().unwrap();
 
         let mut grads: Vec<Option<Value>> = (0..2 * l_total).map(|_| None).collect();
         for l in (0..l_total).rev() {
@@ -124,12 +137,19 @@ impl SageModel {
             let op = self.names.sage_bwd_pre(self.dims[l], self.dims[l + 1], masked);
             let w1 = self.params.get(2 * l).value();
             let w2 = self.params.get(2 * l + 1).value();
-            let inputs: Vec<Value> = if masked {
-                vec![acts[l + 1].clone(), g.clone(), acts[l].clone(), ms[l].clone(), w1, w2]
-            } else {
-                vec![g.clone(), acts[l].clone(), ms[l].clone(), w1, w2]
-            };
-            let out = tb.scope("bwd_dense", || b.run(&op, &inputs))?;
+            let h_in: &Value = if l == 0 { x } else { &hs[l - 1] };
+            let out = tb.scope("bwd_dense", || {
+                let inputs: Vec<&Value> = if masked {
+                    vec![&hs[l], &g, h_in, &ms[l], w1, w2]
+                } else {
+                    vec![&g, h_in, &ms[l], w1, w2]
+                };
+                b.run_ctx(
+                    &op,
+                    &inputs,
+                    ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                )
+            })?;
             let mut it = out.into_iter();
             grads[2 * l] = Some(it.next().unwrap());
             grads[2 * l + 1] = Some(it.next().unwrap());
@@ -141,26 +161,39 @@ impl SageModel {
                 let d = self.dims[l];
                 if engine.norms_wanted(step) {
                     let norms = tb.scope("norms", || {
-                        b.run(&self.names.row_norms(d), &[gm.clone()])
+                        b.run_ctx(
+                            &self.names.row_norms(d),
+                            &[&gm],
+                            ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                        )
                     })?;
                     engine
                         .observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
                 }
-                let (cap, ev, t) =
+                let (cap, ev, t, sp) =
                     plan_edges(engine, site, step, &bufs.matrix, &bufs.caps, &bufs.exact);
                 let op = self.names.spmm_bwd_acc(d, cap);
                 let out = tb.scope("bwd_spmm", || {
-                    b.run_tagged(
+                    b.run_ctx(
                         &op,
-                        &[gh_a, gm, ev.0, ev.1, ev.2],
-                        &[0, 0, t, t + 1, t + 2],
+                        &[&gh_a, &gm, &ev.0, &ev.1, &ev.2],
+                        ExecCtx {
+                            tags: &[0, 0, t, t + 1, t + 2],
+                            plan: sp.as_deref(),
+                            ws: Some(&mut *ws),
+                        },
                     )
                 })?;
-                g = out.into_iter().next().unwrap();
+                let g_new = out.into_iter().next().unwrap();
+                ws.recycle(std::mem::replace(&mut g, g_new));
             }
+            ws.recycle_all([gm, gh_a]);
         }
         let grads: Vec<Value> = grads.into_iter().map(|g| g.unwrap()).collect();
-        tb.scope("adam", || self.params.adam_all(b, grads, lr))?;
+        tb.scope("adam", || self.params.adam_all(b, grads, lr, Some(&mut *ws)))?;
+        ws.recycle(g);
+        ws.recycle_all(hs);
+        ws.recycle_all(ms);
         Ok(loss)
     }
 }

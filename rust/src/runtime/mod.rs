@@ -16,7 +16,9 @@
 
 pub mod manifest;
 pub mod native;
+pub mod plan;
 pub mod value;
+pub mod workspace;
 #[cfg(feature = "xla")]
 pub mod xla;
 #[cfg(not(feature = "xla"))]
@@ -25,10 +27,30 @@ pub mod xla;
 
 pub use manifest::{Manifest, OpDef};
 pub use native::NativeBackend;
+pub use plan::{plan_stats, reset_plan_stats, PlanCell, SpmmPlan};
 pub use value::Value;
+pub use workspace::{Workspace, WorkspaceStats};
 pub use xla::XlaBackend;
 
 use crate::Result;
+
+/// Everything a hot-path [`Backend::run_ctx`] call can carry beyond the
+/// op inputs: immutability tags (see [`Backend::run_tagged`]), a pre-built
+/// SpMM execution plan for the op's edge-list operand, and the caller's
+/// reusable output [`Workspace`].  All three are optional extras — a
+/// backend that ignores them (the XLA path) stays correct, just slower.
+pub struct ExecCtx<'a> {
+    pub tags: &'a [u64],
+    pub plan: Option<&'a SpmmPlan>,
+    pub ws: Option<&'a mut Workspace>,
+}
+
+impl<'a> ExecCtx<'a> {
+    /// Tags only — the plain `run_tagged` equivalent.
+    pub fn tagged(tags: &'a [u64]) -> ExecCtx<'a> {
+        ExecCtx { tags, plan: None, ws: None }
+    }
+}
 
 /// Dispatch surface shared by the XLA (PJRT) and native backends.
 pub trait Backend {
@@ -43,6 +65,17 @@ pub trait Backend {
     /// Backends may ignore the tags; the default does.
     fn run_tagged(&self, name: &str, inputs: &[Value], _tags: &[u64]) -> Result<Vec<Value>> {
         self.run(name, inputs)
+    }
+
+    /// The zero-copy hot-path entry: inputs are *borrowed* (so callers
+    /// stop cloning activations and edge lists per call) and the
+    /// [`ExecCtx`] can carry a cached [`SpmmPlan`] and a [`Workspace`]
+    /// for allocation-free outputs.  The default materializes owned
+    /// inputs and falls back to [`Backend::run_tagged`]; the native
+    /// backend overrides it with a genuinely allocation-free dispatch.
+    fn run_ctx(&self, name: &str, inputs: &[&Value], ctx: ExecCtx<'_>) -> Result<Vec<Value>> {
+        let owned: Vec<Value> = inputs.iter().map(|&v| v.clone()).collect();
+        self.run_tagged(name, &owned, ctx.tags)
     }
 
     /// Op definition lookup (for shape/meta queries).

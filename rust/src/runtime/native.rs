@@ -7,27 +7,44 @@
 //! Dispatch is driven by the op's `meta.kind`, so native and XLA agree by
 //! construction on names, arities and shapes.
 //!
-//! # Sequential oracles and the parallel path
+//! # Sequential oracles, the parallel path, and plans
 //!
-//! Every kernel exists twice: the original single-threaded function
-//! (`matmul`, `spmm`, ...) is the **oracle** — the reference semantics the
-//! property tests and the XLA cross-checks are written against — and a
-//! `*_par` variant that fans the same computation out over a rayon pool
-//! when the [`Parallelism`] gate says the work is large enough.
+//! Every kernel exists in up to four forms, all producing *byte-identical*
+//! results:
 //!
-//! The parallel variants are *byte-for-byte identical* to their oracles
-//! for any thread count: work is partitioned by **output rows** (each
-//! element's accumulation order is unchanged) and `spmm_par` groups edges
-//! with a stable counting sort so each output row sees its edges in the
-//! original order.  See DESIGN.md §Parallel runtime for the contract.
+//! * the single-threaded oracle (`matmul`, `spmm`, ...) — the reference
+//!   semantics the property tests and XLA cross-checks are written
+//!   against;
+//! * an `*_into` out-parameter variant — same arithmetic, writing into a
+//!   caller-provided buffer so the hot loop can reuse memory through a
+//!   [`Workspace`](crate::runtime::Workspace);
+//! * a `*_par`/`*_par_into` variant that fans the same computation out
+//!   over a rayon pool when the [`Parallelism`] gate says the work is
+//!   large enough (work is partitioned by **output rows**, so each
+//!   element's accumulation order is unchanged); and
+//! * for SpMM only, a *planned* variant ([`spmm_planned_into`]) that
+//!   executes a pre-built [`SpmmPlan`] — the per-call counting-sort
+//!   grouping `spmm_par` pays is hoisted out and amortized across every
+//!   step that reuses the same edge list (the sample cache's steady
+//!   state).  Within each destination row the plan preserves the original
+//!   edge order, so planned results equal the oracle bitwise at any
+//!   thread count.
 //!
-//! Hot-loop temporaries (edge grouping tables, per-row loss partials) come
-//! from the per-thread scratch arena in [`crate::util::parallel`], so
-//! steady-state dispatch does not allocate beyond its output buffers.
+//! Dense inner loops are register-blocked 4-wide ([`axpy4`]/[`dot4`]);
+//! the axpy form keeps per-element accumulation order (bitwise neutral),
+//! the dot form is the one place the reduction tree is fixed *jointly*
+//! for the sequential and parallel paths so they still agree bitwise.
+//!
+//! Hot-loop temporaries (edge grouping tables, per-row loss partials)
+//! come from the per-thread scratch arena in [`crate::util::parallel`];
+//! output buffers come from the caller's [`Workspace`] via
+//! [`Backend::run_ctx`] — steady-state dispatch allocates nothing.
 
 use crate::runtime::manifest::{Manifest, OpDef};
+use crate::runtime::plan::SpmmPlan;
 use crate::runtime::value::Value;
-use crate::runtime::Backend;
+use crate::runtime::workspace::Workspace;
+use crate::runtime::{Backend, ExecCtx};
 use crate::util::parallel::{self, Parallelism};
 use crate::Result;
 use anyhow::{anyhow, bail, ensure};
@@ -72,16 +89,65 @@ impl NativeBackend {
 }
 
 // ---------------------------------------------------------------------
+// register-blocked inner loops (shared by sequential + parallel paths)
+// ---------------------------------------------------------------------
+
+/// `crow[j] += av * brow[j]`, 4-wide unrolled.  Each output element's
+/// accumulation order is unchanged versus the plain loop, so every kernel
+/// built on this is bitwise identical to its pre-blocking form.
+#[inline]
+fn axpy4(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let mut cc = crow.chunks_exact_mut(4);
+    let mut bb = brow.chunks_exact(4);
+    for (c4, b4) in (&mut cc).zip(&mut bb) {
+        c4[0] += av * b4[0];
+        c4[1] += av * b4[1];
+        c4[2] += av * b4[2];
+        c4[3] += av * b4[3];
+    }
+    for (c, bv) in cc.into_remainder().iter_mut().zip(bb.remainder()) {
+        *c += av * bv;
+    }
+}
+
+/// Dot product with four independent accumulators.  This fixes one
+/// specific reduction tree — used identically by the sequential and
+/// parallel `matmul_nt`, which therefore still agree bitwise.
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0f32; 4];
+    let mut aa = a.chunks_exact(4);
+    let mut bb = b.chunks_exact(4);
+    for (a4, b4) in (&mut aa).zip(&mut bb) {
+        acc[0] += a4[0] * b4[0];
+        acc[1] += a4[1] * b4[1];
+        acc[2] += a4[2] * b4[2];
+        acc[3] += a4[3] * b4[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in aa.remainder().iter().zip(bb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
 // dense / sparse primitives (f32 host math) — sequential oracles
 // ---------------------------------------------------------------------
 
 /// C[m,n] = A[m,k] @ B[k,n]  (ikj loop order for cache-friendliness)
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0f32; m * n];
-    for i in 0..m {
-        matmul_row(a, b, k, n, i, &mut c[i * n..(i + 1) * n]);
-    }
+    matmul_into(a, b, m, k, n, &mut c);
     c
+}
+
+/// [`matmul`] into a caller buffer (`out.len() == m * n`; any contents).
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..m {
+        matmul_row(a, b, k, n, i, &mut out[i * n..(i + 1) * n]);
+    }
 }
 
 /// One output row of [`matmul`]; shared verbatim by the parallel path so
@@ -93,30 +159,23 @@ fn matmul_row(a: &[f32], b: &[f32], k: usize, n: usize, i: usize, crow: &mut [f3
         if av == 0.0 {
             continue;
         }
-        let brow = &b[l * n..(l + 1) * n];
-        for j in 0..n {
-            crow[j] += av * brow[j];
-        }
+        axpy4(av, &b[l * n..(l + 1) * n], crow);
     }
 }
 
 /// C[k,n] = A[m,k]^T @ B[m,n]
 pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0f32; k * n];
-    for i in 0..m {
-        for l in 0..k {
-            let av = a[i * k + l];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[i * n..(i + 1) * n];
-            let crow = &mut c[l * n..(l + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
+    matmul_tn_into(a, b, m, k, n, &mut c);
     c
+}
+
+/// [`matmul_tn`] into a caller buffer (`out.len() == k * n`).
+pub fn matmul_tn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for l in 0..k {
+        matmul_tn_row(a, b, m, k, n, l, &mut out[l * n..(l + 1) * n]);
+    }
 }
 
 /// One output row (`l`) of [`matmul_tn`]: accumulates over `i` ascending,
@@ -128,45 +187,52 @@ fn matmul_tn_row(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, l: usize, c
         if av == 0.0 {
             continue;
         }
-        let brow = &b[i * n..(i + 1) * n];
-        for j in 0..n {
-            crow[j] += av * brow[j];
-        }
+        axpy4(av, &b[i * n..(i + 1) * n], crow);
     }
 }
 
 /// C[m,k] = A[m,n] @ B[k,n]^T
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     let mut c = vec![0f32; m * k];
-    for i in 0..m {
-        matmul_nt_row(a, b, n, k, i, &mut c[i * k..(i + 1) * k]);
-    }
+    matmul_nt_into(a, b, m, n, k, &mut c);
     c
+}
+
+/// [`matmul_nt`] into a caller buffer (`out.len() == m * k`); every
+/// element is overwritten.
+pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    for i in 0..m {
+        matmul_nt_row(a, b, n, k, i, &mut out[i * k..(i + 1) * k]);
+    }
 }
 
 #[inline]
 fn matmul_nt_row(a: &[f32], b: &[f32], n: usize, k: usize, i: usize, crow: &mut [f32]) {
     let arow = &a[i * n..(i + 1) * n];
     for l in 0..k {
-        let brow = &b[l * n..(l + 1) * n];
-        let mut acc = 0f32;
-        for j in 0..n {
-            acc += arow[j] * brow[j];
-        }
-        crow[l] = acc;
+        crow[l] = dot4(arow, &b[l * n..(l + 1) * n]);
     }
 }
 
 /// out[dst[e]] += w[e] * x[src[e]]   (x: [vin,d], out: [vout,d])
-pub fn spmm(
+pub fn spmm(src: &[i32], dst: &[i32], w: &[f32], x: &[f32], d: usize, vout: usize) -> Vec<f32> {
+    let mut out = vec![0f32; vout * d];
+    spmm_into(src, dst, w, x, d, vout, &mut out);
+    out
+}
+
+/// [`spmm`] into a caller buffer (`out.len() == vout * d`).
+pub fn spmm_into(
     src: &[i32],
     dst: &[i32],
     w: &[f32],
     x: &[f32],
     d: usize,
     vout: usize,
-) -> Vec<f32> {
-    let mut out = vec![0f32; vout * d];
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), vout * d);
+    out.fill(0.0);
     for e in 0..src.len() {
         let we = w[e];
         if we == 0.0 {
@@ -174,17 +240,18 @@ pub fn spmm(
         }
         let s = src[e] as usize;
         let t = dst[e] as usize;
-        let xs = &x[s * d..(s + 1) * d];
-        let ot = &mut out[t * d..(t + 1) * d];
-        for j in 0..d {
-            ot[j] += we * xs[j];
-        }
+        axpy4(we, &x[s * d..(s + 1) * d], &mut out[t * d..(t + 1) * d]);
     }
-    out
 }
 
 pub fn relu(x: &[f32]) -> Vec<f32> {
     x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+pub fn relu_into(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v.max(0.0);
+    }
 }
 
 /// g .* (out > 0)
@@ -195,8 +262,20 @@ pub fn relu_bwd(out: &[f32], g: &[f32]) -> Vec<f32> {
         .collect()
 }
 
+pub fn relu_bwd_into(fwd_out: &[f32], g: &[f32], out: &mut [f32]) {
+    for ((o, &f), &gv) in out.iter_mut().zip(fwd_out).zip(g) {
+        *o = if f > 0.0 { gv } else { 0.0 };
+    }
+}
+
 pub fn row_norms(x: &[f32], rows: usize, d: usize) -> Vec<f32> {
     (0..rows).map(|i| row_norm_one(x, d, i)).collect()
+}
+
+pub fn row_norms_into(x: &[f32], rows: usize, d: usize, out: &mut [f32]) {
+    for (i, o) in out.iter_mut().enumerate().take(rows) {
+        *o = row_norm_one(x, d, i);
+    }
 }
 
 #[inline]
@@ -215,14 +294,28 @@ pub fn softmax_xent(
     v: usize,
     c: usize,
 ) -> (f32, Vec<f32>) {
-    let n: f32 = mask.iter().sum::<f32>().max(1.0);
     let mut dlogits = vec![0f32; v * c];
+    let loss = softmax_xent_into(logits, labels, mask, v, c, &mut dlogits);
+    (loss, dlogits)
+}
+
+/// [`softmax_xent`] writing the gradient into `dlogits`, returning the
+/// loss.
+pub fn softmax_xent_into(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+    dlogits: &mut [f32],
+) -> f32 {
+    let n: f32 = mask.iter().sum::<f32>().max(1.0);
     let mut loss = 0f32;
     for i in 0..v {
         let li = softmax_xent_row(logits, labels, mask, c, n, i, &mut dlogits[i * c..(i + 1) * c]);
         loss -= li;
     }
-    (loss, dlogits)
+    loss
 }
 
 /// One row of [`softmax_xent`]: fills the gradient row, returns the
@@ -261,13 +354,26 @@ pub fn bce_logits(
     v: usize,
     c: usize,
 ) -> (f32, Vec<f32>) {
-    let n: f32 = mask.iter().sum::<f32>().max(1.0) * c as f32;
     let mut dlogits = vec![0f32; v * c];
+    let loss = bce_logits_into(logits, labels, mask, v, c, &mut dlogits);
+    (loss, dlogits)
+}
+
+/// [`bce_logits`] writing the gradient into `dlogits`, returning the loss.
+pub fn bce_logits_into(
+    logits: &[f32],
+    labels: &[f32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+    dlogits: &mut [f32],
+) -> f32 {
+    let n: f32 = mask.iter().sum::<f32>().max(1.0) * c as f32;
     let mut loss = 0f32;
     for i in 0..v {
         loss += bce_row(logits, labels, mask, c, n, i, &mut dlogits[i * c..(i + 1) * c]);
     }
-    (loss, dlogits)
+    loss
 }
 
 /// One row of [`bce_logits`]: fills the gradient row, returns the row's
@@ -304,24 +410,40 @@ pub fn adam(
     t: f32,
     lr: f32,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut w2 = vec![0f32; w.len()];
+    let mut m2 = vec![0f32; w.len()];
+    let mut v2 = vec![0f32; w.len()];
+    adam_into(w, m, v, g, t, lr, &mut w2, &mut m2, &mut v2);
+    (w2, m2, v2)
+}
+
+/// [`adam`] writing into caller buffers; every element is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_into(
+    w: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    t: f32,
+    lr: f32,
+    w2: &mut [f32],
+    m2: &mut [f32],
+    v2: &mut [f32],
+) {
     const B1: f32 = 0.9;
     const B2: f32 = 0.999;
     const EPS: f32 = 1e-8;
     let bc1 = 1.0 - B1.powf(t);
     let bc2 = 1.0 - B2.powf(t);
-    let mut w2 = Vec::with_capacity(w.len());
-    let mut m2 = Vec::with_capacity(w.len());
-    let mut v2 = Vec::with_capacity(w.len());
     for i in 0..w.len() {
         let mi = B1 * m[i] + (1.0 - B1) * g[i];
         let vi = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
         let mhat = mi / bc1;
         let vhat = vi / bc2;
-        w2.push(w[i] - lr * mhat / (vhat.sqrt() + EPS));
-        m2.push(mi);
-        v2.push(vi);
+        w2[i] = w[i] - lr * mhat / (vhat.sqrt() + EPS);
+        m2[i] = mi;
+        v2[i] = vi;
     }
-    (w2, m2, v2)
 }
 
 // ---------------------------------------------------------------------
@@ -331,17 +453,31 @@ pub fn adam(
 /// Parallel [`matmul`]: output-row chunks; falls back to the oracle when
 /// the work is below the [`Parallelism`] grain.
 pub fn matmul_par(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, par: Parallelism) -> Vec<f32> {
-    if !par.should_parallelize(m * k * n) {
-        return matmul(a, b, m, k, n);
-    }
     let mut c = vec![0f32; m * n];
+    matmul_par_into(a, b, m, k, n, &mut c, par);
+    c
+}
+
+pub fn matmul_par_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    par: Parallelism,
+) {
+    if !par.should_parallelize(m * k * n) {
+        matmul_into(a, b, m, k, n, out);
+        return;
+    }
+    out.fill(0.0);
     let rows = par.chunk_rows(m);
-    c.par_chunks_mut(rows * n).enumerate().for_each(|(ci, chunk)| {
+    out.par_chunks_mut(rows * n).enumerate().for_each(|(ci, chunk)| {
         for (ri, crow) in chunk.chunks_mut(n).enumerate() {
             matmul_row(a, b, k, n, ci * rows + ri, crow);
         }
     });
-    c
 }
 
 /// Parallel [`matmul_tn`]: partitions the `k` output rows; each element
@@ -355,17 +491,31 @@ pub fn matmul_tn_par(
     n: usize,
     par: Parallelism,
 ) -> Vec<f32> {
-    if !par.should_parallelize(m * k * n) {
-        return matmul_tn(a, b, m, k, n);
-    }
     let mut c = vec![0f32; k * n];
+    matmul_tn_par_into(a, b, m, k, n, &mut c, par);
+    c
+}
+
+pub fn matmul_tn_par_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    par: Parallelism,
+) {
+    if !par.should_parallelize(m * k * n) {
+        matmul_tn_into(a, b, m, k, n, out);
+        return;
+    }
+    out.fill(0.0);
     let rows = par.chunk_rows(k);
-    c.par_chunks_mut(rows * n).enumerate().for_each(|(ci, chunk)| {
+    out.par_chunks_mut(rows * n).enumerate().for_each(|(ci, chunk)| {
         for (rl, crow) in chunk.chunks_mut(n).enumerate() {
             matmul_tn_row(a, b, m, k, n, ci * rows + rl, crow);
         }
     });
-    c
 }
 
 /// Parallel [`matmul_nt`]: output-row chunks.
@@ -377,20 +527,34 @@ pub fn matmul_nt_par(
     k: usize,
     par: Parallelism,
 ) -> Vec<f32> {
-    if !par.should_parallelize(m * n * k) {
-        return matmul_nt(a, b, m, n, k);
-    }
     let mut c = vec![0f32; m * k];
+    matmul_nt_par_into(a, b, m, n, k, &mut c, par);
+    c
+}
+
+pub fn matmul_nt_par_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    par: Parallelism,
+) {
+    if !par.should_parallelize(m * n * k) {
+        matmul_nt_into(a, b, m, n, k, out);
+        return;
+    }
     let rows = par.chunk_rows(m);
-    c.par_chunks_mut(rows * k).enumerate().for_each(|(ci, chunk)| {
+    out.par_chunks_mut(rows * k).enumerate().for_each(|(ci, chunk)| {
         for (ri, crow) in chunk.chunks_mut(k).enumerate() {
             matmul_nt_row(a, b, n, k, ci * rows + ri, crow);
         }
     });
-    c
 }
 
-/// Parallel [`spmm`] over a COO edge list.
+/// Parallel [`spmm`] over a COO edge list, regrouping edges on every
+/// call.
 ///
 /// Edges are grouped by destination row with a stable counting sort
 /// (scratch-arena buffers, no steady-state allocation), then output rows
@@ -399,6 +563,10 @@ pub fn matmul_nt_par(
 /// in exactly the sequence the sequential oracle uses — results are
 /// bitwise identical for any thread count, including padded edge lists
 /// (`w == 0` entries are skipped identically) and empty rows.
+///
+/// When the same edge list is executed repeatedly, build an [`SpmmPlan`]
+/// once and use [`spmm_planned_into`] instead — it skips the per-call
+/// grouping entirely.
 pub fn spmm_par(
     src: &[i32],
     dst: &[i32],
@@ -408,11 +576,28 @@ pub fn spmm_par(
     vout: usize,
     par: Parallelism,
 ) -> Vec<f32> {
+    let mut out = vec![0f32; vout * d];
+    spmm_par_into(src, dst, w, x, d, vout, &mut out, par);
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_par_into(
+    src: &[i32],
+    dst: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    vout: usize,
+    out: &mut [f32],
+    par: Parallelism,
+) {
     let ne = src.len();
     if !par.should_parallelize(ne * d) {
-        return spmm(src, dst, w, x, d, vout);
+        spmm_into(src, dst, w, x, d, vout, out);
+        return;
     }
-    let mut out = vec![0f32; vout * d];
+    out.fill(0.0);
     parallel::with_usize(vout + 1, |rowptr| {
         parallel::with_u32(ne, |order| {
             // Stable counting sort of edge ids by destination row.
@@ -446,45 +631,154 @@ pub fn spmm_par(
                     let t = ci * rows + rt;
                     for &eid in &order[rowptr[t]..rowptr[t + 1]] {
                         let e = eid as usize;
-                        let we = w[e];
                         let s = src[e] as usize;
-                        let xs = &x[s * d..(s + 1) * d];
-                        for j in 0..d {
-                            orow[j] += we * xs[j];
-                        }
+                        axpy4(w[e], &x[s * d..(s + 1) * d], orow);
                     }
                 }
             });
         });
     });
+}
+
+/// SpMM driven by a pre-built [`SpmmPlan`]: no grouping work at all —
+/// rows execute straight off the plan's CSR schedule, in parallel over
+/// its nnz-balanced chunks.  Bitwise identical to [`spmm`] for any
+/// thread count (same per-row edge order).
+pub fn spmm_planned(
+    plan: &SpmmPlan,
+    src: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    par: Parallelism,
+) -> Vec<f32> {
+    let mut out = vec![0f32; plan.vout() * d];
+    spmm_planned_into(plan, src, w, x, d, &mut out, par);
     out
+}
+
+pub fn spmm_planned_into(
+    plan: &SpmmPlan,
+    src: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    out: &mut [f32],
+    par: Parallelism,
+) {
+    debug_assert_eq!(out.len(), plan.vout() * d);
+    debug_assert_eq!(src.len(), plan.ne());
+    out.fill(0.0);
+    if !par.should_parallelize(plan.nnz() * d) {
+        for t in 0..plan.vout() {
+            spmm_planned_row(plan, src, w, x, d, t, &mut out[t * d..(t + 1) * d]);
+        }
+        return;
+    }
+    let sizes: Vec<usize> = plan.chunks().iter().map(|r| (r.end - r.start) * d).collect();
+    let parts = parallel::split_varsize(out, &sizes);
+    parts
+        .into_par_iter()
+        .zip(plan.chunks().par_iter())
+        .for_each(|(part, range)| {
+            for (rt, orow) in part.chunks_mut(d).enumerate() {
+                spmm_planned_row(plan, src, w, x, d, range.start + rt, orow);
+            }
+        });
+}
+
+#[inline]
+fn spmm_planned_row(
+    plan: &SpmmPlan,
+    src: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    t: usize,
+    orow: &mut [f32],
+) {
+    for &eid in plan.row_edges(t) {
+        let e = eid as usize;
+        let s = src[e] as usize;
+        axpy4(w[e], &x[s * d..(s + 1) * d], orow);
+    }
 }
 
 /// Parallel [`relu`].
 pub fn relu_par(x: &[f32], par: Parallelism) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    relu_par_into(x, &mut out, par);
+    out
+}
+
+pub fn relu_par_into(x: &[f32], out: &mut [f32], par: Parallelism) {
     if !par.should_parallelize(x.len()) {
-        return relu(x);
+        relu_into(x, out);
+        return;
     }
-    x.par_iter().map(|&v| v.max(0.0)).collect()
+    let ch = par.chunk_rows(x.len());
+    out.par_chunks_mut(ch)
+        .zip(x.par_chunks(ch))
+        .for_each(|(oc, xc)| relu_into(xc, oc));
+}
+
+/// In-place [`relu`] (same values; used by the workspace dispatch to skip
+/// a buffer).
+pub fn relu_inplace_par(x: &mut [f32], par: Parallelism) {
+    if !par.should_parallelize(x.len()) {
+        for v in x.iter_mut() {
+            *v = v.max(0.0);
+        }
+        return;
+    }
+    let ch = par.chunk_rows(x.len());
+    x.par_chunks_mut(ch).for_each(|c| {
+        for v in c.iter_mut() {
+            *v = v.max(0.0);
+        }
+    });
 }
 
 /// Parallel [`relu_bwd`].
 pub fn relu_bwd_par(out: &[f32], g: &[f32], par: Parallelism) -> Vec<f32> {
-    if !par.should_parallelize(out.len()) {
-        return relu_bwd(out, g);
+    let mut o = vec![0f32; out.len()];
+    relu_bwd_par_into(out, g, &mut o, par);
+    o
+}
+
+pub fn relu_bwd_par_into(fwd_out: &[f32], g: &[f32], out: &mut [f32], par: Parallelism) {
+    if !par.should_parallelize(fwd_out.len()) {
+        relu_bwd_into(fwd_out, g, out);
+        return;
     }
-    out.par_iter()
-        .zip(g.par_iter())
-        .map(|(&o, &gv)| if o > 0.0 { gv } else { 0.0 })
-        .collect()
+    let ch = par.chunk_rows(fwd_out.len());
+    out.par_chunks_mut(ch)
+        .zip(fwd_out.par_chunks(ch).zip(g.par_chunks(ch)))
+        .for_each(|(oc, (fc, gc))| relu_bwd_into(fc, gc, oc));
 }
 
 /// Elementwise `a + b` (the `add` op).
 pub fn add_par(a: &[f32], b: &[f32], par: Parallelism) -> Vec<f32> {
+    let mut out = vec![0f32; a.len()];
+    add_par_into(a, b, &mut out, par);
+    out
+}
+
+pub fn add_par_into(a: &[f32], b: &[f32], out: &mut [f32], par: Parallelism) {
     if !par.should_parallelize(a.len()) {
-        return a.iter().zip(b).map(|(x, y)| x + y).collect();
+        for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+            *o = x + y;
+        }
+        return;
     }
-    a.par_iter().zip(b.par_iter()).map(|(x, y)| x + y).collect()
+    let ch = par.chunk_rows(a.len());
+    out.par_chunks_mut(ch)
+        .zip(a.par_chunks(ch).zip(b.par_chunks(ch)))
+        .for_each(|(oc, (ac, bc))| {
+            for ((o, x), y) in oc.iter_mut().zip(ac).zip(bc) {
+                *o = x + y;
+            }
+        });
 }
 
 /// Elementwise `a[i] += b[i]` in place.
@@ -507,32 +801,90 @@ pub fn add_assign_par(a: &mut [f32], b: &[f32], par: Parallelism) {
 
 /// Elementwise `ca * a[i] + cb * b[i]` (GCNII residual mixes).
 pub fn lincomb_par(ca: f32, a: &[f32], cb: f32, b: &[f32], par: Parallelism) -> Vec<f32> {
+    let mut out = vec![0f32; a.len()];
+    lincomb_par_into(ca, a, cb, b, &mut out, par);
+    out
+}
+
+pub fn lincomb_par_into(
+    ca: f32,
+    a: &[f32],
+    cb: f32,
+    b: &[f32],
+    out: &mut [f32],
+    par: Parallelism,
+) {
     if !par.should_parallelize(a.len()) {
-        return a.iter().zip(b).map(|(&x, &y)| ca * x + cb * y).collect();
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = ca * x + cb * y;
+        }
+        return;
     }
-    a.par_iter()
-        .zip(b.par_iter())
-        .map(|(&x, &y)| ca * x + cb * y)
-        .collect()
+    let ch = par.chunk_rows(a.len());
+    out.par_chunks_mut(ch)
+        .zip(a.par_chunks(ch).zip(b.par_chunks(ch)))
+        .for_each(|(oc, (ac, bc))| {
+            for ((o, &x), &y) in oc.iter_mut().zip(ac).zip(bc) {
+                *o = ca * x + cb * y;
+            }
+        });
 }
 
 /// Elementwise `c * a[i]`.
 pub fn scale_par(c: f32, a: &[f32], par: Parallelism) -> Vec<f32> {
+    let mut out = vec![0f32; a.len()];
+    scale_par_into(c, a, &mut out, par);
+    out
+}
+
+pub fn scale_par_into(c: f32, a: &[f32], out: &mut [f32], par: Parallelism) {
     if !par.should_parallelize(a.len()) {
-        return a.iter().map(|&x| c * x).collect();
+        for (o, &x) in out.iter_mut().zip(a) {
+            *o = c * x;
+        }
+        return;
     }
-    a.par_iter().map(|&x| c * x).collect()
+    let ch = par.chunk_rows(a.len());
+    out.par_chunks_mut(ch)
+        .zip(a.par_chunks(ch))
+        .for_each(|(oc, ac)| {
+            for (o, &x) in oc.iter_mut().zip(ac) {
+                *o = c * x;
+            }
+        });
+}
+
+/// In-place `a[i] = c * a[i]` (same values as [`scale_par`]).
+pub fn scale_inplace_par(c: f32, a: &mut [f32], par: Parallelism) {
+    if !par.should_parallelize(a.len()) {
+        for x in a.iter_mut() {
+            *x = c * *x;
+        }
+        return;
+    }
+    let ch = par.chunk_rows(a.len());
+    a.par_chunks_mut(ch).for_each(|ac| {
+        for x in ac.iter_mut() {
+            *x = c * *x;
+        }
+    });
 }
 
 /// Parallel [`row_norms`].
 pub fn row_norms_par(x: &[f32], rows: usize, d: usize, par: Parallelism) -> Vec<f32> {
+    let mut out = vec![0f32; rows];
+    row_norms_par_into(x, rows, d, &mut out, par);
+    out
+}
+
+pub fn row_norms_par_into(x: &[f32], rows: usize, d: usize, out: &mut [f32], par: Parallelism) {
     if !par.should_parallelize(rows * d) {
-        return row_norms(x, rows, d);
+        row_norms_into(x, rows, d, out);
+        return;
     }
-    (0..rows)
-        .into_par_iter()
-        .map(|i| row_norm_one(x, d, i))
-        .collect()
+    out.par_iter_mut()
+        .enumerate()
+        .for_each(|(i, o)| *o = row_norm_one(x, d, i));
 }
 
 /// Parallel [`softmax_xent`]: gradient rows are independent; per-row loss
@@ -546,11 +898,24 @@ pub fn softmax_xent_par(
     c: usize,
     par: Parallelism,
 ) -> (f32, Vec<f32>) {
+    let mut dlogits = vec![0f32; v * c];
+    let loss = softmax_xent_par_into(logits, labels, mask, v, c, &mut dlogits, par);
+    (loss, dlogits)
+}
+
+pub fn softmax_xent_par_into(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+    dlogits: &mut [f32],
+    par: Parallelism,
+) -> f32 {
     if !par.should_parallelize(v * c) {
-        return softmax_xent(logits, labels, mask, v, c);
+        return softmax_xent_into(logits, labels, mask, v, c, dlogits);
     }
     let n: f32 = mask.iter().sum::<f32>().max(1.0);
-    let mut dlogits = vec![0f32; v * c];
     parallel::with_f32(v, |row_ll| {
         dlogits
             .par_chunks_mut(c)
@@ -563,7 +928,7 @@ pub fn softmax_xent_par(
         for &ll in row_ll.iter() {
             loss -= ll;
         }
-        (loss, std::mem::take(&mut dlogits))
+        loss
     })
 }
 
@@ -576,11 +941,24 @@ pub fn bce_logits_par(
     c: usize,
     par: Parallelism,
 ) -> (f32, Vec<f32>) {
+    let mut dlogits = vec![0f32; v * c];
+    let loss = bce_logits_par_into(logits, labels, mask, v, c, &mut dlogits, par);
+    (loss, dlogits)
+}
+
+pub fn bce_logits_par_into(
+    logits: &[f32],
+    labels: &[f32],
+    mask: &[f32],
+    v: usize,
+    c: usize,
+    dlogits: &mut [f32],
+    par: Parallelism,
+) -> f32 {
     if !par.should_parallelize(v * c) {
-        return bce_logits(logits, labels, mask, v, c);
+        return bce_logits_into(logits, labels, mask, v, c, dlogits);
     }
     let n: f32 = mask.iter().sum::<f32>().max(1.0) * c as f32;
-    let mut dlogits = vec![0f32; v * c];
     parallel::with_f32(v, |row_loss| {
         dlogits
             .par_chunks_mut(c)
@@ -593,7 +971,7 @@ pub fn bce_logits_par(
         for &rl in row_loss.iter() {
             loss += rl;
         }
-        (loss, std::mem::take(&mut dlogits))
+        loss
     })
 }
 
@@ -607,19 +985,37 @@ pub fn adam_par(
     lr: f32,
     par: Parallelism,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let len = w.len();
+    let mut w2 = vec![0f32; len];
+    let mut m2 = vec![0f32; len];
+    let mut v2 = vec![0f32; len];
+    adam_par_into(w, m, v, g, t, lr, &mut w2, &mut m2, &mut v2, par);
+    (w2, m2, v2)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn adam_par_into(
+    w: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    t: f32,
+    lr: f32,
+    w2: &mut [f32],
+    m2: &mut [f32],
+    v2: &mut [f32],
+    par: Parallelism,
+) {
     if !par.should_parallelize(w.len()) {
-        return adam(w, m, v, g, t, lr);
+        adam_into(w, m, v, g, t, lr, w2, m2, v2);
+        return;
     }
     const B1: f32 = 0.9;
     const B2: f32 = 0.999;
     const EPS: f32 = 1e-8;
     let bc1 = 1.0 - B1.powf(t);
     let bc2 = 1.0 - B2.powf(t);
-    let len = w.len();
-    let mut w2 = vec![0f32; len];
-    let mut m2 = vec![0f32; len];
-    let mut v2 = vec![0f32; len];
-    let ch = par.chunk_rows(len);
+    let ch = par.chunk_rows(w.len());
     w2.par_chunks_mut(ch)
         .zip(m2.par_chunks_mut(ch))
         .zip(v2.par_chunks_mut(ch))
@@ -637,7 +1033,6 @@ pub fn adam_par(
                 vc[o] = vi;
             }
         });
-    (w2, m2, v2)
 }
 
 // ---------------------------------------------------------------------
@@ -650,78 +1045,222 @@ fn f32m(v: &Value) -> Result<(&[f32], usize, usize)> {
     Ok((v.f32s()?, s[0], s[1]))
 }
 
+/// Run the op's SpMM either off a cached plan (steady state: zero
+/// grouping work) or with the per-call grouping fallback.
+///
+/// `edge_tag` is the immutability tag of the op's src edge input (0 =
+/// untagged).  Shape checks alone cannot tell two same-bucket selections
+/// apart, so when both the plan and the input carry tags they must
+/// match — a stale plan is a loud error, never silent corruption.
+#[allow(clippy::too_many_arguments)]
+fn spmm_exec(
+    plan: Option<&SpmmPlan>,
+    edge_tag: u64,
+    src: &[i32],
+    dst: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    vout: usize,
+    out: &mut [f32],
+    par: Parallelism,
+) -> Result<()> {
+    match plan {
+        Some(p) => {
+            ensure!(
+                p.vout() == vout && p.ne() == src.len(),
+                "spmm plan mismatch: plan is {}v/{}e, op is {}v/{}e",
+                p.vout(),
+                p.ne(),
+                vout,
+                src.len()
+            );
+            ensure!(
+                p.tag() == 0 || edge_tag == 0 || p.tag() == edge_tag,
+                "spmm plan mismatch: plan built for edge tag {}, op has tag {edge_tag}",
+                p.tag()
+            );
+            spmm_planned_into(p, src, w, x, d, out, par);
+        }
+        None => spmm_par_into(src, dst, w, x, d, vout, out, par),
+    }
+    Ok(())
+}
+
 impl NativeBackend {
-    fn dispatch(&self, def: &OpDef, inp: &[Value]) -> Result<Vec<Value>> {
+    fn dispatch(
+        &self,
+        def: &OpDef,
+        inp: &[&Value],
+        tags: &[u64],
+        plan: Option<&SpmmPlan>,
+        ws: &mut Workspace,
+    ) -> Result<Vec<Value>> {
         let par = self.par;
         let kind = def.kind();
+        // immutability tag of input `i` (0 = untagged / tags not passed)
+        let tag = |i: usize| tags.get(i).copied().unwrap_or(0);
         match kind {
             "gcn_fwd" => {
-                let (h, v, din) = f32m(&inp[0])?;
-                let (w, _, dout) = f32m(&inp[1])?;
+                let (h, v, din) = f32m(inp[0])?;
+                let (w, _, dout) = f32m(inp[1])?;
                 let relu_on = def.meta_bool("relu")?;
-                let j = matmul_par(h, w, v, din, dout, par);
-                let p = spmm_par(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &j, dout, v, par);
-                let out = if relu_on { relu_par(&p, par) } else { p };
-                Ok(vec![Value::mat_f32(v, dout, out)])
+                let mut j = ws.take_f32(v * dout);
+                matmul_par_into(h, w, v, din, dout, &mut j, par);
+                let mut p = ws.take_f32(v * dout);
+                spmm_exec(
+                    plan,
+                    tag(2),
+                    inp[2].i32s()?,
+                    inp[3].i32s()?,
+                    inp[4].f32s()?,
+                    &j,
+                    dout,
+                    v,
+                    &mut p,
+                    par,
+                )?;
+                ws.give_f32(j);
+                if relu_on {
+                    relu_inplace_par(&mut p, par);
+                }
+                Ok(vec![Value::mat_f32(v, dout, p)])
             }
             "sage_fwd" => {
-                let (h, v, din) = f32m(&inp[0])?;
-                let (w1, _, dout) = f32m(&inp[1])?;
-                let (w2, _, _) = f32m(&inp[2])?;
+                let (h, v, din) = f32m(inp[0])?;
+                let (w1, _, dout) = f32m(inp[1])?;
+                let (w2, _, _) = f32m(inp[2])?;
                 let relu_on = def.meta_bool("relu")?;
-                let m = spmm_par(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, din, v, par);
-                let mut p = matmul_par(h, w1, v, din, dout, par);
-                let mw = matmul_par(&m, w2, v, din, dout, par);
+                let mut m = ws.take_f32(v * din);
+                spmm_exec(
+                    plan,
+                    tag(3),
+                    inp[3].i32s()?,
+                    inp[4].i32s()?,
+                    inp[5].f32s()?,
+                    h,
+                    din,
+                    v,
+                    &mut m,
+                    par,
+                )?;
+                let mut p = ws.take_f32(v * dout);
+                matmul_par_into(h, w1, v, din, dout, &mut p, par);
+                let mut mw = ws.take_f32(v * dout);
+                matmul_par_into(&m, w2, v, din, dout, &mut mw, par);
                 add_assign_par(&mut p, &mw, par);
-                let out = if relu_on { relu_par(&p, par) } else { p };
-                Ok(vec![Value::mat_f32(v, dout, out), Value::mat_f32(v, din, m)])
+                ws.give_f32(mw);
+                if relu_on {
+                    relu_inplace_par(&mut p, par);
+                }
+                Ok(vec![Value::mat_f32(v, dout, p), Value::mat_f32(v, din, m)])
             }
             "gcnii_fwd" => {
-                let (h, v, d) = f32m(&inp[0])?;
-                let (h0, _, _) = f32m(&inp[1])?;
-                let (w, _, _) = f32m(&inp[2])?;
+                let (h, v, d) = f32m(inp[0])?;
+                let (h0, _, _) = f32m(inp[1])?;
+                let (w, _, _) = f32m(inp[2])?;
                 let alpha = def.meta_f32("alpha")?;
                 let beta = def.meta_f32("beta")?;
-                let p = spmm_par(inp[3].i32s()?, inp[4].i32s()?, inp[5].f32s()?, h, d, v, par);
-                let u = lincomb_par(1.0 - alpha, &p, alpha, h0, par);
-                let uw = matmul_par(&u, w, v, d, d, par);
-                let z = lincomb_par(1.0 - beta, &u, beta, &uw, par);
-                Ok(vec![Value::mat_f32(v, d, relu_par(&z, par)), Value::mat_f32(v, d, u)])
+                let mut p = ws.take_f32(v * d);
+                spmm_exec(
+                    plan,
+                    tag(3),
+                    inp[3].i32s()?,
+                    inp[4].i32s()?,
+                    inp[5].f32s()?,
+                    h,
+                    d,
+                    v,
+                    &mut p,
+                    par,
+                )?;
+                let mut u = ws.take_f32(v * d);
+                lincomb_par_into(1.0 - alpha, &p, alpha, h0, &mut u, par);
+                // p is free now — reuse its buffer for u @ w
+                let mut uw = p;
+                matmul_par_into(&u, w, v, d, d, &mut uw, par);
+                let mut z = ws.take_f32(v * d);
+                lincomb_par_into(1.0 - beta, &u, beta, &uw, &mut z, par);
+                ws.give_f32(uw);
+                relu_inplace_par(&mut z, par);
+                Ok(vec![Value::mat_f32(v, d, z), Value::mat_f32(v, d, u)])
             }
             "dense_fwd" => {
-                let (x, v, din) = f32m(&inp[0])?;
-                let (w, _, dout) = f32m(&inp[1])?;
+                let (x, v, din) = f32m(inp[0])?;
+                let (w, _, dout) = f32m(inp[1])?;
                 let relu_on = def.meta_bool("relu")?;
-                let p = matmul_par(x, w, v, din, dout, par);
-                let out = if relu_on { relu_par(&p, par) } else { p };
-                Ok(vec![Value::mat_f32(v, dout, out)])
+                let mut p = ws.take_f32(v * dout);
+                matmul_par_into(x, w, v, din, dout, &mut p, par);
+                if relu_on {
+                    relu_inplace_par(&mut p, par);
+                }
+                Ok(vec![Value::mat_f32(v, dout, p)])
             }
             "spmm_bwd_mask" => {
-                let (hout, v, d) = f32m(&inp[0])?;
-                let (gout, _, _) = f32m(&inp[1])?;
-                let gp = relu_bwd_par(hout, gout, par);
-                let gj = spmm_par(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, &gp, d, v, par);
+                let (hout, v, d) = f32m(inp[0])?;
+                let (gout, _, _) = f32m(inp[1])?;
+                let mut gp = ws.take_f32(v * d);
+                relu_bwd_par_into(hout, gout, &mut gp, par);
+                let mut gj = ws.take_f32(v * d);
+                spmm_exec(
+                    plan,
+                    tag(2),
+                    inp[2].i32s()?,
+                    inp[3].i32s()?,
+                    inp[4].f32s()?,
+                    &gp,
+                    d,
+                    v,
+                    &mut gj,
+                    par,
+                )?;
+                ws.give_f32(gp);
                 Ok(vec![Value::mat_f32(v, d, gj)])
             }
             "spmm_bwd_nomask" => {
-                let (gout, v, d) = f32m(&inp[0])?;
-                let gj = spmm_par(inp[1].i32s()?, inp[2].i32s()?, inp[3].f32s()?, gout, d, v, par);
+                let (gout, v, d) = f32m(inp[0])?;
+                let mut gj = ws.take_f32(v * d);
+                spmm_exec(
+                    plan,
+                    tag(1),
+                    inp[1].i32s()?,
+                    inp[2].i32s()?,
+                    inp[3].f32s()?,
+                    gout,
+                    d,
+                    v,
+                    &mut gj,
+                    par,
+                )?;
                 Ok(vec![Value::mat_f32(v, d, gj)])
             }
             "spmm_bwd_acc" => {
-                let (acc, v, d) = f32m(&inp[0])?;
-                let (g, _, _) = f32m(&inp[1])?;
-                let mut gj =
-                    spmm_par(inp[2].i32s()?, inp[3].i32s()?, inp[4].f32s()?, g, d, v, par);
+                let (acc, v, d) = f32m(inp[0])?;
+                let (g, _, _) = f32m(inp[1])?;
+                let mut gj = ws.take_f32(v * d);
+                spmm_exec(
+                    plan,
+                    tag(2),
+                    inp[2].i32s()?,
+                    inp[3].i32s()?,
+                    inp[4].f32s()?,
+                    g,
+                    d,
+                    v,
+                    &mut gj,
+                    par,
+                )?;
                 add_assign_par(&mut gj, acc, par);
                 Ok(vec![Value::mat_f32(v, d, gj)])
             }
             "gcn_bwd_mm" => {
-                let (h, v, din) = f32m(&inp[0])?;
-                let (gj, _, dout) = f32m(&inp[1])?;
-                let (w, _, _) = f32m(&inp[2])?;
-                let gw = matmul_tn_par(h, gj, v, din, dout, par);
-                let gh = matmul_nt_par(gj, w, v, dout, din, par);
+                let (h, v, din) = f32m(inp[0])?;
+                let (gj, _, dout) = f32m(inp[1])?;
+                let (w, _, _) = f32m(inp[2])?;
+                let mut gw = ws.take_f32(din * dout);
+                matmul_tn_par_into(h, gj, v, din, dout, &mut gw, par);
+                let mut gh = ws.take_f32(v * din);
+                matmul_nt_par_into(gj, w, v, dout, din, &mut gh, par);
                 Ok(vec![
                     Value::mat_f32(din, dout, gw),
                     Value::mat_f32(v, din, gh),
@@ -729,35 +1268,44 @@ impl NativeBackend {
             }
             "sage_bwd_pre_mask" | "sage_bwd_pre_nomask" => {
                 let masked = kind == "sage_bwd_pre_mask";
-                let (gp, v, din, dout, h, m, w1, w2);
+                let (v, din, dout, h, m, w1, w2);
+                let mut gp_buf = Vec::new();
+                let gp: &[f32];
                 if masked {
-                    let (hout, vv, dd) = f32m(&inp[0])?;
-                    let (gout, _, _) = f32m(&inp[1])?;
-                    gp = relu_bwd_par(hout, gout, par);
+                    let (hout, vv, dd) = f32m(inp[0])?;
+                    let (gout, _, _) = f32m(inp[1])?;
                     v = vv;
                     dout = dd;
-                    let (hh, _, di) = f32m(&inp[2])?;
+                    let (hh, _, di) = f32m(inp[2])?;
                     h = hh;
                     din = di;
-                    m = f32m(&inp[3])?.0;
-                    w1 = f32m(&inp[4])?.0;
-                    w2 = f32m(&inp[5])?.0;
+                    m = f32m(inp[3])?.0;
+                    w1 = f32m(inp[4])?.0;
+                    w2 = f32m(inp[5])?.0;
+                    gp_buf = ws.take_f32(v * dout);
+                    relu_bwd_par_into(hout, gout, &mut gp_buf, par);
+                    gp = &gp_buf;
                 } else {
-                    let (gout, vv, dd) = f32m(&inp[0])?;
-                    gp = gout.to_vec();
+                    let (gout, vv, dd) = f32m(inp[0])?;
                     v = vv;
                     dout = dd;
-                    let (hh, _, di) = f32m(&inp[1])?;
+                    let (hh, _, di) = f32m(inp[1])?;
                     h = hh;
                     din = di;
-                    m = f32m(&inp[2])?.0;
-                    w1 = f32m(&inp[3])?.0;
-                    w2 = f32m(&inp[4])?.0;
+                    m = f32m(inp[2])?.0;
+                    w1 = f32m(inp[3])?.0;
+                    w2 = f32m(inp[4])?.0;
+                    gp = gout;
                 }
-                let gw1 = matmul_tn_par(h, &gp, v, din, dout, par);
-                let gw2 = matmul_tn_par(m, &gp, v, din, dout, par);
-                let gm = matmul_nt_par(&gp, w2, v, dout, din, par);
-                let gh_a = matmul_nt_par(&gp, w1, v, dout, din, par);
+                let mut gw1 = ws.take_f32(din * dout);
+                matmul_tn_par_into(h, gp, v, din, dout, &mut gw1, par);
+                let mut gw2 = ws.take_f32(din * dout);
+                matmul_tn_par_into(m, gp, v, din, dout, &mut gw2, par);
+                let mut gm = ws.take_f32(v * din);
+                matmul_nt_par_into(gp, w2, v, dout, din, &mut gm, par);
+                let mut gh_a = ws.take_f32(v * din);
+                matmul_nt_par_into(gp, w1, v, dout, din, &mut gh_a, par);
+                ws.give_f32(gp_buf);
                 Ok(vec![
                     Value::mat_f32(din, dout, gw1),
                     Value::mat_f32(din, dout, gw2),
@@ -766,18 +1314,28 @@ impl NativeBackend {
                 ])
             }
             "gcnii_bwd_pre" => {
-                let (hout, v, d) = f32m(&inp[0])?;
-                let (gout, _, _) = f32m(&inp[1])?;
-                let (u, _, _) = f32m(&inp[2])?;
-                let (w, _, _) = f32m(&inp[3])?;
+                let (hout, v, d) = f32m(inp[0])?;
+                let (gout, _, _) = f32m(inp[1])?;
+                let (u, _, _) = f32m(inp[2])?;
+                let (w, _, _) = f32m(inp[3])?;
                 let alpha = def.meta_f32("alpha")?;
                 let beta = def.meta_f32("beta")?;
-                let gz = relu_bwd_par(hout, gout, par);
-                let gzw = matmul_nt_par(&gz, w, v, d, d, par);
-                let gu = lincomb_par(1.0 - beta, &gz, beta, &gzw, par);
-                let gw = scale_par(beta, &matmul_tn_par(u, &gz, v, d, d, par), par);
-                let gp = scale_par(1.0 - alpha, &gu, par);
-                let gh0c = scale_par(alpha, &gu, par);
+                let mut gz = ws.take_f32(v * d);
+                relu_bwd_par_into(hout, gout, &mut gz, par);
+                let mut gzw = ws.take_f32(v * d);
+                matmul_nt_par_into(&gz, w, v, d, d, &mut gzw, par);
+                let mut gu = ws.take_f32(v * d);
+                lincomb_par_into(1.0 - beta, &gz, beta, &gzw, &mut gu, par);
+                ws.give_f32(gzw);
+                let mut gw = ws.take_f32(d * d);
+                matmul_tn_par_into(u, &gz, v, d, d, &mut gw, par);
+                scale_inplace_par(beta, &mut gw, par);
+                ws.give_f32(gz);
+                let mut gp = ws.take_f32(v * d);
+                scale_par_into(1.0 - alpha, &gu, &mut gp, par);
+                let mut gh0c = ws.take_f32(v * d);
+                scale_par_into(alpha, &gu, &mut gh0c, par);
+                ws.give_f32(gu);
                 Ok(vec![
                     Value::mat_f32(d, d, gw),
                     Value::mat_f32(v, d, gp),
@@ -786,58 +1344,84 @@ impl NativeBackend {
             }
             "dense_bwd_mask" | "dense_bwd_nomask" => {
                 let masked = kind == "dense_bwd_mask";
-                let (x, v, din) = f32m(&inp[0])?;
-                let (gp, dout, w): (Vec<f32>, usize, &[f32]);
+                let (x, v, din) = f32m(inp[0])?;
+                let (dout, w): (usize, &[f32]);
+                let mut gp_buf = Vec::new();
+                let gp: &[f32];
                 if masked {
-                    let (out, _, dd) = f32m(&inp[1])?;
-                    let (g, _, _) = f32m(&inp[2])?;
-                    gp = relu_bwd_par(out, g, par);
+                    let (out, _, dd) = f32m(inp[1])?;
+                    let (g, _, _) = f32m(inp[2])?;
                     dout = dd;
-                    w = f32m(&inp[3])?.0;
+                    w = f32m(inp[3])?.0;
+                    gp_buf = ws.take_f32(v * dout);
+                    relu_bwd_par_into(out, g, &mut gp_buf, par);
+                    gp = &gp_buf;
                 } else {
-                    let (g, _, dd) = f32m(&inp[1])?;
-                    gp = g.to_vec();
+                    let (g, _, dd) = f32m(inp[1])?;
                     dout = dd;
-                    w = f32m(&inp[2])?.0;
+                    w = f32m(inp[2])?.0;
+                    gp = g;
                 }
-                let gw = matmul_tn_par(x, &gp, v, din, dout, par);
-                let gx = matmul_nt_par(&gp, w, v, dout, din, par);
+                let mut gw = ws.take_f32(din * dout);
+                matmul_tn_par_into(x, gp, v, din, dout, &mut gw, par);
+                let mut gx = ws.take_f32(v * din);
+                matmul_nt_par_into(gp, w, v, dout, din, &mut gx, par);
+                ws.give_f32(gp_buf);
                 Ok(vec![
                     Value::mat_f32(din, dout, gw),
                     Value::mat_f32(v, din, gx),
                 ])
             }
             "add" => {
-                let (a, v, d) = f32m(&inp[0])?;
-                let (b, _, _) = f32m(&inp[1])?;
-                Ok(vec![Value::mat_f32(v, d, add_par(a, b, par))])
+                let (a, v, d) = f32m(inp[0])?;
+                let (b, _, _) = f32m(inp[1])?;
+                let mut out = ws.take_f32(v * d);
+                add_par_into(a, b, &mut out, par);
+                Ok(vec![Value::mat_f32(v, d, out)])
             }
             "row_norms" => {
-                let (g, v, d) = f32m(&inp[0])?;
-                Ok(vec![Value::vec_f32(row_norms_par(g, v, d, par))])
+                let (g, v, d) = f32m(inp[0])?;
+                let mut out = ws.take_f32(v);
+                row_norms_par_into(g, v, d, &mut out, par);
+                Ok(vec![Value::vec_f32(out)])
             }
             "loss_softmax" => {
-                let (logits, v, c) = f32m(&inp[0])?;
+                let (logits, v, c) = f32m(inp[0])?;
                 let labels = inp[1].i32s()?;
                 let mask = inp[2].f32s()?;
-                let (loss, dl) = softmax_xent_par(logits, labels, mask, v, c, par);
-                Ok(vec![Value::scalar_f32(loss), Value::mat_f32(v, c, dl)])
+                let mut dl = ws.take_f32(v * c);
+                let loss = softmax_xent_par_into(logits, labels, mask, v, c, &mut dl, par);
+                let mut lbuf = ws.take_f32(1);
+                lbuf[0] = loss;
+                Ok(vec![
+                    Value::F32 { data: lbuf, shape: vec![] },
+                    Value::mat_f32(v, c, dl),
+                ])
             }
             "loss_bce" => {
-                let (logits, v, c) = f32m(&inp[0])?;
+                let (logits, v, c) = f32m(inp[0])?;
                 let labels = inp[1].f32s()?;
                 let mask = inp[2].f32s()?;
-                let (loss, dl) = bce_logits_par(logits, labels, mask, v, c, par);
-                Ok(vec![Value::scalar_f32(loss), Value::mat_f32(v, c, dl)])
+                let mut dl = ws.take_f32(v * c);
+                let loss = bce_logits_par_into(logits, labels, mask, v, c, &mut dl, par);
+                let mut lbuf = ws.take_f32(1);
+                lbuf[0] = loss;
+                Ok(vec![
+                    Value::F32 { data: lbuf, shape: vec![] },
+                    Value::mat_f32(v, c, dl),
+                ])
             }
             "adam" => {
-                let (w, r, c) = f32m(&inp[0])?;
+                let (w, r, c) = f32m(inp[0])?;
                 let m = inp[1].f32s()?;
                 let v = inp[2].f32s()?;
                 let g = inp[3].f32s()?;
                 let t = inp[4].item_f32()?;
                 let lr = inp[5].item_f32()?;
-                let (w2, m2, v2) = adam_par(w, m, v, g, t, lr, par);
+                let mut w2 = ws.take_f32(w.len());
+                let mut m2 = ws.take_f32(w.len());
+                let mut v2 = ws.take_f32(w.len());
+                adam_par_into(w, m, v, g, t, lr, &mut w2, &mut m2, &mut v2, par);
                 Ok(vec![
                     Value::mat_f32(r, c, w2),
                     Value::mat_f32(r, c, m2),
@@ -851,6 +1435,11 @@ impl NativeBackend {
 
 impl Backend for NativeBackend {
     fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = inputs.iter().collect();
+        self.run_ctx(name, &refs, ExecCtx::tagged(&[]))
+    }
+
+    fn run_ctx(&self, name: &str, inputs: &[&Value], ctx: ExecCtx<'_>) -> Result<Vec<Value>> {
         let def = self
             .manifest
             .ops
@@ -865,7 +1454,12 @@ impl Backend for NativeBackend {
         for (i, (v, spec)) in inputs.iter().zip(&def.inputs).enumerate() {
             v.check_shape(&spec.dtype, &spec.shape, &format!("{name} input {i}"))?;
         }
-        let out = self.dispatch(def, inputs)?;
+        let mut scratch = Workspace::new();
+        let ws = match ctx.ws {
+            Some(w) => w,
+            None => &mut scratch,
+        };
+        let out = self.dispatch(def, inputs, ctx.tags, ctx.plan, ws)?;
         for (v, spec) in out.iter().zip(&def.outputs) {
             v.check_shape(&spec.dtype, &spec.shape, &format!("{name} output"))?;
         }
@@ -1007,6 +1601,96 @@ mod tests {
     }
 
     #[test]
+    fn planned_spmm_is_bitwise_identical_to_oracle() {
+        prop::check("planned-spmm-bitwise", 30, |rng| {
+            let v = rng.range(1, 40);
+            let d = rng.range(1, 8);
+            let ne = rng.below(6 * v);
+            let src: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+            let dst: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+            let w: Vec<f32> = (0..ne)
+                .map(|_| if rng.chance(0.2) { 0.0 } else { rng.normal_f32() })
+                .collect();
+            let x = prop::vec_f32(rng, v * d, 1.0);
+            let want = spmm(&src, &dst, &w, &x, d, v);
+            for threads in [1, 2, 4, 7] {
+                let par = Parallelism::with_threads(threads).with_grain(1);
+                let plan = SpmmPlan::build(&dst, &w, v, par);
+                assert_eq!(want, spmm_planned(&plan, &src, &w, &x, d, par), "{threads} threads");
+            }
+        });
+    }
+
+    #[test]
+    fn planned_spmm_handles_padding_sentinels_and_empty() {
+        let p = par4();
+        // zero-weight padding with sentinel indices never read
+        let src = vec![0, 99, -7];
+        let dst = vec![1, 99, -7];
+        let w = vec![2.0, 0.0, 0.0];
+        let x = vec![1.0; 12];
+        let plan = SpmmPlan::build(&dst, &w, 4, p);
+        assert_eq!(
+            spmm(&src, &dst, &w, &x, 3, 4),
+            spmm_planned(&plan, &src, &w, &x, 3, p)
+        );
+        // empty edge list
+        let plan = SpmmPlan::build(&[], &[], 2, p);
+        assert_eq!(spmm_planned(&plan, &[], &[], &[1.0, 2.0], 1, p), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_oracles() {
+        let mut rng = Rng::new(41);
+        let (m, k, n) = (13, 9, 11);
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        // dirty buffers: into-kernels must not depend on prior contents
+        let mut out = vec![7.5f32; m * n];
+        matmul_into(&a, &b, m, k, n, &mut out);
+        assert_eq!(out, matmul(&a, &b, m, k, n));
+        let mut out = vec![7.5f32; k * n];
+        matmul_tn_into(&a, &b, m, k, n, &mut out);
+        assert_eq!(out, matmul_tn(&a, &b, m, k, n));
+        let bt = prop::vec_f32(&mut rng, n * k, 1.0);
+        let mut out = vec![7.5f32; m * k];
+        matmul_nt_into(&a, &bt, m, k, n, &mut out);
+        assert_eq!(out, matmul_nt(&a, &bt, m, k, n));
+
+        let x = prop::vec_f32(&mut rng, 501, 1.0);
+        let g = prop::vec_f32(&mut rng, 501, 1.0);
+        let mut out = vec![7.5f32; 501];
+        relu_into(&x, &mut out);
+        assert_eq!(out, relu(&x));
+        relu_bwd_into(&x, &g, &mut out);
+        assert_eq!(out, relu_bwd(&x, &g));
+        let mut ip = x.clone();
+        relu_inplace_par(&mut ip, par4());
+        assert_eq!(ip, relu(&x));
+
+        let (v, c) = (33, 5);
+        let logits = prop::vec_f32(&mut rng, v * c, 2.0);
+        let labels: Vec<i32> = (0..v).map(|i| (i % c) as i32).collect();
+        let mask: Vec<f32> = (0..v).map(|i| (i % 3 != 0) as i32 as f32).collect();
+        let mut dl = vec![7.5f32; v * c];
+        let loss = softmax_xent_into(&logits, &labels, &mask, v, c, &mut dl);
+        assert_eq!((loss, dl.clone()), softmax_xent(&logits, &labels, &mask, v, c));
+        let flabels: Vec<f32> = (0..v * c).map(|i| (i % 2) as f32).collect();
+        let loss = bce_logits_into(&logits, &flabels, &mask, v, c, &mut dl);
+        assert_eq!((loss, dl.clone()), bce_logits(&logits, &flabels, &mask, v, c));
+
+        let nn = 257;
+        let w = prop::vec_f32(&mut rng, nn, 1.0);
+        let mm = prop::vec_f32(&mut rng, nn, 0.1);
+        let vv: Vec<f32> = (0..nn).map(|_| rng.f32() * 0.1).collect();
+        let gg = prop::vec_f32(&mut rng, nn, 1.0);
+        let (mut w2, mut m2, mut v2) =
+            (vec![7.5f32; nn], vec![7.5f32; nn], vec![7.5f32; nn]);
+        adam_into(&w, &mm, &vv, &gg, 3.0, 0.01, &mut w2, &mut m2, &mut v2);
+        assert_eq!((w2, m2, v2), adam(&w, &mm, &vv, &gg, 3.0, 0.01));
+    }
+
+    #[test]
     fn par_losses_and_adam_are_bitwise_identical() {
         let mut rng = Rng::new(21);
         let (v, c) = (33, 5);
@@ -1047,6 +1731,11 @@ mod tests {
         assert_eq!(seq_add, acc);
         let seq_lin: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| 0.3 * x + 0.7 * y).collect();
         assert_eq!(seq_lin, lincomb_par(0.3, &a, 0.7, &b, par4()));
+        let seq_scale: Vec<f32> = a.iter().map(|&x| 0.3 * x).collect();
+        assert_eq!(seq_scale, scale_par(0.3, &a, par4()));
+        let mut ip = a.clone();
+        scale_inplace_par(0.3, &mut ip, par4());
+        assert_eq!(seq_scale, ip);
         assert_eq!(row_norms(&a, 3, 167), row_norms_par(&a, 3, 167, par4()));
     }
 

@@ -1,0 +1,294 @@
+//! Pre-built execution schedules for SpMM over a fixed edge list.
+//!
+//! `spmm_par` (runtime/native.rs) groups a COO edge list by destination
+//! row with a stable counting sort on *every call* — two full passes over
+//! the edges before any FLOP is done.  But the edge lists the training
+//! loop feeds it are static for many steps at a time: the forward edges
+//! never change, the exact backward selection never changes, and a cached
+//! sampled [`Selection`](crate::sampling::Selection) is reused for
+//! `refresh_every` steps.  An [`SpmmPlan`] hoists the grouping out of the
+//! kernel: built once per edge list, it records
+//!
+//! * `rowptr`/`order` — the CSR-style grouping of (non-padding) edge ids
+//!   by destination row, preserving the original edge order within each
+//!   row, and
+//! * `chunks` — an **nnz-balanced** partition of the output rows for the
+//!   parallel path, so a handful of heavy rows cannot serialize a chunk
+//!   (plain row-count chunking degrades badly on power-law graphs).
+//!
+//! Executing a plan ([`native::spmm_planned_into`]) touches each output
+//! row's edges in exactly the order the sequential oracle would, so the
+//! result is byte-identical to `spmm` for any thread count — the plan
+//! only moves *when* the grouping work happens, never *what* is computed.
+//!
+//! Plans are cached in a [`PlanCell`] living next to the edge list they
+//! describe (inside `Selection` and `GraphBufs`), so they are invalidated
+//! naturally: when the sample cache refreshes a selection, the old
+//! selection — and the plan riding on it — is dropped.  Process-wide
+//! hit/build counters ([`plan_stats`]) make the amortization visible next
+//! to the sample cache's own hit rate.
+
+use crate::util::parallel::Parallelism;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+static PLAN_BUILDS: AtomicU64 = AtomicU64::new(0);
+static PLAN_HITS: AtomicU64 = AtomicU64::new(0);
+
+/// (cache hits, plan builds) since process start or the last
+/// [`reset_plan_stats`].  A hit is a [`PlanCell::get_or_build`] that found
+/// the plan already built; in a cached steady state hits dominate builds
+/// the same way `SampleCache` hits dominate misses.
+pub fn plan_stats() -> (u64, u64) {
+    (
+        PLAN_HITS.load(Ordering::Relaxed),
+        PLAN_BUILDS.load(Ordering::Relaxed),
+    )
+}
+
+pub fn reset_plan_stats() {
+    PLAN_HITS.store(0, Ordering::Relaxed);
+    PLAN_BUILDS.store(0, Ordering::Relaxed);
+}
+
+/// A CSR-grouped, nnz-balanced execution schedule for one fixed
+/// (dst, w) edge list and output row count.
+#[derive(Debug, Clone)]
+pub struct SpmmPlan {
+    /// Output row count the plan was built for.
+    vout: usize,
+    /// Edge-list length the plan was built for (including padding).
+    ne: usize,
+    /// Non-padding (w != 0) edge count.
+    nnz: usize,
+    /// Immutability tag of the src edge input this plan describes (see
+    /// `Backend::run_tagged`); 0 = untagged, identity not checked.  Two
+    /// selections padded to the same bucket have identical `ne`/`vout`,
+    /// so shape checks alone cannot catch a stale plan — the tag can.
+    tag: u64,
+    /// `rowptr[t]..rowptr[t+1]` indexes `order` for destination row `t`.
+    rowptr: Vec<usize>,
+    /// Edge ids grouped by destination row, original order within a row.
+    order: Vec<u32>,
+    /// Contiguous output-row ranges with roughly equal retained nnz.
+    chunks: Vec<std::ops::Range<usize>>,
+}
+
+impl SpmmPlan {
+    /// Group `dst`/`w` by destination row (stable counting sort — the
+    /// same grouping `spmm_par` performs per call) and cut the rows into
+    /// nnz-balanced parallel chunks.  Zero-weight (padding) edges are
+    /// skipped before their `dst` is read, so sentinel indices in padding
+    /// are legal here exactly as they are in the kernels.
+    pub fn build(dst: &[i32], w: &[f32], vout: usize, par: Parallelism) -> SpmmPlan {
+        PLAN_BUILDS.fetch_add(1, Ordering::Relaxed);
+        let ne = dst.len();
+        let mut rowptr = vec![0usize; vout + 1];
+        for (e, &t) in dst.iter().enumerate() {
+            if w[e] == 0.0 {
+                continue;
+            }
+            rowptr[t as usize + 1] += 1;
+        }
+        for i in 0..vout {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let nnz = rowptr[vout];
+        let mut order = vec![0u32; nnz];
+        let mut cursor: Vec<usize> = rowptr[..vout].to_vec();
+        for (e, &t) in dst.iter().enumerate() {
+            if w[e] == 0.0 {
+                continue;
+            }
+            let t = t as usize;
+            order[cursor[t]] = e as u32;
+            cursor[t] += 1;
+        }
+        let chunks = balance_rows(&rowptr, vout, (par.threads() * 4).max(1));
+        SpmmPlan { vout, ne, nnz, tag: 0, rowptr, order, chunks }
+    }
+
+    /// Stamp the plan with the immutability tag of the src edge input it
+    /// was built from, enabling the dispatcher's identity check.
+    pub fn with_tag(mut self, tag: u64) -> SpmmPlan {
+        self.tag = tag;
+        self
+    }
+
+    /// The src-input immutability tag this plan describes (0 = untagged).
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    pub fn vout(&self) -> usize {
+        self.vout
+    }
+
+    /// Edge-list length (with padding) this plan describes; executing the
+    /// plan against a different edge list is a caller bug the dispatcher
+    /// rejects.
+    pub fn ne(&self) -> usize {
+        self.ne
+    }
+
+    /// Retained (non-padding) edge count.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// The edge ids of destination row `t`, in original edge order.
+    #[inline]
+    pub fn row_edges(&self, t: usize) -> &[u32] {
+        &self.order[self.rowptr[t]..self.rowptr[t + 1]]
+    }
+
+    /// Retained nnz in rows `range` (used for chunk-balance diagnostics).
+    pub fn range_nnz(&self, range: &std::ops::Range<usize>) -> usize {
+        self.rowptr[range.end] - self.rowptr[range.start]
+    }
+
+    pub fn chunks(&self) -> &[std::ops::Range<usize>] {
+        &self.chunks
+    }
+}
+
+/// Cut `0..vout` into at most `target` contiguous ranges of roughly equal
+/// retained nnz (empty trailing ranges are never emitted; every row is
+/// covered exactly once).
+fn balance_rows(
+    rowptr: &[usize],
+    vout: usize,
+    target: usize,
+) -> Vec<std::ops::Range<usize>> {
+    if vout == 0 {
+        return Vec::new();
+    }
+    let total = rowptr[vout];
+    let per = (total as f64 / target as f64).max(1.0);
+    let mut chunks = Vec::with_capacity(target.min(vout));
+    let mut start = 0usize;
+    for t in 0..vout {
+        // close the chunk once cumulative nnz crosses the next cut; keep
+        // the last chunk open so every row is covered
+        let cut = per * (chunks.len() + 1) as f64;
+        if chunks.len() + 1 < target && t + 1 < vout && rowptr[t + 1] as f64 >= cut {
+            chunks.push(start..t + 1);
+            start = t + 1;
+        }
+    }
+    chunks.push(start..vout);
+    chunks
+}
+
+/// Lazily-built, shareable plan cache for one edge list.  Lives inside
+/// `Selection` / `GraphBufs`; the first planned execution builds the plan,
+/// later ones reuse it.  Cloning a cell clones the *cached plan pointer*
+/// (not the plan), so cloned selections keep their amortization.
+#[derive(Debug, Default, Clone)]
+pub struct PlanCell {
+    cell: OnceLock<Arc<SpmmPlan>>,
+}
+
+impl PlanCell {
+    pub fn new() -> PlanCell {
+        PlanCell::default()
+    }
+
+    /// The cached plan, building it on first use.  `tag` is the src edge
+    /// input's immutability tag (0 = untagged), stamped into the plan so
+    /// the dispatcher can verify identity, not just shape.
+    pub fn get_or_build(
+        &self,
+        dst: &[i32],
+        w: &[f32],
+        vout: usize,
+        tag: u64,
+        par: Parallelism,
+    ) -> Arc<SpmmPlan> {
+        let mut built = false;
+        let p = self.cell.get_or_init(|| {
+            built = true;
+            Arc::new(SpmmPlan::build(dst, w, vout, par).with_tag(tag))
+        });
+        if !built {
+            PLAN_HITS.fetch_add(1, Ordering::Relaxed);
+        }
+        p.clone()
+    }
+
+    /// The cached plan if one has been built.
+    pub fn get(&self) -> Option<Arc<SpmmPlan>> {
+        self.cell.get().cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn par4() -> Parallelism {
+        Parallelism::with_threads(4).with_grain(1)
+    }
+
+    #[test]
+    fn plan_groups_edges_in_original_order() {
+        // edges landing on row 1 in order e0, e2, e3 (e1 is padding)
+        let dst = vec![1, -9, 1, 1, 0];
+        let w = vec![1.0, 0.0, 2.0, 3.0, 4.0];
+        let p = SpmmPlan::build(&dst, &w, 2, par4());
+        assert_eq!(p.nnz(), 4);
+        assert_eq!(p.ne(), 5);
+        assert_eq!(p.row_edges(0), &[4]);
+        assert_eq!(p.row_edges(1), &[0, 2, 3]);
+    }
+
+    #[test]
+    fn chunks_cover_all_rows_exactly_once() {
+        for vout in [0usize, 1, 3, 17, 100] {
+            let dst: Vec<i32> = (0..3 * vout).map(|e| (e % vout.max(1)) as i32).collect();
+            let w = vec![1.0f32; dst.len()];
+            let p = SpmmPlan::build(&dst, &w, vout, par4());
+            let mut covered = 0;
+            for (i, c) in p.chunks().iter().enumerate() {
+                assert_eq!(c.start, covered, "chunk {i} not contiguous");
+                assert!(c.end > c.start, "empty chunk {i}");
+                covered = c.end;
+            }
+            assert_eq!(covered, vout);
+        }
+    }
+
+    #[test]
+    fn chunks_balance_skewed_rows() {
+        // row 0 holds ~all edges; it must not drag half the rows with it
+        let mut dst = vec![0i32; 1000];
+        dst.extend((1..100).map(|t| t as i32));
+        let w = vec![1.0f32; dst.len()];
+        let p = SpmmPlan::build(&dst, &w, 100, Parallelism::with_threads(4));
+        let heavy = p.chunks().iter().find(|c| c.contains(&0)).unwrap();
+        assert!(
+            heavy.end - heavy.start < 50,
+            "heavy row chunk spans {heavy:?}"
+        );
+    }
+
+    #[test]
+    fn cell_builds_once_and_counts() {
+        let dst = vec![0, 1, 1];
+        let w = vec![1.0, 2.0, 3.0];
+        let cell = PlanCell::new();
+        assert!(cell.get().is_none());
+        let (h0, b0) = plan_stats();
+        let a = cell.get_or_build(&dst, &w, 2, 7, par4());
+        let b = cell.get_or_build(&dst, &w, 2, 7, par4());
+        assert!(Arc::ptr_eq(&a, &b), "second call must reuse the plan");
+        assert_eq!(a.tag(), 7);
+        let (h1, b1) = plan_stats();
+        assert!(b1 - b0 >= 1);
+        assert!(h1 - h0 >= 1);
+        // clone keeps the cached plan
+        let cloned = cell.clone();
+        assert!(cloned.get().is_some());
+        assert!(Arc::ptr_eq(&cloned.get().unwrap(), &a));
+    }
+}

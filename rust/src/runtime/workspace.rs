@@ -1,0 +1,203 @@
+//! Reusable output/activation buffers for the training hot loop.
+//!
+//! Every native kernel used to allocate a fresh `Vec<f32>` per call, so
+//! one training step churned one heap allocation per op per layer.  A
+//! [`Workspace`] closes the loop: the dispatcher *takes* output buffers
+//! from it, and the trainer/models *recycle* the previous step's
+//! activations, gradients and replaced parameters back into it.  After a
+//! warm-up step the pool holds one buffer per live tensor shape and the
+//! steady-state step performs **zero buffer allocations** — [`stats`]
+//! makes that measurable (`fresh` stops growing; the regression test in
+//! `tests/plan_workspace.rs` asserts it).
+//!
+//! Buffers are recycled by *capacity*, not length: `take_f32` picks the
+//! smallest spare whose capacity fits (best-fit, so a v×d activation
+//! doesn't squat in a v×c logits slot) and resizes it to the requested
+//! length.  **Contents are arbitrary** (stale values from the previous
+//! use) — every `*_into` kernel either zero-fills or fully overwrites
+//! its output, so re-zeroing here would add a redundant O(len) memory
+//! pass per op.  The rare caller that genuinely needs zeros (the GCNII
+//! residual accumulator) uses [`Workspace::take_zeroed_f32`].
+//!
+//! What still allocates in steady state, deliberately: op-name `format!`
+//! strings (tens of bytes, bounded by the op catalog) and rayon's internal
+//! job plumbing.  The contract here is about the O(V·d) tensor churn.
+
+use crate::runtime::value::Value;
+
+/// Keep at most this many spare buffers (trainer steady state needs well
+/// under this; the cap bounds memory if a caller leaks takes).
+const SPARE_CAP: usize = 64;
+
+#[derive(Debug, Default)]
+pub struct Workspace {
+    spares: Vec<Vec<f32>>,
+    taken: u64,
+    reused: u64,
+    fresh: u64,
+}
+
+/// Counters for the steady-state contract (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WorkspaceStats {
+    /// Total `take_f32` calls.
+    pub taken: u64,
+    /// Takes served from the spare pool without allocating.
+    pub reused: u64,
+    /// Takes that had to allocate a new buffer.
+    pub fresh: u64,
+    /// Spare buffers currently pooled.
+    pub spare: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A buffer of exactly `len` elements with **arbitrary contents**,
+    /// reusing a pooled spare when one is large enough (best-fit by
+    /// capacity).  Callers must fully overwrite or zero it themselves —
+    /// all `*_into` kernels do.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        self.taken += 1;
+        let mut best: Option<usize> = None;
+        for (i, b) in self.spares.iter().enumerate() {
+            if b.capacity() < len {
+                continue;
+            }
+            let tighter = match best {
+                None => true,
+                Some(j) => b.capacity() < self.spares[j].capacity(),
+            };
+            if tighter {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                self.reused += 1;
+                let mut b = self.spares.swap_remove(i);
+                // shrinks or grows to len; only a grown tail is written,
+                // existing contents stay (callers overwrite)
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.fresh += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// [`Workspace::take_f32`] plus an explicit zero fill, for the rare
+    /// consumer that accumulates into the buffer without initializing it.
+    pub fn take_zeroed_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut b = self.take_f32(len);
+        b.fill(0.0);
+        b
+    }
+
+    /// Return a buffer to the pool (dropped if the pool is full or the
+    /// buffer never allocated).
+    pub fn give_f32(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 && self.spares.len() < SPARE_CAP {
+            self.spares.push(buf);
+        }
+    }
+
+    /// Recycle a retired `Value`'s backing buffer (i32 values and shapes
+    /// are dropped; only the f32 tensor churn matters).
+    pub fn recycle(&mut self, v: Value) {
+        if let Value::F32 { data, .. } = v {
+            self.give_f32(data);
+        }
+    }
+
+    pub fn recycle_all(&mut self, vs: impl IntoIterator<Item = Value>) {
+        for v in vs {
+            self.recycle(v);
+        }
+    }
+
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            taken: self.taken,
+            reused: self.reused,
+            fresh: self.fresh,
+            spare: self.spares.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_and_zeroed_variant_zeroes() {
+        let mut ws = Workspace::new();
+        let mut b = ws.take_f32(100);
+        assert_eq!(b.len(), 100);
+        assert!(b.iter().all(|&x| x == 0.0), "fresh buffers start zeroed");
+        b[7] = 5.0;
+        ws.give_f32(b);
+        // plain take: correct length, contents unspecified (no memset)
+        let b2 = ws.take_f32(64);
+        assert_eq!(b2.len(), 64);
+        ws.give_f32(b2);
+        // zeroed take: explicit contract for accumulators
+        let b3 = ws.take_zeroed_f32(64);
+        assert!(b3.iter().all(|&x| x == 0.0), "take_zeroed_f32 must zero");
+        let s = ws.stats();
+        assert_eq!(s.taken, 3);
+        assert_eq!(s.reused, 2);
+        assert_eq!(s.fresh, 1);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        ws.give_f32(Vec::with_capacity(1000));
+        ws.give_f32(Vec::with_capacity(10));
+        let b = ws.take_f32(8);
+        assert!(b.capacity() < 1000, "should pick the 10-cap spare");
+        ws.give_f32(b);
+        let big = ws.take_f32(500);
+        assert!(big.capacity() >= 1000);
+    }
+
+    #[test]
+    fn steady_state_has_no_fresh_allocs() {
+        let mut ws = Workspace::new();
+        // warm-up: the shapes a "step" needs
+        for _ in 0..3 {
+            let a = ws.take_f32(128);
+            let b = ws.take_f32(32);
+            let c = ws.take_f32(128);
+            ws.recycle_all([
+                Value::vec_f32(a),
+                Value::vec_f32(b),
+                Value::mat_f32(16, 8, c),
+            ]);
+        }
+        let warm = ws.stats().fresh;
+        for _ in 0..50 {
+            let a = ws.take_f32(128);
+            let b = ws.take_f32(32);
+            let c = ws.take_f32(128);
+            ws.give_f32(a);
+            ws.give_f32(b);
+            ws.give_f32(c);
+        }
+        assert_eq!(ws.stats().fresh, warm, "steady state must not allocate");
+        assert!(ws.stats().reused >= 150);
+    }
+
+    #[test]
+    fn recycle_ignores_i32() {
+        let mut ws = Workspace::new();
+        ws.recycle(Value::vec_i32(vec![1, 2, 3]));
+        assert_eq!(ws.stats().spare, 0);
+    }
+}

@@ -1,8 +1,20 @@
 //! A realized pair selection: the chosen rows, their filtered transposed
 //! edge list, and the bucket the coordinator will dispatch to.
+//!
+//! A Selection also carries the two things the hot loop wants ready-made:
+//! the edge list wrapped as backend [`Value`]s (so cached steps pass
+//! borrowed operands instead of re-cloning three vectors per op) and a
+//! lazily-built [`SpmmPlan`] cache (so cached steps skip the per-call
+//! edge grouping entirely — see `runtime/plan.rs`).  Both ride along in
+//! the `SampleCache` entry and die with the Selection on refresh, which
+//! is exactly the invalidation the paper's caching mechanism needs.
 
 use crate::graph::{Csr, EdgeList};
+use crate::runtime::plan::PlanCell;
+use crate::runtime::{SpmmPlan, Value};
+use crate::util::parallel::Parallelism;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Global immutability-tag allocator (see `Backend::run_tagged`): every
 /// Selection gets three fresh tags (src/dst/w), so a cached Selection's
@@ -20,14 +32,21 @@ pub struct Selection {
     /// Selected pair indices (rows of A_hat), descending score order.
     pub rows: Vec<u32>,
     /// Retained edges (transposed orientation, `src = pair row`), padded
-    /// to `cap`.
-    pub edges: EdgeList,
+    /// to `cap` and wrapped as (src, dst, w) backend Values — the single
+    /// owner of the edge memory; the hot loop borrows these, and the
+    /// [`Selection::src`]/[`dst`](Selection::dst)/[`w`](Selection::w)
+    /// slice accessors serve everything else.
+    pub vals: (Value, Value, Value),
     /// Unpadded retained edge count.
     pub nnz: usize,
     /// Bucket capacity the edges are padded to (an AOT-compiled size).
     pub cap: usize,
+    /// Output row count of the SpMM this selection feeds (`adj.n`).
+    pub vout: usize,
     /// Base immutability tag: (tag, tag+1, tag+2) = (src, dst, w).
     pub tag: u64,
+    /// Lazily-built SpMM execution plan for the edges (see module docs).
+    plan: PlanCell,
 }
 
 impl Selection {
@@ -49,19 +68,65 @@ impl Selection {
         adj: &Csr,
         rows: Vec<u32>,
         caps: &[usize],
-        par: crate::util::parallel::Parallelism,
+        par: Parallelism,
     ) -> Selection {
         let mut edges = adj.transposed_edges_for_rows_with(&rows, par);
         let nnz = edges.len();
         let cap = pick_bucket(caps, nnz);
         edges.pad_to(cap);
-        Selection { rows, edges, nnz, cap, tag: fresh_tags() }
+        let EdgeList { src, dst, w } = edges;
+        let vals = (Value::vec_i32(src), Value::vec_i32(dst), Value::vec_f32(w));
+        Selection {
+            rows,
+            vals,
+            nnz,
+            cap,
+            vout: adj.n,
+            tag: fresh_tags(),
+            plan: PlanCell::new(),
+        }
     }
 
     /// The exact (no sampling) selection: every row, full edge list.
     pub fn exact(adj: &Csr, caps: &[usize]) -> Selection {
         let rows: Vec<u32> = (0..adj.n as u32).collect();
         Selection::build(adj, rows, caps)
+    }
+
+    /// Edge sources (pair rows), padded to `cap`.
+    pub fn src(&self) -> &[i32] {
+        self.vals.0.i32s().expect("selection src is i32")
+    }
+
+    /// Edge destinations, padded to `cap`.
+    pub fn dst(&self) -> &[i32] {
+        self.vals.1.i32s().expect("selection dst is i32")
+    }
+
+    /// Edge weights; entries `nnz..cap` are the zero padding.
+    pub fn w(&self) -> &[f32] {
+        self.vals.2.f32s().expect("selection w is f32")
+    }
+
+    /// Padded edge count (== `cap`).
+    pub fn len(&self) -> usize {
+        self.vals.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The cached SpMM plan for this selection's edges, built on first
+    /// use (`par` only shapes the plan's parallel chunking).
+    pub fn spmm_plan(&self, par: Parallelism) -> Arc<SpmmPlan> {
+        self.plan
+            .get_or_build(self.dst(), self.w(), self.vout, self.tag, par)
+    }
+
+    /// The plan if one has already been built (no build on miss).
+    pub fn peek_plan(&self) -> Option<Arc<SpmmPlan>> {
+        self.plan.get()
     }
 
     /// Retained FLOPs fraction relative to a full edge set of size m.
@@ -80,7 +145,7 @@ pub fn pick_bucket(caps: &[usize], nnz: usize) -> usize {
     panic!(
         "no bucket fits nnz {nnz} (largest cap {:?})",
         caps.last()
-    );
+    )
 }
 
 #[cfg(test)]
@@ -114,10 +179,14 @@ mod tests {
         let sel = Selection::build(&adj, rows.clone(), &caps);
         let expect_nnz: usize = rows.iter().map(|&r| adj.row_nnz(r as usize)).sum();
         assert_eq!(sel.nnz, expect_nnz);
-        assert_eq!(sel.edges.len(), sel.cap);
+        assert_eq!(sel.len(), sel.cap);
         assert!(sel.cap >= sel.nnz);
         // padding is null edges
-        assert!(sel.edges.w[sel.nnz..].iter().all(|&w| w == 0.0));
+        assert!(sel.w()[sel.nnz..].iter().all(|&w| w == 0.0));
+        // the slice accessors and the backend Values are the same memory
+        assert_eq!(sel.vals.0.i32s().unwrap(), sel.src());
+        assert_eq!(sel.vals.2.f32s().unwrap(), sel.w());
+        assert_eq!(sel.vout, adj.n);
     }
 
     #[test]
@@ -129,6 +198,24 @@ mod tests {
         assert_eq!(sel.nnz, adj.nnz());
         assert_eq!(sel.cap, adj.nnz());
         assert!((sel.flops_fraction(adj.nnz()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_is_cached_per_selection() {
+        let mut rng = Rng::new(3);
+        let adj = Csr::random(12, 40, &mut rng);
+        let caps = vec![adj.nnz().max(1)];
+        let sel = Selection::exact(&adj, &caps);
+        assert!(sel.peek_plan().is_none(), "plan must be lazy");
+        let par = Parallelism::with_threads(2).with_grain(1);
+        let p1 = sel.spmm_plan(par);
+        let p2 = sel.spmm_plan(par);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(p1.vout(), adj.n);
+        assert_eq!(p1.nnz(), sel.nnz);
+        // a clone (e.g. a cached entry handed out) keeps the built plan
+        let cloned = sel.clone();
+        assert!(cloned.peek_plan().is_some());
     }
 
     #[test]
@@ -145,7 +232,7 @@ mod tests {
             let caps = vec![adj.nnz().max(1)];
             let sel = Selection::build(&adj, rows.clone(), &caps);
             for i in 0..sel.nnz {
-                assert!(rows.contains(&(sel.edges.src[i] as u32)));
+                assert!(rows.contains(&(sel.src()[i] as u32)));
             }
         });
     }

@@ -1,6 +1,13 @@
 //! The training loop: full-batch (GCN / GraphSAGE / GCNII) and
 //! GraphSAINT mini-batch, with the RSC engine in the backward path.
 //!
+//! The trainer owns the run's [`Workspace`]: models draw every output
+//! buffer from it and recycle retired activations/gradients back, so the
+//! steady-state step performs no tensor allocation (the `ws` field of
+//! [`TrainResult`] reports the reuse counters).  SpMM plan-cache
+//! hit/build deltas are reported next to the sample-cache stats — in a
+//! cached steady state both are dominated by hits.
+//!
 //! Reports everything the paper's tables and figures need: the metric at
 //! the best-validation epoch, wall-clock, per-op-class time attribution,
 //! the allocation history (Fig. 7), picked-pair degrees (Fig. 8),
@@ -13,7 +20,7 @@ use crate::model::gcn::GcnModel;
 use crate::model::gcnii::GcniiModel;
 use crate::model::ops::{GraphBufs, ModelKind, OpNames};
 use crate::model::sage::SageModel;
-use crate::runtime::{Backend, Value};
+use crate::runtime::{plan_stats, Backend, Value, Workspace, WorkspaceStats};
 use crate::train::metrics::MetricKind;
 use crate::util::parallel;
 use crate::util::rng::Rng;
@@ -71,6 +78,12 @@ pub struct TrainResult {
     pub sample_ms: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// SpMM plan-cache (hits, builds) during this run.  Process-global
+    /// counters, so the delta is an upper bound under concurrent runs.
+    pub plan_hits: u64,
+    pub plan_builds: u64,
+    /// Workspace reuse counters for the run's hot loop.
+    pub ws: WorkspaceStats,
     /// Worker threads of the run's [`parallel::Parallelism`] (1 =
     /// sequential) — set the CLI's `--threads` or `RSC_THREADS` to
     /// control it; results are identical either way (DESIGN.md
@@ -107,11 +120,13 @@ pub fn train(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainRe
 fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
     let mut rng = Rng::new(cfg.seed ^ 0x7A31);
     let names = OpNames::full();
-    let bufs = full_graph_bufs(b, ds, cfg.model);
+    let mut bufs = full_graph_bufs(b, ds, cfg.model);
+    bufs.plan_cache = cfg.rsc.plan_cache;
     let x = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
     let labels = labels_value(ds);
     let train_mask = Value::vec_f32(ds.mask(Split::Train));
     let metric = MetricKind::for_dataset(ds);
+    let (plan_hits0, plan_builds0) = plan_stats();
 
     let widths: Vec<usize> = (0..cfg.model.n_spmm_bwd(&ds.cfg))
         .map(|s| cfg.model.spmm_width(&ds.cfg, s))
@@ -130,6 +145,7 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
         ModelKind::Saint => unreachable!(),
     };
 
+    let mut ws = Workspace::new();
     let mut tb = TimeBook::new();
     let mut loss_curve = Vec::with_capacity(cfg.epochs);
     let mut val_curve = Vec::new();
@@ -142,13 +158,16 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
         let step = epoch as u64;
         let loss = match &mut model {
             AnyModel::Gcn(m) => m.train_step(
-                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb, None,
+                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
+                &mut ws, None,
             )?,
             AnyModel::Sage(m) => m.train_step(
                 b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
+                &mut ws,
             )?,
             AnyModel::Gcnii(m) => m.train_step(
                 b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
+                &mut ws,
             )?,
         };
         ensure!(loss.is_finite(), "loss diverged at epoch {epoch}: {loss}");
@@ -156,9 +175,9 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
 
         if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
             let logits = match &model {
-                AnyModel::Gcn(m) => m.logits(b, &x, &bufs, &mut eval_tb)?,
-                AnyModel::Sage(m) => m.logits(b, &x, &bufs, &mut eval_tb)?,
-                AnyModel::Gcnii(m) => m.logits(b, &x, &bufs, &mut eval_tb)?,
+                AnyModel::Gcn(m) => m.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?,
+                AnyModel::Sage(m) => m.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?,
+                AnyModel::Gcnii(m) => m.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?,
             };
             let lf = logits.f32s()?;
             let val = metric.evaluate(ds, lf, Split::Val);
@@ -174,10 +193,12 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
                     engine.ks()
                 );
             }
+            ws.recycle(logits);
         }
     }
     let train_wall_s = sw.elapsed().as_secs_f64() - eval_tb.grand_total_ms() / 1e3;
     let (cache_hits, cache_misses) = engine.cache_stats();
+    let (plan_hits1, plan_builds1) = plan_stats();
     Ok(TrainResult {
         test_metric: test_at_best,
         best_val,
@@ -193,6 +214,9 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
         sample_ms: engine.sample_ms,
         cache_hits,
         cache_misses,
+        plan_hits: plan_hits1.saturating_sub(plan_hits0),
+        plan_builds: plan_builds1.saturating_sub(plan_builds0),
+        ws: ws.stats(),
         threads: parallel::global().threads(),
     })
 }
@@ -203,6 +227,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     ensure!(ds.cfg.saint_v > 0, "dataset {} has no SAINT config", ds.cfg.name);
     let mut rng = Rng::new(cfg.seed ^ 0x5417);
     let metric = MetricKind::for_dataset(ds);
+    let (plan_hits0, plan_builds0) = plan_stats();
 
     // --- offline sampling ---
     let sampler = SaintSampler::for_dataset(ds);
@@ -224,7 +249,9 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                 }
             }
             let padded = crate::graph::Csr::from_triples(ds.cfg.saint_v, triples);
-            GraphBufs::new_padded(padded.mean_normalize(), saint_caps.clone())
+            let mut gb = GraphBufs::new_padded(padded.mean_normalize(), saint_caps.clone());
+            gb.plan_cache = cfg.rsc.plan_cache;
+            gb
         })
         .collect();
     let sub_x: Vec<Value> = subs
@@ -260,9 +287,11 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let mut model = SageModel::new(&ds.cfg, OpNames::saint(), &mut rng);
 
     // full-graph eval buffers
-    let eval_bufs = full_graph_bufs(b, ds, ModelKind::Sage);
+    let mut eval_bufs = full_graph_bufs(b, ds, ModelKind::Sage);
+    eval_bufs.plan_cache = cfg.rsc.plan_cache;
     let x_full = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
 
+    let mut ws = Workspace::new();
     let mut tb = TimeBook::new();
     let mut eval_tb = TimeBook::new();
     let mut loss_curve = Vec::new();
@@ -289,6 +318,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                 step,
                 cfg.lr,
                 &mut tb,
+                &mut ws,
             )?;
             ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
             epoch_loss += loss;
@@ -298,7 +328,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
             // evaluate with full-batch ops: same weights, full prefix names
             let saved = std::mem::replace(&mut model.names, OpNames::full());
-            let logits = model.logits(b, &x_full, &eval_bufs, &mut eval_tb)?;
+            let logits = model.logits(b, &x_full, &eval_bufs, &mut eval_tb, &mut ws)?;
             model.names = saved;
             let lf = logits.f32s()?;
             let val = metric.evaluate(ds, lf, Split::Val);
@@ -312,6 +342,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                 println!("epoch {epoch:4} loss {:.4} val {val:.4} test {test:.4}",
                     loss_curve.last().unwrap());
             }
+            ws.recycle(logits);
         }
     }
     let train_wall_s = sw.elapsed().as_secs_f64() - eval_tb.grand_total_ms() / 1e3;
@@ -329,6 +360,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         alloc_ms += e.alloc_ms;
         sample_ms += e.sample_ms;
     }
+    let (plan_hits1, plan_builds1) = plan_stats();
     Ok(TrainResult {
         test_metric: test_at_best,
         best_val,
@@ -344,6 +376,9 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         sample_ms,
         cache_hits: hits,
         cache_misses: misses,
+        plan_hits: plan_hits1.saturating_sub(plan_hits0),
+        plan_builds: plan_builds1.saturating_sub(plan_builds0),
+        ws: ws.stats(),
         threads: parallel::global().threads(),
     })
 }

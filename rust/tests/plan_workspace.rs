@@ -1,0 +1,465 @@
+//! The plan-cache / workspace contract, end to end and without AOT
+//! artifacts: a hand-built manifest drives the NativeBackend's `run_ctx`
+//! so we can assert (1) planned SpMM dispatch is byte-identical to the
+//! plain `run` path for any thread count, (2) every `*_into` kernel
+//! matches its allocating oracle on dirty buffers, and (3) a simulated
+//! training hot loop stops allocating workspace buffers after warm-up.
+
+use rsc::cache::SampleCache;
+use rsc::graph::Csr;
+use rsc::runtime::manifest::{Manifest, ManifestDataset, OpDef, TensorSpec};
+use rsc::runtime::{native, Backend, ExecCtx, NativeBackend, SpmmPlan, Value, Workspace};
+use rsc::sampling::Selection;
+use rsc::util::json::Json;
+use rsc::util::parallel::{self, Parallelism};
+use rsc::util::prop;
+use rsc::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn par_n(threads: usize) -> Parallelism {
+    Parallelism::with_threads(threads).with_grain(1)
+}
+
+fn f32_spec(shape: &[usize]) -> TensorSpec {
+    TensorSpec { dtype: "f32".to_string(), shape: shape.to_vec() }
+}
+
+fn i32_spec(shape: &[usize]) -> TensorSpec {
+    TensorSpec { dtype: "i32".to_string(), shape: shape.to_vec() }
+}
+
+fn op(name: &str, meta: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> OpDef {
+    OpDef {
+        name: name.to_string(),
+        file: PathBuf::from("synthetic"),
+        inputs,
+        outputs,
+        meta: Json::parse(meta).unwrap(),
+    }
+}
+
+/// A minimal synthetic manifest covering the op kinds the hot loop uses:
+/// a fused GCN forward, a backward SpMM, the dense backward pair, the
+/// softmax loss and Adam — enough to emulate a training step against
+/// `run_ctx` without any artifacts on disk.
+fn synthetic_backend(v: usize, d: usize, c: usize, ne: usize) -> NativeBackend {
+    let mut ops = BTreeMap::new();
+    ops.insert(
+        "t_gcn_fwd".to_string(),
+        op(
+            "t_gcn_fwd",
+            r#"{"kind": "gcn_fwd", "relu": true}"#,
+            vec![
+                f32_spec(&[v, d]),
+                f32_spec(&[d, d]),
+                i32_spec(&[ne]),
+                i32_spec(&[ne]),
+                f32_spec(&[ne]),
+            ],
+            vec![f32_spec(&[v, d])],
+        ),
+    );
+    ops.insert(
+        "t_spmm_bwd".to_string(),
+        op(
+            "t_spmm_bwd",
+            r#"{"kind": "spmm_bwd_nomask"}"#,
+            vec![
+                f32_spec(&[v, d]),
+                i32_spec(&[ne]),
+                i32_spec(&[ne]),
+                f32_spec(&[ne]),
+            ],
+            vec![f32_spec(&[v, d])],
+        ),
+    );
+    ops.insert(
+        "t_bwd_mm".to_string(),
+        op(
+            "t_bwd_mm",
+            r#"{"kind": "gcn_bwd_mm"}"#,
+            vec![f32_spec(&[v, d]), f32_spec(&[v, d]), f32_spec(&[d, d])],
+            vec![f32_spec(&[d, d]), f32_spec(&[v, d])],
+        ),
+    );
+    ops.insert(
+        "t_loss".to_string(),
+        op(
+            "t_loss",
+            r#"{"kind": "loss_softmax"}"#,
+            vec![f32_spec(&[v, c]), i32_spec(&[v]), f32_spec(&[v])],
+            vec![f32_spec(&[]), f32_spec(&[v, c])],
+        ),
+    );
+    ops.insert(
+        "t_adam".to_string(),
+        op(
+            "t_adam",
+            r#"{"kind": "adam"}"#,
+            vec![
+                f32_spec(&[d, d]),
+                f32_spec(&[d, d]),
+                f32_spec(&[d, d]),
+                f32_spec(&[d, d]),
+                f32_spec(&[]),
+                f32_spec(&[]),
+            ],
+            vec![f32_spec(&[d, d]), f32_spec(&[d, d]), f32_spec(&[d, d])],
+        ),
+    );
+    let dataset = ManifestDataset {
+        name: "synthetic".to_string(),
+        v,
+        e: ne,
+        m: ne,
+        d_in: d,
+        d_h: d,
+        n_class: c,
+        multilabel: false,
+        layers: 1,
+        gcnii_layers: 1,
+        saint_v: 0,
+        saint_m: 0,
+        caps: vec![ne],
+        saint_caps: vec![],
+    };
+    NativeBackend::from_manifest(Manifest { dataset, ops })
+}
+
+/// Random padded edge list: real edges plus zero-weight padding carrying
+/// sentinel indices (legal because w == 0 edges are never dereferenced).
+fn random_edges(rng: &mut Rng, v: usize, ne: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let src: Vec<i32> = (0..ne)
+        .map(|i| if i % 7 == 3 { -9 } else { rng.below(v) as i32 })
+        .collect();
+    let mut dst: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+    let w: Vec<f32> = (0..ne)
+        .map(|i| if i % 7 == 3 { 0.0 } else { rng.normal_f32() })
+        .collect();
+    for i in 0..ne {
+        if i % 7 == 3 {
+            dst[i] = 99_999; // sentinel in padding
+        }
+    }
+    (src, dst, w)
+}
+
+#[test]
+fn run_ctx_with_plan_is_identical_to_run_for_any_thread_count() {
+    let (v, d, c, ne) = (37, 8, 4, 150);
+    let b = synthetic_backend(v, d, c, ne);
+    let mut rng = Rng::new(0x51);
+    let (src, dst, w) = random_edges(&mut rng, v, ne);
+    let g = Value::mat_f32(v, d, prop::vec_f32(&mut rng, v * d, 1.0));
+    let sv = Value::vec_i32(src.clone());
+    let dv = Value::vec_i32(dst.clone());
+    let wv = Value::vec_f32(w.clone());
+
+    let want = b
+        .run("t_spmm_bwd", &[g.clone(), sv.clone(), dv.clone(), wv.clone()])
+        .unwrap();
+    for threads in [1, 2, 4, 8] {
+        let par = par_n(threads);
+        let bt = synthetic_backend(v, d, c, ne).with_parallelism(par);
+        let plan = SpmmPlan::build(&dst, &w, v, par);
+        let mut ws = Workspace::new();
+        let got = bt
+            .run_ctx(
+                "t_spmm_bwd",
+                &[&g, &sv, &dv, &wv],
+                ExecCtx { tags: &[], plan: Some(&plan), ws: Some(&mut ws) },
+            )
+            .unwrap();
+        assert_eq!(want, got, "planned run_ctx drifted at {threads} threads");
+        // fused fwd op too (matmul -> planned spmm -> relu)
+        let wmat = Value::mat_f32(d, d, prop::vec_f32(&mut rng, d * d, 0.5));
+        let plain = bt
+            .run("t_gcn_fwd", &[g.clone(), wmat.clone(), sv.clone(), dv.clone(), wv.clone()])
+            .unwrap();
+        let planned = bt
+            .run_ctx(
+                "t_gcn_fwd",
+                &[&g, &wmat, &sv, &dv, &wv],
+                ExecCtx { tags: &[], plan: Some(&plan), ws: Some(&mut ws) },
+            )
+            .unwrap();
+        assert_eq!(plain, planned, "fused fwd drifted at {threads} threads");
+    }
+}
+
+#[test]
+fn run_ctx_rejects_mismatched_plan() {
+    let (v, d, c, ne) = (20, 4, 3, 60);
+    let b = synthetic_backend(v, d, c, ne);
+    let mut rng = Rng::new(0x52);
+    let (src, dst, w) = random_edges(&mut rng, v, ne);
+    let g = Value::mat_f32(v, d, prop::vec_f32(&mut rng, v * d, 1.0));
+    let (sv, dv, wv) = (
+        Value::vec_i32(src),
+        Value::vec_i32(dst.clone()),
+        Value::vec_f32(w.clone()),
+    );
+    // plan built for a different edge-list length must be rejected, not
+    // silently misused
+    let stale = SpmmPlan::build(&dst[..ne - 1], &w[..ne - 1], v, par_n(2));
+    let err = b
+        .run_ctx(
+            "t_spmm_bwd",
+            &[&g, &sv, &dv, &wv],
+            ExecCtx { tags: &[], plan: Some(&stale), ws: None },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("plan mismatch"), "{err:#}");
+
+    // same shapes but a different identity tag: two selections padded to
+    // the same bucket are indistinguishable by shape, so the tag check
+    // must catch the stale plan
+    let tagged = SpmmPlan::build(&dst, &w, v, par_n(2)).with_tag(42);
+    let err = b
+        .run_ctx(
+            "t_spmm_bwd",
+            &[&g, &sv, &dv, &wv],
+            ExecCtx { tags: &[0, 7, 8, 9], plan: Some(&tagged), ws: None },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("edge tag"), "{err:#}");
+    // matching tag passes
+    b.run_ctx(
+        "t_spmm_bwd",
+        &[&g, &sv, &dv, &wv],
+        ExecCtx { tags: &[0, 42, 43, 44], plan: Some(&tagged), ws: None },
+    )
+    .unwrap();
+}
+
+#[test]
+fn hot_loop_stops_allocating_after_warmup() {
+    // Emulates one training step's op mix through run_ctx, recycling
+    // retired values exactly like the models do.  After warm-up, the
+    // workspace must serve every take from its pool.
+    let (v, d, c, ne) = (64, 8, 8, 300);
+    let b = synthetic_backend(v, d, c, ne).with_parallelism(par_n(4));
+    let mut rng = Rng::new(0x53);
+    let (src, dst, w) = random_edges(&mut rng, v, ne);
+    let plan = SpmmPlan::build(&dst, &w, v, par_n(4));
+    let (sv, dv, wv) = (
+        Value::vec_i32(src),
+        Value::vec_i32(dst),
+        Value::vec_f32(w),
+    );
+    let x = Value::mat_f32(v, d, prop::vec_f32(&mut rng, v * d, 1.0));
+    let labels = Value::vec_i32((0..v).map(|i| (i % c) as i32).collect());
+    let mask = Value::vec_f32(vec![1.0; v]);
+    let mut wmat = Value::mat_f32(d, d, prop::vec_f32(&mut rng, d * d, 0.3));
+    let mut mmom = Value::mat_f32(d, d, vec![0.0; d * d]);
+    let mut vmom = Value::mat_f32(d, d, vec![0.0; d * d]);
+
+    let mut ws = Workspace::new();
+    let mut fresh_after_warmup = 0;
+    for step in 0..40 {
+        let h = b
+            .run_ctx(
+                "t_gcn_fwd",
+                &[&x, &wmat, &sv, &dv, &wv],
+                ExecCtx { tags: &[], plan: Some(&plan), ws: Some(&mut ws) },
+            )
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap();
+        let mut loss_out = b
+            .run_ctx(
+                "t_loss",
+                &[&h, &labels, &mask],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut ws) },
+            )
+            .unwrap()
+            .into_iter();
+        let loss = loss_out.next().unwrap();
+        let g = loss_out.next().unwrap();
+        ws.recycle(loss);
+        let gj = b
+            .run_ctx(
+                "t_spmm_bwd",
+                &[&g, &sv, &dv, &wv],
+                ExecCtx { tags: &[], plan: Some(&plan), ws: Some(&mut ws) },
+            )
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap();
+        ws.recycle(g);
+        let mut mm = b
+            .run_ctx(
+                "t_bwd_mm",
+                &[&x, &gj, &wmat],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut ws) },
+            )
+            .unwrap()
+            .into_iter();
+        let gw = mm.next().unwrap();
+        let gh = mm.next().unwrap();
+        ws.recycle_all([gj, gh, h]);
+        let t_val = Value::scalar_f32((step + 1) as f32);
+        let lr_val = Value::scalar_f32(0.01);
+        let mut upd = b
+            .run_ctx(
+                "t_adam",
+                &[&wmat, &mmom, &vmom, &gw, &t_val, &lr_val],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut ws) },
+            )
+            .unwrap()
+            .into_iter();
+        let w_new = upd.next().unwrap();
+        let m_new = upd.next().unwrap();
+        let v_new = upd.next().unwrap();
+        ws.recycle(std::mem::replace(&mut wmat, w_new));
+        ws.recycle(std::mem::replace(&mut mmom, m_new));
+        ws.recycle(std::mem::replace(&mut vmom, v_new));
+        ws.recycle(gw);
+
+        if step == 5 {
+            fresh_after_warmup = ws.stats().fresh;
+        }
+    }
+    let s = ws.stats();
+    assert!(s.taken >= 40 * 8, "hot loop should draw from the workspace");
+    assert_eq!(
+        s.fresh, fresh_after_warmup,
+        "steady-state step allocated fresh buffers: {s:?}"
+    );
+}
+
+#[test]
+fn prop_planned_spmm_matches_oracle_on_random_graphs() {
+    prop::check("planned-spmm-csr", 30, |rng| {
+        let n = rng.range(1, 50);
+        let nnz = rng.below(5 * n);
+        let m = Csr::random(n, nnz, rng);
+        let d = rng.range(1, 9);
+        let mut e = m.to_edge_list();
+        if rng.chance(0.5) {
+            e.pad_to(e.len() + rng.below(2 * n + 1));
+        }
+        let x = prop::vec_f32(rng, n * d, 1.0);
+        let want = native::spmm(&e.src, &e.dst, &e.w, &x, d, n);
+        for threads in [1, 3, 8] {
+            let par = par_n(threads);
+            let plan = SpmmPlan::build(&e.dst, &e.w, n, par);
+            assert_eq!(
+                want,
+                native::spmm_planned(&plan, &e.src, &e.w, &x, d, par),
+                "{threads} threads"
+            );
+            // _into with a dirty buffer
+            let mut out = vec![3.25f32; n * d];
+            native::spmm_planned_into(&plan, &e.src, &e.w, &x, d, &mut out, par);
+            assert_eq!(want, out);
+        }
+    });
+}
+
+#[test]
+fn prop_par_into_kernels_match_oracles_on_dirty_buffers() {
+    prop::check("par-into-oracle", 25, |rng| {
+        let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 20));
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let par = par_n(rng.range(1, 6));
+        let mut out = vec![9.5f32; m * n];
+        native::matmul_par_into(&a, &b, m, k, n, &mut out, par);
+        assert_eq!(out, native::matmul(&a, &b, m, k, n));
+        let mut out = vec![9.5f32; k * n];
+        native::matmul_tn_par_into(&a, &b, m, k, n, &mut out, par);
+        assert_eq!(out, native::matmul_tn(&a, &b, m, k, n));
+        let bt = prop::vec_f32(rng, n * k, 1.0);
+        let mut out = vec![9.5f32; m * k];
+        native::matmul_nt_par_into(&a, &bt, m, k, n, &mut out, par);
+        assert_eq!(out, native::matmul_nt(&a, &bt, m, k, n));
+
+        let len = rng.range(1, 400);
+        let xs = prop::vec_f32(rng, len, 1.0);
+        let ys = prop::vec_f32(rng, len, 1.0);
+        let mut out = vec![9.5f32; len];
+        native::relu_par_into(&xs, &mut out, par);
+        assert_eq!(out, native::relu(&xs));
+        native::relu_bwd_par_into(&xs, &ys, &mut out, par);
+        assert_eq!(out, native::relu_bwd(&xs, &ys));
+        native::add_par_into(&xs, &ys, &mut out, par);
+        assert_eq!(out, native::add_par(&xs, &ys, Parallelism::sequential()));
+        native::lincomb_par_into(0.4, &xs, 0.6, &ys, &mut out, par);
+        assert_eq!(
+            out,
+            native::lincomb_par(0.4, &xs, 0.6, &ys, Parallelism::sequential())
+        );
+        native::scale_par_into(1.7, &xs, &mut out, par);
+        assert_eq!(out, native::scale_par(1.7, &xs, Parallelism::sequential()));
+    });
+}
+
+#[test]
+fn prop_loss_and_adam_par_into_match_oracles() {
+    prop::check("loss-adam-into", 20, |rng| {
+        let v = rng.range(1, 40);
+        let c = rng.range(2, 8);
+        let par = par_n(rng.range(1, 6));
+        let logits = prop::vec_f32(rng, v * c, 2.0);
+        let labels: Vec<i32> = (0..v).map(|_| rng.below(c) as i32).collect();
+        let mask: Vec<f32> = (0..v).map(|_| rng.chance(0.7) as i32 as f32).collect();
+        let mut dl = vec![9.5f32; v * c];
+        let loss = native::softmax_xent_par_into(&logits, &labels, &mask, v, c, &mut dl, par);
+        assert_eq!((loss, dl.clone()), native::softmax_xent(&logits, &labels, &mask, v, c));
+        let fl: Vec<f32> = (0..v * c).map(|_| rng.chance(0.5) as i32 as f32).collect();
+        let loss = native::bce_logits_par_into(&logits, &fl, &mask, v, c, &mut dl, par);
+        assert_eq!((loss, dl.clone()), native::bce_logits(&logits, &fl, &mask, v, c));
+
+        let n = rng.range(1, 300);
+        let w = prop::vec_f32(rng, n, 1.0);
+        let m = prop::vec_f32(rng, n, 0.1);
+        let vm: Vec<f32> = (0..n).map(|_| rng.f32() * 0.1).collect();
+        let g = prop::vec_f32(rng, n, 1.0);
+        let (mut w2, mut m2, mut v2) =
+            (vec![9.5f32; n], vec![9.5f32; n], vec![9.5f32; n]);
+        native::adam_par_into(&w, &m, &vm, &g, 2.0, 0.02, &mut w2, &mut m2, &mut v2, par);
+        assert_eq!((w2, m2, v2), native::adam(&w, &m, &vm, &g, 2.0, 0.02));
+    });
+}
+
+#[test]
+fn sample_cache_refresh_drops_the_cached_plan() {
+    let mut rng = Rng::new(0x54);
+    let adj = Csr::random(30, 90, &mut rng);
+    let caps = vec![adj.nnz()];
+    let mut cache = SampleCache::new(1, 5);
+    let par = par_n(2);
+    let sel = cache.get_or_build(0, 0, 4, &adj, &caps, parallel::global(), || vec![0, 1, 2, 3]);
+    let p0 = sel.spmm_plan(par);
+    // cache hit within the refresh window: same selection, same plan
+    let sel = cache.get_or_build(0, 3, 4, &adj, &caps, parallel::global(), || unreachable!());
+    assert!(std::sync::Arc::ptr_eq(&p0, &sel.spmm_plan(par)));
+    // refresh: new selection, plan gone until rebuilt
+    let sel = cache.get_or_build(0, 5, 4, &adj, &caps, parallel::global(), || vec![0, 1, 2, 3]);
+    assert!(sel.peek_plan().is_none(), "refresh must invalidate the plan");
+    let p1 = sel.spmm_plan(par);
+    assert!(!std::sync::Arc::ptr_eq(&p0, &p1));
+}
+
+#[test]
+fn selection_plan_matches_selection_edges() {
+    let mut rng = Rng::new(0x55);
+    let adj = Csr::random(25, 80, &mut rng);
+    let caps = vec![adj.nnz() / 2, adj.nnz()];
+    let sel = Selection::build(&adj, (0..12).collect(), &caps);
+    let par = par_n(3);
+    let plan = sel.spmm_plan(par);
+    assert_eq!(plan.ne(), sel.len());
+    assert_eq!(plan.nnz(), sel.nnz);
+    assert_eq!(plan.vout(), adj.n);
+    let d = 5;
+    let x = prop::vec_f32(&mut rng, adj.n * d, 1.0);
+    assert_eq!(
+        native::spmm(sel.src(), sel.dst(), sel.w(), &x, d, adj.n),
+        native::spmm_planned(&plan, sel.src(), sel.w(), &x, d, par)
+    );
+}

@@ -57,9 +57,7 @@ fn prop_selection_partition_sums_to_exact() {
         let s1 = Selection::build(&adj, rows, &caps);
         let s2 = Selection::build(&adj, comp, &caps);
         let full = Selection::exact(&adj, &caps);
-        let run = |s: &Selection| {
-            native::spmm(&s.edges.src, &s.edges.dst, &s.edges.w, &x, d, v)
-        };
+        let run = |s: &Selection| native::spmm(s.src(), s.dst(), s.w(), &x, d, v);
         let y1 = run(&s1);
         let y2 = run(&s2);
         let yf = run(&full);
@@ -318,7 +316,7 @@ fn prop_selection_build_is_parallelism_invariant() {
         let p = Selection::build_with(&adj, rows, &caps, par4());
         // tags are fresh per build; everything else must be identical
         assert_eq!(s.rows, p.rows);
-        assert_eq!(s.edges, p.edges);
+        assert_eq!(s.vals, p.vals);
         assert_eq!(s.nnz, p.nnz);
         assert_eq!(s.cap, p.cap);
     });

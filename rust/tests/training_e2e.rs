@@ -109,6 +109,45 @@ fn uniform_allocator_and_no_cache_variants_run() {
 }
 
 #[test]
+fn plan_cache_ablation_is_bit_identical_and_workspace_reuses() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let b = NativeBackend::load("tiny").unwrap();
+    let ds = load_or_generate("tiny", 7).unwrap();
+    let on = train(
+        &b,
+        &ds,
+        &cfg(ModelKind::Gcn, 30, RscConfig { budget_c: 0.3, ..Default::default() }),
+    )
+    .unwrap();
+    let off = train(
+        &b,
+        &ds,
+        &cfg(
+            ModelKind::Gcn,
+            30,
+            RscConfig { budget_c: 0.3, plan_cache: false, ..Default::default() },
+        ),
+    )
+    .unwrap();
+    // plans only move the grouping work, never the arithmetic: the two
+    // runs must agree bit-for-bit
+    assert_eq!(on.loss_curve, off.loss_curve, "--no-plan-cache changed results");
+    // the cached run actually built and then amortized plans (counters
+    // are process-global, so only lower bounds are meaningful)
+    assert!(on.plan_builds > 0, "no plans built: {:?}", on.plan_builds);
+    // steady-state workspace: reuse dominates fresh allocation
+    assert!(on.ws.taken > 100, "hot loop barely used the workspace: {:?}", on.ws);
+    assert!(
+        on.ws.reused > 4 * on.ws.fresh,
+        "workspace reuse should dominate after warm-up: {:?}",
+        on.ws
+    );
+}
+
+#[test]
 fn xla_backend_trains_gcn_with_rsc() {
     if !have_artifacts() {
         eprintln!("skipping: no artifacts");
