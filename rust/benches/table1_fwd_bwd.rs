@@ -59,7 +59,8 @@ fn run_variant(
     let widths: Vec<usize> = (0..ModelKind::Gcn.n_spmm_bwd(&ds.cfg))
         .map(|s| ModelKind::Gcn.spmm_width(&ds.cfg, s))
         .collect();
-    let mut engine = RscEngine::new(rsc, &bufs.matrix, widths, epochs as u64);
+    let mut engine =
+        RscEngine::new(rsc, bufs.matrix.clone(), bufs.caps.clone(), widths, epochs as u64)?;
     let mut tb = TimeBook::new();
     let mut ws = Workspace::new();
     let mut best_val = f64::NEG_INFINITY;

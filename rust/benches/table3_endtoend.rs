@@ -8,7 +8,9 @@
 //! RSC_BENCH_TRIALS=5 approaches the paper's protocol.
 
 use rsc::bench::harness::{header, BenchScale};
-use rsc::bench::support::{paper_budget, paper_cell_exists, run_pair, PAPER_DATASETS};
+use rsc::bench::support::{
+    paper_budget, paper_cell_exists, prefetch_on_vs_off, run_pair, PAPER_DATASETS,
+};
 use rsc::coordinator::RscConfig;
 use rsc::model::ops::ModelKind;
 use rsc::runtime::XlaBackend;
@@ -53,5 +55,40 @@ fn main() -> anyhow::Result<()> {
     println!();
     t.print();
     println!("paper (Table 3): drops <=0.3 points, speedups 1.04-1.60x");
+
+    header(
+        "table3/prefetch",
+        "end-to-end effect of background-prefetched refreshes (GCN, native \
+         backend, default cadence; bitwise-equal results)",
+    );
+    let mut tf = Table::new(vec![
+        "dataset",
+        "wall (sync)",
+        "wall (prefetch)",
+        "hot sample ms (sync)",
+        "hot sample ms (prefetch)",
+        "hit rate",
+    ]);
+    for dataset in PAPER_DATASETS {
+        let r = prefetch_on_vs_off(dataset, scale.epochs)?;
+        tf.row(vec![
+            dataset.to_string(),
+            format!("{:.2}s", r.wall_off_s),
+            format!("{:.2}s", r.wall_on_s),
+            format!("{:.3}", r.sample_ms_off),
+            format!("{:.3}", r.sample_ms_on),
+            format!("{:.0}%", 100.0 * r.pf.hit_rate()),
+        ]);
+        println!(
+            "{dataset:<13} hot-path sampling {:.3}ms -> {:.3}ms ({:.0}% of \
+             refreshes prefetched, {:.3}ms absorbed by background workers)",
+            r.sample_ms_off,
+            r.sample_ms_on,
+            100.0 * r.pf.hit_rate(),
+            r.bg_build_ms
+        );
+    }
+    tf.print();
+    println!("every refresh's sample_ms leaves the critical path once prefetched");
     Ok(())
 }

@@ -101,7 +101,9 @@ impl Allocator for DpExact {
 
         states
             .into_values()
-            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            // total_cmp: NaN kept-scores (from NaN pair scores in a
+            // diverged run) pick deterministically instead of panicking
+            .max_by(|a, b| a.0.total_cmp(&b.0))
             .map(|(_, path)| path)
             .unwrap_or_else(|| vec![k_min; layers.len()])
     }
@@ -147,6 +149,20 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn dp_nan_scores_do_not_panic() {
+        // regression: the final max_by used partial_cmp().unwrap(), which
+        // panics as soon as two states carry NaN kept-scores
+        let layers = vec![
+            LayerScores { scores: vec![f32::NAN; 10], nnz: vec![1; 10], d: 1 },
+            LayerScores { scores: vec![1.0; 10], nnz: vec![1; 10], d: 1 },
+        ];
+        let d = DpExact { alpha: 0.2, min_frac: 0.1, ..Default::default() };
+        let ks = d.allocate(&layers, 0.6);
+        assert_eq!(ks.len(), 2);
+        assert!(ks.iter().all(|&k| (1..=10).contains(&k)));
     }
 
     #[test]

@@ -354,3 +354,56 @@ pub fn planned_vs_unplanned(
         planned_ms: planned.median_ms,
     })
 }
+
+// ---------------------------------------------------------------------
+// prefetched vs synchronous sample-cache refreshes
+// ---------------------------------------------------------------------
+
+/// One row of the prefetch comparison: the same training run with
+/// refresh builds on background workers vs inline on the hot path.
+/// Results are bitwise identical (asserted); the hot-path sampling time
+/// is what moves.
+pub struct PrefetchRow {
+    pub wall_on_s: f64,
+    pub wall_off_s: f64,
+    /// Hot-path sampling ms with prefetch on (swap-ins + any fallbacks).
+    pub sample_ms_on: f64,
+    /// Hot-path sampling ms with `--no-prefetch` (every build inline).
+    pub sample_ms_off: f64,
+    /// Build time absorbed by background workers in the prefetch run.
+    pub bg_build_ms: f64,
+    /// The prefetch run's pipeline counters.
+    pub pf: crate::cache::PrefetchStats,
+}
+
+/// Train GCN on `dataset` (synthesized native catalog — no artifacts
+/// needed) at the default RSC cadence, prefetch on vs `--no-prefetch`.
+pub fn prefetch_on_vs_off(dataset: &str, epochs: usize) -> Result<PrefetchRow> {
+    let b = crate::runtime::NativeBackend::synthesize(dataset)?;
+    let ds = load_or_generate(dataset, 0)?;
+    let mk = |prefetch: bool| TrainConfig {
+        model: ModelKind::Gcn,
+        epochs,
+        lr: 0.01,
+        seed: 0,
+        rsc: RscConfig { prefetch, ..Default::default() },
+        eval_every: (epochs / 5).max(1),
+        verbose: false,
+        saint_subgraphs: 4,
+        saint_batches_per_epoch: 2,
+    };
+    let on = train(&b, &ds, &mk(true))?;
+    let off = train(&b, &ds, &mk(false))?;
+    assert_eq!(
+        on.loss_curve, off.loss_curve,
+        "prefetched refreshes changed the training trajectory"
+    );
+    Ok(PrefetchRow {
+        wall_on_s: on.train_wall_s,
+        wall_off_s: off.train_wall_s,
+        sample_ms_on: on.sample_ms,
+        sample_ms_off: off.sample_ms,
+        bg_build_ms: on.prefetch_build_ms,
+        pf: on.prefetch,
+    })
+}

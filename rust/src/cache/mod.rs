@@ -1,8 +1,11 @@
-//! Epoch-wise caching of sampled sparse matrices (Section 3.3.1) and the
-//! ranking-overlap diagnostics behind Figure 4.
+//! Epoch-wise caching of sampled sparse matrices (Section 3.3.1) with
+//! background-prefetched refreshes, and the ranking-overlap diagnostics
+//! behind Figure 4.
 
 pub mod overlap;
 pub mod sample_cache;
 
 pub use overlap::{ranking_auc, OverlapTracker};
-pub use sample_cache::SampleCache;
+pub use sample_cache::{
+    Built, PrefetchSlot, PrefetchStats, RefreshJob, Resolved, SampleCache,
+};

@@ -1,87 +1,300 @@
-//! Per-layer cache of sampled (sliced + padded) sparse matrices.
+//! Per-layer cache of sampled (sliced + padded) sparse matrices, with
+//! background-prefetched refreshes.
 //!
 //! Slicing the sparse matrix dominates the sampling cost (Figure 5); the
 //! top-k indices barely move between nearby iterations (Figure 4), so RSC
 //! re-samples only every `refresh_every` steps and reuses the cached
-//! Selection in between.  A refresh is also forced whenever the allocator
-//! hands the layer a different k.
+//! Selection in between.  Since the refresh cadence is known in advance
+//! and a refresh's inputs (the gradient-norm snapshot and the allocated
+//! k) are fixed one step before the refresh is due, the replacement
+//! Selection can be built on spare worker threads while training
+//! continues — the refresh step then *swaps* the finished build in
+//! instead of rebuilding inline.
 //!
-//! A rebuild is the one place sampling touches the graph at scale, so
-//! [`SampleCache::get_or_build`] takes the caller's
-//! [`Parallelism`](crate::util::parallel::Parallelism) and forwards it to
-//! [`Selection::build_with`] — the cache hit path stays allocation- and
-//! thread-free.
+//! The cache is double-buffered per site:
+//!
+//! * [`Entry`] — the front buffer: the Selection the hot loop serves,
+//!   stamped with the step its replacement becomes due.
+//! * [`Pending`] (private) — the back buffer: the scheduled replacement.
+//!   It always carries the build's *inputs* ([`RefreshJob`]) and, when
+//!   prefetching is on, an in-flight handle ([`PrefetchSlot`]) a
+//!   background worker fills.  Resolution at the due step therefore never
+//!   depends on timing for its *result*: a completed slot is swapped in,
+//!   anything else executes the same job synchronously — bit-identical
+//!   either way, because a build is a pure function of its job.
+//!
+//! Counters ([`PrefetchStats`]) make the pipeline observable: scheduled
+//! builds, refreshes served from a completed prefetch, synchronous
+//! fallbacks, and late/discarded completions.
 
-use crate::graph::Csr;
 use crate::sampling::Selection;
-use crate::util::parallel::Parallelism;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
+/// The front buffer for one site: the Selection currently served.
 #[derive(Debug)]
-struct Entry {
-    selection: Selection,
-    built_at_step: u64,
-    k: usize,
+pub struct Entry {
+    pub selection: Selection,
+    /// First step at which this entry must be replaced (age or the next
+    /// allocation barrier, whichever comes first).
+    pub due_step: u64,
+    /// The k the selection was built for.
+    pub k: usize,
 }
 
+/// The immutable inputs of one refresh build, fixed at schedule time.
+/// Executing a job is a pure function of these plus the engine's static
+/// state (matrix, caps, column norms), which is what makes a prefetched
+/// build bit-identical to the synchronous one.
+#[derive(Debug, Clone)]
+pub struct RefreshJob {
+    /// The allocated pair count for the site at the due step.
+    pub k: usize,
+    /// Gradient row-norm snapshot the pair scores are computed from.
+    pub norms: Arc<Vec<f32>>,
+}
+
+/// What a refresh build produces: the scores (kept for the Figure 4
+/// overlap diagnostics at install time), the built Selection (with its
+/// SpmmPlan already constructed when the plan cache is on), and the
+/// build's wall-clock.
+#[derive(Debug)]
+pub struct Built {
+    pub scores: Vec<f32>,
+    pub selection: Selection,
+    pub build_ms: f64,
+}
+
+/// Completion slot a background build fills; the refresh step polls it.
+#[derive(Debug, Default)]
+pub struct PrefetchSlot {
+    done: AtomicBool,
+    result: Mutex<Option<Built>>,
+}
+
+impl PrefetchSlot {
+    pub fn new() -> PrefetchSlot {
+        PrefetchSlot::default()
+    }
+
+    /// Publish a finished build (called from the worker thread).
+    pub fn fill(&self, built: Built) {
+        *self.result.lock().unwrap() = Some(built);
+        self.done.store(true, Ordering::Release);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    /// Take the result if the build has completed; `None` means still in
+    /// flight (the caller falls back to a synchronous build).
+    pub fn try_take(&self) -> Option<Built> {
+        if !self.is_done() {
+            return None;
+        }
+        self.result.lock().unwrap().take()
+    }
+}
+
+/// The back buffer for one site: a scheduled replacement build.
+#[derive(Debug)]
+struct Pending {
+    /// Step the replacement must be installed at.
+    due_step: u64,
+    /// Build inputs (always kept — the synchronous fallback uses them).
+    job: RefreshJob,
+    /// In-flight handle; `None` under `--no-prefetch`.
+    slot: Option<Arc<PrefetchSlot>>,
+}
+
+/// Prefetch-pipeline counters (cumulative for one cache).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Refresh builds scheduled (with or without a background slot).
+    pub scheduled: u64,
+    /// Refreshes served from a completed prefetched build.
+    pub hits: u64,
+    /// Refreshes built synchronously on the hot path (prefetch disabled,
+    /// nothing scheduled, or the scheduled build missed its window).
+    pub sync_fallbacks: u64,
+    /// Prefetched builds that missed their window or were superseded
+    /// before being consumed (their results are discarded).
+    pub late: u64,
+}
+
+impl PrefetchStats {
+    /// Fraction of refreshes served from a completed prefetch.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.sync_fallbacks;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn absorb(&mut self, other: &PrefetchStats) {
+        self.scheduled += other.scheduled;
+        self.hits += other.hits;
+        self.sync_fallbacks += other.sync_fallbacks;
+        self.late += other.late;
+    }
+}
+
+/// What [`SampleCache::resolve`] did for a due refresh.
+#[derive(Debug)]
+pub struct Resolved {
+    pub built: Built,
+    /// The k the refresh was built for (from the scheduled job, or the
+    /// fallback job when nothing was scheduled).
+    pub k: usize,
+    /// True when the build came from a completed background prefetch.
+    pub from_prefetch: bool,
+}
+
+/// The cadence (refresh period, allocation barriers) is the engine's
+/// domain: the cache only stores the due steps it is handed, via
+/// [`SampleCache::install`] and [`SampleCache::schedule`].
 #[derive(Debug)]
 pub struct SampleCache {
     entries: Vec<Option<Entry>>,
-    /// Steps between refreshes (paper default: 10). 1 = caching disabled.
-    pub refresh_every: u64,
+    pending: Vec<Option<Pending>>,
     hits: u64,
     misses: u64,
+    pf: PrefetchStats,
 }
 
 impl SampleCache {
-    pub fn new(layers: usize, refresh_every: u64) -> SampleCache {
-        assert!(refresh_every >= 1);
+    pub fn new(sites: usize) -> SampleCache {
         SampleCache {
-            entries: (0..layers).map(|_| None).collect(),
-            refresh_every,
+            entries: (0..sites).map(|_| None).collect(),
+            pending: (0..sites).map(|_| None).collect(),
             hits: 0,
             misses: 0,
+            pf: PrefetchStats::default(),
         }
     }
 
-    /// True if layer needs (re)building at `step` for the given k.
-    pub fn stale(&self, layer: usize, step: u64, k: usize) -> bool {
-        match &self.entries[layer] {
-            None => true,
-            Some(e) => e.k != k || step.saturating_sub(e.built_at_step) >= self.refresh_every,
-        }
+    pub fn sites(&self) -> usize {
+        self.entries.len()
     }
 
-    /// Get the cached selection, or rebuild via `rows_fn` (which returns
-    /// the freshly selected pair rows).  `adj` is the matrix being sampled
-    /// (A_hat in row-major; edges are emitted in transposed orientation);
-    /// `par` drives the rebuild's parallel edge gather.
-    pub fn get_or_build(
+    pub fn entry(&self, site: usize) -> Option<&Entry> {
+        self.entries[site].as_ref()
+    }
+
+    /// The cached selection is still valid at `step` (cache-hit path).
+    pub fn fresh(&self, site: usize, step: u64) -> bool {
+        matches!(&self.entries[site], Some(e) if step < e.due_step)
+    }
+
+    /// Count a served cache hit (the hot loop's no-work path).
+    pub fn note_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// A refresh can be performed at `step`: either the current entry is
+    /// due for replacement, or a scheduled first build has come due.
+    pub fn refresh_ready(&self, site: usize, step: u64) -> bool {
+        let entry_due = matches!(&self.entries[site], Some(e) if step >= e.due_step);
+        let pending_due = matches!(&self.pending[site], Some(p) if step >= p.due_step);
+        entry_due || pending_due
+    }
+
+    /// Schedule the replacement build for `site` at `due_step`.  `slot`
+    /// is the in-flight handle of an already-spawned background build
+    /// (`None` = synchronous mode).  An unconsumed prior schedule is
+    /// discarded (and its spawned build counted late).
+    pub fn schedule(
         &mut self,
-        layer: usize,
-        step: u64,
-        k: usize,
-        adj: &Csr,
-        caps: &[usize],
-        par: Parallelism,
-        rows_fn: impl FnOnce() -> Vec<u32>,
-    ) -> &Selection {
-        if self.stale(layer, step, k) {
-            self.misses += 1;
-            let sel = Selection::build_with(adj, rows_fn(), caps, par);
-            self.entries[layer] = Some(Entry { selection: sel, built_at_step: step, k });
-        } else {
-            self.hits += 1;
+        site: usize,
+        due_step: u64,
+        job: RefreshJob,
+        slot: Option<Arc<PrefetchSlot>>,
+    ) {
+        if let Some(old) = self.pending[site].take() {
+            if old.slot.is_some() {
+                self.pf.late += 1;
+            }
         }
-        &self.entries[layer].as_ref().unwrap().selection
+        self.pf.scheduled += 1;
+        self.pending[site] = Some(Pending { due_step, job, slot });
     }
 
-    pub fn peek(&self, layer: usize) -> Option<&Selection> {
-        self.entries[layer].as_ref().map(|e| &e.selection)
+    /// Pull an entry's due step forward (an allocation barrier at
+    /// `due - 1` supersedes the age-based due stamped at install time).
+    pub fn clamp_due(&mut self, site: usize, due_step: u64) {
+        if let Some(e) = self.entries[site].as_mut() {
+            e.due_step = e.due_step.min(due_step);
+        }
+    }
+
+    /// Resolve a due refresh: swap in the completed prefetched build if
+    /// there is one, otherwise execute the scheduled job (or `fallback`
+    /// when nothing was scheduled) synchronously via `exec`.  The result
+    /// is identical in every branch because `exec` is deterministic in
+    /// the job — only *where* the work happened differs.
+    pub fn resolve(
+        &mut self,
+        site: usize,
+        step: u64,
+        fallback: RefreshJob,
+        exec: impl FnOnce(&RefreshJob) -> Built,
+    ) -> Resolved {
+        self.misses += 1;
+        let due_pending = match self.pending[site].take() {
+            Some(p) if p.due_step <= step => Some(p),
+            // scheduled for a later step: leave it in place
+            other => {
+                self.pending[site] = other;
+                None
+            }
+        };
+        match due_pending {
+            Some(p) => {
+                let k = p.job.k;
+                if let Some(slot) = &p.slot {
+                    if let Some(built) = slot.try_take() {
+                        self.pf.hits += 1;
+                        return Resolved { built, k, from_prefetch: true };
+                    }
+                    // spawned but not done in time: same inputs, inline
+                    self.pf.late += 1;
+                }
+                self.pf.sync_fallbacks += 1;
+                Resolved { built: exec(&p.job), k, from_prefetch: false }
+            }
+            None => {
+                // schedule drift (plan() not called every step): rebuild
+                // from the live state
+                self.pf.sync_fallbacks += 1;
+                let k = fallback.k;
+                Resolved { built: exec(&fallback), k, from_prefetch: false }
+            }
+        }
+    }
+
+    /// Install a freshly built selection as the front buffer, due for
+    /// replacement at `due_step`.
+    pub fn install(&mut self, site: usize, due_step: u64, k: usize, selection: Selection) {
+        self.entries[site] = Some(Entry { selection, due_step, k });
+    }
+
+    pub fn peek(&self, site: usize) -> Option<&Selection> {
+        self.entries[site].as_ref().map(|e| &e.selection)
     }
 
     pub fn invalidate_all(&mut self) {
         for e in self.entries.iter_mut() {
             *e = None;
+        }
+        for p in self.pending.iter_mut() {
+            if let Some(old) = p.take() {
+                if old.slot.is_some() {
+                    self.pf.late += 1;
+                }
+            }
         }
     }
 
@@ -94,15 +307,20 @@ impl SampleCache {
         }
     }
 
+    /// (served hits, refresh builds).
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
+    }
+
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        self.pf
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::parallel;
+    use crate::graph::Csr;
     use crate::util::rng::Rng;
 
     fn adj() -> Csr {
@@ -110,71 +328,132 @@ mod tests {
         Csr::random(30, 90, &mut rng)
     }
 
-    #[test]
-    fn caches_between_refreshes() {
-        let a = adj();
+    fn job(k: usize) -> RefreshJob {
+        RefreshJob { k, norms: Arc::new(vec![1.0; 30]) }
+    }
+
+    fn build(a: &Csr, j: &RefreshJob) -> Built {
         let caps = vec![a.nnz()];
-        let mut cache = SampleCache::new(2, 10);
-        let mut builds = 0;
-        for step in 0..25 {
-            cache.get_or_build(0, step, 5, &a, &caps, parallel::global(), || {
-                builds += 1;
-                vec![0, 1, 2, 3, 4]
-            });
+        let rows: Vec<u32> = (0..j.k as u32).collect();
+        Built {
+            scores: vec![0.0; a.n],
+            selection: Selection::build(a, rows, &caps),
+            build_ms: 0.0,
         }
-        // refreshes at steps 0, 10, 20
-        assert_eq!(builds, 3);
-        let (hits, misses) = cache.stats();
-        assert_eq!(misses, 3);
-        assert_eq!(hits, 22);
     }
 
     #[test]
-    fn k_change_forces_rebuild() {
+    fn fresh_until_due_then_refresh_ready() {
         let a = adj();
-        let caps = vec![a.nnz()];
-        let mut cache = SampleCache::new(1, 100);
-        let mut builds = 0;
-        cache.get_or_build(0, 0, 5, &a, &caps, parallel::global(), || {
-            builds += 1;
-            (0..5).collect()
-        });
-        cache.get_or_build(0, 1, 6, &a, &caps, parallel::global(), || {
-            builds += 1;
-            (0..6).collect()
-        });
-        cache.get_or_build(0, 2, 6, &a, &caps, parallel::global(), || {
-            builds += 1;
-            (0..6).collect()
-        });
-        assert_eq!(builds, 2);
-    }
-
-    #[test]
-    fn refresh_every_one_disables_caching() {
-        let a = adj();
-        let caps = vec![a.nnz()];
-        let mut cache = SampleCache::new(1, 1);
-        let mut builds = 0;
-        for step in 0..5 {
-            cache.get_or_build(0, step, 3, &a, &caps, parallel::global(), || {
-                builds += 1;
-                (0..3).collect()
-            });
+        let mut c = SampleCache::new(1);
+        assert!(!c.fresh(0, 0));
+        assert!(!c.refresh_ready(0, 0));
+        c.schedule(0, 2, job(5), None);
+        assert!(!c.refresh_ready(0, 1), "pending not due yet");
+        assert!(c.refresh_ready(0, 2));
+        let r = c.resolve(0, 2, job(5), |j| build(&a, j));
+        assert!(!r.from_prefetch);
+        assert_eq!(r.k, 5);
+        c.install(0, 12, r.k, r.built.selection);
+        for step in 3..12 {
+            assert!(c.fresh(0, step));
+            c.note_hit();
         }
-        assert_eq!(builds, 5);
-        assert_eq!(cache.hit_rate(), 0.0);
+        assert!(!c.fresh(0, 12));
+        assert!(c.refresh_ready(0, 12), "entry past due");
+        let (hits, misses) = c.stats();
+        assert_eq!((hits, misses), (9, 1));
     }
 
     #[test]
-    fn layers_independent() {
+    fn completed_prefetch_is_swapped_in() {
         let a = adj();
-        let caps = vec![a.nnz()];
-        let mut cache = SampleCache::new(3, 10);
-        cache.get_or_build(0, 0, 2, &a, &caps, parallel::global(), || vec![0, 1]);
-        assert!(cache.peek(0).is_some());
-        assert!(cache.peek(1).is_none());
-        cache.invalidate_all();
-        assert!(cache.peek(0).is_none());
+        let mut c = SampleCache::new(1);
+        let slot = Arc::new(PrefetchSlot::new());
+        slot.fill(build(&a, &job(4)));
+        c.schedule(0, 1, job(4), Some(slot));
+        let r = c.resolve(0, 1, job(4), |_| panic!("must not build inline"));
+        assert!(r.from_prefetch);
+        assert_eq!(r.built.selection.rows.len(), 4);
+        let pf = c.prefetch_stats();
+        assert_eq!(pf.hits, 1);
+        assert_eq!(pf.sync_fallbacks, 0);
+        assert_eq!(pf.scheduled, 1);
+    }
+
+    #[test]
+    fn incomplete_prefetch_falls_back_to_sync() {
+        let a = adj();
+        let mut c = SampleCache::new(1);
+        let slot = Arc::new(PrefetchSlot::new()); // never filled
+        c.schedule(0, 1, job(3), Some(slot));
+        let r = c.resolve(0, 1, job(7), |j| build(&a, j));
+        assert!(!r.from_prefetch);
+        // the scheduled job's inputs are used, not the fallback's
+        assert_eq!(r.k, 3);
+        let pf = c.prefetch_stats();
+        assert_eq!(pf.hits, 0);
+        assert_eq!(pf.sync_fallbacks, 1);
+        assert_eq!(pf.late, 1);
+    }
+
+    #[test]
+    fn unscheduled_refresh_uses_fallback_job() {
+        let a = adj();
+        let mut c = SampleCache::new(1);
+        let r = c.resolve(0, 9, job(6), |j| build(&a, j));
+        assert!(!r.from_prefetch);
+        assert_eq!(r.k, 6);
+        assert_eq!(c.prefetch_stats().sync_fallbacks, 1);
+    }
+
+    #[test]
+    fn overwriting_a_spawned_pending_counts_late() {
+        let mut c = SampleCache::new(1);
+        c.schedule(0, 1, job(2), Some(Arc::new(PrefetchSlot::new())));
+        c.schedule(0, 2, job(3), None);
+        let pf = c.prefetch_stats();
+        assert_eq!(pf.scheduled, 2);
+        assert_eq!(pf.late, 1);
+    }
+
+    #[test]
+    fn clamp_pulls_due_forward_only() {
+        let a = adj();
+        let mut c = SampleCache::new(1);
+        c.schedule(0, 0, job(2), None);
+        let r = c.resolve(0, 0, job(2), |j| build(&a, j));
+        c.install(0, 100, r.k, r.built.selection);
+        c.clamp_due(0, 7);
+        assert!(c.fresh(0, 6));
+        assert!(!c.fresh(0, 7));
+        c.clamp_due(0, 50); // later than current due: no-op
+        assert!(!c.fresh(0, 7));
+    }
+
+    #[test]
+    fn invalidate_all_clears_entries_and_pendings() {
+        let a = adj();
+        let mut c = SampleCache::new(2);
+        c.schedule(0, 0, job(2), None);
+        let r = c.resolve(0, 0, job(2), |j| build(&a, j));
+        c.install(0, 10, r.k, r.built.selection);
+        c.schedule(1, 5, job(2), Some(Arc::new(PrefetchSlot::new())));
+        assert!(c.peek(0).is_some());
+        c.invalidate_all();
+        assert!(c.peek(0).is_none());
+        assert!(!c.refresh_ready(1, 5), "pendings dropped too");
+        assert_eq!(c.prefetch_stats().late, 1);
+    }
+
+    #[test]
+    fn slot_try_take_is_one_shot() {
+        let a = adj();
+        let slot = PrefetchSlot::new();
+        assert!(slot.try_take().is_none());
+        slot.fill(build(&a, &job(2)));
+        assert!(slot.is_done());
+        assert!(slot.try_take().is_some());
+        assert!(slot.try_take().is_none(), "result is moved out once");
     }
 }

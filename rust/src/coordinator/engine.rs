@@ -6,22 +6,51 @@
 //!    it computes gradient row-norms (via the `row_norms_{d}` executable)
 //!    during backward and feeds them back with `observe_norms`.
 //! 2. Each backward-SpMM site calls [`RscEngine::plan`]: during the exact
-//!    phase (switching, Section 3.3.2) or before any norms exist, the plan
-//!    is the exact full-edge selection; otherwise the greedy/uniform
-//!    allocator's `k_l` picks the top-k pairs, the sample cache either
-//!    reuses the sliced matrix or rebuilds it (Section 3.3.1), and the
-//!    plan is the padded bucket selection.
+//!    phase (switching, Section 3.3.2) or before the first allocation has
+//!    taken effect, the plan is the exact full-edge selection; otherwise
+//!    the sample cache serves the cached sliced matrix, refreshing it on
+//!    the schedule below (Section 3.3.1).
 //!
-//! Gradient norms are one allocation-interval stale by construction — the
-//! same staleness the caching mechanism itself exploits (Figure 4).
+//! # Refresh scheduling and prefetch
+//!
+//! A refresh's inputs — the gradient-norm snapshot and the allocated
+//! `k_l` — are *final one step before the refresh is due*: norms only
+//! change on allocation steps, and the allocator runs at the end of a
+//! step (site 0 is planned last in every model's backward).  The engine
+//! exploits that to pipeline refreshes off the hot path:
+//!
+//! * When the allocator runs at step `t`, every site whose `k` changed
+//!   (or that has no cached selection yet) is due for a refresh at
+//!   `t + 1`; sites whose age-based refresh falls before the next
+//!   allocation step are due at their age step.  In both cases the
+//!   engine snapshots the job inputs *now* and — when `cfg.prefetch` is
+//!   on — spawns the build (scores → top-k → `Selection::build_with` →
+//!   eager `SpmmPlan`) on background rayon workers.
+//! * At the due step, [`RscEngine::plan`] swaps the completed build in.
+//!   A build that has not finished in time is executed synchronously
+//!   from the *same* job inputs (counted in
+//!   [`PrefetchStats::sync_fallbacks`]), so results are bit-identical
+//!   with prefetching on, off (`--no-prefetch`), or racing — only the
+//!   placement of the work moves, never what is computed.
+//!
+//! Consequently the allocation decided at step `t` takes effect at
+//! `t + 1` for *every* site (the synchronous design applied it one step
+//! earlier for site 0 only — an ordering artifact), and gradient norms
+//! are uniformly one step stale, the same staleness the caching
+//! mechanism itself exploits (Figure 4).
 
 use crate::allocator::{Allocator, DpExact, GreedyAllocator, LayerScores, UniformAllocator};
-use crate::cache::{OverlapTracker, SampleCache};
+use crate::cache::{
+    Built, OverlapTracker, PrefetchSlot, PrefetchStats, RefreshJob, Resolved, SampleCache,
+};
 use crate::graph::Csr;
 use crate::sampling::topk::{pair_scores_with, top_k_indices_with};
 use crate::sampling::Selection;
 use crate::util::parallel::{self, Parallelism};
 use crate::util::timer::Stopwatch;
+use crate::Result;
+use anyhow::ensure;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AllocKind {
@@ -62,6 +91,12 @@ pub struct RscConfig {
     /// (`false` = the `--no-plan-cache` ablation: every SpMM re-groups
     /// its edges per call, the pre-plan behavior).
     pub plan_cache: bool,
+    /// Build sample-cache refreshes on background workers so the refresh
+    /// step swaps a finished Selection in instead of rebuilding inline
+    /// (`false` = the `--no-prefetch` ablation: every refresh build runs
+    /// synchronously on the training thread; results are bit-identical
+    /// either way — DESIGN.md §Prefetching refreshes).
+    pub prefetch: bool,
 }
 
 impl Default for RscConfig {
@@ -75,6 +110,7 @@ impl Default for RscConfig {
             switch_frac: 0.8,
             allocator: AllocKind::Greedy,
             plan_cache: true,
+            prefetch: true,
         }
     }
 }
@@ -82,6 +118,35 @@ impl Default for RscConfig {
 impl RscConfig {
     pub fn baseline() -> RscConfig {
         RscConfig { enabled: false, ..Default::default() }
+    }
+
+    /// Reject configurations the engine cannot run (e.g. `alloc_every ==
+    /// 0` used to reach a divide-by-zero panic in [`RscEngine::
+    /// norms_wanted`]).  Called from [`RscEngine::new`] and the CLI so a
+    /// bad flag is a proper error, never a panic.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.budget_c > 0.0 && self.budget_c <= 1.0,
+            "budget_c must be in (0, 1], got {}",
+            self.budget_c
+        );
+        ensure!(self.alpha > 0.0, "alpha must be > 0, got {}", self.alpha);
+        ensure!(
+            self.refresh_every >= 1,
+            "refresh_every must be >= 1, got {}",
+            self.refresh_every
+        );
+        ensure!(
+            self.alloc_every >= 1,
+            "alloc_every must be >= 1, got {}",
+            self.alloc_every
+        );
+        ensure!(
+            self.switch_frac >= 0.0 && self.switch_frac <= 1.0,
+            "switch_frac must be in [0, 1], got {}",
+            self.switch_frac
+        );
+        Ok(())
     }
 }
 
@@ -105,21 +170,50 @@ impl<'a> Plan<'a> {
     }
 }
 
+/// Build one refresh: pair scores from the job's norm snapshot, stable
+/// top-k, the Figure 5 slice, and (plan cache on) the eager SpmmPlan.
+/// Pure in its inputs, so a background execution is bit-identical to the
+/// synchronous fallback (the determinism contract of DESIGN.md
+/// §Prefetching refreshes).
+fn execute_refresh(
+    col_norms: &[f32],
+    matrix: &Csr,
+    caps: &[usize],
+    plan_cache: bool,
+    par: Parallelism,
+    job: &RefreshJob,
+) -> Built {
+    let sw = Stopwatch::start();
+    let scores = pair_scores_with(col_norms, job.norms.as_slice(), par);
+    let rows = top_k_indices_with(&scores, job.k, par);
+    let selection = Selection::build_with(matrix, rows, caps, par);
+    if plan_cache {
+        // PR 2's plan build leaves the hot path together with the slice
+        let _ = selection.spmm_plan(par);
+    }
+    Built { scores, selection, build_ms: sw.ms() }
+}
+
 pub struct RscEngine {
     pub cfg: RscConfig,
     total_steps: u64,
     /// Gradient width d_l per site (allocator cost model).
     widths: Vec<usize>,
+    /// The matrix being sampled (shared with background refresh builds).
+    matrix: Arc<Csr>,
+    /// Bucket ladder (shared with background refresh builds).
+    caps: Arc<Vec<usize>>,
     /// Static pair column-norms ‖A^T_{:,i}‖ = row norms of the matrix.
-    col_norms: Vec<f32>,
+    col_norms: Arc<Vec<f32>>,
     /// Static pair costs nnz_i = row nnz of the matrix.
     nnz: Vec<u32>,
     /// Node degrees (diagnostics for Figure 8).
     degrees: Vec<u32>,
     /// Current allocation k_l per site.
     ks: Vec<usize>,
-    /// Latest observed gradient row-norms per site.
-    grad_norms: Vec<Option<Vec<f32>>>,
+    /// Latest observed gradient row-norms per site (Arc so a refresh job
+    /// snapshots them without copying).
+    grad_norms: Vec<Option<Arc<Vec<f32>>>>,
     cache: SampleCache,
     last_alloc: Option<u64>,
     /// Thread-parallelism used for score computation, top-k sorts and
@@ -134,8 +228,13 @@ pub struct RscEngine {
     pub picked_degrees: Vec<(usize, u64, f64)>,
     /// Cumulative allocator wall-time (Table 11).
     pub alloc_ms: f64,
-    /// Cumulative sampling/slicing wall-time.
+    /// Cumulative sampling/slicing wall-time *on the hot path* (refresh
+    /// steps that fell back to a synchronous build, plus the swap-in
+    /// itself).  With prefetching on this collapses toward zero.
     pub sample_ms: f64,
+    /// Cumulative refresh-build wall-time spent on background workers
+    /// (the cost the prefetch pipeline moved off the hot path).
+    pub prefetch_build_ms: f64,
     /// Steps that ran approx vs exact (speedup accounting).
     pub approx_steps: u64,
     pub exact_steps: u64,
@@ -143,18 +242,21 @@ pub struct RscEngine {
 
 impl RscEngine {
     /// `matrix` is the normalized adjacency the model's SpMMs use
-    /// (row-major); `widths` the gradient width per backward-SpMM site.
+    /// (row-major; shared so background refresh builds can slice it);
+    /// `caps` the bucket ladder; `widths` the gradient width per
+    /// backward-SpMM site.  Fails on an invalid [`RscConfig`].
     pub fn new(
         cfg: RscConfig,
-        matrix: &Csr,
+        matrix: Arc<Csr>,
+        caps: Vec<usize>,
         widths: Vec<usize>,
         total_steps: u64,
-    ) -> RscEngine {
+    ) -> Result<RscEngine> {
+        cfg.validate()?;
         let sites = widths.len();
-        let col_norms = matrix.row_norms();
+        let col_norms = Arc::new(matrix.row_norms());
         let nnz: Vec<u32> = (0..matrix.n).map(|r| matrix.row_nnz(r) as u32).collect();
-        let refresh = cfg.refresh_every.max(1);
-        RscEngine {
+        Ok(RscEngine {
             total_steps,
             widths,
             degrees: nnz.clone(),
@@ -162,7 +264,7 @@ impl RscEngine {
             nnz,
             ks: vec![matrix.n; sites],
             grad_norms: (0..sites).map(|_| None).collect(),
-            cache: SampleCache::new(sites, refresh),
+            cache: SampleCache::new(sites),
             last_alloc: None,
             parallelism: parallel::global(),
             overlap: OverlapTracker::new(sites, 10),
@@ -170,10 +272,13 @@ impl RscEngine {
             picked_degrees: Vec::new(),
             alloc_ms: 0.0,
             sample_ms: 0.0,
+            prefetch_build_ms: 0.0,
             approx_steps: 0,
             exact_steps: 0,
+            matrix,
+            caps: Arc::new(caps),
             cfg,
-        }
+        })
     }
 
     /// Override the engine's [`Parallelism`] (defaults to the process
@@ -208,7 +313,7 @@ impl RscEngine {
     /// Feed back the row-norms of the gradient entering site `site`.
     pub fn observe_norms(&mut self, site: usize, norms: Vec<f32>) {
         debug_assert_eq!(norms.len(), self.col_norms.len());
-        self.grad_norms[site] = Some(norms);
+        self.grad_norms[site] = Some(Arc::new(norms));
     }
 
     /// True once every site has observed norms (approx can start).
@@ -221,8 +326,8 @@ impl RscEngine {
         let layers: Vec<LayerScores> = (0..self.widths.len())
             .map(|s| LayerScores {
                 scores: pair_scores_with(
-                    &self.col_norms,
-                    self.grad_norms[s].as_ref().unwrap(),
+                    self.col_norms.as_slice(),
+                    self.grad_norms[s].as_ref().unwrap().as_slice(),
                     par,
                 ),
                 nnz: self.nnz.clone(),
@@ -248,59 +353,169 @@ impl RscEngine {
         self.last_alloc = Some(step);
     }
 
+    /// Snapshot the build inputs for `site` as of right now.
+    fn job_for(&self, site: usize) -> RefreshJob {
+        RefreshJob {
+            k: self.ks[site],
+            norms: Arc::clone(
+                self.grad_norms[site].as_ref().expect("norms observed before refresh"),
+            ),
+        }
+    }
+
+    /// The next allocation step (norms change there; refresh inputs are
+    /// only final strictly before it).
+    fn next_norm_step(&self) -> Option<u64> {
+        Some(self.last_alloc? + self.cfg.alloc_every)
+    }
+
+    /// Register `site`'s replacement build for `due` and, with prefetch
+    /// on, start it on a background worker immediately.
+    fn schedule_one(&mut self, site: usize, due: u64, job: RefreshJob) {
+        let slot = if self.cfg.prefetch {
+            let slot = Arc::new(PrefetchSlot::new());
+            let out = Arc::clone(&slot);
+            let col = Arc::clone(&self.col_norms);
+            let mat = Arc::clone(&self.matrix);
+            let caps = Arc::clone(&self.caps);
+            let par = self.parallelism;
+            let plan_cache = self.cfg.plan_cache;
+            let job = job.clone();
+            parallel::spawn_background(move || {
+                out.fill(execute_refresh(&col, &mat, &caps, plan_cache, par, &job));
+            });
+            Some(slot)
+        } else {
+            None
+        };
+        self.cache.schedule(site, due, job, slot);
+    }
+
+    /// After the allocator ran at `step`: decide every site's next
+    /// refresh and schedule its build.  Sites whose `k` changed (or that
+    /// have no selection yet) refresh at `step + 1`; unchanged sites
+    /// whose age-based refresh falls strictly before the next allocation
+    /// step refresh there (their inputs are already final).
+    fn schedule_refreshes(&mut self, step: u64) {
+        let barrier_due = step + 1;
+        let horizon = step + self.cfg.alloc_every;
+        for site in 0..self.widths.len() {
+            let new_k = self.ks[site];
+            let (due, schedule) = match self.cache.entry(site) {
+                None => (barrier_due, true),
+                Some(e) if e.k != new_k => (barrier_due, true),
+                Some(e) => {
+                    let d = e.due_step;
+                    (d, d > step && d < horizon)
+                }
+            };
+            if !schedule || self.in_exact_phase(due) {
+                continue;
+            }
+            self.cache.clamp_due(site, due);
+            let job = self.job_for(site);
+            self.schedule_one(site, due, job);
+        }
+    }
+
+    /// After installing a refresh at `step` with age-based due `due`:
+    /// if that refresh falls strictly before the next allocation step,
+    /// its inputs are already final — schedule (and prefetch) it now.
+    fn maybe_schedule_age_refresh(&mut self, site: usize, due: u64) {
+        if self.in_exact_phase(due) {
+            return;
+        }
+        if let Some(t) = self.next_norm_step() {
+            if due >= t {
+                return; // allocation (and fresh norms) land first
+            }
+        }
+        let job = self.job_for(site);
+        self.schedule_one(site, due, job);
+    }
+
+    /// Perform the refresh due for `site` at `step`: swap in the
+    /// prefetched build, or fall back to the synchronous build from the
+    /// same inputs.
+    fn refresh(&mut self, site: usize, step: u64) {
+        let sw = Stopwatch::start();
+        let fallback = self.job_for(site);
+        let col = Arc::clone(&self.col_norms);
+        let mat = Arc::clone(&self.matrix);
+        let caps = Arc::clone(&self.caps);
+        let par = self.parallelism;
+        let plan_cache = self.cfg.plan_cache;
+        let resolved = self.cache.resolve(site, step, fallback, |job| {
+            execute_refresh(&col, &mat, &caps, plan_cache, par, job)
+        });
+        let hot_ms = sw.ms();
+        let Resolved { built, k, from_prefetch } = resolved;
+        let Built { scores, selection, build_ms } = built;
+        // diagnostics (Figures 4 and 8) — reporting, not sampling cost
+        self.overlap.observe(site, step, &scores, &selection.rows);
+        let mean_deg = selection
+            .rows
+            .iter()
+            .map(|&r| self.degrees[r as usize] as f64)
+            .sum::<f64>()
+            / selection.rows.len().max(1) as f64;
+        self.picked_degrees.push((site, step, mean_deg));
+        let due = step + self.cfg.refresh_every;
+        self.cache.install(site, due, k, selection);
+        self.sample_ms += hot_ms;
+        if from_prefetch {
+            self.prefetch_build_ms += build_ms;
+        }
+        self.maybe_schedule_age_refresh(site, due);
+    }
+
+    /// Serve `site`'s sampled selection for `step` from the cache,
+    /// refreshing if due.  False = no selection in effect yet (the first
+    /// allocation lands next step): run exact.
+    fn serve(&mut self, site: usize, step: u64) -> bool {
+        if self.cache.fresh(site, step) {
+            self.cache.note_hit();
+            return true;
+        }
+        if !self.cache.refresh_ready(site, step) {
+            return false;
+        }
+        self.refresh(site, step);
+        true
+    }
+
     /// Decide the plan for backward-SpMM `site` at `step`.
-    pub fn plan<'a>(
-        &'a mut self,
-        site: usize,
-        step: u64,
-        matrix: &Csr,
-        caps: &[usize],
-        exact: &'a Selection,
-    ) -> Plan<'a> {
+    pub fn plan<'a>(&'a mut self, site: usize, step: u64, exact: &'a Selection) -> Plan<'a> {
         if self.in_exact_phase(step) || !self.ready() {
             if site == 0 {
                 self.exact_steps += 1;
             }
             return Plan::Exact(exact);
         }
+        let served = self.serve(site, step);
+        // Site 0 is planned last in every backward pass, so the
+        // allocator runs *after* this step's refreshes were served: the
+        // schedule it emits (due step + 1) is what the prefetch pipeline
+        // overlaps with the rest of this step and the next forward.
         if site == 0 {
-            self.approx_steps += 1;
-            let due = self
+            let alloc_due = self
                 .last_alloc
                 .map(|s| step.saturating_sub(s) >= self.cfg.alloc_every)
                 .unwrap_or(true);
-            if due {
+            if alloc_due {
                 self.reallocate(step);
+                self.schedule_refreshes(step);
+            }
+            if served {
+                self.approx_steps += 1;
+            } else {
+                self.exact_steps += 1;
             }
         }
-        let k = self.ks[site];
-        let par = self.parallelism;
-        if self.cache.stale(site, step, k) {
-            let sw = Stopwatch::start();
-            let scores = pair_scores_with(
-                &self.col_norms,
-                self.grad_norms[site].as_ref().unwrap(),
-                par,
-            );
-            let rows = top_k_indices_with(&scores, k, par);
-            // diagnostics
-            self.overlap.observe(site, step, &scores, &rows);
-            let mean_deg = rows
-                .iter()
-                .map(|&r| self.degrees[r as usize] as f64)
-                .sum::<f64>()
-                / rows.len().max(1) as f64;
-            self.picked_degrees.push((site, step, mean_deg));
-            let sel = self
-                .cache
-                .get_or_build(site, step, k, matrix, caps, par, move || rows);
-            self.sample_ms += sw.ms();
-            Plan::Approx(sel)
+        if served {
+            Plan::Approx(&self.cache.entry(site).expect("entry just served").selection)
         } else {
-            let sel = self
-                .cache
-                .get_or_build(site, step, k, matrix, caps, par, || unreachable!());
-            Plan::Approx(sel)
+            Plan::Exact(exact)
         }
     }
 
@@ -310,6 +525,10 @@ impl RscEngine {
 
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
+    }
+
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        self.cache.prefetch_stats()
     }
 }
 
@@ -323,59 +542,96 @@ mod tests {
         let m = Csr::random(40, 160, &mut rng);
         let caps = vec![m.nnz() / 4, m.nnz() / 2, m.nnz()];
         let exact = Selection::exact(&m, &caps);
-        let e = RscEngine::new(cfg, &m, vec![8, 8], steps);
+        let e = RscEngine::new(cfg, Arc::new(m.clone()), caps.clone(), vec![8, 8], steps)
+            .unwrap();
         (e, m, caps, exact)
     }
 
     #[test]
     fn disabled_is_always_exact() {
-        let (mut e, m, caps, exact) = setup(RscConfig::baseline(), 100);
+        let (mut e, _m, _caps, exact) = setup(RscConfig::baseline(), 100);
         for step in 0..5 {
-            let p = e.plan(0, step, &m, &caps, &exact);
+            let p = e.plan(0, step, &exact);
             assert!(!p.is_approx());
         }
         assert!(!e.norms_wanted(0));
     }
 
     #[test]
-    fn exact_until_norms_then_approx() {
+    fn exact_until_norms_then_approx_one_step_later() {
         let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
-        let (mut e, m, caps, exact) = setup(cfg, 100);
+        let (mut e, m, _caps, exact) = setup(cfg, 100);
         assert!(e.norms_wanted(0));
-        assert!(!e.plan(0, 0, &m, &caps, &exact).is_approx());
+        assert!(!e.plan(0, 0, &exact).is_approx());
         e.observe_norms(0, vec![1.0; 40]);
         e.observe_norms(1, vec![1.0; 40]);
-        let p = e.plan(0, 1, &m, &caps, &exact);
+        // the allocation computed at step 1 takes effect at step 2
+        assert!(!e.plan(0, 1, &exact).is_approx());
+        assert_eq!(e.alloc_history.len(), 1);
+        let p = e.plan(0, 2, &exact);
         assert!(p.is_approx());
         assert!(p.selection().nnz < m.nnz()); // C=0.1 cuts most edges
-        assert_eq!(e.alloc_history.len(), 1);
     }
 
     #[test]
     fn switching_returns_to_exact() {
         let cfg = RscConfig { switch_frac: 0.8, ..Default::default() };
-        let (mut e, m, caps, exact) = setup(cfg, 10);
+        let (mut e, _m, _caps, exact) = setup(cfg, 10);
         e.observe_norms(0, vec![1.0; 40]);
         e.observe_norms(1, vec![1.0; 40]);
-        assert!(e.plan(0, 5, &m, &caps, &exact).is_approx());
-        assert!(!e.plan(0, 8, &m, &caps, &exact).is_approx());
-        assert!(!e.plan(0, 9, &m, &caps, &exact).is_approx());
+        assert!(!e.plan(0, 5, &exact).is_approx()); // allocator runs here
+        assert!(e.plan(0, 6, &exact).is_approx());
+        assert!(!e.plan(0, 8, &exact).is_approx());
+        assert!(!e.plan(0, 9, &exact).is_approx());
         assert!(!e.norms_wanted(9));
     }
 
     #[test]
     fn caching_reuses_between_refreshes() {
         let cfg = RscConfig { switch_frac: 1.0, refresh_every: 10, ..Default::default() };
-        let (mut e, m, caps, exact) = setup(cfg, 1000);
+        let (mut e, _m, _caps, exact) = setup(cfg, 1000);
         e.observe_norms(0, vec![1.0; 40]);
         e.observe_norms(1, vec![1.0; 40]);
         for step in 1..21 {
-            e.plan(0, step, &m, &caps, &exact);
-            e.plan(1, step, &m, &caps, &exact);
+            e.plan(0, step, &exact);
+            e.plan(1, step, &exact);
         }
         let (hits, misses) = e.cache_stats();
         assert!(misses <= 6, "misses={misses}"); // ~2 sites * 2-3 refreshes
         assert!(hits >= 34, "hits={hits}");
+    }
+
+    #[test]
+    fn prefetch_and_sync_refreshes_are_bit_identical() {
+        // the determinism contract: --no-prefetch and the prefetched
+        // pipeline must produce identical selections at every step
+        let mk = |prefetch: bool| {
+            let cfg = RscConfig { switch_frac: 1.0, prefetch, ..Default::default() };
+            let (mut e, _m, _caps, exact) = setup(cfg, 1000);
+            e.observe_norms(0, vec![0.5; 40]);
+            e.observe_norms(1, vec![2.0; 40]);
+            let mut trace: Vec<(bool, Vec<u32>, usize, usize)> = Vec::new();
+            for step in 1..40 {
+                for site in (0..2).rev() {
+                    // fresh norms on allocation steps, like the trainer
+                    if e.norms_wanted(step) {
+                        let norms: Vec<f32> =
+                            (0..40).map(|i| ((i * 7 + step as usize) % 13) as f32).collect();
+                        e.observe_norms(site, norms);
+                    }
+                    let p = e.plan(site, step, &exact);
+                    let s = p.selection();
+                    trace.push((p.is_approx(), s.rows.clone(), s.nnz, s.cap));
+                }
+            }
+            (trace, e.prefetch_stats())
+        };
+        let (on, pf_on) = mk(true);
+        let (off, pf_off) = mk(false);
+        assert_eq!(on, off, "prefetch changed the selections");
+        assert!(pf_on.scheduled > 0);
+        assert_eq!(pf_off.hits, 0, "--no-prefetch must never report prefetch hits");
+        assert!(pf_off.sync_fallbacks > 0);
     }
 
     #[test]
@@ -386,24 +642,78 @@ mod tests {
             budget_c: 0.5,
             ..Default::default()
         };
-        let (mut e, m, caps, exact) = setup(cfg, 100);
+        let (mut e, _m, _caps, exact) = setup(cfg, 100);
         e.observe_norms(0, vec![1.0; 40]);
         e.observe_norms(1, vec![1.0; 40]);
-        e.plan(0, 1, &m, &caps, &exact);
+        e.plan(0, 1, &exact);
         assert_eq!(e.ks(), &[20, 20]);
     }
 
     #[test]
     fn fig8_and_fig7_diagnostics_populate() {
         let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
-        let (mut e, m, caps, exact) = setup(cfg, 1000);
+        let (mut e, _m, _caps, exact) = setup(cfg, 1000);
         e.observe_norms(0, vec![1.0; 40]);
         e.observe_norms(1, vec![1.0; 40]);
         for step in 1..30 {
-            e.plan(0, step, &m, &caps, &exact);
+            e.plan(0, step, &exact);
         }
         assert!(!e.alloc_history.is_empty());
         assert!(!e.picked_degrees.is_empty());
         assert!(e.alloc_ms >= 0.0);
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        // regression: `--alloc-every 0` used to panic with a
+        // divide-by-zero inside norms_wanted
+        let bad = RscConfig { alloc_every: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let mut rng = Rng::new(9);
+        let m = Csr::random(10, 30, &mut rng);
+        let caps = vec![m.nnz()];
+        assert!(
+            RscEngine::new(bad, Arc::new(m), caps, vec![4], 10).is_err(),
+            "engine must reject alloc_every == 0 instead of panicking later"
+        );
+        for bad in [
+            RscConfig { refresh_every: 0, ..Default::default() },
+            RscConfig { budget_c: 0.0, ..Default::default() },
+            RscConfig { budget_c: 1.5, ..Default::default() },
+            RscConfig { budget_c: f64::NAN, ..Default::default() },
+            RscConfig { alpha: 0.0, ..Default::default() },
+            RscConfig { switch_frac: -0.1, ..Default::default() },
+            RscConfig { switch_frac: 1.1, ..Default::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+        }
+        assert!(RscConfig::default().validate().is_ok());
+        assert!(RscConfig::baseline().validate().is_ok());
+    }
+
+    #[test]
+    fn prefetch_pipeline_reports_hits_with_time_to_build() {
+        // give the background workers a real window (sleep between the
+        // schedule step and the due step) and the refresh should be
+        // served from a completed prefetch; a sync fallback is legal
+        // (never wrong), so retry a few times before calling it a bug
+        let mut hits = 0;
+        for attempt in 0..3u64 {
+            let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+            let (mut e, _m, _caps, exact) = setup(cfg, 1000);
+            e.observe_norms(0, vec![1.0; 40]);
+            e.observe_norms(1, vec![1.0; 40]);
+            e.plan(0, 1, &exact); // allocator runs, prefetches scheduled
+            std::thread::sleep(std::time::Duration::from_millis(100 * (attempt + 1)));
+            assert!(e.plan(0, 2, &exact).is_approx());
+            assert!(e.plan(1, 2, &exact).is_approx());
+            let pf = e.prefetch_stats();
+            assert_eq!(pf.hits + pf.sync_fallbacks, 2);
+            hits = pf.hits;
+            if hits >= 1 {
+                break;
+            }
+        }
+        assert!(hits >= 1, "no tiny build completed within any window");
     }
 }

@@ -11,6 +11,9 @@
 //! for any value — see DESIGN.md §Parallel runtime).  `--no-plan-cache`
 //! ablates the SpMM plan cache (every kernel call re-groups its edges;
 //! results are bit-identical either way — DESIGN.md §Plan cache).
+//! `--no-prefetch` ablates the sample-cache prefetch pipeline (every
+//! refresh builds synchronously on the training thread; bit-identical
+//! either way — DESIGN.md §Prefetching refreshes).
 //!
 //! Examples:
 //!   rsc train --dataset reddit-sim --model gcn --epochs 200 --rsc --budget 0.1
@@ -27,12 +30,24 @@ use rsc::train::{train, TrainConfig};
 use rsc::util::cli::Args;
 use rsc::util::parallel::{self, Parallelism};
 
+/// Boolean (value-less) flags across all subcommands; declaring them
+/// keeps a following positional from being swallowed as a flag value
+/// (`rsc --verbose train` must still see the `train` subcommand).
+const BOOL_FLAGS: &[&str] = &[
+    "rsc",
+    "verbose",
+    "no-cache",
+    "no-switch",
+    "no-plan-cache",
+    "no-prefetch",
+];
+
 fn main() {
     // silence TFRT client chatter on the default path
     if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
         std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "3");
     }
-    let args = Args::parse_env();
+    let args = Args::parse_env_with_bools(BOOL_FLAGS);
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "train" => run(cmd_train(&args)),
@@ -83,7 +98,7 @@ fn load_backend(kind: &str, dataset: &str) -> Result<Box<dyn Backend>> {
 
 fn rsc_config(args: &Args) -> Result<RscConfig> {
     let enabled = args.bool_or("rsc", false)?;
-    Ok(RscConfig {
+    let cfg = RscConfig {
         enabled,
         budget_c: args.f64_or("budget", 0.1)?,
         alpha: args.f64_or("alpha", 0.02)?,
@@ -103,7 +118,14 @@ fn rsc_config(args: &Args) -> Result<RscConfig> {
         // Ablation parity with --no-cache: drop the SpMM plan cache so
         // every kernel call re-groups its edges (the pre-plan behavior).
         plan_cache: !args.bool_or("no-plan-cache", false)?,
-    })
+        // Ablation: build every sample-cache refresh synchronously on the
+        // training thread (results are bit-identical either way).
+        prefetch: !args.bool_or("no-prefetch", false)?,
+    };
+    // a bad flag combination (e.g. --alloc-every 0) is a CLI error, not
+    // a panic deep inside the engine
+    cfg.validate()?;
+    Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -145,8 +167,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     println!("train wall: {:.2}s", res.train_wall_s);
     println!(
-        "cache hits/misses: {}/{}  alloc {:.1}ms  sampling {:.1}ms",
+        "cache hits/misses: {}/{}  alloc {:.1}ms  hot-path sampling {:.1}ms",
         res.cache_hits, res.cache_misses, res.alloc_ms, res.sample_ms
+    );
+    println!(
+        "prefetch: {}/{} refreshes from a completed prefetch ({} scheduled, \
+         {} late)  background build {:.1}ms",
+        res.prefetch.hits,
+        res.prefetch.hits + res.prefetch.sync_fallbacks,
+        res.prefetch.scheduled,
+        res.prefetch.late,
+        res.prefetch_build_ms
     );
     println!(
         "plan cache hits/builds: {}/{}  workspace reused/fresh: {}/{}",

@@ -16,7 +16,6 @@
 
 use crate::coordinator::RscEngine;
 use crate::data::DatasetCfg;
-use crate::graph::Csr;
 use crate::model::ops::{GraphBufs, OpNames};
 use crate::model::params::{Param, ParamSet};
 use crate::runtime::{Backend, ExecCtx, SpmmPlan, Value, Workspace};
@@ -175,8 +174,7 @@ impl GcnModel {
                 })?;
                 engine.observe_norms(l, norms.into_iter().next().unwrap().into_f32s()?);
             }
-            let (cap, ev, t, sp) =
-                plan_edges(engine, l, step, &bufs.matrix, &bufs.caps, &bufs.exact);
+            let (cap, ev, t, sp) = plan_edges(engine, l, step, &bufs.exact);
             let gj = tb.scope("bwd_spmm", || -> Result<Vec<Value>> {
                 if l == l_total - 1 {
                     let op = self.names.spmm_bwd_nomask(d, cap);
@@ -228,18 +226,18 @@ impl GcnModel {
 /// Resolve the engine plan into (bucket cap, borrowed edge Values,
 /// immutability tag, cached SpMM plan).  The edge Values stay borrowed
 /// from the engine's cached selection — no per-call cloning; the SpMM
-/// plan is `None` under the `--no-plan-cache` ablation.
+/// plan is `None` under the `--no-plan-cache` ablation.  (The engine
+/// owns the matrix and bucket ladder since the prefetch pipeline: its
+/// background builds need them independent of the caller's borrow.)
 pub(crate) fn plan_edges<'a>(
     engine: &'a mut RscEngine,
     site: usize,
     step: u64,
-    matrix: &Csr,
-    caps: &[usize],
     exact: &'a Selection,
 ) -> (usize, &'a (Value, Value, Value), u64, Option<Arc<SpmmPlan>>) {
     let par = engine.parallelism();
     let plan_cache = engine.cfg.plan_cache;
-    let plan = engine.plan(site, step, matrix, caps, exact);
+    let plan = engine.plan(site, step, exact);
     let sel = plan.selection();
     if std::env::var_os("RSC_DEBUG_PLAN").is_some() {
         eprintln!(

@@ -204,8 +204,7 @@ impl GcniiModel {
                 })?;
                 engine.observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
             }
-            let (cap, ev, t, sp) =
-                plan_edges(engine, site, step, &bufs.matrix, &bufs.caps, &bufs.exact);
+            let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
             let out = tb.scope("bwd_spmm", || {
                 b.run_ctx(
                     &self.names.spmm_bwd_nomask(self.d_h, cap),

@@ -194,7 +194,9 @@ pub fn edge_values(e: &EdgeList) -> (Value, Value, Value) {
 /// runtime falls back to per-call grouping.
 pub struct GraphBufs {
     /// Normalized matrix, row-major (GCN: sym-norm Â; SAGE: mean matrix).
-    pub matrix: Csr,
+    /// Shared (`Arc`) with the RSC engine so background sample-cache
+    /// refresh builds can slice it without copying the graph.
+    pub matrix: Arc<Csr>,
     /// Forward edges (src=col, dst=row) as ready-made Values.
     pub fwd: (Value, Value, Value),
     /// Immutability tags for `fwd` (static across the whole run — the XLA
@@ -226,7 +228,7 @@ impl GraphBufs {
             fwd: edge_values(&fwd_edges),
             fwd_tags: crate::sampling::selection::fresh_tags(),
             exact,
-            matrix,
+            matrix: Arc::new(matrix),
             caps,
             plan_cache: true,
             par: Parallelism::default(),
@@ -244,7 +246,7 @@ impl GraphBufs {
             fwd: edge_values(&fwd_edges),
             fwd_tags: crate::sampling::selection::fresh_tags(),
             exact,
-            matrix,
+            matrix: Arc::new(matrix),
             caps,
             plan_cache: true,
             par: Parallelism::default(),

@@ -170,8 +170,7 @@ impl SageModel {
                     engine
                         .observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
                 }
-                let (cap, ev, t, sp) =
-                    plan_edges(engine, site, step, &bufs.matrix, &bufs.caps, &bufs.exact);
+                let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
                 let op = self.names.spmm_bwd_acc(d, cap);
                 let out = tb.scope("bwd_spmm", || {
                     b.run_ctx(

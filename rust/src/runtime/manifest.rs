@@ -150,6 +150,151 @@ impl Manifest {
         Ok(Manifest { dataset, ops })
     }
 
+    /// Synthesize the full-batch GCN op catalog for `cfg` directly in
+    /// Rust — no AOT artifacts on disk.  The native backend dispatches
+    /// purely on `meta.kind` plus runtime shapes, so a synthesized
+    /// catalog is executable end to end (training, eval, Adam); only the
+    /// XLA backend needs the HLO files the python pipeline emits.  Used
+    /// by tests, benches and CI environments without `make artifacts`
+    /// (e.g. the prefetch-parity job), mirroring
+    /// `python/compile/model.py::build_catalog`'s GCN subset: fused
+    /// forward per layer, the spmm_bwd_{mask,nomask} family over the
+    /// full bucket ladder, the dense backward pair, row-norms, both
+    /// losses, and Adam per weight shape.
+    pub fn synthesize_full_batch_gcn(cfg: &DatasetCfg) -> Manifest {
+        let v = cfg.v;
+        let m = cfg.m();
+        let caps = synth_bucket_caps(m);
+        let f32s = |shape: &[usize]| TensorSpec {
+            dtype: "f32".to_string(),
+            shape: shape.to_vec(),
+        };
+        let i32s = |shape: &[usize]| TensorSpec {
+            dtype: "i32".to_string(),
+            shape: shape.to_vec(),
+        };
+        let mut ops: BTreeMap<String, OpDef> = BTreeMap::new();
+        let mut emit = |name: String,
+                        meta: String,
+                        inputs: Vec<TensorSpec>,
+                        outputs: Vec<TensorSpec>| {
+            let def = OpDef {
+                file: PathBuf::from("synthesized"),
+                inputs,
+                outputs,
+                meta: Json::parse(&meta).expect("synthesized meta is valid json"),
+                name: name.clone(),
+            };
+            ops.entry(name).or_insert(def);
+        };
+
+        let mut dims = vec![cfg.d_in];
+        dims.extend(std::iter::repeat(cfg.d_h).take(cfg.layers - 1));
+        dims.push(cfg.n_class);
+
+        for l in 0..cfg.layers {
+            let (din, dout) = (dims[l], dims[l + 1]);
+            let relu = l < cfg.layers - 1;
+            let tag = if relu { "relu" } else { "lin" };
+            emit(
+                format!("gcn_fwd_{din}x{dout}_{tag}"),
+                format!(r#"{{"kind": "gcn_fwd", "relu": {relu}}}"#),
+                vec![
+                    f32s(&[v, din]),
+                    f32s(&[din, dout]),
+                    i32s(&[m]),
+                    i32s(&[m]),
+                    f32s(&[m]),
+                ],
+                vec![f32s(&[v, dout])],
+            );
+            emit(
+                format!("gcn_bwd_mm_{din}x{dout}"),
+                r#"{"kind": "gcn_bwd_mm"}"#.to_string(),
+                vec![f32s(&[v, din]), f32s(&[v, dout]), f32s(&[din, dout])],
+                vec![f32s(&[din, dout]), f32s(&[v, din])],
+            );
+            emit(
+                format!("adam_{din}x{dout}"),
+                r#"{"kind": "adam"}"#.to_string(),
+                vec![
+                    f32s(&[din, dout]),
+                    f32s(&[din, dout]),
+                    f32s(&[din, dout]),
+                    f32s(&[din, dout]),
+                    f32s(&[]),
+                    f32s(&[]),
+                ],
+                vec![f32s(&[din, dout]), f32s(&[din, dout]), f32s(&[din, dout])],
+            );
+        }
+
+        // backward-SpMM grads only carry width d_h or n_class
+        let mut bwd_dims = vec![cfg.d_h, cfg.n_class];
+        bwd_dims.sort_unstable();
+        bwd_dims.dedup();
+        for &d in &bwd_dims {
+            emit(
+                format!("row_norms_{d}"),
+                r#"{"kind": "row_norms"}"#.to_string(),
+                vec![f32s(&[v, d])],
+                vec![f32s(&[v])],
+            );
+            for &cap in &caps {
+                emit(
+                    format!("spmm_bwd_mask_{d}_cap{cap}"),
+                    format!(r#"{{"kind": "spmm_bwd_mask", "d": {d}, "cap": {cap}}}"#),
+                    vec![
+                        f32s(&[v, d]),
+                        f32s(&[v, d]),
+                        i32s(&[cap]),
+                        i32s(&[cap]),
+                        f32s(&[cap]),
+                    ],
+                    vec![f32s(&[v, d])],
+                );
+                emit(
+                    format!("spmm_bwd_nomask_{d}_cap{cap}"),
+                    format!(r#"{{"kind": "spmm_bwd_nomask", "d": {d}, "cap": {cap}}}"#),
+                    vec![f32s(&[v, d]), i32s(&[cap]), i32s(&[cap]), f32s(&[cap])],
+                    vec![f32s(&[v, d])],
+                );
+            }
+        }
+
+        let c = cfg.n_class;
+        emit(
+            "loss_softmax".to_string(),
+            r#"{"kind": "loss_softmax"}"#.to_string(),
+            vec![f32s(&[v, c]), i32s(&[v]), f32s(&[v])],
+            vec![f32s(&[]), f32s(&[v, c])],
+        );
+        emit(
+            "loss_bce".to_string(),
+            r#"{"kind": "loss_bce"}"#.to_string(),
+            vec![f32s(&[v, c]), f32s(&[v, c]), f32s(&[v])],
+            vec![f32s(&[]), f32s(&[v, c])],
+        );
+
+        let dataset = ManifestDataset {
+            name: cfg.name.clone(),
+            v,
+            e: cfg.e,
+            m,
+            d_in: cfg.d_in,
+            d_h: cfg.d_h,
+            n_class: cfg.n_class,
+            multilabel: cfg.multilabel,
+            layers: cfg.layers,
+            gcnii_layers: cfg.gcnii_layers,
+            saint_v: cfg.saint_v,
+            saint_m: cfg.saint_m,
+            caps,
+            saint_caps: vec![],
+        };
+        Manifest { dataset, ops }
+    }
+
     /// Assert the python-side dims match the rust dataset config.
     pub fn check_against(&self, cfg: &DatasetCfg) -> Result<()> {
         let d = &self.dataset;
@@ -170,6 +315,24 @@ impl Manifest {
         );
         Ok(())
     }
+}
+
+/// The edge-capacity bucket ladder for `m` edges, mirroring
+/// `python/compile/model.py::bucket_caps` (fractions 1/16 .. 1 of the
+/// full edge count, deduplicated ascending, topped at exactly `m`).
+pub fn synth_bucket_caps(m: usize) -> Vec<usize> {
+    let fractions: [(usize, usize); 8] =
+        [(1, 16), (1, 8), (3, 16), (1, 4), (3, 8), (1, 2), (3, 4), (1, 1)];
+    let mut caps: Vec<usize> = fractions
+        .iter()
+        .map(|&(num, den)| ((num * m).div_ceil(den)).max(1))
+        .collect();
+    caps.sort_unstable();
+    caps.dedup();
+    if let Some(last) = caps.last_mut() {
+        *last = m;
+    }
+    caps
 }
 
 #[cfg(test)]
@@ -198,5 +361,47 @@ mod tests {
         // cross-check against rust config
         let cfg = crate::data::dataset_cfg("tiny").unwrap();
         m.check_against(&cfg).unwrap();
+    }
+
+    #[test]
+    fn synthesized_catalog_matches_dataset_and_covers_gcn() {
+        let cfg = crate::data::dataset_cfg("tiny").unwrap();
+        let m = Manifest::synthesize_full_batch_gcn(&cfg);
+        m.check_against(&cfg).unwrap();
+        assert_eq!(*m.dataset.caps.last().unwrap(), cfg.m());
+        // everything a tiny GCN training step + eval requests
+        for name in [
+            "gcn_fwd_16x16_relu",
+            "gcn_fwd_16x4_lin",
+            "gcn_bwd_mm_16x16",
+            "gcn_bwd_mm_16x4",
+            "adam_16x16",
+            "adam_16x4",
+            "row_norms_16",
+            "row_norms_4",
+            "loss_softmax",
+        ] {
+            assert!(m.ops.contains_key(name), "missing op {name}");
+        }
+        for &cap in &m.dataset.caps {
+            for d in [4usize, 16] {
+                assert!(m.ops.contains_key(&format!("spmm_bwd_mask_{d}_cap{cap}")));
+                assert!(m.ops.contains_key(&format!("spmm_bwd_nomask_{d}_cap{cap}")));
+            }
+        }
+        let op = m.ops.get("gcn_fwd_16x16_relu").unwrap();
+        assert_eq!(op.kind(), "gcn_fwd");
+        assert!(op.meta_bool("relu").unwrap());
+        assert_eq!(op.inputs[2].shape, vec![cfg.m()]);
+    }
+
+    #[test]
+    fn synth_bucket_caps_ascending_unique_topped_at_m() {
+        for m in [1usize, 2, 7, 16, 1152, 400_000] {
+            let caps = synth_bucket_caps(m);
+            assert_eq!(*caps.last().unwrap(), m);
+            assert!(caps.windows(2).all(|w| w[0] < w[1]), "{caps:?}");
+            assert!(caps[0] >= 1);
+        }
     }
 }

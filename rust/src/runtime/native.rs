@@ -72,6 +72,15 @@ impl NativeBackend {
         NativeBackend { manifest, par: parallel::global() }
     }
 
+    /// Build the backend from a synthesized full-batch GCN catalog — no
+    /// AOT artifacts needed (see [`Manifest::synthesize_full_batch_gcn`]).
+    /// Used by tests, benches and CI environments without `make
+    /// artifacts`.
+    pub fn synthesize(dataset: &str) -> Result<NativeBackend> {
+        let cfg = crate::data::dataset_cfg(dataset)?;
+        Ok(NativeBackend::from_manifest(Manifest::synthesize_full_batch_gcn(&cfg)))
+    }
+
     /// Override the execution [`Parallelism`] (defaults to the process
     /// global at construction time).
     pub fn with_parallelism(mut self, par: Parallelism) -> NativeBackend {

@@ -135,6 +135,17 @@ impl Selection {
     }
 }
 
+/// Selections (and the plans cached inside them) cross threads: the
+/// sample cache builds replacements on background rayon workers and the
+/// training thread swaps them in (DESIGN.md §Prefetching refreshes).
+/// Keep that a compile-time guarantee.
+#[allow(dead_code)]
+fn assert_selection_is_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<Selection>();
+    check::<Arc<SpmmPlan>>();
+}
+
 /// Smallest capacity >= nnz; caps must be ascending and end >= nnz.
 pub fn pick_bucket(caps: &[usize], nnz: usize) -> usize {
     for &c in caps {

@@ -62,6 +62,12 @@ impl MetricKind {
 }
 
 /// Multi-class accuracy: fraction of kept nodes whose argmax matches.
+///
+/// The argmax follows `np.argmax` tie semantics: ties resolve to the
+/// first (lowest) index, and the comparator is `total_cmp`, so NaN
+/// logits from a diverged run rank deterministically (positive NaNs
+/// above +inf, negative NaNs below -inf) instead of panicking
+/// mid-evaluation.
 pub fn accuracy(logits: &[f32], labels: &[i32], keep: &[bool], c: usize) -> f64 {
     let (mut hit, mut total) = (0usize, 0usize);
     for (i, &k) in keep.iter().enumerate() {
@@ -72,7 +78,8 @@ pub fn accuracy(logits: &[f32], labels: &[i32], keep: &[bool], c: usize) -> f64 
         let pred = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            // on value ties, the *earlier* index must compare greater
+            .max_by(|a, b| a.1.total_cmp(b.1).then_with(|| b.0.cmp(&a.0)))
             .map(|(j, _)| j as i32)
             .unwrap();
         hit += (pred == labels[i]) as usize;
@@ -151,6 +158,30 @@ mod tests {
         let keep2 = vec![true, true, false];
         assert!((accuracy(&logits, &labels, &keep2, 2) - 1.0).abs() < 1e-12);
         assert!(accuracy(&logits, &labels, &[false; 3], 2).is_nan());
+    }
+
+    #[test]
+    fn accuracy_nan_logits_do_not_panic() {
+        // regression: partial_cmp().unwrap() used to panic on NaN rows
+        let logits = vec![f32::NAN, 1.0, 1.0, f32::NAN];
+        let labels = vec![0, 1];
+        let keep = vec![true, true];
+        // NaN sorts greatest under total_cmp: row 0 predicts class 0
+        // (the NaN), row 1 predicts class 1 (its first NaN)
+        let acc = accuracy(&logits, &labels, &keep, 2);
+        assert!((acc - 1.0).abs() < 1e-12, "acc={acc}");
+        // all-NaN row: first index wins (np.argmax semantics)
+        let logits = vec![f32::NAN, f32::NAN];
+        assert!((accuracy(&logits, &[0], &[true], 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_ties_break_to_first_index() {
+        // np.argmax returns the first maximal index; max_by alone would
+        // return the last
+        let logits = vec![1.0, 1.0, 1.0];
+        assert!((accuracy(&logits, &[0], &[true], 3) - 1.0).abs() < 1e-12);
+        assert!(accuracy(&logits, &[2], &[true], 3) < 0.5);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! selection-overlap AUC (Fig. 4), and allocator/sampling overhead
 //! (Table 11).
 
+use crate::cache::PrefetchStats;
 use crate::coordinator::{RscConfig, RscEngine};
 use crate::data::{Dataset, Labels, SaintSampler, Split};
 use crate::model::gcn::GcnModel;
@@ -75,7 +76,14 @@ pub struct TrainResult {
     pub picked_degrees: Vec<(usize, u64, f64)>,
     pub overlap_samples: Vec<(usize, u64, f64)>,
     pub alloc_ms: f64,
+    /// Sampling/slicing wall-time that landed *on the hot path* (with
+    /// prefetching on this is just the swap-in plus any fallbacks).
     pub sample_ms: f64,
+    /// Refresh-build wall-time absorbed by background workers instead.
+    pub prefetch_build_ms: f64,
+    /// Sample-cache prefetch pipeline counters (scheduled / hits /
+    /// sync fallbacks / late completions).
+    pub prefetch: PrefetchStats,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// SpMM plan-cache (hits, builds) during this run.  Process-global
@@ -131,7 +139,13 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
     let widths: Vec<usize> = (0..cfg.model.n_spmm_bwd(&ds.cfg))
         .map(|s| cfg.model.spmm_width(&ds.cfg, s))
         .collect();
-    let mut engine = RscEngine::new(cfg.rsc.clone(), &bufs.matrix, widths, cfg.epochs as u64);
+    let mut engine = RscEngine::new(
+        cfg.rsc.clone(),
+        bufs.matrix.clone(),
+        bufs.caps.clone(),
+        widths,
+        cfg.epochs as u64,
+    )?;
 
     enum AnyModel {
         Gcn(GcnModel),
@@ -183,7 +197,10 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
             let val = metric.evaluate(ds, lf, Split::Val);
             let test = metric.evaluate(ds, lf, Split::Test);
             val_curve.push((epoch, val));
-            if val > best_val {
+            // NaN never wins a comparison, so a degenerate split would
+            // silently keep test_metric = NaN — skip NaN vals explicitly
+            // and diagnose at the end of training instead
+            if !val.is_nan() && val > best_val {
                 best_val = val;
                 test_at_best = test;
             }
@@ -196,6 +213,13 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
             ws.recycle(logits);
         }
     }
+    ensure!(
+        best_val.is_finite(),
+        "no usable validation metric in {} evaluations (all NaN): check the \
+         val split and labels of {}",
+        val_curve.len(),
+        ds.cfg.name
+    );
     let train_wall_s = sw.elapsed().as_secs_f64() - eval_tb.grand_total_ms() / 1e3;
     let (cache_hits, cache_misses) = engine.cache_stats();
     let (plan_hits1, plan_builds1) = plan_stats();
@@ -212,6 +236,8 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
         overlap_samples: engine.overlap.samples.clone(),
         alloc_ms: engine.alloc_ms,
         sample_ms: engine.sample_ms,
+        prefetch_build_ms: engine.prefetch_build_ms,
+        prefetch: engine.prefetch_stats(),
         cache_hits,
         cache_misses,
         plan_hits: plan_hits1.saturating_sub(plan_hits0),
@@ -219,6 +245,26 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
         ws: ws.stats(),
         threads: parallel::global().threads(),
     })
+}
+
+/// Evaluate a SAINT-trained model on the full graph: the weights are the
+/// subgraph-trained ones, but the ops must come from the full-batch
+/// catalog, so the op-name prefix is swapped for the duration of the
+/// forward pass.  The original names are restored *before* the result is
+/// inspected — an eval error must not leave the model dispatching
+/// full-batch op names for the rest of training.
+pub fn saint_eval_full_batch(
+    model: &mut SageModel,
+    b: &dyn Backend,
+    x_full: &Value,
+    eval_bufs: &GraphBufs,
+    tb: &mut TimeBook,
+    ws: &mut Workspace,
+) -> Result<Value> {
+    let saved = std::mem::replace(&mut model.names, OpNames::full());
+    let res = model.logits(b, x_full, eval_bufs, tb, ws);
+    model.names = saved;
+    res
 }
 
 /// GraphSAINT: pre-sample subgraphs offline (paper footnote 1), train on
@@ -280,8 +326,16 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         .collect();
     let mut engines: Vec<RscEngine> = sub_bufs
         .iter()
-        .map(|bufs| RscEngine::new(cfg.rsc.clone(), &bufs.matrix, widths.clone(), total_uses))
-        .collect();
+        .map(|bufs| {
+            RscEngine::new(
+                cfg.rsc.clone(),
+                bufs.matrix.clone(),
+                bufs.caps.clone(),
+                widths.clone(),
+                total_uses,
+            )
+        })
+        .collect::<Result<_>>()?;
     let mut uses = vec![0u64; n_sub];
 
     let mut model = SageModel::new(&ds.cfg, OpNames::saint(), &mut rng);
@@ -327,14 +381,13 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
 
         if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
             // evaluate with full-batch ops: same weights, full prefix names
-            let saved = std::mem::replace(&mut model.names, OpNames::full());
-            let logits = model.logits(b, &x_full, &eval_bufs, &mut eval_tb, &mut ws)?;
-            model.names = saved;
+            let logits =
+                saint_eval_full_batch(&mut model, b, &x_full, &eval_bufs, &mut eval_tb, &mut ws)?;
             let lf = logits.f32s()?;
             let val = metric.evaluate(ds, lf, Split::Val);
             let test = metric.evaluate(ds, lf, Split::Test);
             val_curve.push((epoch, val));
-            if val > best_val {
+            if !val.is_nan() && val > best_val {
                 best_val = val;
                 test_at_best = test;
             }
@@ -345,11 +398,20 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
             ws.recycle(logits);
         }
     }
+    ensure!(
+        best_val.is_finite(),
+        "no usable validation metric in {} evaluations (all NaN): check the \
+         val split and labels of {}",
+        val_curve.len(),
+        ds.cfg.name
+    );
     let train_wall_s = sw.elapsed().as_secs_f64() - eval_tb.grand_total_ms() / 1e3;
     let mut alloc_history = Vec::new();
     let mut picked = Vec::new();
     let mut overlap = Vec::new();
     let (mut hits, mut misses, mut alloc_ms, mut sample_ms) = (0, 0, 0.0, 0.0);
+    let mut prefetch = PrefetchStats::default();
+    let mut prefetch_build_ms = 0.0;
     for e in &engines {
         alloc_history.extend(e.alloc_history.iter().cloned());
         picked.extend(e.picked_degrees.iter().cloned());
@@ -359,6 +421,8 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         misses += m;
         alloc_ms += e.alloc_ms;
         sample_ms += e.sample_ms;
+        prefetch.absorb(&e.prefetch_stats());
+        prefetch_build_ms += e.prefetch_build_ms;
     }
     let (plan_hits1, plan_builds1) = plan_stats();
     Ok(TrainResult {
@@ -374,6 +438,8 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         overlap_samples: overlap,
         alloc_ms,
         sample_ms,
+        prefetch_build_ms,
+        prefetch,
         cache_hits: hits,
         cache_misses: misses,
         plan_hits: plan_hits1.saturating_sub(plan_hits0),

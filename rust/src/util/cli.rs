@@ -3,6 +3,14 @@
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
 //! arguments.  Typed accessors with defaults; unknown-flag detection via
 //! [`Args::finish`].
+//!
+//! Value-vs-positional disambiguation: a bare `--key` greedily consumes
+//! the next token as its value (so `--lr -0.01` works — a single leading
+//! `-` is a legal value), which would swallow a positional after a
+//! boolean flag (`--verbose train` used to record `verbose="train"` and
+//! lose the subcommand).  Callers therefore declare their boolean flags
+//! ([`Args::parse_with_bools`]): a declared flag never consumes the next
+//! token, and `--flag=false` remains available for explicit values.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -19,13 +27,38 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// [`Args::parse_env`] with a declared boolean-flag set.
+    pub fn parse_env_with_bools(bools: &[&str]) -> Args {
+        Self::parse_with_bools(std::env::args().skip(1), bools)
+    }
+
     pub fn parse<I: IntoIterator<Item = S>, S: Into<String>>(items: I) -> Args {
+        Self::parse_with_bools(items, &[])
+    }
+
+    /// Parse with `bools` declared as boolean flags: `--verbose train`
+    /// keeps `train` positional instead of treating it as the flag's
+    /// value, while an explicit boolean literal is still consumed
+    /// (`--rsc false` keeps meaning rsc = false).  Undeclared flags keep
+    /// the greedy behavior (required for negative numeric values like
+    /// `--lr -0.01`).
+    pub fn parse_with_bools<I: IntoIterator<Item = S>, S: Into<String>>(
+        items: I,
+        bools: &[&str],
+    ) -> Args {
+        let is_bool_literal = |s: &str| {
+            matches!(s, "true" | "1" | "yes" | "on" | "false" | "0" | "no" | "off")
+        };
         let mut a = Args::default();
         let mut it = items.into_iter().map(Into::into).peekable();
         while let Some(tok) = it.next() {
             if let Some(body) = tok.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
                     a.flags.insert(k.to_string(), v.to_string());
+                } else if bools.contains(&body)
+                    && !it.peek().map(|n| is_bool_literal(n.as_str())).unwrap_or(false)
+                {
+                    a.flags.insert(body.to_string(), "true".to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
@@ -151,5 +184,49 @@ mod tests {
     fn bad_values_error() {
         let a = Args::parse(["--n", "xyz"]);
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn declared_bool_flag_keeps_following_positional() {
+        // regression: `--verbose train` used to record verbose="train"
+        // and lose the subcommand entirely
+        let a = Args::parse_with_bools(["--verbose", "train"], &["verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert!(a.bool_or("verbose", false).unwrap());
+        a.finish().unwrap();
+        // same shape mid-command-line
+        let a = Args::parse_with_bools(
+            ["train", "--rsc", "--epochs", "50"],
+            &["rsc", "verbose"],
+        );
+        assert_eq!(a.positional, vec!["train"]);
+        assert!(a.bool_or("rsc", false).unwrap());
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 50);
+    }
+
+    #[test]
+    fn declared_bool_flag_still_accepts_eq_values() {
+        let a = Args::parse_with_bools(["--verbose=false", "train"], &["verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert!(!a.bool_or("verbose", true).unwrap());
+    }
+
+    #[test]
+    fn declared_bool_flag_still_consumes_explicit_literals() {
+        // `--rsc false` predates the bool-flag declaration and must keep
+        // meaning rsc = false, not rsc = true + stray positional
+        let a = Args::parse_with_bools(["train", "--rsc", "false"], &["rsc"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert!(!a.bool_or("rsc", true).unwrap());
+        let a = Args::parse_with_bools(["--verbose", "0", "train"], &["verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert!(!a.bool_or("verbose", true).unwrap());
+    }
+
+    #[test]
+    fn negative_values_still_parse_for_value_flags() {
+        let a = Args::parse_with_bools(["train", "--lr", "-0.01"], &["verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.01);
     }
 }

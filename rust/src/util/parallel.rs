@@ -147,6 +147,18 @@ pub fn set_global(p: Parallelism) {
     *GLOBAL.write().unwrap() = Some(p);
 }
 
+/// Run `task` on the shared rayon worker pool without blocking the
+/// caller — the sample cache's prefetched refresh builds go through
+/// here.  The pool is created on first use (sized to the process-wide
+/// [`Parallelism`], minimum one worker, so even `--threads 1` runs keep
+/// background builds off the training thread).  Tasks must own their
+/// inputs (`'static`); determinism is unaffected because every build is
+/// a pure function of its captured inputs (DESIGN.md §Parallel runtime).
+pub fn spawn_background(task: impl FnOnce() + Send + 'static) {
+    ensure_pool(global().threads());
+    rayon::spawn(task);
+}
+
 /// The process-wide default; resolves (and caches) [`Parallelism::auto`]
 /// on first use if nothing was set.
 pub fn global() -> Parallelism {

@@ -18,13 +18,15 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// p-th percentile (linear interpolation), p in [0, 100].
+/// p-th percentile (linear interpolation), p in [0, 100].  NaN samples
+/// order deterministically (`total_cmp`: positive NaNs above +inf,
+/// negative NaNs below -inf) instead of panicking the sort.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -119,6 +121,16 @@ mod tests {
         assert!((median(&xs) - 2.5).abs() < 1e-12);
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_with_nan_samples_does_not_panic() {
+        // regression: partial_cmp().unwrap() panicked on NaN input
+        let xs = [1.0, f64::NAN, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.0).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!((median(&xs) - 2.0).abs() < 1e-12);
     }
 
     #[test]

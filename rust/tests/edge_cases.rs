@@ -84,13 +84,17 @@ fn engine_single_site_and_c_one() {
     let exact = Selection::exact(&m, &caps);
     let mut e = RscEngine::new(
         RscConfig { budget_c: 1.0, switch_frac: 1.0, ..Default::default() },
-        &m,
+        std::sync::Arc::new(m.clone()),
+        caps.clone(),
         vec![8],
         100,
-    );
+    )
+    .unwrap();
     e.observe_norms(0, vec![1.0; 30]);
+    // step 1 runs the allocator; the selection takes effect at step 2
+    assert!(!e.plan(0, 1, &exact).is_approx());
     // C=1.0 keeps all pairs -> approx plan with the full bucket
-    let p = e.plan(0, 1, &m, &caps, &exact);
+    let p = e.plan(0, 2, &exact);
     assert!(p.is_approx());
     assert_eq!(p.selection().nnz, m.nnz());
 }
@@ -99,12 +103,15 @@ fn engine_single_site_and_c_one() {
 fn engine_alloc_every_schedule() {
     let mut rng = Rng::new(2);
     let m = Csr::random(20, 80, &mut rng);
+    let caps = vec![m.nnz()];
     let e = RscEngine::new(
         RscConfig { alloc_every: 7, switch_frac: 1.0, ..Default::default() },
-        &m,
+        std::sync::Arc::new(m),
+        caps,
         vec![4],
         1000,
-    );
+    )
+    .unwrap();
     assert!(e.norms_wanted(0));
     assert!(!e.norms_wanted(1));
     assert!(e.norms_wanted(7));
@@ -112,15 +119,42 @@ fn engine_alloc_every_schedule() {
 }
 
 #[test]
+fn engine_rejects_alloc_every_zero() {
+    // regression: `rsc train --alloc-every 0` used to reach a
+    // divide-by-zero panic in RscEngine::norms_wanted; now the config is
+    // validated up front and construction returns a proper error
+    let mut rng = Rng::new(2);
+    let m = Csr::random(20, 80, &mut rng);
+    let caps = vec![m.nnz()];
+    let err = RscEngine::new(
+        RscConfig { alloc_every: 0, ..Default::default() },
+        std::sync::Arc::new(m),
+        caps,
+        vec![4],
+        1000,
+    );
+    let msg = format!("{:#}", err.err().expect("must be rejected"));
+    assert!(msg.contains("alloc_every"), "unhelpful error: {msg}");
+}
+
+#[test]
 fn sample_cache_invalidate_all() {
     let mut rng = Rng::new(3);
     let m = Csr::random(10, 30, &mut rng);
     let caps = vec![m.nnz()];
-    let mut c = SampleCache::new(1, 100);
-    c.get_or_build(0, 0, 3, &m, &caps, rsc::util::parallel::global(), || vec![0, 1, 2]);
-    assert!(!c.stale(0, 1, 3));
+    let mut c = SampleCache::new(1);
+    let job = rsc::cache::RefreshJob { k: 3, norms: std::sync::Arc::new(vec![1.0; 10]) };
+    c.schedule(0, 0, job.clone(), None);
+    let r = c.resolve(0, 0, job, |j| rsc::cache::Built {
+        scores: vec![0.0; 10],
+        selection: Selection::build(&m, (0..j.k as u32).collect(), &caps),
+        build_ms: 0.0,
+    });
+    c.install(0, 100, r.k, r.built.selection);
+    assert!(c.fresh(0, 1));
     c.invalidate_all();
-    assert!(c.stale(0, 1, 3));
+    assert!(!c.fresh(0, 1));
+    assert!(c.peek(0).is_none());
 }
 
 #[test]

@@ -18,20 +18,27 @@ fn engine_flops_respect_budget_on_real_graph() {
     let budget_c = 0.25;
     let mut e = RscEngine::new(
         RscConfig { budget_c, switch_frac: 1.0, ..Default::default() },
-        &matrix,
+        std::sync::Arc::new(matrix.clone()),
+        caps.clone(),
         vec![16, 16, 4],
         1000,
-    );
+    )
+    .unwrap();
     let mut rng = Rng::new(1);
     for s in 0..3 {
         let norms: Vec<f32> = (0..matrix.n).map(|_| rng.f32()).collect();
         e.observe_norms(s, norms);
     }
-    // run some steps; collect retained flops
+    // step 1 runs the allocator (site 0 is planned last in a real
+    // backward); the allocation takes effect at step 2
+    for site in (0..3).rev() {
+        e.plan(site, 1, &exact);
+    }
+    // run a step; collect retained flops
     let mut retained = 0u64;
     let widths = [16u64, 16, 4];
     for site in 0..3 {
-        let plan = e.plan(site, 1, &matrix, &caps, &exact);
+        let plan = e.plan(site, 2, &exact);
         assert!(plan.is_approx());
         retained += plan.selection().nnz as u64 * widths[site];
     }
@@ -132,12 +139,15 @@ fn dataset_splits_respect_label_rates() {
 fn engine_switch_boundary_is_exact_phase() {
     let ds = load_or_generate("tiny", 16).unwrap();
     let matrix = ds.adj.gcn_normalize();
+    let caps = vec![matrix.nnz()];
     let e = RscEngine::new(
         RscConfig { switch_frac: 0.8, ..Default::default() },
-        &matrix,
+        std::sync::Arc::new(matrix),
+        caps,
         vec![16],
         100,
-    );
+    )
+    .unwrap();
     assert!(!e.in_exact_phase(79));
     assert!(e.in_exact_phase(80));
     assert!(e.in_exact_phase(99));

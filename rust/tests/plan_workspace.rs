@@ -11,7 +11,7 @@ use rsc::runtime::manifest::{Manifest, ManifestDataset, OpDef, TensorSpec};
 use rsc::runtime::{native, Backend, ExecCtx, NativeBackend, SpmmPlan, Value, Workspace};
 use rsc::sampling::Selection;
 use rsc::util::json::Json;
-use rsc::util::parallel::{self, Parallelism};
+use rsc::util::parallel::Parallelism;
 use rsc::util::prop;
 use rsc::util::rng::Rng;
 use std::collections::BTreeMap;
@@ -431,15 +431,26 @@ fn sample_cache_refresh_drops_the_cached_plan() {
     let mut rng = Rng::new(0x54);
     let adj = Csr::random(30, 90, &mut rng);
     let caps = vec![adj.nnz()];
-    let mut cache = SampleCache::new(1, 5);
+    let mut cache = SampleCache::new(1);
     let par = par_n(2);
-    let sel = cache.get_or_build(0, 0, 4, &adj, &caps, parallel::global(), || vec![0, 1, 2, 3]);
-    let p0 = sel.spmm_plan(par);
+    let job = rsc::cache::RefreshJob { k: 4, norms: std::sync::Arc::new(vec![1.0; 30]) };
+    let build = |j: &rsc::cache::RefreshJob| rsc::cache::Built {
+        scores: vec![0.0; 30],
+        selection: Selection::build(&adj, (0..j.k as u32).collect(), &caps),
+        build_ms: 0.0,
+    };
+    cache.schedule(0, 0, job.clone(), None);
+    let r = cache.resolve(0, 0, job.clone(), build);
+    cache.install(0, 5, r.k, r.built.selection);
+    let p0 = cache.peek(0).unwrap().spmm_plan(par);
     // cache hit within the refresh window: same selection, same plan
-    let sel = cache.get_or_build(0, 3, 4, &adj, &caps, parallel::global(), || unreachable!());
-    assert!(std::sync::Arc::ptr_eq(&p0, &sel.spmm_plan(par)));
+    assert!(cache.fresh(0, 3));
+    assert!(std::sync::Arc::ptr_eq(&p0, &cache.peek(0).unwrap().spmm_plan(par)));
     // refresh: new selection, plan gone until rebuilt
-    let sel = cache.get_or_build(0, 5, 4, &adj, &caps, parallel::global(), || vec![0, 1, 2, 3]);
+    assert!(!cache.fresh(0, 5));
+    let r = cache.resolve(0, 5, job, build);
+    cache.install(0, 10, r.k, r.built.selection);
+    let sel = cache.peek(0).unwrap();
     assert!(sel.peek_plan().is_none(), "refresh must invalidate the plan");
     let p1 = sel.spmm_plan(par);
     assert!(!std::sync::Arc::ptr_eq(&p0, &p1));

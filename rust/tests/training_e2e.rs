@@ -211,3 +211,157 @@ fn overlap_auc_is_high_on_stable_training() {
         / res.overlap_samples.len() as f64;
     assert!(mean > 0.75, "selection overlap AUC too low: {mean}");
 }
+
+// ---------------------------------------------------------------------
+// Prefetch pipeline + hardening regressions.  These run on a synthesized
+// GCN op catalog (Manifest::synthesize_full_batch_gcn), so they need no
+// AOT artifacts and run everywhere, including the CI prefetch-parity job.
+// ---------------------------------------------------------------------
+
+/// Make sure the rayon pool exists and has executed at least one task,
+/// so the first scheduled prefetch doesn't race pool construction.
+fn warm_worker_pool() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    rsc::util::parallel::spawn_background(move || {
+        let _ = tx.send(());
+    });
+    let _ = rx.recv_timeout(std::time::Duration::from_secs(5));
+}
+
+#[test]
+fn prefetch_parity_and_hit_rate() {
+    use rsc::util::parallel::{self, Parallelism};
+    warm_worker_pool();
+    let ds = load_or_generate("tiny", 9).unwrap();
+    let mut reference: Option<Vec<f32>> = None;
+    for threads in [1usize, 2, 4] {
+        parallel::set_global(Parallelism::with_threads(threads));
+        let b = NativeBackend::synthesize("tiny").unwrap();
+        // the default config: rsc on, C=0.1, refresh/alloc every 10,
+        // switch at 0.8 — exactly what `rsc train --rsc` runs
+        let rsc = RscConfig::default();
+        // a sync fallback is *correct* behavior when a CI scheduler
+        // deschedules the worker past its one-step window, so give the
+        // >=90% counter a few attempts; parity must hold on every run
+        let mut on = train(&b, &ds, &cfg(ModelKind::Gcn, 100, rsc.clone())).unwrap();
+        for _ in 0..4 {
+            if on.prefetch.hit_rate() >= 0.9 {
+                break;
+            }
+            let retry = train(&b, &ds, &cfg(ModelKind::Gcn, 100, rsc.clone())).unwrap();
+            assert_eq!(on.loss_curve, retry.loss_curve, "training must be deterministic");
+            on = retry;
+        }
+        let off = train(
+            &b,
+            &ds,
+            &cfg(ModelKind::Gcn, 100, RscConfig { prefetch: false, ..rsc }),
+        )
+        .unwrap();
+        // byte-identical loss curves and metrics, prefetch on vs off
+        assert_eq!(on.loss_curve, off.loss_curve, "threads={threads}");
+        assert_eq!(on.val_curve, off.val_curve, "threads={threads}");
+        assert_eq!(on.test_metric, off.test_metric, "threads={threads}");
+        assert_eq!(on.best_val, off.best_val, "threads={threads}");
+        // ...and across thread counts
+        if let Some(r) = &reference {
+            assert_eq!(&on.loss_curve, r, "thread count changed the trajectory");
+        } else {
+            reference = Some(on.loss_curve.clone());
+        }
+        // the pipeline engaged: refreshes happened and were served from
+        // completed background builds
+        let pf = on.prefetch;
+        let refreshes = pf.hits + pf.sync_fallbacks;
+        assert!(refreshes > 0, "no refreshes at threads={threads}");
+        assert!(
+            pf.hit_rate() >= 0.9,
+            "threads={threads}: only {}/{} refreshes prefetched ({pf:?})",
+            pf.hits,
+            refreshes
+        );
+        assert!(pf.scheduled >= refreshes);
+        // the --no-prefetch run must do all builds synchronously
+        assert_eq!(off.prefetch.hits, 0);
+        assert!(off.prefetch.sync_fallbacks > 0);
+        println!(
+            "threads={threads}: hot-path sampling {:.3}ms (prefetch on) vs \
+             {:.3}ms (off); background builds {:.3}ms, {}",
+            on.sample_ms,
+            off.sample_ms,
+            on.prefetch_build_ms,
+            pf.hits
+        );
+    }
+}
+
+#[test]
+fn all_nan_validation_is_an_error_not_a_nan_result() {
+    // regression: with no val nodes every val metric is NaN, `val >
+    // best_val` never fires, and training used to return test_metric =
+    // NaN with no diagnostic at all
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let mut ds = load_or_generate("tiny", 10).unwrap();
+    for s in ds.split.iter_mut() {
+        if *s == rsc::data::Split::Val {
+            *s = rsc::data::Split::Train;
+        }
+    }
+    let err = train(&b, &ds, &cfg(ModelKind::Gcn, 12, RscConfig::baseline()));
+    let msg = format!("{:#}", err.err().expect("all-NaN validation must error"));
+    assert!(
+        msg.contains("validation"),
+        "diagnostic should point at the val split: {msg}"
+    );
+}
+
+#[test]
+fn saint_eval_error_does_not_corrupt_op_names() {
+    use rsc::model::ops::OpNames;
+    use rsc::model::sage::SageModel;
+    use rsc::runtime::{Backend, Manifest, OpDef, Value, Workspace};
+    use rsc::util::timer::TimeBook;
+
+    /// Delegates metadata to a real backend but fails every execution.
+    struct FailingBackend(NativeBackend);
+    impl Backend for FailingBackend {
+        fn run(&self, name: &str, _inputs: &[Value]) -> rsc::Result<Vec<Value>> {
+            anyhow::bail!("injected eval failure in {name}")
+        }
+        fn op(&self, name: &str) -> rsc::Result<&OpDef> {
+            self.0.op(name)
+        }
+        fn manifest(&self) -> &Manifest {
+            self.0.manifest()
+        }
+        fn backend_name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    let inner = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 11).unwrap();
+    let eval_bufs = rsc::train::trainer::full_graph_bufs(&inner, &ds, ModelKind::Sage);
+    let x_full = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
+    let mut rng = rsc::util::rng::Rng::new(3);
+    let mut model = SageModel::new(&ds.cfg, OpNames::saint(), &mut rng);
+    let failing = FailingBackend(inner);
+    let mut tb = TimeBook::new();
+    let mut ws = Workspace::new();
+    // regression: the eval swap used to restore the saint_ prefix only
+    // after the `?`, so an eval error left the model dispatching
+    // full-batch op names for the rest of training
+    let res = rsc::train::saint_eval_full_batch(
+        &mut model,
+        &failing,
+        &x_full,
+        &eval_bufs,
+        &mut tb,
+        &mut ws,
+    );
+    assert!(res.is_err(), "the failing backend must propagate its error");
+    assert_eq!(
+        model.names.prefix, "saint_",
+        "an eval error corrupted the model's op-name prefix"
+    );
+}
