@@ -1,0 +1,82 @@
+//! Kernel-level microbenches with a machine-readable trail: times every
+//! planned-SpMM kernel variant (scalar / axpy4 / SIMD-tiled) across
+//! feature widths plus the SIMD-dispatch on/off cost of the dense
+//! matmul, Adam, softmax loss and row-norm kernels, then appends one run
+//! to `BENCH_kernels.json` so the repo's perf trajectory accumulates
+//! across PRs (schema `rsc-bench-kernels/v1`; rows are
+//! `{op, variant, dims, ns_per_iter, speedup_vs_scalar}`).
+//!
+//! Usage:
+//!   cargo bench --bench kernels              # full run, reddit-sim graph
+//!   cargo bench --bench kernels -- --smoke   # seconds-scale CI smoke
+//!   RSC_BENCH_OUT=path.json ...              # redirect the JSON
+//!
+//! All compared variants are bitwise identical (asserted inside the
+//! runners); this bench measures throughput only.
+
+use rsc::bench::harness::header;
+use rsc::bench::support::{
+    append_bench_kernels_json, simd_dispatch_rows, spmm_variant_rows, GraphFixture,
+};
+use rsc::runtime::simd;
+use rsc::util::stats::Table;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let iters = if smoke { 3 } else { 15 };
+    let dataset = if smoke { "tiny" } else { "reddit-sim" };
+    header(
+        "kernels",
+        &format!(
+            "kernel variants on {dataset} (avx {}){}",
+            if simd::available() { "available" } else { "absent: simd == scalar" },
+            if smoke { " [smoke]" } else { "" }
+        ),
+    );
+    let fx = GraphFixture::gcn(dataset)?;
+    let widths: &[usize] = if smoke { &[16, 64] } else { &[16, 64, 128, 256] };
+
+    let spmm = spmm_variant_rows(&fx, widths, iters);
+    let mut t = Table::new(vec![
+        "d",
+        "tile",
+        "scalar ms",
+        "axpy4 ms",
+        "simd ms",
+        "simd vs axpy4",
+        "simd vs scalar",
+    ]);
+    for r in &spmm {
+        t.row(vec![
+            r.d.to_string(),
+            r.tile.to_string(),
+            format!("{:.3}", r.scalar_ms),
+            format!("{:.3}", r.axpy4_ms),
+            format!("{:.3}", r.simd_ms),
+            format!("{:.2}x", r.simd_vs_axpy4()),
+            format!("{:.2}x", r.simd_vs_scalar()),
+        ]);
+    }
+    t.print();
+
+    let dispatch = simd_dispatch_rows(&fx, iters);
+    let mut td = Table::new(vec!["op", "dims", "scalar ms", "simd ms", "speedup"]);
+    for r in &dispatch {
+        td.row(vec![
+            r.op.clone(),
+            r.dims.clone(),
+            format!("{:.3}", r.scalar_ms),
+            format!("{:.3}", r.simd_ms),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    td.print();
+
+    // cargo runs bench binaries with cwd = the package root (rust/), so
+    // the default must target the *repo-root* tracked file explicitly
+    let path = std::env::var("RSC_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json").into());
+    append_bench_kernels_json(&path, &spmm, &dispatch)?;
+    println!("appended run to {path}");
+    Ok(())
+}

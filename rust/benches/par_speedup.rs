@@ -1,38 +1,65 @@
 //! Sequential vs parallel native runtime: per-op wall-clock for the
 //! sparse hot kernels (SpMM, dense matmuls, row norms, CSR transpose,
-//! Figure 5 slicing, top-k argsort) on the paper's synthetic graphs.
+//! Figure 5 slicing, top-k argsort) on the paper's synthetic graphs —
+//! plus the planned-SpMM comparisons (per-call grouping vs cached plan,
+//! and the scalar/axpy4/SIMD-tiled kernel variants).
 //!
-//! Shape to hold: on the largest graph (products-sim, |V|=20k, |E|=400k)
-//! with >= 4 worker threads the SpMM/MatMul rows should clear 2x.  The
-//! parallel results are byte-identical to the sequential ones (DESIGN.md
-//! §Parallel runtime), so every speedup here is "free" accuracy-wise.
+//! Shapes to hold: on the largest graph (products-sim, |V|=20k, |E|=400k)
+//! with >= 4 worker threads the SpMM/MatMul rows should clear 2x, and the
+//! SIMD-tiled planned-SpMM variant should clear 1.5x over axpy4 at
+//! d >= 64 single-threaded.  Every comparison here is between bitwise-
+//! identical computations (DESIGN.md §Parallel runtime, §Vectorized
+//! locality layer), so the speedups are "free" accuracy-wise.
 //!
 //! Thread count: RSC_THREADS env var, else auto-detected.
+//! `-- --smoke` runs a seconds-scale subset (the CI bench smoke).
 
 use rsc::bench::harness::{header, BenchScale};
-use rsc::bench::support::{native_seq_vs_par, planned_vs_unplanned, prefetch_on_vs_off};
+use rsc::bench::support::{
+    native_seq_vs_par, planned_vs_unplanned, prefetch_on_vs_off, spmm_variant_rows,
+    GraphFixture,
+};
 use rsc::util::parallel::Parallelism;
 use rsc::util::stats::Table;
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let par = Parallelism::auto();
     header(
         "par_speedup",
         &format!(
-            "native kernels, sequential vs {} worker threads",
-            par.threads()
+            "native kernels, sequential vs {} worker threads{}",
+            par.threads(),
+            if smoke { " [smoke]" } else { "" }
         ),
     );
     if !par.is_parallel() {
         println!("only one core available: parallel path == sequential path");
     }
     let scale = BenchScale::from_env(1, 0);
-    let iters = if scale.full { 30 } else { 10 };
+    let iters = if smoke {
+        3
+    } else if scale.full {
+        30
+    } else {
+        10
+    };
+    let datasets: &[&str] = if smoke {
+        &["tiny"]
+    } else {
+        &["reddit-sim", "products-sim"]
+    };
+    // one graph synthesis per dataset, shared by every section below
+    let fixtures: Vec<GraphFixture> = datasets
+        .iter()
+        .map(|d| GraphFixture::gcn(d))
+        .collect::<anyhow::Result<_>>()?;
+
     let mut t = Table::new(vec!["dataset", "op", "seq ms", "par ms", "speedup"]);
-    for dataset in ["reddit-sim", "products-sim"] {
-        for r in native_seq_vs_par(dataset, iters, par)? {
+    for fx in &fixtures {
+        for r in native_seq_vs_par(fx, iters, par)? {
             t.row(vec![
-                dataset.to_string(),
+                fx.name.clone(),
                 r.op.clone(),
                 format!("{:.3}", r.seq_ms),
                 format!("{:.3}", r.par_ms),
@@ -59,10 +86,10 @@ fn main() -> anyhow::Result<()> {
         "plan build ms",
         "break-even steps",
     ]);
-    for dataset in ["reddit-sim", "products-sim"] {
-        let r = planned_vs_unplanned(dataset, iters, par)?;
+    for fx in &fixtures {
+        let r = planned_vs_unplanned(fx, iters, par)?;
         tp.row(vec![
-            dataset.to_string(),
+            fx.name.clone(),
             r.nnz.to_string(),
             format!("{:.3}", r.unplanned_ms),
             format!("{:.3}", r.planned_ms),
@@ -77,6 +104,46 @@ fn main() -> anyhow::Result<()> {
          step: cached epochs pay the planned column only"
     );
 
+    header(
+        "par_speedup/kernels",
+        "planned-SpMM kernel variants, single thread (bitwise-equal outputs)",
+    );
+    let widths: &[usize] = if smoke { &[16, 64] } else { &[16, 64, 128, 256] };
+    let mut tk = Table::new(vec![
+        "dataset",
+        "d",
+        "tile",
+        "scalar ms",
+        "axpy4 ms",
+        "simd ms",
+        "simd vs axpy4",
+        "simd vs scalar",
+    ]);
+    for fx in &fixtures {
+        for r in spmm_variant_rows(fx, widths, iters) {
+            tk.row(vec![
+                fx.name.clone(),
+                r.d.to_string(),
+                r.tile.to_string(),
+                format!("{:.3}", r.scalar_ms),
+                format!("{:.3}", r.axpy4_ms),
+                format!("{:.3}", r.simd_ms),
+                format!("{:.2}x", r.simd_vs_axpy4()),
+                format!("{:.2}x", r.simd_vs_scalar()),
+            ]);
+        }
+    }
+    tk.print();
+    println!(
+        "acceptance shape: simd-tiled >= 1.5x over axpy4 at d >= 64, single \
+         thread, on the synthetic power-law graphs (requires AVX; on non-AVX \
+         hosts the simd column degenerates to the scalar mirror)"
+    );
+
+    if smoke {
+        println!("\n[smoke] skipping the prefetch end-to-end section");
+        return Ok(());
+    }
     header(
         "par_speedup/prefetch",
         "sample-cache refreshes: inline (--no-prefetch) vs background-prefetched \

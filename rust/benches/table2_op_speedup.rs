@@ -14,7 +14,9 @@
 
 use rsc::allocator::{Allocator, GreedyAllocator, LayerScores};
 use rsc::bench::harness::{bench_fn, header, BenchScale};
-use rsc::bench::support::{native_seq_vs_par, planned_vs_unplanned, PAPER_DATASETS};
+use rsc::bench::support::{
+    native_seq_vs_par, planned_vs_unplanned, GraphFixture, PAPER_DATASETS,
+};
 use rsc::data::load_or_generate;
 use rsc::graph::Csr;
 use rsc::runtime::{Backend, Value, XlaBackend};
@@ -92,11 +94,16 @@ fn main() -> anyhow::Result<()> {
         "table2a",
         &format!("native per-op seq vs par ({} threads)", par.threads()),
     );
+    // one graph synthesis per dataset, shared by both native sections
+    let fixtures: Vec<GraphFixture> = PAPER_DATASETS
+        .iter()
+        .map(|d| GraphFixture::gcn(d))
+        .collect::<anyhow::Result<_>>()?;
     let mut tn = Table::new(vec!["dataset", "op", "seq ms", "par ms", "speedup"]);
-    for name in PAPER_DATASETS {
-        for r in native_seq_vs_par(name, iters.min(10), par)? {
+    for fx in &fixtures {
+        for r in native_seq_vs_par(fx, iters.min(10), par)? {
             tn.row(vec![
-                name.to_string(),
+                fx.name.clone(),
                 r.op.clone(),
                 format!("{:.3}", r.seq_ms),
                 format!("{:.3}", r.par_ms),
@@ -120,10 +127,10 @@ fn main() -> anyhow::Result<()> {
         "plan build ms",
         "break-even steps",
     ]);
-    for name in PAPER_DATASETS {
-        let r = planned_vs_unplanned(name, iters.min(10), par)?;
+    for fx in &fixtures {
+        let r = planned_vs_unplanned(fx, iters.min(10), par)?;
         tpl.row(vec![
-            name.to_string(),
+            fx.name.clone(),
             r.nnz.to_string(),
             format!("{:.3}", r.unplanned_ms),
             format!("{:.3}", r.planned_ms),

@@ -1,19 +1,67 @@
-//! Shared plumbing for the per-table/figure bench targets, including the
-//! sequential-vs-parallel native-kernel comparison behind
-//! `benches/par_speedup.rs` and the native section of
-//! `benches/table2_op_speedup.rs`.
+//! Shared plumbing for the per-table/figure bench targets: the
+//! [`GraphFixture`] every op-level bench synthesizes its graph through
+//! (built once per dataset per bench target, shared by the seq-vs-par,
+//! planned-vs-unplanned and kernel-variant sections), the comparison
+//! runners, and the machine-readable `BENCH_kernels.json` emitter.
 
 use crate::bench::harness::bench_fn;
 use crate::coordinator::RscConfig;
 use crate::data::{load_or_generate, Dataset};
+use crate::graph::{Csr, EdgeList, ReorderKind};
 use crate::model::ops::ModelKind;
-use crate::runtime::{native, Backend, SpmmPlan};
+use crate::runtime::plan::{select_kernel, KernelChoice, SpmmKernel};
+use crate::runtime::{native, simd, Backend, SpmmPlan};
 use crate::sampling::topk::argsort_desc_with;
 use crate::train::{train, TrainConfig, TrainResult};
+use crate::util::json::{obj, Json};
 use crate::util::parallel::Parallelism;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::Result;
+
+/// One dataset's graph materialized once for op-level benches: the
+/// GCN-normalized matrix, its COO edges, and deterministic dense
+/// operands.  `table2_op_speedup`, `par_speedup` and `kernels` used to
+/// each re-synthesize this per section; now they build one fixture per
+/// dataset and pass it to every comparison runner.
+pub struct GraphFixture {
+    pub name: String,
+    pub ds: Dataset,
+    pub matrix: Csr,
+    pub edges: EdgeList,
+    /// `[v, d_h]` feature-shaped operand (seed 0xA11, as the historical
+    /// per-section setups used).
+    pub x: Vec<f32>,
+    /// `[d_h, d_h]` weight-shaped operand.
+    pub wmat: Vec<f32>,
+}
+
+impl GraphFixture {
+    pub fn gcn(dataset: &str) -> Result<GraphFixture> {
+        let ds = load_or_generate(dataset, 0)?;
+        let matrix = ds.adj.gcn_normalize();
+        let edges = matrix.to_edge_list();
+        let d = ds.cfg.d_h;
+        let mut rng = Rng::new(0xA11);
+        let x: Vec<f32> = (0..matrix.n * d).map(|_| rng.normal_f32()).collect();
+        let wmat: Vec<f32> = (0..d * d).map(|_| rng.normal_f32() * 0.1).collect();
+        Ok(GraphFixture { name: dataset.to_string(), ds, matrix, edges, x, wmat })
+    }
+
+    pub fn v(&self) -> usize {
+        self.matrix.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.ds.cfg.d_h
+    }
+
+    /// A deterministic `[v, d]` operand for width sweeps beyond `d_h`.
+    pub fn x_width(&self, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(0x91A ^ d as u64);
+        (0..self.v() * d).map(|_| rng.normal_f32()).collect()
+    }
+}
 
 /// Multi-trial training outcome.
 pub struct RunStats {
@@ -62,6 +110,7 @@ pub fn run_trials(
             verbose: false,
             saint_subgraphs: 8,
             saint_batches_per_epoch: 4,
+            reorder: ReorderKind::Degree,
         };
         let res = train(backend, &ds, &cfg)?;
         metrics.push(res.test_metric);
@@ -139,24 +188,22 @@ impl SeqParRow {
     }
 }
 
-/// Time the native hot-path kernels on `dataset`'s GCN-normalized graph,
-/// sequentially and with `par` workers (median of `iters` runs each).
-/// Covers the per-op families Table 2 reports: the forward/backward SpMM,
-/// the dense matmuls of a layer, gradient row-norms, CSR transpose, the
-/// Figure 5 row slicing, and the top-k argsort.
+/// Time the native hot-path kernels on the fixture's GCN-normalized
+/// graph, sequentially and with `par` workers (median of `iters` runs
+/// each).  Covers the per-op families Table 2 reports: the forward/
+/// backward SpMM, the dense matmuls of a layer, gradient row-norms, CSR
+/// transpose, the Figure 5 row slicing, and the top-k argsort.
 pub fn native_seq_vs_par(
-    dataset: &str,
+    fx: &GraphFixture,
     iters: usize,
     par: Parallelism,
 ) -> Result<Vec<SeqParRow>> {
     let seq = Parallelism::sequential();
-    let ds = load_or_generate(dataset, 0)?;
-    let matrix = ds.adj.gcn_normalize();
-    let (v, d) = (matrix.n, ds.cfg.d_h);
-    let edges = matrix.to_edge_list();
-    let mut rng = Rng::new(0xA11);
-    let x: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
-    let wmat: Vec<f32> = (0..d * d).map(|_| rng.normal_f32() * 0.1).collect();
+    let matrix = &fx.matrix;
+    let (v, d) = (fx.v(), fx.d());
+    let edges = &fx.edges;
+    let x = &fx.x;
+    let wmat = &fx.wmat;
 
     let mut rows = Vec::new();
     let mut pair = |op: &str, mut seq_run: Box<dyn FnMut()>, mut par_run: Box<dyn FnMut()>| {
@@ -313,24 +360,21 @@ impl PlanRow {
     }
 }
 
-/// Measure planned vs unplanned backward SpMM on `dataset`'s
-/// GCN-normalized graph at gradient width d_h.  Outputs are bitwise
-/// identical (asserted); only where the grouping work happens differs.
+/// Measure planned vs unplanned backward SpMM on the fixture's graph at
+/// gradient width d_h.  Outputs are bitwise identical (asserted); only
+/// where the grouping work happens differs.
 pub fn planned_vs_unplanned(
-    dataset: &str,
+    fx: &GraphFixture,
     iters: usize,
     par: Parallelism,
 ) -> Result<PlanRow> {
-    let ds = load_or_generate(dataset, 0)?;
-    let matrix = ds.adj.gcn_normalize();
-    let (v, d) = (matrix.n, ds.cfg.d_h);
-    let edges = matrix.to_edge_list();
-    let mut rng = Rng::new(0x91A);
-    let x: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+    let (v, d) = (fx.v(), fx.d());
+    let edges = &fx.edges;
+    let x = &fx.x;
 
     let unplanned = bench_fn("spmm unplanned", 1, iters, || {
         std::hint::black_box(native::spmm_par(
-            &edges.src, &edges.dst, &edges.w, &x, d, v, par,
+            &edges.src, &edges.dst, &edges.w, x, d, v, par,
         ));
     });
     let build = bench_fn("plan build", 1, iters.clamp(3, 10), || {
@@ -338,12 +382,12 @@ pub fn planned_vs_unplanned(
     });
     let plan = SpmmPlan::build(&edges.dst, &edges.w, v, par);
     let planned = bench_fn("spmm planned", 1, iters, || {
-        std::hint::black_box(native::spmm_planned(&plan, &edges.src, &edges.w, &x, d, par));
+        std::hint::black_box(native::spmm_planned(&plan, &edges.src, &edges.w, x, d, par));
     });
     // the whole point: moving the grouping out changes nothing numerically
     assert_eq!(
-        native::spmm_par(&edges.src, &edges.dst, &edges.w, &x, d, v, par),
-        native::spmm_planned(&plan, &edges.src, &edges.w, &x, d, par),
+        native::spmm_par(&edges.src, &edges.dst, &edges.w, x, d, v, par),
+        native::spmm_planned(&plan, &edges.src, &edges.w, x, d, par),
         "planned SpMM must be bitwise identical"
     );
     Ok(PlanRow {
@@ -391,6 +435,7 @@ pub fn prefetch_on_vs_off(dataset: &str, epochs: usize) -> Result<PrefetchRow> {
         verbose: false,
         saint_subgraphs: 4,
         saint_batches_per_epoch: 2,
+        reorder: ReorderKind::Degree,
     };
     let on = train(&b, &ds, &mk(true))?;
     let off = train(&b, &ds, &mk(false))?;
@@ -406,4 +451,254 @@ pub fn prefetch_on_vs_off(dataset: &str, epochs: usize) -> Result<PrefetchRow> {
         bg_build_ms: on.prefetch_build_ms,
         pf: on.prefetch,
     })
+}
+
+// ---------------------------------------------------------------------
+// planned-SpMM kernel variants (scalar vs axpy4 vs SIMD-tiled)
+// ---------------------------------------------------------------------
+
+/// Single-thread cost of one planned backward SpMM under each kernel
+/// variant at feature width `d` (outputs asserted bitwise identical).
+/// `simd_vs_axpy4` is the acceptance number of the vectorized locality
+/// layer: the 8-wide tiled kernel against the previous default.
+pub struct SpmmVariantRow {
+    pub dataset: String,
+    pub d: usize,
+    pub nnz: usize,
+    pub tile: usize,
+    pub scalar_ms: f64,
+    pub axpy4_ms: f64,
+    pub simd_ms: f64,
+}
+
+impl SpmmVariantRow {
+    pub fn simd_vs_axpy4(&self) -> f64 {
+        self.axpy4_ms / self.simd_ms.max(1e-9)
+    }
+
+    pub fn axpy4_vs_scalar(&self) -> f64 {
+        self.scalar_ms / self.axpy4_ms.max(1e-9)
+    }
+
+    pub fn simd_vs_scalar(&self) -> f64 {
+        self.scalar_ms / self.simd_ms.max(1e-9)
+    }
+}
+
+/// Bench every planned-SpMM kernel variant on the fixture's graph,
+/// single-threaded, at each feature width in `widths`.  The auto-selected
+/// tile is used for the SIMD variant (what training would run).
+pub fn spmm_variant_rows(
+    fx: &GraphFixture,
+    widths: &[usize],
+    iters: usize,
+) -> Vec<SpmmVariantRow> {
+    let seq = Parallelism::sequential();
+    let plan = SpmmPlan::build(&fx.edges.dst, &fx.edges.w, fx.v(), seq);
+    let mut rows = Vec::new();
+    for &d in widths {
+        let x = fx.x_width(d);
+        let mut out = vec![0f32; fx.v() * d];
+        let auto = select_kernel(plan.avg_nnz_per_row(), d);
+        let tile = if auto.kernel == SpmmKernel::SimdTiled { auto.tile } else { d };
+        let mut time_variant = |kernel: SpmmKernel, tile: usize| {
+            let choice = KernelChoice { kernel, tile };
+            let r = bench_fn(&format!("spmm {} d={d}", kernel.name()), 1, iters, || {
+                native::spmm_planned_variant_into(
+                    &plan, choice, &fx.edges.src, &fx.edges.w, &x, d, &mut out, seq,
+                );
+                std::hint::black_box(&out);
+            });
+            r.median_ms
+        };
+        let scalar_ms = time_variant(SpmmKernel::Scalar, d);
+        let axpy4_ms = time_variant(SpmmKernel::Axpy4, d);
+        let simd_ms = time_variant(SpmmKernel::SimdTiled, tile);
+        // bitwise parity across variants (the whole contract)
+        let mut a = vec![0f32; fx.v() * d];
+        let mut b = vec![0f32; fx.v() * d];
+        native::spmm_planned_variant_into(
+            &plan,
+            KernelChoice { kernel: SpmmKernel::Axpy4, tile: d },
+            &fx.edges.src,
+            &fx.edges.w,
+            &x,
+            d,
+            &mut a,
+            seq,
+        );
+        native::spmm_planned_variant_into(
+            &plan,
+            KernelChoice { kernel: SpmmKernel::SimdTiled, tile },
+            &fx.edges.src,
+            &fx.edges.w,
+            &x,
+            d,
+            &mut b,
+            seq,
+        );
+        assert_eq!(a, b, "kernel variants must be bitwise identical (d={d})");
+        rows.push(SpmmVariantRow {
+            dataset: fx.name.clone(),
+            d,
+            nnz: plan.nnz(),
+            tile,
+            scalar_ms,
+            axpy4_ms,
+            simd_ms,
+        });
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// SIMD-dispatch on/off for the dense/optimizer/loss kernels
+// ---------------------------------------------------------------------
+
+/// One kernel's cost with the SIMD dispatch live vs forced scalar
+/// (`--no-simd`); outputs are bit-identical, only throughput moves.
+pub struct DispatchRow {
+    pub dataset: String,
+    pub op: String,
+    pub dims: String,
+    pub scalar_ms: f64,
+    pub simd_ms: f64,
+}
+
+impl DispatchRow {
+    pub fn speedup(&self) -> f64 {
+        self.scalar_ms / self.simd_ms.max(1e-9)
+    }
+}
+
+/// Bench the dense matmul, Adam and softmax-loss kernels with SIMD
+/// dispatch on vs off (the caller's dispatch state is restored on exit).
+pub fn simd_dispatch_rows(fx: &GraphFixture, iters: usize) -> Vec<DispatchRow> {
+    let was_enabled = simd::enabled();
+    let (v, d) = (fx.v(), fx.d());
+    let c = fx.ds.cfg.n_class.max(2);
+    let mut rng = Rng::new(0xD15);
+    let g: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+    let logits: Vec<f32> = (0..v * c).map(|_| rng.normal_f32() * 2.0).collect();
+    let labels: Vec<i32> = (0..v).map(|i| (i % c) as i32).collect();
+    let mask: Vec<f32> = (0..v).map(|i| (i % 3 != 0) as i32 as f32).collect();
+    let m0 = vec![0.05f32; v * d];
+    let v0 = vec![0.02f32; v * d];
+    let mut rows = Vec::new();
+    let mut run = |op: &str, dims: String, body: &mut dyn FnMut()| {
+        simd::set_enabled(false);
+        let s = bench_fn(&format!("{op} scalar"), 1, iters, &mut *body);
+        simd::set_enabled(true);
+        let f = bench_fn(&format!("{op} simd"), 1, iters, &mut *body);
+        rows.push(DispatchRow {
+            dataset: fx.name.clone(),
+            op: op.to_string(),
+            dims,
+            scalar_ms: s.median_ms,
+            simd_ms: f.median_ms,
+        });
+    };
+    let mut out = vec![0f32; v * d];
+    run("matmul", format!("{v}x{d} @ {d}x{d}"), &mut || {
+        native::matmul_into(&fx.x, &fx.wmat, v, d, d, &mut out);
+        std::hint::black_box(&out);
+    });
+    let (mut w2, mut m2, mut v2) =
+        (vec![0f32; v * d], vec![0f32; v * d], vec![0f32; v * d]);
+    run("adam", (v * d).to_string(), &mut || {
+        native::adam_into(&fx.x, &m0, &v0, &g, 3.0, 0.01, &mut w2, &mut m2, &mut v2);
+        std::hint::black_box(&w2);
+    });
+    let mut dl = vec![0f32; v * c];
+    run("loss_softmax", format!("{v}x{c}"), &mut || {
+        std::hint::black_box(native::softmax_xent_into(
+            &logits, &labels, &mask, v, c, &mut dl,
+        ));
+    });
+    run("row_norms", format!("{v}x{d}"), &mut || {
+        std::hint::black_box(native::row_norms(&fx.x, v, d));
+    });
+    // restore whatever dispatch state the caller had (a --no-simd
+    // ablation elsewhere in the process must not be silently reverted)
+    simd::set_enabled(was_enabled);
+    rows
+}
+
+// ---------------------------------------------------------------------
+// BENCH_kernels.json: the machine-readable perf trajectory
+// ---------------------------------------------------------------------
+
+/// Append one run to `path` (`{"schema": "rsc-bench-kernels/v1",
+/// "runs": [...]}`), creating the file if absent and preserving earlier
+/// runs so the repo's perf trajectory accumulates across PRs.  Each row
+/// is `{op, variant, dims, ns_per_iter, speedup_vs_scalar}`.
+pub fn append_bench_kernels_json(
+    path: &str,
+    spmm: &[SpmmVariantRow],
+    dispatch: &[DispatchRow],
+) -> Result<()> {
+    let mut rows: Vec<Json> = Vec::new();
+    let mut push = |op: String, variant: &str, dims: String, ms: f64, vs_scalar: f64| {
+        rows.push(obj(vec![
+            ("op", Json::from(op.as_str())),
+            ("variant", Json::from(variant)),
+            ("dims", Json::from(dims.as_str())),
+            ("ns_per_iter", Json::from(ms * 1e6)),
+            ("speedup_vs_scalar", Json::from(vs_scalar)),
+        ]));
+    };
+    for r in spmm {
+        let dims = format!("{} nnz={} d={}", r.dataset, r.nnz, r.d);
+        push("spmm_planned".into(), "scalar", dims.clone(), r.scalar_ms, 1.0);
+        push(
+            "spmm_planned".into(),
+            "axpy4",
+            dims.clone(),
+            r.axpy4_ms,
+            r.axpy4_vs_scalar(),
+        );
+        push(
+            "spmm_planned".into(),
+            &format!("simd-tiled/{}", r.tile),
+            dims,
+            r.simd_ms,
+            r.simd_vs_scalar(),
+        );
+    }
+    for r in dispatch {
+        let dims = format!("{} {}", r.dataset, r.dims);
+        push(r.op.clone(), "scalar", dims.clone(), r.scalar_ms, 1.0);
+        push(r.op.clone(), "simd", dims, r.simd_ms, r.speedup());
+    }
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let run = obj(vec![
+        ("unix_time", Json::from(unix_s as f64)),
+        (
+            "threads",
+            Json::from(crate::util::parallel::global().threads()),
+        ),
+        ("simd_available", Json::from(simd::available())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(j) => j
+                .opt("runs")
+                .and_then(|r| r.as_arr().ok())
+                .map(|r| r.to_vec())
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    runs.push(run);
+    let doc = obj(vec![
+        ("schema", Json::from("rsc-bench-kernels/v1")),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write(path, doc.to_string() + "\n")?;
+    Ok(())
 }

@@ -171,15 +171,18 @@ impl<'a> Plan<'a> {
 }
 
 /// Build one refresh: pair scores from the job's norm snapshot, stable
-/// top-k, the Figure 5 slice, and (plan cache on) the eager SpmmPlan.
-/// Pure in its inputs, so a background execution is bit-identical to the
-/// synchronous fallback (the determinism contract of DESIGN.md
-/// §Prefetching refreshes).
+/// top-k, the Figure 5 slice, and (plan cache on) the eager SpmmPlan —
+/// including the plan's kernel-variant selection for the site's gradient
+/// width, so the first planned execution pays neither the grouping nor
+/// the (cheap but off-path-able) heuristic.  Pure in its inputs, so a
+/// background execution is bit-identical to the synchronous fallback
+/// (the determinism contract of DESIGN.md §Prefetching refreshes).
 fn execute_refresh(
     col_norms: &[f32],
     matrix: &Csr,
     caps: &[usize],
     plan_cache: bool,
+    width: usize,
     par: Parallelism,
     job: &RefreshJob,
 ) -> Built {
@@ -188,8 +191,10 @@ fn execute_refresh(
     let rows = top_k_indices_with(&scores, job.k, par);
     let selection = Selection::build_with(matrix, rows, caps, par);
     if plan_cache {
-        // PR 2's plan build leaves the hot path together with the slice
-        let _ = selection.spmm_plan(par);
+        // PR 2's plan build leaves the hot path together with the slice;
+        // the kernel choice (PR 4) rides along with it
+        let plan = selection.spmm_plan(par);
+        let _ = plan.kernel_for(width);
     }
     Built { scores, selection, build_ms: sw.ms() }
 }
@@ -380,9 +385,10 @@ impl RscEngine {
             let caps = Arc::clone(&self.caps);
             let par = self.parallelism;
             let plan_cache = self.cfg.plan_cache;
+            let width = self.widths[site];
             let job = job.clone();
             parallel::spawn_background(move || {
-                out.fill(execute_refresh(&col, &mat, &caps, plan_cache, par, &job));
+                out.fill(execute_refresh(&col, &mat, &caps, plan_cache, width, par, &job));
             });
             Some(slot)
         } else {
@@ -445,8 +451,9 @@ impl RscEngine {
         let caps = Arc::clone(&self.caps);
         let par = self.parallelism;
         let plan_cache = self.cfg.plan_cache;
+        let width = self.widths[site];
         let resolved = self.cache.resolve(site, step, fallback, |job| {
-            execute_refresh(&col, &mat, &caps, plan_cache, par, job)
+            execute_refresh(&col, &mat, &caps, plan_cache, width, par, job)
         });
         let hot_ms = sw.ms();
         let Resolved { built, k, from_prefetch } = resolved;

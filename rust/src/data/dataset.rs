@@ -1,7 +1,7 @@
 //! Core dataset representation shared by the trainer, the coordinator and
 //! every bench target.
 
-use crate::graph::Csr;
+use crate::graph::{Csr, Permutation, ReorderKind};
 use anyhow::{ensure, Result};
 
 /// Mirrors `python/compile/model.py::DatasetCfg`; the runtime asserts the
@@ -91,6 +91,33 @@ impl Dataset {
             Labels::MultiLabel(l) => Ok(l),
             _ => anyhow::bail!("dataset {} is multiclass", self.cfg.name),
         }
+    }
+
+    /// The dataset relabeled into a locality-friendly node order (the
+    /// one-shot reordering pass of the vectorized locality layer — see
+    /// `graph/reorder.rs`): adjacency, features, labels, split masks and
+    /// cluster ids all move through the same [`Permutation`], so training
+    /// in the returned dataset is exactly training on the original graph
+    /// with renamed nodes.  The permutation is returned so callers can
+    /// inverse-permute predictions back to original node order at eval.
+    pub fn reordered(&self, kind: ReorderKind) -> (Dataset, Permutation) {
+        let perm = Permutation::for_graph(kind, &self.adj);
+        let labels = match &self.labels {
+            Labels::MultiClass(l) => Labels::MultiClass(perm.gather(l)),
+            Labels::MultiLabel(l) => {
+                Labels::MultiLabel(perm.apply_rows_f32(l, self.cfg.n_class))
+            }
+        };
+        let ds = Dataset {
+            cfg: self.cfg.clone(),
+            adj: self.adj.permute(&perm),
+            features: perm.apply_rows_f32(&self.features, self.cfg.d_in),
+            labels,
+            split: perm.gather(&self.split),
+            cluster: perm.gather(&self.cluster),
+        };
+        debug_assert!(ds.validate().is_ok());
+        (ds, perm)
     }
 
     /// Structural sanity used by tests and at load time.

@@ -473,6 +473,39 @@ impl Csr {
         Csr { n: self.n, rowptr, col, val }
     }
 
+    /// Relabel nodes by a [`Permutation`](crate::graph::Permutation):
+    /// entry `(r, c, w)` becomes `(new(r), new(c), w)`.  Values are moved,
+    /// never recombined (a bijection cannot create duplicate positions),
+    /// so the permuted matrix holds the exact same weight multiset; each
+    /// new row's columns are re-sorted ascending as the CSR invariant
+    /// requires.  This is the one-shot reordering pass of the vectorized
+    /// locality layer (see `graph/reorder.rs`).
+    pub fn permute(&self, p: &crate::graph::Permutation) -> Csr {
+        assert_eq!(p.len(), self.n, "permutation size mismatch");
+        let mut triples = Vec::with_capacity(self.nnz());
+        for r in 0..self.n {
+            let (cs, ws) = self.row(r);
+            let nr = p.new_of_old(r) as u32;
+            for (&c, &w) in cs.iter().zip(ws) {
+                triples.push((nr, p.new_of_old(c as usize) as u32, w));
+            }
+        }
+        Csr::from_triples(self.n, triples)
+    }
+
+    /// Matrix bandwidth: max |row - col| over stored entries (0 when
+    /// empty).  Reordering diagnostic — RCM exists to shrink this.
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for r in 0..self.n {
+            let (cs, _) = self.row(r);
+            for &c in cs {
+                bw = bw.max(r.abs_diff(c as usize));
+            }
+        }
+        bw
+    }
+
     /// Dense dump (tests only).
     pub fn to_dense(&self) -> Vec<Vec<f32>> {
         let mut d = vec![vec![0f32; self.n]; self.n];
@@ -658,6 +691,37 @@ mod tests {
         e.pad_to(n0 + 5);
         assert_eq!(e.len(), n0 + 5);
         assert!(e.w[n0..].iter().all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn permute_preserves_rows_and_values() {
+        let mut rng = Rng::new(17);
+        let m = Csr::random(20, 60, &mut rng);
+        // identity is a no-op
+        let id = crate::graph::Permutation::identity(20);
+        assert_eq!(m.permute(&id), m);
+        // random relabeling: valid CSR, same nnz, rows map through
+        let mut order: Vec<u32> = (0..20).collect();
+        rng.shuffle(&mut order);
+        let p = crate::graph::Permutation::from_order(order);
+        let pm = m.permute(&p);
+        assert!(pm.validate());
+        assert_eq!(pm.nnz(), m.nnz());
+        for new in 0..20 {
+            let old = p.old_of_new(new);
+            assert_eq!(pm.row_nnz(new), m.row_nnz(old), "row {new}<-{old}");
+            let (cs, ws) = m.row(old);
+            let mut want: Vec<(u32, f32)> = cs
+                .iter()
+                .map(|&c| p.new_of_old(c as usize) as u32)
+                .zip(ws.iter().copied())
+                .collect();
+            want.sort_by_key(|&(c, _)| c);
+            let (pcs, pws) = pm.row(new);
+            let got: Vec<(u32, f32)> =
+                pcs.iter().copied().zip(pws.iter().copied()).collect();
+            assert_eq!(got, want);
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Sparse-matrix substrate: CSR storage, edge lists (the exchange format
-//! with the XLA executables), normalizations, and the synthetic graph
-//! generator.
+//! with the XLA executables), normalizations, locality-aware node
+//! reordering, and the synthetic graph generator.
 
 pub mod csr;
 pub mod generate;
+pub mod reorder;
 
 pub use csr::{Csr, EdgeList};
 pub use generate::{generate_sbm, SbmConfig};
+pub use reorder::{degree_order, rcm_order, Permutation, ReorderKind};

@@ -13,7 +13,11 @@
 //! results are bit-identical either way — DESIGN.md §Plan cache).
 //! `--no-prefetch` ablates the sample-cache prefetch pipeline (every
 //! refresh builds synchronously on the training thread; bit-identical
-//! either way — DESIGN.md §Prefetching refreshes).
+//! either way — DESIGN.md §Prefetching refreshes).  `--no-simd` ablates
+//! the 8-wide AVX inner kernels (scalar mirrors; bit-identical — DESIGN.md
+//! §Vectorized locality layer), and `--reorder degree|rcm|none` /
+//! `--no-reorder` controls the one-shot locality-aware node reordering
+//! (ULP-equivalent per node; metrics unchanged).
 //!
 //! Examples:
 //!   rsc train --dataset reddit-sim --model gcn --epochs 200 --rsc --budget 0.1
@@ -24,8 +28,9 @@
 use anyhow::{anyhow, bail, Result};
 use rsc::coordinator::{AllocKind, RscConfig};
 use rsc::data::load_or_generate;
+use rsc::graph::ReorderKind;
 use rsc::model::ops::ModelKind;
-use rsc::runtime::{Backend, NativeBackend, XlaBackend};
+use rsc::runtime::{simd, Backend, NativeBackend, XlaBackend};
 use rsc::train::{train, TrainConfig};
 use rsc::util::cli::Args;
 use rsc::util::parallel::{self, Parallelism};
@@ -40,6 +45,8 @@ const BOOL_FLAGS: &[&str] = &[
     "no-switch",
     "no-plan-cache",
     "no-prefetch",
+    "no-simd",
+    "no-reorder",
 ];
 
 fn main() {
@@ -76,8 +83,9 @@ fn run(r: Result<()>) -> i32 {
     }
 }
 
-/// `--threads N` (0 or absent = auto-detect); must run before any
-/// backend or engine is constructed so they capture the right default.
+/// `--threads N` (0 or absent = auto-detect) and `--no-simd` (scalar
+/// inner kernels; bit-identical results); must run before any backend or
+/// engine is constructed so they capture the right defaults.
 fn apply_threads(args: &Args) -> Result<()> {
     let n = args.usize_or("threads", 0)?;
     parallel::set_global(if n == 0 {
@@ -85,7 +93,21 @@ fn apply_threads(args: &Args) -> Result<()> {
     } else {
         Parallelism::with_threads(n)
     });
+    if args.bool_or("no-simd", false)? {
+        simd::set_enabled(false);
+    }
     Ok(())
+}
+
+/// `--reorder degree|rcm|none` (default degree) / `--no-reorder`.
+fn reorder_flag(args: &Args) -> Result<ReorderKind> {
+    if args.bool_or("no-reorder", false)? {
+        // consume --reorder too so finish() doesn't flag it unused
+        let _ = args.str_opt("reorder");
+        return Ok(ReorderKind::None);
+    }
+    ReorderKind::parse(&args.str_or("reorder", "degree"))
+        .ok_or_else(|| anyhow!("bad --reorder (degree|rcm|none)"))
 }
 
 fn load_backend(kind: &str, dataset: &str) -> Result<Box<dyn Backend>> {
@@ -146,6 +168,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         verbose: args.bool_or("verbose", true)?,
         saint_subgraphs: args.usize_or("saint-subgraphs", 8)?,
         saint_batches_per_epoch: args.usize_or("saint-batches", 4)?,
+        reorder: reorder_flag(args)?,
     };
     args.finish()?;
 
@@ -180,8 +203,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.prefetch_build_ms
     );
     println!(
-        "plan cache hits/builds: {}/{}  workspace reused/fresh: {}/{}",
-        res.plan_hits, res.plan_builds, res.ws.reused, res.ws.fresh
+        "plan cache hits/builds: {}/{}  workspace reused/fresh: {}/{} (trims {}, released {})",
+        res.plan_hits, res.plan_builds, res.ws.reused, res.ws.fresh, res.ws.trims,
+        res.ws.released
+    );
+    println!(
+        "spmm kernels: simd-tiled {} / axpy4 {} / scalar {} execs  fwd plan: {}  \
+         reorder={}  simd={}",
+        res.kernels.simd_tiled,
+        res.kernels.axpy4,
+        res.kernels.scalar,
+        res.fwd_kernel.as_deref().unwrap_or("unplanned"),
+        res.reorder,
+        if res.simd { "on" } else { "off" },
     );
     println!("op-class time (ms total):");
     for label in res.tb.labels().map(str::to_string).collect::<Vec<_>>() {

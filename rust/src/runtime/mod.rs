@@ -17,6 +17,7 @@
 pub mod manifest;
 pub mod native;
 pub mod plan;
+pub mod simd;
 pub mod value;
 pub mod workspace;
 #[cfg(feature = "xla")]
@@ -26,8 +27,8 @@ pub mod xla;
 pub mod xla;
 
 pub use manifest::{Manifest, OpDef};
-pub use native::NativeBackend;
-pub use plan::{plan_stats, reset_plan_stats, PlanCell, SpmmPlan};
+pub use native::{spmm_kernel_stats, NativeBackend, SpmmKernelStats};
+pub use plan::{plan_stats, reset_plan_stats, KernelChoice, PlanCell, SpmmKernel, SpmmPlan};
 pub use value::Value;
 pub use workspace::{Workspace, WorkspaceStats};
 pub use xla::XlaBackend;

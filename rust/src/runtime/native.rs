@@ -30,10 +30,20 @@
 //!   edge order, so planned results equal the oracle bitwise at any
 //!   thread count.
 //!
-//! Dense inner loops are register-blocked 4-wide ([`axpy4`]/[`dot4`]);
-//! the axpy form keeps per-element accumulation order (bitwise neutral),
-//! the dot form is the one place the reduction tree is fixed *jointly*
-//! for the sequential and parallel paths so they still agree bitwise.
+//! Dense and sparse inner loops route through the vectorized locality
+//! layer ([`crate::runtime::simd`]): elementwise accumulates run 8-wide
+//! AVX when available ([`simd::axpy`] — per-element accumulation order
+//! unchanged, bitwise neutral), reductions use the one 8-accumulator
+//! tree fixed *jointly* for the scalar, SIMD, sequential and parallel
+//! paths ([`simd::dot`]/[`simd::sum`]), so every path still agrees
+//! bitwise.  Planned SpMM additionally dispatches per-plan **kernel
+//! variants** (scalar / the 4-wide [`simd::axpy_scalar`] unroll / SIMD
+//! with feature-dimension tiling),
+//! auto-selected from the plan's nnz/row stats and the gradient width
+//! (see [`SpmmPlan::kernel_for`]); [`spmm_kernel_stats`] counts which
+//! variant executed.  All variants are bit-identical — selection is a
+//! throughput decision, never a numerics one (DESIGN.md §Vectorized
+//! locality layer).
 //!
 //! Hot-loop temporaries (edge grouping tables, per-row loss partials)
 //! come from the per-thread scratch arena in [`crate::util::parallel`];
@@ -41,7 +51,8 @@
 //! [`Backend::run_ctx`] — steady-state dispatch allocates nothing.
 
 use crate::runtime::manifest::{Manifest, OpDef};
-use crate::runtime::plan::SpmmPlan;
+use crate::runtime::plan::{KernelChoice, SpmmKernel, SpmmPlan};
+use crate::runtime::simd::{self, AdamCoef};
 use crate::runtime::value::Value;
 use crate::runtime::workspace::Workspace;
 use crate::runtime::{Backend, ExecCtx};
@@ -49,7 +60,9 @@ use crate::util::parallel::{self, Parallelism};
 use crate::Result;
 use anyhow::{anyhow, bail, ensure};
 use rayon::prelude::*;
+use std::ops::Range;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 pub struct NativeBackend {
     manifest: Manifest,
@@ -98,46 +111,55 @@ impl NativeBackend {
 }
 
 // ---------------------------------------------------------------------
-// register-blocked inner loops (shared by sequential + parallel paths)
+// planned-SpMM kernel-variant execution counters
 // ---------------------------------------------------------------------
+// (The pre-SIMD 4-wide unrolled accumulate lives on as
+// [`simd::axpy_scalar`] — one body serves both the `SpmmKernel::Axpy4`
+// planned variant and the SIMD layer's scalar mirror, so the bitwise-
+// parity argument never depends on two copies staying in sync.)
 
-/// `crow[j] += av * brow[j]`, 4-wide unrolled.  Each output element's
-/// accumulation order is unchanged versus the plain loop, so every kernel
-/// built on this is bitwise identical to its pre-blocking form.
-#[inline]
-fn axpy4(av: f32, brow: &[f32], crow: &mut [f32]) {
-    let mut cc = crow.chunks_exact_mut(4);
-    let mut bb = brow.chunks_exact(4);
-    for (c4, b4) in (&mut cc).zip(&mut bb) {
-        c4[0] += av * b4[0];
-        c4[1] += av * b4[1];
-        c4[2] += av * b4[2];
-        c4[3] += av * b4[3];
+static KERNEL_SCALAR: AtomicU64 = AtomicU64::new(0);
+static KERNEL_AXPY4: AtomicU64 = AtomicU64::new(0);
+static KERNEL_SIMD: AtomicU64 = AtomicU64::new(0);
+
+/// Planned-SpMM executions per kernel variant since process start (or the
+/// last [`reset_spmm_kernel_stats`]).  Like the plan-cache counters these
+/// are process-global, so per-run deltas are an upper bound under
+/// concurrent runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpmmKernelStats {
+    pub scalar: u64,
+    pub axpy4: u64,
+    pub simd_tiled: u64,
+}
+
+impl SpmmKernelStats {
+    pub fn total(&self) -> u64 {
+        self.scalar + self.axpy4 + self.simd_tiled
     }
-    for (c, bv) in cc.into_remainder().iter_mut().zip(bb.remainder()) {
-        *c += av * bv;
+
+    /// Saturating per-field delta against an earlier snapshot.
+    pub fn since(&self, earlier: &SpmmKernelStats) -> SpmmKernelStats {
+        SpmmKernelStats {
+            scalar: self.scalar.saturating_sub(earlier.scalar),
+            axpy4: self.axpy4.saturating_sub(earlier.axpy4),
+            simd_tiled: self.simd_tiled.saturating_sub(earlier.simd_tiled),
+        }
     }
 }
 
-/// Dot product with four independent accumulators.  This fixes one
-/// specific reduction tree — used identically by the sequential and
-/// parallel `matmul_nt`, which therefore still agree bitwise.
-#[inline]
-fn dot4(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = [0f32; 4];
-    let mut aa = a.chunks_exact(4);
-    let mut bb = b.chunks_exact(4);
-    for (a4, b4) in (&mut aa).zip(&mut bb) {
-        acc[0] += a4[0] * b4[0];
-        acc[1] += a4[1] * b4[1];
-        acc[2] += a4[2] * b4[2];
-        acc[3] += a4[3] * b4[3];
+pub fn spmm_kernel_stats() -> SpmmKernelStats {
+    SpmmKernelStats {
+        scalar: KERNEL_SCALAR.load(Ordering::Relaxed),
+        axpy4: KERNEL_AXPY4.load(Ordering::Relaxed),
+        simd_tiled: KERNEL_SIMD.load(Ordering::Relaxed),
     }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (x, y) in aa.remainder().iter().zip(bb.remainder()) {
-        s += x * y;
-    }
-    s
+}
+
+pub fn reset_spmm_kernel_stats() {
+    KERNEL_SCALAR.store(0, Ordering::Relaxed);
+    KERNEL_AXPY4.store(0, Ordering::Relaxed);
+    KERNEL_SIMD.store(0, Ordering::Relaxed);
 }
 
 // ---------------------------------------------------------------------
@@ -154,21 +176,39 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 /// [`matmul`] into a caller buffer (`out.len() == m * n`; any contents).
 pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     out.fill(0.0);
-    for i in 0..m {
-        matmul_row(a, b, k, n, i, &mut out[i * n..(i + 1) * n]);
+    if n == 0 {
+        return;
+    }
+    let mut i = 0;
+    for block in out.chunks_mut(MM_ROW_BLOCK * n) {
+        matmul_block(a, b, k, n, i, block);
+        i += block.len() / n;
     }
 }
 
-/// One output row of [`matmul`]; shared verbatim by the parallel path so
-/// both orders of execution are identical per row.
+/// Output rows per dense micro-tile: each loaded B row feeds this many
+/// output rows before leaving registers/L1.
+const MM_ROW_BLOCK: usize = 4;
+
+/// A micro-tile of up to [`MM_ROW_BLOCK`] consecutive output rows
+/// (`block` = rows `i0..i0 + block.len() / n`), shared verbatim by the
+/// sequential and parallel paths.  The loop nest streams each B row once
+/// per tile instead of once per output row; every output element still
+/// accumulates over `l` ascending, so results are bitwise identical to
+/// the plain row-at-a-time form.  Zero `a` entries are skipped exactly
+/// like before (relu-sparse activations keep that fast path).
 #[inline]
-fn matmul_row(a: &[f32], b: &[f32], k: usize, n: usize, i: usize, crow: &mut [f32]) {
+fn matmul_block(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, block: &mut [f32]) {
+    let axpy = simd::axpy_kernel();
     for l in 0..k {
-        let av = a[i * k + l];
-        if av == 0.0 {
-            continue;
+        let brow = &b[l * n..(l + 1) * n];
+        for (r, crow) in block.chunks_mut(n).enumerate() {
+            let av = a[(i0 + r) * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            axpy(av, brow, crow);
         }
-        axpy4(av, &b[l * n..(l + 1) * n], crow);
     }
 }
 
@@ -191,12 +231,13 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &
 /// the same per-element order the sequential loop produces.
 #[inline]
 fn matmul_tn_row(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, l: usize, crow: &mut [f32]) {
+    let axpy = simd::axpy_kernel();
     for i in 0..m {
         let av = a[i * k + l];
         if av == 0.0 {
             continue;
         }
-        axpy4(av, &b[i * n..(i + 1) * n], crow);
+        axpy(av, &b[i * n..(i + 1) * n], crow);
     }
 }
 
@@ -217,9 +258,10 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &
 
 #[inline]
 fn matmul_nt_row(a: &[f32], b: &[f32], n: usize, k: usize, i: usize, crow: &mut [f32]) {
+    let dot = simd::dot_kernel();
     let arow = &a[i * n..(i + 1) * n];
     for l in 0..k {
-        crow[l] = dot4(arow, &b[l * n..(l + 1) * n]);
+        crow[l] = dot(arow, &b[l * n..(l + 1) * n]);
     }
 }
 
@@ -242,6 +284,7 @@ pub fn spmm_into(
 ) {
     debug_assert_eq!(out.len(), vout * d);
     out.fill(0.0);
+    let axpy = simd::axpy_kernel();
     for e in 0..src.len() {
         let we = w[e];
         if we == 0.0 {
@@ -249,7 +292,7 @@ pub fn spmm_into(
         }
         let s = src[e] as usize;
         let t = dst[e] as usize;
-        axpy4(we, &x[s * d..(s + 1) * d], &mut out[t * d..(t + 1) * d]);
+        axpy(we, &x[s * d..(s + 1) * d], &mut out[t * d..(t + 1) * d]);
     }
 }
 
@@ -287,13 +330,12 @@ pub fn row_norms_into(x: &[f32], rows: usize, d: usize, out: &mut [f32]) {
     }
 }
 
+/// Shared by the sequential, parallel and SIMD paths: [`simd::dot`] fixes
+/// one reduction tree for the sum of squares, so all three agree bitwise.
 #[inline]
 fn row_norm_one(x: &[f32], d: usize, i: usize) -> f32 {
-    x[i * d..(i + 1) * d]
-        .iter()
-        .map(|v| v * v)
-        .sum::<f32>()
-        .sqrt()
+    let row = &x[i * d..(i + 1) * d];
+    simd::dot(row, row).sqrt()
 }
 
 pub fn softmax_xent(
@@ -318,7 +360,10 @@ pub fn softmax_xent_into(
     c: usize,
     dlogits: &mut [f32],
 ) -> f32 {
-    let n: f32 = mask.iter().sum::<f32>().max(1.0);
+    // mask sums use the shared simd reduction tree (0/1 masks sum exactly
+    // under any association; general weights stay consistent across the
+    // scalar/SIMD/parallel paths)
+    let n: f32 = simd::sum(mask).max(1.0);
     let mut loss = 0f32;
     for i in 0..v {
         let li = softmax_xent_row(logits, labels, mask, c, n, i, &mut dlogits[i * c..(i + 1) * c]);
@@ -377,7 +422,7 @@ pub fn bce_logits_into(
     c: usize,
     dlogits: &mut [f32],
 ) -> f32 {
-    let n: f32 = mask.iter().sum::<f32>().max(1.0) * c as f32;
+    let n: f32 = simd::sum(mask).max(1.0) * c as f32;
     let mut loss = 0f32;
     for i in 0..v {
         loss += bce_row(logits, labels, mask, c, n, i, &mut dlogits[i * c..(i + 1) * c]);
@@ -427,6 +472,8 @@ pub fn adam(
 }
 
 /// [`adam`] writing into caller buffers; every element is overwritten.
+/// Elementwise via [`simd::adam_span`] — the SIMD and scalar paths are
+/// bit-identical (see `runtime/simd.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn adam_into(
     w: &[f32],
@@ -439,20 +486,8 @@ pub fn adam_into(
     m2: &mut [f32],
     v2: &mut [f32],
 ) {
-    const B1: f32 = 0.9;
-    const B2: f32 = 0.999;
-    const EPS: f32 = 1e-8;
-    let bc1 = 1.0 - B1.powf(t);
-    let bc2 = 1.0 - B2.powf(t);
-    for i in 0..w.len() {
-        let mi = B1 * m[i] + (1.0 - B1) * g[i];
-        let vi = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
-        let mhat = mi / bc1;
-        let vhat = vi / bc2;
-        w2[i] = w[i] - lr * mhat / (vhat.sqrt() + EPS);
-        m2[i] = mi;
-        v2[i] = vi;
-    }
+    let coef = AdamCoef::new(t, lr);
+    simd::adam_span(w, m, v, g, &coef, w2, m2, v2);
 }
 
 // ---------------------------------------------------------------------
@@ -483,8 +518,10 @@ pub fn matmul_par_into(
     out.fill(0.0);
     let rows = par.chunk_rows(m);
     out.par_chunks_mut(rows * n).enumerate().for_each(|(ci, chunk)| {
-        for (ri, crow) in chunk.chunks_mut(n).enumerate() {
-            matmul_row(a, b, k, n, ci * rows + ri, crow);
+        let mut i = ci * rows;
+        for block in chunk.chunks_mut(MM_ROW_BLOCK * n) {
+            matmul_block(a, b, k, n, i, block);
+            i += block.len() / n;
         }
     });
 }
@@ -635,13 +672,14 @@ pub fn spmm_par_into(
                 }
             });
             let rows = par.chunk_rows(vout);
+            let axpy = simd::axpy_kernel();
             out.par_chunks_mut(rows * d).enumerate().for_each(|(ci, chunk)| {
                 for (rt, orow) in chunk.chunks_mut(d).enumerate() {
                     let t = ci * rows + rt;
                     for &eid in &order[rowptr[t]..rowptr[t + 1]] {
                         let e = eid as usize;
                         let s = src[e] as usize;
-                        axpy4(w[e], &x[s * d..(s + 1) * d], orow);
+                        axpy(w[e], &x[s * d..(s + 1) * d], orow);
                     }
                 }
             });
@@ -675,13 +713,39 @@ pub fn spmm_planned_into(
     out: &mut [f32],
     par: Parallelism,
 ) {
+    spmm_planned_variant_into(plan, plan.kernel_for(d), src, w, x, d, out, par)
+}
+
+/// [`spmm_planned_into`] with an explicit [`KernelChoice`] instead of the
+/// plan's auto-selection — the seam the kernel benches and the
+/// SIMD-vs-scalar parity tests use.  Every variant produces bitwise
+/// identical output (scalar/axpy4/SIMD accumulates are elementwise, and
+/// feature-dimension tiling never reorders a single element's edge
+/// accumulation), at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_planned_variant_into(
+    plan: &SpmmPlan,
+    choice: KernelChoice,
+    src: &[i32],
+    w: &[f32],
+    x: &[f32],
+    d: usize,
+    out: &mut [f32],
+    par: Parallelism,
+) {
     debug_assert_eq!(out.len(), plan.vout() * d);
     debug_assert_eq!(src.len(), plan.ne());
+    match choice.kernel {
+        SpmmKernel::Scalar => KERNEL_SCALAR.fetch_add(1, Ordering::Relaxed),
+        SpmmKernel::Axpy4 => KERNEL_AXPY4.fetch_add(1, Ordering::Relaxed),
+        SpmmKernel::SimdTiled => KERNEL_SIMD.fetch_add(1, Ordering::Relaxed),
+    };
     out.fill(0.0);
+    if d == 0 {
+        return;
+    }
     if !par.should_parallelize(plan.nnz() * d) {
-        for t in 0..plan.vout() {
-            spmm_planned_row(plan, src, w, x, d, t, &mut out[t * d..(t + 1) * d]);
-        }
+        spmm_planned_rows(plan, choice, src, w, x, d, 0..plan.vout(), out);
         return;
     }
     let sizes: Vec<usize> = plan.chunks().iter().map(|r| (r.end - r.start) * d).collect();
@@ -690,26 +754,74 @@ pub fn spmm_planned_into(
         .into_par_iter()
         .zip(plan.chunks().par_iter())
         .for_each(|(part, range)| {
-            for (rt, orow) in part.chunks_mut(d).enumerate() {
-                spmm_planned_row(plan, src, w, x, d, range.start + rt, orow);
-            }
+            spmm_planned_rows(plan, choice, src, w, x, d, range.clone(), part);
         });
 }
 
-#[inline]
-fn spmm_planned_row(
+/// Execute destination rows `rows` of a plan into their contiguous output
+/// slice (`out` covers exactly those rows).  The three variants differ
+/// only in how each `out[t] += w[e] * x[src[e]]` accumulate is issued:
+///
+/// * `Scalar` — plain element loop (tiny feature widths);
+/// * `Axpy4` — the pre-SIMD 4-wide unroll;
+/// * `SimdTiled` — [`simd::axpy`] (8-wide AVX when available) over
+///   feature tiles of `choice.tile` columns: for wide rows the output
+///   tile stays cache-resident across the row range while the `x` gather
+///   touches only `tile` floats per source row per pass.
+///
+/// Per output element the edge order is the plan's row order in every
+/// variant, so all three are bitwise identical.
+fn spmm_planned_rows(
     plan: &SpmmPlan,
+    choice: KernelChoice,
     src: &[i32],
     w: &[f32],
     x: &[f32],
     d: usize,
-    t: usize,
-    orow: &mut [f32],
+    rows: Range<usize>,
+    out: &mut [f32],
 ) {
-    for &eid in plan.row_edges(t) {
-        let e = eid as usize;
-        let s = src[e] as usize;
-        axpy4(w[e], &x[s * d..(s + 1) * d], orow);
+    match choice.kernel {
+        SpmmKernel::Scalar => {
+            for (rt, orow) in out.chunks_mut(d).enumerate() {
+                for &eid in plan.row_edges(rows.start + rt) {
+                    let e = eid as usize;
+                    let s = src[e] as usize;
+                    let we = w[e];
+                    for (o, &b) in orow.iter_mut().zip(&x[s * d..(s + 1) * d]) {
+                        *o += we * b;
+                    }
+                }
+            }
+        }
+        SpmmKernel::Axpy4 => {
+            for (rt, orow) in out.chunks_mut(d).enumerate() {
+                for &eid in plan.row_edges(rows.start + rt) {
+                    let e = eid as usize;
+                    let s = src[e] as usize;
+                    simd::axpy_scalar(w[e], &x[s * d..(s + 1) * d], orow);
+                }
+            }
+        }
+        SpmmKernel::SimdTiled => {
+            // resolve the dispatch once for the whole row range — the
+            // inner loop must not pay the probe per (edge, tile) pair
+            let axpy = simd::axpy_kernel();
+            let tile = choice.tile.clamp(1, d);
+            let mut j0 = 0;
+            while j0 < d {
+                let j1 = (j0 + tile).min(d);
+                for (rt, orow) in out.chunks_mut(d).enumerate() {
+                    let otile = &mut orow[j0..j1];
+                    for &eid in plan.row_edges(rows.start + rt) {
+                        let e = eid as usize;
+                        let s = src[e] as usize;
+                        axpy(w[e], &x[s * d + j0..s * d + j1], otile);
+                    }
+                }
+                j0 = j1;
+            }
+        }
     }
 }
 
@@ -924,7 +1036,7 @@ pub fn softmax_xent_par_into(
     if !par.should_parallelize(v * c) {
         return softmax_xent_into(logits, labels, mask, v, c, dlogits);
     }
-    let n: f32 = mask.iter().sum::<f32>().max(1.0);
+    let n: f32 = simd::sum(mask).max(1.0);
     parallel::with_f32(v, |row_ll| {
         dlogits
             .par_chunks_mut(c)
@@ -967,7 +1079,7 @@ pub fn bce_logits_par_into(
     if !par.should_parallelize(v * c) {
         return bce_logits_into(logits, labels, mask, v, c, dlogits);
     }
-    let n: f32 = mask.iter().sum::<f32>().max(1.0) * c as f32;
+    let n: f32 = simd::sum(mask).max(1.0) * c as f32;
     parallel::with_f32(v, |row_loss| {
         dlogits
             .par_chunks_mut(c)
@@ -1019,11 +1131,7 @@ pub fn adam_par_into(
         adam_into(w, m, v, g, t, lr, w2, m2, v2);
         return;
     }
-    const B1: f32 = 0.9;
-    const B2: f32 = 0.999;
-    const EPS: f32 = 1e-8;
-    let bc1 = 1.0 - B1.powf(t);
-    let bc2 = 1.0 - B2.powf(t);
+    let coef = AdamCoef::new(t, lr);
     let ch = par.chunk_rows(w.len());
     w2.par_chunks_mut(ch)
         .zip(m2.par_chunks_mut(ch))
@@ -1031,16 +1139,17 @@ pub fn adam_par_into(
         .enumerate()
         .for_each(|(ci, ((wc, mc), vc))| {
             let base = ci * ch;
-            for o in 0..wc.len() {
-                let i = base + o;
-                let mi = B1 * m[i] + (1.0 - B1) * g[i];
-                let vi = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
-                let mhat = mi / bc1;
-                let vhat = vi / bc2;
-                wc[o] = w[i] - lr * mhat / (vhat.sqrt() + EPS);
-                mc[o] = mi;
-                vc[o] = vi;
-            }
+            let end = base + wc.len();
+            simd::adam_span(
+                &w[base..end],
+                &m[base..end],
+                &v[base..end],
+                &g[base..end],
+                &coef,
+                wc,
+                mc,
+                vc,
+            );
         });
 }
 
@@ -1627,6 +1736,45 @@ mod tests {
                 let plan = SpmmPlan::build(&dst, &w, v, par);
                 assert_eq!(want, spmm_planned(&plan, &src, &w, &x, d, par), "{threads} threads");
             }
+        });
+    }
+
+    #[test]
+    fn planned_spmm_kernel_variants_are_bitwise_identical() {
+        // scalar / axpy4 / SIMD-tiled (including tiles narrower than d)
+        // must all equal the sequential oracle bitwise, at any thread
+        // count — kernel selection is never allowed to move a result
+        prop::check("planned-variants", 15, |rng| {
+            let v = rng.range(1, 30);
+            let d = rng.range(1, 40);
+            let ne = rng.below(6 * v);
+            let src: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+            let dst: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+            let w: Vec<f32> = (0..ne)
+                .map(|_| if rng.chance(0.2) { 0.0 } else { rng.normal_f32() })
+                .collect();
+            let x = prop::vec_f32(rng, v * d, 1.0);
+            let want = spmm(&src, &dst, &w, &x, d, v);
+            let before = spmm_kernel_stats();
+            let mut execs = 0u64;
+            for threads in [1, 4] {
+                let par = Parallelism::with_threads(threads).with_grain(1);
+                let plan = SpmmPlan::build(&dst, &w, v, par);
+                for choice in [
+                    KernelChoice { kernel: SpmmKernel::Scalar, tile: d },
+                    KernelChoice { kernel: SpmmKernel::Axpy4, tile: d },
+                    KernelChoice { kernel: SpmmKernel::SimdTiled, tile: d },
+                    KernelChoice { kernel: SpmmKernel::SimdTiled, tile: (d / 3).max(1) },
+                ] {
+                    // dirty buffer: the variant must fully define its output
+                    let mut out = vec![7.5f32; v * d];
+                    spmm_planned_variant_into(&plan, choice, &src, &w, &x, d, &mut out, par);
+                    assert_eq!(want, out, "{choice:?} at {threads} threads");
+                    execs += 1;
+                }
+            }
+            let delta = spmm_kernel_stats().since(&before);
+            assert!(delta.total() >= execs, "kernel counters must track executions");
         });
     }
 

@@ -28,6 +28,7 @@
 //! hit/build counters ([`plan_stats`]) make the amortization visible next
 //! to the sample cache's own hit rate.
 
+use crate::runtime::simd;
 use crate::util::parallel::Parallelism;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -51,6 +52,77 @@ pub fn reset_plan_stats() {
     PLAN_BUILDS.store(0, Ordering::Relaxed);
 }
 
+/// Which inner kernel a planned SpMM executes (see
+/// `native::spmm_planned_variant_into`); all variants are bitwise
+/// identical — the choice is pure throughput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpmmKernel {
+    /// Plain per-element loop: tiny feature widths where any unroll or
+    /// vector setup costs more than the work.
+    Scalar,
+    /// The 4-wide unrolled accumulate (the pre-SIMD default; also the
+    /// fallback when SIMD is ablated or unavailable).
+    Axpy4,
+    /// 8-wide [`simd::axpy`] over feature tiles of `tile` columns.
+    SimdTiled,
+}
+
+impl SpmmKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpmmKernel::Scalar => "scalar",
+            SpmmKernel::Axpy4 => "axpy4",
+            SpmmKernel::SimdTiled => "simd-tiled",
+        }
+    }
+}
+
+/// A concrete per-site kernel decision: the variant plus the feature tile
+/// width the SIMD variant streams (`tile == d` means untiled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelChoice {
+    pub kernel: SpmmKernel,
+    pub tile: usize,
+}
+
+impl KernelChoice {
+    /// Short human label for stats surfaces ("simd-tiled/64").
+    pub fn describe(&self) -> String {
+        match self.kernel {
+            SpmmKernel::SimdTiled => format!("{}/{}", self.kernel.name(), self.tile),
+            k => k.name().to_string(),
+        }
+    }
+}
+
+/// Feature widths below this stay on unvectorized kernels (vector lanes
+/// would be mostly empty).
+pub const SIMD_MIN_D: usize = 8;
+/// Feature-tile cap for ordinary degree profiles: 128 floats = 512 B of
+/// output tile per row, a handful of cache lines.
+pub const TILE_WIDE: usize = 128;
+/// Tighter tile when rows are hub-heavy (many gathers per output row):
+/// keeps the per-pass x working set inside L1.
+pub const TILE_HUB: usize = 64;
+/// Average retained nnz/row at which a plan counts as hub-heavy.
+pub const HUB_AVG_NNZ: f64 = 16.0;
+
+/// The per-plan kernel heuristic (documented in DESIGN.md §Vectorized
+/// locality layer): tiny widths run scalar, sub-vector widths or
+/// SIMD-ablated runs use the 4-wide unroll, everything else runs the
+/// 8-wide SIMD accumulate with a feature tile sized by the plan's
+/// nnz/row statistics.
+pub fn select_kernel(avg_nnz: f64, d: usize) -> KernelChoice {
+    if d < 4 {
+        return KernelChoice { kernel: SpmmKernel::Scalar, tile: d.max(1) };
+    }
+    if d < SIMD_MIN_D || !simd::enabled() {
+        return KernelChoice { kernel: SpmmKernel::Axpy4, tile: d };
+    }
+    let cap = if avg_nnz >= HUB_AVG_NNZ { TILE_HUB } else { TILE_WIDE };
+    KernelChoice { kernel: SpmmKernel::SimdTiled, tile: d.min(cap) }
+}
+
 /// A CSR-grouped, nnz-balanced execution schedule for one fixed
 /// (dst, w) edge list and output row count.
 #[derive(Debug, Clone)]
@@ -61,6 +133,14 @@ pub struct SpmmPlan {
     ne: usize,
     /// Non-padding (w != 0) edge count.
     nnz: usize,
+    /// Destination rows with at least one retained edge (kernel-selection
+    /// statistic: `nnz / rows_nonempty` = average gathers per touched
+    /// output row).
+    rows_nonempty: usize,
+    /// The kernel decision recorded at first execution, keyed by the
+    /// feature width it was made for (a plan is almost always executed at
+    /// one width; other widths recompute without re-caching).
+    choice: OnceLock<(usize, KernelChoice)>,
     /// Immutability tag of the src edge input this plan describes (see
     /// `Backend::run_tagged`); 0 = untagged, identity not checked.  Two
     /// selections padded to the same bucket have identical `ne`/`vout`,
@@ -104,8 +184,19 @@ impl SpmmPlan {
             order[cursor[t]] = e as u32;
             cursor[t] += 1;
         }
+        let rows_nonempty = (0..vout).filter(|&t| rowptr[t + 1] > rowptr[t]).count();
         let chunks = balance_rows(&rowptr, vout, (par.threads() * 4).max(1));
-        SpmmPlan { vout, ne, nnz, tag: 0, rowptr, order, chunks }
+        SpmmPlan {
+            vout,
+            ne,
+            nnz,
+            rows_nonempty,
+            choice: OnceLock::new(),
+            tag: 0,
+            rowptr,
+            order,
+            chunks,
+        }
     }
 
     /// Stamp the plan with the immutability tag of the src edge input it
@@ -134,6 +225,38 @@ impl SpmmPlan {
     /// Retained (non-padding) edge count.
     pub fn nnz(&self) -> usize {
         self.nnz
+    }
+
+    /// Destination rows with at least one retained edge.
+    pub fn rows_nonempty(&self) -> usize {
+        self.rows_nonempty
+    }
+
+    /// Average retained nnz per *touched* output row — the gather-count
+    /// statistic the kernel heuristic keys on.
+    pub fn avg_nnz_per_row(&self) -> f64 {
+        self.nnz as f64 / self.rows_nonempty.max(1) as f64
+    }
+
+    /// The kernel variant to execute this plan with at feature width `d`
+    /// (see [`select_kernel`]).  The first call records the decision in
+    /// the plan so `rsc train` can surface what actually ran; a later
+    /// call at a different width recomputes without disturbing the
+    /// record.
+    pub fn kernel_for(&self, d: usize) -> KernelChoice {
+        let &(d0, choice) = self
+            .choice
+            .get_or_init(|| (d, select_kernel(self.avg_nnz_per_row(), d)));
+        if d0 == d {
+            choice
+        } else {
+            select_kernel(self.avg_nnz_per_row(), d)
+        }
+    }
+
+    /// The recorded (width, choice) of the first execution, if any.
+    pub fn chosen(&self) -> Option<(usize, KernelChoice)> {
+        self.choice.get().copied()
     }
 
     /// The edge ids of destination row `t`, in original edge order.
@@ -270,6 +393,41 @@ mod tests {
             heavy.end - heavy.start < 50,
             "heavy row chunk spans {heavy:?}"
         );
+    }
+
+    #[test]
+    fn kernel_selection_follows_stats() {
+        assert_eq!(select_kernel(4.0, 2).kernel, SpmmKernel::Scalar);
+        assert_eq!(select_kernel(4.0, 6).kernel, SpmmKernel::Axpy4);
+        let wide = select_kernel(2.0, 256);
+        let hub = select_kernel(64.0, 256);
+        if simd::enabled() {
+            assert_eq!(wide.kernel, SpmmKernel::SimdTiled);
+            assert_eq!(wide.tile, TILE_WIDE);
+            assert_eq!(hub.tile, TILE_HUB);
+            // narrow-enough widths stay untiled
+            assert_eq!(select_kernel(2.0, 64).tile, 64);
+        } else {
+            assert_eq!(wide.kernel, SpmmKernel::Axpy4);
+            assert_eq!(hub.kernel, SpmmKernel::Axpy4);
+        }
+    }
+
+    #[test]
+    fn plan_records_first_kernel_choice() {
+        let dst = vec![0, 1, 1, 2];
+        let w = vec![1.0f32; 4];
+        let p = SpmmPlan::build(&dst, &w, 4, par4());
+        assert_eq!(p.rows_nonempty(), 3);
+        assert!((p.avg_nnz_per_row() - 4.0 / 3.0).abs() < 1e-9);
+        assert!(p.chosen().is_none());
+        let c = p.kernel_for(64);
+        assert_eq!(p.chosen(), Some((64, c)));
+        // a different width recomputes without disturbing the record
+        let c2 = p.kernel_for(2);
+        assert_eq!(c2.kernel, SpmmKernel::Scalar);
+        assert_eq!(p.chosen(), Some((64, c)));
+        assert!(!c.describe().is_empty());
     }
 
     #[test]

@@ -1,0 +1,510 @@
+//! Explicit 8-wide SIMD inner kernels with bit-identical scalar mirrors.
+//!
+//! Every primitive here exists in two forms: an AVX path (256-bit f32
+//! lanes, runtime-dispatched via `is_x86_feature_detected!`) and a
+//! portable scalar mirror.  The two are **bitwise identical** by
+//! construction, for any input:
+//!
+//! * elementwise kernels ([`axpy`], [`adam_span`]) perform the exact same
+//!   correctly-rounded IEEE operations per element — vector `mul`/`add`/
+//!   `sqrt`/`div` round identically to their scalar counterparts, and we
+//!   deliberately do **not** use FMA (fused multiply-add rounds once
+//!   where `a * b + c` rounds twice, which would split the paths);
+//! * reductions ([`dot`], [`sum`]) fix one shared 8-accumulator tree —
+//!   lane `i % 8` accumulates element `i`, lanes reduce as
+//!   `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`, and the `< 8` tail folds in
+//!   sequentially afterwards.  The scalar mirror computes that exact tree
+//!   (see [`reduce8`]), so enabling or disabling SIMD never changes a
+//!   result — only how fast it is produced.
+//!
+//! This is what lets the `--no-simd` ablation (and non-AVX hardware)
+//! promise *bit-identical* training trajectories: the vector unit is a
+//! throughput choice, never a numerics choice.  The one place the crate's
+//! numerics moved to adopt this layer is the shared reduction tree itself
+//! (`dot` replaced the old 4-accumulator `dot4`, `sum` replaced the
+//! sequential folds in the loss normalizers and row norms) — changed
+//! *jointly* for every caller, so the sequential/parallel/SIMD contracts
+//! all still hold bitwise (DESIGN.md §Vectorized locality layer).
+//!
+//! Dispatch is gated three ways: the `simd` cargo feature (default on;
+//! off = scalar mirrors only, no `std::arch` in the build), the runtime
+//! AVX probe (cached), and the process switch [`set_enabled`] backing the
+//! CLI's `--no-simd` flag.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide ablation switch (`--no-simd`): when disabled, every
+/// dispatch takes the scalar mirror.  Results are bit-identical either
+/// way; flipping this mid-run is safe (it only redirects dispatch).
+static DISABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable the vector paths at runtime (the `--no-simd` ablation).
+pub fn set_enabled(on: bool) {
+    DISABLED.store(!on, Ordering::Relaxed);
+}
+
+/// Hardware + build support for the AVX paths (ignores [`set_enabled`]).
+pub fn available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        use std::sync::OnceLock;
+        static AVX: OnceLock<bool> = OnceLock::new();
+        *AVX.get_or_init(|| is_x86_feature_detected!("avx"))
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Should dispatch take the AVX path right now?
+pub fn enabled() -> bool {
+    available() && !DISABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// axpy: c[j] += av * b[j]  (elementwise — any unroll is bit-identical)
+// ---------------------------------------------------------------------
+
+/// `c[j] += av * b[j]` over `min(b.len(), c.len())` elements, 8-wide when
+/// the AVX path is enabled.  Elementwise, so bit-identical to any scalar
+/// loop computing `c[j] + av * b[j]` per element.
+#[inline]
+pub fn axpy(av: f32, b: &[f32], c: &mut [f32]) {
+    axpy_kernel()(av, b, c)
+}
+
+/// The axpy implementation resolved once for a whole loop: hot kernels
+/// call this at entry and reuse the returned fn across their entire
+/// edge/row range, instead of paying the cached probe + ablation-switch
+/// load per inner call.  Both returned fns handle arbitrary lengths
+/// (the AVX one finishes short tails with the identical scalar loop).
+#[inline]
+pub fn axpy_kernel() -> fn(f32, &[f32], &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if enabled() {
+        return axpy_avx;
+    }
+    axpy_scalar
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn axpy_avx(av: f32, b: &[f32], c: &mut [f32]) {
+    // SAFETY: handed out by the dispatchers only after the runtime AVX
+    // probe succeeded; hardware support cannot vanish mid-process.
+    unsafe { avx::axpy8(av, b, c) }
+}
+
+/// The scalar mirror of [`axpy`] (4-wide unrolled; same per-element math).
+#[inline]
+pub fn axpy_scalar(av: f32, b: &[f32], c: &mut [f32]) {
+    let mut cc = c.chunks_exact_mut(4);
+    let mut bb = b.chunks_exact(4);
+    for (c4, b4) in (&mut cc).zip(&mut bb) {
+        c4[0] += av * b4[0];
+        c4[1] += av * b4[1];
+        c4[2] += av * b4[2];
+        c4[3] += av * b4[3];
+    }
+    for (cv, bv) in cc.into_remainder().iter_mut().zip(bb.remainder()) {
+        *cv += av * bv;
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared 8-accumulator reduction tree
+// ---------------------------------------------------------------------
+
+/// The one reduction tree [`dot`] and [`sum`] commit to, mirroring the
+/// AVX horizontal reduce exactly: 128-bit halves add lanewise
+/// (`l0+l4, l1+l5, l2+l6, l3+l7`), the upper pair folds onto the lower
+/// (`(l0+l4)+(l2+l6), (l1+l5)+(l3+l7)`), then lane 0 + lane 1.
+#[inline]
+fn reduce8(acc: &[f32; 8]) -> f32 {
+    let s0 = acc[0] + acc[4];
+    let s1 = acc[1] + acc[5];
+    let s2 = acc[2] + acc[6];
+    let s3 = acc[3] + acc[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Dot product with the shared 8-accumulator tree; AVX and scalar agree
+/// bitwise (see module docs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_kernel()(a, b)
+}
+
+/// The dot implementation resolved once for a whole loop (see
+/// [`axpy_kernel`]).
+#[inline]
+pub fn dot_kernel() -> fn(&[f32], &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if enabled() {
+        return dot_avx;
+    }
+    dot_scalar
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn dot_avx(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: handed out by the dispatchers only after the runtime AVX
+    // probe succeeded.
+    unsafe { avx::dot8(a, b) }
+}
+
+/// The scalar mirror of [`dot`].
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for (j, a8) in acc.iter_mut().enumerate() {
+            *a8 += a[i + j] * b[i + j];
+        }
+        i += 8;
+    }
+    let mut s = reduce8(&acc);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// Slice sum with the shared 8-accumulator tree (loss-mask normalizers);
+/// AVX and scalar agree bitwise.
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if x.len() >= 8 && enabled() {
+        // SAFETY: `enabled()` implies the AVX probe succeeded.
+        return unsafe { avx::sum8(x) };
+    }
+    sum_scalar(x)
+}
+
+/// The scalar mirror of [`sum`].
+pub fn sum_scalar(x: &[f32]) -> f32 {
+    let n = x.len();
+    let mut acc = [0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for (j, a8) in acc.iter_mut().enumerate() {
+            *a8 += x[i + j];
+        }
+        i += 8;
+    }
+    let mut s = reduce8(&acc);
+    while i < n {
+        s += x[i];
+        i += 1;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Adam: elementwise update (vector sqrt/div round identically)
+// ---------------------------------------------------------------------
+
+/// Precomputed Adam coefficients for one step (bias corrections depend on
+/// `t` only, so they are computed once per call, not per element).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamCoef {
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    pub bc1: f32,
+    pub bc2: f32,
+    pub lr: f32,
+}
+
+impl AdamCoef {
+    /// The paper's (and `ref.py`'s) fixed hyperparameters: beta1 = 0.9,
+    /// beta2 = 0.999, eps = 1e-8.
+    pub fn new(t: f32, lr: f32) -> AdamCoef {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        AdamCoef {
+            b1: B1,
+            b2: B2,
+            eps: EPS,
+            bc1: 1.0 - B1.powf(t),
+            bc2: 1.0 - B2.powf(t),
+            lr,
+        }
+    }
+}
+
+/// One Adam update over equal-length spans, writing every element of
+/// `w2`/`m2`/`v2`.  Elementwise (mul/add/sub/sqrt/div, no FMA), so the
+/// AVX and scalar paths are bit-identical.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn adam_span(
+    w: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    c: &AdamCoef,
+    w2: &mut [f32],
+    m2: &mut [f32],
+    v2: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if w.len() >= 8 && enabled() {
+        // SAFETY: `enabled()` implies the AVX probe succeeded.
+        unsafe { avx::adam8(w, m, v, g, c, w2, m2, v2) };
+        return;
+    }
+    adam_span_scalar(w, m, v, g, c, w2, m2, v2);
+}
+
+/// The scalar mirror of [`adam_span`].  Operation order matters for bit
+/// parity: `(1 - b2) * g * g` associates left, `lr * mhat / (...)`
+/// multiplies before dividing — the AVX path mirrors both.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_span_scalar(
+    w: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    c: &AdamCoef,
+    w2: &mut [f32],
+    m2: &mut [f32],
+    v2: &mut [f32],
+) {
+    for i in 0..w.len() {
+        let mi = c.b1 * m[i] + (1.0 - c.b1) * g[i];
+        let vi = c.b2 * v[i] + (1.0 - c.b2) * g[i] * g[i];
+        let mhat = mi / c.bc1;
+        let vhat = vi / c.bc2;
+        w2[i] = w[i] - c.lr * mhat / (vhat.sqrt() + c.eps);
+        m2[i] = mi;
+        v2[i] = vi;
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX implementations
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx {
+    use super::AdamCoef;
+    use std::arch::x86_64::*;
+
+    /// Horizontal reduce matching the scalar [`super::reduce8`] tree
+    /// exactly: lo+hi lanewise, upper-pair fold, lane0 + lane1.
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn hreduce8(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        // [l0+l4, l1+l5, l2+l6, l3+l7]
+        let s = _mm_add_ps(lo, hi);
+        // fold lanes 2,3 onto 0,1: [(l0+l4)+(l2+l6), (l1+l5)+(l3+l7), ..]
+        let t = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        // lane0 + lane1
+        let u = _mm_add_ss(t, _mm_shuffle_ps::<0x55>(t, t));
+        _mm_cvtss_f32(u)
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy8(av: f32, b: &[f32], c: &mut [f32]) {
+        let n = b.len().min(c.len());
+        let va = _mm256_set1_ps(av);
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let mut j = 0;
+        while j + 8 <= n {
+            let vb = _mm256_loadu_ps(bp.add(j));
+            let vc = _mm256_loadu_ps(cp.add(j));
+            _mm256_storeu_ps(cp.add(j), _mm256_add_ps(vc, _mm256_mul_ps(va, vb)));
+            j += 8;
+        }
+        while j < n {
+            *cp.add(j) += av * *bp.add(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(ap.add(i));
+            let vb = _mm256_loadu_ps(bp.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        let mut s = hreduce8(acc);
+        while i < n {
+            s += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sum8(x: &[f32]) -> f32 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(xp.add(i)));
+            i += 8;
+        }
+        let mut s = hreduce8(acc);
+        while i < n {
+            s += *xp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx")]
+    pub unsafe fn adam8(
+        w: &[f32],
+        m: &[f32],
+        v: &[f32],
+        g: &[f32],
+        c: &AdamCoef,
+        w2: &mut [f32],
+        m2: &mut [f32],
+        v2: &mut [f32],
+    ) {
+        let n = w.len();
+        let vb1 = _mm256_set1_ps(c.b1);
+        let vomb1 = _mm256_set1_ps(1.0 - c.b1);
+        let vb2 = _mm256_set1_ps(c.b2);
+        let vomb2 = _mm256_set1_ps(1.0 - c.b2);
+        let vbc1 = _mm256_set1_ps(c.bc1);
+        let vbc2 = _mm256_set1_ps(c.bc2);
+        let vlr = _mm256_set1_ps(c.lr);
+        let veps = _mm256_set1_ps(c.eps);
+        let mut i = 0;
+        while i + 8 <= n {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            let mv = _mm256_loadu_ps(m.as_ptr().add(i));
+            let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+            let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+            let mi = _mm256_add_ps(_mm256_mul_ps(vb1, mv), _mm256_mul_ps(vomb1, gv));
+            // left-associated like the scalar mirror: ((1-b2)*g)*g
+            let vi = _mm256_add_ps(
+                _mm256_mul_ps(vb2, vv),
+                _mm256_mul_ps(_mm256_mul_ps(vomb2, gv), gv),
+            );
+            let mhat = _mm256_div_ps(mi, vbc1);
+            let vhat = _mm256_div_ps(vi, vbc2);
+            let upd = _mm256_div_ps(
+                _mm256_mul_ps(vlr, mhat),
+                _mm256_add_ps(_mm256_sqrt_ps(vhat), veps),
+            );
+            _mm256_storeu_ps(w2.as_mut_ptr().add(i), _mm256_sub_ps(wv, upd));
+            _mm256_storeu_ps(m2.as_mut_ptr().add(i), mi);
+            _mm256_storeu_ps(v2.as_mut_ptr().add(i), vi);
+            i += 8;
+        }
+        super::adam_span_scalar(
+            &w[i..],
+            &m[i..],
+            &v[i..],
+            &g[i..],
+            c,
+            &mut w2[i..],
+            &mut m2[i..],
+            &mut v2[i..],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vec_rng(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * scale).collect()
+    }
+
+    #[test]
+    fn enabled_implies_available() {
+        if enabled() {
+            assert!(available());
+        }
+    }
+
+    #[test]
+    fn scalar_reduction_tree_is_stable() {
+        // lock the documented tree down with catastrophic-cancellation
+        // values where any other association gives a different f32
+        let acc = [1e8f32, 1.0, -1e8, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let want: f32 =
+            ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+        assert_eq!(reduce8(&acc), want);
+        // and differs from the naive left fold, so the test has teeth
+        let naive: f32 = acc.iter().copied().fold(0.0, |a, b| a + b);
+        assert_ne!(reduce8(&acc), naive);
+    }
+
+    #[test]
+    fn dot_and_sum_match_f64_reference() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 3, 7, 8, 9, 31, 257] {
+            let a = vec_rng(&mut rng, n, 1.0);
+            let b = vec_rng(&mut rng, n, 1.0);
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            assert!(
+                (dot(&a, &b) as f64 - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                "dot n={n}"
+            );
+            let wsum: f64 = a.iter().map(|&x| x as f64).sum();
+            assert!((sum(&a) as f64 - wsum).abs() <= 1e-3 * (1.0 + wsum.abs()));
+        }
+    }
+
+    // The load-bearing contract: with AVX present, the vector paths must
+    // equal the scalar mirrors *bitwise* on arbitrary lengths (tails
+    // included).  On non-AVX hardware this degenerates to scalar == scalar.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn avx_paths_match_scalar_mirrors_bitwise() {
+        if !available() {
+            eprintln!("skipping: no AVX on this host");
+            return;
+        }
+        let mut rng = Rng::new(23);
+        for n in [1usize, 4, 7, 8, 9, 15, 16, 40, 129, 1000] {
+            let a = vec_rng(&mut rng, n, 2.0);
+            let b = vec_rng(&mut rng, n, 2.0);
+            // axpy
+            let mut c1 = vec_rng(&mut rng, n, 1.0);
+            let mut c2 = c1.clone();
+            unsafe { avx::axpy8(0.37, &a, &mut c1) };
+            axpy_scalar(0.37, &a, &mut c2);
+            assert_eq!(c1, c2, "axpy n={n}");
+            // dot / sum
+            assert_eq!(unsafe { avx::dot8(&a, &b) }, dot_scalar(&a, &b), "dot n={n}");
+            assert_eq!(unsafe { avx::sum8(&a) }, sum_scalar(&a), "sum n={n}");
+            // adam
+            let w = vec_rng(&mut rng, n, 1.0);
+            let m = vec_rng(&mut rng, n, 0.1);
+            let v: Vec<f32> = (0..n).map(|_| rng.f32() * 0.1).collect();
+            let g = vec_rng(&mut rng, n, 1.0);
+            let coef = AdamCoef::new(3.0, 0.01);
+            let (mut w1, mut m1, mut v1) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+            let (mut w2m, mut m2m, mut v2m) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+            unsafe { avx::adam8(&w, &m, &v, &g, &coef, &mut w1, &mut m1, &mut v1) };
+            adam_span_scalar(&w, &m, &v, &g, &coef, &mut w2m, &mut m2m, &mut v2m);
+            assert_eq!((w1, m1, v1), (w2m, m2m, v2m), "adam n={n}");
+        }
+    }
+}

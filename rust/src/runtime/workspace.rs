@@ -35,6 +35,12 @@ pub struct Workspace {
     taken: u64,
     reused: u64,
     fresh: u64,
+    /// Largest length requested since the last
+    /// [`Workspace::trim_to_high_water`] — the retention bar the next
+    /// trim holds spares to.
+    high_water: usize,
+    trims: u64,
+    released: u64,
 }
 
 /// Counters for the steady-state contract (see module docs).
@@ -48,6 +54,12 @@ pub struct WorkspaceStats {
     pub fresh: u64,
     /// Spare buffers currently pooled.
     pub spare: usize,
+    /// Largest take length since the last trim.
+    pub high_water: usize,
+    /// `trim_to_high_water` calls.
+    pub trims: u64,
+    /// Spare buffers released by trims over the workspace's lifetime.
+    pub released: u64,
 }
 
 impl Workspace {
@@ -61,6 +73,7 @@ impl Workspace {
     /// all `*_into` kernels do.
     pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
         self.taken += 1;
+        self.high_water = self.high_water.max(len);
         let mut best: Option<usize> = None;
         for (i, b) in self.spares.iter().enumerate() {
             if b.capacity() < len {
@@ -120,12 +133,45 @@ impl Workspace {
         }
     }
 
+    /// Release spare buffers whose capacity exceeds the largest length
+    /// requested since the previous trim, then reset that high-water
+    /// mark.  Returns how many buffers were freed.
+    ///
+    /// This closes the pool's one leak: best-fit reuse never *shrinks*,
+    /// so a single transient op (an eval pass over a wide output, a
+    /// one-off debugging dump) would otherwise pin its giant buffer for
+    /// the life of the run.  Callers with a natural cadence boundary
+    /// (the trainer trims at every eval point) pay one `O(spares)` scan;
+    /// a buffer that is genuinely part of the steady state is taken
+    /// again before the next trim and therefore always survives.  A
+    /// transient giant survives at most one more window (its take raised
+    /// the current mark) and is dropped at the trim after that.
+    pub fn trim_to_high_water(&mut self) -> usize {
+        let hw = self.high_water;
+        let before = self.spares.len();
+        self.spares.retain(|b| b.capacity() <= hw);
+        let freed = before - self.spares.len();
+        self.high_water = 0;
+        self.trims += 1;
+        self.released += freed as u64;
+        freed
+    }
+
+    /// Largest pooled spare capacity (tests assert trims actually free).
+    #[cfg(test)]
+    fn spares_capacity_max(&self) -> usize {
+        self.spares.iter().map(|b| b.capacity()).max().unwrap_or(0)
+    }
+
     pub fn stats(&self) -> WorkspaceStats {
         WorkspaceStats {
             taken: self.taken,
             reused: self.reused,
             fresh: self.fresh,
             spare: self.spares.len(),
+            high_water: self.high_water,
+            trims: self.trims,
+            released: self.released,
         }
     }
 }
@@ -192,6 +238,45 @@ mod tests {
         }
         assert_eq!(ws.stats().fresh, warm, "steady state must not allocate");
         assert!(ws.stats().reused >= 150);
+    }
+
+    #[test]
+    fn transient_large_op_does_not_pin_memory_forever() {
+        let mut ws = Workspace::new();
+        // steady state: small shapes
+        let steady = || [128usize, 32];
+        for _ in 0..3 {
+            for len in steady() {
+                let b = ws.take_f32(len);
+                ws.give_f32(b);
+            }
+        }
+        // a transient giant passes through the pool once
+        let big = ws.take_f32(1_000_000);
+        ws.give_f32(big);
+        assert!(ws.stats().spare >= 1);
+        // trim #1: the giant survives (its take raised the current mark)
+        ws.trim_to_high_water();
+        // one more steady window, then trim #2 must release it
+        for len in steady() {
+            let b = ws.take_f32(len);
+            ws.give_f32(b);
+        }
+        let freed = ws.trim_to_high_water();
+        assert!(freed >= 1, "giant spare must be released");
+        assert!(
+            ws.spares_capacity_max() <= 128,
+            "no oversized spare may remain: {}",
+            ws.spares_capacity_max()
+        );
+        let s = ws.stats();
+        assert_eq!(s.trims, 2);
+        assert!(s.released >= 1);
+        assert_eq!(s.high_water, 0);
+        // steady-state shapes still reuse after trimming
+        let b = ws.take_f32(128);
+        assert!(ws.stats().reused > 0);
+        ws.give_f32(b);
     }
 
     #[test]

@@ -17,11 +17,15 @@
 use crate::cache::PrefetchStats;
 use crate::coordinator::{RscConfig, RscEngine};
 use crate::data::{Dataset, Labels, SaintSampler, Split};
+use crate::graph::{Permutation, ReorderKind};
 use crate::model::gcn::GcnModel;
 use crate::model::gcnii::GcniiModel;
 use crate::model::ops::{GraphBufs, ModelKind, OpNames};
 use crate::model::sage::SageModel;
-use crate::runtime::{plan_stats, Backend, Value, Workspace, WorkspaceStats};
+use crate::runtime::{
+    plan_stats, simd, spmm_kernel_stats, Backend, SpmmKernelStats, Value, Workspace,
+    WorkspaceStats,
+};
 use crate::train::metrics::MetricKind;
 use crate::util::parallel;
 use crate::util::rng::Rng;
@@ -42,6 +46,14 @@ pub struct TrainConfig {
     /// GraphSAINT: number of pre-sampled subgraphs and batches per epoch.
     pub saint_subgraphs: usize,
     pub saint_batches_per_epoch: usize,
+    /// Locality-aware node reordering applied once before full-batch
+    /// training (`--reorder degree|rcm|none`, `--no-reorder`): train in
+    /// permuted space, inverse-permute predictions at eval.  Per-node
+    /// results are reassociation-equivalent (ULP-level), metrics are
+    /// computed against the original dataset.  Ignored by GraphSAINT
+    /// (subgraphs are resampled per batch — there is no single static
+    /// gather order to optimize).
+    pub reorder: ReorderKind,
 }
 
 impl TrainConfig {
@@ -56,6 +68,7 @@ impl TrainConfig {
             verbose: false,
             saint_subgraphs: 8,
             saint_batches_per_epoch: 4,
+            reorder: ReorderKind::Degree,
         }
     }
 }
@@ -97,6 +110,25 @@ pub struct TrainResult {
     /// control it; results are identical either way (DESIGN.md
     /// §Parallel runtime).
     pub threads: usize,
+    /// Node order trained in ("none" | "degree" | "rcm").
+    pub reorder: &'static str,
+    /// Whether the SIMD dispatch was live for this run (`--no-simd` and
+    /// non-AVX hardware report false; results are bit-identical either
+    /// way).
+    pub simd: bool,
+    /// Planned-SpMM executions per kernel variant during this run
+    /// (process-global counters, so an upper bound under concurrency).
+    pub kernels: SpmmKernelStats,
+    /// The kernel variant the forward plan recorded at first execution,
+    /// e.g. "simd-tiled/64 @ d=64" (None under `--no-plan-cache`).
+    pub fwd_kernel: Option<String>,
+}
+
+/// Human label of a plan's recorded kernel decision.
+fn fwd_kernel_label(bufs: &GraphBufs) -> Option<String> {
+    let plan = bufs.fwd_spmm_plan()?;
+    let (d, choice) = plan.chosen()?;
+    Some(format!("{} @ d={d}", choice.describe()))
 }
 
 /// Build the normalized matrix + buffers for a model on the full graph.
@@ -125,9 +157,20 @@ pub fn train(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainRe
     }
 }
 
-fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
     let mut rng = Rng::new(cfg.seed ^ 0x7A31);
     let names = OpNames::full();
+    // One-shot locality reordering: train on the relabeled graph, keep
+    // the permutation to take predictions back to original node order at
+    // eval.  Weight init depends only on the rng, never on node order.
+    let reordered: Option<(Dataset, Permutation)> = match cfg.reorder {
+        ReorderKind::None => None,
+        kind => Some(ds0.reordered(kind)),
+    };
+    let (ds, perm): (&Dataset, Option<&Permutation>) = match &reordered {
+        Some((d, p)) => (d, Some(p)),
+        None => (ds0, None),
+    };
     let mut bufs = full_graph_bufs(b, ds, cfg.model);
     bufs.plan_cache = cfg.rsc.plan_cache;
     let x = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
@@ -135,6 +178,7 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
     let train_mask = Value::vec_f32(ds.mask(Split::Train));
     let metric = MetricKind::for_dataset(ds);
     let (plan_hits0, plan_builds0) = plan_stats();
+    let kernels0 = spmm_kernel_stats();
 
     let widths: Vec<usize> = (0..cfg.model.n_spmm_bwd(&ds.cfg))
         .map(|s| cfg.model.spmm_width(&ds.cfg, s))
@@ -194,8 +238,21 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
                 AnyModel::Gcnii(m) => m.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?,
             };
             let lf = logits.f32s()?;
-            let val = metric.evaluate(ds, lf, Split::Val);
-            let test = metric.evaluate(ds, lf, Split::Test);
+            // metrics are always computed against the *original* dataset:
+            // permuted-space predictions go back through the permutation
+            let (val, test) = match perm {
+                Some(p) => {
+                    let orig = p.invert_rows_f32(lf, ds.cfg.n_class);
+                    (
+                        metric.evaluate(ds0, &orig, Split::Val),
+                        metric.evaluate(ds0, &orig, Split::Test),
+                    )
+                }
+                None => (
+                    metric.evaluate(ds0, lf, Split::Val),
+                    metric.evaluate(ds0, lf, Split::Test),
+                ),
+            };
             val_curve.push((epoch, val));
             // NaN never wins a comparison, so a degenerate split would
             // silently keep test_metric = NaN — skip NaN vals explicitly
@@ -211,6 +268,9 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
                 );
             }
             ws.recycle(logits);
+            // release pool capacity a transient op (e.g. the eval logits
+            // of a wide output layer) would otherwise pin forever
+            ws.trim_to_high_water();
         }
     }
     ensure!(
@@ -244,6 +304,10 @@ fn train_full_batch(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<
         plan_builds: plan_builds1.saturating_sub(plan_builds0),
         ws: ws.stats(),
         threads: parallel::global().threads(),
+        reorder: cfg.reorder.name(),
+        simd: simd::enabled(),
+        kernels: spmm_kernel_stats().since(&kernels0),
+        fwd_kernel: fwd_kernel_label(&bufs),
     })
 }
 
@@ -274,6 +338,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let mut rng = Rng::new(cfg.seed ^ 0x5417);
     let metric = MetricKind::for_dataset(ds);
     let (plan_hits0, plan_builds0) = plan_stats();
+    let kernels0 = spmm_kernel_stats();
 
     // --- offline sampling ---
     let sampler = SaintSampler::for_dataset(ds);
@@ -396,6 +461,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                     loss_curve.last().unwrap());
             }
             ws.recycle(logits);
+            ws.trim_to_high_water();
         }
     }
     ensure!(
@@ -446,5 +512,10 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         plan_builds: plan_builds1.saturating_sub(plan_builds0),
         ws: ws.stats(),
         threads: parallel::global().threads(),
+        // SAINT resamples subgraphs per batch — no static order to tune
+        reorder: ReorderKind::None.name(),
+        simd: simd::enabled(),
+        kernels: spmm_kernel_stats().since(&kernels0),
+        fwd_kernel: fwd_kernel_label(&eval_bufs),
     })
 }

@@ -1,0 +1,285 @@
+//! Contracts of the vectorized locality layer (PR 4):
+//!
+//! * **Permutation round trips** — reorder → train-space tensors →
+//!   inverse-permute is the bitwise identity; CSR reorder preserves the
+//!   edge multiset and per-row nnz under the permutation.
+//! * **SIMD-vs-scalar parity** — every vectorized kernel equals its
+//!   scalar mirror bitwise, at 1/2/4/8 threads, for every planned-SpMM
+//!   kernel variant (tiles narrower than d included).
+//! * **End-to-end ablations** — `--no-simd` is bit-identical (the SIMD
+//!   layer never reassociates without a matching scalar mirror);
+//!   reordering is ULP-equivalent per node (documented reassociation),
+//!   with metrics computed in original node order either way.
+
+use rsc::data::load_or_generate;
+use rsc::graph::{degree_order, rcm_order, Csr, Permutation, ReorderKind};
+use rsc::model::ops::ModelKind;
+use rsc::runtime::plan::{KernelChoice, SpmmKernel};
+use rsc::runtime::{native, simd, NativeBackend, SpmmPlan};
+use rsc::train::{train, TrainConfig};
+use rsc::util::parallel::Parallelism;
+use rsc::util::prop;
+
+// ---------------------------------------------------------------------
+// permutation round trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_permutation_roundtrip_is_bitwise_identity() {
+    prop::check("perm-roundtrip", 25, |rng| {
+        let n = rng.range(1, 50);
+        let adj = Csr::random(n, rng.below(5 * n + 1), rng);
+        // degree, rcm, and a uniformly random permutation
+        let mut random_order: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut random_order);
+        for perm in [
+            Permutation::from_order(degree_order(&adj)),
+            Permutation::from_order(rcm_order(&adj)),
+            Permutation::from_order(random_order.clone()),
+        ] {
+            assert_eq!(perm.len(), n);
+            for d in [1usize, 3, 8] {
+                let x = prop::vec_f32(rng, n * d, 1.0);
+                let fwd = perm.apply_rows_f32(&x, d);
+                assert_eq!(perm.invert_rows_f32(&fwd, d), x, "n={n} d={d}");
+            }
+            let vals: Vec<i32> = (0..n as i32).collect();
+            let gathered = perm.gather(&vals);
+            for new in 0..n {
+                assert_eq!(gathered[new] as usize, perm.old_of_new(new));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_csr_reorder_preserves_edges_and_row_nnz() {
+    prop::check("csr-reorder", 25, |rng| {
+        let n = rng.range(1, 40);
+        let m = Csr::random(n, rng.below(4 * n + 1), rng);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut order);
+        let p = Permutation::from_order(order);
+        let pm = m.permute(&p);
+        assert!(pm.validate());
+        // per-row nnz moves with the node
+        for new in 0..n {
+            assert_eq!(pm.row_nnz(new), m.row_nnz(p.old_of_new(new)));
+        }
+        // edge multiset is preserved under relabeling: map the permuted
+        // matrix's entries back through the inverse and compare sorted
+        let mut orig: Vec<(usize, usize, f32)> = Vec::new();
+        for r in 0..n {
+            let (cs, ws) = m.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                orig.push((r, c as usize, w));
+            }
+        }
+        let mut back: Vec<(usize, usize, f32)> = Vec::new();
+        for r in 0..n {
+            let (cs, ws) = pm.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                back.push((p.old_of_new(r), p.old_of_new(c as usize), w));
+            }
+        }
+        orig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        back.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(orig, back);
+    });
+}
+
+#[test]
+fn dataset_reorder_moves_every_tensor_consistently() {
+    let ds = load_or_generate("tiny", 3).unwrap();
+    for kind in [ReorderKind::Degree, ReorderKind::Rcm] {
+        let (rds, p) = ds.reordered(kind);
+        rds.validate().unwrap();
+        assert_eq!(rds.adj.nnz(), ds.adj.nnz());
+        let d_in = ds.cfg.d_in;
+        let labels = ds.labels_i32().unwrap();
+        let rlabels = rds.labels_i32().unwrap();
+        for new in 0..ds.cfg.v {
+            let old = p.old_of_new(new);
+            assert_eq!(rlabels[new], labels[old]);
+            assert_eq!(rds.split[new], ds.split[old]);
+            assert_eq!(rds.cluster[new], ds.cluster[old]);
+            assert_eq!(
+                &rds.features[new * d_in..(new + 1) * d_in],
+                &ds.features[old * d_in..(old + 1) * d_in]
+            );
+        }
+        // degrees move with the node, so the degree multiset is unchanged
+        let mut a: Vec<usize> = (0..ds.cfg.v).map(|r| ds.adj.row_nnz(r)).collect();
+        let mut b: Vec<usize> = (0..ds.cfg.v).map(|r| rds.adj.row_nnz(r)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+    // ReorderKind::None is the identity
+    let (same, p) = ds.reordered(ReorderKind::None);
+    assert_eq!(same.features, ds.features);
+    assert_eq!(same.adj, ds.adj);
+    assert_eq!(p, Permutation::identity(ds.cfg.v));
+}
+
+// ---------------------------------------------------------------------
+// SIMD-vs-scalar parity at 1/2/4/8 threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_planned_spmm_variants_bitwise_across_threads() {
+    prop::check("variants-threads", 10, |rng| {
+        let v = rng.range(1, 40);
+        let d = rng.range(1, 50);
+        let ne = rng.below(6 * v);
+        let src: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+        let dst: Vec<i32> = (0..ne).map(|_| rng.below(v) as i32).collect();
+        let w: Vec<f32> = (0..ne)
+            .map(|_| if rng.chance(0.2) { 0.0 } else { rng.normal_f32() })
+            .collect();
+        let x = prop::vec_f32(rng, v * d, 1.0);
+        let want = native::spmm(&src, &dst, &w, &x, d, v);
+        for threads in [1usize, 2, 4, 8] {
+            let par = Parallelism::with_threads(threads).with_grain(1);
+            let plan = SpmmPlan::build(&dst, &w, v, par);
+            for choice in [
+                KernelChoice { kernel: SpmmKernel::Scalar, tile: d },
+                KernelChoice { kernel: SpmmKernel::Axpy4, tile: d },
+                KernelChoice { kernel: SpmmKernel::SimdTiled, tile: d },
+                KernelChoice { kernel: SpmmKernel::SimdTiled, tile: (d / 4).max(1) },
+                KernelChoice { kernel: SpmmKernel::SimdTiled, tile: 8 },
+            ] {
+                let mut out = vec![7.5f32; v * d];
+                native::spmm_planned_variant_into(
+                    &plan, choice, &src, &w, &x, d, &mut out, par,
+                );
+                assert_eq!(want, out, "{choice:?} threads={threads}");
+            }
+            // the auto-selected path is one of the above
+            assert_eq!(want, native::spmm_planned(&plan, &src, &w, &x, d, par));
+        }
+    });
+}
+
+#[test]
+fn prop_dense_and_optimizer_kernels_match_naive_references() {
+    // matmul/adam run through the simd dispatch internally; a plain
+    // per-element reference must agree bitwise at every thread count
+    prop::check("simd-dense-parity", 10, |rng| {
+        let (m, k, n) = (rng.range(1, 20), rng.range(1, 20), rng.range(1, 40));
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let mut naive = vec![0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let av = a[i * k + l];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    naive[i * n + j] += av * b[l * n + j];
+                }
+            }
+        }
+        for threads in [1usize, 2, 4, 8] {
+            let par = Parallelism::with_threads(threads).with_grain(1);
+            assert_eq!(naive, native::matmul_par(&a, &b, m, k, n, par), "t={threads}");
+        }
+        assert_eq!(naive, native::matmul(&a, &b, m, k, n));
+
+        let len = rng.range(1, 200);
+        let w = prop::vec_f32(rng, len, 1.0);
+        let mm = prop::vec_f32(rng, len, 0.1);
+        let vv: Vec<f32> = (0..len).map(|_| rng.f32() * 0.1).collect();
+        let g = prop::vec_f32(rng, len, 1.0);
+        let want = native::adam(&w, &mm, &vv, &g, 2.0, 0.02);
+        for threads in [1usize, 2, 4, 8] {
+            let par = Parallelism::with_threads(threads).with_grain(1);
+            assert_eq!(want, native::adam_par(&w, &mm, &vv, &g, 2.0, 0.02, par));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// end-to-end ablations
+// ---------------------------------------------------------------------
+
+fn tiny_cfg(epochs: usize, reorder: ReorderKind) -> TrainConfig {
+    let mut cfg = TrainConfig::new(ModelKind::Gcn);
+    cfg.epochs = epochs;
+    cfg.seed = 1;
+    cfg.eval_every = 5;
+    cfg.reorder = reorder;
+    cfg
+}
+
+#[test]
+fn no_simd_ablation_is_bit_identical_end_to_end() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 1).unwrap();
+    // scalar mirrors only
+    simd::set_enabled(false);
+    let off = train(&b, &ds, &tiny_cfg(12, ReorderKind::Degree)).unwrap();
+    // dispatch live (on AVX hosts this actually exercises the vector
+    // paths; elsewhere it degenerates to scalar == scalar)
+    simd::set_enabled(true);
+    let on = train(&b, &ds, &tiny_cfg(12, ReorderKind::Degree)).unwrap();
+    assert_eq!(
+        on.loss_curve, off.loss_curve,
+        "--no-simd must not change the training trajectory bitwise"
+    );
+    assert_eq!(on.test_metric, off.test_metric);
+    assert!(!off.simd, "ablated run must report simd=off");
+}
+
+#[test]
+fn reorder_ablation_preserves_training_within_tolerance() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 1).unwrap();
+    let epochs = 12;
+    let base = train(&b, &ds, &tiny_cfg(epochs, ReorderKind::None)).unwrap();
+    for kind in [ReorderKind::Degree, ReorderKind::Rcm] {
+        let re = train(&b, &ds, &tiny_cfg(epochs, kind)).unwrap();
+        assert_eq!(re.reorder, kind.name());
+        // reordering only reassociates per-row accumulations, so the
+        // loss curve tracks the unpermuted run to small relative error
+        // over a short horizon (exact bit-equality is *not* expected)
+        assert_eq!(re.loss_curve.len(), base.loss_curve.len());
+        for (i, (a, c)) in base.loss_curve.iter().zip(&re.loss_curve).enumerate() {
+            let rel = (a - c).abs() / a.abs().max(1e-6);
+            // early epochs are ULP-close; later ones may amplify the
+            // reassociation through Adam, so the bound loosens
+            let bound = if i < 3 { 2e-3 } else { 0.25 };
+            assert!(
+                rel < bound,
+                "{kind:?} epoch {i}: loss {c} vs baseline {a} (rel {rel})"
+            );
+        }
+        // metrics are computed against original node order: both runs
+        // learn the same tiny clustering problem
+        assert!(re.test_metric > 0.6, "{kind:?}: {}", re.test_metric);
+        assert!((re.test_metric - base.test_metric).abs() < 0.2);
+    }
+    // same-config reorder runs are deterministic
+    let again = train(&b, &ds, &tiny_cfg(epochs, ReorderKind::Degree)).unwrap();
+    let re = train(&b, &ds, &tiny_cfg(epochs, ReorderKind::Degree)).unwrap();
+    assert_eq!(again.loss_curve, re.loss_curve);
+}
+
+#[test]
+fn reordered_run_reports_kernel_choice_and_trims() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 1).unwrap();
+    let res = train(&b, &ds, &tiny_cfg(12, ReorderKind::Degree)).unwrap();
+    // the forward plan recorded a kernel decision and planned SpMMs ran
+    let fwd = res.fwd_kernel.expect("plan cache on => a recorded choice");
+    assert!(
+        fwd.contains("@ d="),
+        "kernel label should carry the width: {fwd}"
+    );
+    assert!(res.kernels.total() > 0, "planned SpMM executions counted");
+    // (no assertion on *which* variant won: another test in this binary
+    // legitimately toggles the global simd switch mid-run)
+    // the trainer trims the workspace at eval boundaries
+    assert!(res.ws.trims > 0);
+}

@@ -4,6 +4,7 @@
 
 use rsc::coordinator::{AllocKind, RscConfig};
 use rsc::data::load_or_generate;
+use rsc::graph::ReorderKind;
 use rsc::model::ops::ModelKind;
 use rsc::runtime::{NativeBackend, XlaBackend};
 use rsc::train::{train, TrainConfig};
@@ -23,6 +24,7 @@ fn cfg(model: ModelKind, epochs: usize, rsc: RscConfig) -> TrainConfig {
         verbose: false,
         saint_subgraphs: 4,
         saint_batches_per_epoch: 2,
+        reorder: ReorderKind::Degree,
     }
 }
 
