@@ -86,6 +86,12 @@ class DatasetCfg:
     gcnii_layers: int = 4
     gcnii_alpha: float = 0.1
     gcnii_lambda: float = 0.5
+    # APPNP: K weight-free propagation steps at teleport alpha
+    appnp_layers: int = 8
+    appnp_alpha: float = 0.1
+    # GIN epsilon (self-term weight 1 + eps, folded into the sum matrix
+    # on the rust side; GIN reuses the gcn_fwd executables)
+    gin_eps: float = 0.0
     # GraphSAINT padded-subgraph caps (0 = no saint ops for this dataset)
     saint_v: int = 0
     saint_m: int = 0
@@ -191,6 +197,16 @@ def dense_fwd_fn(relu):
     return fn
 
 
+def appnp_fwd_fn(v, alpha):
+    """One APPNP power step: z' = (1-a) SpMM(A_hat, z) + a h0."""
+
+    def fn(z, h0, src, dst, ew):
+        p = ref.spmm_ref(src, dst, ew, z, v)
+        return ((1.0 - alpha) * p + alpha * h0,)
+
+    return fn
+
+
 # --------------------------------------------------------------------------
 # Backward ops.  The spmm_bwd_* family is THE op RSC approximates: it runs
 # over whatever (possibly sampled + padded) transposed edge list the
@@ -270,6 +286,16 @@ def gcnii_bwd_pre_fn(alpha, beta):
         gp = (1.0 - alpha) * gu
         gh0c = alpha * gu
         return gw, gp, gh0c
+
+    return fn
+
+
+def appnp_bwd_pre_fn(alpha):
+    """APPNP backward scales: gp feeds the approximated SpMM^T toward
+    z^{k-1}, gh0c accumulates into nabla h0."""
+
+    def fn(g):
+        return (1.0 - alpha) * g, alpha * g
 
     return fn
 
@@ -386,6 +412,13 @@ def _fwd_ops(cfg: DatasetCfg, g: GraphShape, prefix: str) -> list:
             kind="gcnii_fwd", d=cfg.d_h, layer=l, cap=m,
             alpha=cfg.gcnii_alpha, beta=gcnii_beta(cfg, l),
         )
+    # APPNP: one shared power-step executable for all K iterations
+    emit(
+        f"{prefix}appnp_fwd_{cfg.n_class}",
+        appnp_fwd_fn(v, cfg.appnp_alpha),
+        [_f32(v, cfg.n_class), _f32(v, cfg.n_class)] + _edges(m),
+        kind="appnp_fwd", d=cfg.n_class, cap=m, alpha=cfg.appnp_alpha,
+    )
     return ops
 
 
@@ -471,6 +504,12 @@ def _bwd_ops(cfg: DatasetCfg, g: GraphShape, prefix: str) -> list:
         dense_bwd_fn(False),
         [_f32(v, cfg.d_h), _f32(v, cfg.n_class), _f32(cfg.d_h, cfg.n_class)],
         kind="dense_bwd_nomask", din=cfg.d_h, dout=cfg.n_class,
+    )
+    emit(
+        f"{prefix}appnp_bwd_pre_{cfg.n_class}",
+        appnp_bwd_pre_fn(cfg.appnp_alpha),
+        [_f32(v, cfg.n_class)],
+        kind="appnp_bwd_pre", d=cfg.n_class, alpha=cfg.appnp_alpha,
     )
     # Elementwise add (grad accumulation), losses, row norms
     for d in sorted({cfg.d_h, cfg.n_class}):

@@ -9,8 +9,8 @@
 use rsc::bench::harness::{header, BenchScale};
 use rsc::coordinator::{AllocKind, RscConfig, RscEngine};
 use rsc::data::{load_or_generate, Split};
-use rsc::model::gcn::GcnModel;
 use rsc::model::ops::{ModelKind, OpNames};
+use rsc::model::GraphModel;
 use rsc::runtime::{Backend, Value, Workspace, XlaBackend};
 use rsc::sampling::{top_k_indices, Selection};
 use rsc::train::metrics::MetricKind;
@@ -30,7 +30,7 @@ fn run_variant(
     let ds = load_or_generate(dataset, seed)?;
     let mut rng = Rng::new(seed);
     let bufs = full_graph_bufs(b, &ds, ModelKind::Gcn);
-    let mut model = GcnModel::new(&ds.cfg, OpNames::full(), &mut rng);
+    let mut model = GraphModel::new(ModelKind::Gcn, &ds.cfg, OpNames::full(), &mut rng);
     let x = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
     let labels = Value::vec_i32(ds.labels_i32()?.to_vec());
     let mask = Value::vec_f32(ds.mask(Split::Train));
@@ -41,7 +41,8 @@ fn run_variant(
     let fwd_sel: Option<Vec<Selection>> = fwd_approx.then(|| {
         let scores = bufs.matrix.row_norms();
         let rows = top_k_indices(&scores, k);
-        (0..model.layers())
+        // one selection per sparse forward node (= per GCN layer)
+        (0..ds.cfg.layers)
             .map(|_| Selection::build(&bufs.matrix, rows.clone(), &bufs.caps))
             .collect()
     });

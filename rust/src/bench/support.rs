@@ -151,6 +151,8 @@ pub fn paper_budget(model: ModelKind, dataset: &str) -> f64 {
         (ModelKind::Gcnii, "reddit-sim") => 0.3,
         (ModelKind::Gcnii, "proteins-sim") => 0.5,
         (ModelKind::Gcnii, _) => 0.1,
+        // post-paper architectures: no Table 3 cell, use the mid budget
+        (ModelKind::Gin, _) | (ModelKind::Appnp, _) => 0.3,
     }
 }
 

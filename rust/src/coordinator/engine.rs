@@ -530,6 +530,14 @@ impl RscEngine {
         &self.ks
     }
 
+    /// Number of registered sampling sites.  The trainer passes
+    /// `LayerGraph::site_widths()` into [`RscEngine::new`], so this is
+    /// exactly the model graph's auto-discovered site count — the engine,
+    /// the allocators and the tape executor all see the same registry.
+    pub fn n_sites(&self) -> usize {
+        self.widths.len()
+    }
+
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
     }

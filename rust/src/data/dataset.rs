@@ -19,6 +19,12 @@ pub struct DatasetCfg {
     pub gcnii_layers: usize,
     pub gcnii_alpha: f32,
     pub gcnii_lambda: f32,
+    /// APPNP power-iteration depth K (every step is an RSC site).
+    pub appnp_layers: usize,
+    /// APPNP teleport probability alpha.
+    pub appnp_alpha: f32,
+    /// GIN epsilon (self-term weight `1 + eps` in the sum matrix).
+    pub gin_eps: f32,
     pub saint_v: usize,
     pub saint_m: usize,
     // generation parameters (rust-side only)

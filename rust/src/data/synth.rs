@@ -44,6 +44,9 @@ pub fn dataset_cfg(name: &str) -> Result<DatasetCfg> {
             gcnii_layers: 4,
             gcnii_alpha: 0.1,
             gcnii_lambda: 0.5,
+            appnp_layers: 8,
+            appnp_alpha: 0.1,
+            gin_eps: 0.0,
             saint_v,
             saint_m,
             clusters: if multilabel { 10 } else { n_class },
@@ -61,7 +64,12 @@ pub fn dataset_cfg(name: &str) -> Result<DatasetCfg> {
         "proteins-sim" => base("proteins-sim", 4000, 200_000, 32, 64, 8, true, 0, 0, 0.65),
         "products-sim" => base("products-sim", 20000, 400_000, 64, 64, 16, false, 4096, 49152, 0.0803),
         "tiny" => base("tiny", 128, 1024, 16, 16, 4, false, 64, 256, 0.6),
-        _ => return Err(anyhow!("unknown dataset {name:?}")),
+        _ => {
+            return Err(anyhow!(
+                "unknown dataset {name:?} (expected one of: {})",
+                ALL_DATASETS.join("|")
+            ))
+        }
     })
 }
 

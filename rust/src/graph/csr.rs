@@ -252,17 +252,24 @@ impl Csr {
         Csr { n: self.n, rowptr, col, val }
     }
 
-    /// A + I (unit diagonal added; existing diagonal summed).
-    pub fn add_self_loops(&self) -> Csr {
+    /// Shared self-loop builder: every off-diagonal entry with its
+    /// original weight (or `off` when given), plus one `diag`-weighted
+    /// self loop per row (duplicates merged by `from_triples`).
+    fn add_self_loops_with(&self, off: Option<f32>, diag: f32) -> Csr {
         let mut triples = Vec::with_capacity(self.nnz() + self.n);
         for r in 0..self.n {
             let (cs, ws) = self.row(r);
             for (&c, &w) in cs.iter().zip(ws) {
-                triples.push((r as u32, c, w));
+                triples.push((r as u32, c, off.unwrap_or(w)));
             }
-            triples.push((r as u32, r as u32, 1.0));
+            triples.push((r as u32, r as u32, diag));
         }
         Csr::from_triples(self.n, triples)
+    }
+
+    /// A + I (unit diagonal added; existing diagonal summed).
+    pub fn add_self_loops(&self) -> Csr {
+        self.add_self_loops_with(None, 1.0)
     }
 
     /// GCN normalization: D^{-1/2} (A + I) D^{-1/2}, D = deg(A + I).
@@ -300,6 +307,15 @@ impl Csr {
             }
         }
         out
+    }
+
+    /// GIN sum aggregation: `A + (1 + eps) I` with unit off-diagonal
+    /// weights.  The `(1+eps)·h` self term of GIN-eps is folded into the
+    /// self-loop weight, and a linear per-layer "MLP" commutes with the
+    /// aggregation (`A (H W) = (A H) W`), so the fused `gcn_fwd`
+    /// executables serve GIN unchanged over this matrix.
+    pub fn gin_normalize(&self, eps: f32) -> Csr {
+        self.add_self_loops_with(Some(1.0), 1.0 + eps)
     }
 
     /// L2 norm of each row's values (process-wide parallelism default).
@@ -646,6 +662,24 @@ mod tests {
             let s: f32 = ws.iter().sum();
             assert!((s - 1.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn gin_normalize_unit_weights_and_eps_self_loops() {
+        let m = small();
+        let g = m.gin_normalize(0.5);
+        assert_eq!(g.nnz(), m.nnz() + m.n, "A + I structure");
+        for r in 0..g.n {
+            let (cs, ws) = g.row(r);
+            for (&c, &w) in cs.iter().zip(ws) {
+                if c as usize == r {
+                    assert_eq!(w, 1.5, "self loop carries 1 + eps");
+                } else {
+                    assert_eq!(w, 1.0, "off-diagonal sum weights are 1");
+                }
+            }
+        }
+        assert!(g.validate());
     }
 
     #[test]

@@ -154,8 +154,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     apply_threads(args)?;
     let dataset = args.str_or("dataset", "tiny");
     let backend = load_backend(&args.str_or("backend", "xla"), &dataset)?;
+    // usage text derives from the single model registry (ModelKind::ALL)
     let model = ModelKind::parse(&args.str_or("model", "gcn"))
-        .ok_or_else(|| anyhow!("bad --model (gcn|sage|gcnii|saint)"))?;
+        .ok_or_else(|| anyhow!("bad --model ({})", ModelKind::usage()))?;
     let seed = args.u64_or("seed", 0)?;
     let ds = load_or_generate(&dataset, seed)?;
     let cfg = TrainConfig {

@@ -1,0 +1,724 @@
+//! The tape-driven executor: one forward/backward engine for every
+//! [`LayerGraph`].
+//!
+//! [`GraphModel::forward`] walks the graph's nodes in order through
+//! [`Backend::run_ctx`] (borrowed inputs, cached forward [`SpmmPlan`],
+//! trainer-owned [`Workspace`]) and records each produced value on a
+//! [`Tape`].  [`GraphModel::train_step`] then derives the backward pass
+//! from the tape: nodes are visited in reverse, each kind applies its VJP
+//! rule (the same fused backward executables the hand-written models
+//! dispatched), every auto-discovered sampling site routes its transposed
+//! SpMM through [`RscEngine::plan`] — norms observed first, sites planned
+//! in descending order so site 0 is planned last, exactly the engine
+//! contract the bespoke models followed — and gradient fan-in uses the
+//! zeroed-accumulator + `add` scheme.  Retired activations are recycled
+//! by slot liveness ([`LayerGraph::backward_last_use`]), not hand-placed
+//! calls; the steady-state step still allocates no tensor buffers.
+//!
+//! Bit-exactness: for GCN / GraphSAGE / GCNII the executor issues the
+//! *same ops on the same operands in the same engine order* as the
+//! deleted hand-written bodies, so training trajectories are reproduced
+//! bit-for-bit at any thread count (`tests/tape_parity.rs` pins this
+//! against frozen copies of the legacy implementations).
+
+use crate::coordinator::RscEngine;
+use crate::data::DatasetCfg;
+use crate::model::graph::{LayerGraph, Node, NodeOp, Slot};
+use crate::model::ops::{GraphBufs, ModelKind, OpNames};
+use crate::model::params::{Param, ParamSet};
+use crate::runtime::{Backend, ExecCtx, SpmmPlan, Value, Workspace};
+use crate::sampling::Selection;
+use crate::util::rng::Rng;
+use crate::util::timer::TimeBook;
+use crate::Result;
+use std::sync::Arc;
+
+/// Recorded forward values, one per graph slot (the input slot stays
+/// `None`: the feature matrix is borrowed from the caller).
+pub struct Tape {
+    slots: Vec<Option<Value>>,
+}
+
+impl Tape {
+    fn new(n: usize) -> Tape {
+        Tape { slots: (0..n).map(|_| None).collect() }
+    }
+
+    /// Borrow slot `s`'s value (`x` for the input slot).
+    fn val<'a>(&'a self, x: &'a Value, input: Slot, s: Slot) -> &'a Value {
+        if s == input {
+            x
+        } else {
+            self.slots[s].as_ref().expect("slot value is live")
+        }
+    }
+
+    fn set(&mut self, s: Slot, v: Value) {
+        self.slots[s] = Some(v);
+    }
+
+    fn take(&mut self, s: Slot) -> Option<Value> {
+        self.slots[s].take()
+    }
+}
+
+/// Any registered architecture as (graph, params, op-name table): the
+/// single model type the trainer, benches and tests drive.
+pub struct GraphModel {
+    pub graph: LayerGraph,
+    /// Op-name prefix table (swapped by the SAINT full-batch eval).
+    pub names: OpNames,
+    pub params: ParamSet,
+    pub multilabel: bool,
+    /// Gradient contributions per slot (see [`LayerGraph::grad_contribs`]).
+    contribs: Vec<usize>,
+    /// Forward-value liveness (see [`LayerGraph::backward_last_use`]).
+    last_use: Vec<Option<usize>>,
+}
+
+impl GraphModel {
+    /// Build the graph for `kind` and initialize its parameters in graph
+    /// order (glorot; identical rng consumption to the legacy models).
+    pub fn new(kind: ModelKind, cfg: &DatasetCfg, names: OpNames, rng: &mut Rng) -> GraphModel {
+        let graph = LayerGraph::for_model(kind, cfg);
+        let mut params = ParamSet::default();
+        for spec in &graph.params {
+            params.add(Param::glorot(&spec.name, spec.rows, spec.cols, rng));
+        }
+        let contribs = graph.grad_contribs();
+        let last_use = graph.backward_last_use();
+        GraphModel {
+            graph,
+            names,
+            params,
+            multilabel: cfg.multilabel,
+            contribs,
+            last_use,
+        }
+    }
+
+    /// Forward pass, recording every produced value on the tape.
+    /// `fwd_sel`: per-sparse-node sampled selections for *forward*
+    /// approximation (the Table 1 experiment; GCN-shaped graphs only).
+    pub fn forward(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        fwd_sel: Option<&[Selection]>,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+    ) -> Result<Tape> {
+        let input = self.graph.input;
+        let mut tape = Tape::new(self.graph.n_slots);
+        let mut sparse_ord = 0usize;
+        for node in &self.graph.nodes {
+            match node.op {
+                NodeOp::Gcn { din, dout, relu } => {
+                    let w = self.params.get(node.params[0]).value();
+                    let out = {
+                        let h = tape.val(x, input, node.inputs[0]);
+                        match fwd_sel {
+                            None => {
+                                let t = bufs.fwd_tags;
+                                let plan = bufs.fwd_spmm_plan();
+                                let op = self.names.gcn_fwd(din, dout, relu);
+                                let (s, d, ww) = &bufs.fwd;
+                                tb.scope("fwd", || {
+                                    b.run_ctx(
+                                        &op,
+                                        &[h, w, s, d, ww],
+                                        ExecCtx {
+                                            tags: &[0, 0, t, t + 1, t + 2],
+                                            plan: plan.as_deref(),
+                                            ws: Some(&mut *ws),
+                                        },
+                                    )
+                                })?
+                            }
+                            Some(sels) => {
+                                let sel = &sels[sparse_ord];
+                                let op = if sel.cap == *bufs.caps.last().unwrap() {
+                                    self.names.gcn_fwd(din, dout, relu)
+                                } else {
+                                    self.names.gcn_fwd_cap(din, dout, relu, sel.cap)
+                                };
+                                let (s, d, ww) = &sel.vals;
+                                let t = sel.tag;
+                                tb.scope("fwd", || {
+                                    b.run_ctx(
+                                        &op,
+                                        &[h, w, s, d, ww],
+                                        ExecCtx {
+                                            tags: &[0, 0, t, t + 1, t + 2],
+                                            plan: None,
+                                            ws: Some(&mut *ws),
+                                        },
+                                    )
+                                })?
+                            }
+                        }
+                    };
+                    tape.set(node.outputs[0], out.into_iter().next().unwrap());
+                }
+                NodeOp::Sage { din, dout, relu } => {
+                    let w1 = self.params.get(node.params[0]).value();
+                    let w2 = self.params.get(node.params[1]).value();
+                    let t = bufs.fwd_tags;
+                    let plan = bufs.fwd_spmm_plan();
+                    let op = self.names.sage_fwd(din, dout, relu);
+                    let out = {
+                        let h = tape.val(x, input, node.inputs[0]);
+                        let (s, d, w) = &bufs.fwd;
+                        tb.scope("fwd", || {
+                            b.run_ctx(
+                                &op,
+                                &[h, w1, w2, s, d, w],
+                                ExecCtx {
+                                    tags: &[0, 0, 0, t, t + 1, t + 2],
+                                    plan: plan.as_deref(),
+                                    ws: Some(&mut *ws),
+                                },
+                            )
+                        })?
+                    };
+                    let mut it = out.into_iter();
+                    tape.set(node.outputs[0], it.next().unwrap());
+                    tape.set(node.outputs[1], it.next().unwrap());
+                }
+                NodeOp::GcniiProp { layer, d } => {
+                    let wl = self.params.get(node.params[0]).value();
+                    let t = bufs.fwd_tags;
+                    let plan = bufs.fwd_spmm_plan();
+                    let op = self.names.gcnii_fwd(d, layer);
+                    let out = {
+                        let h = tape.val(x, input, node.inputs[0]);
+                        let h0 = tape.val(x, input, node.inputs[1]);
+                        let (s, dv, w) = &bufs.fwd;
+                        tb.scope("fwd", || {
+                            b.run_ctx(
+                                &op,
+                                &[h, h0, wl, s, dv, w],
+                                ExecCtx {
+                                    tags: &[0, 0, 0, t, t + 1, t + 2],
+                                    plan: plan.as_deref(),
+                                    ws: Some(&mut *ws),
+                                },
+                            )
+                        })?
+                    };
+                    let mut it = out.into_iter();
+                    tape.set(node.outputs[0], it.next().unwrap());
+                    tape.set(node.outputs[1], it.next().unwrap());
+                }
+                NodeOp::AppnpProp { d } => {
+                    let t = bufs.fwd_tags;
+                    let plan = bufs.fwd_spmm_plan();
+                    let op = self.names.appnp_fwd(d);
+                    let out = {
+                        let z = tape.val(x, input, node.inputs[0]);
+                        let h0 = tape.val(x, input, node.inputs[1]);
+                        let (s, dv, w) = &bufs.fwd;
+                        tb.scope("fwd", || {
+                            b.run_ctx(
+                                &op,
+                                &[z, h0, s, dv, w],
+                                ExecCtx {
+                                    tags: &[0, 0, t, t + 1, t + 2],
+                                    plan: plan.as_deref(),
+                                    ws: Some(&mut *ws),
+                                },
+                            )
+                        })?
+                    };
+                    tape.set(node.outputs[0], out.into_iter().next().unwrap());
+                }
+                NodeOp::Dense { din, dout, relu } => {
+                    let w = self.params.get(node.params[0]).value();
+                    let op = self.names.dense_fwd(din, dout, relu);
+                    let out = {
+                        let h = tape.val(x, input, node.inputs[0]);
+                        tb.scope("fwd", || {
+                            b.run_ctx(
+                                &op,
+                                &[h, w],
+                                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                            )
+                        })?
+                    };
+                    tape.set(node.outputs[0], out.into_iter().next().unwrap());
+                }
+            }
+            if node.op.is_sparse() {
+                sparse_ord += 1;
+            }
+        }
+        Ok(tape)
+    }
+
+    /// Inference logits (everything else on the tape is recycled).
+    pub fn logits(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+    ) -> Result<Value> {
+        let mut tape = self.forward(b, x, bufs, None, tb, ws)?;
+        let out = tape.take(self.graph.output).expect("output produced");
+        ws.recycle_all(tape.slots.into_iter().flatten());
+        Ok(out)
+    }
+
+    /// Forward + loss only (no tape kept) — the finite-difference
+    /// gradient checks probe the loss surface through this.
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_only(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        labels: &Value,
+        mask: &Value,
+        bufs: &GraphBufs,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+    ) -> Result<f32> {
+        let logits = self.logits(b, x, bufs, tb, ws)?;
+        let loss_out = tb.scope("loss", || {
+            b.run_ctx(
+                &self.names.loss(self.multilabel),
+                &[&logits, labels, mask],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+            )
+        })?;
+        ws.recycle(logits);
+        let loss = loss_out[0].item_f32()?;
+        ws.recycle_all(loss_out);
+        Ok(loss)
+    }
+
+    /// One full forward + loss + tape-derived backward; returns the
+    /// (masked mean) training loss and the parameter gradients in
+    /// `ParamSet` order.  Every backward-SpMM site is routed through the
+    /// engine's plan (exact or sampled bucket).
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_and_grads(
+        &self,
+        b: &dyn Backend,
+        x: &Value,
+        labels: &Value,
+        mask: &Value,
+        bufs: &GraphBufs,
+        engine: &mut RscEngine,
+        step: u64,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+        fwd_sel: Option<&[Selection]>,
+    ) -> Result<(f32, Vec<Value>)> {
+        let input = self.graph.input;
+        let v_rows = x.shape()[0];
+        let mut tape = self.forward(b, x, bufs, fwd_sel, tb, ws)?;
+
+        // loss + dL/dlogits
+        let loss_out = {
+            let logits = tape.val(x, input, self.graph.output);
+            tb.scope("loss", || {
+                b.run_ctx(
+                    &self.names.loss(self.multilabel),
+                    &[logits, labels, mask],
+                    ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                )
+            })?
+        };
+        let loss = loss_out[0].item_f32()?;
+        let mut it = loss_out.into_iter();
+        ws.recycle(it.next().unwrap());
+        let g_logits = it.next().unwrap();
+
+        // forward values never read by a backward op retire now
+        for s in 0..self.graph.n_slots {
+            if self.last_use[s].is_none() {
+                if let Some(v) = tape.take(s) {
+                    ws.recycle(v);
+                }
+            }
+        }
+
+        let mut grads: Vec<Option<Value>> = (0..self.graph.n_slots).map(|_| None).collect();
+        grads[self.graph.output] = Some(g_logits);
+        let mut pgrads: Vec<Option<Value>> = (0..self.graph.params.len()).map(|_| None).collect();
+
+        for i in (0..self.graph.nodes.len()).rev() {
+            let node = &self.graph.nodes[i];
+            let g = grads[node.outputs[0]].take().expect("output grad is live");
+            self.backward_node(
+                node, g, b, x, bufs, engine, step, tb, ws, &tape, &mut grads, &mut pgrads,
+                v_rows,
+            )?;
+            // liveness-driven recycling of retired forward values
+            for s in 0..self.graph.n_slots {
+                if self.last_use[s] == Some(i) {
+                    if let Some(v) = tape.take(s) {
+                        ws.recycle(v);
+                    }
+                }
+            }
+        }
+
+        // defensive: nothing should be left, but never leak pool capacity
+        ws.recycle_all(tape.slots.into_iter().flatten());
+        ws.recycle_all(grads.into_iter().flatten());
+        let grads: Vec<Value> = pgrads
+            .into_iter()
+            .map(|g| g.expect("every param received a gradient"))
+            .collect();
+        Ok((loss, grads))
+    }
+
+    /// One training step: forward, loss, RSC-planned backward, Adam.
+    /// Returns the (masked mean) training loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        b: &dyn Backend,
+        x: &Value,
+        labels: &Value,
+        mask: &Value,
+        bufs: &GraphBufs,
+        engine: &mut RscEngine,
+        step: u64,
+        lr: f32,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+        fwd_sel: Option<&[Selection]>,
+    ) -> Result<f32> {
+        let (loss, grads) = self.loss_and_grads(
+            b, x, labels, mask, bufs, engine, step, tb, ws, fwd_sel,
+        )?;
+        tb.scope("adam", || self.params.adam_all(b, grads, lr, Some(&mut *ws)))?;
+        Ok(loss)
+    }
+
+    /// Route one gradient contribution into `slot`.  Single-contribution
+    /// slots take it directly; fan-in slots accumulate through an
+    /// explicitly zeroed buffer and the `add_{d}` op — the exact scheme
+    /// (and op sequence) the hand-written GCNII backward used, so the
+    /// `0 + x` first add is preserved bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    fn contribute(
+        &self,
+        b: &dyn Backend,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+        grads: &mut [Option<Value>],
+        slot: Slot,
+        val: Value,
+        v_rows: usize,
+    ) -> Result<()> {
+        if self.contribs[slot] <= 1 {
+            grads[slot] = Some(val);
+            return Ok(());
+        }
+        let d = self.graph.slot_width[slot];
+        let acc = match grads[slot].take() {
+            Some(a) => a,
+            None => Value::mat_f32(v_rows, d, ws.take_zeroed_f32(v_rows * d)),
+        };
+        let out = tb.scope("bwd_dense", || {
+            b.run_ctx(
+                &self.names.add(d),
+                &[&acc, &val],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+            )
+        })?;
+        grads[slot] = Some(out.into_iter().next().unwrap());
+        ws.recycle(acc);
+        ws.recycle(val);
+        Ok(())
+    }
+
+    /// Observe gradient row-norms for `site` if the engine wants them
+    /// this step (always *before* the site's plan call, like the legacy
+    /// backward passes).
+    #[allow(clippy::too_many_arguments)]
+    fn observe_site_norms(
+        &self,
+        b: &dyn Backend,
+        engine: &mut RscEngine,
+        step: u64,
+        site: usize,
+        g: &Value,
+        d: usize,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        if !engine.norms_wanted(step) {
+            return Ok(());
+        }
+        let norms = tb.scope("norms", || {
+            b.run_ctx(
+                &self.names.row_norms(d),
+                &[g],
+                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+            )
+        })?;
+        engine.observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
+        Ok(())
+    }
+
+    /// Apply one node's VJP rule: consume the gradient of its primary
+    /// output, emit parameter gradients and input contributions.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_node(
+        &self,
+        node: &Node,
+        g: Value,
+        b: &dyn Backend,
+        x: &Value,
+        bufs: &GraphBufs,
+        engine: &mut RscEngine,
+        step: u64,
+        tb: &mut TimeBook,
+        ws: &mut Workspace,
+        tape: &Tape,
+        grads: &mut [Option<Value>],
+        pgrads: &mut [Option<Value>],
+        v_rows: usize,
+    ) -> Result<()> {
+        let input = self.graph.input;
+        match node.op {
+            NodeOp::Gcn { din, dout, relu } => {
+                let site = node.site.expect("gcn nodes are always sites");
+                self.observe_site_norms(b, engine, step, site, &g, dout, tb, ws)?;
+                let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
+                let gj = tb.scope("bwd_spmm", || -> Result<Vec<Value>> {
+                    if relu {
+                        let h_out = tape.val(x, input, node.outputs[0]);
+                        b.run_ctx(
+                            &self.names.spmm_bwd_mask(dout, cap),
+                            &[h_out, &g, &ev.0, &ev.1, &ev.2],
+                            ExecCtx {
+                                tags: &[0, 0, t, t + 1, t + 2],
+                                plan: sp.as_deref(),
+                                ws: Some(&mut *ws),
+                            },
+                        )
+                    } else {
+                        b.run_ctx(
+                            &self.names.spmm_bwd_nomask(dout, cap),
+                            &[&g, &ev.0, &ev.1, &ev.2],
+                            ExecCtx {
+                                tags: &[0, t, t + 1, t + 2],
+                                plan: sp.as_deref(),
+                                ws: Some(&mut *ws),
+                            },
+                        )
+                    }
+                })?;
+                let gj = gj.into_iter().next().unwrap();
+                let mm = {
+                    let h_in = tape.val(x, input, node.inputs[0]);
+                    tb.scope("bwd_dense", || {
+                        b.run_ctx(
+                            &self.names.gcn_bwd_mm(din, dout),
+                            &[h_in, &gj, self.params.get(node.params[0]).value()],
+                            ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                        )
+                    })?
+                };
+                ws.recycle(gj);
+                let mut it = mm.into_iter();
+                pgrads[node.params[0]] = Some(it.next().unwrap());
+                let gh = it.next().unwrap();
+                if node.inputs[0] != input {
+                    self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
+                } else {
+                    ws.recycle(gh);
+                }
+                ws.recycle(g);
+            }
+            NodeOp::Sage { din, dout, relu } => {
+                let masked = relu;
+                let w1 = self.params.get(node.params[0]).value();
+                let w2 = self.params.get(node.params[1]).value();
+                let out = {
+                    let h_in = tape.val(x, input, node.inputs[0]);
+                    let m = tape.val(x, input, node.outputs[1]);
+                    let h_out = masked.then(|| tape.val(x, input, node.outputs[0]));
+                    let op = self.names.sage_bwd_pre(din, dout, masked);
+                    tb.scope("bwd_dense", || {
+                        let inputs: Vec<&Value> = match h_out {
+                            Some(h_out) => vec![h_out, &g, h_in, m, w1, w2],
+                            None => vec![&g, h_in, m, w1, w2],
+                        };
+                        b.run_ctx(
+                            &op,
+                            &inputs,
+                            ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                        )
+                    })?
+                };
+                let mut it = out.into_iter();
+                pgrads[node.params[0]] = Some(it.next().unwrap());
+                pgrads[node.params[1]] = Some(it.next().unwrap());
+                let gm = it.next().unwrap();
+                let gh_a = it.next().unwrap();
+                if let Some(site) = node.site {
+                    self.observe_site_norms(b, engine, step, site, &gm, din, tb, ws)?;
+                    let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
+                    let out = tb.scope("bwd_spmm", || {
+                        b.run_ctx(
+                            &self.names.spmm_bwd_acc(din, cap),
+                            &[&gh_a, &gm, &ev.0, &ev.1, &ev.2],
+                            ExecCtx {
+                                tags: &[0, 0, t, t + 1, t + 2],
+                                plan: sp.as_deref(),
+                                ws: Some(&mut *ws),
+                            },
+                        )
+                    })?;
+                    let gh = out.into_iter().next().unwrap();
+                    self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
+                }
+                ws.recycle_all([gm, gh_a]);
+                ws.recycle(g);
+            }
+            NodeOp::GcniiProp { layer, d } => {
+                let wl = self.params.get(node.params[0]).value();
+                let out = {
+                    let h_out = tape.val(x, input, node.outputs[0]);
+                    let u = tape.val(x, input, node.outputs[1]);
+                    tb.scope("bwd_dense", || {
+                        b.run_ctx(
+                            &self.names.gcnii_bwd_pre(d, layer),
+                            &[h_out, &g, u, wl],
+                            ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                        )
+                    })?
+                };
+                let mut it = out.into_iter();
+                pgrads[node.params[0]] = Some(it.next().unwrap());
+                let gp = it.next().unwrap();
+                let gh0c = it.next().unwrap();
+                self.contribute(b, tb, ws, grads, node.inputs[1], gh0c, v_rows)?;
+                if let Some(site) = node.site {
+                    self.observe_site_norms(b, engine, step, site, &gp, d, tb, ws)?;
+                    let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
+                    let out = tb.scope("bwd_spmm", || {
+                        b.run_ctx(
+                            &self.names.spmm_bwd_nomask(d, cap),
+                            &[&gp, &ev.0, &ev.1, &ev.2],
+                            ExecCtx {
+                                tags: &[0, t, t + 1, t + 2],
+                                plan: sp.as_deref(),
+                                ws: Some(&mut *ws),
+                            },
+                        )
+                    })?;
+                    ws.recycle(gp);
+                    let gh = out.into_iter().next().unwrap();
+                    self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
+                } else {
+                    ws.recycle(gp);
+                }
+                ws.recycle(g);
+            }
+            NodeOp::AppnpProp { d } => {
+                let out = tb.scope("bwd_dense", || {
+                    b.run_ctx(
+                        &self.names.appnp_bwd_pre(d),
+                        &[&g],
+                        ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                    )
+                })?;
+                ws.recycle(g);
+                let mut it = out.into_iter();
+                let gp = it.next().unwrap();
+                let gh0c = it.next().unwrap();
+                self.contribute(b, tb, ws, grads, node.inputs[1], gh0c, v_rows)?;
+                if let Some(site) = node.site {
+                    self.observe_site_norms(b, engine, step, site, &gp, d, tb, ws)?;
+                    let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
+                    let out = tb.scope("bwd_spmm", || {
+                        b.run_ctx(
+                            &self.names.spmm_bwd_nomask(d, cap),
+                            &[&gp, &ev.0, &ev.1, &ev.2],
+                            ExecCtx {
+                                tags: &[0, t, t + 1, t + 2],
+                                plan: sp.as_deref(),
+                                ws: Some(&mut *ws),
+                            },
+                        )
+                    })?;
+                    ws.recycle(gp);
+                    let gh = out.into_iter().next().unwrap();
+                    self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
+                } else {
+                    ws.recycle(gp);
+                }
+            }
+            NodeOp::Dense { din, dout, relu } => {
+                let w = self.params.get(node.params[0]).value();
+                let out = {
+                    let x_in = tape.val(x, input, node.inputs[0]);
+                    let op = self.names.dense_bwd(din, dout, relu);
+                    tb.scope("bwd_dense", || {
+                        if relu {
+                            let h_out = tape.val(x, input, node.outputs[0]);
+                            b.run_ctx(
+                                &op,
+                                &[x_in, h_out, &g, w],
+                                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                            )
+                        } else {
+                            b.run_ctx(
+                                &op,
+                                &[x_in, &g, w],
+                                ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
+                            )
+                        }
+                    })?
+                };
+                ws.recycle(g);
+                let mut it = out.into_iter();
+                pgrads[node.params[0]] = Some(it.next().unwrap());
+                let gx = it.next().unwrap();
+                if node.inputs[0] != input {
+                    self.contribute(b, tb, ws, grads, node.inputs[0], gx, v_rows)?;
+                } else {
+                    ws.recycle(gx);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Resolve the engine plan into (bucket cap, borrowed edge Values,
+/// immutability tag, cached SpMM plan).  The edge Values stay borrowed
+/// from the engine's cached selection — no per-call cloning; the SpMM
+/// plan is `None` under the `--no-plan-cache` ablation.  (The engine
+/// owns the matrix and bucket ladder since the prefetch pipeline: its
+/// background builds need them independent of the caller's borrow.)
+pub(crate) fn plan_edges<'a>(
+    engine: &'a mut RscEngine,
+    site: usize,
+    step: u64,
+    exact: &'a Selection,
+) -> (usize, &'a (Value, Value, Value), u64, Option<Arc<SpmmPlan>>) {
+    let par = engine.parallelism();
+    let plan_cache = engine.cfg.plan_cache;
+    let plan = engine.plan(site, step, exact);
+    let sel = plan.selection();
+    if std::env::var_os("RSC_DEBUG_PLAN").is_some() {
+        eprintln!(
+            "step {step} site {site}: {} cap {} nnz {}",
+            if plan.is_approx() { "approx" } else { "exact" },
+            sel.cap,
+            sel.nnz
+        );
+    }
+    let spmm_plan = if plan_cache { Some(sel.spmm_plan(par)) } else { None };
+    (sel.cap, &sel.vals, sel.tag, spmm_plan)
+}

@@ -1,0 +1,497 @@
+//! The declarative layer-graph IR.
+//!
+//! A [`LayerGraph`] makes a model's compute structure *explicit*: nodes
+//! are catalog ops (the same fused executables `python/compile/model.py`
+//! emits) wired through value slots, with every parameter, every sparse
+//! aggregation and every RSC sampling site visible as data instead of
+//! being implied by a hand-written forward/backward body.  The tape
+//! executor in [`crate::model::exec`] runs the graph forward, records the
+//! produced values, and derives the backward pass from the per-node VJP
+//! rules — so site discovery, plan caching, workspace recycling and
+//! engine wiring are properties of *one* executor rather than
+//! conventions each architecture re-implements.
+//!
+//! # Sampling-site discovery
+//!
+//! A node owns an RSC sampling site exactly when its backward pass must
+//! run an SpMM against the transposed adjacency (the op family RSC
+//! approximates, paper Section 3.1):
+//!
+//! * [`NodeOp::Gcn`] — the aggregation sits between the weights and the
+//!   output (`spmm(A, H W)`), so even the weight gradient needs the
+//!   transposed SpMM: always a site;
+//! * [`NodeOp::Sage`] / [`NodeOp::GcniiProp`] / [`NodeOp::AppnpProp`] —
+//!   the aggregation feeds only the layer *input*, so the site exists iff
+//!   that input's gradient is needed at all (this is how SAGE layer 1
+//!   loses its site — Appendix A.3 — without any per-model special case);
+//! * [`NodeOp::Dense`] — never.
+//!
+//! Sites are numbered in forward node order, which reproduces the
+//! hand-written models' numbering (site 0 = first layer) and therefore
+//! the engine's contract that site 0 is planned *last* each backward.
+//! [`LayerGraph::site_widths`] is what the trainer hands to
+//! [`crate::coordinator::RscEngine`] — the engine and the executor see
+//! the same auto-discovered site list for any model.
+//!
+//! # Gradient fan-in and liveness
+//!
+//! [`LayerGraph::grad_contribs`] counts, per slot, how many gradient
+//! contributions arrive during backward.  Slots with one contribution
+//! receive it directly; slots with more (GCNII's and APPNP's shared
+//! `H0`) get an explicitly zeroed accumulator and one `add_{d}` op per
+//! contribution — bit-for-bit the scheme the hand-written GCNII backward
+//! used.  [`LayerGraph::backward_last_use`] computes when each recorded
+//! forward value dies (the last backward op that reads it), which is
+//! what lets the executor recycle retired activations by *liveness*
+//! instead of hand-placed `ws.recycle` calls.
+
+use crate::data::DatasetCfg;
+use crate::model::ops::ModelKind;
+
+/// Index of a value slot in the graph (slot [`LayerGraph::input`] is the
+/// caller-borrowed feature matrix; every other slot is produced by
+/// exactly one node).
+pub type Slot = usize;
+
+/// One catalog-op node kind.  Dimensions are baked in so op names can be
+/// derived without consulting the dataset config again.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeOp {
+    /// `h' = act(spmm(A, h W))` — the fused GCN layer.  Also serves GIN:
+    /// with a linear per-layer "MLP" the transform and the sum
+    /// aggregation commute (`A (H W) = (A H) W`), so GIN is this node
+    /// over the sum matrix `A + (1+eps) I` (see [`crate::graph::Csr::
+    /// gin_normalize`]).
+    Gcn { din: usize, dout: usize, relu: bool },
+    /// `h' = act(h W1 + spmm(A_mean, h) W2)`; also emits the aggregated
+    /// mean `m` (saved for backward).
+    Sage { din: usize, dout: usize, relu: bool },
+    /// GCNII propagation layer `layer` (1-based):
+    /// `h' = relu(((1-a) spmm(A,h) + a h0)((1-b_l)I + b_l W))`; also
+    /// emits the pre-mapping residual mix `u`.
+    GcniiProp { layer: usize, d: usize },
+    /// APPNP power-iteration step: `z' = (1-a) spmm(A, z) + a h0`
+    /// (no weights, no nonlinearity).
+    AppnpProp { d: usize },
+    /// `h' = act(x W)` — dense projection.
+    Dense { din: usize, dout: usize, relu: bool },
+}
+
+impl NodeOp {
+    /// Does this node aggregate over the graph in its forward pass?
+    pub fn is_sparse(&self) -> bool {
+        !matches!(self, NodeOp::Dense { .. })
+    }
+
+    /// Does this node's backward run an (approximable) transposed SpMM,
+    /// given whether its primary input requires a gradient?  See the
+    /// module docs for the per-kind rationale.
+    fn backward_spmm(&self, input_needs_grad: bool) -> bool {
+        match self {
+            NodeOp::Gcn { .. } => true,
+            NodeOp::Sage { .. } | NodeOp::GcniiProp { .. } | NodeOp::AppnpProp { .. } => {
+                input_needs_grad
+            }
+            NodeOp::Dense { .. } => false,
+        }
+    }
+
+    /// Width of the gradient entering this node's backward SpMM (the
+    /// allocator's cost-model `d_l`).
+    fn site_width(&self) -> usize {
+        match *self {
+            NodeOp::Gcn { dout, .. } => dout,
+            NodeOp::Sage { din, .. } => din,
+            NodeOp::GcniiProp { d, .. } => d,
+            NodeOp::AppnpProp { d } => d,
+            NodeOp::Dense { .. } => 0,
+        }
+    }
+}
+
+/// One node: a catalog op with its value slots, parameters and (if
+/// discovered) RSC sampling site.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: NodeOp,
+    /// Dense input slots; `inputs[0]` is the primary (differentiated)
+    /// input, `inputs[1]` the residual anchor for GCNII/APPNP.
+    pub inputs: Vec<Slot>,
+    /// Output slots; `outputs[0]` is the main activation, `outputs[1]`
+    /// the saved auxiliary (SAGE's `m`, GCNII's `u`).
+    pub outputs: Vec<Slot>,
+    /// Indices into the model's `ParamSet`, in the op's operand order.
+    pub params: Vec<usize>,
+    /// Auto-discovered RSC sampling site (None = no backward SpMM).
+    pub site: Option<usize>,
+}
+
+/// Parameter metadata in `ParamSet` order (the executor initializes the
+/// actual `Param`s from this, preserving the legacy glorot/rng order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// One auto-discovered RSC sampling site.
+#[derive(Debug, Clone, Copy)]
+pub struct SiteSpec {
+    /// Node that owns the site.
+    pub node: usize,
+    /// Gradient width at the site (allocator cost model).
+    pub width: usize,
+}
+
+/// A model as data: nodes in forward (topological) order plus slot,
+/// parameter and site tables.
+#[derive(Debug, Clone)]
+pub struct LayerGraph {
+    pub kind: ModelKind,
+    pub nodes: Vec<Node>,
+    /// The feature-matrix slot (caller-borrowed; never produced).
+    pub input: Slot,
+    /// The logits slot (read by the loss; consumed by no node).
+    pub output: Slot,
+    pub n_slots: usize,
+    /// Feature width (columns) per slot; rows are always |V|.
+    pub slot_width: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    /// Sites in forward order (site id == index).
+    pub sites: Vec<SiteSpec>,
+}
+
+/// Internal builder: slots/params/nodes with site discovery at `finish`.
+struct Builder {
+    nodes: Vec<Node>,
+    slot_width: Vec<usize>,
+    params: Vec<ParamSpec>,
+}
+
+impl Builder {
+    fn new() -> Builder {
+        Builder { nodes: Vec::new(), slot_width: Vec::new(), params: Vec::new() }
+    }
+
+    fn slot(&mut self, width: usize) -> Slot {
+        self.slot_width.push(width);
+        self.slot_width.len() - 1
+    }
+
+    fn param(&mut self, name: &str, rows: usize, cols: usize) -> usize {
+        self.params.push(ParamSpec { name: name.to_string(), rows, cols });
+        self.params.len() - 1
+    }
+
+    fn node(&mut self, op: NodeOp, inputs: Vec<Slot>, outputs: Vec<Slot>, params: Vec<usize>) {
+        self.nodes.push(Node { op, inputs, outputs, params, site: None });
+    }
+
+    fn finish(mut self, kind: ModelKind, input: Slot, output: Slot) -> LayerGraph {
+        // site discovery: forward order, one id per backward-SpMM node
+        let mut sites = Vec::new();
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            let input_needs_grad = node.inputs[0] != input;
+            if node.op.backward_spmm(input_needs_grad) {
+                node.site = Some(sites.len());
+                sites.push(SiteSpec { node: i, width: node.op.site_width() });
+            }
+        }
+        let n_slots = self.slot_width.len();
+        LayerGraph {
+            kind,
+            nodes: self.nodes,
+            input,
+            output,
+            n_slots,
+            slot_width: self.slot_width,
+            params: self.params,
+            sites,
+        }
+    }
+}
+
+impl LayerGraph {
+    /// Build the graph for `kind` on `cfg`'s dimensions.  This is the
+    /// *entire* per-architecture cost: every model below is a pure graph
+    /// definition, executed by the one tape executor.
+    pub fn for_model(kind: ModelKind, cfg: &DatasetCfg) -> LayerGraph {
+        match kind {
+            ModelKind::Gcn | ModelKind::Gin => Self::gcn_like(kind, cfg),
+            ModelKind::Sage | ModelKind::Saint => Self::sage(kind, cfg),
+            ModelKind::Gcnii => Self::gcnii(cfg),
+            ModelKind::Appnp => Self::appnp(cfg),
+        }
+    }
+
+    /// Per-layer hidden dims `[d_in, d_h, ..., d_h, n_class]`.
+    fn dims(cfg: &DatasetCfg) -> Vec<usize> {
+        let mut dims = vec![cfg.d_in];
+        dims.extend(std::iter::repeat(cfg.d_h).take(cfg.layers - 1));
+        dims.push(cfg.n_class);
+        dims
+    }
+
+    /// GCN — and GIN, which differs only in the aggregation matrix (sum
+    /// with the `(1+eps)` self term folded into the self-loop weight).
+    fn gcn_like(kind: ModelKind, cfg: &DatasetCfg) -> LayerGraph {
+        let dims = Self::dims(cfg);
+        let mut b = Builder::new();
+        let x = b.slot(cfg.d_in);
+        let mut h = x;
+        for l in 0..cfg.layers {
+            let relu = l < cfg.layers - 1;
+            let w = b.param(&format!("w{l}"), dims[l], dims[l + 1]);
+            let out = b.slot(dims[l + 1]);
+            b.node(
+                NodeOp::Gcn { din: dims[l], dout: dims[l + 1], relu },
+                vec![h],
+                vec![out],
+                vec![w],
+            );
+            h = out;
+        }
+        b.finish(kind, x, h)
+    }
+
+    /// GraphSAGE (MEAN); also the GraphSAINT backbone (same graph, the
+    /// `saint_` op-name prefix is an executor concern).
+    fn sage(kind: ModelKind, cfg: &DatasetCfg) -> LayerGraph {
+        let dims = Self::dims(cfg);
+        let mut b = Builder::new();
+        let x = b.slot(cfg.d_in);
+        let mut h = x;
+        for l in 0..cfg.layers {
+            let relu = l < cfg.layers - 1;
+            let w1 = b.param(&format!("w1_{l}"), dims[l], dims[l + 1]);
+            let w2 = b.param(&format!("w2_{l}"), dims[l], dims[l + 1]);
+            let out = b.slot(dims[l + 1]);
+            let m = b.slot(dims[l]);
+            b.node(
+                NodeOp::Sage { din: dims[l], dout: dims[l + 1], relu },
+                vec![h],
+                vec![out, m],
+                vec![w1, w2],
+            );
+            h = out;
+        }
+        b.finish(kind, x, h)
+    }
+
+    /// GCNII: dense in-projection, `gcnii_layers` propagation layers with
+    /// the shared initial-residual anchor `h0`, dense out-projection.
+    fn gcnii(cfg: &DatasetCfg) -> LayerGraph {
+        let (d_in, d_h, c) = (cfg.d_in, cfg.d_h, cfg.n_class);
+        let mut b = Builder::new();
+        let x = b.slot(d_in);
+        let w_in = b.param("w_in", d_in, d_h);
+        let h0 = b.slot(d_h);
+        b.node(NodeOp::Dense { din: d_in, dout: d_h, relu: true }, vec![x], vec![h0], vec![w_in]);
+        let mut h = h0;
+        for l in 1..=cfg.gcnii_layers {
+            let wl = b.param(&format!("w{l}"), d_h, d_h);
+            let out = b.slot(d_h);
+            let u = b.slot(d_h);
+            b.node(NodeOp::GcniiProp { layer: l, d: d_h }, vec![h, h0], vec![out, u], vec![wl]);
+            h = out;
+        }
+        let w_out = b.param("w_out", d_h, c);
+        let logits = b.slot(c);
+        let out_proj = NodeOp::Dense { din: d_h, dout: c, relu: false };
+        b.node(out_proj, vec![h], vec![logits], vec![w_out]);
+        b.finish(ModelKind::Gcnii, x, logits)
+    }
+
+    /// APPNP: predict-then-propagate.  A two-layer MLP produces `h0` at
+    /// class width, then `appnp_layers` weight-free propagation steps —
+    /// every one of them a sampling site, the deep-propagation shape the
+    /// allocator ablations want.
+    fn appnp(cfg: &DatasetCfg) -> LayerGraph {
+        let (d_in, d_h, c) = (cfg.d_in, cfg.d_h, cfg.n_class);
+        let mut b = Builder::new();
+        let x = b.slot(d_in);
+        let w_in = b.param("w_in", d_in, d_h);
+        let h = b.slot(d_h);
+        b.node(NodeOp::Dense { din: d_in, dout: d_h, relu: true }, vec![x], vec![h], vec![w_in]);
+        let w_out = b.param("w_out", d_h, c);
+        let h0 = b.slot(c);
+        b.node(NodeOp::Dense { din: d_h, dout: c, relu: false }, vec![h], vec![h0], vec![w_out]);
+        let mut z = h0;
+        for _ in 0..cfg.appnp_layers {
+            let out = b.slot(c);
+            b.node(NodeOp::AppnpProp { d: c }, vec![z, h0], vec![out], vec![]);
+            z = out;
+        }
+        b.finish(ModelKind::Appnp, x, z)
+    }
+
+    /// Gradient widths per site, in site order — what the trainer hands
+    /// to [`crate::coordinator::RscEngine::new`] so the engine and the
+    /// executor agree on the site list for any model.
+    pub fn site_widths(&self) -> Vec<usize> {
+        self.sites.iter().map(|s| s.width).collect()
+    }
+
+    /// Number of gradient contributions each slot receives during
+    /// backward.  `> 1` means the executor uses the zeroed-accumulator +
+    /// `add` scheme (GCNII/APPNP `h0`); exactly `1` is a direct move.
+    pub fn grad_contribs(&self) -> Vec<usize> {
+        let mut n = vec![0usize; self.n_slots];
+        for node in &self.nodes {
+            let primary = node.inputs[0];
+            match node.op {
+                NodeOp::Gcn { .. } | NodeOp::Dense { .. } | NodeOp::Sage { .. } => {
+                    if primary != self.input {
+                        n[primary] += 1;
+                    }
+                }
+                NodeOp::GcniiProp { .. } | NodeOp::AppnpProp { .. } => {
+                    let anchor = node.inputs[1];
+                    if anchor != self.input {
+                        n[anchor] += 1;
+                    }
+                    if primary != self.input {
+                        n[primary] += 1;
+                    }
+                }
+            }
+        }
+        n
+    }
+
+    /// For each slot, the node index after whose *backward* the recorded
+    /// forward value is dead (its last backward reader).  `None` = no
+    /// backward op reads it — recyclable right after the loss.  This is
+    /// the liveness that replaces hand-placed `ws.recycle` calls.
+    pub fn backward_last_use(&self) -> Vec<Option<usize>> {
+        let mut last: Vec<Option<usize>> = vec![None; self.n_slots];
+        // processing order is descending node index, so the *last* reader
+        // to run is the one with the smallest index
+        let read = |slot: Slot, node: usize, lu: &mut Vec<Option<usize>>| {
+            if slot == self.input {
+                return; // caller-borrowed; never recycled
+            }
+            lu[slot] = Some(match lu[slot] {
+                None => node,
+                Some(prev) => prev.min(node),
+            });
+        };
+        for (i, node) in self.nodes.iter().enumerate() {
+            match node.op {
+                NodeOp::Gcn { relu, .. } => {
+                    if relu {
+                        read(node.outputs[0], i, &mut last); // relu mask
+                    }
+                    read(node.inputs[0], i, &mut last); // gcn_bwd_mm h_in
+                }
+                NodeOp::Sage { relu, .. } => {
+                    if relu {
+                        read(node.outputs[0], i, &mut last); // relu mask
+                    }
+                    read(node.outputs[1], i, &mut last); // m
+                    read(node.inputs[0], i, &mut last); // sage_bwd_pre h
+                }
+                NodeOp::GcniiProp { .. } => {
+                    read(node.outputs[0], i, &mut last); // relu mask
+                    read(node.outputs[1], i, &mut last); // u
+                }
+                NodeOp::AppnpProp { .. } => {} // backward reads no forward value
+                NodeOp::Dense { relu, .. } => {
+                    if relu {
+                        read(node.outputs[0], i, &mut last); // relu mask
+                    }
+                    read(node.inputs[0], i, &mut last); // dense_bwd x
+                }
+            }
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DatasetCfg {
+        crate::data::dataset_cfg("tiny").unwrap()
+    }
+
+    #[test]
+    fn site_discovery_matches_legacy_numbering() {
+        let c = cfg();
+        // GCN: every layer is a site, widths = per-layer dout
+        let g = LayerGraph::for_model(ModelKind::Gcn, &c);
+        assert_eq!(g.site_widths(), vec![c.d_h, c.d_h, c.n_class]);
+        // SAGE: layer 0's input needs no grad -> layers-1 sites at d_h
+        let s = LayerGraph::for_model(ModelKind::Sage, &c);
+        assert_eq!(s.site_widths(), vec![c.d_h; c.layers - 1]);
+        assert!(s.nodes[0].site.is_none(), "sage layer 0 must not be a site");
+        assert_eq!(s.nodes[1].site, Some(0));
+        // GCNII: one site per propagation layer
+        let g2 = LayerGraph::for_model(ModelKind::Gcnii, &c);
+        assert_eq!(g2.site_widths(), vec![c.d_h; c.gcnii_layers]);
+        // GIN rides the GCN graph; APPNP has one site per power step
+        let gin = LayerGraph::for_model(ModelKind::Gin, &c);
+        assert_eq!(gin.site_widths().len(), c.layers);
+        let ap = LayerGraph::for_model(ModelKind::Appnp, &c);
+        assert_eq!(ap.site_widths(), vec![c.n_class; c.appnp_layers]);
+        // SAINT = the sage graph
+        let st = LayerGraph::for_model(ModelKind::Saint, &c);
+        assert_eq!(st.site_widths(), s.site_widths());
+    }
+
+    #[test]
+    fn shared_anchor_fans_in_and_chains_do_not() {
+        let c = cfg();
+        let g2 = LayerGraph::for_model(ModelKind::Gcnii, &c);
+        let contribs = g2.grad_contribs();
+        let h0 = g2.nodes[0].outputs[0];
+        // every prop layer's residual + layer 1's spmm grad
+        assert_eq!(contribs[h0], c.gcnii_layers + 1);
+        // chain activations get exactly one contribution
+        let act1 = g2.nodes[1].outputs[0];
+        assert_eq!(contribs[act1], 1);
+        let ap = LayerGraph::for_model(ModelKind::Appnp, &c);
+        let h0 = ap.nodes[1].outputs[0];
+        assert_eq!(ap.grad_contribs()[h0], c.appnp_layers + 1);
+        // GCN/SAGE have no fan-in at all
+        for kind in [ModelKind::Gcn, ModelKind::Sage] {
+            let g = LayerGraph::for_model(kind, &c);
+            assert!(g.grad_contribs().iter().all(|&n| n <= 1), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn liveness_frees_unread_activations_at_loss() {
+        let c = cfg();
+        let ap = LayerGraph::for_model(ModelKind::Appnp, &c);
+        let last = ap.backward_last_use();
+        // APPNP z-chain values are never read by any backward op
+        let z1 = ap.nodes[2].outputs[0];
+        assert!(last[z1].is_none());
+        assert!(last[ap.output].is_none());
+        // the MLP hidden activation dies at the relu projection's backward
+        let h = ap.nodes[0].outputs[0];
+        assert_eq!(last[h], Some(0));
+        // GCN: hs[l] is read by bwd(l) (mask) after bwd(l+1) (h_in)
+        let g = LayerGraph::for_model(ModelKind::Gcn, &c);
+        let h1 = g.nodes[0].outputs[0];
+        assert_eq!(g.backward_last_use()[h1], Some(0));
+        // the input slot is never tracked
+        assert!(g.backward_last_use()[g.input].is_none());
+    }
+
+    #[test]
+    fn param_specs_preserve_legacy_order_and_names() {
+        let c = cfg();
+        let s = LayerGraph::for_model(ModelKind::Sage, &c);
+        let names: Vec<&str> = s.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["w1_0", "w2_0", "w1_1", "w2_1", "w1_2", "w2_2"]);
+        let g2 = LayerGraph::for_model(ModelKind::Gcnii, &c);
+        let names: Vec<&str> = g2.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["w_in", "w1", "w2", "w3", "w4", "w_out"]);
+        assert_eq!(g2.params[0].rows, c.d_in);
+        assert_eq!(g2.params.last().unwrap().cols, c.n_class);
+    }
+}

@@ -1,16 +1,21 @@
-//! Model layer: parameter storage, op-name mapping onto the AOT catalog,
-//! and the manual per-op forward/backward orchestration for GCN,
-//! GraphSAGE (MEAN) and GCNII.
+//! Model layer: the declarative layer-graph IR, the tape-driven executor
+//! that derives every forward/backward from it, parameter storage, and
+//! the op-name mapping onto the AOT catalog.
 //!
-//! Backward passes route every SpMM^T through a [`crate::coordinator`]
-//! plan, which is where RSC's approximation (or the exact path) is
+//! Architectures are *pure graph definitions* ([`graph::LayerGraph::
+//! for_model`]): GCN, GraphSAGE (MEAN), GCNII, GIN and APPNP are each a
+//! few dozen lines of node wiring, executed by the one tape executor in
+//! [`exec`].  Backward passes route every SpMM^T through a
+//! [`crate::coordinator`] plan at the graph's auto-discovered sampling
+//! sites, which is where RSC's approximation (or the exact path) is
 //! decided — the models themselves are policy-free.
 
-pub mod gcn;
-pub mod gcnii;
+pub mod exec;
+pub mod graph;
 pub mod ops;
 pub mod params;
-pub mod sage;
 
+pub use exec::GraphModel;
+pub use graph::{LayerGraph, NodeOp, SiteSpec};
 pub use ops::{edge_values, GraphBufs, ModelKind, OpNames};
 pub use params::{Param, ParamSet};

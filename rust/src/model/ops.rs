@@ -17,16 +17,45 @@ pub enum ModelKind {
     Gcn,
     Sage,
     Gcnii,
+    /// GIN with a linear per-layer "MLP": the GCN graph over the sum
+    /// matrix `A + (1+eps) I` (see `Csr::gin_normalize`).
+    Gin,
+    /// APPNP: predict (MLP) then propagate (weight-free power steps).
+    Appnp,
     /// GraphSAINT = SAGE backbone on padded random-walk subgraphs.
     Saint,
 }
 
 impl ModelKind {
+    /// The single model registry: CLI parsing, error text, benches and
+    /// the README table all derive from this list, so it cannot go stale
+    /// as architectures are added.
+    pub const ALL: [ModelKind; 6] = [
+        ModelKind::Gcn,
+        ModelKind::Sage,
+        ModelKind::Gcnii,
+        ModelKind::Gin,
+        ModelKind::Appnp,
+        ModelKind::Saint,
+    ];
+
+    /// Registered full-batch architectures (everything but GraphSAINT's
+    /// mini-batch pipeline) — the model-coverage sweeps iterate this.
+    pub const FULL_BATCH: [ModelKind; 5] = [
+        ModelKind::Gcn,
+        ModelKind::Sage,
+        ModelKind::Gcnii,
+        ModelKind::Gin,
+        ModelKind::Appnp,
+    ];
+
     pub fn parse(s: &str) -> Option<ModelKind> {
         Some(match s {
             "gcn" => ModelKind::Gcn,
             "sage" | "graphsage" => ModelKind::Sage,
             "gcnii" => ModelKind::Gcnii,
+            "gin" => ModelKind::Gin,
+            "appnp" => ModelKind::Appnp,
             "saint" | "graphsaint" => ModelKind::Saint,
             _ => return None,
         })
@@ -37,37 +66,33 @@ impl ModelKind {
             ModelKind::Gcn => "gcn",
             ModelKind::Sage => "sage",
             ModelKind::Gcnii => "gcnii",
+            ModelKind::Gin => "gin",
+            ModelKind::Appnp => "appnp",
             ModelKind::Saint => "saint",
         }
     }
 
-    /// Number of approximable backward-SpMM sites.
-    pub fn n_spmm_bwd(&self, cfg: &DatasetCfg) -> usize {
-        match self {
-            ModelKind::Gcn => cfg.layers,
-            // SAGE layer 1's input needs no grad (Appendix A.3)
-            ModelKind::Sage | ModelKind::Saint => cfg.layers - 1,
-            ModelKind::Gcnii => cfg.gcnii_layers,
-        }
+    /// `"gcn|sage|gcnii|gin|appnp|saint"` — the registry-derived usage
+    /// string for CLI error messages.
+    pub fn usage() -> String {
+        Self::ALL
+            .iter()
+            .map(|m| m.name())
+            .collect::<Vec<_>>()
+            .join("|")
     }
 
-    /// Gradient width at backward-SpMM site `i` (sites ordered from the
-    /// *first* layer upward).
+    /// Number of approximable backward-SpMM sites — enumerated from the
+    /// model's layer graph, so the allocator, the engine and the tape
+    /// executor all see the same auto-discovered site list.
+    pub fn n_spmm_bwd(&self, cfg: &DatasetCfg) -> usize {
+        crate::model::graph::LayerGraph::for_model(*self, cfg).sites.len()
+    }
+
+    /// Gradient width at backward-SpMM site `site` (sites ordered from
+    /// the *first* layer upward) — read off the layer graph.
     pub fn spmm_width(&self, cfg: &DatasetCfg, site: usize) -> usize {
-        match self {
-            // GCN site l processes nabla(H W) of layer l: width = dout_l
-            ModelKind::Gcn => {
-                if site == cfg.layers - 1 {
-                    cfg.n_class
-                } else {
-                    cfg.d_h
-                }
-            }
-            // SAGE sites are layers 1..L: the grad wrt the mean-aggregated
-            // input, width = d_in of the layer = d_h
-            ModelKind::Sage | ModelKind::Saint => cfg.d_h,
-            ModelKind::Gcnii => cfg.d_h,
-        }
+        crate::model::graph::LayerGraph::for_model(*self, cfg).sites[site].width
     }
 }
 
@@ -114,6 +139,16 @@ impl OpNames {
 
     pub fn gcnii_fwd(&self, d: usize, layer1: usize) -> String {
         format!("{}gcnii_fwd_{d}_l{layer1}", self.prefix)
+    }
+
+    /// APPNP power-iteration step (one shared executable for all K steps).
+    pub fn appnp_fwd(&self, d: usize) -> String {
+        format!("{}appnp_fwd_{d}", self.prefix)
+    }
+
+    /// APPNP backward scales: `g -> ((1-a) g, a g)`.
+    pub fn appnp_bwd_pre(&self, d: usize) -> String {
+        format!("{}appnp_bwd_pre_{d}", self.prefix)
     }
 
     pub fn dense_fwd(&self, din: usize, dout: usize, relu: bool) -> String {
@@ -303,11 +338,20 @@ mod tests {
         assert_eq!(ModelKind::Gcn.n_spmm_bwd(&cfg), 3);
         assert_eq!(ModelKind::Sage.n_spmm_bwd(&cfg), 2);
         assert_eq!(ModelKind::Gcnii.n_spmm_bwd(&cfg), 4);
+        assert_eq!(ModelKind::Gin.n_spmm_bwd(&cfg), cfg.layers);
+        assert_eq!(ModelKind::Appnp.n_spmm_bwd(&cfg), cfg.appnp_layers);
         assert_eq!(ModelKind::Gcn.spmm_width(&cfg, 2), cfg.n_class);
         assert_eq!(ModelKind::Gcn.spmm_width(&cfg, 0), cfg.d_h);
         assert_eq!(ModelKind::Sage.spmm_width(&cfg, 1), cfg.d_h);
+        assert_eq!(ModelKind::Appnp.spmm_width(&cfg, 0), cfg.n_class);
         assert!(ModelKind::parse("graphsage") == Some(ModelKind::Sage));
+        assert!(ModelKind::parse("appnp") == Some(ModelKind::Appnp));
         assert!(ModelKind::parse("nope").is_none());
+        // the registry drives the CLI usage text
+        assert_eq!(ModelKind::usage(), "gcn|sage|gcnii|gin|appnp|saint");
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(kind.name()), Some(kind));
+        }
     }
 
     #[test]

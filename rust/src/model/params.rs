@@ -48,6 +48,12 @@ impl Param {
         self.w.f32s().expect("param weights are f32")
     }
 
+    /// Mutable weight slice — the finite-difference gradient checks
+    /// nudge single entries through this.
+    pub fn weights_mut(&mut self) -> &mut [f32] {
+        self.w.f32s_mut().expect("param weights are f32")
+    }
+
     /// Apply one Adam step through the backend op.  `grad` is consumed;
     /// with a workspace, it and the retired w/m/v buffers are recycled.
     pub fn adam_step(
@@ -94,6 +100,10 @@ impl ParamSet {
 
     pub fn get(&self, i: usize) -> &Param {
         &self.params[i]
+    }
+
+    pub fn get_mut(&mut self, i: usize) -> &mut Param {
+        &mut self.params[i]
     }
 
     /// Update every parameter with its gradient (same order as `params`).

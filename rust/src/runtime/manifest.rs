@@ -150,18 +150,20 @@ impl Manifest {
         Ok(Manifest { dataset, ops })
     }
 
-    /// Synthesize the full-batch GCN op catalog for `cfg` directly in
-    /// Rust — no AOT artifacts on disk.  The native backend dispatches
-    /// purely on `meta.kind` plus runtime shapes, so a synthesized
-    /// catalog is executable end to end (training, eval, Adam); only the
-    /// XLA backend needs the HLO files the python pipeline emits.  Used
-    /// by tests, benches and CI environments without `make artifacts`
-    /// (e.g. the prefetch-parity job), mirroring
-    /// `python/compile/model.py::build_catalog`'s GCN subset: fused
-    /// forward per layer, the spmm_bwd_{mask,nomask} family over the
-    /// full bucket ladder, the dense backward pair, row-norms, both
-    /// losses, and Adam per weight shape.
-    pub fn synthesize_full_batch_gcn(cfg: &DatasetCfg) -> Manifest {
+    /// Synthesize the full-batch op catalog for `cfg` directly in Rust —
+    /// no AOT artifacts on disk.  The native backend dispatches purely on
+    /// `meta.kind` plus runtime shapes, so a synthesized catalog is
+    /// executable end to end (training, eval, Adam); only the XLA backend
+    /// needs the HLO files the python pipeline emits.  Used by tests,
+    /// benches and CI environments without `make artifacts` (e.g. the
+    /// prefetch-parity job), mirroring `python/compile/model.py::
+    /// build_catalog`'s full-batch subset for *every* registered
+    /// architecture: the fused per-layer forwards (GCN/SAGE, which also
+    /// serve GIN; the GCNII stack; the APPNP power step), the
+    /// spmm_bwd_{mask,nomask,acc} family over the full bucket ladder,
+    /// the dense backward pieces, add/row-norms, both losses, and Adam
+    /// per weight shape.
+    pub fn synthesize_full_batch(cfg: &DatasetCfg) -> Manifest {
         let v = cfg.v;
         let m = cfg.m();
         let caps = synth_bucket_caps(m);
@@ -173,6 +175,7 @@ impl Manifest {
             dtype: "i32".to_string(),
             shape: shape.to_vec(),
         };
+        let edges = |cap: usize| vec![i32s(&[cap]), i32s(&[cap]), f32s(&[cap])];
         let mut ops: BTreeMap<String, OpDef> = BTreeMap::new();
         let mut emit = |name: String,
                         meta: String,
@@ -191,7 +194,10 @@ impl Manifest {
         let mut dims = vec![cfg.d_in];
         dims.extend(std::iter::repeat(cfg.d_h).take(cfg.layers - 1));
         dims.push(cfg.n_class);
+        let (dh, c) = (cfg.d_h, cfg.n_class);
 
+        // GCN + SAGE per-layer forwards and dense backward pieces (the
+        // gcn_fwd/gcn_bwd_mm pair also serves GIN over the sum matrix)
         for l in 0..cfg.layers {
             let (din, dout) = (dims[l], dims[l + 1]);
             let relu = l < cfg.layers - 1;
@@ -199,14 +205,18 @@ impl Manifest {
             emit(
                 format!("gcn_fwd_{din}x{dout}_{tag}"),
                 format!(r#"{{"kind": "gcn_fwd", "relu": {relu}}}"#),
-                vec![
-                    f32s(&[v, din]),
-                    f32s(&[din, dout]),
-                    i32s(&[m]),
-                    i32s(&[m]),
-                    f32s(&[m]),
-                ],
+                [vec![f32s(&[v, din]), f32s(&[din, dout])], edges(m)].concat(),
                 vec![f32s(&[v, dout])],
+            );
+            emit(
+                format!("sage_fwd_{din}x{dout}_{tag}"),
+                format!(r#"{{"kind": "sage_fwd", "relu": {relu}}}"#),
+                [
+                    vec![f32s(&[v, din]), f32s(&[din, dout]), f32s(&[din, dout])],
+                    edges(m),
+                ]
+                .concat(),
+                vec![f32s(&[v, dout]), f32s(&[v, din])],
             );
             emit(
                 format!("gcn_bwd_mm_{din}x{dout}"),
@@ -214,23 +224,114 @@ impl Manifest {
                 vec![f32s(&[v, din]), f32s(&[v, dout]), f32s(&[din, dout])],
                 vec![f32s(&[din, dout]), f32s(&[v, din])],
             );
+            if relu {
+                emit(
+                    format!("sage_bwd_pre_mask_{din}x{dout}"),
+                    r#"{"kind": "sage_bwd_pre_mask"}"#.to_string(),
+                    vec![
+                        f32s(&[v, dout]),
+                        f32s(&[v, dout]),
+                        f32s(&[v, din]),
+                        f32s(&[v, din]),
+                        f32s(&[din, dout]),
+                        f32s(&[din, dout]),
+                    ],
+                    vec![
+                        f32s(&[din, dout]),
+                        f32s(&[din, dout]),
+                        f32s(&[v, din]),
+                        f32s(&[v, din]),
+                    ],
+                );
+            } else {
+                emit(
+                    format!("sage_bwd_pre_nomask_{din}x{dout}"),
+                    r#"{"kind": "sage_bwd_pre_nomask"}"#.to_string(),
+                    vec![
+                        f32s(&[v, dout]),
+                        f32s(&[v, din]),
+                        f32s(&[v, din]),
+                        f32s(&[din, dout]),
+                        f32s(&[din, dout]),
+                    ],
+                    vec![
+                        f32s(&[din, dout]),
+                        f32s(&[din, dout]),
+                        f32s(&[v, din]),
+                        f32s(&[v, din]),
+                    ],
+                );
+            }
+        }
+
+        // GCNII stack: in/out projections + propagation layers
+        emit(
+            format!("dense_fwd_{}x{dh}_relu", cfg.d_in),
+            r#"{"kind": "dense_fwd", "relu": true}"#.to_string(),
+            vec![f32s(&[v, cfg.d_in]), f32s(&[cfg.d_in, dh])],
+            vec![f32s(&[v, dh])],
+        );
+        emit(
+            format!("dense_fwd_{dh}x{c}_lin"),
+            r#"{"kind": "dense_fwd", "relu": false}"#.to_string(),
+            vec![f32s(&[v, dh]), f32s(&[dh, c])],
+            vec![f32s(&[v, c])],
+        );
+        emit(
+            format!("dense_bwd_mask_{}x{dh}", cfg.d_in),
+            r#"{"kind": "dense_bwd_mask"}"#.to_string(),
+            vec![
+                f32s(&[v, cfg.d_in]),
+                f32s(&[v, dh]),
+                f32s(&[v, dh]),
+                f32s(&[cfg.d_in, dh]),
+            ],
+            vec![f32s(&[cfg.d_in, dh]), f32s(&[v, cfg.d_in])],
+        );
+        emit(
+            format!("dense_bwd_nomask_{dh}x{c}"),
+            r#"{"kind": "dense_bwd_nomask"}"#.to_string(),
+            vec![f32s(&[v, dh]), f32s(&[v, c]), f32s(&[dh, c])],
+            vec![f32s(&[dh, c]), f32s(&[v, dh])],
+        );
+        for l in 1..=cfg.gcnii_layers {
+            let alpha = cfg.gcnii_alpha;
+            let beta = (cfg.gcnii_lambda / l as f32 + 1.0).ln();
             emit(
-                format!("adam_{din}x{dout}"),
-                r#"{"kind": "adam"}"#.to_string(),
-                vec![
-                    f32s(&[din, dout]),
-                    f32s(&[din, dout]),
-                    f32s(&[din, dout]),
-                    f32s(&[din, dout]),
-                    f32s(&[]),
-                    f32s(&[]),
-                ],
-                vec![f32s(&[din, dout]), f32s(&[din, dout]), f32s(&[din, dout])],
+                format!("gcnii_fwd_{dh}_l{l}"),
+                format!(r#"{{"kind": "gcnii_fwd", "alpha": {alpha}, "beta": {beta}}}"#),
+                [
+                    vec![f32s(&[v, dh]), f32s(&[v, dh]), f32s(&[dh, dh])],
+                    edges(m),
+                ]
+                .concat(),
+                vec![f32s(&[v, dh]), f32s(&[v, dh])],
+            );
+            emit(
+                format!("gcnii_bwd_pre_{dh}_l{l}"),
+                format!(r#"{{"kind": "gcnii_bwd_pre", "alpha": {alpha}, "beta": {beta}}}"#),
+                vec![f32s(&[v, dh]), f32s(&[v, dh]), f32s(&[v, dh]), f32s(&[dh, dh])],
+                vec![f32s(&[dh, dh]), f32s(&[v, dh]), f32s(&[v, dh])],
             );
         }
 
+        // APPNP power step + backward scales
+        let ap = cfg.appnp_alpha;
+        emit(
+            format!("appnp_fwd_{c}"),
+            format!(r#"{{"kind": "appnp_fwd", "alpha": {ap}}}"#),
+            [vec![f32s(&[v, c]), f32s(&[v, c])], edges(m)].concat(),
+            vec![f32s(&[v, c])],
+        );
+        emit(
+            format!("appnp_bwd_pre_{c}"),
+            format!(r#"{{"kind": "appnp_bwd_pre", "alpha": {ap}}}"#),
+            vec![f32s(&[v, c])],
+            vec![f32s(&[v, c]), f32s(&[v, c])],
+        );
+
         // backward-SpMM grads only carry width d_h or n_class
-        let mut bwd_dims = vec![cfg.d_h, cfg.n_class];
+        let mut bwd_dims = vec![dh, c];
         bwd_dims.sort_unstable();
         bwd_dims.dedup();
         for &d in &bwd_dims {
@@ -240,29 +341,34 @@ impl Manifest {
                 vec![f32s(&[v, d])],
                 vec![f32s(&[v])],
             );
+            emit(
+                format!("add_{d}"),
+                r#"{"kind": "add"}"#.to_string(),
+                vec![f32s(&[v, d]), f32s(&[v, d])],
+                vec![f32s(&[v, d])],
+            );
             for &cap in &caps {
                 emit(
                     format!("spmm_bwd_mask_{d}_cap{cap}"),
                     format!(r#"{{"kind": "spmm_bwd_mask", "d": {d}, "cap": {cap}}}"#),
-                    vec![
-                        f32s(&[v, d]),
-                        f32s(&[v, d]),
-                        i32s(&[cap]),
-                        i32s(&[cap]),
-                        f32s(&[cap]),
-                    ],
+                    [vec![f32s(&[v, d]), f32s(&[v, d])], edges(cap)].concat(),
                     vec![f32s(&[v, d])],
                 );
                 emit(
                     format!("spmm_bwd_nomask_{d}_cap{cap}"),
                     format!(r#"{{"kind": "spmm_bwd_nomask", "d": {d}, "cap": {cap}}}"#),
-                    vec![f32s(&[v, d]), i32s(&[cap]), i32s(&[cap]), f32s(&[cap])],
+                    [vec![f32s(&[v, d])], edges(cap)].concat(),
+                    vec![f32s(&[v, d])],
+                );
+                emit(
+                    format!("spmm_bwd_acc_{d}_cap{cap}"),
+                    format!(r#"{{"kind": "spmm_bwd_acc", "d": {d}, "cap": {cap}}}"#),
+                    [vec![f32s(&[v, d]), f32s(&[v, d])], edges(cap)].concat(),
                     vec![f32s(&[v, d])],
                 );
             }
         }
 
-        let c = cfg.n_class;
         emit(
             "loss_softmax".to_string(),
             r#"{"kind": "loss_softmax"}"#.to_string(),
@@ -275,6 +381,32 @@ impl Manifest {
             vec![f32s(&[v, c]), f32s(&[v, c]), f32s(&[v])],
             vec![f32s(&[]), f32s(&[v, c])],
         );
+
+        // Adam per weight shape (mirrors python _adam_ops)
+        let mut shapes: Vec<(usize, usize)> = Vec::new();
+        for l in 0..cfg.layers {
+            shapes.push((dims[l], dims[l + 1]));
+        }
+        shapes.push((cfg.d_in, dh));
+        shapes.push((dh, dh));
+        shapes.push((dh, c));
+        shapes.sort_unstable();
+        shapes.dedup();
+        for &(r, cc) in &shapes {
+            emit(
+                format!("adam_{r}x{cc}"),
+                r#"{"kind": "adam"}"#.to_string(),
+                vec![
+                    f32s(&[r, cc]),
+                    f32s(&[r, cc]),
+                    f32s(&[r, cc]),
+                    f32s(&[r, cc]),
+                    f32s(&[]),
+                    f32s(&[]),
+                ],
+                vec![f32s(&[r, cc]), f32s(&[r, cc]), f32s(&[r, cc])],
+            );
+        }
 
         let dataset = ManifestDataset {
             name: cfg.name.clone(),
@@ -293,6 +425,12 @@ impl Manifest {
             saint_caps: vec![],
         };
         Manifest { dataset, ops }
+    }
+
+    /// Legacy name for [`Manifest::synthesize_full_batch`] (the catalog
+    /// now covers every registered architecture, not only GCN).
+    pub fn synthesize_full_batch_gcn(cfg: &DatasetCfg) -> Manifest {
+        Manifest::synthesize_full_batch(cfg)
     }
 
     /// Assert the python-side dims match the rust dataset config.
@@ -387,8 +525,36 @@ mod tests {
             for d in [4usize, 16] {
                 assert!(m.ops.contains_key(&format!("spmm_bwd_mask_{d}_cap{cap}")));
                 assert!(m.ops.contains_key(&format!("spmm_bwd_nomask_{d}_cap{cap}")));
+                assert!(m.ops.contains_key(&format!("spmm_bwd_acc_{d}_cap{cap}")));
             }
         }
+        // the catalog covers every registered full-batch architecture
+        for name in [
+            "sage_fwd_16x16_relu",
+            "sage_fwd_16x4_lin",
+            "sage_bwd_pre_mask_16x16",
+            "sage_bwd_pre_nomask_16x4",
+            "dense_fwd_16x16_relu",
+            "dense_fwd_16x4_lin",
+            "dense_bwd_mask_16x16",
+            "dense_bwd_nomask_16x4",
+            "gcnii_fwd_16_l1",
+            "gcnii_fwd_16_l4",
+            "gcnii_bwd_pre_16_l4",
+            "appnp_fwd_4",
+            "appnp_bwd_pre_4",
+            "add_4",
+            "add_16",
+            "loss_bce",
+        ] {
+            assert!(m.ops.contains_key(name), "missing op {name}");
+        }
+        let ap = m.ops.get("appnp_fwd_4").unwrap();
+        assert_eq!(ap.kind(), "appnp_fwd");
+        assert!((ap.meta_f32("alpha").unwrap() - 0.1).abs() < 1e-6);
+        let g2 = m.ops.get("gcnii_bwd_pre_16_l2").unwrap();
+        let want_beta = (0.5f32 / 2.0 + 1.0).ln();
+        assert!((g2.meta_f32("beta").unwrap() - want_beta).abs() < 1e-6);
         let op = m.ops.get("gcn_fwd_16x16_relu").unwrap();
         assert_eq!(op.kind(), "gcn_fwd");
         assert!(op.meta_bool("relu").unwrap());

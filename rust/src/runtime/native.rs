@@ -85,13 +85,13 @@ impl NativeBackend {
         NativeBackend { manifest, par: parallel::global() }
     }
 
-    /// Build the backend from a synthesized full-batch GCN catalog — no
-    /// AOT artifacts needed (see [`Manifest::synthesize_full_batch_gcn`]).
-    /// Used by tests, benches and CI environments without `make
-    /// artifacts`.
+    /// Build the backend from a synthesized full-batch catalog covering
+    /// every registered architecture — no AOT artifacts needed (see
+    /// [`Manifest::synthesize_full_batch`]).  Used by tests, benches and
+    /// CI environments without `make artifacts`.
     pub fn synthesize(dataset: &str) -> Result<NativeBackend> {
         let cfg = crate::data::dataset_cfg(dataset)?;
-        Ok(NativeBackend::from_manifest(Manifest::synthesize_full_batch_gcn(&cfg)))
+        Ok(NativeBackend::from_manifest(Manifest::synthesize_full_batch(&cfg)))
     }
 
     /// Override the execution [`Parallelism`] (defaults to the process
@@ -1313,6 +1313,37 @@ impl NativeBackend {
                     relu_inplace_par(&mut p, par);
                 }
                 Ok(vec![Value::mat_f32(v, dout, p)])
+            }
+            "appnp_fwd" => {
+                let (z, v, d) = f32m(inp[0])?;
+                let (h0, _, _) = f32m(inp[1])?;
+                let alpha = def.meta_f32("alpha")?;
+                let mut p = ws.take_f32(v * d);
+                spmm_exec(
+                    plan,
+                    tag(2),
+                    inp[2].i32s()?,
+                    inp[3].i32s()?,
+                    inp[4].f32s()?,
+                    z,
+                    d,
+                    v,
+                    &mut p,
+                    par,
+                )?;
+                let mut out = ws.take_f32(v * d);
+                lincomb_par_into(1.0 - alpha, &p, alpha, h0, &mut out, par);
+                ws.give_f32(p);
+                Ok(vec![Value::mat_f32(v, d, out)])
+            }
+            "appnp_bwd_pre" => {
+                let (g, v, d) = f32m(inp[0])?;
+                let alpha = def.meta_f32("alpha")?;
+                let mut gp = ws.take_f32(v * d);
+                scale_par_into(1.0 - alpha, g, &mut gp, par);
+                let mut gh0 = ws.take_f32(v * d);
+                scale_par_into(alpha, g, &mut gh0, par);
+                Ok(vec![Value::mat_f32(v, d, gp), Value::mat_f32(v, d, gh0)])
             }
             "spmm_bwd_mask" => {
                 let (hout, v, d) = f32m(inp[0])?;

@@ -67,6 +67,15 @@ impl Value {
         }
     }
 
+    /// Mutable view of an f32 value's data (weight perturbation in the
+    /// finite-difference gradient checks).
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value, got i32"),
+        }
+    }
+
     pub fn i32s(&self) -> Result<&[i32]> {
         match self {
             Value::I32 { data, .. } => Ok(data),

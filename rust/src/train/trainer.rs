@@ -1,5 +1,9 @@
-//! The training loop: full-batch (GCN / GraphSAGE / GCNII) and
-//! GraphSAINT mini-batch, with the RSC engine in the backward path.
+//! The training loop: full-batch (GCN / GraphSAGE / GCNII / GIN / APPNP
+//! as layer graphs driven by the tape executor) and GraphSAINT
+//! mini-batch, with the RSC engine in the backward path.  The engine's
+//! site list comes from the model's graph ([`crate::model::LayerGraph::
+//! site_widths`]), so allocator, cache and executor agree on the
+//! auto-discovered sites for any architecture.
 //!
 //! The trainer owns the run's [`Workspace`]: models draw every output
 //! buffer from it and recycle retired activations/gradients back, so the
@@ -18,10 +22,8 @@ use crate::cache::PrefetchStats;
 use crate::coordinator::{RscConfig, RscEngine};
 use crate::data::{Dataset, Labels, SaintSampler, Split};
 use crate::graph::{Permutation, ReorderKind};
-use crate::model::gcn::GcnModel;
-use crate::model::gcnii::GcniiModel;
+use crate::model::exec::GraphModel;
 use crate::model::ops::{GraphBufs, ModelKind, OpNames};
-use crate::model::sage::SageModel;
 use crate::runtime::{
     plan_stats, simd, spmm_kernel_stats, Backend, SpmmKernelStats, Value, Workspace,
     WorkspaceStats,
@@ -134,8 +136,10 @@ fn fwd_kernel_label(bufs: &GraphBufs) -> Option<String> {
 /// Build the normalized matrix + buffers for a model on the full graph.
 pub fn full_graph_bufs(b: &dyn Backend, ds: &Dataset, model: ModelKind) -> GraphBufs {
     let matrix = match model {
-        ModelKind::Gcn | ModelKind::Gcnii => ds.adj.gcn_normalize(),
+        ModelKind::Gcn | ModelKind::Gcnii | ModelKind::Appnp => ds.adj.gcn_normalize(),
         ModelKind::Sage | ModelKind::Saint => ds.adj.mean_normalize(),
+        // sum aggregation with the (1+eps) self term in the matrix
+        ModelKind::Gin => ds.adj.gin_normalize(ds.cfg.gin_eps),
     };
     GraphBufs::new(matrix, b.manifest().dataset.caps.clone())
 }
@@ -180,28 +184,16 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
     let (plan_hits0, plan_builds0) = plan_stats();
     let kernels0 = spmm_kernel_stats();
 
-    let widths: Vec<usize> = (0..cfg.model.n_spmm_bwd(&ds.cfg))
-        .map(|s| cfg.model.spmm_width(&ds.cfg, s))
-        .collect();
+    // one executor for every architecture: the model is a layer graph,
+    // and the engine's site registry is read off that same graph
+    let mut model = GraphModel::new(cfg.model, &ds.cfg, names, &mut rng);
     let mut engine = RscEngine::new(
         cfg.rsc.clone(),
         bufs.matrix.clone(),
         bufs.caps.clone(),
-        widths,
+        model.graph.site_widths(),
         cfg.epochs as u64,
     )?;
-
-    enum AnyModel {
-        Gcn(GcnModel),
-        Sage(SageModel),
-        Gcnii(GcniiModel),
-    }
-    let mut model = match cfg.model {
-        ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(&ds.cfg, names, &mut rng)),
-        ModelKind::Sage => AnyModel::Sage(SageModel::new(&ds.cfg, names, &mut rng)),
-        ModelKind::Gcnii => AnyModel::Gcnii(GcniiModel::new(&ds.cfg, names, &mut rng)),
-        ModelKind::Saint => unreachable!(),
-    };
 
     let mut ws = Workspace::new();
     let mut tb = TimeBook::new();
@@ -214,29 +206,15 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
 
     for epoch in 0..cfg.epochs {
         let step = epoch as u64;
-        let loss = match &mut model {
-            AnyModel::Gcn(m) => m.train_step(
-                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
-                &mut ws, None,
-            )?,
-            AnyModel::Sage(m) => m.train_step(
-                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
-                &mut ws,
-            )?,
-            AnyModel::Gcnii(m) => m.train_step(
-                b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
-                &mut ws,
-            )?,
-        };
+        let loss = model.train_step(
+            b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
+            &mut ws, None,
+        )?;
         ensure!(loss.is_finite(), "loss diverged at epoch {epoch}: {loss}");
         loss_curve.push(loss);
 
         if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
-            let logits = match &model {
-                AnyModel::Gcn(m) => m.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?,
-                AnyModel::Sage(m) => m.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?,
-                AnyModel::Gcnii(m) => m.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?,
-            };
+            let logits = model.logits(b, &x, &bufs, &mut eval_tb, &mut ws)?;
             let lf = logits.f32s()?;
             // metrics are always computed against the *original* dataset:
             // permuted-space predictions go back through the permutation
@@ -318,7 +296,7 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
 /// inspected — an eval error must not leave the model dispatching
 /// full-batch op names for the rest of training.
 pub fn saint_eval_full_batch(
-    model: &mut SageModel,
+    model: &mut GraphModel,
     b: &dyn Backend,
     x_full: &Value,
     eval_bufs: &GraphBufs,
@@ -383,12 +361,13 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         .map(|sg| Value::vec_f32(sg.train_mask(ds)))
         .collect();
 
+    // the SAINT backbone is the SAGE layer graph with saint_ op names
+    let mut model = GraphModel::new(ModelKind::Saint, &ds.cfg, OpNames::saint(), &mut rng);
+
     // per-subgraph engines (caching is per sampled graph)
     let total_uses =
         (cfg.epochs * cfg.saint_batches_per_epoch).div_ceil(n_sub) as u64;
-    let widths: Vec<usize> = (0..ModelKind::Sage.n_spmm_bwd(&ds.cfg))
-        .map(|s| ModelKind::Sage.spmm_width(&ds.cfg, s))
-        .collect();
+    let widths: Vec<usize> = model.graph.site_widths();
     let mut engines: Vec<RscEngine> = sub_bufs
         .iter()
         .map(|bufs| {
@@ -402,8 +381,6 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         })
         .collect::<Result<_>>()?;
     let mut uses = vec![0u64; n_sub];
-
-    let mut model = SageModel::new(&ds.cfg, OpNames::saint(), &mut rng);
 
     // full-graph eval buffers
     let mut eval_bufs = full_graph_bufs(b, ds, ModelKind::Sage);
@@ -438,6 +415,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                 cfg.lr,
                 &mut tb,
                 &mut ws,
+                None,
             )?;
             ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
             epoch_loss += loss;

@@ -1,0 +1,167 @@
+//! Model-coverage tests for the tape executor, on the synthesized op
+//! catalog (no AOT artifacts needed):
+//!
+//! * finite-difference gradient checks: for every registered full-batch
+//!   architecture, the tape-derived backward must match the numerical
+//!   directional derivative of the loss surface;
+//! * end-to-end training: every architecture — including the two pure
+//!   graph definitions added on top of the executor, GIN and APPNP —
+//!   learns tiny under the full RSC mechanism, with the allocator seeing
+//!   the graph's auto-discovered site list.
+
+use rsc::coordinator::{RscConfig, RscEngine};
+use rsc::data::load_or_generate;
+use rsc::graph::ReorderKind;
+use rsc::model::ops::{ModelKind, OpNames};
+use rsc::model::GraphModel;
+use rsc::runtime::{NativeBackend, Value, Workspace};
+use rsc::train::trainer::full_graph_bufs;
+use rsc::train::{train, TrainConfig};
+use rsc::util::rng::Rng;
+use rsc::util::timer::TimeBook;
+
+/// Directional finite-difference check: nudge all weights along a random
+/// direction `u`, compare `(L(w+hu) - L(w-hu)) / 2h` against `<grad, u>`.
+/// The direction aggregates every parameter, so a missing term, a wrong
+/// scale or a transposed matmul in any node's VJP rule shows up as a
+/// large relative error; f32 noise and ReLU kink crossings stay small.
+#[test]
+fn finite_difference_gradients_for_every_model() {
+    let ds = load_or_generate("tiny", 3).unwrap();
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let x = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
+    let labels = Value::vec_i32(ds.labels_i32().unwrap().to_vec());
+    let mask = Value::vec_f32(ds.mask(rsc::data::Split::Train));
+    const H: f64 = 5e-3;
+
+    for kind in ModelKind::FULL_BATCH {
+        let bufs = full_graph_bufs(&b, &ds, kind);
+        let mut rng = Rng::new(0xFD ^ kind.name().len() as u64);
+        let mut model = GraphModel::new(kind, &ds.cfg, OpNames::full(), &mut rng);
+        let mut engine = RscEngine::new(
+            RscConfig::baseline(),
+            bufs.matrix.clone(),
+            bufs.caps.clone(),
+            model.graph.site_widths(),
+            8,
+        )
+        .unwrap();
+        // the engine's site registry is exactly the graph's site list
+        assert_eq!(engine.n_sites(), model.graph.sites.len(), "{kind:?}");
+        let mut tb = TimeBook::new();
+        let mut ws = Workspace::new();
+
+        let (loss0, grads) = model
+            .loss_and_grads(&b, &x, &labels, &mask, &bufs, &mut engine, 0, &mut tb, &mut ws, None)
+            .unwrap();
+        assert!(loss0.is_finite(), "{kind:?}: non-finite loss");
+
+        // one random direction over the full parameter vector
+        let dirs: Vec<Vec<f32>> = grads
+            .iter()
+            .map(|g| (0..g.len()).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let analytic: f64 = grads
+            .iter()
+            .zip(&dirs)
+            .flat_map(|(g, u)| {
+                g.f32s()
+                    .unwrap()
+                    .iter()
+                    .zip(u)
+                    .map(|(&gv, &uv)| gv as f64 * uv as f64)
+            })
+            .sum();
+        ws.recycle_all(grads);
+
+        let nudge = |model: &mut GraphModel, scale: f64| {
+            for (p, u) in dirs.iter().enumerate() {
+                for (wv, &uv) in model.params.get_mut(p).weights_mut().iter_mut().zip(u) {
+                    *wv = (*wv as f64 + scale * uv as f64) as f32;
+                }
+            }
+        };
+        nudge(&mut model, H);
+        let loss_plus =
+            model.loss_only(&b, &x, &labels, &mask, &bufs, &mut tb, &mut ws).unwrap() as f64;
+        nudge(&mut model, -2.0 * H);
+        let loss_minus =
+            model.loss_only(&b, &x, &labels, &mask, &bufs, &mut tb, &mut ws).unwrap() as f64;
+        nudge(&mut model, H); // restore
+
+        let fd = (loss_plus - loss_minus) / (2.0 * H);
+        let tol = (0.15 * analytic.abs().max(fd.abs())).max(2e-3);
+        assert!(
+            (fd - analytic).abs() <= tol,
+            "{kind:?}: finite difference {fd:.6} vs tape gradient {analytic:.6} \
+             (tol {tol:.6}, loss {loss0})"
+        );
+    }
+}
+
+fn train_cfg(model: ModelKind, epochs: usize, rsc: RscConfig) -> TrainConfig {
+    TrainConfig {
+        model,
+        epochs,
+        lr: 0.01,
+        seed: 1,
+        rsc,
+        eval_every: 10,
+        verbose: false,
+        saint_subgraphs: 4,
+        saint_batches_per_epoch: 2,
+        reorder: ReorderKind::Degree,
+    }
+}
+
+#[test]
+fn every_full_batch_model_learns_under_rsc_with_discovered_sites() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 5).unwrap();
+    for kind in ModelKind::FULL_BATCH {
+        let rsc = RscConfig { budget_c: 0.3, ..Default::default() };
+        let res = train(&b, &ds, &train_cfg(kind, 60, rsc)).unwrap();
+        assert!(
+            res.test_metric > 0.6,
+            "{kind:?} failed to learn: {}",
+            res.test_metric
+        );
+        let first = res.loss_curve[0];
+        let last = *res.loss_curve.last().unwrap();
+        assert!(last < first * 0.8, "{kind:?}: loss {first} -> {last}");
+        // the allocator worked on the graph's auto-discovered site list
+        let want_sites = kind.n_spmm_bwd(&ds.cfg);
+        let (_, ks) = res.alloc_history.last().unwrap_or_else(|| {
+            panic!("{kind:?}: allocator never ran under rsc")
+        });
+        assert_eq!(ks.len(), want_sites, "{kind:?}: allocator site count");
+        assert!(res.cache_misses > 0, "{kind:?}: sample cache never engaged");
+    }
+    // APPNP is the deep-propagation shape: one site per power step
+    assert_eq!(ModelKind::Appnp.n_spmm_bwd(&ds.cfg), ds.cfg.appnp_layers);
+    assert_eq!(ModelKind::Gin.n_spmm_bwd(&ds.cfg), ds.cfg.layers);
+}
+
+#[test]
+fn baseline_and_rsc_stay_close_for_new_architectures() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 6).unwrap();
+    for kind in [ModelKind::Gin, ModelKind::Appnp] {
+        let base = train(&b, &ds, &train_cfg(kind, 60, RscConfig::baseline())).unwrap();
+        let rsc = train(
+            &b,
+            &ds,
+            &train_cfg(kind, 60, RscConfig { budget_c: 0.3, ..Default::default() }),
+        )
+        .unwrap();
+        assert!(
+            rsc.test_metric > base.test_metric - 0.1,
+            "{kind:?}: rsc {} vs baseline {}",
+            rsc.test_metric,
+            base.test_metric
+        );
+        // the baseline must not touch the RSC machinery
+        assert_eq!(base.cache_misses, 0, "{kind:?}");
+        assert!(base.alloc_history.is_empty(), "{kind:?}");
+    }
+}

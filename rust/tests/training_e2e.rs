@@ -216,8 +216,8 @@ fn overlap_auc_is_high_on_stable_training() {
 
 // ---------------------------------------------------------------------
 // Prefetch pipeline + hardening regressions.  These run on a synthesized
-// GCN op catalog (Manifest::synthesize_full_batch_gcn), so they need no
-// AOT artifacts and run everywhere, including the CI prefetch-parity job.
+// op catalog (Manifest::synthesize_full_batch), so they need no AOT
+// artifacts and run everywhere, including the CI prefetch-parity job.
 // ---------------------------------------------------------------------
 
 /// Make sure the rayon pool exists and has executed at least one task,
@@ -320,7 +320,7 @@ fn all_nan_validation_is_an_error_not_a_nan_result() {
 #[test]
 fn saint_eval_error_does_not_corrupt_op_names() {
     use rsc::model::ops::OpNames;
-    use rsc::model::sage::SageModel;
+    use rsc::model::GraphModel;
     use rsc::runtime::{Backend, Manifest, OpDef, Value, Workspace};
     use rsc::util::timer::TimeBook;
 
@@ -346,7 +346,7 @@ fn saint_eval_error_does_not_corrupt_op_names() {
     let eval_bufs = rsc::train::trainer::full_graph_bufs(&inner, &ds, ModelKind::Sage);
     let x_full = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
     let mut rng = rsc::util::rng::Rng::new(3);
-    let mut model = SageModel::new(&ds.cfg, OpNames::saint(), &mut rng);
+    let mut model = GraphModel::new(ModelKind::Saint, &ds.cfg, OpNames::saint(), &mut rng);
     let failing = FailingBackend(inner);
     let mut tb = TimeBook::new();
     let mut ws = Workspace::new();
