@@ -1,10 +1,12 @@
 //! Kernel-level microbenches with a machine-readable trail: times every
 //! planned-SpMM kernel variant (scalar / axpy4 / SIMD-tiled) across
-//! feature widths plus the SIMD-dispatch on/off cost of the dense
-//! matmul, Adam, softmax loss and row-norm kernels, then appends one run
-//! to `BENCH_kernels.json` so the repo's perf trajectory accumulates
-//! across PRs (schema `rsc-bench-kernels/v1`; rows are
-//! `{op, variant, dims, ns_per_iter, speedup_vs_scalar}`).
+//! feature widths, the SIMD-dispatch on/off cost of the dense matmul,
+//! Adam, softmax loss and row-norm kernels, and the autotuner's raced
+//! winner against the static heuristic's pick per width, then appends
+//! one run to `BENCH_kernels.json` so the repo's perf trajectory
+//! accumulates across PRs (schema `rsc-bench-kernels/v1`; rows are
+//! `{op, variant, dims, ns_per_iter, speedup_vs_scalar}` — the
+//! `spmm_autotuned` rows baseline against the heuristic instead).
 //!
 //! Usage:
 //!   cargo bench --bench kernels              # full run, reddit-sim graph
@@ -16,7 +18,8 @@
 
 use rsc::bench::harness::header;
 use rsc::bench::support::{
-    append_bench_kernels_json, simd_dispatch_rows, spmm_variant_rows, GraphFixture,
+    append_bench_kernels_json, autotune_rows, simd_dispatch_rows, spmm_variant_rows,
+    GraphFixture,
 };
 use rsc::runtime::simd;
 use rsc::util::stats::Table;
@@ -72,11 +75,32 @@ fn main() -> anyhow::Result<()> {
     }
     td.print();
 
+    let autotuned = autotune_rows(&fx, widths, iters);
+    let mut ta = Table::new(vec![
+        "d",
+        "heuristic",
+        "tuned (source)",
+        "heur ms",
+        "tuned ms",
+        "tuned vs heur",
+    ]);
+    for r in &autotuned {
+        ta.row(vec![
+            r.d.to_string(),
+            r.heuristic.clone(),
+            format!("{} ({})", r.tuned, r.source),
+            format!("{:.3}", r.heuristic_ms),
+            format!("{:.3}", r.tuned_ms),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    ta.print();
+
     // cargo runs bench binaries with cwd = the package root (rust/), so
     // the default must target the *repo-root* tracked file explicitly
     let path = std::env::var("RSC_BENCH_OUT")
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json").into());
-    append_bench_kernels_json(&path, &spmm, &dispatch)?;
+    append_bench_kernels_json(&path, &spmm, &dispatch, &autotuned)?;
     println!("appended run to {path}");
     Ok(())
 }

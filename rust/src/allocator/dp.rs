@@ -152,6 +152,42 @@ mod tests {
     }
 
     #[test]
+    fn dp_respects_budget_on_random_instances() {
+        // the dominance test above conditions on greedy feasibility; this
+        // one pins DP's own feasibility unconditionally (except the
+        // everything-at-floor fallback, where no grid point fits)
+        prop::check("dp-budget", 10, |rng| {
+            let v = rng.range(8, 30);
+            let layers: Vec<LayerScores> = (0..rng.range(1, 4))
+                .map(|_| LayerScores {
+                    scores: (0..v).map(|_| rng.f32()).collect(),
+                    nnz: (0..v).map(|_| rng.below(5) as u32 + 1).collect(),
+                    d: rng.range(1, 16),
+                })
+                .collect();
+            let c = 0.2 + 0.6 * rng.f64();
+            let d = DpExact { alpha: 0.1, min_frac: 0.1, ..Default::default() };
+            let ks = d.allocate(&layers, c);
+            let (_, flops) = evaluate(&layers, &ks);
+            let k_min = ((d.min_frac * v as f64).round() as usize).max(1);
+            if ks.iter().any(|&k| k > k_min) {
+                let budget = crate::allocator::total_budget(&layers, c);
+                assert!(flops <= budget, "dp overspent: {flops} > {budget} with {ks:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn dp_full_budget_keeps_everything() {
+        let layers = vec![
+            LayerScores { scores: vec![1.0; 20], nnz: vec![2; 20], d: 4 },
+            LayerScores { scores: vec![0.5; 20], nnz: vec![3; 20], d: 8 },
+        ];
+        let d = DpExact { alpha: 0.1, min_frac: 0.1, ..Default::default() };
+        assert_eq!(d.allocate(&layers, 1.0), vec![20, 20]);
+    }
+
+    #[test]
     fn dp_nan_scores_do_not_panic() {
         // regression: the final max_by used partial_cmp().unwrap(), which
         // panics as soon as two states carry NaN kept-scores

@@ -114,6 +114,29 @@ mod tests {
     }
 
     #[test]
+    fn ks_stay_in_bounds_and_allocation_is_deterministic() {
+        prop::check("greedy-bounds", 25, |rng| {
+            let nl = rng.range(1, 5);
+            let nv = rng.range(10, 120);
+            let layers = layers_random(rng, nl, nv);
+            let c = 0.05 + 0.9 * rng.f64();
+            let alloc = GreedyAllocator::default();
+            let ks = alloc.allocate(&layers, c);
+            // same instance, same answer: the engine re-allocates every
+            // --alloc-every steps and determinism of training depends on
+            // the allocator never flipping on identical scores
+            assert_eq!(ks, alloc.allocate(&layers, c), "allocation must be deterministic");
+            let v = layers[0].scores.len();
+            let k_min = ((alloc.min_frac * v as f64).round() as usize).max(1);
+            assert_eq!(ks.len(), layers.len());
+            assert!(
+                ks.iter().all(|&k| k >= k_min && k <= v),
+                "ks {ks:?} outside [{k_min}, {v}]"
+            );
+        });
+    }
+
+    #[test]
     fn full_budget_keeps_everything() {
         let mut rng = crate::util::rng::Rng::new(3);
         let layers = layers_random(&mut rng, 3, 50);

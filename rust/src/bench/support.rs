@@ -10,7 +10,7 @@ use crate::data::{load_or_generate, Dataset};
 use crate::graph::{Csr, EdgeList, ReorderKind};
 use crate::model::ops::ModelKind;
 use crate::runtime::plan::{select_kernel, KernelChoice, SpmmKernel};
-use crate::runtime::{native, simd, Backend, SpmmPlan};
+use crate::runtime::{autotune, native, simd, Backend, SpmmPlan};
 use crate::sampling::topk::argsort_desc_with;
 use crate::train::{train, TrainConfig, TrainResult};
 use crate::util::json::{obj, Json};
@@ -576,7 +576,10 @@ impl DispatchRow {
 /// Bench the dense matmul, Adam and softmax-loss kernels with SIMD
 /// dispatch on vs off (the caller's dispatch state is restored on exit).
 pub fn simd_dispatch_rows(fx: &GraphFixture, iters: usize) -> Vec<DispatchRow> {
-    let was_enabled = simd::enabled();
+    // restore the caller's dispatch state on every exit path — a
+    // --no-simd ablation elsewhere in the process must not be silently
+    // reverted, even if a bench body panics mid-sweep
+    let _dispatch = simd::SimdGuard::set(simd::enabled());
     let (v, d) = (fx.v(), fx.d());
     let c = fx.ds.cfg.n_class.max(2);
     let mut rng = Rng::new(0xD15);
@@ -620,9 +623,75 @@ pub fn simd_dispatch_rows(fx: &GraphFixture, iters: usize) -> Vec<DispatchRow> {
     run("row_norms", format!("{v}x{d}"), &mut || {
         std::hint::black_box(native::row_norms(&fx.x, v, d));
     });
-    // restore whatever dispatch state the caller had (a --no-simd
-    // ablation elsewhere in the process must not be silently reverted)
-    simd::set_enabled(was_enabled);
+    rows
+}
+
+// ---------------------------------------------------------------------
+// autotuned vs heuristic kernel selection
+// ---------------------------------------------------------------------
+
+/// One width's autotuned-vs-heuristic comparison: the kernel the static
+/// `select_kernel` heuristic picks vs the empirically raced winner
+/// (the plan-build-time protocol of DESIGN.md §Autotuned kernel
+/// selection), plus the measured planned-SpMM cost of each.  Outputs
+/// are bitwise identical by construction — only throughput can differ.
+pub struct AutotuneRow {
+    pub dataset: String,
+    pub d: usize,
+    pub nnz: usize,
+    /// `select_kernel`'s static pick, e.g. "simd-tiled/128".
+    pub heuristic: String,
+    /// The raced winner the autotuner recorded on the plan.
+    pub tuned: String,
+    /// Where the recorded choice came from ("tuned" | "tuning-cache").
+    pub source: &'static str,
+    pub heuristic_ms: f64,
+    pub tuned_ms: f64,
+}
+
+impl AutotuneRow {
+    /// Tuned-over-heuristic throughput ratio (1.0 = same pick or a tie).
+    pub fn speedup(&self) -> f64 {
+        self.heuristic_ms / self.tuned_ms.max(1e-9)
+    }
+}
+
+/// Run the autotuner's race per feature width on the fixture's graph and
+/// time the recorded winner against the static heuristic's pick.  A
+/// fresh plan is built per width because a plan's recorded choice is
+/// pinned to the first width it is tuned (or executed) at.
+pub fn autotune_rows(fx: &GraphFixture, widths: &[usize], iters: usize) -> Vec<AutotuneRow> {
+    let seq = Parallelism::sequential();
+    let mut rows = Vec::new();
+    for &d in widths {
+        let plan = SpmmPlan::build(&fx.edges.dst, &fx.edges.w, fx.v(), seq);
+        let tuned = autotune::tune_plan(&plan, &fx.edges.src, &fx.edges.w, d);
+        let source = plan.chosen_full().map_or("heuristic", |(_, _, s)| s.name());
+        let heur = select_kernel(plan.avg_nnz_per_row(), d);
+        let x = fx.x_width(d);
+        let mut out = vec![0f32; fx.v() * d];
+        let mut time_choice = |choice: KernelChoice| {
+            let r = bench_fn(&format!("spmm autotune d={d}"), 1, iters, || {
+                native::spmm_planned_variant_into(
+                    &plan, choice, &fx.edges.src, &fx.edges.w, &x, d, &mut out, seq,
+                );
+                std::hint::black_box(&out);
+            });
+            r.median_ms
+        };
+        let heuristic_ms = time_choice(heur);
+        let tuned_ms = time_choice(tuned);
+        rows.push(AutotuneRow {
+            dataset: fx.name.clone(),
+            d,
+            nnz: plan.nnz(),
+            heuristic: heur.describe(),
+            tuned: tuned.describe(),
+            source,
+            heuristic_ms,
+            tuned_ms,
+        });
+    }
     rows
 }
 
@@ -633,11 +702,14 @@ pub fn simd_dispatch_rows(fx: &GraphFixture, iters: usize) -> Vec<DispatchRow> {
 /// Append one run to `path` (`{"schema": "rsc-bench-kernels/v1",
 /// "runs": [...]}`), creating the file if absent and preserving earlier
 /// runs so the repo's perf trajectory accumulates across PRs.  Each row
-/// is `{op, variant, dims, ns_per_iter, speedup_vs_scalar}`.
+/// is `{op, variant, dims, ns_per_iter, speedup_vs_scalar}`; for the
+/// `spmm_autotuned` rows the baseline (denominator) is the static
+/// heuristic's pick rather than the scalar kernel.
 pub fn append_bench_kernels_json(
     path: &str,
     spmm: &[SpmmVariantRow],
     dispatch: &[DispatchRow],
+    autotuned: &[AutotuneRow],
 ) -> Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut push = |op: String, variant: &str, dims: String, ms: f64, vs_scalar: f64| {
@@ -671,6 +743,23 @@ pub fn append_bench_kernels_json(
         let dims = format!("{} {}", r.dataset, r.dims);
         push(r.op.clone(), "scalar", dims.clone(), r.scalar_ms, 1.0);
         push(r.op.clone(), "simd", dims, r.simd_ms, r.speedup());
+    }
+    for r in autotuned {
+        let dims = format!("{} nnz={} d={}", r.dataset, r.nnz, r.d);
+        push(
+            "spmm_autotuned".into(),
+            &format!("heuristic:{}", r.heuristic),
+            dims.clone(),
+            r.heuristic_ms,
+            1.0,
+        );
+        push(
+            "spmm_autotuned".into(),
+            &format!("{}:{}", r.source, r.tuned),
+            dims,
+            r.tuned_ms,
+            r.speedup(),
+        );
     }
     let unix_s = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)

@@ -27,6 +27,7 @@
 //! builds, refreshes served from a completed prefetch, synchronous
 //! fallbacks, and late/discarded completions.
 
+use crate::runtime::KernelChoice;
 use crate::sampling::Selection;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -56,13 +57,16 @@ pub struct RefreshJob {
 
 /// What a refresh build produces: the scores (kept for the Figure 4
 /// overlap diagnostics at install time), the built Selection (with its
-/// SpmmPlan already constructed when the plan cache is on), and the
-/// build's wall-clock.
+/// SpmmPlan already constructed when the plan cache is on), the build's
+/// wall-clock, and — plan cache on — the (width, kernel) decision the
+/// autotuner or heuristic recorded for the plan.
 #[derive(Debug)]
 pub struct Built {
     pub scores: Vec<f32>,
     pub selection: Selection,
     pub build_ms: f64,
+    /// The kernel decision recorded at build time, if a plan was built.
+    pub tuned: Option<(usize, KernelChoice)>,
 }
 
 /// Completion slot a background build fills; the refresh step polls it.
@@ -339,6 +343,7 @@ mod tests {
             scores: vec![0.0; a.n],
             selection: Selection::build(a, rows, &caps),
             build_ms: 0.0,
+            tuned: None,
         }
     }
 

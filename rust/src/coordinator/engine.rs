@@ -44,6 +44,7 @@ use crate::cache::{
     Built, OverlapTracker, PrefetchSlot, PrefetchStats, RefreshJob, Resolved, SampleCache,
 };
 use crate::graph::Csr;
+use crate::runtime::autotune;
 use crate::sampling::topk::{pair_scores_with, top_k_indices_with};
 use crate::sampling::Selection;
 use crate::util::parallel::{self, Parallelism};
@@ -97,6 +98,13 @@ pub struct RscConfig {
     /// synchronously on the training thread; results are bit-identical
     /// either way — DESIGN.md §Prefetching refreshes).
     pub prefetch: bool,
+    /// Pick each cached plan's SpMM kernel empirically at refresh-build
+    /// time — race the conformant variants over a sample of the plan and
+    /// record the measured winner (`false` = the `--no-autotune`
+    /// ablation: the static heuristic decides).  Every candidate is
+    /// bit-identical, so runs are identical either way; only throughput
+    /// moves (DESIGN.md §Autotuned kernel selection).
+    pub autotune: bool,
 }
 
 impl Default for RscConfig {
@@ -111,6 +119,7 @@ impl Default for RscConfig {
             allocator: AllocKind::Greedy,
             plan_cache: true,
             prefetch: true,
+            autotune: true,
         }
     }
 }
@@ -170,33 +179,53 @@ impl<'a> Plan<'a> {
     }
 }
 
+/// The per-site build configuration a refresh worker needs, snapshotted
+/// at schedule time so the background closure ships one `Copy` value
+/// instead of a parameter per knob.
+#[derive(Debug, Clone, Copy)]
+struct BuildCfg {
+    plan_cache: bool,
+    autotune: bool,
+    /// Gradient width d_l of the site (kernel selection input).
+    width: usize,
+    par: Parallelism,
+}
+
 /// Build one refresh: pair scores from the job's norm snapshot, stable
 /// top-k, the Figure 5 slice, and (plan cache on) the eager SpmmPlan —
-/// including the plan's kernel-variant selection for the site's gradient
-/// width, so the first planned execution pays neither the grouping nor
-/// the (cheap but off-path-able) heuristic.  Pure in its inputs, so a
-/// background execution is bit-identical to the synchronous fallback
-/// (the determinism contract of DESIGN.md §Prefetching refreshes).
+/// including the plan's kernel decision for the site's gradient width
+/// (raced by the autotuner, or the static heuristic under
+/// `--no-autotune`), so the first planned execution pays neither the
+/// grouping nor the tuning.  The *selection and plan contents* are pure
+/// in the job inputs, so a background execution is bit-identical to the
+/// synchronous fallback (the determinism contract of DESIGN.md
+/// §Prefetching refreshes); the autotuner's timing only ever picks among
+/// bit-identical variants, so it cannot weaken that contract.
 fn execute_refresh(
     col_norms: &[f32],
     matrix: &Csr,
     caps: &[usize],
-    plan_cache: bool,
-    width: usize,
-    par: Parallelism,
+    bc: BuildCfg,
     job: &RefreshJob,
 ) -> Built {
     let sw = Stopwatch::start();
-    let scores = pair_scores_with(col_norms, job.norms.as_slice(), par);
-    let rows = top_k_indices_with(&scores, job.k, par);
-    let selection = Selection::build_with(matrix, rows, caps, par);
-    if plan_cache {
+    let scores = pair_scores_with(col_norms, job.norms.as_slice(), bc.par);
+    let rows = top_k_indices_with(&scores, job.k, bc.par);
+    let selection = Selection::build_with(matrix, rows, caps, bc.par);
+    let mut tuned = None;
+    if bc.plan_cache {
         // PR 2's plan build leaves the hot path together with the slice;
-        // the kernel choice (PR 4) rides along with it
-        let plan = selection.spmm_plan(par);
-        let _ = plan.kernel_for(width);
+        // the kernel decision (PR 4 heuristic, PR 6 autotuner) rides
+        // along with it
+        let plan = selection.spmm_plan(bc.par);
+        let choice = if bc.autotune {
+            autotune::tune_plan(&plan, selection.src(), selection.w(), bc.width)
+        } else {
+            plan.kernel_for(bc.width)
+        };
+        tuned = Some((bc.width, choice));
     }
-    Built { scores, selection, build_ms: sw.ms() }
+    Built { scores, selection, build_ms: sw.ms(), tuned }
 }
 
 pub struct RscEngine {
@@ -243,6 +272,10 @@ pub struct RscEngine {
     /// Steps that ran approx vs exact (speedup accounting).
     pub approx_steps: u64,
     pub exact_steps: u64,
+    /// (site, step, "variant @ d=w") per refresh with plan caching on —
+    /// what the autotuner (or, ablated, the heuristic) decided each
+    /// cached plan should run.
+    pub tuned_kernels: Vec<(usize, u64, String)>,
 }
 
 impl RscEngine {
@@ -280,6 +313,7 @@ impl RscEngine {
             prefetch_build_ms: 0.0,
             approx_steps: 0,
             exact_steps: 0,
+            tuned_kernels: Vec::new(),
             matrix,
             caps: Arc::new(caps),
             cfg,
@@ -358,6 +392,16 @@ impl RscEngine {
         self.last_alloc = Some(step);
     }
 
+    /// The build configuration a refresh of `site` runs under.
+    fn build_cfg(&self, site: usize) -> BuildCfg {
+        BuildCfg {
+            plan_cache: self.cfg.plan_cache,
+            autotune: self.cfg.autotune,
+            width: self.widths[site],
+            par: self.parallelism,
+        }
+    }
+
     /// Snapshot the build inputs for `site` as of right now.
     fn job_for(&self, site: usize) -> RefreshJob {
         RefreshJob {
@@ -383,12 +427,10 @@ impl RscEngine {
             let col = Arc::clone(&self.col_norms);
             let mat = Arc::clone(&self.matrix);
             let caps = Arc::clone(&self.caps);
-            let par = self.parallelism;
-            let plan_cache = self.cfg.plan_cache;
-            let width = self.widths[site];
+            let bc = self.build_cfg(site);
             let job = job.clone();
             parallel::spawn_background(move || {
-                out.fill(execute_refresh(&col, &mat, &caps, plan_cache, width, par, &job));
+                out.fill(execute_refresh(&col, &mat, &caps, bc, &job));
             });
             Some(slot)
         } else {
@@ -449,15 +491,16 @@ impl RscEngine {
         let col = Arc::clone(&self.col_norms);
         let mat = Arc::clone(&self.matrix);
         let caps = Arc::clone(&self.caps);
-        let par = self.parallelism;
-        let plan_cache = self.cfg.plan_cache;
-        let width = self.widths[site];
+        let bc = self.build_cfg(site);
         let resolved = self.cache.resolve(site, step, fallback, |job| {
-            execute_refresh(&col, &mat, &caps, plan_cache, width, par, job)
+            execute_refresh(&col, &mat, &caps, bc, job)
         });
         let hot_ms = sw.ms();
         let Resolved { built, k, from_prefetch } = resolved;
-        let Built { scores, selection, build_ms } = built;
+        let Built { scores, selection, build_ms, tuned } = built;
+        if let Some((w, choice)) = tuned {
+            self.tuned_kernels.push((site, step, format!("{} @ d={w}", choice.describe())));
+        }
         // diagnostics (Figures 4 and 8) — reporting, not sampling cost
         self.overlap.observe(site, step, &scores, &selection.rows);
         let mean_deg = selection
@@ -647,6 +690,78 @@ mod tests {
         assert!(pf_on.scheduled > 0);
         assert_eq!(pf_off.hits, 0, "--no-prefetch must never report prefetch hits");
         assert!(pf_off.sync_fallbacks > 0);
+    }
+
+    #[test]
+    fn autotune_ablation_is_selection_identical_and_choices_legal() {
+        // timing may pick any conformant variant, but what is *sampled*
+        // (and therefore every training number) must not move
+        let mk = |autotune: bool| {
+            let cfg = RscConfig { switch_frac: 1.0, autotune, ..Default::default() };
+            let (mut e, _m, _caps, exact) = setup(cfg, 1000);
+            e.observe_norms(0, vec![0.5; 40]);
+            e.observe_norms(1, vec![2.0; 40]);
+            let mut trace: Vec<(bool, Vec<u32>, usize)> = Vec::new();
+            for step in 1..25 {
+                for site in (0..2).rev() {
+                    let p = e.plan(site, step, &exact);
+                    let s = p.selection();
+                    trace.push((p.is_approx(), s.rows.clone(), s.nnz));
+                }
+            }
+            for site in 0..2 {
+                let entry = e.cache.entry(site).expect("site refreshed");
+                let plan = entry.selection.peek_plan().expect("plan cache on");
+                let (d, choice) = plan.chosen().expect("refresh records a choice");
+                assert!(
+                    autotune::candidates(plan.avg_nnz_per_row(), d).contains(&choice),
+                    "recorded {choice:?} must be a legal variant (autotune={autotune})"
+                );
+            }
+            (trace, e.tuned_kernels.clone())
+        };
+        let (on, tuned) = mk(true);
+        let (off, heur) = mk(false);
+        assert_eq!(on, off, "autotuning changed the sampled selections");
+        assert!(!tuned.is_empty(), "autotuned refreshes must record decisions");
+        assert!(!heur.is_empty(), "heuristic refreshes must record decisions too");
+        for (site, _step, label) in &tuned {
+            assert!(*site < 2);
+            assert!(label.contains("@ d="), "label should carry the width: {label}");
+        }
+    }
+
+    #[test]
+    fn single_site_engine_handles_alloc_every_one() {
+        // --alloc-every boundary: one site, allocator re-runs every step
+        let mut rng = Rng::new(5);
+        let m = Csr::random(30, 120, &mut rng);
+        let caps = vec![m.nnz() / 4, m.nnz()];
+        let exact = Selection::exact(&m, &caps);
+        let cfg = RscConfig {
+            switch_frac: 1.0,
+            alloc_every: 1,
+            refresh_every: 2,
+            ..Default::default()
+        };
+        let mut e = RscEngine::new(cfg, Arc::new(m), caps, vec![8], 1000).unwrap();
+        e.observe_norms(0, vec![1.0; 30]);
+        let mut approx = 0;
+        for step in 0..20 {
+            if e.norms_wanted(step) {
+                let norms: Vec<f32> =
+                    (0..30).map(|i| 1.0 + ((i + step as usize) % 7) as f32).collect();
+                e.observe_norms(0, norms);
+            }
+            if e.plan(0, step, &exact).is_approx() {
+                approx += 1;
+            }
+        }
+        assert!(approx > 0, "single-site engine never reached approx");
+        assert_eq!(e.n_sites(), 1);
+        let (_, ks) = e.alloc_history.last().expect("allocator ran");
+        assert_eq!(ks.len(), 1);
+        assert!(e.alloc_history.len() >= 10, "alloc_every=1 must re-run the allocator");
     }
 
     #[test]

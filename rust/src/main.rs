@@ -15,7 +15,10 @@
 //! refresh builds synchronously on the training thread; bit-identical
 //! either way — DESIGN.md §Prefetching refreshes).  `--no-simd` ablates
 //! the 8-wide AVX inner kernels (scalar mirrors; bit-identical — DESIGN.md
-//! §Vectorized locality layer), and `--reorder degree|rcm|none` /
+//! §Vectorized locality layer).  `--no-autotune` ablates the empirical
+//! kernel autotuner and falls back to the static heuristic (every
+//! candidate is bit-identical, so only timing can change — DESIGN.md
+//! §Autotuned kernel selection), and `--reorder degree|rcm|none` /
 //! `--no-reorder` controls the one-shot locality-aware node reordering
 //! (ULP-equivalent per node; metrics unchanged).
 //!
@@ -46,6 +49,7 @@ const BOOL_FLAGS: &[&str] = &[
     "no-plan-cache",
     "no-prefetch",
     "no-simd",
+    "no-autotune",
     "no-reorder",
 ];
 
@@ -143,6 +147,9 @@ fn rsc_config(args: &Args) -> Result<RscConfig> {
         // Ablation: build every sample-cache refresh synchronously on the
         // training thread (results are bit-identical either way).
         prefetch: !args.bool_or("no-prefetch", false)?,
+        // Ablation: keep the static select_kernel heuristic instead of
+        // racing the variants (bit-identical; only timing can change).
+        autotune: !args.bool_or("no-autotune", false)?,
     };
     // a bad flag combination (e.g. --alloc-every 0) is a CLI error, not
     // a panic deep inside the engine
@@ -217,6 +224,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.fwd_kernel.as_deref().unwrap_or("unplanned"),
         res.reorder,
         if res.simd { "on" } else { "off" },
+    );
+    println!(
+        "autotune: {} races / {} cache hits / {} fallbacks  tuned refresh plans: {}",
+        res.autotune.races,
+        res.autotune.cache_hits,
+        res.autotune.fallbacks,
+        res.tuned_kernels.len()
     );
     println!("op-class time (ms total):");
     for label in res.tb.labels().map(str::to_string).collect::<Vec<_>>() {

@@ -1,0 +1,387 @@
+//! Empirical per-plan kernel autotuning (ROADMAP "JIT / autotuned
+//! kernel backend", first step).
+//!
+//! The static [`select_kernel`] heuristic picks an SpMM variant from two
+//! numbers (nnz/row, feature width), but which variant actually wins on
+//! a given machine depends on cache sizes, the gather pattern of the
+//! sampled sub-matrix and the SIMD width — Qiu et al. (PAPERS.md) show
+//! measured per-matrix choice beats any fixed rule.  This module races
+//! the conformant variants against each other and records the measured
+//! winner:
+//!
+//! * [`candidates`] — the legal variant set for a (plan, width) pair:
+//!   exactly the choices the conformance harness proves bit-identical,
+//!   with the heuristic's pick first (ties go to it).
+//! * [`tune_plan`] — race the candidates over a *sampled, compacted*
+//!   micro-problem built from the plan (bounded nnz, sequential
+//!   execution), record the winner in the plan via
+//!   [`SpmmPlan::record_choice`], and publish it in a process-global
+//!   tuning cache keyed by (nnz bucket, nnz/row bucket, width) so later
+//!   plans of the same shape class skip the race entirely.
+//!
+//! **Why timing never affects numerics**: every candidate comes from the
+//! conformance set — all variants accumulate each output element's edges
+//! in identical plan-row order, so they are bitwise interchangeable
+//! (DESIGN.md §Vectorized locality layer).  The race only decides which
+//! of several bit-identical loops runs; a fast machine, a noisy
+//! neighbour or a different winner can never change a single output bit.
+//! That is also why tuning can run on the background refresh workers
+//! (PR 3) without any determinism hand-wringing: the *schedule* of
+//! races is timing-dependent, the *results* of training are not.
+//!
+//! Tuning is off the hot path by construction: [`tune_plan`] runs at
+//! plan-build time (background prefetch workers, or the one-off warmup
+//! in `train_full_batch`), never inside a training step.
+
+use crate::runtime::native::spmm_planned_variant_into;
+use crate::runtime::plan::{
+    select_kernel, ChoiceSource, KernelChoice, SpmmKernel, SpmmPlan, SIMD_MIN_D, TILE_HUB,
+    TILE_WIDE,
+};
+use crate::runtime::simd;
+use crate::util::parallel::Parallelism;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Retained-edge budget for the sampled micro-problem a race executes:
+/// large enough that per-call overheads do not decide the winner, small
+/// enough that a race costs well under a millisecond.
+const SAMPLE_NNZ: usize = 8192;
+/// Timed repetitions per candidate; the minimum is kept (standard
+/// micro-benchmark practice — noise only ever adds time).
+const RACE_REPS: usize = 3;
+
+// ---------------------------------------------------------------------
+// process-global tuning stats
+// ---------------------------------------------------------------------
+
+static TUNE_RACES: AtomicU64 = AtomicU64::new(0);
+static TUNE_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static TUNE_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// How [`tune_plan`] decided its answers since process start (or the
+/// last [`reset_autotune_stats`]).  Like the plan-cache counters these
+/// are process-global, so per-run deltas are an upper bound under
+/// concurrent runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AutotuneStats {
+    /// Variant races actually executed.
+    pub races: u64,
+    /// Answers served from the process-global tuning cache.
+    pub cache_hits: u64,
+    /// Degenerate plans (no retained edges / zero width) answered by the
+    /// static heuristic without racing.
+    pub fallbacks: u64,
+}
+
+impl AutotuneStats {
+    pub fn total(&self) -> u64 {
+        self.races + self.cache_hits + self.fallbacks
+    }
+
+    /// Saturating per-field delta against an earlier snapshot.
+    pub fn since(&self, earlier: &AutotuneStats) -> AutotuneStats {
+        AutotuneStats {
+            races: self.races.saturating_sub(earlier.races),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            fallbacks: self.fallbacks.saturating_sub(earlier.fallbacks),
+        }
+    }
+}
+
+pub fn autotune_stats() -> AutotuneStats {
+    AutotuneStats {
+        races: TUNE_RACES.load(Ordering::Relaxed),
+        cache_hits: TUNE_CACHE_HITS.load(Ordering::Relaxed),
+        fallbacks: TUNE_FALLBACKS.load(Ordering::Relaxed),
+    }
+}
+
+pub fn reset_autotune_stats() {
+    TUNE_RACES.store(0, Ordering::Relaxed);
+    TUNE_CACHE_HITS.store(0, Ordering::Relaxed);
+    TUNE_FALLBACKS.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// process-global tuning cache
+// ---------------------------------------------------------------------
+
+/// (log2 bucket of plan nnz, log2 bucket of nnz/row, feature width).
+/// Two plans in the same bucket triple have the same gather profile to
+/// within a factor of two, which is well inside the margin by which one
+/// variant beats another when they differ at all.
+type TuneKey = (u32, u32, usize);
+
+fn cache() -> &'static Mutex<HashMap<TuneKey, KernelChoice>> {
+    static CACHE: OnceLock<Mutex<HashMap<TuneKey, KernelChoice>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// log2 bucket: 0 for 0, else floor(log2(x)) + 1.
+fn bucket(x: u64) -> u32 {
+    u64::BITS - x.leading_zeros()
+}
+
+fn tune_key(plan: &SpmmPlan, d: usize) -> TuneKey {
+    (bucket(plan.nnz() as u64), bucket(plan.avg_nnz_per_row() as u64), d)
+}
+
+/// Forget every cached winner (tests; a long-lived embedder that changes
+/// `simd::set_enabled` mid-process may also want this, though stale
+/// entries are re-validated against [`candidates`] on every hit anyway).
+pub fn reset_tuning_cache() {
+    cache().lock().unwrap().clear();
+}
+
+/// Cached winners currently held (diagnostics).
+pub fn tuning_cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+// ---------------------------------------------------------------------
+// the legal variant set
+// ---------------------------------------------------------------------
+
+/// Every [`KernelChoice`] that is legal for a plan with the given
+/// nnz/row statistic at feature width `d` — the set the conformance
+/// harness proves bit-identical, and the only choices a race may return.
+/// The static heuristic's pick is always first, so a race that measures
+/// a dead heat keeps the heuristic's answer.
+pub fn candidates(avg_nnz: f64, d: usize) -> Vec<KernelChoice> {
+    let mut out = vec![select_kernel(avg_nnz, d)];
+    if d == 0 {
+        return out;
+    }
+    let mut push = |c: KernelChoice, out: &mut Vec<KernelChoice>| {
+        if !out.contains(&c) {
+            out.push(c);
+        }
+    };
+    push(KernelChoice { kernel: SpmmKernel::Scalar, tile: d }, &mut out);
+    push(KernelChoice { kernel: SpmmKernel::Axpy4, tile: d }, &mut out);
+    if simd::enabled() && d >= SIMD_MIN_D {
+        push(
+            KernelChoice { kernel: SpmmKernel::SimdTiled, tile: d.min(TILE_WIDE) },
+            &mut out,
+        );
+        push(
+            KernelChoice { kernel: SpmmKernel::SimdTiled, tile: d.min(TILE_HUB) },
+            &mut out,
+        );
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// the race
+// ---------------------------------------------------------------------
+
+/// Decide the kernel for `(plan, d)` empirically: serve from the tuning
+/// cache when a same-shaped plan was already raced (and the cached
+/// choice is still legal — a `simd::set_enabled` flip invalidates SIMD
+/// winners, which then simply re-race), otherwise race the candidate
+/// variants over a sampled micro-problem and record the measured winner.
+/// Degenerate plans (nothing to measure) fall back to the heuristic.
+///
+/// `src`/`w` are the plan's edge inputs (the same slices a planned
+/// execution would receive).  The recorded choice is returned; if the
+/// plan already carried a recorded choice for this width (first write
+/// wins), that earlier record is returned instead.
+pub fn tune_plan(plan: &SpmmPlan, src: &[i32], w: &[f32], d: usize) -> KernelChoice {
+    if plan.nnz() == 0 || plan.rows_nonempty() == 0 || d == 0 {
+        TUNE_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        let c = select_kernel(plan.avg_nnz_per_row(), d);
+        return plan.record_choice(d, c, ChoiceSource::Heuristic);
+    }
+    let cands = candidates(plan.avg_nnz_per_row(), d);
+    let key = tune_key(plan, d);
+    let cached = cache().lock().unwrap().get(&key).copied();
+    if let Some(c) = cached {
+        if cands.contains(&c) {
+            TUNE_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+            return plan.record_choice(d, c, ChoiceSource::TuningCache);
+        }
+    }
+    TUNE_RACES.fetch_add(1, Ordering::Relaxed);
+    let winner = race(plan, src, w, d, &cands);
+    cache().lock().unwrap().insert(key, winner);
+    plan.record_choice(d, winner, ChoiceSource::Tuned)
+}
+
+/// Race every candidate over a compacted sample of the plan and return
+/// the fastest.  Strictly-less comparison on the per-candidate minimum
+/// keeps ties on the first (heuristic) entry.
+fn race(plan: &SpmmPlan, src: &[i32], w: &[f32], d: usize, cands: &[KernelChoice]) -> KernelChoice {
+    let (mini_src, mini_dst, mini_w, nrows, nsrc) = sample_micro(plan, src, w);
+    // Deterministic, non-zero inputs: values are irrelevant to timing,
+    // but zero weights would be skipped as padding and distort the race.
+    let x: Vec<f32> = (0..nsrc * d).map(|i| 1.0 + (i % 7) as f32 * 0.25).collect();
+    let mini = SpmmPlan::build(&mini_dst, &mini_w, nrows, Parallelism::sequential());
+    let mut out = vec![0f32; nrows * d];
+    let mut best = cands[0];
+    let mut best_ns = u128::MAX;
+    for &cand in cands {
+        let mut ns = u128::MAX;
+        for _ in 0..RACE_REPS {
+            let t0 = Instant::now();
+            spmm_planned_variant_into(
+                &mini,
+                cand,
+                &mini_src,
+                &mini_w,
+                &x,
+                d,
+                &mut out,
+                Parallelism::sequential(),
+            );
+            ns = ns.min(t0.elapsed().as_nanos());
+            std::hint::black_box(&mut out);
+        }
+        if ns < best_ns {
+            best_ns = ns;
+            best = cand;
+        }
+    }
+    best
+}
+
+/// Compact up to [`SAMPLE_NNZ`] retained edges into a dense
+/// micro-problem that preserves the plan's gather profile: non-empty
+/// destination rows are sampled at a fixed stride (keeping whole rows,
+/// so per-row edge counts survive) and source indices are remapped to a
+/// dense range.  Returns (src, dst, w, n_rows, n_sources).
+fn sample_micro(
+    plan: &SpmmPlan,
+    src: &[i32],
+    w: &[f32],
+) -> (Vec<i32>, Vec<i32>, Vec<f32>, usize, usize) {
+    let rows = plan.rows_nonempty();
+    let target_rows = ((SAMPLE_NNZ as f64 / plan.avg_nnz_per_row()).ceil() as usize)
+        .clamp(1, rows);
+    let stride = (rows / target_rows).max(1);
+    let mut mini_src = Vec::new();
+    let mut mini_dst = Vec::new();
+    let mut mini_w = Vec::new();
+    let mut remap: HashMap<i32, i32> = HashMap::new();
+    let mut nonempty_seen = 0usize;
+    let mut nrows = 0usize;
+    for t in 0..plan.vout() {
+        let edges = plan.row_edges(t);
+        if edges.is_empty() {
+            continue;
+        }
+        nonempty_seen += 1;
+        if (nonempty_seen - 1) % stride != 0 {
+            continue;
+        }
+        for &eid in edges {
+            let e = eid as usize;
+            let next = remap.len() as i32;
+            let s = *remap.entry(src[e]).or_insert(next);
+            mini_src.push(s);
+            mini_dst.push(nrows as i32);
+            mini_w.push(w[e]);
+        }
+        nrows += 1;
+        if mini_w.len() >= SAMPLE_NNZ {
+            break;
+        }
+    }
+    let nsrc = remap.len().max(1);
+    (mini_src, mini_dst, mini_w, nrows, nsrc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::spmm;
+
+    fn plan_for(dst: &[i32], w: &[f32], vout: usize) -> SpmmPlan {
+        SpmmPlan::build(dst, w, vout, Parallelism::sequential())
+    }
+
+    #[test]
+    fn candidate_set_is_legal_and_heuristic_first() {
+        for d in [0usize, 1, 2, 4, 7, 8, 64, 256] {
+            for avg in [0.5, 4.0, 64.0] {
+                let cands = candidates(avg, d);
+                assert!(!cands.is_empty());
+                assert_eq!(cands[0], select_kernel(avg, d), "heuristic leads at d={d}");
+                for c in &cands {
+                    if c.kernel == SpmmKernel::SimdTiled {
+                        assert!(simd::enabled() && d >= SIMD_MIN_D, "illegal simd candidate");
+                    }
+                    assert!(c.tile >= 1 && c.tile <= d.max(1), "tile {} at d={d}", c.tile);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_plans_fall_back_to_heuristic() {
+        let empty = plan_for(&[], &[], 5);
+        let s0 = autotune_stats();
+        let c = tune_plan(&empty, &[], &[], 16);
+        assert_eq!(c, select_kernel(empty.avg_nnz_per_row(), 16));
+        assert_eq!(empty.chosen_full().map(|(_, _, s)| s), Some(ChoiceSource::Heuristic));
+        let s1 = autotune_stats().since(&s0);
+        assert!(s1.fallbacks >= 1);
+        // all-padding edges are equally degenerate (nnz == 0)
+        let padded = plan_for(&[-3, 7], &[0.0, 0.0], 5);
+        tune_plan(&padded, &[-3, 7], &[0.0, 0.0], 16);
+    }
+
+    #[test]
+    fn race_records_legal_winner_and_cache_serves_second_plan() {
+        // d = 37 keeps this test's tuning-cache key out of every other
+        // test's way (the cache is process-global and tests run in
+        // parallel threads)
+        let d = 37usize;
+        let ne = 600usize;
+        let src: Vec<i32> = (0..ne).map(|e| (e % 50) as i32).collect();
+        let dst: Vec<i32> = (0..ne).map(|e| (e % 30) as i32).collect();
+        let w: Vec<f32> = (0..ne).map(|e| 1.0 + (e % 5) as f32).collect();
+        let a = plan_for(&dst, &w, 30);
+        let s0 = autotune_stats();
+        let ca = tune_plan(&a, &src, &w, d);
+        assert!(candidates(a.avg_nnz_per_row(), d).contains(&ca), "winner must be legal");
+        assert_eq!(a.chosen(), Some((d, ca)));
+        // same-shaped plan: served from the cache, same choice
+        let b = plan_for(&dst, &w, 30);
+        let cb = tune_plan(&b, &src, &w, d);
+        assert_eq!(cb, ca);
+        assert_eq!(b.chosen_full().map(|(_, _, s)| s), Some(ChoiceSource::TuningCache));
+        let delta = autotune_stats().since(&s0);
+        assert!(delta.races >= 1 && delta.cache_hits >= 1);
+        assert!(tuning_cache_len() >= 1);
+        // the tuned choice computes exactly what the oracle computes
+        let x: Vec<f32> = (0..50 * d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let want = spmm(&src, &dst, &w, &x, d, 30);
+        let mut got = vec![9.9f32; 30 * d];
+        spmm_planned_variant_into(&a, ca, &src, &w, &x, d, &mut got, Parallelism::sequential());
+        assert_eq!(got, want, "tuned winner must stay bit-identical to the oracle");
+    }
+
+    #[test]
+    fn micro_sample_preserves_row_profile_and_bounds_nnz() {
+        let ne = 40_000usize;
+        let src: Vec<i32> = (0..ne).map(|e| (e % 997) as i32).collect();
+        let dst: Vec<i32> = (0..ne).map(|e| (e % 2000) as i32).collect();
+        let w = vec![1.0f32; ne];
+        let p = plan_for(&dst, &w, 2000);
+        let (ms, md, mw, nrows, nsrc) = sample_micro(&p, &src, &w);
+        assert!(!mw.is_empty());
+        assert!(mw.len() <= SAMPLE_NNZ + p.avg_nnz_per_row().ceil() as usize + 64);
+        assert!(nrows >= 1);
+        assert_eq!(ms.len(), md.len());
+        assert_eq!(ms.len(), mw.len());
+        assert!(ms.iter().all(|&s| (s as usize) < nsrc));
+        assert!(md.iter().all(|&t| (t as usize) < nrows));
+        // whole rows are kept: every sampled row has the plan's row width
+        let mini = plan_for(&md, &mw, nrows);
+        assert!((mini.avg_nnz_per_row() - p.avg_nnz_per_row()).abs() < 1.0);
+    }
+}

@@ -14,6 +14,7 @@
 //! constructors return a descriptive error, so every caller (CLI, benches,
 //! examples) compiles unchanged and degrades gracefully at runtime.
 
+pub mod autotune;
 pub mod manifest;
 pub mod native;
 pub mod plan;
@@ -26,9 +27,12 @@ pub mod xla;
 #[path = "xla_stub.rs"]
 pub mod xla;
 
+pub use autotune::{autotune_stats, reset_autotune_stats, tune_plan, AutotuneStats};
 pub use manifest::{Manifest, OpDef};
 pub use native::{spmm_kernel_stats, NativeBackend, SpmmKernelStats};
-pub use plan::{plan_stats, reset_plan_stats, KernelChoice, PlanCell, SpmmKernel, SpmmPlan};
+pub use plan::{
+    plan_stats, reset_plan_stats, ChoiceSource, KernelChoice, PlanCell, SpmmKernel, SpmmPlan,
+};
 pub use value::Value;
 pub use workspace::{Workspace, WorkspaceStats};
 pub use xla::XlaBackend;

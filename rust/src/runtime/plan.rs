@@ -95,6 +95,31 @@ impl KernelChoice {
     }
 }
 
+/// How a plan's recorded [`KernelChoice`] was decided (see
+/// `runtime/autotune.rs`).  Purely informational: all variants are
+/// bitwise identical, so the source never affects numerics — it only
+/// tells stats surfaces whether the decision was measured or guessed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChoiceSource {
+    /// The static [`select_kernel`] heuristic.
+    Heuristic,
+    /// Measured by racing the variants over a sample of this plan.
+    Tuned,
+    /// Reused from the process-global tuning cache (a same-shaped plan
+    /// was raced earlier).
+    TuningCache,
+}
+
+impl ChoiceSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChoiceSource::Heuristic => "heuristic",
+            ChoiceSource::Tuned => "tuned",
+            ChoiceSource::TuningCache => "tuning-cache",
+        }
+    }
+}
+
 /// Feature widths below this stay on unvectorized kernels (vector lanes
 /// would be mostly empty).
 pub const SIMD_MIN_D: usize = 8;
@@ -137,10 +162,11 @@ pub struct SpmmPlan {
     /// statistic: `nnz / rows_nonempty` = average gathers per touched
     /// output row).
     rows_nonempty: usize,
-    /// The kernel decision recorded at first execution, keyed by the
-    /// feature width it was made for (a plan is almost always executed at
-    /// one width; other widths recompute without re-caching).
-    choice: OnceLock<(usize, KernelChoice)>,
+    /// The kernel decision recorded at first execution (or installed
+    /// ahead of time by the autotuner), keyed by the feature width it was
+    /// made for (a plan is almost always executed at one width; other
+    /// widths recompute without re-caching) plus how it was decided.
+    choice: OnceLock<(usize, KernelChoice, ChoiceSource)>,
     /// Immutability tag of the src edge input this plan describes (see
     /// `Backend::run_tagged`); 0 = untagged, identity not checked.  Two
     /// selections padded to the same bucket have identical `ne`/`vout`,
@@ -244,9 +270,9 @@ impl SpmmPlan {
     /// call at a different width recomputes without disturbing the
     /// record.
     pub fn kernel_for(&self, d: usize) -> KernelChoice {
-        let &(d0, choice) = self
-            .choice
-            .get_or_init(|| (d, select_kernel(self.avg_nnz_per_row(), d)));
+        let &(d0, choice, _) = self.choice.get_or_init(|| {
+            (d, select_kernel(self.avg_nnz_per_row(), d), ChoiceSource::Heuristic)
+        });
         if d0 == d {
             choice
         } else {
@@ -254,8 +280,33 @@ impl SpmmPlan {
         }
     }
 
+    /// Install a measured kernel decision for width `d` (the autotuner's
+    /// entry point).  First write wins — if a choice for this plan was
+    /// already recorded, the recorded one stays and is returned (for the
+    /// recorded width; other widths fall back to the heuristic), so a
+    /// racing first execution and a tuning worker can never disagree
+    /// about what the plan runs.
+    pub fn record_choice(
+        &self,
+        d: usize,
+        choice: KernelChoice,
+        source: ChoiceSource,
+    ) -> KernelChoice {
+        let &(d0, recorded, _) = self.choice.get_or_init(|| (d, choice, source));
+        if d0 == d {
+            recorded
+        } else {
+            select_kernel(self.avg_nnz_per_row(), d)
+        }
+    }
+
     /// The recorded (width, choice) of the first execution, if any.
     pub fn chosen(&self) -> Option<(usize, KernelChoice)> {
+        self.choice.get().map(|&(d, c, _)| (d, c))
+    }
+
+    /// The recorded decision including how it was made, if any.
+    pub fn chosen_full(&self) -> Option<(usize, KernelChoice, ChoiceSource)> {
         self.choice.get().copied()
     }
 
@@ -423,11 +474,34 @@ mod tests {
         assert!(p.chosen().is_none());
         let c = p.kernel_for(64);
         assert_eq!(p.chosen(), Some((64, c)));
+        assert_eq!(p.chosen_full(), Some((64, c, ChoiceSource::Heuristic)));
         // a different width recomputes without disturbing the record
         let c2 = p.kernel_for(2);
         assert_eq!(c2.kernel, SpmmKernel::Scalar);
         assert_eq!(p.chosen(), Some((64, c)));
         assert!(!c.describe().is_empty());
+    }
+
+    #[test]
+    fn record_choice_is_first_write_wins() {
+        let dst = vec![0, 1, 1, 2];
+        let w = vec![1.0f32; 4];
+        let p = SpmmPlan::build(&dst, &w, 4, par4());
+        let tuned = KernelChoice { kernel: SpmmKernel::Axpy4, tile: 64 };
+        // an unrecorded plan accepts the tuner's decision verbatim
+        assert_eq!(p.record_choice(64, tuned, ChoiceSource::Tuned), tuned);
+        assert_eq!(p.chosen_full(), Some((64, tuned, ChoiceSource::Tuned)));
+        assert_eq!(p.kernel_for(64), tuned, "execution must follow the record");
+        // a second record (racing worker) keeps the first decision
+        let other = KernelChoice { kernel: SpmmKernel::Scalar, tile: 1 };
+        assert_eq!(p.record_choice(64, other, ChoiceSource::TuningCache), tuned);
+        assert_eq!(p.chosen_full(), Some((64, tuned, ChoiceSource::Tuned)));
+        // a record for a different width falls back to the heuristic
+        assert_eq!(
+            p.record_choice(2, other, ChoiceSource::Tuned),
+            select_kernel(p.avg_nnz_per_row(), 2)
+        );
+        assert!(!ChoiceSource::Tuned.name().is_empty());
     }
 
     #[test]

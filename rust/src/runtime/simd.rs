@@ -62,6 +62,31 @@ pub fn enabled() -> bool {
     available() && !DISABLED.load(Ordering::Relaxed)
 }
 
+/// RAII scope for [`set_enabled`]: flips the process switch and restores
+/// the previous state on drop, so benches and the conformance harness can
+/// exercise both dispatch paths without leaking the ablation into later
+/// code.  (The switch is process-wide, so concurrently-running tests that
+/// *measure* dispatch should still tolerate either state.)
+#[derive(Debug)]
+pub struct SimdGuard {
+    was_enabled: bool,
+}
+
+impl SimdGuard {
+    /// Force SIMD dispatch on (where available) or off until drop.
+    pub fn set(on: bool) -> SimdGuard {
+        let was_enabled = !DISABLED.load(Ordering::Relaxed);
+        set_enabled(on);
+        SimdGuard { was_enabled }
+    }
+}
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        set_enabled(self.was_enabled);
+    }
+}
+
 // ---------------------------------------------------------------------
 // axpy: c[j] += av * b[j]  (elementwise — any unroll is bit-identical)
 // ---------------------------------------------------------------------
@@ -440,6 +465,26 @@ mod tests {
         if enabled() {
             assert!(available());
         }
+    }
+
+    #[test]
+    fn simd_guard_restores_prior_state() {
+        // same-state guards only: lib tests run in parallel threads and
+        // several branch on `enabled()`, so this test must not perturb
+        // the process switch.  Real flip/restore cycles are exercised by
+        // tests/kernel_conformance.rs, whose assertions are all
+        // state-independent parity checks.
+        let before = !DISABLED.load(Ordering::Relaxed);
+        {
+            let g = SimdGuard::set(before);
+            assert_eq!(g.was_enabled, before);
+            assert_eq!(!DISABLED.load(Ordering::Relaxed), before);
+            {
+                let _inner = SimdGuard::set(before);
+                assert_eq!(!DISABLED.load(Ordering::Relaxed), before);
+            }
+        }
+        assert_eq!(!DISABLED.load(Ordering::Relaxed), before);
     }
 
     #[test]

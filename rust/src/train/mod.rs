@@ -4,4 +4,6 @@ pub mod metrics;
 pub mod trainer;
 
 pub use metrics::{accuracy, f1_micro, mean_auc, MetricKind};
-pub use trainer::{saint_eval_full_batch, train, TrainConfig, TrainResult};
+pub use trainer::{
+    saint_eval_full_batch, train, weights_fingerprint, TrainConfig, TrainResult,
+};

@@ -25,11 +25,11 @@ use crate::graph::{Permutation, ReorderKind};
 use crate::model::exec::GraphModel;
 use crate::model::ops::{GraphBufs, ModelKind, OpNames};
 use crate::runtime::{
-    plan_stats, simd, spmm_kernel_stats, Backend, SpmmKernelStats, Value, Workspace,
-    WorkspaceStats,
+    autotune_stats, plan_stats, simd, spmm_kernel_stats, tune_plan, AutotuneStats, Backend,
+    SpmmKernelStats, Value, Workspace, WorkspaceStats,
 };
 use crate::train::metrics::MetricKind;
-use crate::util::parallel;
+use crate::util::parallel::{self, Parallelism};
 use crate::util::rng::Rng;
 use crate::util::timer::{Stopwatch, TimeBook};
 use crate::Result;
@@ -122,15 +122,66 @@ pub struct TrainResult {
     /// (process-global counters, so an upper bound under concurrency).
     pub kernels: SpmmKernelStats,
     /// The kernel variant the forward plan recorded at first execution,
-    /// e.g. "simd-tiled/64 @ d=64" (None under `--no-plan-cache`).
+    /// e.g. "simd-tiled/64 @ d=64 (tuned)" (None under `--no-plan-cache`;
+    /// the parenthesized suffix says whether the choice came from the
+    /// static heuristic, a measured race, or the process tuning cache).
     pub fwd_kernel: Option<String>,
+    /// Autotuner activity during this run: races run, tuning-cache hits,
+    /// heuristic fallbacks (process-global counters, so an upper bound
+    /// under concurrent runs).  All zeros under `--no-autotune`.
+    pub autotune: AutotuneStats,
+    /// `(site, step, label)` kernel decisions the engine's refresh
+    /// pipeline recorded for sampled backward plans — companions to
+    /// `fwd_kernel`, one per tuned refresh build.
+    pub tuned_kernels: Vec<(usize, u64, String)>,
+    /// Order-sensitive FNV-1a hash over every trained parameter's f32
+    /// bit pattern.  Two runs are bit-identical iff their fingerprints
+    /// (and loss curves) match — the contract the seed-determinism and
+    /// autotune/prefetch ablation tests pin.
+    pub weights_fingerprint: u64,
 }
 
-/// Human label of a plan's recorded kernel decision.
+/// Order-sensitive FNV-1a over all parameters' f32 bit patterns; see
+/// [`TrainResult::weights_fingerprint`].
+pub fn weights_fingerprint(model: &GraphModel) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for p in &model.params.params {
+        for &x in p.weights() {
+            h ^= x.to_bits() as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Off-hot-path autotune warmup for the run's two *static* plans (the
+/// forward edge list and the exact backward selection), so the very
+/// first training step already executes the measured winner.  Sampled
+/// backward plans are tuned where they are built — on the engine's
+/// background refresh workers.  Every candidate kernel is bit-identical
+/// (DESIGN.md §Autotuned kernel selection), so skipping this under
+/// `--no-autotune` changes timing only, never numerics.
+fn tune_static_plans(bufs: &GraphBufs, widths: &[usize], par: Parallelism) {
+    let Some(&d) = widths.first() else { return };
+    if let Some(plan) = bufs.fwd_spmm_plan() {
+        let (src, _, w) = &bufs.fwd;
+        tune_plan(
+            &plan,
+            src.i32s().expect("fwd src is i32"),
+            w.f32s().expect("fwd w is f32"),
+            d,
+        );
+    }
+    let plan = bufs.exact.spmm_plan(par);
+    tune_plan(&plan, bufs.exact.src(), bufs.exact.w(), d);
+}
+
+/// Human label of a plan's recorded kernel decision, including where
+/// the decision came from ("heuristic" | "tuned" | "tuning-cache").
 fn fwd_kernel_label(bufs: &GraphBufs) -> Option<String> {
     let plan = bufs.fwd_spmm_plan()?;
-    let (d, choice) = plan.chosen()?;
-    Some(format!("{} @ d={d}", choice.describe()))
+    let (d, choice, source) = plan.chosen_full()?;
+    Some(format!("{} @ d={d} ({})", choice.describe(), source.name()))
 }
 
 /// Build the normalized matrix + buffers for a model on the full graph.
@@ -183,6 +234,7 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
     let metric = MetricKind::for_dataset(ds);
     let (plan_hits0, plan_builds0) = plan_stats();
     let kernels0 = spmm_kernel_stats();
+    let autotune0 = autotune_stats();
 
     // one executor for every architecture: the model is a layer graph,
     // and the engine's site registry is read off that same graph
@@ -194,6 +246,9 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
         model.graph.site_widths(),
         cfg.epochs as u64,
     )?;
+    if cfg.rsc.plan_cache && cfg.rsc.autotune {
+        tune_static_plans(&bufs, &model.graph.site_widths(), engine.parallelism());
+    }
 
     let mut ws = Workspace::new();
     let mut tb = TimeBook::new();
@@ -286,6 +341,9 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
         simd: simd::enabled(),
         kernels: spmm_kernel_stats().since(&kernels0),
         fwd_kernel: fwd_kernel_label(&bufs),
+        autotune: autotune_stats().since(&autotune0),
+        tuned_kernels: engine.tuned_kernels.clone(),
+        weights_fingerprint: weights_fingerprint(&model),
     })
 }
 
@@ -317,6 +375,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let metric = MetricKind::for_dataset(ds);
     let (plan_hits0, plan_builds0) = plan_stats();
     let kernels0 = spmm_kernel_stats();
+    let autotune0 = autotune_stats();
 
     // --- offline sampling ---
     let sampler = SaintSampler::for_dataset(ds);
@@ -386,6 +445,15 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let mut eval_bufs = full_graph_bufs(b, ds, ModelKind::Sage);
     eval_bufs.plan_cache = cfg.rsc.plan_cache;
     let x_full = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
+    if cfg.rsc.plan_cache && cfg.rsc.autotune {
+        // same-shaped subgraphs share a tuning-cache key, so after the
+        // first race the remaining warmups are cache hits
+        let par = engines.first().map_or_else(parallel::global, |e| e.parallelism());
+        for bufs in &sub_bufs {
+            tune_static_plans(bufs, &widths, par);
+        }
+        tune_static_plans(&eval_bufs, &widths, par);
+    }
 
     let mut ws = Workspace::new();
     let mut tb = TimeBook::new();
@@ -456,10 +524,12 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let (mut hits, mut misses, mut alloc_ms, mut sample_ms) = (0, 0, 0.0, 0.0);
     let mut prefetch = PrefetchStats::default();
     let mut prefetch_build_ms = 0.0;
+    let mut tuned_kernels = Vec::new();
     for e in &engines {
         alloc_history.extend(e.alloc_history.iter().cloned());
         picked.extend(e.picked_degrees.iter().cloned());
         overlap.extend(e.overlap.samples.iter().cloned());
+        tuned_kernels.extend(e.tuned_kernels.iter().cloned());
         let (h, m) = e.cache_stats();
         hits += h;
         misses += m;
@@ -495,5 +565,8 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         simd: simd::enabled(),
         kernels: spmm_kernel_stats().since(&kernels0),
         fwd_kernel: fwd_kernel_label(&eval_bufs),
+        autotune: autotune_stats().since(&autotune0),
+        tuned_kernels,
+        weights_fingerprint: weights_fingerprint(&model),
     })
 }

@@ -149,6 +149,7 @@ fn sample_cache_invalidate_all() {
         scores: vec![0.0; 10],
         selection: Selection::build(&m, (0..j.k as u32).collect(), &caps),
         build_ms: 0.0,
+        tuned: None,
     });
     c.install(0, 100, r.k, r.built.selection);
     assert!(c.fresh(0, 1));

@@ -1,0 +1,358 @@
+//! The kernel-conformance harness: the bit-exactness contract every
+//! planned-SpMM backend variant must pass, now and for any future
+//! backend (a Cranelift JIT would plug into the same sweep).
+//!
+//! Ground truth is [`scalar_oracle`] — a plain sequential scalar triple
+//! loop written out *in this file*, independent of the library's
+//! helpers, accumulating each output element's edges in edge-list order.
+//! The plan groups edges by destination row with a stable sort, so per
+//! output element the plan's row order *is* edge-list order — every
+//! conformant variant must therefore reproduce the oracle bit for bit
+//! at any thread count, any tile size, and with the SIMD dispatch on or
+//! off.  The autotuner builds on this contract: racing bit-identical
+//! loops can only ever change timing, so its recorded choice merely has
+//! to be *legal* (a member of the conformance set), which this harness
+//! also pins.
+//!
+//! Concurrency notes (tests are threads of one process sharing the
+//! global SIMD switch): every test starts with [`apply_simd_env`] so the
+//! CI `RSC_NO_SIMD=1` dimension applies regardless of test order, the
+//! conformance sweeps execute every variant unconditionally (they are
+//! bit-identical whichever dispatch is live), and tuner legality is
+//! asserted against the state-independent [`contract_variants`]
+//! superset.  Only `simd_on_off_parity_is_bitwise` genuinely flips the
+//! switch, via the restoring [`rsc::runtime::simd::SimdGuard`], and its
+//! assertions are pure parity checks.
+
+use rsc::runtime::native::spmm_planned_variant_into;
+use rsc::runtime::plan::{
+    select_kernel, ChoiceSource, KernelChoice, SpmmKernel, SpmmPlan, TILE_HUB, TILE_WIDE,
+};
+use rsc::runtime::{autotune, simd};
+use rsc::util::parallel::Parallelism;
+use rsc::util::rng::Rng;
+
+/// Apply the CI ablation env (`RSC_NO_SIMD=1` pins the scalar mirrors).
+fn apply_simd_env() {
+    if std::env::var_os("RSC_NO_SIMD").is_some() {
+        simd::set_enabled(false);
+    }
+}
+
+/// The width sweep: around the scalar/axpy4/simd heuristic thresholds,
+/// off-by-one of the 8-wide vector, the two tile caps, and 256.
+const WIDTHS: [usize; 11] = [1, 2, 3, 5, 8, 13, 16, 33, 64, 129, 256];
+
+/// Thread counts the parallel split is exercised at (grain forced to 1
+/// so even these tiny graphs genuinely split).
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+// ---------------------------------------------------------------------
+// case generator
+// ---------------------------------------------------------------------
+
+/// One reusable conformance case: a (src, dst, w) edge list with a known
+/// output/input row count, named for failure messages.
+struct KernelCase {
+    name: String,
+    src: Vec<i32>,
+    dst: Vec<i32>,
+    w: Vec<f32>,
+    vout: usize,
+    nsrc: usize,
+}
+
+impl KernelCase {
+    fn from_degrees(name: &str, degrees: &[usize], nsrc: usize, seed: u64) -> KernelCase {
+        let mut rng = Rng::new(seed);
+        let (mut src, mut dst, mut w) = (Vec::new(), Vec::new(), Vec::new());
+        for (t, &deg) in degrees.iter().enumerate() {
+            for _ in 0..deg {
+                src.push(rng.below(nsrc) as i32);
+                dst.push(t as i32);
+                // non-zero weights only: zero means padding by contract
+                w.push(0.25 + rng.f32());
+            }
+        }
+        KernelCase { name: name.to_string(), src, dst, w, vout: degrees.len(), nsrc }
+    }
+
+    /// Uniform degree — the plan's nnz balancer has nothing to do.
+    fn uniform(v: usize, deg: usize, seed: u64) -> KernelCase {
+        KernelCase::from_degrees("uniform", &vec![deg; v], v, seed)
+    }
+
+    /// Power-law-ish degrees (the paper's graph regime): row t gets
+    /// roughly `max_deg / (t + 1)` edges, so a few rows dominate nnz.
+    fn power_law(v: usize, max_deg: usize, seed: u64) -> KernelCase {
+        let degrees: Vec<usize> = (0..v).map(|t| (max_deg / (t + 1)).max(1)).collect();
+        KernelCase::from_degrees("power-law", &degrees, v, seed)
+    }
+
+    /// A couple of hub rows holding most edges, the rest nearly empty —
+    /// the shape the hub tile cap exists for.
+    fn hub_heavy(v: usize, hub_deg: usize, seed: u64) -> KernelCase {
+        let degrees: Vec<usize> =
+            (0..v).map(|t| if t < 2 { hub_deg } else { usize::from(t % 3 == 0) }).collect();
+        KernelCase::from_degrees("hub-heavy", &degrees, v, seed)
+    }
+
+    /// No edges at all: the output must be exactly zero.
+    fn empty(vout: usize) -> KernelCase {
+        KernelCase {
+            name: "empty".into(),
+            src: Vec::new(),
+            dst: Vec::new(),
+            w: Vec::new(),
+            vout,
+            nsrc: 3,
+        }
+    }
+
+    /// Every edge lands on one destination row (the degenerate hub).
+    fn single_row(deg: usize, nsrc: usize, seed: u64) -> KernelCase {
+        let mut c = KernelCase::from_degrees("single-row", &[deg], nsrc, seed);
+        c.vout = 5; // trailing rows with no edges stay zero
+        c
+    }
+
+    /// A real case plus a padding tail of zero-weight edges carrying
+    /// sentinel indices — legal by contract because padding is skipped
+    /// before src/dst are ever read.
+    fn padded(seed: u64) -> KernelCase {
+        let mut c = KernelCase::uniform(40, 4, seed);
+        c.name = "padded".into();
+        for _ in 0..64 {
+            c.src.push(-1);
+            c.dst.push(-7);
+            c.w.push(0.0);
+        }
+        c
+    }
+
+    /// The full conformance menu.
+    fn all() -> Vec<KernelCase> {
+        vec![
+            KernelCase::uniform(96, 5, 11),
+            KernelCase::power_law(120, 160, 12),
+            KernelCase::hub_heavy(80, 90, 13),
+            KernelCase::empty(7),
+            KernelCase::single_row(50, 20, 14),
+            KernelCase::padded(15),
+        ]
+    }
+
+    fn x(&self, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(0xC0DE ^ (d as u64) << 4);
+        (0..self.nsrc * d).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn plan(&self, par: Parallelism) -> SpmmPlan {
+        SpmmPlan::build(&self.dst, &self.w, self.vout, par)
+    }
+}
+
+/// The sequential scalar ground truth, independent of the library's
+/// kernels: per output element, edges accumulate in edge-list order.
+fn scalar_oracle(c: &KernelCase, x: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; c.vout * d];
+    for e in 0..c.dst.len() {
+        let we = c.w[e];
+        if we == 0.0 {
+            continue;
+        }
+        let (s, t) = (c.src[e] as usize, c.dst[e] as usize);
+        for j in 0..d {
+            out[t * d + j] += we * x[s * d + j];
+        }
+    }
+    out
+}
+
+/// Every variant held to the contract at width `d` — a superset of
+/// [`autotune::candidates`] that does *not* consult the live SIMD
+/// switch: the simd-tiled loop must match the oracle whether its
+/// dispatch resolves to the AVX body or the scalar mirror.
+fn contract_variants(d: usize) -> Vec<KernelChoice> {
+    let mut out = vec![
+        KernelChoice { kernel: SpmmKernel::Scalar, tile: d.max(1) },
+        KernelChoice { kernel: SpmmKernel::Axpy4, tile: d.max(1) },
+    ];
+    for tile in [d.max(1), d.min(TILE_WIDE).max(1), d.min(TILE_HUB).max(1), (d / 4).max(1)] {
+        let c = KernelChoice { kernel: SpmmKernel::SimdTiled, tile };
+        if !out.contains(&c) {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Run one variant into a deliberately dirty buffer and return it.
+fn run_case(
+    c: &KernelCase,
+    plan: &SpmmPlan,
+    choice: KernelChoice,
+    x: &[f32],
+    d: usize,
+    par: Parallelism,
+) -> Vec<f32> {
+    let mut out = vec![7.5f32; c.vout * d]; // kernels must overwrite, not accumulate
+    spmm_planned_variant_into(plan, choice, &c.src, &c.w, x, d, &mut out, par);
+    out
+}
+
+// ---------------------------------------------------------------------
+// the contract
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_variant_is_bit_identical_to_the_scalar_oracle() {
+    apply_simd_env();
+    for c in KernelCase::all() {
+        for &d in &WIDTHS {
+            let x = c.x(d);
+            let want = scalar_oracle(&c, &x, d);
+            for &n in &THREADS {
+                let par = Parallelism::with_threads(n).with_grain(1);
+                let plan = c.plan(par);
+                for choice in contract_variants(d) {
+                    let got = run_case(&c, &plan, choice, &x, d, par);
+                    assert_eq!(
+                        got, want,
+                        "case {} d={d} threads={n} variant {}",
+                        c.name,
+                        choice.describe()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes_produce_exact_zeros() {
+    apply_simd_env();
+    for c in [KernelCase::empty(7), KernelCase::padded(99)] {
+        let d = 16;
+        let x = c.x(d);
+        let want = scalar_oracle(&c, &x, d);
+        let par = Parallelism::with_threads(4).with_grain(1);
+        let plan = c.plan(par);
+        if c.name == "empty" {
+            assert_eq!(plan.nnz(), 0);
+            assert!(want.iter().all(|&v| v == 0.0));
+        }
+        for choice in contract_variants(d) {
+            let got = run_case(&c, &plan, choice, &x, d, par);
+            assert_eq!(got, want, "case {} variant {}", c.name, choice.describe());
+        }
+    }
+}
+
+#[test]
+fn simd_on_off_parity_is_bitwise() {
+    // pure parity assertions: flip the global dispatch both ways via the
+    // restoring guard and demand identical bits from every variant
+    apply_simd_env();
+    let c = KernelCase::power_law(100, 120, 21);
+    for d in [8usize, 64, 129] {
+        let x = c.x(d);
+        let par = Parallelism::with_threads(4).with_grain(1);
+        let plan = c.plan(par);
+        for choice in contract_variants(d) {
+            let on = {
+                let _g = simd::SimdGuard::set(true);
+                run_case(&c, &plan, choice, &x, d, par)
+            };
+            let off = {
+                let _g = simd::SimdGuard::set(false);
+                run_case(&c, &plan, choice, &x, d, par)
+            };
+            assert_eq!(
+                on, off,
+                "simd on/off parity broke: d={d} variant {}",
+                choice.describe()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the autotuner against the contract
+// ---------------------------------------------------------------------
+
+#[test]
+fn autotuner_choice_is_always_legal_and_recorded() {
+    apply_simd_env();
+    for c in KernelCase::all() {
+        for &d in &[1usize, 8, 64] {
+            let plan = c.plan(Parallelism::sequential());
+            let choice = autotune::tune_plan(&plan, &c.src, &c.w, d);
+            assert!(
+                contract_variants(d).contains(&choice),
+                "case {} d={d}: tuned {} is not a conformant variant",
+                c.name,
+                choice.describe()
+            );
+            let (rec_d, recorded) = plan.chosen().expect("tune_plan must record");
+            assert_eq!((rec_d, recorded), (d, choice), "case {}", c.name);
+            // and the recorded choice computes exactly the oracle
+            let x = c.x(d);
+            let got = run_case(&c, &plan, choice, &x, d, Parallelism::sequential());
+            assert_eq!(got, scalar_oracle(&c, &x, d), "case {} d={d}", c.name);
+        }
+    }
+}
+
+#[test]
+fn tuning_cache_answers_stay_inside_the_contract() {
+    apply_simd_env();
+    // d = 41 keeps this test's (nnz bucket, row bucket, width) key away
+    // from every other test touching the process-global tuning cache
+    let d = 41usize;
+    let c = KernelCase::uniform(90, 6, 31);
+    let first = autotune::tune_plan(&c.plan(Parallelism::sequential()), &c.src, &c.w, d);
+    let plan_b = c.plan(Parallelism::sequential());
+    let second = autotune::tune_plan(&plan_b, &c.src, &c.w, d);
+    assert_eq!(first, second, "same shape class must reuse the raced winner");
+    assert!(contract_variants(d).contains(&second));
+    let (_, _, source) = plan_b.chosen_full().expect("recorded");
+    assert!(
+        matches!(source, ChoiceSource::Tuned | ChoiceSource::TuningCache),
+        "second same-shape plan should be tuned or cache-served, got {source:?}"
+    );
+}
+
+#[test]
+fn degenerate_plans_fall_back_to_the_heuristic() {
+    apply_simd_env();
+    let c = KernelCase::empty(9);
+    let plan = c.plan(Parallelism::sequential());
+    let choice = autotune::tune_plan(&plan, &c.src, &c.w, 32);
+    assert_eq!(choice, select_kernel(plan.avg_nnz_per_row(), 32));
+    let (_, _, source) = plan.chosen_full().expect("recorded");
+    assert_eq!(source, ChoiceSource::Heuristic);
+    // width 0 is equally degenerate on a real graph
+    let real = KernelCase::uniform(30, 4, 32);
+    let p2 = real.plan(Parallelism::sequential());
+    let c2 = autotune::tune_plan(&p2, &real.src, &real.w, 0);
+    assert_eq!(c2.kernel, SpmmKernel::Scalar);
+}
+
+#[test]
+fn live_candidate_set_is_a_subset_of_the_contract() {
+    apply_simd_env();
+    // whatever the ambient simd switch says, the set the tuner races is
+    // contained in the set this harness proves bit-identical
+    for &d in &WIDTHS {
+        for avg in [0.5f64, 4.0, 64.0] {
+            for cand in autotune::candidates(avg, d) {
+                assert!(
+                    contract_variants(d).contains(&cand),
+                    "candidate {} at d={d} escapes the conformance sweep",
+                    cand.describe()
+                );
+            }
+        }
+    }
+}

@@ -438,6 +438,7 @@ fn sample_cache_refresh_drops_the_cached_plan() {
         scores: vec![0.0; 30],
         selection: Selection::build(&adj, (0..j.k as u32).collect(), &caps),
         build_ms: 0.0,
+        tuned: None,
     };
     cache.schedule(0, 0, job.clone(), None);
     let r = cache.resolve(0, 0, job.clone(), build);

@@ -1,0 +1,109 @@
+//! Seed-determinism regression: two `train` runs with the same seed and
+//! thread count must be *bit-identical* — same loss curve, same final
+//! weights — for every registered architecture, with the prefetch
+//! pipeline and the kernel autotuner both on and both off.  On top of
+//! per-config determinism, the on/off configs must also agree with each
+//! other: prefetching only moves refresh builds between threads, and
+//! autotuning only picks among bit-identical kernels, so neither may
+//! shift a single bit (the `--no-autotune` acceptance of DESIGN.md
+//! §Autotuned kernel selection).
+//!
+//! Runs on the synthesized op catalog, so it needs no AOT artifacts.
+//! GraphSAINT is skipped there (the synthesized manifest carries no
+//! saint bucket ladder); the remaining five full-batch architectures
+//! all train.  Everything lives in ONE `#[test]` on purpose: the
+//! autotune counters are process-global, and a sibling test training
+//! concurrently in another thread would bleed into the per-run deltas
+//! this test pins to zero for the ablated configs.
+
+use rsc::coordinator::RscConfig;
+use rsc::data::load_or_generate;
+use rsc::graph::ReorderKind;
+use rsc::model::ops::ModelKind;
+use rsc::runtime::NativeBackend;
+use rsc::train::{train, TrainConfig, TrainResult};
+
+fn cfg(model: ModelKind, ablated: bool) -> TrainConfig {
+    TrainConfig {
+        model,
+        epochs: 10,
+        lr: 0.01,
+        seed: 42,
+        rsc: RscConfig {
+            budget_c: 0.3,
+            prefetch: !ablated,
+            autotune: !ablated,
+            ..Default::default()
+        },
+        eval_every: 5,
+        verbose: false,
+        saint_subgraphs: 4,
+        saint_batches_per_epoch: 2,
+        reorder: ReorderKind::Degree,
+    }
+}
+
+fn assert_identical(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(a.loss_curve, b.loss_curve, "{what}: loss curves diverged");
+    assert_eq!(
+        a.weights_fingerprint, b.weights_fingerprint,
+        "{what}: final weights diverged"
+    );
+    assert_eq!(a.val_curve, b.val_curve, "{what}: val curves diverged");
+    assert_eq!(a.test_metric, b.test_metric, "{what}: test metric diverged");
+}
+
+#[test]
+fn same_seed_same_bits_for_every_model_with_and_without_ablations() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+    let mut saw_tuned_refresh = false;
+    for model in ModelKind::ALL {
+        if model == ModelKind::Saint && b.manifest().dataset.saint_caps.is_empty() {
+            eprintln!("skipping {model:?}: synthesized catalog has no saint ladder");
+            continue;
+        }
+        let on_a = train(&b, &ds, &cfg(model, false)).unwrap();
+        let on_b = train(&b, &ds, &cfg(model, false)).unwrap();
+        assert_identical(&on_a, &on_b, &format!("{model:?} prefetch+autotune on"));
+
+        let off_a = train(&b, &ds, &cfg(model, true)).unwrap();
+        let off_b = train(&b, &ds, &cfg(model, true)).unwrap();
+        assert_identical(&off_a, &off_b, &format!("{model:?} prefetch+autotune off"));
+
+        // the ablations may only move work around, never change bits
+        assert_identical(&on_a, &off_a, &format!("{model:?} on-vs-off ablation"));
+
+        // the tuned run made autotune decisions (warmup tunes the static
+        // forward/exact plans; refresh builds tune the sampled plans) …
+        assert!(
+            on_a.autotune.total() > 0,
+            "{model:?}: autotune on but no decisions recorded: {:?}",
+            on_a.autotune
+        );
+        for (_, _, label) in &on_a.tuned_kernels {
+            assert!(label.contains("@ d="), "tuned label lost its width: {label}");
+        }
+        saw_tuned_refresh |= !on_a.tuned_kernels.is_empty();
+        // … the kernel label says where the decision came from …
+        if let Some(k) = &on_a.fwd_kernel {
+            assert!(
+                k.contains("tuned") || k.contains("tuning-cache") || k.contains("heuristic"),
+                "{model:?}: kernel label lost its source: {k}"
+            );
+        }
+        // … and the ablated run never raced or consulted the tuning
+        // cache (safe to pin at zero: this binary has exactly one test,
+        // so nothing else moves the process-global counters)
+        assert_eq!(
+            off_a.autotune.races + off_a.autotune.cache_hits,
+            0,
+            "{model:?}: --no-autotune still tuned: {:?}",
+            off_a.autotune
+        );
+    }
+    assert!(
+        saw_tuned_refresh,
+        "no model recorded a tuned refresh-build kernel"
+    );
+}
