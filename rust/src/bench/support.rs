@@ -111,6 +111,7 @@ pub fn run_trials(
             saint_subgraphs: 8,
             saint_batches_per_epoch: 4,
             reorder: ReorderKind::Degree,
+            ..TrainConfig::new(model)
         };
         let res = train(backend, &ds, &cfg)?;
         metrics.push(res.test_metric);
@@ -438,6 +439,7 @@ pub fn prefetch_on_vs_off(dataset: &str, epochs: usize) -> Result<PrefetchRow> {
         saint_subgraphs: 4,
         saint_batches_per_epoch: 2,
         reorder: ReorderKind::Degree,
+        ..TrainConfig::new(ModelKind::Gcn)
     };
     let on = train(&b, &ds, &mk(true))?;
     let off = train(&b, &ds, &mk(false))?;

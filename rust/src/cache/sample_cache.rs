@@ -289,6 +289,13 @@ impl SampleCache {
         self.entries[site].as_ref().map(|e| &e.selection)
     }
 
+    /// Due step of the in-flight background refresh for `site`, if any
+    /// (checkpoint capture: a pending build is reconstructed on resume
+    /// from this step plus the engine's budgets and norm snapshots).
+    pub fn pending_due(&self, site: usize) -> Option<u64> {
+        self.pending[site].as_ref().map(|p| p.due_step)
+    }
+
     pub fn invalidate_all(&mut self) {
         for e in self.entries.iter_mut() {
             *e = None;

@@ -250,6 +250,9 @@ pub struct RscEngine {
     grad_norms: Vec<Option<Arc<Vec<f32>>>>,
     cache: SampleCache,
     last_alloc: Option<u64>,
+    /// Steps strictly below this run exact regardless of cache state —
+    /// the divergence watchdog's escalation window (0 = no window).
+    forced_exact_until: u64,
     /// Thread-parallelism used for score computation, top-k sorts and
     /// cache rebuilds (captured from the process default at construction;
     /// see [`RscEngine::with_parallelism`]).
@@ -304,6 +307,7 @@ impl RscEngine {
             grad_norms: (0..sites).map(|_| None).collect(),
             cache: SampleCache::new(sites),
             last_alloc: None,
+            forced_exact_until: 0,
             parallelism: parallel::global(),
             overlap: OverlapTracker::new(sites, 10),
             alloc_history: Vec::new(),
@@ -350,14 +354,51 @@ impl RscEngine {
     }
 
     /// Feed back the row-norms of the gradient entering site `site`.
+    ///
+    /// Non-finite norms are *dropped* (the site reverts to "not yet
+    /// observed"): a NaN/Inf gradient must never reach the allocator or a
+    /// refresh job, where it would silently produce garbage budgets.  The
+    /// engine serves exact plans until finite norms arrive again — the
+    /// same degradation lever the divergence watchdog pulls explicitly.
     pub fn observe_norms(&mut self, site: usize, norms: Vec<f32>) {
         debug_assert_eq!(norms.len(), self.col_norms.len());
+        if norms.iter().any(|x| !x.is_finite()) {
+            self.grad_norms[site] = None;
+            return;
+        }
         self.grad_norms[site] = Some(Arc::new(norms));
     }
 
     /// True once every site has observed norms (approx can start).
     fn ready(&self) -> bool {
         self.grad_norms.iter().all(|n| n.is_some())
+    }
+
+    /// Is `step` inside a watchdog-forced exact window?
+    fn forced_exact(&self, step: u64) -> bool {
+        step < self.forced_exact_until
+    }
+
+    /// Force every site exact for all steps `< until` (the watchdog's
+    /// escalation after repeated non-finite trips).  Never shrinks an
+    /// existing window.
+    pub fn force_exact_until(&mut self, until: u64) {
+        self.forced_exact_until = self.forced_exact_until.max(until);
+    }
+
+    /// Discard every piece of state a non-finite step may have poisoned:
+    /// cached selections, in-flight refresh builds, norm snapshots and
+    /// budgets.  The engine reverts to its pre-first-allocation posture —
+    /// exact plans until fresh finite norms arrive and the allocator
+    /// reruns — which is exactly how a fresh engine starts, so a
+    /// re-executed step converges with an untripped run bit-for-bit.
+    pub fn quarantine(&mut self) {
+        self.cache.invalidate_all();
+        for n in self.grad_norms.iter_mut() {
+            *n = None;
+        }
+        self.ks = vec![self.matrix.n; self.widths.len()];
+        self.last_alloc = None;
     }
 
     fn reallocate(&mut self, step: u64) {
@@ -430,6 +471,7 @@ impl RscEngine {
             let bc = self.build_cfg(site);
             let job = job.clone();
             parallel::spawn_background(move || {
+                crate::util::fault::maybe_panic("refresh_panic", due);
                 out.fill(execute_refresh(&col, &mat, &caps, bc, &job));
             });
             Some(slot)
@@ -457,7 +499,7 @@ impl RscEngine {
                     (d, d > step && d < horizon)
                 }
             };
-            if !schedule || self.in_exact_phase(due) {
+            if !schedule || self.in_exact_phase(due) || self.forced_exact(due) {
                 continue;
             }
             self.cache.clamp_due(site, due);
@@ -470,7 +512,7 @@ impl RscEngine {
     /// if that refresh falls strictly before the next allocation step,
     /// its inputs are already final — schedule (and prefetch) it now.
     fn maybe_schedule_age_refresh(&mut self, site: usize, due: u64) {
-        if self.in_exact_phase(due) {
+        if self.in_exact_phase(due) || self.forced_exact(due) {
             return;
         }
         if let Some(t) = self.next_norm_step() {
@@ -536,7 +578,7 @@ impl RscEngine {
 
     /// Decide the plan for backward-SpMM `site` at `step`.
     pub fn plan<'a>(&'a mut self, site: usize, step: u64, exact: &'a Selection) -> Plan<'a> {
-        if self.in_exact_phase(step) || !self.ready() {
+        if self.in_exact_phase(step) || self.forced_exact(step) || !self.ready() {
             if site == 0 {
                 self.exact_steps += 1;
             }
@@ -588,6 +630,135 @@ impl RscEngine {
     pub fn prefetch_stats(&self) -> PrefetchStats {
         self.cache.prefetch_stats()
     }
+
+    /// The sampled selection currently cached for `site`, if any
+    /// (diagnostics and the checkpoint-restore tests).
+    pub fn peek_selection(&self, site: usize) -> Option<&Selection> {
+        self.cache.peek(site)
+    }
+
+    /// Snapshot everything a resumed run needs to continue bit-identically:
+    /// budgets, norm snapshots, the exact-window marker, the step counters
+    /// the switch accounting reports, and the cache's *schedule* — each
+    /// entry's selected rows plus due/k, and each in-flight build's due
+    /// step.  Selections and refresh builds are pure functions of those
+    /// inputs (the prefetch determinism contract), so the restore side
+    /// rebuilds them instead of serializing edge buffers.  Wall-clock
+    /// diagnostics (hit rates, alloc history, timings) restart from zero.
+    pub fn export_state(&self) -> EngineState {
+        let sites = self.widths.len();
+        EngineState {
+            ks: self.ks.clone(),
+            grad_norms: self
+                .grad_norms
+                .iter()
+                .map(|n| n.as_ref().map(|a| a.as_slice().to_vec()))
+                .collect(),
+            last_alloc: self.last_alloc,
+            forced_exact_until: self.forced_exact_until,
+            approx_steps: self.approx_steps,
+            exact_steps: self.exact_steps,
+            entries: (0..sites)
+                .map(|s| {
+                    self.cache
+                        .entry(s)
+                        .map(|e| (e.due_step, e.k, e.selection.rows.clone()))
+                })
+                .collect(),
+            pending_due: (0..sites).map(|s| self.cache.pending_due(s)).collect(),
+        }
+    }
+
+    /// Rebuild the engine's live state from [`RscEngine::export_state`]
+    /// output.  Cached selections are rebuilt from their row lists (plans
+    /// eagerly, like a refresh build, but without re-racing the autotuner
+    /// — kernel choice never affects bits); in-flight refresh builds are
+    /// reconstructed from the restored budgets and norm snapshots, which
+    /// by the staleness invariant are exactly the inputs the interrupted
+    /// run's builds were using.  Validates shapes against the live graph:
+    /// a checkpoint for a different site registry or node count is an
+    /// error, not UB.
+    pub fn restore_state(&mut self, st: &EngineState) -> Result<()> {
+        let sites = self.widths.len();
+        let n = self.matrix.n;
+        ensure!(
+            st.ks.len() == sites
+                && st.grad_norms.len() == sites
+                && st.entries.len() == sites
+                && st.pending_due.len() == sites,
+            "engine snapshot has {} sites, model has {sites}",
+            st.ks.len()
+        );
+        for (s, k) in st.ks.iter().enumerate() {
+            ensure!(*k <= n, "site {s}: snapshot k={k} exceeds {n} nodes");
+        }
+        for (s, norms) in st.grad_norms.iter().enumerate() {
+            if let Some(v) = norms {
+                ensure!(
+                    v.len() == n,
+                    "site {s}: snapshot norms len {} != {n} nodes",
+                    v.len()
+                );
+            }
+        }
+        self.ks = st.ks.clone();
+        self.grad_norms = st
+            .grad_norms
+            .iter()
+            .map(|n| n.as_ref().map(|v| Arc::new(v.clone())))
+            .collect();
+        self.last_alloc = st.last_alloc;
+        self.forced_exact_until = st.forced_exact_until;
+        self.approx_steps = st.approx_steps;
+        self.exact_steps = st.exact_steps;
+        for (site, entry) in st.entries.iter().enumerate() {
+            let Some((due, k, rows)) = entry else { continue };
+            for &r in rows {
+                ensure!(
+                    (r as usize) < n,
+                    "site {site}: snapshot selection row {r} out of range for {n} nodes"
+                );
+            }
+            let selection =
+                Selection::build_with(&self.matrix, rows.clone(), &self.caps, self.parallelism);
+            if self.cfg.plan_cache {
+                let _ = selection.spmm_plan(self.parallelism);
+            }
+            self.cache.install(site, *due, *k, selection);
+        }
+        for (site, due) in st.pending_due.iter().enumerate() {
+            let Some(due) = *due else { continue };
+            ensure!(
+                self.grad_norms[site].is_some(),
+                "site {site}: snapshot has an in-flight refresh but no norm snapshot"
+            );
+            let job = self.job_for(site);
+            self.schedule_one(site, due, job);
+        }
+        Ok(())
+    }
+}
+
+/// A serializable snapshot of the [`RscEngine`]'s training-relevant
+/// state (see [`RscEngine::export_state`]); `train/checkpoint.rs` embeds
+/// one per checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineState {
+    /// Allocated k_l per site.
+    pub ks: Vec<usize>,
+    /// Latest observed gradient row-norms per site.
+    pub grad_norms: Vec<Option<Vec<f32>>>,
+    /// Step the allocator last ran at.
+    pub last_alloc: Option<u64>,
+    /// Watchdog-forced exact window (steps strictly below run exact).
+    pub forced_exact_until: u64,
+    /// Approx/exact step counters (switch accounting in `TrainResult`).
+    pub approx_steps: u64,
+    pub exact_steps: u64,
+    /// Per site: cached selection as (due step, k, selected rows).
+    pub entries: Vec<Option<(u64, usize, Vec<u32>)>>,
+    /// Per site: due step of the in-flight refresh build.
+    pub pending_due: Vec<Option<u64>>,
 }
 
 #[cfg(test)]
@@ -845,5 +1016,125 @@ mod tests {
             }
         }
         assert!(hits >= 1, "no tiny build completed within any window");
+    }
+
+    #[test]
+    fn non_finite_norms_never_reach_the_allocator() {
+        let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+        let (mut e, _m, _caps, exact) = setup(cfg, 1000);
+        e.observe_norms(0, vec![1.0; 40]);
+        let mut bad = vec![1.0; 40];
+        bad[7] = f32::NAN;
+        e.observe_norms(1, bad);
+        // site 1's poisoned observation is dropped, so the engine is not
+        // ready: every plan is exact and the allocator never runs
+        for step in 0..4 {
+            assert!(!e.plan(1, step, &exact).is_approx());
+            assert!(!e.plan(0, step, &exact).is_approx());
+        }
+        assert!(e.alloc_history.is_empty());
+        // finite norms heal it
+        e.observe_norms(1, vec![1.0; 40]);
+        e.plan(0, 4, &exact); // allocator runs here
+        assert_eq!(e.alloc_history.len(), 1);
+        assert!(e.plan(0, 5, &exact).is_approx());
+    }
+
+    #[test]
+    fn quarantine_reverts_to_fresh_engine_posture() {
+        let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+        let (mut e, m, _caps, exact) = setup(cfg, 1000);
+        e.observe_norms(0, vec![0.5; 40]);
+        e.observe_norms(1, vec![2.0; 40]);
+        e.plan(0, 1, &exact); // allocator runs, refreshes scheduled
+        assert!(e.plan(0, 2, &exact).is_approx());
+        e.quarantine();
+        assert_eq!(e.ks(), &[m.n; 2][..]);
+        assert!(e.peek_selection(0).is_none());
+        // not ready anymore: exact until norms are re-observed and the
+        // allocator has rerun, exactly like a fresh engine
+        assert!(!e.plan(0, 3, &exact).is_approx());
+        e.observe_norms(0, vec![0.5; 40]);
+        e.observe_norms(1, vec![2.0; 40]);
+        assert!(!e.plan(0, 3, &exact).is_approx()); // allocator reruns here
+        assert!(e.plan(0, 4, &exact).is_approx());
+    }
+
+    #[test]
+    fn forced_exact_window_suppresses_approx_and_expires() {
+        let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+        let (mut e, _m, _caps, exact) = setup(cfg, 1000);
+        e.observe_norms(0, vec![1.0; 40]);
+        e.observe_norms(1, vec![1.0; 40]);
+        e.plan(0, 1, &exact);
+        assert!(e.plan(0, 2, &exact).is_approx());
+        e.force_exact_until(6);
+        for step in 3..6 {
+            assert!(!e.plan(0, step, &exact).is_approx(), "step {step}");
+            assert!(!e.plan(1, step, &exact).is_approx(), "step {step}");
+        }
+        // window never shrinks
+        e.force_exact_until(4);
+        assert!(!e.plan(0, 5, &exact).is_approx());
+        // past the window the cached schedule takes over again
+        assert!(e.plan(0, 6, &exact).is_approx());
+    }
+
+    #[test]
+    fn export_restore_resumes_bit_identically_mid_schedule() {
+        // drive a reference engine for 40 steps; at step 20 (right after
+        // an allocation barrier, so an in-flight refresh build is live)
+        // export, restore into a fresh engine, and require the two to
+        // serve identical plans for the remaining steps
+        let mk_engine = || {
+            let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+            setup(cfg, 1000)
+        };
+        let norms_at = |step: u64, site: usize| -> Vec<f32> {
+            (0..40)
+                .map(|i| ((i * 7 + step as usize * 3 + site) % 13) as f32)
+                .collect()
+        };
+        let drive = |e: &mut RscEngine, exact: &Selection, steps: std::ops::Range<u64>| {
+            let mut trace: Vec<(bool, Vec<u32>, usize, usize)> = Vec::new();
+            for step in steps {
+                for site in (0..2).rev() {
+                    if e.norms_wanted(step) {
+                        e.observe_norms(site, norms_at(step, site));
+                    }
+                    let p = e.plan(site, step, exact);
+                    let s = p.selection();
+                    trace.push((p.is_approx(), s.rows.clone(), s.nnz, s.cap));
+                }
+            }
+            trace
+        };
+
+        let (mut reference, _m, _caps, exact) = mk_engine();
+        drive(&mut reference, &exact, 0..21);
+        let snapshot = reference.export_state();
+        assert!(
+            snapshot.pending_due.iter().any(|p| p.is_some()),
+            "step 20 is an allocation barrier: a pending build must be live"
+        );
+        let tail_ref = drive(&mut reference, &exact, 21..40);
+
+        let (mut resumed, _m2, _caps2, exact2) = mk_engine();
+        resumed.restore_state(&snapshot).unwrap();
+        assert_eq!(resumed.export_state(), snapshot, "restore must round-trip");
+        let tail_res = drive(&mut resumed, &exact2, 21..40);
+        assert_eq!(tail_ref, tail_res, "resumed engine diverged");
+
+        // shape validation: a snapshot for a different graph is an error
+        let mut wrong = snapshot.clone();
+        wrong.ks = vec![0; 3];
+        assert!(resumed.restore_state(&wrong).is_err());
+        let mut bad_rows = snapshot.clone();
+        if let Some(Some((_, _, rows))) =
+            bad_rows.entries.iter_mut().find(|e| e.is_some()).map(|e| e.as_mut())
+        {
+            rows.push(10_000);
+        }
+        assert!(resumed.restore_state(&bad_rows).is_err());
     }
 }

@@ -8,4 +8,4 @@
 
 pub mod engine;
 
-pub use engine::{AllocKind, Plan, RscConfig, RscEngine};
+pub use engine::{AllocKind, EngineState, Plan, RscConfig, RscEngine};

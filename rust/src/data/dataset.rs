@@ -133,6 +133,20 @@ impl Dataset {
         ensure!(self.adj.nnz() == c.e, "edge count mismatch");
         ensure!(self.features.len() == c.v * c.d_in, "feature shape");
         ensure!(self.split.len() == c.v, "split len");
+        // non-finite inputs would poison every downstream SpMM, trip the
+        // divergence watchdog on step 0 and defeat its exact-retry (the
+        // exact path is just as poisoned) — reject them at load time
+        if let Some(i) = self.features.iter().position(|x| !x.is_finite()) {
+            anyhow::bail!(
+                "feature {i} (node {}, dim {}) is non-finite: {}",
+                i / c.d_in,
+                i % c.d_in,
+                self.features[i]
+            );
+        }
+        if let Some(i) = self.adj.val.iter().position(|x| !x.is_finite()) {
+            anyhow::bail!("adjacency value {i} is non-finite: {}", self.adj.val[i]);
+        }
         match &self.labels {
             Labels::MultiClass(l) => {
                 ensure!(!c.multilabel, "label kind mismatch");

@@ -85,9 +85,40 @@ impl Csr {
         Csr::from_triples_with(n, triples, parallel::global())
     }
 
+    /// Fallible [`Csr::from_triples`] for *untrusted* triples (loaders,
+    /// samplers): rejects out-of-range node indices and non-finite edge
+    /// weights with an error naming the offending triple, instead of the
+    /// debug-only assert (release: silent OOB rowptr) of the trusted
+    /// by-construction path.
+    pub fn try_from_triples(n: usize, triples: Vec<(u32, u32, f32)>) -> crate::Result<Csr> {
+        Csr::try_from_triples_with(n, triples, parallel::global())
+    }
+
+    /// [`Csr::try_from_triples`] with an explicit parallelism config.
+    pub fn try_from_triples_with(
+        n: usize,
+        triples: Vec<(u32, u32, f32)>,
+        par: Parallelism,
+    ) -> crate::Result<Csr> {
+        for (i, &(r, c, w)) in triples.iter().enumerate() {
+            anyhow::ensure!(
+                (r as usize) < n && (c as usize) < n,
+                "triple {i}: node index ({r}, {c}) out of range for {n} nodes"
+            );
+            anyhow::ensure!(
+                w.is_finite(),
+                "triple {i}: non-finite edge weight {w} on edge ({r}, {c})"
+            );
+        }
+        Ok(Csr::from_triples_with(n, triples, par))
+    }
+
     /// [`Csr::from_triples`] with an explicit parallelism config.  The
     /// sort is *stable* on both paths, so duplicate (r, c) entries merge
     /// in input order and results are identical sequential vs parallel.
+    /// Indices are trusted (callers construct them by iteration over an
+    /// existing graph) — untrusted input goes through
+    /// [`Csr::try_from_triples`].
     pub fn from_triples_with(
         n: usize,
         mut triples: Vec<(u32, u32, f32)>,
@@ -810,5 +841,29 @@ mod tests {
             b.sort_by(|x, y| x.partial_cmp(y).unwrap());
             assert_eq!(a, b);
         });
+    }
+
+    #[test]
+    fn try_from_triples_validates_untrusted_input() {
+        // clean triples build the same matrix as the trusted path
+        let t = vec![(0u32, 1u32, 1.0f32), (1, 0, 2.0), (2, 2, 3.0)];
+        let a = Csr::try_from_triples(3, t.clone()).unwrap();
+        let b = Csr::from_triples(3, t);
+        assert_eq!((a.rowptr, a.col, a.val), (b.rowptr, b.col, b.val));
+
+        // out-of-range row, out-of-range col, NaN and infinite weights
+        let err = Csr::try_from_triples(3, vec![(3, 0, 1.0)]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = Csr::try_from_triples(3, vec![(0, 7, 1.0)]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = Csr::try_from_triples(3, vec![(0, 1, f32::NAN)]).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let err = Csr::try_from_triples(3, vec![(0, 1, f32::INFINITY)]).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+
+        // the error names the offending triple's position
+        let err =
+            Csr::try_from_triples(3, vec![(0, 0, 1.0), (1, 1, 1.0), (2, 9, 1.0)]).unwrap_err();
+        assert!(err.to_string().contains("triple 2"), "{err}");
     }
 }

@@ -22,6 +22,15 @@
 //! `--no-reorder` controls the one-shot locality-aware node reordering
 //! (ULP-equivalent per node; metrics unchanged).
 //!
+//! Fault tolerance (DESIGN.md §Fault tolerance): `--checkpoint-every N`
+//! writes an atomic, checksummed training snapshot every N epochs to
+//! `--checkpoint PATH` (default `rsc.ckpt`), and `--resume PATH`
+//! continues a run bit-identically from one (full-batch models only).
+//! `--no-watchdog` disables the divergence watchdog's exact-path retry
+//! of steps with non-finite loss/gradients.  `--faults SPEC` arms
+//! deterministic fault points (builds with `--features fault-inject`
+//! only), e.g. `--faults refresh_panic@3,nan_site@0`.
+//!
 //! Examples:
 //!   rsc train --dataset reddit-sim --model gcn --epochs 200 --rsc --budget 0.1
 //!   rsc train --dataset tiny --model sage --backend native --threads 8
@@ -36,7 +45,9 @@ use rsc::model::ops::ModelKind;
 use rsc::runtime::{simd, Backend, NativeBackend, XlaBackend};
 use rsc::train::{train, TrainConfig};
 use rsc::util::cli::Args;
+use rsc::util::fault;
 use rsc::util::parallel::{self, Parallelism};
+use std::path::PathBuf;
 
 /// Boolean (value-less) flags across all subcommands; declaring them
 /// keeps a following positional from being swallowed as a flag value
@@ -51,6 +62,7 @@ const BOOL_FLAGS: &[&str] = &[
     "no-simd",
     "no-autotune",
     "no-reorder",
+    "no-watchdog",
 ];
 
 fn main() {
@@ -166,6 +178,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --model ({})", ModelKind::usage()))?;
     let seed = args.u64_or("seed", 0)?;
     let ds = load_or_generate(&dataset, seed)?;
+    if let Some(spec) = args.str_opt("faults") {
+        if !fault::ENABLED {
+            bail!("--faults requires a build with --features fault-inject");
+        }
+        fault::arm_spec(&spec)?;
+    }
+    let checkpoint_every = args.usize_or("checkpoint-every", 0)?;
     let cfg = TrainConfig {
         model,
         epochs: args.usize_or("epochs", 100)?,
@@ -177,6 +196,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         saint_subgraphs: args.usize_or("saint-subgraphs", 8)?,
         saint_batches_per_epoch: args.usize_or("saint-batches", 4)?,
         reorder: reorder_flag(args)?,
+        checkpoint_every,
+        checkpoint_path: args
+            .str_opt("checkpoint")
+            .map(PathBuf::from)
+            .or_else(|| (checkpoint_every > 0).then(|| PathBuf::from("rsc.ckpt"))),
+        resume: args.str_opt("resume").map(PathBuf::from),
+        watchdog: !args.bool_or("no-watchdog", false)?,
     };
     args.finish()?;
 
@@ -232,6 +258,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.autotune.fallbacks,
         res.tuned_kernels.len()
     );
+    println!(
+        "fault tolerance: watchdog trips {} / recoveries {} / escalations {}  \
+         worker panics {}  checkpoints written {}{}",
+        res.watchdog_trips,
+        res.watchdog_recoveries,
+        res.watchdog_escalations,
+        res.worker_panics,
+        res.checkpoints_written,
+        match res.resumed_at {
+            Some(e) => format!("  (resumed at epoch {e})"),
+            None => String::new(),
+        }
+    );
+    // stable, greppable line the CI kill-and-resume job asserts on
+    println!("weights fingerprint: {:016x}", res.weights_fingerprint);
     println!("op-class time (ms total):");
     for label in res.tb.labels().map(str::to_string).collect::<Vec<_>>() {
         println!(

@@ -516,7 +516,10 @@ impl GraphModel {
                         )
                     }
                 })?;
-                let gj = gj.into_iter().next().unwrap();
+                // fault hook: `nan_site@site` poisons this site's
+                // backward-SpMM output (divergence-watchdog recovery tests)
+                let mut gj = gj.into_iter().next().unwrap();
+                crate::util::fault::poison_f32s("nan_site", site as u64, gj.f32s_mut()?);
                 let mm = {
                     let h_in = tape.val(x, input, node.inputs[0]);
                     tb.scope("bwd_dense", || {
@@ -578,7 +581,8 @@ impl GraphModel {
                             },
                         )
                     })?;
-                    let gh = out.into_iter().next().unwrap();
+                    let mut gh = out.into_iter().next().unwrap();
+                    crate::util::fault::poison_f32s("nan_site", site as u64, gh.f32s_mut()?);
                     self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
                 }
                 ws.recycle_all([gm, gh_a]);
@@ -617,7 +621,8 @@ impl GraphModel {
                         )
                     })?;
                     ws.recycle(gp);
-                    let gh = out.into_iter().next().unwrap();
+                    let mut gh = out.into_iter().next().unwrap();
+                    crate::util::fault::poison_f32s("nan_site", site as u64, gh.f32s_mut()?);
                     self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
                 } else {
                     ws.recycle(gp);
@@ -652,7 +657,8 @@ impl GraphModel {
                         )
                     })?;
                     ws.recycle(gp);
-                    let gh = out.into_iter().next().unwrap();
+                    let mut gh = out.into_iter().next().unwrap();
+                    crate::util::fault::poison_f32s("nan_site", site as u64, gh.f32s_mut()?);
                     self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
                 } else {
                     ws.recycle(gp);

@@ -54,6 +54,34 @@ impl Param {
         self.w.f32s_mut().expect("param weights are f32")
     }
 
+    /// Weights plus both Adam moments, borrowed (checkpoint capture).
+    pub fn state(&self) -> (&[f32], &[f32], &[f32]) {
+        (
+            self.w.f32s().expect("param weights are f32"),
+            self.m.f32s().expect("adam m is f32"),
+            self.v.f32s().expect("adam v is f32"),
+        )
+    }
+
+    /// Overwrite weights and Adam moments from a checkpoint snapshot.
+    pub fn load_state(&mut self, w: &[f32], m: &[f32], v: &[f32]) -> Result<()> {
+        let want = self.rows * self.cols;
+        anyhow::ensure!(
+            w.len() == want && m.len() == want && v.len() == want,
+            "param {}: snapshot sizes {}/{}/{} do not match {}x{}",
+            self.name,
+            w.len(),
+            m.len(),
+            v.len(),
+            self.rows,
+            self.cols
+        );
+        self.w.f32s_mut()?.copy_from_slice(w);
+        self.m.f32s_mut()?.copy_from_slice(m);
+        self.v.f32s_mut()?.copy_from_slice(v);
+        Ok(())
+    }
+
     /// Apply one Adam step through the backend op.  `grad` is consumed;
     /// with a workspace, it and the retired w/m/v buffers are recycled.
     pub fn adam_step(
@@ -144,6 +172,20 @@ mod tests {
         let mut rng2 = Rng::new(1);
         let p2 = Param::glorot("w", 20, 30, &mut rng2);
         assert_eq!(p.weights(), p2.weights());
+    }
+
+    #[test]
+    fn state_roundtrip_and_size_validation() {
+        let mut rng = Rng::new(3);
+        let src = Param::glorot("w", 3, 5, &mut rng);
+        let mut dst = Param::glorot("w", 3, 5, &mut rng);
+        assert_ne!(src.weights(), dst.weights());
+        let (w, m, v) = src.state();
+        let (w, m, v) = (w.to_vec(), m.to_vec(), v.to_vec());
+        dst.load_state(&w, &m, &v).unwrap();
+        assert_eq!(src.weights(), dst.weights());
+        assert_eq!(src.state().1, dst.state().1);
+        assert!(dst.load_state(&w[1..], &m, &v).is_err());
     }
 
     #[test]

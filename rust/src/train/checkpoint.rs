@@ -1,0 +1,605 @@
+//! Deterministic checkpoint/resume (DESIGN.md §Fault tolerance).
+//!
+//! A checkpoint is a versioned, checksummed snapshot of everything a
+//! full-batch training run needs to continue *bit-identically*: the
+//! parameters with both Adam moments and the step counter, the trainer's
+//! RNG stream, the engine's budgets / norm snapshots / cache schedule
+//! ([`EngineState`]), and the accumulated curves.  Restore validates a
+//! header — magic, format version, model kind, graph fingerprint, seed,
+//! epoch budget — before touching any live state, so resuming under the
+//! wrong model or dataset is a clear error instead of a silent
+//! divergence, and a truncated or bit-flipped file fails its trailing
+//! FNV-1a checksum rather than deserializing garbage.
+//!
+//! # Wire format (all little-endian)
+//!
+//! ```text
+//! magic    b"RSCCKPT1"
+//! u32      format version (1)
+//! str      model kind name
+//! u64      graph fingerprint (FNV over the normalized matrix)
+//! u64      seed              u64 epochs (total)     u64 next_epoch
+//! rng      4×u64 state + spare tag/f64 (Box–Muller pair cache)
+//! u64      adam step
+//! params   count, then per param: name, rows, cols, w/m/v f32 runs
+//! engine   EngineState (ks, norms, schedule — see coordinator/engine.rs)
+//! curves   loss f32 run, (epoch, val) pairs, best_val, test_at_best
+//! u64      FNV-1a checksum over every preceding byte
+//! ```
+//!
+//! Saves are atomic: the bytes are written and fsynced to `<path>.tmp`,
+//! then renamed over `path` (plus a best-effort parent-directory fsync),
+//! so a crash mid-save leaves the previous checkpoint intact.  The
+//! `torn_checkpoint_write` / `corrupt_checkpoint_byte` fault points
+//! (`util/fault.rs`) simulate exactly those crashes in the tests.
+
+use crate::coordinator::{EngineState, RscEngine};
+use crate::graph::Csr;
+use crate::model::exec::GraphModel;
+use crate::model::ops::ModelKind;
+use crate::util::fault;
+use crate::util::rng::Rng;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"RSCCKPT1";
+const VERSION: u32 = 1;
+
+/// One parameter's snapshot: identity plus weights and Adam moments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamState {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub w: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// A full training snapshot; see the module docs for the wire format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: ModelKind,
+    pub graph_fp: u64,
+    pub seed: u64,
+    /// Total epoch budget of the run (resume must match it: the switch
+    /// schedule and eval cadence depend on it).
+    pub epochs: u64,
+    /// First epoch the resumed run executes.
+    pub next_epoch: u64,
+    pub rng_s: [u64; 4],
+    pub rng_spare: Option<f64>,
+    pub adam_step: u64,
+    pub params: Vec<ParamState>,
+    pub engine: EngineState,
+    pub loss_curve: Vec<f32>,
+    pub val_curve: Vec<(u64, f64)>,
+    pub best_val: f64,
+    pub test_at_best: f64,
+}
+
+/// FNV-1a over raw bytes (the trailing checksum).
+fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Order-sensitive FNV-1a over the normalized adjacency a run trains on
+/// (shape, structure and edge-weight bits).  Stamped into every
+/// checkpoint so `--resume` under a different dataset, normalization or
+/// `--reorder` is rejected up front — any of those would make the
+/// "resumed run is bit-identical" contract silently false.
+pub fn graph_fingerprint(m: &Csr) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    mix(m.n as u64);
+    for &p in &m.rowptr {
+        mix(p as u64);
+    }
+    for &c in &m.col {
+        mix(c as u64);
+    }
+    for &v in &m.val {
+        mix(v.to_bits() as u64);
+    }
+    drop(mix);
+    h
+}
+
+// ---------------------------------------------------------------------
+// byte codec (in-house, like util/json.rs: the image carries no serde)
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f32(&mut self, x: f32) {
+        self.u32(x.to_bits());
+    }
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+    fn u32s(&mut self, xs: &[u32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+    fn opt_u64(&mut self, x: Option<u64>) {
+        match x {
+            Some(v) => {
+                self.u8(1);
+                self.u64(v);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+/// Bounds-checked reader: every read is an explicit `Result`, so a
+/// truncated or hostile file is an error, never a panic or OOB access.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.b.len() - self.pos >= n,
+            "checkpoint truncated at byte {} (wanted {n} more)",
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = std::str::from_utf8(self.take(n)?).context("checkpoint string is not UTF-8")?;
+        Ok(s.to_string())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        ensure!(self.b.len() - self.pos >= n * 4, "checkpoint truncated in f32 run");
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        ensure!(self.b.len() - self.pos >= n * 4, "checkpoint truncated in u32 run");
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.u64()?),
+        })
+    }
+}
+
+impl Checkpoint {
+    /// Serialize (wire format in the module docs), checksum included.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::default();
+        w.buf.extend_from_slice(MAGIC);
+        w.u32(VERSION);
+        w.str(self.model.name());
+        w.u64(self.graph_fp);
+        w.u64(self.seed);
+        w.u64(self.epochs);
+        w.u64(self.next_epoch);
+        for s in self.rng_s {
+            w.u64(s);
+        }
+        match self.rng_spare {
+            Some(x) => {
+                w.u8(1);
+                w.f64(x);
+            }
+            None => w.u8(0),
+        }
+        w.u64(self.adam_step);
+        w.u32(self.params.len() as u32);
+        for p in &self.params {
+            w.str(&p.name);
+            w.u64(p.rows as u64);
+            w.u64(p.cols as u64);
+            w.f32s(&p.w);
+            w.f32s(&p.m);
+            w.f32s(&p.v);
+        }
+        let e = &self.engine;
+        w.u32(e.ks.len() as u32);
+        for &k in &e.ks {
+            w.u64(k as u64);
+        }
+        for n in &e.grad_norms {
+            match n {
+                Some(v) => {
+                    w.u8(1);
+                    w.f32s(v);
+                }
+                None => w.u8(0),
+            }
+        }
+        w.opt_u64(e.last_alloc);
+        w.u64(e.forced_exact_until);
+        w.u64(e.approx_steps);
+        w.u64(e.exact_steps);
+        for entry in &e.entries {
+            match entry {
+                Some((due, k, rows)) => {
+                    w.u8(1);
+                    w.u64(*due);
+                    w.u64(*k as u64);
+                    w.u32s(rows);
+                }
+                None => w.u8(0),
+            }
+        }
+        for p in &e.pending_due {
+            w.opt_u64(*p);
+        }
+        w.f32s(&self.loss_curve);
+        w.u32(self.val_curve.len() as u32);
+        for &(epoch, val) in &self.val_curve {
+            w.u64(epoch);
+            w.f64(val);
+        }
+        w.f64(self.best_val);
+        w.f64(self.test_at_best);
+        let checksum = fnv1a_bytes(&w.buf);
+        w.u64(checksum);
+        w.buf
+    }
+
+    /// Parse and validate.  Check order: magic (is this a checkpoint at
+    /// all?), checksum (is it intact?), version, then the body.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        ensure!(
+            bytes.len() >= MAGIC.len() + 8,
+            "not a checkpoint: {} bytes is smaller than the header",
+            bytes.len()
+        );
+        ensure!(
+            &bytes[..MAGIC.len()] == MAGIC,
+            "not a checkpoint: bad magic (expected {:?})",
+            std::str::from_utf8(MAGIC).unwrap()
+        );
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let computed = fnv1a_bytes(body);
+        ensure!(
+            stored == computed,
+            "checkpoint checksum mismatch (stored {stored:016x}, computed {computed:016x}): \
+             the file is truncated or corrupt"
+        );
+        let mut r = Reader { b: body, pos: MAGIC.len() };
+        let version = r.u32()?;
+        ensure!(
+            version == VERSION,
+            "unsupported checkpoint format version {version} (this build reads {VERSION})"
+        );
+        let model_name = r.str()?;
+        let model = ModelKind::parse(&model_name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint names unknown model {model_name:?}"))?;
+        let graph_fp = r.u64()?;
+        let seed = r.u64()?;
+        let epochs = r.u64()?;
+        let next_epoch = r.u64()?;
+        let rng_s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let rng_spare = match r.u8()? {
+            0 => None,
+            _ => Some(r.f64()?),
+        };
+        let adam_step = r.u64()?;
+        let n_params = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n_params.min(1024));
+        for _ in 0..n_params {
+            let name = r.str()?;
+            let rows = r.u64()? as usize;
+            let cols = r.u64()? as usize;
+            let w = r.f32s()?;
+            let m = r.f32s()?;
+            let v = r.f32s()?;
+            params.push(ParamState { name, rows, cols, w, m, v });
+        }
+        let sites = r.u32()? as usize;
+        let mut ks = Vec::with_capacity(sites.min(1024));
+        for _ in 0..sites {
+            ks.push(r.u64()? as usize);
+        }
+        let mut grad_norms = Vec::with_capacity(sites.min(1024));
+        for _ in 0..sites {
+            grad_norms.push(match r.u8()? {
+                0 => None,
+                _ => Some(r.f32s()?),
+            });
+        }
+        let last_alloc = r.opt_u64()?;
+        let forced_exact_until = r.u64()?;
+        let approx_steps = r.u64()?;
+        let exact_steps = r.u64()?;
+        let mut entries = Vec::with_capacity(sites.min(1024));
+        for _ in 0..sites {
+            entries.push(match r.u8()? {
+                0 => None,
+                _ => {
+                    let due = r.u64()?;
+                    let k = r.u64()? as usize;
+                    let rows = r.u32s()?;
+                    Some((due, k, rows))
+                }
+            });
+        }
+        let mut pending_due = Vec::with_capacity(sites.min(1024));
+        for _ in 0..sites {
+            pending_due.push(r.opt_u64()?);
+        }
+        let loss_curve = r.f32s()?;
+        let n_val = r.u32()? as usize;
+        let mut val_curve = Vec::with_capacity(n_val.min(1024));
+        for _ in 0..n_val {
+            let epoch = r.u64()?;
+            let val = r.f64()?;
+            val_curve.push((epoch, val));
+        }
+        let best_val = r.f64()?;
+        let test_at_best = r.f64()?;
+        ensure!(
+            r.pos == body.len(),
+            "checkpoint has {} trailing bytes after the body",
+            body.len() - r.pos
+        );
+        Ok(Checkpoint {
+            model,
+            graph_fp,
+            seed,
+            epochs,
+            next_epoch,
+            rng_s,
+            rng_spare,
+            adam_step,
+            params,
+            engine: EngineState {
+                ks,
+                grad_norms,
+                last_alloc,
+                forced_exact_until,
+                approx_steps,
+                exact_steps,
+                entries,
+                pending_due,
+            },
+            loss_curve,
+            val_curve,
+            best_val,
+            test_at_best,
+        })
+    }
+
+    /// Snapshot the live training state at an epoch boundary
+    /// (`next_epoch` = the first epoch a resumed run will execute).
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture(
+        model_kind: ModelKind,
+        graph_fp: u64,
+        seed: u64,
+        epochs: u64,
+        next_epoch: u64,
+        model: &GraphModel,
+        rng: &Rng,
+        engine: &RscEngine,
+        loss_curve: &[f32],
+        val_curve: &[(usize, f64)],
+        best_val: f64,
+        test_at_best: f64,
+    ) -> Checkpoint {
+        let (rng_s, rng_spare) = rng.state();
+        Checkpoint {
+            model: model_kind,
+            graph_fp,
+            seed,
+            epochs,
+            next_epoch,
+            rng_s,
+            rng_spare,
+            adam_step: model.params.step,
+            params: model
+                .params
+                .params
+                .iter()
+                .map(|p| {
+                    let (w, m, v) = p.state();
+                    ParamState {
+                        name: p.name.clone(),
+                        rows: p.rows,
+                        cols: p.cols,
+                        w: w.to_vec(),
+                        m: m.to_vec(),
+                        v: v.to_vec(),
+                    }
+                })
+                .collect(),
+            engine: engine.export_state(),
+            loss_curve: loss_curve.to_vec(),
+            val_curve: val_curve.iter().map(|&(e, v)| (e as u64, v)).collect(),
+            best_val,
+            test_at_best,
+        }
+    }
+
+    /// Push the snapshot back into live training state.  Validates the
+    /// run's identity first — resuming under a different model, graph,
+    /// seed or epoch budget cannot be bit-identical, so each mismatch is
+    /// an error naming both sides.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore_into(
+        &self,
+        model_kind: ModelKind,
+        graph_fp: u64,
+        seed: u64,
+        epochs: u64,
+        model: &mut GraphModel,
+        rng: &mut Rng,
+        engine: &mut RscEngine,
+    ) -> Result<()> {
+        ensure!(
+            self.model == model_kind,
+            "checkpoint was written by model '{}' but this run trains '{}'",
+            self.model.name(),
+            model_kind.name()
+        );
+        ensure!(
+            self.graph_fp == graph_fp,
+            "checkpoint graph fingerprint {:016x} != this run's {:016x} \
+             (different dataset, normalization or --reorder)",
+            self.graph_fp,
+            graph_fp
+        );
+        ensure!(
+            self.seed == seed,
+            "checkpoint seed {} != this run's seed {}",
+            self.seed,
+            seed
+        );
+        ensure!(
+            self.epochs == epochs,
+            "checkpoint epoch budget {} != this run's --epochs {} \
+             (the switch schedule depends on it)",
+            self.epochs,
+            epochs
+        );
+        ensure!(
+            self.next_epoch <= epochs,
+            "checkpoint resumes at epoch {} beyond the {} epoch budget",
+            self.next_epoch,
+            epochs
+        );
+        ensure!(
+            self.params.len() == model.params.params.len(),
+            "checkpoint has {} params, model has {}",
+            self.params.len(),
+            model.params.params.len()
+        );
+        for (p, st) in model.params.params.iter_mut().zip(&self.params) {
+            ensure!(
+                p.name == st.name && p.rows == st.rows && p.cols == st.cols,
+                "checkpoint param '{}' ({}x{}) does not match model param '{}' ({}x{})",
+                st.name,
+                st.rows,
+                st.cols,
+                p.name,
+                p.rows,
+                p.cols
+            );
+            p.load_state(&st.w, &st.m, &st.v)?;
+        }
+        model.params.step = self.adam_step;
+        *rng = Rng::from_state(self.rng_s, self.rng_spare);
+        engine.restore_state(&self.engine)?;
+        Ok(())
+    }
+}
+
+/// The temp path a save stages its bytes in before the atomic rename.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_owned();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Atomically write `ck` to `path`: serialize, write + fsync to
+/// `<path>.tmp`, rename over `path`, best-effort fsync of the parent
+/// directory.  A crash at any point leaves either the previous
+/// checkpoint or the new one — never a half-written file at `path`.
+pub fn save(ck: &Checkpoint, path: &Path) -> Result<()> {
+    let bytes = ck.to_bytes();
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create checkpoint temp file {}", tmp.display()))?;
+        if fault::fires_any("torn_checkpoint_write").is_some() {
+            // simulate a crash mid-save: half the bytes land in the temp
+            // file and the rename never happens — the checkpoint at
+            // `path` must stay intact and loadable
+            f.write_all(&bytes[..bytes.len() / 2])?;
+            f.sync_all()?;
+            bail!("fault injected: torn checkpoint write (crashed before rename)");
+        }
+        f.write_all(&bytes)
+            .with_context(|| format!("write checkpoint {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("fsync checkpoint {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    if let Some(arg) = fault::fires_any("corrupt_checkpoint_byte") {
+        // simulate storage corruption *after* a successful save: flip a
+        // byte (at the armed offset, or mid-file) so the next load must
+        // fail its checksum cleanly
+        let mut data = std::fs::read(path)?;
+        let off = (arg.unwrap_or(data.len() as u64 / 2) as usize).min(data.len() - 1);
+        data[off] ^= 0x40;
+        std::fs::write(path, &data)?;
+    }
+    Ok(())
+}
+
+/// Read and parse a checkpoint file.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read checkpoint {}", path.display()))?;
+    Checkpoint::from_bytes(&bytes).with_context(|| format!("load checkpoint {}", path.display()))
+}

@@ -1,9 +1,12 @@
 //! Training loop, evaluation metrics and result reporting.
 
+pub mod checkpoint;
 pub mod metrics;
 pub mod trainer;
 
+pub use checkpoint::{graph_fingerprint, Checkpoint, ParamState};
 pub use metrics::{accuracy, f1_micro, mean_auc, MetricKind};
 pub use trainer::{
-    saint_eval_full_batch, train, weights_fingerprint, TrainConfig, TrainResult,
+    full_graph_bufs, saint_eval_full_batch, train, weights_fingerprint, TrainConfig,
+    TrainResult,
 };

@@ -28,12 +28,14 @@ use crate::runtime::{
     autotune_stats, plan_stats, simd, spmm_kernel_stats, tune_plan, AutotuneStats, Backend,
     SpmmKernelStats, Value, Workspace, WorkspaceStats,
 };
+use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::metrics::MetricKind;
 use crate::util::parallel::{self, Parallelism};
 use crate::util::rng::Rng;
 use crate::util::timer::{Stopwatch, TimeBook};
 use crate::Result;
 use anyhow::ensure;
+use std::path::PathBuf;
 
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -56,6 +58,18 @@ pub struct TrainConfig {
     /// (subgraphs are resampled per batch — there is no single static
     /// gather order to optimize).
     pub reorder: ReorderKind,
+    /// Write a checkpoint every N epochs (0 = off).  Full-batch models
+    /// only; saves are atomic and resume is bit-identical (DESIGN.md
+    /// §Fault tolerance).
+    pub checkpoint_every: usize,
+    /// Where checkpoints land (required when `checkpoint_every > 0`).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this checkpoint instead of initializing fresh.
+    pub resume: Option<PathBuf>,
+    /// Divergence watchdog: re-execute a step that produced a non-finite
+    /// loss or gradient with all sites forced exact (`--no-watchdog`
+    /// restores the old fail-fast behavior).
+    pub watchdog: bool,
 }
 
 impl TrainConfig {
@@ -71,6 +85,10 @@ impl TrainConfig {
             saint_subgraphs: 8,
             saint_batches_per_epoch: 4,
             reorder: ReorderKind::Degree,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: None,
+            watchdog: true,
         }
     }
 }
@@ -139,6 +157,22 @@ pub struct TrainResult {
     /// (and loss curves) match — the contract the seed-determinism and
     /// autotune/prefetch ablation tests pin.
     pub weights_fingerprint: u64,
+    /// Steps whose first attempt produced a non-finite loss/gradient and
+    /// were re-executed by the divergence watchdog.
+    pub watchdog_trips: u64,
+    /// Trips whose exact-path retry came back finite (every trip that
+    /// did not recover is a hard training error instead).
+    pub watchdog_recoveries: u64,
+    /// Times repeated trips escalated to a fully-exact window.
+    pub watchdog_escalations: u64,
+    /// Background refresh workers that panicked during this run; each
+    /// one degraded that site to the synchronous build path
+    /// (process-global counter, so an upper bound under concurrency).
+    pub worker_panics: u64,
+    /// Checkpoints written by this run (`--checkpoint-every`).
+    pub checkpoints_written: u64,
+    /// First epoch this run executed when resumed from a checkpoint.
+    pub resumed_at: Option<u64>,
 }
 
 /// Order-sensitive FNV-1a over all parameters' f32 bit patterns; see
@@ -152,6 +186,93 @@ pub fn weights_fingerprint(model: &GraphModel) -> u64 {
         }
     }
     h
+}
+
+/// Consecutive watchdog trips before the engine is forced fully exact
+/// for a window (one allocation period past the tripping step).
+const WATCHDOG_ESCALATE_AFTER: u64 = 3;
+
+/// Divergence-watchdog state (DESIGN.md §Fault tolerance): counts trips
+/// and recoveries, and tracks the consecutive-trip streak that decides
+/// escalation to a fully-exact window.
+struct Watchdog {
+    enabled: bool,
+    trips: u64,
+    recoveries: u64,
+    escalations: u64,
+    streak: u64,
+}
+
+impl Watchdog {
+    fn new(enabled: bool) -> Watchdog {
+        Watchdog { enabled, trips: 0, recoveries: 0, escalations: 0, streak: 0 }
+    }
+}
+
+fn grads_finite(loss: f32, grads: &[Value]) -> bool {
+    loss.is_finite()
+        && grads
+            .iter()
+            .all(|g| g.f32s().is_ok_and(|s| s.iter().all(|x| x.is_finite())))
+}
+
+/// One training step under the divergence watchdog.  The plain path is
+/// `loss_and_grads` + Adam, exactly [`GraphModel::train_step`].  If the
+/// loss or any gradient comes back non-finite, the step is re-executed
+/// with the engine quarantined (cache dropped, norms cleared, budgets at
+/// exact) so every site runs the exact kernel — the paper's switching
+/// mechanism used as graceful degradation.  Repeated consecutive trips
+/// escalate to a forced-exact *window* so a persistently-poisoned
+/// approximation cannot trip every step.  Only a step that is non-finite
+/// *on the exact path too* aborts training.
+#[allow(clippy::too_many_arguments)]
+fn guarded_train_step(
+    model: &mut GraphModel,
+    b: &dyn Backend,
+    x: &Value,
+    labels: &Value,
+    mask: &Value,
+    bufs: &GraphBufs,
+    engine: &mut RscEngine,
+    step: u64,
+    lr: f32,
+    tb: &mut TimeBook,
+    ws: &mut Workspace,
+    wd: &mut Watchdog,
+) -> Result<f32> {
+    let (loss, grads) =
+        model.loss_and_grads(b, x, labels, mask, bufs, engine, step, tb, ws, None)?;
+    let (loss, grads) = if !wd.enabled || grads_finite(loss, &grads) {
+        if wd.enabled {
+            wd.streak = 0;
+        }
+        (loss, grads)
+    } else {
+        wd.trips += 1;
+        wd.streak += 1;
+        ws.recycle_all(grads);
+        // drop every cached selection and norm snapshot: the poisoned
+        // backward has already polluted them, and an empty cache makes
+        // the retry (and all later steps) serve the exact path until
+        // fresh finite norms rebuild the schedule
+        engine.quarantine();
+        if wd.streak >= WATCHDOG_ESCALATE_AFTER {
+            let until = step + 1 + engine.cfg.alloc_every;
+            engine.force_exact_until(until);
+            wd.escalations += 1;
+        }
+        let (l2, g2) =
+            model.loss_and_grads(b, x, labels, mask, bufs, engine, step, tb, ws, None)?;
+        ensure!(
+            grads_finite(l2, &g2),
+            "non-finite loss/gradients persist on the exact path at step {step} \
+             (loss {l2}): training diverged"
+        );
+        wd.recoveries += 1;
+        (l2, g2)
+    };
+    tb.scope("adam", || model.params.adam_all(b, grads, lr, Some(&mut *ws)))?;
+    Ok(loss)
 }
 
 /// Off-hot-path autotune warmup for the run's two *static* plans (the
@@ -256,14 +377,48 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
     let mut val_curve = Vec::new();
     let mut best_val = f64::NEG_INFINITY;
     let mut test_at_best = f64::NAN;
+
+    // --- fault tolerance: checkpoint/resume + watchdog + panic counter ---
+    ensure!(
+        cfg.checkpoint_every == 0 || cfg.checkpoint_path.is_some(),
+        "checkpoint_every > 0 needs a checkpoint path"
+    );
+    // fingerprint of the (possibly reordered) matrix the run trains on:
+    // resume under a different graph or --reorder is rejected up front
+    let graph_fp = (cfg.checkpoint_every > 0 || cfg.resume.is_some())
+        .then(|| checkpoint::graph_fingerprint(&bufs.matrix));
+    let mut start_epoch = 0usize;
+    let mut resumed_at = None;
+    if let Some(path) = &cfg.resume {
+        let ck = checkpoint::load(path)?;
+        ck.restore_into(
+            cfg.model,
+            graph_fp.expect("graph_fp is computed when resume is set"),
+            cfg.seed,
+            cfg.epochs as u64,
+            &mut model,
+            &mut rng,
+            &mut engine,
+        )?;
+        loss_curve = ck.loss_curve.clone();
+        val_curve = ck.val_curve.iter().map(|&(e, v)| (e as usize, v)).collect();
+        best_val = ck.best_val;
+        test_at_best = ck.test_at_best;
+        start_epoch = ck.next_epoch as usize;
+        resumed_at = Some(ck.next_epoch);
+    }
+    let mut checkpoints_written = 0u64;
+    let worker_panics0 = parallel::worker_panics();
+    let mut wd = Watchdog::new(cfg.watchdog);
+
     let sw = Stopwatch::start();
     let mut eval_tb = TimeBook::new();
 
-    for epoch in 0..cfg.epochs {
+    for epoch in start_epoch..cfg.epochs {
         let step = epoch as u64;
-        let loss = model.train_step(
-            b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr, &mut tb,
-            &mut ws, None,
+        let loss = guarded_train_step(
+            &mut model, b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr,
+            &mut tb, &mut ws, &mut wd,
         )?;
         ensure!(loss.is_finite(), "loss diverged at epoch {epoch}: {loss}");
         loss_curve.push(loss);
@@ -305,6 +460,30 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
             // of a wide output layer) would otherwise pin forever
             ws.trim_to_high_water();
         }
+
+        // checkpoint at the epoch boundary (after the eval that may have
+        // updated best_val), so a resumed run replays from exactly here;
+        // skipped at the very last epoch — there is nothing left to resume
+        let done = epoch + 1;
+        if cfg.checkpoint_every > 0 && done % cfg.checkpoint_every == 0 && done < cfg.epochs {
+            let ck = Checkpoint::capture(
+                cfg.model,
+                graph_fp.expect("graph_fp is computed when checkpointing"),
+                cfg.seed,
+                cfg.epochs as u64,
+                done as u64,
+                &model,
+                &rng,
+                &engine,
+                &loss_curve,
+                &val_curve,
+                best_val,
+                test_at_best,
+            );
+            let path = cfg.checkpoint_path.as_ref().expect("validated above");
+            checkpoint::save(&ck, path)?;
+            checkpoints_written += 1;
+        }
     }
     ensure!(
         best_val.is_finite(),
@@ -344,6 +523,12 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
         autotune: autotune_stats().since(&autotune0),
         tuned_kernels: engine.tuned_kernels.clone(),
         weights_fingerprint: weights_fingerprint(&model),
+        watchdog_trips: wd.trips,
+        watchdog_recoveries: wd.recoveries,
+        watchdog_escalations: wd.escalations,
+        worker_panics: parallel::worker_panics().saturating_sub(worker_panics0),
+        checkpoints_written,
+        resumed_at,
     })
 }
 
@@ -371,6 +556,11 @@ pub fn saint_eval_full_batch(
 /// padded subgraphs with a per-subgraph RSC engine, evaluate full-batch.
 fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
     ensure!(ds.cfg.saint_v > 0, "dataset {} has no SAINT config", ds.cfg.name);
+    ensure!(
+        cfg.resume.is_none() && cfg.checkpoint_every == 0,
+        "checkpoint/resume is not supported for graphsaint (per-subgraph engines); \
+         use a full-batch model"
+    );
     let mut rng = Rng::new(cfg.seed ^ 0x5417);
     let metric = MetricKind::for_dataset(ds);
     let (plan_hits0, plan_builds0) = plan_stats();
@@ -388,7 +578,9 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let sub_bufs: Vec<GraphBufs> = subs
         .iter()
         .map(|sg| {
-            // pad the local matrix to saint_v nodes before normalizing
+            // pad the local matrix to saint_v nodes before normalizing;
+            // the fallible constructor re-checks index bounds, so a
+            // sampler bug surfaces as an error, not UB downstream
             let mut triples = Vec::with_capacity(sg.adj.nnz());
             for r in 0..sg.adj.n {
                 let (cs, ws) = sg.adj.row(r);
@@ -396,12 +588,12 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                     triples.push((r as u32, c, w));
                 }
             }
-            let padded = crate::graph::Csr::from_triples(ds.cfg.saint_v, triples);
+            let padded = crate::graph::Csr::try_from_triples(ds.cfg.saint_v, triples)?;
             let mut gb = GraphBufs::new_padded(padded.mean_normalize(), saint_caps.clone());
             gb.plan_cache = cfg.rsc.plan_cache;
-            gb
+            Ok(gb)
         })
-        .collect();
+        .collect::<Result<_>>()?;
     let sub_x: Vec<Value> = subs
         .iter()
         .map(|sg| Value::mat_f32(ds.cfg.saint_v, ds.cfg.d_in, sg.features(ds)))
@@ -462,6 +654,8 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let mut val_curve = Vec::new();
     let mut best_val = f64::NEG_INFINITY;
     let mut test_at_best = f64::NAN;
+    let worker_panics0 = parallel::worker_panics();
+    let mut wd = Watchdog::new(cfg.watchdog);
     let sw = Stopwatch::start();
     let mut batch_cursor = 0usize;
 
@@ -472,7 +666,8 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
             batch_cursor += 1;
             let step = uses[i];
             uses[i] += 1;
-            let loss = model.train_step(
+            let loss = guarded_train_step(
+                &mut model,
                 b,
                 &sub_x[i],
                 &sub_labels[i],
@@ -483,7 +678,7 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                 cfg.lr,
                 &mut tb,
                 &mut ws,
-                None,
+                &mut wd,
             )?;
             ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
             epoch_loss += loss;
@@ -568,5 +763,11 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         autotune: autotune_stats().since(&autotune0),
         tuned_kernels,
         weights_fingerprint: weights_fingerprint(&model),
+        watchdog_trips: wd.trips,
+        watchdog_recoveries: wd.recoveries,
+        watchdog_escalations: wd.escalations,
+        worker_panics: parallel::worker_panics().saturating_sub(worker_panics0),
+        checkpoints_written: 0,
+        resumed_at: None,
     })
 }

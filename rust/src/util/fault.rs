@@ -1,0 +1,220 @@
+//! Deterministic fault-injection substrate (`fault-inject` feature).
+//!
+//! Named one-shot fault points that the robustness tests arm to prove
+//! each recovery path end-to-end (DESIGN.md §Fault tolerance):
+//!
+//! | fault point               | arg         | fires in                                      |
+//! |---------------------------|-------------|-----------------------------------------------|
+//! | `refresh_panic@step`      | due step    | a background refresh build (worker panic)     |
+//! | `nan_site@k`              | site index  | the site's backward-SpMM output (NaN fill)    |
+//! | `torn_checkpoint_write`   | —           | checkpoint save: half-written temp, no rename |
+//! | `corrupt_checkpoint_byte` | byte offset | checkpoint save: flips one byte after rename  |
+//!
+//! Faults are armed programmatically ([`arm`] / [`arm_spec`]) or through
+//! the `RSC_FAULTS` environment variable (comma-separated specs, e.g.
+//! `RSC_FAULTS=refresh_panic@3,torn_checkpoint_write`); the `rsc train
+//! --faults <spec>` flag is the CLI spelling.  Every armed fault fires at
+//! most once, so a recovered run proceeds healthy afterwards — which is
+//! exactly what the recovery tests assert.
+//!
+//! Without the `fault-inject` feature every function here compiles to an
+//! inlined no-op: the hot path carries no cost and production builds
+//! cannot be armed at all (`--faults` reports a clear error instead).
+
+/// True when the crate was built with `--features fault-inject`.
+pub const ENABLED: bool = cfg!(feature = "fault-inject");
+
+#[cfg(feature = "fault-inject")]
+mod imp {
+    use crate::Result;
+    use anyhow::{anyhow, ensure};
+    use std::sync::Mutex;
+
+    #[derive(Debug, Clone)]
+    struct Fault {
+        name: String,
+        arg: Option<u64>,
+    }
+
+    static ARMED: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
+
+    fn armed() -> std::sync::MutexGuard<'static, Vec<Fault>> {
+        // a panic while the lock is held is exactly what this harness
+        // provokes on purpose; tolerate poisoning instead of compounding
+        ARMED.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn env_init() {
+        use std::sync::Once;
+        static INIT: Once = Once::new();
+        INIT.call_once(|| {
+            if let Ok(spec) = std::env::var("RSC_FAULTS") {
+                if let Err(e) = arm_spec(&spec) {
+                    panic!("RSC_FAULTS: {e}");
+                }
+            }
+        });
+    }
+
+    /// Arm one fault point; `arg` of `None` matches any argument.
+    pub fn arm(name: &str, arg: Option<u64>) {
+        armed().push(Fault {
+            name: name.to_string(),
+            arg,
+        });
+    }
+
+    /// Arm a comma-separated list of `name` / `name@arg` specs.
+    pub fn arm_spec(spec: &str) -> Result<()> {
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part.split_once('@') {
+                Some((name, arg)) => {
+                    ensure!(!name.is_empty(), "bad fault spec {part:?}: empty name");
+                    let arg = arg
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("bad fault spec {part:?}: arg must be a u64"))?;
+                    arm(name, Some(arg));
+                }
+                None => arm(part, None),
+            }
+        }
+        Ok(())
+    }
+
+    /// Disarm everything (each test starts from a clean slate).
+    pub fn clear() {
+        armed().clear();
+    }
+
+    /// Number of armed-but-unfired faults (tests pin this to 0 at the
+    /// end to prove the injection actually happened).
+    pub fn armed_count() -> usize {
+        env_init();
+        armed().len()
+    }
+
+    /// One-shot check: true exactly once for an armed fault whose name
+    /// matches and whose armed arg (if any) equals `arg`.
+    pub fn fires(name: &str, arg: u64) -> bool {
+        env_init();
+        let mut a = armed();
+        if let Some(i) = a
+            .iter()
+            .position(|f| f.name == name && f.arg.is_none_or(|x| x == arg))
+        {
+            a.remove(i);
+            return true;
+        }
+        false
+    }
+
+    /// One-shot check ignoring the argument; returns the armed argument
+    /// (itself optional) when the fault fires.
+    pub fn fires_any(name: &str) -> Option<Option<u64>> {
+        env_init();
+        let mut a = armed();
+        let i = a.iter().position(|f| f.name == name)?;
+        Some(a.remove(i).arg)
+    }
+
+    /// Panic on the calling thread if `name@arg` is armed.
+    pub fn maybe_panic(name: &str, arg: u64) {
+        if fires(name, arg) {
+            panic!("fault injected: {name}@{arg}");
+        }
+    }
+
+    /// Fill `data` with NaN if `name@arg` is armed; the watchdog tests
+    /// poison a site's backward-SpMM output through this.
+    pub fn poison_f32s(name: &str, arg: u64, data: &mut [f32]) -> bool {
+        if !fires(name, arg) {
+            return false;
+        }
+        for x in data.iter_mut() {
+            *x = f32::NAN;
+        }
+        true
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+mod imp {
+    //! No-op twins: same signatures, nothing armed, nothing fires.
+    use crate::Result;
+
+    #[inline(always)]
+    pub fn arm(_name: &str, _arg: Option<u64>) {}
+
+    #[inline(always)]
+    pub fn arm_spec(_spec: &str) -> Result<()> {
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn clear() {}
+
+    #[inline(always)]
+    pub fn armed_count() -> usize {
+        0
+    }
+
+    #[inline(always)]
+    pub fn fires(_name: &str, _arg: u64) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn fires_any(_name: &str) -> Option<Option<u64>> {
+        None
+    }
+
+    #[inline(always)]
+    pub fn maybe_panic(_name: &str, _arg: u64) {}
+
+    #[inline(always)]
+    pub fn poison_f32s(_name: &str, _arg: u64, _data: &mut [f32]) -> bool {
+        false
+    }
+}
+
+pub use imp::*;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One sequential test: the registry is process-global, and sibling
+    // #[test]s run as parallel threads in the same process.
+    #[test]
+    fn registry_semantics_match_the_feature_gate() {
+        clear();
+        if ENABLED {
+            arm("refresh_panic", Some(3));
+            arm_spec(" nan_site@1 , torn_checkpoint_write ").unwrap();
+            assert_eq!(armed_count(), 3);
+            assert!(!fires("refresh_panic", 2), "arg must match");
+            assert!(fires("refresh_panic", 3));
+            assert!(!fires("refresh_panic", 3), "faults are one-shot");
+            let mut buf = [1.0f32, 2.0];
+            assert!(poison_f32s("nan_site", 1, &mut buf));
+            assert!(buf.iter().all(|x| x.is_nan()));
+            assert_eq!(fires_any("torn_checkpoint_write"), Some(None));
+            assert_eq!(fires_any("torn_checkpoint_write"), None);
+            assert_eq!(armed_count(), 0);
+            assert!(arm_spec("nan_site@notanumber").is_err());
+            assert!(arm_spec("@3").is_err());
+        } else {
+            // feature off: arming is inert and nothing ever fires
+            arm("refresh_panic", Some(3));
+            arm_spec("nan_site@1").unwrap();
+            assert_eq!(armed_count(), 0);
+            assert!(!fires("refresh_panic", 3));
+            assert_eq!(fires_any("torn_checkpoint_write"), None);
+            let mut buf = [1.0f32];
+            assert!(!poison_f32s("nan_site", 1, &mut buf));
+            assert_eq!(buf, [1.0]);
+            maybe_panic("refresh_panic", 3); // must not panic
+        }
+        clear();
+    }
+}

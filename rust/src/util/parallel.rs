@@ -147,6 +147,18 @@ pub fn set_global(p: Parallelism) {
     *GLOBAL.write().unwrap() = Some(p);
 }
 
+/// Background tasks that panicked and were absorbed (process-global;
+/// callers snapshot a delta per run).  A panic inside `rayon::spawn`
+/// would otherwise abort the whole process — panic isolation turns it
+/// into "the prefetch slot never fills", which the sample cache already
+/// handles with the bit-identical synchronous build path.
+static WORKER_PANICS: AtomicU64 = AtomicU64::new(0);
+
+/// Total background-task panics absorbed so far in this process.
+pub fn worker_panics() -> u64 {
+    WORKER_PANICS.load(Ordering::Relaxed)
+}
+
 /// Run `task` on the shared rayon worker pool without blocking the
 /// caller — the sample cache's prefetched refresh builds go through
 /// here.  The pool is created on first use (sized to the process-wide
@@ -154,9 +166,16 @@ pub fn set_global(p: Parallelism) {
 /// background builds off the training thread).  Tasks must own their
 /// inputs (`'static`); determinism is unaffected because every build is
 /// a pure function of its captured inputs (DESIGN.md §Parallel runtime).
+/// A panicking task is caught and counted rather than aborting the
+/// process (see [`worker_panics`]).
 pub fn spawn_background(task: impl FnOnce() + Send + 'static) {
     ensure_pool(global().threads());
-    rayon::spawn(task);
+    rayon::spawn(move || {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+        if caught.is_err() {
+            WORKER_PANICS.fetch_add(1, Ordering::Relaxed);
+        }
+    });
 }
 
 /// The process-wide default; resolves (and caches) [`Parallelism::auto`]

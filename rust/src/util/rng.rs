@@ -36,6 +36,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Full generator state (xoshiro words + cached Box–Muller spare)
+    /// for checkpointing; [`Rng::from_state`] restores a bit-identical
+    /// continuation of the stream.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare)
+    }
+
+    /// Rebuild a generator from [`Rng::state`] output.
+    pub fn from_state(s: [u64; 4], spare: Option<f64>) -> Rng {
+        Rng { s, spare }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -222,6 +234,19 @@ mod tests {
         }
         assert_eq!(c[1], 0);
         assert!(c[2] > 5 * c[0]);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        let mut r = Rng::new(9);
+        r.normal(); // populate the Box–Muller spare
+        let (s, spare) = r.state();
+        assert!(spare.is_some());
+        let mut twin = Rng::from_state(s, spare);
+        for _ in 0..10 {
+            assert_eq!(r.normal().to_bits(), twin.normal().to_bits());
+            assert_eq!(r.next_u64(), twin.next_u64());
+        }
     }
 
     #[test]

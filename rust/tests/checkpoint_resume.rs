@@ -1,0 +1,354 @@
+//! Checkpoint/resume acceptance (DESIGN.md §Fault tolerance): a run that
+//! checkpoints, dies and resumes must be *bit-identical* — same loss
+//! curve, same final weights fingerprint — to one that never stopped,
+//! for every full-batch architecture.  On top of the end-to-end oracle,
+//! the byte codec round-trips arbitrary snapshots, restored selections
+//! are thread-count independent, and damaged or mismatched checkpoint
+//! files are clean errors, never panics.
+//!
+//! Runs on the synthesized op catalog, so it needs no AOT artifacts.
+
+use rsc::coordinator::{EngineState, RscConfig, RscEngine};
+use rsc::graph::ReorderKind;
+use rsc::model::exec::GraphModel;
+use rsc::model::ops::{ModelKind, OpNames};
+use rsc::runtime::NativeBackend;
+use rsc::train::checkpoint::{self, Checkpoint, ParamState};
+use rsc::train::{full_graph_bufs, train, TrainConfig};
+use rsc::util::parallel::Parallelism;
+use rsc::util::prop;
+use rsc::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Unique temp path per test: the suite's tests run as threads of one
+/// process, so names must not collide across tests (or reruns).
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rsc_ckpt_{}_{name}", std::process::id()))
+}
+
+fn cleanup(path: &PathBuf) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(checkpoint::tmp_path(path));
+}
+
+fn cfg(model: ModelKind) -> TrainConfig {
+    TrainConfig {
+        model,
+        epochs: 12,
+        seed: 42,
+        rsc: RscConfig { budget_c: 0.3, ..Default::default() },
+        eval_every: 5,
+        reorder: ReorderKind::Degree,
+        ..TrainConfig::new(model)
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_for_every_full_batch_model() {
+    for model in ModelKind::FULL_BATCH {
+        let b = NativeBackend::synthesize("tiny").unwrap();
+        let ds = rsc::data::load_or_generate("tiny", 42).unwrap();
+        let path = tmp(&format!("roundtrip_{}", model.name()));
+        cleanup(&path);
+
+        // the uninterrupted reference
+        let reference = train(&b, &ds, &cfg(model)).unwrap();
+
+        // the same run, writing checkpoints at epochs 5 and 10: saving
+        // is read-only, so the result must not move by a single bit
+        let mut with_ckpt = cfg(model);
+        with_ckpt.checkpoint_every = 5;
+        with_ckpt.checkpoint_path = Some(path.clone());
+        let saved = train(&b, &ds, &with_ckpt).unwrap();
+        assert_eq!(saved.checkpoints_written, 2, "{}", model.name());
+        assert_eq!(
+            saved.weights_fingerprint,
+            reference.weights_fingerprint,
+            "{}: checkpointing changed the training result",
+            model.name()
+        );
+
+        // resume from the last checkpoint (epoch 10 of 12): the stitched
+        // run must equal the uninterrupted one bit for bit
+        let mut resumed_cfg = cfg(model);
+        resumed_cfg.resume = Some(path.clone());
+        let resumed = train(&b, &ds, &resumed_cfg).unwrap();
+        assert_eq!(resumed.resumed_at, Some(10), "{}", model.name());
+        assert_eq!(
+            resumed.weights_fingerprint,
+            reference.weights_fingerprint,
+            "{}: resumed weights diverged",
+            model.name()
+        );
+        assert_eq!(resumed.loss_curve, reference.loss_curve, "{}", model.name());
+        assert_eq!(resumed.val_curve, reference.val_curve, "{}", model.name());
+        assert_eq!(
+            resumed.test_metric.to_bits(),
+            reference.test_metric.to_bits(),
+            "{}",
+            model.name()
+        );
+        cleanup(&path);
+    }
+}
+
+/// Same oracle at a cadence dense enough that the checkpoint lands one
+/// step after an allocation — i.e. with a refresh *pending* in flight —
+/// so the engine-state restore path that reconstructs pending jobs is
+/// exercised, not just the quiescent case.
+#[test]
+fn resume_is_bit_identical_with_pending_refreshes_in_flight() {
+    for model in [ModelKind::Gcn, ModelKind::Sage] {
+        let b = NativeBackend::synthesize("tiny").unwrap();
+        let ds = rsc::data::load_or_generate("tiny", 42).unwrap();
+        let path = tmp(&format!("pending_{}", model.name()));
+        cleanup(&path);
+
+        let dense = |resume: Option<PathBuf>, every: usize| TrainConfig {
+            epochs: 14,
+            rsc: RscConfig {
+                budget_c: 0.3,
+                alloc_every: 3,
+                refresh_every: 4,
+                switch_frac: 1.0,
+                ..Default::default()
+            },
+            checkpoint_every: every,
+            checkpoint_path: (every > 0).then(|| path.clone()),
+            resume,
+            ..cfg(model)
+        };
+
+        let reference = train(&b, &ds, &dense(None, 0)).unwrap();
+        // checkpoints at epochs 5 and 10; allocation at step 9 schedules
+        // refreshes due at step 10, so the epoch-10 snapshot carries them
+        let saved = train(&b, &ds, &dense(None, 5)).unwrap();
+        assert_eq!(saved.checkpoints_written, 2, "{}", model.name());
+        let ck = checkpoint::load(&path).unwrap();
+        assert!(
+            ck.engine.pending_due.iter().any(|p| p.is_some())
+                || ck.engine.entries.iter().any(|e| e.is_some()),
+            "{}: cadence produced no cache state to restore — the test \
+             would not exercise the restore path",
+            model.name()
+        );
+
+        let resumed = train(&b, &ds, &dense(Some(path.clone()), 0)).unwrap();
+        assert_eq!(resumed.resumed_at, Some(10), "{}", model.name());
+        assert_eq!(
+            resumed.weights_fingerprint,
+            reference.weights_fingerprint,
+            "{}: resume across a live refresh schedule diverged",
+            model.name()
+        );
+        assert_eq!(resumed.loss_curve, reference.loss_curve, "{}", model.name());
+        cleanup(&path);
+    }
+}
+
+fn mk_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn checkpoint_codec_roundtrips_for_random_states() {
+    prop::check("checkpoint-roundtrip", 24, |rng| {
+        let model = ModelKind::FULL_BATCH[rng.range(0, ModelKind::FULL_BATCH.len())];
+        let n_params = rng.range(1, 4);
+        let params: Vec<ParamState> = (0..n_params)
+            .map(|i| {
+                let rows = rng.range(1, 6);
+                let cols = rng.range(1, 6);
+                ParamState {
+                    name: format!("p{i}"),
+                    rows,
+                    cols,
+                    w: mk_f32s(rng, rows * cols),
+                    m: mk_f32s(rng, rows * cols),
+                    v: mk_f32s(rng, rows * cols),
+                }
+            })
+            .collect();
+        let sites = rng.range(1, 4);
+        let engine = EngineState {
+            ks: (0..sites).map(|_| rng.range(0, 50)).collect(),
+            grad_norms: (0..sites)
+                .map(|_| rng.chance(0.5).then(|| mk_f32s(rng, 10)))
+                .collect(),
+            last_alloc: rng.chance(0.5).then(|| rng.range(0, 100) as u64),
+            forced_exact_until: rng.range(0, 20) as u64,
+            approx_steps: rng.range(0, 500) as u64,
+            exact_steps: rng.range(0, 500) as u64,
+            entries: (0..sites)
+                .map(|_| {
+                    rng.chance(0.5).then(|| {
+                        let k = rng.range(1, 8);
+                        let rows = (0..k).map(|_| rng.range(0, 40) as u32).collect();
+                        (rng.range(0, 100) as u64, k, rows)
+                    })
+                })
+                .collect(),
+            pending_due: (0..sites)
+                .map(|_| rng.chance(0.5).then(|| rng.range(0, 100) as u64))
+                .collect(),
+        };
+        let loss_len = rng.range(0, 20);
+        let ck = Checkpoint {
+            model,
+            graph_fp: rng.next_u64(),
+            seed: rng.next_u64(),
+            epochs: rng.range(1, 100) as u64,
+            next_epoch: rng.range(0, 100) as u64,
+            rng_s: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+            rng_spare: rng.chance(0.5).then(|| rng.normal()),
+            adam_step: rng.range(0, 1000) as u64,
+            params,
+            engine,
+            loss_curve: mk_f32s(rng, loss_len),
+            val_curve: (0..rng.range(0, 5))
+                .map(|_| (rng.range(0, 100) as u64, rng.normal()))
+                .collect(),
+            best_val: if rng.chance(0.2) { f64::NEG_INFINITY } else { rng.normal() },
+            test_at_best: if rng.chance(0.2) { f64::NAN } else { rng.normal() },
+        };
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        // NaN breaks PartialEq, so compare through the canonical bytes
+        // (bit-exact by construction) and the NaN-free fields directly
+        assert_eq!(back.to_bytes(), bytes, "canonical bytes changed");
+        assert_eq!(back.model, ck.model);
+        assert_eq!(back.engine, ck.engine);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.rng_spare.map(f64::to_bits), ck.rng_spare.map(f64::to_bits));
+        assert_eq!(back.test_at_best.to_bits(), ck.test_at_best.to_bits());
+    });
+}
+
+#[test]
+fn restored_selections_are_identical_at_1_2_4_threads() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = rsc::data::load_or_generate("tiny", 42).unwrap();
+    let path = tmp("threads");
+    cleanup(&path);
+    let mut c = cfg(ModelKind::Gcn);
+    c.rsc.switch_frac = 1.0; // keep cache entries alive to the end
+    c.checkpoint_every = 5;
+    c.checkpoint_path = Some(path.clone());
+    train(&b, &ds, &c).unwrap();
+    let ck = checkpoint::load(&path).unwrap();
+
+    // the checkpoint's fingerprint is of the *reordered* training matrix
+    let (ds2, _) = ds.reordered(ReorderKind::Degree);
+    let bufs = full_graph_bufs(&b, &ds2, ModelKind::Gcn);
+    assert_eq!(ck.graph_fp, checkpoint::graph_fingerprint(&bufs.matrix));
+
+    let widths = GraphModel::new(
+        ModelKind::Gcn,
+        &ds2.cfg,
+        OpNames::full(),
+        &mut Rng::new(42 ^ 0x7A31),
+    )
+    .graph
+    .site_widths();
+    let restored: Vec<RscEngine> = [1usize, 2, 4]
+        .iter()
+        .map(|&t| {
+            let mut e = RscEngine::new(
+                c.rsc.clone(),
+                bufs.matrix.clone(),
+                bufs.caps.clone(),
+                widths.clone(),
+                c.epochs as u64,
+            )
+            .unwrap()
+            .with_parallelism(Parallelism::with_threads(t));
+            e.restore_state(&ck.engine).unwrap();
+            e
+        })
+        .collect();
+    for site in 0..widths.len() {
+        let sel0 = restored[0].peek_selection(site);
+        for (i, e) in restored.iter().enumerate().skip(1) {
+            let sel = e.peek_selection(site);
+            match (sel0, sel) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.rows, b.rows, "site {site}: rows differ at {} threads", 1 << i);
+                    assert_eq!(a.nnz, b.nnz, "site {site}");
+                    assert_eq!(a.cap, b.cap, "site {site}");
+                    assert_eq!(a.w(), b.w(), "site {site}: edge weights differ");
+                }
+                _ => panic!("site {site}: selection presence differs across thread counts"),
+            }
+        }
+    }
+    cleanup(&path);
+}
+
+#[test]
+fn bad_checkpoints_are_clean_errors() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = rsc::data::load_or_generate("tiny", 42).unwrap();
+    let path = tmp("errors");
+    cleanup(&path);
+    let mut c = cfg(ModelKind::Gcn);
+    c.checkpoint_every = 5;
+    c.checkpoint_path = Some(path.clone());
+    train(&b, &ds, &c).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // not a checkpoint at all
+    let err = Checkpoint::from_bytes(b"definitely not a checkpoint").unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "{err:#}");
+    let err = Checkpoint::from_bytes(b"x").unwrap_err();
+    assert!(format!("{err:#}").contains("smaller than the header"), "{err:#}");
+
+    // truncation and bit-flips fail the checksum, never panic
+    let err = Checkpoint::from_bytes(&good[..good.len() - 9]).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x01;
+    let err = Checkpoint::from_bytes(&flipped).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+    // an unsupported future version is refused by name even when its
+    // checksum is valid (re-sign the mutated bytes in the test)
+    let mut vnext = good.clone();
+    vnext[8] = 0xFE; // version lives right after the 8-byte magic
+    let body_len = vnext.len() - 8;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &byte in &vnext[..body_len] {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    vnext[body_len..].copy_from_slice(&h.to_le_bytes());
+    let err = Checkpoint::from_bytes(&vnext).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+
+    // resuming under the wrong model is refused with both names
+    let mut wrong_model = cfg(ModelKind::Sage);
+    wrong_model.resume = Some(path.clone());
+    let err = train(&b, &ds, &wrong_model).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("gcn") && msg.contains("sage"), "{msg}");
+
+    // resuming under a different node order is a fingerprint mismatch
+    let mut wrong_order = cfg(ModelKind::Gcn);
+    wrong_order.reorder = ReorderKind::None;
+    wrong_order.resume = Some(path.clone());
+    let err = train(&b, &ds, &wrong_order).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+    // a missing file is a readable error, and graphsaint refuses the
+    // flags up front instead of failing deep in training
+    let mut missing = cfg(ModelKind::Gcn);
+    missing.resume = Some(tmp("never_written"));
+    assert!(train(&b, &ds, &missing).is_err());
+    let mut saint = cfg(ModelKind::Saint);
+    saint.resume = Some(path.clone());
+    let err = train(&b, &ds, &saint).unwrap_err();
+    assert!(format!("{err:#}").contains("graphsaint"), "{err:#}");
+
+    cleanup(&path);
+}

@@ -1,0 +1,206 @@
+//! End-to-end recovery proofs for every fault point in `util/fault.rs`
+//! (DESIGN.md §Fault tolerance).  Each test arms a deterministic fault,
+//! runs real training, and asserts the documented recovery: a panicked
+//! refresh worker degrades to the synchronous build path bit-identically,
+//! an injected NaN trips the divergence watchdog and recovers on the
+//! exact path, a torn checkpoint write preserves the previous snapshot,
+//! and a corrupted checkpoint is rejected by its checksum.
+//!
+//! Builds only with `--features fault-inject`; the armed-fault registry
+//! is process-global, so every test serializes on one mutex (and CI runs
+//! this target with `--test-threads=1` on top).
+
+#![cfg(feature = "fault-inject")]
+
+use rsc::coordinator::RscConfig;
+use rsc::data::load_or_generate;
+use rsc::graph::ReorderKind;
+use rsc::model::ops::ModelKind;
+use rsc::runtime::NativeBackend;
+use rsc::train::checkpoint;
+use rsc::train::{train, TrainConfig};
+use rsc::util::fault;
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serialize tests sharing the process-global fault registry, and start
+/// each one disarmed.  Poisoning is expected: the refresh-panic test
+/// panics a thread on purpose.
+fn serial() -> MutexGuard<'static, ()> {
+    let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault::clear();
+    g
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rsc_fault_{}_{name}", std::process::id()))
+}
+
+fn cleanup(path: &PathBuf) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(checkpoint::tmp_path(path));
+}
+
+/// Dense refresh cadence with the switchback disabled, so sampled plans
+/// (and background refresh builds) stay live for the whole run.
+fn cfg(model: ModelKind) -> TrainConfig {
+    TrainConfig {
+        model,
+        epochs: 12,
+        seed: 42,
+        rsc: RscConfig {
+            budget_c: 0.3,
+            alloc_every: 3,
+            refresh_every: 4,
+            switch_frac: 1.0,
+            ..Default::default()
+        },
+        eval_every: 5,
+        reorder: ReorderKind::Degree,
+        ..TrainConfig::new(model)
+    }
+}
+
+#[test]
+fn refresh_panic_degrades_to_sync_build_bit_identically() {
+    let _g = serial();
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+
+    let baseline = train(&b, &ds, &cfg(ModelKind::Gcn)).unwrap();
+    assert_eq!(baseline.worker_panics, 0);
+
+    // poison the first background refresh build, whatever step it lands
+    // on: its pending slot stays empty, and resolve() falls back to the
+    // synchronous build of the same job — bit-identical by construction
+    fault::arm("refresh_panic", None);
+    let faulted = train(&b, &ds, &cfg(ModelKind::Gcn)).unwrap();
+    assert_eq!(fault::armed_count(), 0, "the fault never fired");
+    assert!(faulted.worker_panics >= 1, "no worker panic was recorded");
+    assert_eq!(
+        faulted.weights_fingerprint, baseline.weights_fingerprint,
+        "a panicked refresh worker changed the training result"
+    );
+    assert_eq!(faulted.loss_curve, baseline.loss_curve);
+}
+
+#[test]
+fn nan_injection_trips_watchdog_and_recovers_to_exact_loss() {
+    let _g = serial();
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+
+    for model in [ModelKind::Gcn, ModelKind::Sage, ModelKind::Gcnii, ModelKind::Appnp] {
+        let baseline = train(&b, &ds, &cfg(model)).unwrap();
+        assert_eq!(baseline.watchdog_trips, 0, "{}", model.name());
+
+        // poison site 0's backward-SpMM output on its first execution:
+        // the watchdog must quarantine the engine and re-execute the
+        // step on the exact path, converging back to the clean run
+        fault::arm("nan_site", Some(0));
+        let faulted = train(&b, &ds, &cfg(model)).unwrap();
+        assert_eq!(fault::armed_count(), 0, "{}: the fault never fired", model.name());
+        assert_eq!(faulted.watchdog_trips, 1, "{}", model.name());
+        assert_eq!(faulted.watchdog_recoveries, 1, "{}", model.name());
+        assert_eq!(faulted.watchdog_escalations, 0, "{}", model.name());
+        assert_eq!(
+            faulted.weights_fingerprint,
+            baseline.weights_fingerprint,
+            "{}: watchdog recovery diverged from the clean run",
+            model.name()
+        );
+        assert_eq!(faulted.loss_curve, baseline.loss_curve, "{}", model.name());
+    }
+
+    // the control: with the watchdog disabled the same NaN reaches Adam,
+    // wrecks the weights and training aborts — proving the watchdog is
+    // what saved the runs above
+    fault::arm("nan_site", Some(0));
+    let mut no_wd = cfg(ModelKind::Gcn);
+    no_wd.watchdog = false;
+    assert!(train(&b, &ds, &no_wd).is_err(), "unwatched NaN must abort training");
+    fault::clear();
+}
+
+#[test]
+fn torn_checkpoint_write_preserves_the_previous_checkpoint() {
+    let _g = serial();
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+    let path = tmp("torn");
+    cleanup(&path);
+
+    let mut c = cfg(ModelKind::Gcn);
+    c.checkpoint_every = 5;
+    c.checkpoint_path = Some(path.clone());
+    train(&b, &ds, &c).unwrap();
+    let before = checkpoint::load(&path).unwrap();
+
+    // a save that crashes mid-write: half the bytes land in the temp
+    // file, the rename never happens
+    fault::arm("torn_checkpoint_write", None);
+    let err = checkpoint::save(&before, &path).unwrap_err();
+    assert!(format!("{err:#}").contains("torn"), "{err:#}");
+
+    // the checkpoint at `path` is untouched and still loads
+    let after = checkpoint::load(&path).unwrap();
+    assert_eq!(after, before, "torn write damaged the previous checkpoint");
+    // the half-written temp file fails cleanly, not UB
+    assert!(checkpoint::load(&checkpoint::tmp_path(&path)).is_err());
+
+    // and a resume from the surviving checkpoint still trains
+    let mut resumed = cfg(ModelKind::Gcn);
+    resumed.resume = Some(path.clone());
+    let res = train(&b, &ds, &resumed).unwrap();
+    assert_eq!(res.resumed_at, Some(10));
+    cleanup(&path);
+}
+
+#[test]
+fn corrupt_checkpoint_byte_is_detected_on_load() {
+    let _g = serial();
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+    let path = tmp("corrupt");
+    cleanup(&path);
+
+    let mut c = cfg(ModelKind::Gcn);
+    c.checkpoint_every = 5;
+    c.checkpoint_path = Some(path.clone());
+    train(&b, &ds, &c).unwrap();
+
+    // storage corruption after a successful save: one flipped byte
+    fault::arm("corrupt_checkpoint_byte", None);
+    let good = checkpoint::load(&path).unwrap();
+    checkpoint::save(&good, &path).unwrap();
+    assert_eq!(fault::armed_count(), 0, "the fault never fired");
+    let err = checkpoint::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+    // resuming from the corrupt file is a clean error, and a fresh run
+    // (no resume) is unaffected
+    let mut resumed = cfg(ModelKind::Gcn);
+    resumed.resume = Some(path.clone());
+    assert!(train(&b, &ds, &resumed).is_err());
+    train(&b, &ds, &cfg(ModelKind::Gcn)).unwrap();
+    cleanup(&path);
+}
+
+#[test]
+fn fault_specs_parse_and_reject_garbage() {
+    let _g = serial();
+    fault::arm_spec("nan_site@5, torn_checkpoint_write").unwrap();
+    assert_eq!(fault::armed_count(), 2);
+    assert!(!fault::fires("nan_site", 4), "wrong arg must not fire");
+    assert!(fault::fires("nan_site", 5));
+    assert!(!fault::fires("nan_site", 5), "faults are one-shot");
+    assert_eq!(fault::fires_any("torn_checkpoint_write"), Some(None));
+    assert_eq!(fault::armed_count(), 0);
+
+    assert!(fault::arm_spec("nan_site@notanumber").is_err());
+    assert!(fault::arm_spec("@3").is_err());
+    fault::arm_spec("").unwrap(); // empty spec arms nothing
+    assert_eq!(fault::armed_count(), 0);
+}

@@ -40,6 +40,7 @@ fn cfg(model: ModelKind, ablated: bool) -> TrainConfig {
         saint_subgraphs: 4,
         saint_batches_per_epoch: 2,
         reorder: ReorderKind::Degree,
+        ..TrainConfig::new(model)
     }
 }
 

@@ -111,6 +111,7 @@ fn train_cfg(model: ModelKind, epochs: usize, rsc: RscConfig) -> TrainConfig {
         saint_subgraphs: 4,
         saint_batches_per_epoch: 2,
         reorder: ReorderKind::Degree,
+        ..TrainConfig::new(model)
     }
 }
 

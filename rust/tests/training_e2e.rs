@@ -25,6 +25,7 @@ fn cfg(model: ModelKind, epochs: usize, rsc: RscConfig) -> TrainConfig {
         saint_subgraphs: 4,
         saint_batches_per_epoch: 2,
         reorder: ReorderKind::Degree,
+        ..TrainConfig::new(model)
     }
 }
 
