@@ -763,10 +763,7 @@ pub fn append_bench_kernels_json(
             r.speedup(),
         );
     }
-    let unix_s = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
+    let unix_s = crate::util::timer::unix_time_s();
     let run = obj(vec![
         ("unix_time", Json::from(unix_s as f64)),
         (

@@ -83,7 +83,7 @@ impl PrefetchSlot {
 
     /// Publish a finished build (called from the worker thread).
     pub fn fill(&self, built: Built) {
-        *self.result.lock().unwrap() = Some(built);
+        *self.result.lock().unwrap_or_else(|e| e.into_inner()) = Some(built);
         self.done.store(true, Ordering::Release);
     }
 
@@ -97,7 +97,7 @@ impl PrefetchSlot {
         if !self.is_done() {
             return None;
         }
-        self.result.lock().unwrap().take()
+        self.result.lock().unwrap_or_else(|e| e.into_inner()).take()
     }
 }
 

@@ -407,6 +407,7 @@ impl RscEngine {
             .map(|s| LayerScores {
                 scores: pair_scores_with(
                     self.col_norms.as_slice(),
+                    // rsc-lint: allow(R03) reason="reallocate only runs after every site observed norms"
                     self.grad_norms[s].as_ref().unwrap().as_slice(),
                     par,
                 ),
@@ -448,6 +449,7 @@ impl RscEngine {
         RefreshJob {
             k: self.ks[site],
             norms: Arc::clone(
+                // rsc-lint: allow(R03) reason="refreshes are only scheduled for sites with norms"
                 self.grad_norms[site].as_ref().expect("norms observed before refresh"),
             ),
         }
@@ -605,6 +607,7 @@ impl RscEngine {
             }
         }
         if served {
+            // rsc-lint: allow(R03) reason="`served` is true only when this entry was just taken"
             Plan::Approx(&self.cache.entry(site).expect("entry just served").selection)
         } else {
             Plan::Exact(exact)

@@ -424,9 +424,9 @@ impl Csr {
             .iter()
             .map(|ch| ch.iter().map(|&r| self.row_nnz(r as usize)).sum())
             .collect();
-        let src_chunks = parallel::split_varsize(&mut e.src, &sizes);
-        let dst_chunks = parallel::split_varsize(&mut e.dst, &sizes);
-        let w_chunks = parallel::split_varsize(&mut e.w, &sizes);
+        let src_chunks = parallel::split_varsize(&mut e.src, sizes.iter().copied());
+        let dst_chunks = parallel::split_varsize(&mut e.dst, sizes.iter().copied());
+        let w_chunks = parallel::split_varsize(&mut e.w, sizes.iter().copied());
         src_chunks
             .into_par_iter()
             .zip(dst_chunks)
@@ -498,8 +498,8 @@ impl Csr {
             .iter()
             .map(|&r0| rowptr[(r0 + rchunk).min(self.n)] - rowptr[r0])
             .collect();
-        let col_chunks = parallel::split_varsize(&mut col, &sizes);
-        let val_chunks = parallel::split_varsize(&mut val, &sizes);
+        let col_chunks = parallel::split_varsize(&mut col, sizes.iter().copied());
+        let val_chunks = parallel::split_varsize(&mut val, sizes.iter().copied());
         col_chunks
             .into_par_iter()
             .zip(val_chunks)
@@ -837,8 +837,8 @@ mod tests {
                     .map(|i| (e.src[i], e.dst[i], e.w[i]))
                     .collect()
             };
-            a.sort_by(|x, y| x.partial_cmp(y).unwrap());
-            b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            a.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)).then(x.2.total_cmp(&y.2)));
+            b.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)).then(x.2.total_cmp(&y.2)));
             assert_eq!(a, b);
         });
     }

@@ -24,8 +24,10 @@
 //!
 //! Fault tolerance (DESIGN.md §Fault tolerance): `--checkpoint-every N`
 //! writes an atomic, checksummed training snapshot every N epochs to
-//! `--checkpoint PATH` (default `rsc.ckpt`), and `--resume PATH`
-//! continues a run bit-identically from one (full-batch models only).
+//! `--checkpoint PATH` (default `rsc.ckpt`), `--checkpoint-mins N` adds a
+//! wall-clock cadence (checked at epoch boundaries; either trigger
+//! restarts the countdown), and `--resume PATH` continues a run
+//! bit-identically from one (full-batch models only).
 //! `--no-watchdog` disables the divergence watchdog's exact-path retry
 //! of steps with non-finite loss/gradients.  `--faults SPEC` arms
 //! deterministic fault points (builds with `--features fault-inject`
@@ -185,6 +187,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         fault::arm_spec(&spec)?;
     }
     let checkpoint_every = args.usize_or("checkpoint-every", 0)?;
+    let checkpoint_mins = args.u64_or("checkpoint-mins", 0)?;
     let cfg = TrainConfig {
         model,
         epochs: args.usize_or("epochs", 100)?,
@@ -197,10 +200,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         saint_batches_per_epoch: args.usize_or("saint-batches", 4)?,
         reorder: reorder_flag(args)?,
         checkpoint_every,
-        checkpoint_path: args
-            .str_opt("checkpoint")
-            .map(PathBuf::from)
-            .or_else(|| (checkpoint_every > 0).then(|| PathBuf::from("rsc.ckpt"))),
+        checkpoint_mins,
+        checkpoint_path: args.str_opt("checkpoint").map(PathBuf::from).or_else(|| {
+            (checkpoint_every > 0 || checkpoint_mins > 0).then(|| PathBuf::from("rsc.ckpt"))
+        }),
         resume: args.str_opt("resume").map(PathBuf::from),
         watchdog: !args.bool_or("no-watchdog", false)?,
     };

@@ -49,6 +49,7 @@ impl Tape {
         if s == input {
             x
         } else {
+            // rsc-lint: allow(R03) reason="slot liveness is a tape invariant; a dead read is a bug"
             self.slots[s].as_ref().expect("slot value is live")
         }
     }
@@ -60,6 +61,21 @@ impl Tape {
     fn take(&mut self, s: Slot) -> Option<Value> {
         self.slots[s].take()
     }
+}
+
+/// Pop the next op output.  Backends return exactly the output count the
+/// op's catalog entry declares (shape-checked in `Backend::run`), so a
+/// missing element is a catalog/executor bug, not a runtime condition a
+/// caller could recover from; the panic path is centralized here instead
+/// of scattered across every destructuring site.
+fn pop(it: &mut std::vec::IntoIter<Value>) -> Value {
+    // rsc-lint: allow(R03) reason="catalog-fixed op arity; absence is a bug, not a runtime error"
+    it.next().expect("op returned fewer outputs than its catalog arity")
+}
+
+/// Single-output convenience over [`pop`].
+fn one(out: Vec<Value>) -> Value {
+    pop(&mut out.into_iter())
 }
 
 /// Any registered architecture as (graph, params, op-name table): the
@@ -138,7 +154,7 @@ impl GraphModel {
                             }
                             Some(sels) => {
                                 let sel = &sels[sparse_ord];
-                                let op = if sel.cap == *bufs.caps.last().unwrap() {
+                                let op = if Some(&sel.cap) == bufs.caps.last() {
                                     self.names.gcn_fwd(din, dout, relu)
                                 } else {
                                     self.names.gcn_fwd_cap(din, dout, relu, sel.cap)
@@ -159,7 +175,7 @@ impl GraphModel {
                             }
                         }
                     };
-                    tape.set(node.outputs[0], out.into_iter().next().unwrap());
+                    tape.set(node.outputs[0], one(out));
                 }
                 NodeOp::Sage { din, dout, relu } => {
                     let w1 = self.params.get(node.params[0]).value();
@@ -183,8 +199,8 @@ impl GraphModel {
                         })?
                     };
                     let mut it = out.into_iter();
-                    tape.set(node.outputs[0], it.next().unwrap());
-                    tape.set(node.outputs[1], it.next().unwrap());
+                    tape.set(node.outputs[0], pop(&mut it));
+                    tape.set(node.outputs[1], pop(&mut it));
                 }
                 NodeOp::GcniiProp { layer, d } => {
                     let wl = self.params.get(node.params[0]).value();
@@ -208,8 +224,8 @@ impl GraphModel {
                         })?
                     };
                     let mut it = out.into_iter();
-                    tape.set(node.outputs[0], it.next().unwrap());
-                    tape.set(node.outputs[1], it.next().unwrap());
+                    tape.set(node.outputs[0], pop(&mut it));
+                    tape.set(node.outputs[1], pop(&mut it));
                 }
                 NodeOp::AppnpProp { d } => {
                     let t = bufs.fwd_tags;
@@ -231,7 +247,7 @@ impl GraphModel {
                             )
                         })?
                     };
-                    tape.set(node.outputs[0], out.into_iter().next().unwrap());
+                    tape.set(node.outputs[0], one(out));
                 }
                 NodeOp::Dense { din, dout, relu } => {
                     let w = self.params.get(node.params[0]).value();
@@ -246,7 +262,7 @@ impl GraphModel {
                             )
                         })?
                     };
-                    tape.set(node.outputs[0], out.into_iter().next().unwrap());
+                    tape.set(node.outputs[0], one(out));
                 }
             }
             if node.op.is_sparse() {
@@ -266,6 +282,7 @@ impl GraphModel {
         ws: &mut Workspace,
     ) -> Result<Value> {
         let mut tape = self.forward(b, x, bufs, None, tb, ws)?;
+        // rsc-lint: allow(R03) reason="the forward pass just wrote this slot; absence is a bug"
         let out = tape.take(self.graph.output).expect("output produced");
         ws.recycle_all(tape.slots.into_iter().flatten());
         Ok(out)
@@ -333,8 +350,8 @@ impl GraphModel {
         };
         let loss = loss_out[0].item_f32()?;
         let mut it = loss_out.into_iter();
-        ws.recycle(it.next().unwrap());
-        let g_logits = it.next().unwrap();
+        ws.recycle(pop(&mut it));
+        let g_logits = pop(&mut it);
 
         // forward values never read by a backward op retire now
         for s in 0..self.graph.n_slots {
@@ -351,6 +368,7 @@ impl GraphModel {
 
         for i in (0..self.graph.nodes.len()).rev() {
             let node = &self.graph.nodes[i];
+            // rsc-lint: allow(R03) reason="reverse-order walk guarantees the output grad exists"
             let g = grads[node.outputs[0]].take().expect("output grad is live");
             self.backward_node(
                 node, g, b, x, bufs, engine, step, tb, ws, &tape, &mut grads, &mut pgrads,
@@ -371,6 +389,7 @@ impl GraphModel {
         ws.recycle_all(grads.into_iter().flatten());
         let grads: Vec<Value> = pgrads
             .into_iter()
+            // rsc-lint: allow(R03) reason="graph construction wires every param into a node"
             .map(|g| g.expect("every param received a gradient"))
             .collect();
         Ok((loss, grads))
@@ -432,7 +451,7 @@ impl GraphModel {
                 ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
-        grads[slot] = Some(out.into_iter().next().unwrap());
+        grads[slot] = Some(one(out));
         ws.recycle(acc);
         ws.recycle(val);
         Ok(())
@@ -463,7 +482,7 @@ impl GraphModel {
                 ExecCtx { tags: &[], plan: None, ws: Some(&mut *ws) },
             )
         })?;
-        engine.observe_norms(site, norms.into_iter().next().unwrap().into_f32s()?);
+        engine.observe_norms(site, one(norms).into_f32s()?);
         Ok(())
     }
 
@@ -489,6 +508,7 @@ impl GraphModel {
         let input = self.graph.input;
         match node.op {
             NodeOp::Gcn { din, dout, relu } => {
+                // rsc-lint: allow(R03) reason="LayerGraph::for_model marks every gcn node a site"
                 let site = node.site.expect("gcn nodes are always sites");
                 self.observe_site_norms(b, engine, step, site, &g, dout, tb, ws)?;
                 let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
@@ -518,7 +538,7 @@ impl GraphModel {
                 })?;
                 // fault hook: `nan_site@site` poisons this site's
                 // backward-SpMM output (divergence-watchdog recovery tests)
-                let mut gj = gj.into_iter().next().unwrap();
+                let mut gj = one(gj);
                 crate::util::fault::poison_f32s("nan_site", site as u64, gj.f32s_mut()?);
                 let mm = {
                     let h_in = tape.val(x, input, node.inputs[0]);
@@ -532,8 +552,8 @@ impl GraphModel {
                 };
                 ws.recycle(gj);
                 let mut it = mm.into_iter();
-                pgrads[node.params[0]] = Some(it.next().unwrap());
-                let gh = it.next().unwrap();
+                pgrads[node.params[0]] = Some(pop(&mut it));
+                let gh = pop(&mut it);
                 if node.inputs[0] != input {
                     self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
                 } else {
@@ -563,10 +583,10 @@ impl GraphModel {
                     })?
                 };
                 let mut it = out.into_iter();
-                pgrads[node.params[0]] = Some(it.next().unwrap());
-                pgrads[node.params[1]] = Some(it.next().unwrap());
-                let gm = it.next().unwrap();
-                let gh_a = it.next().unwrap();
+                pgrads[node.params[0]] = Some(pop(&mut it));
+                pgrads[node.params[1]] = Some(pop(&mut it));
+                let gm = pop(&mut it);
+                let gh_a = pop(&mut it);
                 if let Some(site) = node.site {
                     self.observe_site_norms(b, engine, step, site, &gm, din, tb, ws)?;
                     let (cap, ev, t, sp) = plan_edges(engine, site, step, &bufs.exact);
@@ -581,7 +601,7 @@ impl GraphModel {
                             },
                         )
                     })?;
-                    let mut gh = out.into_iter().next().unwrap();
+                    let mut gh = one(out);
                     crate::util::fault::poison_f32s("nan_site", site as u64, gh.f32s_mut()?);
                     self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
                 }
@@ -602,9 +622,9 @@ impl GraphModel {
                     })?
                 };
                 let mut it = out.into_iter();
-                pgrads[node.params[0]] = Some(it.next().unwrap());
-                let gp = it.next().unwrap();
-                let gh0c = it.next().unwrap();
+                pgrads[node.params[0]] = Some(pop(&mut it));
+                let gp = pop(&mut it);
+                let gh0c = pop(&mut it);
                 self.contribute(b, tb, ws, grads, node.inputs[1], gh0c, v_rows)?;
                 if let Some(site) = node.site {
                     self.observe_site_norms(b, engine, step, site, &gp, d, tb, ws)?;
@@ -621,7 +641,7 @@ impl GraphModel {
                         )
                     })?;
                     ws.recycle(gp);
-                    let mut gh = out.into_iter().next().unwrap();
+                    let mut gh = one(out);
                     crate::util::fault::poison_f32s("nan_site", site as u64, gh.f32s_mut()?);
                     self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
                 } else {
@@ -639,8 +659,8 @@ impl GraphModel {
                 })?;
                 ws.recycle(g);
                 let mut it = out.into_iter();
-                let gp = it.next().unwrap();
-                let gh0c = it.next().unwrap();
+                let gp = pop(&mut it);
+                let gh0c = pop(&mut it);
                 self.contribute(b, tb, ws, grads, node.inputs[1], gh0c, v_rows)?;
                 if let Some(site) = node.site {
                     self.observe_site_norms(b, engine, step, site, &gp, d, tb, ws)?;
@@ -657,7 +677,7 @@ impl GraphModel {
                         )
                     })?;
                     ws.recycle(gp);
-                    let mut gh = out.into_iter().next().unwrap();
+                    let mut gh = one(out);
                     crate::util::fault::poison_f32s("nan_site", site as u64, gh.f32s_mut()?);
                     self.contribute(b, tb, ws, grads, node.inputs[0], gh, v_rows)?;
                 } else {
@@ -688,8 +708,8 @@ impl GraphModel {
                 };
                 ws.recycle(g);
                 let mut it = out.into_iter();
-                pgrads[node.params[0]] = Some(it.next().unwrap());
-                let gx = it.next().unwrap();
+                pgrads[node.params[0]] = Some(pop(&mut it));
+                let gx = pop(&mut it);
                 if node.inputs[0] != input {
                     self.contribute(b, tb, ws, grads, node.inputs[0], gx, v_rows)?;
                 } else {

@@ -255,6 +255,7 @@ impl GraphBufs {
         let fwd_edges = matrix.to_edge_list();
         assert_eq!(
             fwd_edges.len(),
+            // rsc-lint: allow(R03) reason="constructor contract: the bucket ladder is never empty"
             *caps.last().expect("empty caps"),
             "forward edges must fill the top bucket exactly"
         );
@@ -275,6 +276,7 @@ impl GraphBufs {
     /// real edges than the executables' full capacity.
     pub fn new_padded(matrix: Csr, caps: Vec<usize>) -> GraphBufs {
         let mut fwd_edges = matrix.to_edge_list();
+        // rsc-lint: allow(R03) reason="constructor contract: the bucket ladder is never empty"
         fwd_edges.pad_to(*caps.last().expect("empty caps"));
         let exact = Selection::exact(&matrix, &caps);
         GraphBufs {
@@ -305,7 +307,9 @@ impl GraphBufs {
         }
         let (_, dst, w) = &self.fwd;
         Some(self.fwd_plan.get_or_build(
+            // rsc-lint: allow(R03) reason="edge_values builds dst as i32 and w as f32 by construction"
             dst.i32s().expect("fwd dst is i32"),
+            // rsc-lint: allow(R03) reason="edge_values builds dst as i32 and w as f32 by construction"
             w.f32s().expect("fwd w is f32"),
             self.matrix.n,
             self.fwd_tags,

@@ -45,20 +45,25 @@ impl Param {
 
     /// The raw weight slice (tests, serialization).
     pub fn weights(&self) -> &[f32] {
+        // rsc-lint: allow(R03) reason="Param construction fixes all three tensors as f32"
         self.w.f32s().expect("param weights are f32")
     }
 
     /// Mutable weight slice — the finite-difference gradient checks
     /// nudge single entries through this.
     pub fn weights_mut(&mut self) -> &mut [f32] {
+        // rsc-lint: allow(R03) reason="Param construction fixes all three tensors as f32"
         self.w.f32s_mut().expect("param weights are f32")
     }
 
     /// Weights plus both Adam moments, borrowed (checkpoint capture).
     pub fn state(&self) -> (&[f32], &[f32], &[f32]) {
         (
+            // rsc-lint: allow(R03) reason="Param construction fixes all three tensors as f32"
             self.w.f32s().expect("param weights are f32"),
+            // rsc-lint: allow(R03) reason="Param construction fixes all three tensors as f32"
             self.m.f32s().expect("adam m is f32"),
+            // rsc-lint: allow(R03) reason="Param construction fixes all three tensors as f32"
             self.v.f32s().expect("adam v is f32"),
         )
     }
@@ -103,9 +108,12 @@ impl Param {
             },
         )?;
         let mut it = out.into_iter();
-        let old_w = std::mem::replace(&mut self.w, it.next().unwrap());
-        let old_m = std::mem::replace(&mut self.m, it.next().unwrap());
-        let old_v = std::mem::replace(&mut self.v, it.next().unwrap());
+        let (Some(new_w), Some(new_m), Some(new_v)) = (it.next(), it.next(), it.next()) else {
+            anyhow::bail!("{op} returned fewer than 3 outputs");
+        };
+        let old_w = std::mem::replace(&mut self.w, new_w);
+        let old_m = std::mem::replace(&mut self.m, new_m);
+        let old_v = std::mem::replace(&mut self.v, new_v);
         if let Some(ws) = ws {
             ws.recycle_all([old_w, old_m, old_v, grad]);
         }

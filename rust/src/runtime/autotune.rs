@@ -133,12 +133,12 @@ fn tune_key(plan: &SpmmPlan, d: usize) -> TuneKey {
 /// `simd::set_enabled` mid-process may also want this, though stale
 /// entries are re-validated against [`candidates`] on every hit anyway).
 pub fn reset_tuning_cache() {
-    cache().lock().unwrap().clear();
+    cache().lock().unwrap_or_else(|e| e.into_inner()).clear();
 }
 
 /// Cached winners currently held (diagnostics).
 pub fn tuning_cache_len() -> usize {
-    cache().lock().unwrap().len()
+    cache().lock().unwrap_or_else(|e| e.into_inner()).len()
 }
 
 // ---------------------------------------------------------------------
@@ -198,7 +198,7 @@ pub fn tune_plan(plan: &SpmmPlan, src: &[i32], w: &[f32], d: usize) -> KernelCho
     }
     let cands = candidates(plan.avg_nnz_per_row(), d);
     let key = tune_key(plan, d);
-    let cached = cache().lock().unwrap().get(&key).copied();
+    let cached = cache().lock().unwrap_or_else(|e| e.into_inner()).get(&key).copied();
     if let Some(c) = cached {
         if cands.contains(&c) {
             TUNE_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
@@ -207,7 +207,7 @@ pub fn tune_plan(plan: &SpmmPlan, src: &[i32], w: &[f32], d: usize) -> KernelCho
     }
     TUNE_RACES.fetch_add(1, Ordering::Relaxed);
     let winner = race(plan, src, w, d, &cands);
-    cache().lock().unwrap().insert(key, winner);
+    cache().lock().unwrap_or_else(|e| e.into_inner()).insert(key, winner);
     plan.record_choice(d, winner, ChoiceSource::Tuned)
 }
 

@@ -144,7 +144,7 @@ impl Manifest {
         }
         ensure!(!ops.is_empty(), "manifest has no ops");
         ensure!(
-            *dataset.caps.last().unwrap() == dataset.m,
+            dataset.caps.last() == Some(&dataset.m),
             "cap ladder must end at m"
         );
         Ok(Manifest { dataset, ops })
@@ -185,6 +185,7 @@ impl Manifest {
                 file: PathBuf::from("synthesized"),
                 inputs,
                 outputs,
+                // rsc-lint: allow(R03) reason="meta strings are code-authored literals below"
                 meta: Json::parse(&meta).expect("synthesized meta is valid json"),
                 name: name.clone(),
             };

@@ -748,13 +748,13 @@ pub fn spmm_planned_variant_into(
         spmm_planned_rows(plan, choice, src, w, x, d, 0..plan.vout(), out);
         return;
     }
-    let sizes: Vec<usize> = plan.chunks().iter().map(|r| (r.end - r.start) * d).collect();
-    let parts = parallel::split_varsize(out, &sizes);
+    let sizes = plan.chunks().iter().map(|r| (r.end - r.start) * d);
+    let parts = parallel::split_varsize(out, sizes);
     parts
         .into_par_iter()
         .zip(plan.chunks().par_iter())
         .for_each(|(part, range)| {
-            spmm_planned_rows(plan, choice, src, w, x, d, range.clone(), part);
+            spmm_planned_rows(plan, choice, src, w, x, d, range.start..range.end, part);
         });
 }
 

@@ -322,6 +322,8 @@ mod avx {
 
     /// Horizontal reduce matching the scalar [`super::reduce8`] tree
     /// exactly: lo+hi lanewise, upper-pair fold, lane0 + lane1.
+    // SAFETY: unsafe only for `target_feature`; callers must have probed
+    // AVX (the dispatch layer gates on [`super::available`]).
     #[inline]
     #[target_feature(enable = "avx")]
     unsafe fn hreduce8(v: __m256) -> f32 {
@@ -336,6 +338,9 @@ mod avx {
         _mm_cvtss_f32(u)
     }
 
+    // SAFETY: unsafe only for `target_feature` (callers probe AVX first);
+    // all pointer arithmetic stays below `n = min(b.len(), c.len())`, and
+    // unaligned loads/stores are used throughout.
     #[target_feature(enable = "avx")]
     pub unsafe fn axpy8(av: f32, b: &[f32], c: &mut [f32]) {
         let n = b.len().min(c.len());
@@ -355,6 +360,8 @@ mod avx {
         }
     }
 
+    // SAFETY: unsafe only for `target_feature` (callers probe AVX first);
+    // indices stay below `n = min(a.len(), b.len())`; unaligned loads.
     #[target_feature(enable = "avx")]
     pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len().min(b.len());
@@ -376,6 +383,8 @@ mod avx {
         s
     }
 
+    // SAFETY: unsafe only for `target_feature` (callers probe AVX first);
+    // indices stay below `x.len()`; unaligned loads.
     #[target_feature(enable = "avx")]
     pub unsafe fn sum8(x: &[f32]) -> f32 {
         let n = x.len();
@@ -394,6 +403,10 @@ mod avx {
         s
     }
 
+    // SAFETY: unsafe only for `target_feature` (callers probe AVX first).
+    // The vector loop indexes all eight slices below `n = w.len()`; the
+    // caller passes equal-length slices (the [`super::adam_span`]
+    // contract) and the scalar tail handles `n % 8`.
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx")]
     pub unsafe fn adam8(
@@ -533,12 +546,16 @@ mod tests {
             // axpy
             let mut c1 = vec_rng(&mut rng, n, 1.0);
             let mut c2 = c1.clone();
+            // SAFETY: `available()` returned true above, so AVX is present.
             unsafe { avx::axpy8(0.37, &a, &mut c1) };
             axpy_scalar(0.37, &a, &mut c2);
             assert_eq!(c1, c2, "axpy n={n}");
-            // dot / sum
-            assert_eq!(unsafe { avx::dot8(&a, &b) }, dot_scalar(&a, &b), "dot n={n}");
-            assert_eq!(unsafe { avx::sum8(&a) }, sum_scalar(&a), "sum n={n}");
+            // SAFETY: `available()` returned true above, so AVX is present.
+            let d8 = unsafe { avx::dot8(&a, &b) };
+            assert_eq!(d8, dot_scalar(&a, &b), "dot n={n}");
+            // SAFETY: `available()` returned true above, so AVX is present.
+            let s8 = unsafe { avx::sum8(&a) };
+            assert_eq!(s8, sum_scalar(&a), "sum n={n}");
             // adam
             let w = vec_rng(&mut rng, n, 1.0);
             let m = vec_rng(&mut rng, n, 0.1);
@@ -547,6 +564,7 @@ mod tests {
             let coef = AdamCoef::new(3.0, 0.01);
             let (mut w1, mut m1, mut v1) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
             let (mut w2m, mut m2m, mut v2m) = (vec![0f32; n], vec![0f32; n], vec![0f32; n]);
+            // SAFETY: `available()` returned true above, so AVX is present.
             unsafe { avx::adam8(&w, &m, &v, &g, &coef, &mut w1, &mut m1, &mut v1) };
             adam_span_scalar(&w, &m, &v, &g, &coef, &mut w2m, &mut m2m, &mut v2m);
             assert_eq!((w1, m1, v1), (w2m, m2m, v2m), "adam n={n}");

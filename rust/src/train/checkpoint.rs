@@ -189,10 +189,12 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_bits(self.u32()?))
@@ -310,10 +312,12 @@ impl Checkpoint {
         ensure!(
             &bytes[..MAGIC.len()] == MAGIC,
             "not a checkpoint: bad magic (expected {:?})",
-            std::str::from_utf8(MAGIC).unwrap()
+            String::from_utf8_lossy(MAGIC)
         );
         let (body, tail) = bytes.split_at(bytes.len() - 8);
-        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let stored = u64::from_le_bytes([
+            tail[0], tail[1], tail[2], tail[3], tail[4], tail[5], tail[6], tail[7],
+        ]);
         let computed = fnv1a_bytes(body);
         ensure!(
             stored == computed,

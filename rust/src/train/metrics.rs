@@ -80,8 +80,7 @@ pub fn accuracy(logits: &[f32], labels: &[i32], keep: &[bool], c: usize) -> f64 
             .enumerate()
             // on value ties, the *earlier* index must compare greater
             .max_by(|a, b| a.1.total_cmp(b.1).then_with(|| b.0.cmp(&a.0)))
-            .map(|(j, _)| j as i32)
-            .unwrap();
+            .map_or(-1, |(j, _)| j as i32);
         hit += (pred == labels[i]) as usize;
         total += 1;
     }

@@ -7,6 +7,6 @@ pub mod trainer;
 pub use checkpoint::{graph_fingerprint, Checkpoint, ParamState};
 pub use metrics::{accuracy, f1_micro, mean_auc, MetricKind};
 pub use trainer::{
-    full_graph_bufs, saint_eval_full_batch, train, weights_fingerprint, TrainConfig,
-    TrainResult,
+    full_graph_bufs, saint_eval_full_batch, train, train_with_clock, weights_fingerprint,
+    TrainConfig, TrainResult,
 };

@@ -32,9 +32,9 @@ use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::metrics::MetricKind;
 use crate::util::parallel::{self, Parallelism};
 use crate::util::rng::Rng;
-use crate::util::timer::{Stopwatch, TimeBook};
+use crate::util::timer::{Clock, Stopwatch, TimeBook, WallClock};
 use crate::Result;
-use anyhow::ensure;
+use anyhow::{ensure, Context};
 use std::path::PathBuf;
 
 #[derive(Debug, Clone)]
@@ -62,7 +62,13 @@ pub struct TrainConfig {
     /// only; saves are atomic and resume is bit-identical (DESIGN.md
     /// §Fault tolerance).
     pub checkpoint_every: usize,
-    /// Where checkpoints land (required when `checkpoint_every > 0`).
+    /// Also checkpoint every N minutes of training wall-clock (0 = off;
+    /// `--checkpoint-mins`).  Composes with `checkpoint_every`: a save
+    /// from either trigger restarts the wall-clock countdown.  Epochs
+    /// are never split — the cadence is checked at epoch boundaries.
+    pub checkpoint_mins: u64,
+    /// Where checkpoints land (required when `checkpoint_every > 0` or
+    /// `checkpoint_mins > 0`).
     pub checkpoint_path: Option<PathBuf>,
     /// Resume from this checkpoint instead of initializing fresh.
     pub resume: Option<PathBuf>,
@@ -86,6 +92,7 @@ impl TrainConfig {
             saint_batches_per_epoch: 4,
             reorder: ReorderKind::Degree,
             checkpoint_every: 0,
+            checkpoint_mins: 0,
             checkpoint_path: None,
             resume: None,
             watchdog: true,
@@ -286,12 +293,10 @@ fn tune_static_plans(bufs: &GraphBufs, widths: &[usize], par: Parallelism) {
     let Some(&d) = widths.first() else { return };
     if let Some(plan) = bufs.fwd_spmm_plan() {
         let (src, _, w) = &bufs.fwd;
-        tune_plan(
-            &plan,
-            src.i32s().expect("fwd src is i32"),
-            w.f32s().expect("fwd w is f32"),
-            d,
-        );
+        // warmup is best-effort: a malformed buffer just skips tuning
+        if let (Ok(src), Ok(w)) = (src.i32s(), w.f32s()) {
+            tune_plan(&plan, src, w, d);
+        }
     }
     let plan = bufs.exact.spmm_plan(par);
     tune_plan(&plan, bufs.exact.src(), bufs.exact.w(), d);
@@ -326,14 +331,32 @@ fn labels_value(ds: &Dataset) -> Value {
 /// Train per `cfg` on `backend`; the single entry point used by the CLI,
 /// the examples and every bench.
 pub fn train(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+    train_with_clock(b, ds, cfg, &mut WallClock::new())
+}
+
+/// [`train`] with an injected elapsed-time source, so the wall-clock
+/// checkpoint cadence (`checkpoint_mins`) is unit-testable with a
+/// [`crate::util::timer::FakeClock`].  `clock.elapsed_s()` is read once
+/// per epoch boundary; the clock's origin is "training started".
+pub fn train_with_clock(
+    b: &dyn Backend,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    clock: &mut dyn Clock,
+) -> Result<TrainResult> {
     b.manifest().check_against(&ds.cfg)?;
     match cfg.model {
         ModelKind::Saint => train_saint(b, ds, cfg),
-        _ => train_full_batch(b, ds, cfg),
+        _ => train_full_batch(b, ds, cfg, clock),
     }
 }
 
-fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+fn train_full_batch(
+    b: &dyn Backend,
+    ds0: &Dataset,
+    cfg: &TrainConfig,
+    clock: &mut dyn Clock,
+) -> Result<TrainResult> {
     let mut rng = Rng::new(cfg.seed ^ 0x7A31);
     let names = OpNames::full();
     // One-shot locality reordering: train on the relabeled graph, keep
@@ -379,13 +402,14 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
     let mut test_at_best = f64::NAN;
 
     // --- fault tolerance: checkpoint/resume + watchdog + panic counter ---
+    let checkpointing = cfg.checkpoint_every > 0 || cfg.checkpoint_mins > 0;
     ensure!(
-        cfg.checkpoint_every == 0 || cfg.checkpoint_path.is_some(),
-        "checkpoint_every > 0 needs a checkpoint path"
+        !checkpointing || cfg.checkpoint_path.is_some(),
+        "checkpoint_every/checkpoint_mins > 0 needs a checkpoint path"
     );
     // fingerprint of the (possibly reordered) matrix the run trains on:
     // resume under a different graph or --reorder is rejected up front
-    let graph_fp = (cfg.checkpoint_every > 0 || cfg.resume.is_some())
+    let graph_fp = (checkpointing || cfg.resume.is_some())
         .then(|| checkpoint::graph_fingerprint(&bufs.matrix));
     let mut start_epoch = 0usize;
     let mut resumed_at = None;
@@ -393,7 +417,7 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
         let ck = checkpoint::load(path)?;
         ck.restore_into(
             cfg.model,
-            graph_fp.expect("graph_fp is computed when resume is set"),
+            graph_fp.context("graph_fp is computed when resume is set")?,
             cfg.seed,
             cfg.epochs as u64,
             &mut model,
@@ -408,6 +432,9 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
         resumed_at = Some(ck.next_epoch);
     }
     let mut checkpoints_written = 0u64;
+    // wall-clock cadence: next elapsed-seconds reading that triggers a
+    // save; any save (either trigger) restarts the countdown
+    let mut next_wall_ckpt_s = cfg.checkpoint_mins * 60;
     let worker_panics0 = parallel::worker_panics();
     let mut wd = Watchdog::new(cfg.watchdog);
 
@@ -465,10 +492,12 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
         // updated best_val), so a resumed run replays from exactly here;
         // skipped at the very last epoch — there is nothing left to resume
         let done = epoch + 1;
-        if cfg.checkpoint_every > 0 && done % cfg.checkpoint_every == 0 && done < cfg.epochs {
+        let epoch_due = cfg.checkpoint_every > 0 && done % cfg.checkpoint_every == 0;
+        let wall_due = cfg.checkpoint_mins > 0 && clock.elapsed_s() >= next_wall_ckpt_s;
+        if (epoch_due || wall_due) && done < cfg.epochs {
             let ck = Checkpoint::capture(
                 cfg.model,
-                graph_fp.expect("graph_fp is computed when checkpointing"),
+                graph_fp.context("graph_fp is computed when checkpointing")?,
                 cfg.seed,
                 cfg.epochs as u64,
                 done as u64,
@@ -480,9 +509,12 @@ fn train_full_batch(b: &dyn Backend, ds0: &Dataset, cfg: &TrainConfig) -> Result
                 best_val,
                 test_at_best,
             );
-            let path = cfg.checkpoint_path.as_ref().expect("validated above");
+            let path = cfg.checkpoint_path.as_ref().context("validated above")?;
             checkpoint::save(&ck, path)?;
             checkpoints_written += 1;
+            if cfg.checkpoint_mins > 0 {
+                next_wall_ckpt_s = clock.elapsed_s() + cfg.checkpoint_mins * 60;
+            }
         }
     }
     ensure!(
@@ -557,7 +589,7 @@ pub fn saint_eval_full_batch(
 fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
     ensure!(ds.cfg.saint_v > 0, "dataset {} has no SAINT config", ds.cfg.name);
     ensure!(
-        cfg.resume.is_none() && cfg.checkpoint_every == 0,
+        cfg.resume.is_none() && cfg.checkpoint_every == 0 && cfg.checkpoint_mins == 0,
         "checkpoint/resume is not supported for graphsaint (per-subgraph engines); \
          use a full-batch model"
     );
@@ -698,8 +730,10 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                 test_at_best = test;
             }
             if cfg.verbose {
-                println!("epoch {epoch:4} loss {:.4} val {val:.4} test {test:.4}",
-                    loss_curve.last().unwrap());
+                println!(
+                    "epoch {epoch:4} loss {:.4} val {val:.4} test {test:.4}",
+                    loss_curve.last().copied().unwrap_or(f32::NAN)
+                );
             }
             ws.recycle(logits);
             ws.trim_to_high_water();

@@ -1,0 +1,223 @@
+//! The process-global manifest: every `static Atomic*`/`OnceLock` in the
+//! crate is registered here, with its reset discipline spelled out.  The
+//! lint pass (rule R06, see DESIGN.md §Static analysis) cross-checks this
+//! file against the tree in both directions — an unregistered global and a
+//! stale registry entry are both violations — so the list below is
+//! machine-verified complete.
+//!
+//! Why a manifest: tests and harnesses that observe process-global counters
+//! (kernel-variant tallies, plan-cache hits, autotune stats) are only
+//! deterministic if they know every global that can move underneath them
+//! and can reset the resettable ones from a single hook
+//! ([`reset_process_globals`]).  The `seed_determinism` suite's
+//! single-`#[test]`-per-file constraint exists for exactly this reason;
+//! the manifest makes the full inventory visible instead of folklore.
+
+/// How a registered global behaves across a reset boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResetKind {
+    /// Observability tally; zeroed by its reset hook.
+    Counter,
+    /// Cached derived state; cleared (re-derivable) by its reset hook.
+    Cache,
+    /// Behaviour switch; restored to its default by its reset hook.
+    Toggle,
+    /// Initialized once per process, immutable afterwards; never reset.
+    InitOnce,
+    /// Monotonic by contract; must NEVER be reset (correctness, not
+    /// observability, depends on it).
+    Monotonic,
+}
+
+/// One registered process global.
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalEntry {
+    /// Crate-relative module path of the `static` (for humans and for the
+    /// R06 cross-check, which matches on the trailing identifier).
+    pub path: &'static str,
+    pub kind: ResetKind,
+    /// Why the global exists and what resetting it means.
+    pub doc: &'static str,
+    /// Reset hook; `None` for [`ResetKind::InitOnce`] and
+    /// [`ResetKind::Monotonic`] entries.
+    pub reset: Option<fn()>,
+}
+
+impl GlobalEntry {
+    /// The bare `static` identifier (last path segment).
+    pub fn name(&self) -> &'static str {
+        self.path.rsplit("::").next().unwrap_or(self.path).trim()
+    }
+}
+
+/// Restore SIMD dispatch to its default (enabled; hardware still gates it).
+fn reset_simd_switch() {
+    crate::runtime::simd::set_enabled(true);
+}
+
+macro_rules! global {
+    ($($seg:ident)::+, $kind:ident, $doc:literal) => {
+        GlobalEntry {
+            path: stringify!($($seg)::+),
+            kind: ResetKind::$kind,
+            doc: $doc,
+            reset: None,
+        }
+    };
+    ($($seg:ident)::+, $kind:ident, $doc:literal, $reset:expr) => {
+        GlobalEntry {
+            path: stringify!($($seg)::+),
+            kind: ResetKind::$kind,
+            doc: $doc,
+            reset: Some($reset),
+        }
+    };
+}
+
+/// Every process global in the crate.  Keep entries grouped by module; the
+/// R06 pass flags any `static Atomic*`/`OnceLock` missing from this list
+/// and any entry whose static no longer exists.
+pub const REGISTERED: &[GlobalEntry] = &[
+    global!(
+        runtime::plan::PLAN_BUILDS,
+        Counter,
+        "SpMM plans built since process start (plan-cache miss tally)",
+        crate::runtime::plan::reset_plan_stats
+    ),
+    global!(
+        runtime::plan::PLAN_HITS,
+        Counter,
+        "SpMM plan-cache hits since process start",
+        crate::runtime::plan::reset_plan_stats
+    ),
+    global!(
+        runtime::native::KERNEL_SCALAR,
+        Counter,
+        "planned-SpMM executions taking the scalar kernel variant",
+        crate::runtime::native::reset_spmm_kernel_stats
+    ),
+    global!(
+        runtime::native::KERNEL_AXPY4,
+        Counter,
+        "planned-SpMM executions taking the 4-wide unrolled variant",
+        crate::runtime::native::reset_spmm_kernel_stats
+    ),
+    global!(
+        runtime::native::KERNEL_SIMD,
+        Counter,
+        "planned-SpMM executions taking the SIMD tiled variant",
+        crate::runtime::native::reset_spmm_kernel_stats
+    ),
+    global!(
+        runtime::autotune::TUNE_RACES,
+        Counter,
+        "autotune invocations that lost a first-measurement race",
+        crate::runtime::autotune::reset_autotune_stats
+    ),
+    global!(
+        runtime::autotune::TUNE_CACHE_HITS,
+        Counter,
+        "autotune invocations answered from the process tuning cache",
+        crate::runtime::autotune::reset_autotune_stats
+    ),
+    global!(
+        runtime::autotune::TUNE_FALLBACKS,
+        Counter,
+        "autotune invocations that fell back to the static heuristic",
+        crate::runtime::autotune::reset_autotune_stats
+    ),
+    global!(
+        runtime::autotune::CACHE,
+        Cache,
+        "process-wide tuning cache: measured kernel choice per plan shape",
+        crate::runtime::autotune::reset_tuning_cache
+    ),
+    global!(
+        runtime::simd::DISABLED,
+        Toggle,
+        "the --no-simd ablation switch; reset restores SIMD dispatch",
+        reset_simd_switch
+    ),
+    global!(
+        runtime::simd::AVX,
+        InitOnce,
+        "cached hardware AVX probe; immutable for the process lifetime"
+    ),
+    global!(
+        sampling::selection::TAG_COUNTER,
+        Monotonic,
+        "immutability-tag allocator; reset would alias tags and poison buffer caches"
+    ),
+    global!(
+        util::parallel::POOL,
+        InitOnce,
+        "rayon pool size chosen at first use; immutable for the process"
+    ),
+    global!(
+        util::parallel::WORKER_PANICS,
+        Monotonic,
+        "worker panics since process start; monotonic tally, survives resets"
+    ),
+    global!(
+        util::parallel::ARENA_REUSED,
+        Counter,
+        "scratch-arena buffers served from the per-thread free list",
+        crate::util::parallel::reset_arena_stats
+    ),
+    global!(
+        util::parallel::ARENA_FRESH,
+        Counter,
+        "scratch-arena buffers freshly allocated",
+        crate::util::parallel::reset_arena_stats
+    ),
+];
+
+/// Run every registered reset hook.  Idempotent (hooks shared by several
+/// entries, e.g. the plan-stat pair, just run more than once); globals
+/// whose kind is [`ResetKind::InitOnce`] or [`ResetKind::Monotonic`] are
+/// left untouched by design.
+pub fn reset_process_globals() {
+    for entry in REGISTERED {
+        if let Some(reset) = entry.reset {
+            reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    /// Structural invariants only — no hook is invoked here, so this test
+    /// cannot race sibling tests that observe the live globals.
+    #[test]
+    fn manifest_is_well_formed() {
+        assert!(!REGISTERED.is_empty());
+        let names: BTreeSet<&str> = REGISTERED.iter().map(|e| e.name()).collect();
+        assert_eq!(
+            names.len(),
+            REGISTERED.len(),
+            "static identifiers must be unique for the R06 name match"
+        );
+        for entry in REGISTERED {
+            assert!(!entry.doc.is_empty(), "{} needs a doc line", entry.path);
+            match entry.kind {
+                ResetKind::Counter | ResetKind::Cache | ResetKind::Toggle => {
+                    assert!(
+                        entry.reset.is_some(),
+                        "{} is resettable but has no hook",
+                        entry.path
+                    );
+                }
+                ResetKind::InitOnce | ResetKind::Monotonic => {
+                    assert!(
+                        entry.reset.is_none(),
+                        "{} must not carry a reset hook",
+                        entry.path
+                    );
+                }
+            }
+        }
+    }
+}

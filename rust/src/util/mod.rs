@@ -5,6 +5,7 @@
 //! config + per-thread scratch arena) the hot-path kernels share.
 
 pub mod cli;
+pub mod counters;
 pub mod fault;
 pub mod json;
 pub mod parallel;

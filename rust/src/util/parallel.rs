@@ -264,10 +264,16 @@ arena_fn!(with_usize, usizes, usize, 0);
 
 /// Split `s` into consecutive mutable chunks of the given sizes (which
 /// must sum to at most `s.len()`); used to hand each parallel worker a
-/// disjoint, variable-width output region.
-pub fn split_varsize<'a, T>(mut s: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
-    let mut out = Vec::with_capacity(sizes.len());
-    for &n in sizes {
+/// disjoint, variable-width output region.  Takes any size iterator so
+/// hot-path callers need not materialize a `Vec` first (the `*_into`
+/// kernels' zero-allocation contract, rule R04).
+pub fn split_varsize<'a, T, I>(mut s: &'a mut [T], sizes: I) -> Vec<&'a mut [T]>
+where
+    I: IntoIterator<Item = usize>,
+{
+    let sizes = sizes.into_iter();
+    let mut out = Vec::with_capacity(sizes.size_hint().0);
+    for n in sizes {
         let (head, tail) = s.split_at_mut(n);
         out.push(head);
         s = tail;
@@ -342,7 +348,7 @@ mod tests {
     #[test]
     fn split_varsize_partitions() {
         let mut v: Vec<u32> = (0..10).collect();
-        let parts = split_varsize(&mut v, &[3, 0, 4, 3]);
+        let parts = split_varsize(&mut v, [3, 0, 4, 3]);
         assert_eq!(parts.len(), 4);
         assert_eq!(parts[0], &[0, 1, 2]);
         assert_eq!(parts[1], &[] as &[u32]);

@@ -23,6 +23,75 @@ impl Stopwatch {
     }
 }
 
+/// Seconds since the Unix epoch.  The one sanctioned `SystemTime` read in
+/// the crate (rule R05): callers that want an absolute timestamp (bench
+/// reports, log lines) go through here instead of touching the wall clock
+/// from kernel or library code.
+pub fn unix_time_s() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// An injectable monotonic-elapsed-seconds source, so wall-clock-driven
+/// policies (the trainer's `--checkpoint-mins` cadence) can be unit-tested
+/// with a fake clock while the real implementation stays confined to this
+/// module (rule R05).
+pub trait Clock {
+    /// Seconds elapsed since the clock's origin (first call or creation).
+    fn elapsed_s(&mut self) -> u64;
+}
+
+/// The real thing: lazily starts a [`Stopwatch`] on first read.
+#[derive(Debug, Default)]
+pub struct WallClock(Option<Stopwatch>);
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock(None)
+    }
+}
+
+impl Clock for WallClock {
+    fn elapsed_s(&mut self) -> u64 {
+        let sw = self.0.get_or_insert_with(Stopwatch::start);
+        sw.elapsed().as_secs()
+    }
+}
+
+/// Scripted clock for tests: returns the programmed readings in order and
+/// repeats the last one when exhausted.
+#[derive(Debug, Default)]
+pub struct FakeClock {
+    readings: Vec<u64>,
+    i: usize,
+}
+
+impl FakeClock {
+    pub fn new(readings: &[u64]) -> Self {
+        FakeClock {
+            readings: readings.to_vec(),
+            i: 0,
+        }
+    }
+}
+
+impl Clock for FakeClock {
+    fn elapsed_s(&mut self) -> u64 {
+        let r = self
+            .readings
+            .get(self.i)
+            .or(self.readings.last())
+            .copied()
+            .unwrap_or(0);
+        if self.i < self.readings.len() {
+            self.i += 1;
+        }
+        r
+    }
+}
+
 /// Accumulates durations per label.
 #[derive(Debug, Default, Clone)]
 pub struct TimeBook {
@@ -116,6 +185,19 @@ mod tests {
         });
         assert_eq!(v, 42);
         assert!(tb.total_ms("work") >= 1.0);
+    }
+
+    #[test]
+    fn fake_clock_replays_then_repeats() {
+        let mut c = FakeClock::new(&[0, 61, 130]);
+        assert_eq!(c.elapsed_s(), 0);
+        assert_eq!(c.elapsed_s(), 61);
+        assert_eq!(c.elapsed_s(), 130);
+        assert_eq!(c.elapsed_s(), 130);
+        let mut empty = FakeClock::new(&[]);
+        assert_eq!(empty.elapsed_s(), 0);
+        let mut w = WallClock::new();
+        assert_eq!(w.elapsed_s(), 0);
     }
 
     #[test]

@@ -14,8 +14,9 @@ use rsc::model::exec::GraphModel;
 use rsc::model::ops::{ModelKind, OpNames};
 use rsc::runtime::NativeBackend;
 use rsc::train::checkpoint::{self, Checkpoint, ParamState};
-use rsc::train::{full_graph_bufs, train, TrainConfig};
+use rsc::train::{full_graph_bufs, train, train_with_clock, TrainConfig};
 use rsc::util::parallel::Parallelism;
+use rsc::util::timer::FakeClock;
 use rsc::util::prop;
 use rsc::util::rng::Rng;
 use std::path::PathBuf;
@@ -144,6 +145,62 @@ fn resume_is_bit_identical_with_pending_refreshes_in_flight() {
         assert_eq!(resumed.loss_curve, reference.loss_curve, "{}", model.name());
         cleanup(&path);
     }
+}
+
+/// `--checkpoint-mins` against a scripted clock: the trainer reads the
+/// injected clock once per epoch boundary (plus once more after each
+/// save, to restart the countdown), saves when the cadence elapses, and
+/// never splits an epoch or saves at the final one.  Wall-clock saves
+/// are read-only too: the run's result must equal the uninterrupted
+/// reference bit for bit, and resuming from the last snapshot must
+/// stitch back onto the same trajectory.
+#[test]
+fn wall_clock_cadence_checkpoints_with_injected_clock() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = rsc::data::load_or_generate("tiny", 42).unwrap();
+    let path = tmp("wallclock");
+    cleanup(&path);
+
+    let reference = train(&b, &ds, &cfg(ModelKind::Gcn)).unwrap();
+
+    // 2-minute cadence over 12 epochs: boundary readings cross the 120s
+    // threshold at done=4 (125s) and the post-save threshold 250s at
+    // done=8 (260s).  The 400s reading at done=12 also crosses, but the
+    // last epoch never saves — there is nothing left to resume.
+    let mut c = cfg(ModelKind::Gcn);
+    c.checkpoint_mins = 2;
+    c.checkpoint_path = Some(path.clone());
+    let mut clock = FakeClock::new(&[
+        10, 40, 70, 125, 130, 160, 190, 230, 260, 265, 300, 330, 360, 400,
+    ]);
+    let saved = train_with_clock(&b, &ds, &c, &mut clock).unwrap();
+    assert_eq!(saved.checkpoints_written, 2);
+    assert_eq!(
+        saved.weights_fingerprint, reference.weights_fingerprint,
+        "wall-clock checkpointing changed the training result"
+    );
+
+    // the surviving file is the done=8 snapshot
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.next_epoch, 8);
+    let mut resumed_cfg = cfg(ModelKind::Gcn);
+    resumed_cfg.resume = Some(path.clone());
+    let resumed = train(&b, &ds, &resumed_cfg).unwrap();
+    assert_eq!(resumed.resumed_at, Some(8));
+    assert_eq!(resumed.weights_fingerprint, reference.weights_fingerprint);
+    assert_eq!(resumed.loss_curve, reference.loss_curve);
+
+    // a cadence with no path is a config error up front, not a panic
+    // deep inside the loop; graphsaint refuses the flag entirely
+    let mut no_path = cfg(ModelKind::Gcn);
+    no_path.checkpoint_mins = 1;
+    assert!(train(&b, &ds, &no_path).is_err());
+    let mut saint = cfg(ModelKind::Saint);
+    saint.checkpoint_mins = 1;
+    saint.checkpoint_path = Some(path.clone());
+    let err = train(&b, &ds, &saint).unwrap_err();
+    assert!(format!("{err:#}").contains("graphsaint"), "{err:#}");
+    cleanup(&path);
 }
 
 fn mk_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {

@@ -1,0 +1,985 @@
+//! Machine-checked repo invariants for the RSC determinism contract.
+//!
+//! The rule catalog (R01..R06, plus R00 for directive hygiene) is documented
+//! in DESIGN.md §Static analysis.  The pass is deliberately token-level: every
+//! rule concerns a lexical pattern — float orderings, `unsafe` placement,
+//! panic paths, allocation calls inside `*_into` kernels, wall-clock reads,
+//! unregistered process globals — so a small hand-rolled lexer (comments,
+//! strings, raw strings, char-vs-lifetime disambiguation, nested block
+//! comments) yields span-accurate diagnostics without a full parse and
+//! without any dependency the offline toolchain image does not carry.
+//!
+//! Violations are suppressed per line with an explicit, reasoned directive:
+//!
+//! ```text
+//! // rsc-lint: allow(R03) reason="catalog-fixed arity; absence is a bug"
+//! ```
+//!
+//! A trailing directive applies to its own line; an own-line directive applies
+//! to itself and the next line that carries a token.  A comment mentioning the
+//! tool that does not parse as a directive is itself a violation (R00), so
+//! typos cannot silently disable a rule.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// The rule catalog: stable IDs and one-line summaries.
+pub const RULES: &[(&str, &str)] = &[
+    ("R00", "lint directives must parse: allow(<rules>) reason=\"...\""),
+    ("R01", "no partial_cmp float orderings (NaN-panic class); use total_cmp"),
+    ("R02", "unsafe confined to runtime/simd.rs, each site annotated // SAFETY:"),
+    ("R03", "no unwrap/expect/panic! in library modules outside #[cfg(test)]"),
+    ("R04", "no allocation calls inside *_into kernel bodies in runtime/native.rs"),
+    ("R05", "no Instant/SystemTime reads outside timer/autotune/xla"),
+    ("R06", "every process-global Atomic*/OnceLock registered in util/counters.rs"),
+];
+
+/// Library subtrees where R03 (no panic paths) applies.
+pub const LIB_DIRS: &[&str] = &[
+    "src/coordinator/",
+    "src/runtime/",
+    "src/cache/",
+    "src/train/",
+    "src/model/",
+];
+
+/// Files sanctioned to read the wall clock (R05).
+pub const R05_ALLOWED: &[&str] = &[
+    "src/util/timer.rs",
+    "src/runtime/autotune.rs",
+    "src/runtime/xla.rs",
+];
+
+/// A single diagnostic with a span into the offending file.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+    pub message: String,
+    pub snippet: String,
+}
+
+impl Violation {
+    /// Human-readable one/two-line rendering (`RULE file:line:col message`).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{} {}:{}:{} {}",
+            self.rule, self.file, self.line, self.col, self.message
+        );
+        if !self.snippet.is_empty() {
+            let _ = write!(s, "\n    | {}", self.snippet);
+        }
+        s
+    }
+}
+
+/// A process-global `static` declaration discovered by R06.
+#[derive(Clone, Debug)]
+pub struct StaticDecl {
+    pub name: String,
+    pub line: usize,
+    pub col: usize,
+    pub snippet: String,
+    /// True when the declaration line carries an `allow(R06)` directive.
+    pub allowed: bool,
+}
+
+/// Per-file lint result; R06 resolution needs the whole tree, so discovered
+/// statics ride along instead of being judged here.
+#[derive(Clone, Debug, Default)]
+pub struct FileLint {
+    pub violations: Vec<Violation>,
+    pub statics: Vec<StaticDecl>,
+    pub suppressed: usize,
+}
+
+/// Whole-tree lint result.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+    pub suppressed: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Tok {
+    text: String,
+    line: usize,
+    col: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Comment {
+    line: usize,
+    text: String,
+    /// True when no token precedes the comment on its line.
+    own_line: bool,
+}
+
+fn is_id_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_id_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust-ish source: identifiers and single punctuation characters
+/// become tokens; comments are captured separately; string/char/lifetime
+/// contents are consumed and dropped so quoted braces cannot confuse the
+/// region matchers.
+fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut line_has_tok: BTreeSet<usize> = BTreeSet::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut col = 1usize;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            i += 1;
+            line += 1;
+            col = 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            col += 1;
+            continue;
+        }
+        // Line comment (incl. doc comments).
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let start = i;
+            let sl = line;
+            while i < n && s[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line: sl,
+                text: s[start..i].iter().collect(),
+                own_line: !line_has_tok.contains(&sl),
+            });
+            col = 1;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if s[i] == '/' && i + 1 < n && s[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                    col += 2;
+                } else if s[i] == '*' && i + 1 < n && s[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                    col += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if s[i] == '\n' {
+                    i += 1;
+                    line += 1;
+                    col = 1;
+                } else {
+                    i += 1;
+                    col += 1;
+                }
+            }
+            continue;
+        }
+        // Raw and raw-byte strings: r"..", r#".."#, br#".."#.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if s[j] == 'b' {
+                j += 1;
+            }
+            if j < n && s[j] == 'r' {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < n && s[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && s[j] == '"' {
+                    j += 1;
+                    while j < n {
+                        if s[j] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && j + 1 + h < n && s[j + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    for k in i..j.min(n) {
+                        if s[k] == '\n' {
+                            line += 1;
+                            col = 1;
+                        } else {
+                            col += 1;
+                        }
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Plain and byte strings.
+        if c == '"' || (c == 'b' && i + 1 < n && s[i + 1] == '"') {
+            if c == 'b' {
+                i += 1;
+                col += 1;
+            }
+            let mut j = i + 1;
+            let mut cc = col + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    j += 2;
+                    cc += 2;
+                    continue;
+                }
+                if s[j] == '"' {
+                    j += 1;
+                    cc += 1;
+                    break;
+                }
+                if s[j] == '\n' {
+                    line += 1;
+                    cc = 1;
+                }
+                j += 1;
+                cc += 1;
+            }
+            col = cc;
+            i = j;
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                let mut j = i + 2;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                j += 1;
+                col += j - i;
+                i = j;
+                continue;
+            }
+            if i + 2 < n && s[i + 2] == '\'' && s[i + 1] != '\'' {
+                i += 3;
+                col += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_id_cont(s[j]) {
+                j += 1;
+            }
+            col += j - i;
+            i = j;
+            continue;
+        }
+        if is_id_start(c) {
+            let mut j = i;
+            while j < n && is_id_cont(s[j]) {
+                j += 1;
+            }
+            line_has_tok.insert(line);
+            toks.push(Tok {
+                text: s[i..j].iter().collect(),
+                line,
+                col,
+            });
+            col += j - i;
+            i = j;
+            continue;
+        }
+        line_has_tok.insert(line);
+        toks.push(Tok {
+            text: c.to_string(),
+            line,
+            col,
+        });
+        i += 1;
+        col += 1;
+    }
+    (toks, comments)
+}
+
+// ---------------------------------------------------------------------------
+// Region helpers (token-index ranges, inclusive)
+// ---------------------------------------------------------------------------
+
+fn match_brace(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Regions of items gated by an attribute whose bracketed tokens satisfy
+/// `want`; any stack of subsequent attributes is skipped before locating the
+/// item's brace-matched body.
+fn attr_regions(toks: &[Tok], want: &dyn Fn(&[&str]) -> bool) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut k = 0usize;
+    while k + 1 < toks.len() {
+        if toks[k].text == "#" && toks[k + 1].text == "[" {
+            let mut depth = 0i64;
+            let mut j = k + 1;
+            while j < toks.len() {
+                if toks[j].text == "[" {
+                    depth += 1;
+                } else if toks[j].text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            let lo = (k + 2).min(toks.len());
+            let hi = j.min(toks.len());
+            let inner: Vec<&str> = toks[lo..hi].iter().map(|t| t.text.as_str()).collect();
+            let mut after = j + 1;
+            while after + 1 < toks.len() && toks[after].text == "#" && toks[after + 1].text == "[" {
+                let mut d2 = 0i64;
+                let mut a = after + 1;
+                while a < toks.len() {
+                    if toks[a].text == "[" {
+                        d2 += 1;
+                    } else if toks[a].text == "]" {
+                        d2 -= 1;
+                        if d2 == 0 {
+                            break;
+                        }
+                    }
+                    a += 1;
+                }
+                after = a + 1;
+            }
+            if want(&inner) {
+                let mut b = after;
+                let mut found = None;
+                while b < toks.len() {
+                    let t = toks[b].text.as_str();
+                    if t == "{" {
+                        found = Some(b);
+                        break;
+                    }
+                    if t == ";" {
+                        break;
+                    }
+                    b += 1;
+                }
+                if let Some(f) = found {
+                    regions.push((k, match_brace(toks, f)));
+                }
+            }
+            k = after;
+        } else {
+            k += 1;
+        }
+    }
+    regions
+}
+
+fn cfg_test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    attr_regions(toks, &|inner| {
+        !inner.is_empty() && inner[0] == "cfg" && inner.contains(&"test")
+    })
+}
+
+/// Brace-bodied macro invocations of the given name (`name! { .. }`).
+fn macro_regions(toks: &[Tok], name: &str) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    for (k, w) in toks.windows(3).enumerate() {
+        if w[0].text == name && w[1].text == "!" && w[2].text == "{" {
+            regions.push((k, match_brace(toks, k + 2)));
+        }
+    }
+    regions
+}
+
+fn in_regions(idx: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// Bodies of `fn *_into` items: (fn name, region start, region end).
+fn into_fn_regions(toks: &[Tok]) -> Vec<(String, usize, usize)> {
+    let mut regions = Vec::new();
+    for (k, w) in toks.windows(2).enumerate() {
+        if w[0].text == "fn" && w[1].text.ends_with("_into") {
+            let mut b = k + 2;
+            while b < toks.len() && toks[b].text != "{" {
+                if toks[b].text == ";" {
+                    break;
+                }
+                b += 1;
+            }
+            if b < toks.len() && toks[b].text == "{" {
+                regions.push((toks[k + 1].text.clone(), k, match_brace(toks, b)));
+            }
+        }
+    }
+    regions
+}
+
+// ---------------------------------------------------------------------------
+// Allow directives
+// ---------------------------------------------------------------------------
+
+/// Parse `// rsc-lint: allow(R03, R05) reason="..."`; `None` means the text
+/// is not a well-formed directive.
+fn parse_allow(text: &str) -> Option<(Vec<String>, String)> {
+    let t = text.trim().strip_prefix("//")?.trim_start();
+    let t = t.strip_prefix("rsc-lint:")?.trim_start();
+    let t = t.strip_prefix("allow(")?;
+    let close = t.find(')')?;
+    let rules_part = &t[..close];
+    let ok = rules_part
+        .chars()
+        .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == ',' || c.is_whitespace());
+    if !ok {
+        return None;
+    }
+    let rules: Vec<String> = rules_part
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    let rest = &t[close + 1..];
+    let trimmed = rest.trim_start();
+    if trimmed.len() == rest.len() {
+        // Require whitespace between `)` and `reason=`.
+        return None;
+    }
+    let trimmed = trimmed.strip_prefix("reason=\"")?;
+    let q = trimmed.find('"')?;
+    let reason = &trimmed[..q];
+    if reason.is_empty() || !trimmed[q + 1..].trim().is_empty() {
+        return None;
+    }
+    Some((rules, reason.to_string()))
+}
+
+/// Map each source line to the set of rules suppressed on it, plus the lines
+/// of comments that mention the tool but fail to parse (R00 material).
+fn suppressions(
+    comments: &[Comment],
+    toks: &[Tok],
+) -> (BTreeMap<usize, BTreeSet<String>>, Vec<(usize, String)>) {
+    let mut supp: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    let mut bad: Vec<(usize, String)> = Vec::new();
+    let tok_lines: BTreeSet<usize> = toks.iter().map(|t| t.line).collect();
+    for cm in comments {
+        if !cm.text.contains("rsc-lint") {
+            continue;
+        }
+        match parse_allow(&cm.text) {
+            None => bad.push((cm.line, cm.text.trim().to_string())),
+            Some((rules, _reason)) => {
+                let mut lines = vec![cm.line];
+                if cm.own_line {
+                    if let Some(&nxt) = tok_lines.range(cm.line + 1..).next() {
+                        lines.push(nxt);
+                    }
+                }
+                for l in lines {
+                    supp.entry(l).or_default().extend(rules.iter().cloned());
+                }
+            }
+        }
+    }
+    (supp, bad)
+}
+
+/// R02 helper: is there a `// SAFETY:` comment on the `unsafe` line itself or
+/// immediately above it (walking up through comment and attribute lines)?
+fn safety_above(
+    cmap: &BTreeMap<usize, Vec<String>>,
+    attr_lines: &BTreeSet<usize>,
+    unsafe_line: usize,
+) -> bool {
+    if let Some(cms) = cmap.get(&unsafe_line) {
+        if cms.iter().any(|t| t.contains("SAFETY:")) {
+            return true;
+        }
+    }
+    let mut ln = unsafe_line.saturating_sub(1);
+    while ln > 0 {
+        if let Some(cms) = cmap.get(&ln) {
+            if cms.iter().any(|t| t.contains("SAFETY:")) {
+                return true;
+            }
+            ln -= 1;
+            continue;
+        }
+        if attr_lines.contains(&ln) {
+            ln -= 1;
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Per-file linting
+// ---------------------------------------------------------------------------
+
+/// Lint one file's source. `rel` is the path relative to the `rust/` crate
+/// root with forward slashes (e.g. `src/runtime/native.rs`); rules use it to
+/// decide scope.  R06 statics are returned for the tree-level cross-check.
+pub fn lint_source(rel: &str, src: &str) -> FileLint {
+    let (toks, comments) = lex(src);
+    let (supp, bad_directives) = suppressions(&comments, &toks);
+    let lines: Vec<&str> = src.lines().collect();
+    let snippet_of = |line: usize| -> String {
+        lines
+            .get(line.saturating_sub(1))
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    };
+
+    let mut raw: Vec<(&'static str, usize, usize, String)> = Vec::new();
+    let mut out: Vec<Violation> = Vec::new();
+    for (ln, text) in &bad_directives {
+        // R00 is not suppressible: a broken directive must never hide itself.
+        out.push(Violation {
+            rule: "R00",
+            file: rel.to_string(),
+            line: *ln,
+            col: 1,
+            message: format!("malformed lint directive: `{text}`"),
+            snippet: snippet_of(*ln),
+        });
+    }
+
+    let test_regions = cfg_test_regions(&toks);
+    let tl_regions = macro_regions(&toks, "thread_local");
+    let mut cmap: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for cm in &comments {
+        cmap.entry(cm.line).or_default().push(cm.text.clone());
+    }
+    let mut first_tok_on_line: BTreeMap<usize, &str> = BTreeMap::new();
+    for t in &toks {
+        first_tok_on_line.entry(t.line).or_insert(t.text.as_str());
+    }
+    let attr_lines: BTreeSet<usize> = first_tok_on_line
+        .iter()
+        .filter(|&(_, &t)| t == "#")
+        .map(|(&l, _)| l)
+        .collect();
+
+    let in_src = rel.starts_with("src/");
+    let is_lib = LIB_DIRS.iter().any(|d| rel.starts_with(d));
+    let is_simd = rel == "src/runtime/simd.rs";
+    let r05_exempt = R05_ALLOWED.contains(&rel);
+
+    for (idx, tok) in toks.iter().enumerate() {
+        let t = tok.text.as_str();
+        let nxt = toks.get(idx + 1).map_or("", |x| x.text.as_str());
+        let prv = if idx > 0 {
+            toks[idx - 1].text.as_str()
+        } else {
+            ""
+        };
+        if t == "partial_cmp" {
+            raw.push((
+                "R01",
+                tok.line,
+                tok.col,
+                "float ordering via partial_cmp (NaN-panic class); use total_cmp".to_string(),
+            ));
+        }
+        if t == "unsafe" {
+            if !is_simd {
+                raw.push((
+                    "R02",
+                    tok.line,
+                    tok.col,
+                    "unsafe outside runtime/simd.rs".to_string(),
+                ));
+            } else if !safety_above(&cmap, &attr_lines, tok.line) {
+                raw.push((
+                    "R02",
+                    tok.line,
+                    tok.col,
+                    "unsafe without an immediately-preceding // SAFETY: comment".to_string(),
+                ));
+            }
+        }
+        if is_lib && !in_regions(idx, &test_regions) {
+            if (t == "unwrap" || t == "expect") && nxt == "(" && prv == "." {
+                raw.push((
+                    "R03",
+                    tok.line,
+                    tok.col,
+                    format!("{t}() in library module; propagate via anyhow::Result"),
+                ));
+            }
+            if t == "panic" && nxt == "!" {
+                raw.push((
+                    "R03",
+                    tok.line,
+                    tok.col,
+                    "panic! in library module; return an error instead".to_string(),
+                ));
+            }
+        }
+        if in_src && !r05_exempt && (t == "Instant" || t == "SystemTime") {
+            raw.push((
+                "R05",
+                tok.line,
+                tok.col,
+                format!("wall-clock read ({t}) outside timer/autotune/xla"),
+            ));
+        }
+    }
+
+    if rel == "src/runtime/native.rs" {
+        for (fname, a, b) in into_fn_regions(&toks) {
+            if in_regions(a, &test_regions) {
+                continue;
+            }
+            for idx in a..=b.min(toks.len().saturating_sub(1)) {
+                let t = toks[idx].text.as_str();
+                let nxt = toks.get(idx + 1).map_or("", |x| x.text.as_str());
+                let prv = if idx > 0 {
+                    toks[idx - 1].text.as_str()
+                } else {
+                    ""
+                };
+                let hit = if t == "vec" && nxt == "!" {
+                    Some("vec!".to_string())
+                } else if matches!(t, "to_vec" | "collect" | "clone" | "to_string")
+                    && nxt == "("
+                    && prv == "."
+                {
+                    Some(format!(".{t}()"))
+                } else if matches!(t, "new" | "with_capacity")
+                    && prv == ":"
+                    && idx >= 3
+                    && matches!(toks[idx - 3].text.as_str(), "Vec" | "Box" | "String")
+                {
+                    Some(format!("{}::{t}", toks[idx - 3].text))
+                } else {
+                    None
+                };
+                if let Some(h) = hit {
+                    let what = if t == "clone" {
+                        format!("clone inside zero-alloc kernel {fname}")
+                    } else {
+                        format!("allocation ({h}) inside zero-alloc kernel {fname}")
+                    };
+                    raw.push(("R04", toks[idx].line, toks[idx].col, what));
+                }
+            }
+        }
+    }
+
+    let mut statics: Vec<StaticDecl> = Vec::new();
+    for (idx, tok) in toks.iter().enumerate() {
+        if tok.text == "static"
+            && !in_regions(idx, &tl_regions)
+            && idx + 2 < toks.len()
+            && toks[idx + 2].text == ":"
+        {
+            let name = toks[idx + 1].text.clone();
+            let mut j = idx + 3;
+            let mut global = false;
+            while j < toks.len() && toks[j].text != "=" && toks[j].text != ";" {
+                let ty = toks[j].text.as_str();
+                if ty.starts_with("Atomic") || ty == "OnceLock" {
+                    global = true;
+                }
+                j += 1;
+            }
+            if global {
+                let allowed = supp.get(&tok.line).is_some_and(|s| s.contains("R06"));
+                statics.push(StaticDecl {
+                    name,
+                    line: tok.line,
+                    col: tok.col,
+                    snippet: snippet_of(tok.line),
+                    allowed,
+                });
+            }
+        }
+    }
+
+    let mut suppressed = 0usize;
+    for (rule, line, col, message) in raw {
+        if supp.get(&line).is_some_and(|s| s.contains(rule)) {
+            suppressed += 1;
+            continue;
+        }
+        out.push(Violation {
+            rule,
+            file: rel.to_string(),
+            line,
+            col,
+            message,
+            snippet: snippet_of(line),
+        });
+    }
+
+    FileLint {
+        violations: out,
+        statics,
+        suppressed,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tree-level linting (walk + R06 cross-check)
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Parse registry entries (`global!(path::NAME, Kind, "doc")`) out of the
+/// counters manifest.  Returns (static name, manifest line).
+fn registry_entries(src: &str) -> Vec<(String, usize)> {
+    let (toks, _comments) = lex(src);
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k + 2 < toks.len() {
+        if toks[k].text == "global" && toks[k + 1].text == "!" && toks[k + 2].text == "(" {
+            let line = toks[k].line;
+            let mut name: Option<String> = None;
+            let mut j = k + 3;
+            while j < toks.len() && toks[j].text != "," && toks[j].text != ")" {
+                let first = toks[j].text.chars().next();
+                if first.is_some_and(is_id_start) {
+                    name = Some(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            if let Some(n) = name {
+                out.push((n, line));
+            }
+            k = j;
+        } else {
+            k += 1;
+        }
+    }
+    out
+}
+
+/// Lint every `.rs` file under `<root>/src` and `<root>/benches`, where
+/// `root` is the main crate directory (`rust/`).  Performs the R06 cross-file
+/// check against `src/util/counters.rs`.
+pub fn lint_tree(root: &Path) -> Result<Report, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "benches"] {
+        let base = root.join(sub);
+        if base.is_dir() {
+            collect_rs(&base, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        return Err(format!(
+            "no .rs files under {}/src or {}/benches; wrong --root?",
+            root.display(),
+            root.display()
+        ));
+    }
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut statics: Vec<(String, StaticDecl)> = Vec::new();
+    let mut suppressed = 0usize;
+    for p in &files {
+        let rel = p
+            .strip_prefix(root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        let fl = lint_source(&rel, &src);
+        violations.extend(fl.violations);
+        suppressed += fl.suppressed;
+        for d in fl.statics {
+            statics.push((rel.clone(), d));
+        }
+    }
+
+    const MANIFEST: &str = "src/util/counters.rs";
+    let reg_path = root.join(MANIFEST);
+    let registry = if reg_path.is_file() {
+        let src = std::fs::read_to_string(&reg_path).map_err(|e| e.to_string())?;
+        let manifest_lines: Vec<String> = src.lines().map(|l| l.trim().to_string()).collect();
+        Some((registry_entries(&src), manifest_lines))
+    } else {
+        None
+    };
+
+    for (rel, d) in &statics {
+        if d.allowed {
+            suppressed += 1;
+            continue;
+        }
+        match &registry {
+            None => violations.push(Violation {
+                rule: "R06",
+                file: rel.clone(),
+                line: d.line,
+                col: d.col,
+                message: format!(
+                    "process global `{}` but the {MANIFEST} manifest is missing",
+                    d.name
+                ),
+                snippet: d.snippet.clone(),
+            }),
+            Some((reg, _)) if !reg.iter().any(|(n, _)| n == &d.name) => {
+                violations.push(Violation {
+                    rule: "R06",
+                    file: rel.clone(),
+                    line: d.line,
+                    col: d.col,
+                    message: format!("process global `{}` not registered in {MANIFEST}", d.name),
+                    snippet: d.snippet.clone(),
+                });
+            }
+            _ => {}
+        }
+    }
+    if let Some((reg, manifest_lines)) = &registry {
+        let live: BTreeSet<&str> = statics.iter().map(|(_, d)| d.name.as_str()).collect();
+        for (name, line) in reg {
+            if !live.contains(name.as_str()) {
+                violations.push(Violation {
+                    rule: "R06",
+                    file: MANIFEST.to_string(),
+                    line: *line,
+                    col: 1,
+                    message: format!(
+                        "registered global `{name}` no longer exists under src/ or benches/"
+                    ),
+                    snippet: manifest_lines
+                        .get(line.saturating_sub(1))
+                        .cloned()
+                        .unwrap_or_default(),
+                });
+            }
+        }
+    }
+
+    violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule).cmp(&(b.file.as_str(), b.line, b.col, b.rule))
+    });
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        violations,
+        suppressed,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// JSON report
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Report {
+    /// Machine-readable report (schema `rsc-lint/v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        let _ = writeln!(s, "  \"schema\": \"rsc-lint/v1\",");
+        let _ = writeln!(s, "  \"root\": \"{}\",", json_escape(&self.root));
+        let _ = writeln!(s, "  \"files_scanned\": {},", self.files_scanned);
+        s.push_str("  \"rules\": [\n");
+        for (i, (id, summary)) in RULES.iter().enumerate() {
+            let comma = if i + 1 < RULES.len() { "," } else { "" };
+            let _ = writeln!(
+                s,
+                "    {{\"id\": \"{}\", \"summary\": \"{}\"}}{comma}",
+                json_escape(id),
+                json_escape(summary)
+            );
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"violations\": [\n");
+        for (i, v) in self.violations.iter().enumerate() {
+            let comma = if i + 1 < self.violations.len() { "," } else { "" };
+            let _ = writeln!(
+                s,
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"col\": {}, \
+                 \"message\": \"{}\", \"snippet\": \"{}\"}}{comma}",
+                json_escape(v.rule),
+                json_escape(&v.file),
+                v.line,
+                v.col,
+                json_escape(&v.message),
+                json_escape(&v.snippet)
+            );
+        }
+        s.push_str("  ],\n");
+        let _ = writeln!(s, "  \"suppressed\": {}", self.suppressed);
+        s.push_str("}\n");
+        s
+    }
+}

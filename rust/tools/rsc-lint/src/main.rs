@@ -1,0 +1,105 @@
+//! CLI for the repo-invariant lint pass.
+//!
+//! ```text
+//! cargo run -p rsc-lint -- --check [--root DIR] [--json FILE]
+//! cargo run -p rsc-lint -- --list-rules
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: rsc-lint --check [--root DIR] [--json FILE] | --list-rules
+  --check        lint every .rs under <root>/src and <root>/benches
+  --root DIR     crate root to scan (default: the workspace's rust/ crate)
+  --json FILE    also write a machine-readable report (schema rsc-lint/v1)
+  --list-rules   print the rule catalog and exit";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut check = false;
+    let mut list_rules = false;
+    let mut root: Option<PathBuf> = None;
+    let mut json_out: Option<PathBuf> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--check" => check = true,
+            "--list-rules" => list_rules = true,
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(d) => root = Some(PathBuf::from(d)),
+                    None => {
+                        eprintln!("rsc-lint: --root needs a directory\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--json" => {
+                i += 1;
+                match args.get(i) {
+                    Some(f) => json_out = Some(PathBuf::from(f)),
+                    None => {
+                        eprintln!("rsc-lint: --json needs a file path\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            other => {
+                eprintln!("rsc-lint: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+
+    if list_rules {
+        for (id, summary) in rsc_lint::RULES {
+            println!("{id}  {summary}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    if !check {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    // Default root: this crate lives at rust/tools/rsc-lint, the scanned
+    // crate at rust/, so the tree is reachable relative to the manifest dir
+    // regardless of the invocation cwd.
+    let root = root.unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../.."));
+    let root = root.canonicalize().unwrap_or(root);
+
+    let report = match rsc_lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("rsc-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &json_out {
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("rsc-lint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    for v in &report.violations {
+        println!("{}", v.render());
+    }
+    println!(
+        "rsc-lint: {} violation(s), {} suppressed, {} files scanned under {}",
+        report.violations.len(),
+        report.suppressed,
+        report.files_scanned,
+        report.root
+    );
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,10 @@
+// R01 fixture (linted as src/graph/score.rs, outside the R03 library
+// dirs so only the float-ordering rule fires).
+
+pub fn pick_partial(xs: &[f32]) -> Option<f32> {
+    xs.iter().cloned().max_by(|a, b| a.partial_cmp(b).unwrap())
+}
+
+pub fn pick_total(xs: &[f32]) -> Option<f32> {
+    xs.iter().cloned().max_by(|a, b| a.total_cmp(b))
+}

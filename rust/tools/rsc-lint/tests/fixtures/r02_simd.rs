@@ -1,0 +1,13 @@
+// R02 fixture (linted as src/runtime/simd.rs): the first unsafe block
+// is annotated and clean; the second has no SAFETY comment.
+
+pub fn annotated(a: &[f32]) -> f32 {
+    // SAFETY: fixture — caller probed AVX; slice lengths are checked.
+    let x = unsafe { *a.get_unchecked(0) };
+    x
+}
+
+pub fn unannotated(a: &[f32]) -> f32 {
+    let y = unsafe { *a.get_unchecked(0) };
+    y
+}

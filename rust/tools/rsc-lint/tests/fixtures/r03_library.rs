@@ -1,0 +1,26 @@
+// R03 fixture (linted as src/train/fixture.rs, a library dir): one
+// unwrap and one panic! fire; the expect is suppressed by an own-line
+// directive; everything inside #[cfg(test)] is exempt.
+
+pub fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn g(x: Option<u32>) -> u32 {
+    // rsc-lint: allow(R03) reason="fixture: own-line directive covers the next line"
+    x.expect("present")
+}
+
+pub fn h() {
+    panic!("boom");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn inside_tests_is_fine() {
+        Some(1u32).unwrap();
+        None::<u32>.expect("fine here");
+        panic!("fine here too");
+    }
+}

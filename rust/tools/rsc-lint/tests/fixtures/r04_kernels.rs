@@ -1,0 +1,17 @@
+// R04 fixture (linted as src/runtime/native.rs): three allocation calls
+// inside the `*_into` kernel body fire; the same call in a helper that
+// is not a kernel does not.
+
+pub fn axpy_into(out: &mut [f32], src: &[f32]) {
+    let tmp: Vec<f32> = src.to_vec();
+    let mut buf = Vec::new();
+    buf.push(1.0f32);
+    let v = vec![0.0f32; out.len()];
+    for (o, x) in out.iter_mut().zip(v.iter().chain(tmp.iter())) {
+        *o += *x;
+    }
+}
+
+pub fn helper(src: &[f32]) -> Vec<f32> {
+    src.to_vec()
+}

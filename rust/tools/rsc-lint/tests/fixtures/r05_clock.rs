@@ -1,0 +1,13 @@
+// R05 fixture: both wall-clock types fire when linted under a path
+// outside timer/autotune/xla, and neither fires under src/util/timer.rs.
+
+pub fn now_ms() -> u128 {
+    std::time::Instant::now().elapsed().as_millis()
+}
+
+pub fn unix_s() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

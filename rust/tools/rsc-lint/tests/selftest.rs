@@ -1,0 +1,327 @@
+//! Linter self-tests: every rule has a violating and a clean fixture,
+//! the allowlist grammar is pinned (including the R00 "malformed
+//! directive" backstop), the JSON report shape is stable, and — the
+//! meta-test — the live tree under `rust/` is violation-free, which is
+//! exactly what the CI gate enforces.
+
+use rsc_lint::{lint_source, lint_tree, Report, Violation, LIB_DIRS, R05_ALLOWED, RULES};
+use std::path::{Path, PathBuf};
+
+fn rules_of(v: &[Violation]) -> Vec<&str> {
+    v.iter().map(|x| x.rule).collect()
+}
+
+// -----------------------------------------------------------------------
+// R01..R05 on fixtures
+// -----------------------------------------------------------------------
+
+#[test]
+fn r01_flags_partial_cmp_and_passes_total_cmp() {
+    let fl = lint_source(
+        "src/graph/score.rs",
+        include_str!("fixtures/r01_float_ordering.rs"),
+    );
+    assert_eq!(rules_of(&fl.violations), ["R01"]);
+    let v = &fl.violations[0];
+    assert_eq!(v.line, 5, "span should land on the partial_cmp call");
+    assert!(v.message.contains("total_cmp"), "{}", v.message);
+    assert!(v.snippet.contains("partial_cmp"), "{}", v.snippet);
+}
+
+#[test]
+fn r02_requires_safety_comment_inside_simd() {
+    let fl = lint_source("src/runtime/simd.rs", include_str!("fixtures/r02_simd.rs"));
+    assert_eq!(rules_of(&fl.violations), ["R02"]);
+    assert_eq!(fl.violations[0].line, 11, "only the unannotated block");
+    assert!(fl.violations[0].message.contains("SAFETY"));
+}
+
+#[test]
+fn r02_rejects_unsafe_outside_simd_even_with_safety_comment() {
+    let src = "pub fn f(a: &[f32]) -> f32 {\n    // SAFETY: not good enough here\n    \
+               unsafe { *a.get_unchecked(0) }\n}\n";
+    let fl = lint_source("src/graph/adj.rs", src);
+    assert_eq!(rules_of(&fl.violations), ["R02"]);
+    assert!(fl.violations[0].message.contains("outside runtime/simd.rs"));
+}
+
+#[test]
+fn r03_flags_panics_in_library_dirs_only() {
+    let src = include_str!("fixtures/r03_library.rs");
+    let fl = lint_source("src/train/fixture.rs", src);
+    assert_eq!(rules_of(&fl.violations), ["R03", "R03"]);
+    assert!(fl.violations[0].message.contains("unwrap"));
+    assert!(fl.violations[1].message.contains("panic!"));
+    assert_eq!(fl.suppressed, 1, "the directive-covered expect");
+
+    // the same source under a non-library path is clean
+    let outside = lint_source("src/util/fixture.rs", src);
+    assert!(outside.violations.is_empty(), "{:?}", outside.violations);
+    assert!(!LIB_DIRS.contains(&"src/util/"), "test premise");
+}
+
+#[test]
+fn r04_flags_allocations_inside_into_kernels_only() {
+    let src = include_str!("fixtures/r04_kernels.rs");
+    let fl = lint_source("src/runtime/native.rs", src);
+    assert_eq!(rules_of(&fl.violations), ["R04", "R04", "R04"]);
+    for v in &fl.violations {
+        assert!(v.message.contains("axpy_into"), "{}", v.message);
+    }
+    // the whole rule is scoped to the native kernel file
+    let elsewhere = lint_source("src/runtime/plan.rs", src);
+    assert!(elsewhere.violations.is_empty(), "{:?}", elsewhere.violations);
+}
+
+#[test]
+fn r05_flags_clock_reads_outside_the_sanctioned_files() {
+    let src = include_str!("fixtures/r05_clock.rs");
+    let fl = lint_source("src/graph/fixture.rs", src);
+    assert_eq!(rules_of(&fl.violations), ["R05", "R05"]);
+    assert!(fl.violations[0].message.contains("Instant"));
+    assert!(fl.violations[1].message.contains("SystemTime"));
+    for &rel in R05_ALLOWED {
+        let ok = lint_source(rel, src);
+        assert!(ok.violations.is_empty(), "{rel} should be exempt");
+    }
+}
+
+// -----------------------------------------------------------------------
+// Allowlist grammar
+// -----------------------------------------------------------------------
+
+#[test]
+fn trailing_directive_suppresses_its_own_line() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    \
+               x.unwrap() // rsc-lint: allow(R03) reason=\"fixture\"\n}\n";
+    let fl = lint_source("src/train/a.rs", src);
+    assert!(fl.violations.is_empty(), "{:?}", fl.violations);
+    assert_eq!(fl.suppressed, 1);
+}
+
+#[test]
+fn directive_covers_only_the_named_rules() {
+    let src = "pub fn f(x: Option<f32>, y: f32) -> bool {\n    \
+               // rsc-lint: allow(R03) reason=\"fixture\"\n    \
+               x.unwrap().partial_cmp(&y).is_some()\n}\n";
+    let fl = lint_source("src/train/a.rs", src);
+    assert_eq!(rules_of(&fl.violations), ["R01"], "R01 is not named, so it survives");
+    assert_eq!(fl.suppressed, 1);
+}
+
+#[test]
+fn multi_rule_directive_suppresses_all_named_rules() {
+    let src = "pub fn f(x: Option<f32>, y: f32) -> bool {\n    \
+               // rsc-lint: allow(R01, R03) reason=\"fixture\"\n    \
+               x.unwrap().partial_cmp(&y).is_some()\n}\n";
+    let fl = lint_source("src/train/a.rs", src);
+    assert!(fl.violations.is_empty(), "{:?}", fl.violations);
+    assert_eq!(fl.suppressed, 2);
+}
+
+#[test]
+fn own_line_directive_does_not_leak_past_the_next_code_line() {
+    let src = "pub fn f(a: Option<u32>, b: Option<u32>) -> u32 {\n    \
+               // rsc-lint: allow(R03) reason=\"fixture\"\n    \
+               let x = a.unwrap();\n    \
+               let y = b.unwrap();\n    x + y\n}\n";
+    let fl = lint_source("src/train/a.rs", src);
+    assert_eq!(rules_of(&fl.violations), ["R03"]);
+    assert_eq!(fl.violations[0].line, 4, "the second unwrap is not covered");
+}
+
+#[test]
+fn malformed_directives_are_r00_and_not_suppressible() {
+    // every way a directive can be malformed: missing reason, empty
+    // reason, missing colon, unknown shape, trailing junk
+    for bad in [
+        "// rsc-lint: allow(R03)",
+        "// rsc-lint: allow(R03) reason=\"\"",
+        "// rsc-lint allow(R03) reason=\"x\"",
+        "// rsc-lint: deny(R03) reason=\"x\"",
+        "// rsc-lint: allow(R03) reason=\"x\" extra",
+        "// rsc-lint: allow() reason=\"x\"",
+    ] {
+        let src = format!("{bad}\npub fn f() {{}}\n");
+        let fl = lint_source("src/util/a.rs", &src);
+        assert_eq!(rules_of(&fl.violations), ["R00"], "{bad}");
+        assert!(fl.violations[0].message.contains("malformed"), "{bad}");
+    }
+    // R00 cannot be allowlisted away: a directive naming R00 is itself
+    // well-formed, but a malformed one nearby still fires
+    let src = "// rsc-lint: allow(R00) reason=\"trying to hide\"\n\
+               // rsc-lint: oops\npub fn f() {}\n";
+    let fl = lint_source("src/util/a.rs", src);
+    assert_eq!(rules_of(&fl.violations), ["R00"]);
+}
+
+#[test]
+fn directives_inside_strings_are_ignored() {
+    let src = "pub fn f() -> &'static str {\n    \
+               \"// rsc-lint: this is data, not a directive\"\n}\n";
+    let fl = lint_source("src/util/a.rs", src);
+    assert!(fl.violations.is_empty(), "{:?}", fl.violations);
+}
+
+// -----------------------------------------------------------------------
+// R06: tree-level registry cross-check
+// -----------------------------------------------------------------------
+
+fn tree(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("rsclint_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for (rel, body) in files {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, body).unwrap();
+    }
+    root
+}
+
+const STATICS_RS: &str = "use std::sync::atomic::AtomicU64;\n\
+    pub static HITS: AtomicU64 = AtomicU64::new(0);\n\
+    pub static MISSES: AtomicU64 = AtomicU64::new(0);\n";
+
+#[test]
+fn r06_unregistered_global_is_flagged_and_registered_is_clean() {
+    let root = tree(
+        "r06_reg",
+        &[
+            ("src/util/counters.rs", "global!(foo::HITS, Counter, \"doc\");\n"),
+            ("src/foo.rs", STATICS_RS),
+        ],
+    );
+    let rep = lint_tree(&root).unwrap();
+    let r06: Vec<&Violation> = rep.violations.iter().filter(|v| v.rule == "R06").collect();
+    assert_eq!(r06.len(), 1, "{:?}", rep.violations);
+    assert!(r06[0].message.contains("MISSES"), "{}", r06[0].message);
+    assert_eq!(r06[0].file, "src/foo.rs");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn r06_stale_registry_entry_is_flagged_at_the_manifest() {
+    let root = tree(
+        "r06_stale",
+        &[
+            ("src/util/counters.rs", "global!(foo::GONE, Counter, \"doc\");\n"),
+            ("src/foo.rs", "pub fn f() {}\n"),
+        ],
+    );
+    let rep = lint_tree(&root).unwrap();
+    assert_eq!(rules_of(&rep.violations), ["R06"]);
+    assert_eq!(rep.violations[0].file, "src/util/counters.rs");
+    assert!(rep.violations[0].message.contains("GONE"));
+    assert!(rep.violations[0].message.contains("no longer exists"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn r06_missing_manifest_is_flagged() {
+    let root = tree("r06_missing", &[("src/foo.rs", STATICS_RS)]);
+    let rep = lint_tree(&root).unwrap();
+    assert_eq!(rules_of(&rep.violations), ["R06", "R06"]);
+    assert!(rep.violations[0].message.contains("manifest is missing"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn r06_directive_on_the_declaration_suppresses() {
+    let src = "use std::sync::atomic::AtomicU64;\n\
+        // rsc-lint: allow(R06) reason=\"fixture: test-local global\"\n\
+        pub static LOCAL: AtomicU64 = AtomicU64::new(0);\n";
+    let root = tree("r06_allow", &[("src/foo.rs", src)]);
+    let rep = lint_tree(&root).unwrap();
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    assert_eq!(rep.suppressed, 1);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn r06_thread_local_and_const_generics_are_not_globals() {
+    let src = "use std::sync::atomic::AtomicU64;\n\
+        thread_local! {\n    \
+            pub static TL: AtomicU64 = AtomicU64::new(0);\n\
+        }\n\
+        pub static PLAIN: u64 = 3;\n";
+    let root = tree("r06_tl", &[("src/foo.rs", src)]);
+    let rep = lint_tree(&root).unwrap();
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn empty_tree_is_a_usage_error_not_a_clean_pass() {
+    let root = std::env::temp_dir().join(format!("rsclint_{}_empty", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let err = lint_tree(&root).unwrap_err();
+    assert!(err.contains("no .rs files"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// -----------------------------------------------------------------------
+// JSON report shape
+// -----------------------------------------------------------------------
+
+#[test]
+fn json_report_has_the_stable_schema() {
+    let rep = Report {
+        root: "/tmp/x".to_string(),
+        files_scanned: 2,
+        violations: vec![Violation {
+            rule: "R01",
+            file: "src/a.rs".to_string(),
+            line: 3,
+            col: 7,
+            message: "uses \"quotes\" and\nnewline".to_string(),
+            snippet: "let x = a.partial_cmp(b);".to_string(),
+        }],
+        suppressed: 4,
+    };
+    let j = rep.to_json();
+    assert!(j.contains("\"schema\": \"rsc-lint/v1\""), "{j}");
+    assert!(j.contains("\"files_scanned\": 2"), "{j}");
+    assert!(j.contains("\"suppressed\": 4"), "{j}");
+    assert!(j.contains("\"rule\": \"R01\""), "{j}");
+    assert!(j.contains("\"line\": 3, \"col\": 7"), "{j}");
+    // escaping: embedded quotes and newlines must not break the document
+    assert!(j.contains("uses \\\"quotes\\\" and\\nnewline"), "{j}");
+    // every catalog rule is listed
+    for (id, _) in RULES {
+        assert!(j.contains(&format!("\"id\": \"{id}\"")), "{id} missing");
+    }
+}
+
+#[test]
+fn render_is_span_accurate() {
+    let v = Violation {
+        rule: "R05",
+        file: "src/graph/a.rs".to_string(),
+        line: 12,
+        col: 9,
+        message: "wall-clock read".to_string(),
+        snippet: "let t = Instant::now();".to_string(),
+    };
+    let r = v.render();
+    assert!(r.starts_with("R05 src/graph/a.rs:12:9 "), "{r}");
+    assert!(r.contains("| let t = Instant::now();"), "{r}");
+}
+
+// -----------------------------------------------------------------------
+// The meta-test: the tree this repo ships is violation-free
+// -----------------------------------------------------------------------
+
+#[test]
+fn live_tree_is_violation_free() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let rep = lint_tree(&root).expect("lint_tree on the live tree");
+    assert!(rep.files_scanned > 50, "suspiciously few files: {}", rep.files_scanned);
+    let rendered: Vec<String> = rep.violations.iter().map(|v| v.render()).collect();
+    assert!(
+        rep.violations.is_empty(),
+        "the live tree has {} lint violations:\n{}",
+        rep.violations.len(),
+        rendered.join("\n")
+    );
+}
