@@ -110,6 +110,10 @@ struct Pending {
     job: RefreshJob,
     /// In-flight handle; `None` under `--no-prefetch`.
     slot: Option<Arc<PrefetchSlot>>,
+    /// Engine-clock reading when the background build was spawned; the
+    /// stall watchdog measures build age against this.  `None` when no
+    /// build was spawned (synchronous mode) or the clock is disabled.
+    spawned_at_ms: Option<u64>,
 }
 
 /// Prefetch-pipeline counters (cumulative for one cache).
@@ -125,6 +129,10 @@ pub struct PrefetchStats {
     /// Prefetched builds that missed their window or were superseded
     /// before being consumed (their results are discarded).
     pub late: u64,
+    /// Background builds abandoned by the stall watchdog (overdue past
+    /// the stall SLA; the job is kept and the refresh lands on the
+    /// bit-identical synchronous path instead).
+    pub stalled: u64,
 }
 
 impl PrefetchStats {
@@ -143,6 +151,7 @@ impl PrefetchStats {
         self.hits += other.hits;
         self.sync_fallbacks += other.sync_fallbacks;
         self.late += other.late;
+        self.stalled += other.stalled;
     }
 }
 
@@ -208,14 +217,16 @@ impl SampleCache {
 
     /// Schedule the replacement build for `site` at `due_step`.  `slot`
     /// is the in-flight handle of an already-spawned background build
-    /// (`None` = synchronous mode).  An unconsumed prior schedule is
-    /// discarded (and its spawned build counted late).
+    /// (`None` = synchronous mode) and `spawned_at_ms` the engine-clock
+    /// reading at spawn time (for the stall watchdog).  An unconsumed
+    /// prior schedule is discarded (and its spawned build counted late).
     pub fn schedule(
         &mut self,
         site: usize,
         due_step: u64,
         job: RefreshJob,
         slot: Option<Arc<PrefetchSlot>>,
+        spawned_at_ms: Option<u64>,
     ) {
         if let Some(old) = self.pending[site].take() {
             if old.slot.is_some() {
@@ -223,7 +234,12 @@ impl SampleCache {
             }
         }
         self.pf.scheduled += 1;
-        self.pending[site] = Some(Pending { due_step, job, slot });
+        self.pending[site] = Some(Pending {
+            due_step,
+            job,
+            slot,
+            spawned_at_ms,
+        });
     }
 
     /// Pull an entry's due step forward (an allocation barrier at
@@ -287,6 +303,32 @@ impl SampleCache {
 
     pub fn peek(&self, site: usize) -> Option<&Selection> {
         self.entries[site].as_ref().map(|e| &e.selection)
+    }
+
+    /// Abandon background builds that have been in flight longer than
+    /// `timeout_ms` without completing (`now_ms` is the engine clock's
+    /// current reading).  Only the in-flight handle is dropped — the job
+    /// stays scheduled, so the refresh resolves on the synchronous
+    /// fallback with the same inputs (bit-identical by construction) and
+    /// a late-landing result has no slot left to land in.  Returns how
+    /// many builds were abandoned.
+    pub fn abandon_stalled(&mut self, now_ms: u64, timeout_ms: u64) -> u64 {
+        let mut abandoned = 0;
+        for p in self.pending.iter_mut().flatten() {
+            let overdue = match (&p.slot, p.spawned_at_ms) {
+                (Some(slot), Some(t0)) => {
+                    !slot.is_done() && now_ms.saturating_sub(t0) >= timeout_ms
+                }
+                _ => false,
+            };
+            if overdue {
+                p.slot = None;
+                p.spawned_at_ms = None;
+                self.pf.stalled += 1;
+                abandoned += 1;
+            }
+        }
+        abandoned
     }
 
     /// Due step of the in-flight background refresh for `site`, if any
@@ -360,7 +402,7 @@ mod tests {
         let mut c = SampleCache::new(1);
         assert!(!c.fresh(0, 0));
         assert!(!c.refresh_ready(0, 0));
-        c.schedule(0, 2, job(5), None);
+        c.schedule(0, 2, job(5), None, None);
         assert!(!c.refresh_ready(0, 1), "pending not due yet");
         assert!(c.refresh_ready(0, 2));
         let r = c.resolve(0, 2, job(5), |j| build(&a, j));
@@ -383,7 +425,7 @@ mod tests {
         let mut c = SampleCache::new(1);
         let slot = Arc::new(PrefetchSlot::new());
         slot.fill(build(&a, &job(4)));
-        c.schedule(0, 1, job(4), Some(slot));
+        c.schedule(0, 1, job(4), Some(slot), Some(0));
         let r = c.resolve(0, 1, job(4), |_| panic!("must not build inline"));
         assert!(r.from_prefetch);
         assert_eq!(r.built.selection.rows.len(), 4);
@@ -398,7 +440,7 @@ mod tests {
         let a = adj();
         let mut c = SampleCache::new(1);
         let slot = Arc::new(PrefetchSlot::new()); // never filled
-        c.schedule(0, 1, job(3), Some(slot));
+        c.schedule(0, 1, job(3), Some(slot), Some(0));
         let r = c.resolve(0, 1, job(7), |j| build(&a, j));
         assert!(!r.from_prefetch);
         // the scheduled job's inputs are used, not the fallback's
@@ -422,8 +464,8 @@ mod tests {
     #[test]
     fn overwriting_a_spawned_pending_counts_late() {
         let mut c = SampleCache::new(1);
-        c.schedule(0, 1, job(2), Some(Arc::new(PrefetchSlot::new())));
-        c.schedule(0, 2, job(3), None);
+        c.schedule(0, 1, job(2), Some(Arc::new(PrefetchSlot::new())), Some(0));
+        c.schedule(0, 2, job(3), None, None);
         let pf = c.prefetch_stats();
         assert_eq!(pf.scheduled, 2);
         assert_eq!(pf.late, 1);
@@ -433,7 +475,7 @@ mod tests {
     fn clamp_pulls_due_forward_only() {
         let a = adj();
         let mut c = SampleCache::new(1);
-        c.schedule(0, 0, job(2), None);
+        c.schedule(0, 0, job(2), None, None);
         let r = c.resolve(0, 0, job(2), |j| build(&a, j));
         c.install(0, 100, r.k, r.built.selection);
         c.clamp_due(0, 7);
@@ -447,15 +489,39 @@ mod tests {
     fn invalidate_all_clears_entries_and_pendings() {
         let a = adj();
         let mut c = SampleCache::new(2);
-        c.schedule(0, 0, job(2), None);
+        c.schedule(0, 0, job(2), None, None);
         let r = c.resolve(0, 0, job(2), |j| build(&a, j));
         c.install(0, 10, r.k, r.built.selection);
-        c.schedule(1, 5, job(2), Some(Arc::new(PrefetchSlot::new())));
+        c.schedule(1, 5, job(2), Some(Arc::new(PrefetchSlot::new())), Some(0));
         assert!(c.peek(0).is_some());
         c.invalidate_all();
         assert!(c.peek(0).is_none());
         assert!(!c.refresh_ready(1, 5), "pendings dropped too");
         assert_eq!(c.prefetch_stats().late, 1);
+    }
+
+    #[test]
+    fn abandon_stalled_drops_only_overdue_unfinished_slots() {
+        let a = adj();
+        let mut c = SampleCache::new(3);
+        // site 0: in flight since t=0, never completes -> stalled at t=100
+        c.schedule(0, 5, job(2), Some(Arc::new(PrefetchSlot::new())), Some(0));
+        // site 1: completed build -> must be left alone
+        let done = Arc::new(PrefetchSlot::new());
+        done.fill(build(&a, &job(3)));
+        c.schedule(1, 5, job(3), Some(done), Some(0));
+        // site 2: spawned recently -> not overdue yet
+        c.schedule(2, 5, job(4), Some(Arc::new(PrefetchSlot::new())), Some(90));
+        assert_eq!(c.abandon_stalled(100, 50), 1);
+        assert_eq!(c.prefetch_stats().stalled, 1);
+        // the abandoned site still resolves, synchronously, with the
+        // scheduled job's inputs — and a second sweep finds nothing
+        assert_eq!(c.abandon_stalled(100, 50), 0);
+        let r = c.resolve(0, 5, job(9), |j| build(&a, j));
+        assert!(!r.from_prefetch);
+        assert_eq!(r.k, 2);
+        let r1 = c.resolve(1, 5, job(9), |_| panic!("site 1 completed"));
+        assert!(r1.from_prefetch);
     }
 
     #[test]

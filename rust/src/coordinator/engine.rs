@@ -48,7 +48,7 @@ use crate::runtime::autotune;
 use crate::sampling::topk::{pair_scores_with, top_k_indices_with};
 use crate::sampling::Selection;
 use crate::util::parallel::{self, Parallelism};
-use crate::util::timer::Stopwatch;
+use crate::util::timer::{Clock, Stopwatch, WallClock};
 use crate::Result;
 use anyhow::ensure;
 use std::sync::Arc;
@@ -105,6 +105,13 @@ pub struct RscConfig {
     /// bit-identical, so runs are identical either way; only throughput
     /// moves (DESIGN.md §Autotuned kernel selection).
     pub autotune: bool,
+    /// Stall SLA for background refresh builds, in milliseconds: a build
+    /// in flight longer than this without completing is abandoned by the
+    /// stall watchdog and the refresh lands on the bit-identical
+    /// synchronous path instead (`0` disables the watchdog).  A
+    /// late-landing result fills a slot nothing references anymore and
+    /// is dropped with it.
+    pub stall_ms: u64,
 }
 
 impl Default for RscConfig {
@@ -120,6 +127,7 @@ impl Default for RscConfig {
             plan_cache: true,
             prefetch: true,
             autotune: true,
+            stall_ms: 2000,
         }
     }
 }
@@ -257,6 +265,10 @@ pub struct RscEngine {
     /// cache rebuilds (captured from the process default at construction;
     /// see [`RscEngine::with_parallelism`]).
     parallelism: Parallelism,
+    /// Clock the stall watchdog measures background-build age against
+    /// (wall time in production, scripted in tests — rule R05 keeps the
+    /// real reads inside `util/timer.rs`).
+    clock: Box<dyn Clock + Send>,
     // ---- diagnostics ----
     pub overlap: OverlapTracker,
     /// (step, k per site) after every allocator run (Figure 7).
@@ -309,6 +321,7 @@ impl RscEngine {
             last_alloc: None,
             forced_exact_until: 0,
             parallelism: parallel::global(),
+            clock: Box::new(WallClock::new()),
             overlap: OverlapTracker::new(sites, 10),
             alloc_history: Vec::new(),
             picked_degrees: Vec::new(),
@@ -333,6 +346,25 @@ impl RscEngine {
 
     pub fn parallelism(&self) -> Parallelism {
         self.parallelism
+    }
+
+    /// Replace the stall watchdog's clock (tests script it with a
+    /// [`crate::util::timer::FakeClock`]; production keeps the default
+    /// [`WallClock`]).
+    pub fn with_clock(mut self, clock: Box<dyn Clock + Send>) -> RscEngine {
+        self.clock = clock;
+        self
+    }
+
+    /// Toggle background prefetching at runtime — the health ladder's
+    /// degradation lever.  Turning prefetch off moves every subsequent
+    /// refresh build onto the synchronous fallback, which is
+    /// bit-identical by the prefetch parity contract; builds already in
+    /// flight are consumed or discarded exactly as under `--no-prefetch`
+    /// racing.  Turning it back on resumes pipelined builds from the
+    /// next schedule point.
+    pub fn set_prefetch(&mut self, on: bool) {
+        self.cfg.prefetch = on;
     }
 
     /// Is `step` in the final exact phase (switching mechanism)?
@@ -462,9 +494,12 @@ impl RscEngine {
     }
 
     /// Register `site`'s replacement build for `due` and, with prefetch
-    /// on, start it on a background worker immediately.
+    /// on, start it on a supervised background worker immediately (one
+    /// respawn after a panic; a build that exhausts the budget simply
+    /// never fills its slot and the refresh falls back to the
+    /// synchronous path).
     fn schedule_one(&mut self, site: usize, due: u64, job: RefreshJob) {
-        let slot = if self.cfg.prefetch {
+        let (slot, spawned_at) = if self.cfg.prefetch {
             let slot = Arc::new(PrefetchSlot::new());
             let out = Arc::clone(&slot);
             let col = Arc::clone(&self.col_norms);
@@ -472,15 +507,17 @@ impl RscEngine {
             let caps = Arc::clone(&self.caps);
             let bc = self.build_cfg(site);
             let job = job.clone();
-            parallel::spawn_background(move || {
+            parallel::spawn_background_retry(1, move || {
                 crate::util::fault::maybe_panic("refresh_panic", due);
+                crate::util::fault::maybe_stall("refresh_stall");
                 out.fill(execute_refresh(&col, &mat, &caps, bc, &job));
             });
-            Some(slot)
+            let at = (self.cfg.stall_ms > 0).then(|| self.clock.elapsed_ms());
+            (Some(slot), at)
         } else {
-            None
+            (None, None)
         };
-        self.cache.schedule(site, due, job, slot);
+        self.cache.schedule(site, due, job, slot, spawned_at);
     }
 
     /// After the allocator ran at `step`: decide every site's next
@@ -580,6 +617,15 @@ impl RscEngine {
 
     /// Decide the plan for backward-SpMM `site` at `step`.
     pub fn plan<'a>(&'a mut self, site: usize, step: u64, exact: &'a Selection) -> Plan<'a> {
+        // One stall sweep per step (site 0 is planned exactly once per
+        // backward pass): abandon background builds past the SLA so an
+        // overdue worker can neither block a refresh nor land a result
+        // after its window — the synchronous fallback path serves the
+        // same job bit-identically.
+        if site == 0 && self.cfg.stall_ms > 0 {
+            let now = self.clock.elapsed_ms();
+            self.cache.abandon_stalled(now, self.cfg.stall_ms);
+        }
         if self.in_exact_phase(step) || self.forced_exact(step) || !self.ready() {
             if site == 0 {
                 self.exact_steps += 1;
@@ -864,6 +910,37 @@ mod tests {
         assert!(pf_on.scheduled > 0);
         assert_eq!(pf_off.hits, 0, "--no-prefetch must never report prefetch hits");
         assert!(pf_off.sync_fallbacks > 0);
+    }
+
+    #[test]
+    fn runtime_prefetch_toggle_keeps_selections_identical() {
+        // the health ladder flips prefetch off on demotion and back on
+        // after re-promotion, mid-run; the sampled selections must not
+        // move relative to a run that never toggled
+        let mk = |toggle: bool| {
+            let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+            let (mut e, _m, _caps, exact) = setup(cfg, 1000);
+            e.observe_norms(0, vec![0.5; 40]);
+            e.observe_norms(1, vec![2.0; 40]);
+            let mut trace: Vec<(bool, Vec<u32>, usize, usize)> = Vec::new();
+            for step in 1..40 {
+                if toggle {
+                    e.set_prefetch(step % 3 == 0);
+                }
+                for site in (0..2).rev() {
+                    if e.norms_wanted(step) {
+                        let norms: Vec<f32> =
+                            (0..40).map(|i| ((i * 7 + step as usize) % 13) as f32).collect();
+                        e.observe_norms(site, norms);
+                    }
+                    let p = e.plan(site, step, &exact);
+                    let s = p.selection();
+                    trace.push((p.is_approx(), s.rows.clone(), s.nnz, s.cap));
+                }
+            }
+            trace
+        };
+        assert_eq!(mk(true), mk(false), "prefetch toggling changed the selections");
     }
 
     #[test]

@@ -97,9 +97,16 @@ impl Csr {
     /// [`Csr::try_from_triples`] with an explicit parallelism config.
     pub fn try_from_triples_with(
         n: usize,
-        triples: Vec<(u32, u32, f32)>,
+        mut triples: Vec<(u32, u32, f32)>,
         par: Parallelism,
     ) -> crate::Result<Csr> {
+        // `corrupt_triple` fault point (util/fault.rs): poison one edge
+        // weight at ingestion — validation below must reject it cleanly
+        if crate::util::fault::fires_any("corrupt_triple").is_some() {
+            if let Some(t) = triples.first_mut() {
+                t.2 = f32::NAN;
+            }
+        }
         for (i, &(r, c, w)) in triples.iter().enumerate() {
             anyhow::ensure!(
                 (r as usize) < n && (c as usize) < n,

@@ -5,6 +5,7 @@
 //!   profile   op-level timing breakdown (Figure 1 style)
 //!   inspect   list a dataset's artifact catalog
 //!   datagen   generate + describe a synthetic dataset
+//!   soak      seeded chaos episodes + invariant report (fault-inject builds)
 //!
 //! Shared flags: `--threads N` caps the native runtime's worker pool
 //! (0 = auto-detect, honouring cgroup CPU quotas; results are identical
@@ -29,9 +30,20 @@
 //! restarts the countdown), and `--resume PATH` continues a run
 //! bit-identically from one (full-batch models only).
 //! `--no-watchdog` disables the divergence watchdog's exact-path retry
-//! of steps with non-finite loss/gradients.  `--faults SPEC` arms
-//! deterministic fault points (builds with `--features fault-inject`
-//! only), e.g. `--faults refresh_panic@3,nan_site@0`.
+//! of steps with non-finite loss/gradients.  `--stall-ms N` sets the
+//! background-refresh stall SLA (0 disables the stall watchdog) and
+//! `--promote-after K` the clean-step streak the health ladder needs to
+//! re-promote one rung.  `--faults SPEC` arms deterministic fault
+//! points (builds with `--features fault-inject` only); schedules
+//! compose one-shot (`nan_site@0`), recurring (`refresh_panic@every:3`,
+//! `checkpoint_save_fail@at:2`) and probabilistic (`nan_site@p:0.05`)
+//! triggers, e.g. `--faults refresh_stall@every:4,nan_site@p:0.02`.
+//! The same grammar is read from `RSC_FAULTS`, validated at startup.
+//!
+//! `rsc soak --episodes N --seed S [--report PATH]` runs the seeded
+//! chaos soak (DESIGN.md §Chaos soak & health ladder): a fault-free
+//! baseline plus N scheduled-fault episodes, per-episode invariants,
+//! and a byte-deterministic `rsc-soak/v1` JSON report.
 //!
 //! Examples:
 //!   rsc train --dataset reddit-sim --model gcn --epochs 200 --rsc --budget 0.1
@@ -45,7 +57,7 @@ use rsc::data::load_or_generate;
 use rsc::graph::ReorderKind;
 use rsc::model::ops::ModelKind;
 use rsc::runtime::{simd, Backend, NativeBackend, XlaBackend};
-use rsc::train::{train, TrainConfig};
+use rsc::train::{run_soak, train, SoakConfig, TrainConfig};
 use rsc::util::cli::Args;
 use rsc::util::fault;
 use rsc::util::parallel::{self, Parallelism};
@@ -73,18 +85,27 @@ fn main() {
         std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "3");
     }
     let args = Args::parse_env_with_bools(BOOL_FLAGS);
+    // validate RSC_FAULTS before any subcommand runs: a typo in the env
+    // schedule is a clear startup error, not a panic mid-training
+    if let Err(e) = fault::init_from_env() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "train" => run(cmd_train(&args)),
         "profile" => run(cmd_profile(&args)),
         "inspect" => run(cmd_inspect(&args)),
         "datagen" => run(cmd_datagen(&args)),
+        "soak" => run(cmd_soak(&args)),
         "bench" => {
             eprintln!("use `cargo bench` — one target per paper table/figure");
             0
         }
         _ => {
-            eprintln!("usage: rsc <train|profile|inspect|datagen> [--flags] (see README.md)");
+            eprintln!(
+                "usage: rsc <train|profile|inspect|datagen|soak> [--flags] (see README.md)"
+            );
             2
         }
     };
@@ -164,6 +185,9 @@ fn rsc_config(args: &Args) -> Result<RscConfig> {
         // Ablation: keep the static select_kernel heuristic instead of
         // racing the variants (bit-identical; only timing can change).
         autotune: !args.bool_or("no-autotune", false)?,
+        // Stall SLA for background refresh builds (0 = no stall watchdog;
+        // abandoned builds land on the bit-identical synchronous path).
+        stall_ms: args.u64_or("stall-ms", 2000)?,
     };
     // a bad flag combination (e.g. --alloc-every 0) is a CLI error, not
     // a panic deep inside the engine
@@ -206,6 +230,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }),
         resume: args.str_opt("resume").map(PathBuf::from),
         watchdog: !args.bool_or("no-watchdog", false)?,
+        health_promote_after: args.usize_or("promote-after", 5)?,
     };
     args.finish()?;
 
@@ -263,16 +288,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     println!(
         "fault tolerance: watchdog trips {} / recoveries {} / escalations {}  \
-         worker panics {}  checkpoints written {}{}",
+         worker panics {} (respawns {})  refresh stalls {}  checkpoints written {}{}",
         res.watchdog_trips,
         res.watchdog_recoveries,
         res.watchdog_escalations,
         res.worker_panics,
+        res.worker_respawns,
+        res.prefetch.stalled,
         res.checkpoints_written,
         match res.resumed_at {
             Some(e) => format!("  (resumed at epoch {e})"),
             None => String::new(),
         }
+    );
+    println!(
+        "health ladder: final {}  demotions {}  re-promotions {}",
+        res.health_final, res.health_demotions, res.health_repromotions
     );
     // stable, greppable line the CI kill-and-resume job asserts on
     println!("weights fingerprint: {:016x}", res.weights_fingerprint);
@@ -283,6 +314,51 @@ fn cmd_train(args: &Args) -> Result<()> {
             res.tb.total_ms(&label),
             res.tb.count(&label)
         );
+    }
+    Ok(())
+}
+
+/// `rsc soak --episodes N --seed S [--dataset D --model M --report PATH]`:
+/// the seeded chaos soak.  Exit code 1 (with every violation listed) when
+/// any per-episode invariant is breached.
+fn cmd_soak(args: &Args) -> Result<()> {
+    apply_threads(args)?;
+    let mut cfg = SoakConfig::new(args.usize_or("episodes", 6)?, args.u64_or("seed", 1)?);
+    cfg.dataset = args.str_or("dataset", "tiny");
+    cfg.model = ModelKind::parse(&args.str_or("model", "gcn"))
+        .ok_or_else(|| anyhow!("bad --model ({})", ModelKind::usage()))?;
+    let report_path = args.str_opt("report").map(PathBuf::from);
+    args.finish()?;
+
+    let report = run_soak(&cfg)?;
+    for ep in &report.episodes {
+        println!(
+            "episode {:2}  {:<32} outcome {:<10} fingerprint {}",
+            ep.index,
+            if ep.schedule.is_empty() { "(baseline)" } else { &ep.schedule },
+            ep.outcome,
+            match ep.fingerprint {
+                Some(fp) => format!("{fp:016x}"),
+                None => "-".to_string(),
+            }
+        );
+    }
+    println!(
+        "soak: {} episodes (+1 baseline), {} violations, ingestion probe {}",
+        report.episodes.len().saturating_sub(1),
+        report.violations.len(),
+        if report.ingestion_probe_ok { "ok" } else { "FAILED" }
+    );
+    if let Some(path) = &report_path {
+        std::fs::write(path, report.to_json())
+            .map_err(|e| anyhow!("write soak report {}: {e}", path.display()))?;
+        println!("report written to {}", path.display());
+    }
+    if !report.violations.is_empty() {
+        for v in &report.violations {
+            eprintln!("violation: {v}");
+        }
+        bail!("{} soak invariant violation(s)", report.violations.len());
     }
     Ok(())
 }

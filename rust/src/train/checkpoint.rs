@@ -1,28 +1,30 @@
 //! Deterministic checkpoint/resume (DESIGN.md §Fault tolerance).
 //!
 //! A checkpoint is a versioned, checksummed snapshot of everything a
-//! full-batch training run needs to continue *bit-identically*: the
-//! parameters with both Adam moments and the step counter, the trainer's
-//! RNG stream, the engine's budgets / norm snapshots / cache schedule
-//! ([`EngineState`]), and the accumulated curves.  Restore validates a
-//! header — magic, format version, model kind, graph fingerprint, seed,
-//! epoch budget — before touching any live state, so resuming under the
-//! wrong model or dataset is a clear error instead of a silent
-//! divergence, and a truncated or bit-flipped file fails its trailing
-//! FNV-1a checksum rather than deserializing garbage.
+//! training run needs to continue *bit-identically*: the parameters with
+//! both Adam moments and the step counter, the trainer's RNG stream, one
+//! [`EngineState`] per engine (full-batch runs carry one; GraphSAINT
+//! carries one per subgraph plus a [`SaintState`] batch cursor), and the
+//! accumulated curves.  Restore validates a header — magic, format
+//! version, model kind, graph fingerprint, seed, epoch budget — before
+//! touching any live state, so resuming under the wrong model or dataset
+//! is a clear error instead of a silent divergence, and a truncated or
+//! bit-flipped file fails its trailing FNV-1a checksum rather than
+//! deserializing garbage.
 //!
 //! # Wire format (all little-endian)
 //!
 //! ```text
 //! magic    b"RSCCKPT1"
-//! u32      format version (1)
+//! u32      format version (2)
 //! str      model kind name
 //! u64      graph fingerprint (FNV over the normalized matrix)
 //! u64      seed              u64 epochs (total)     u64 next_epoch
 //! rng      4×u64 state + spare tag/f64 (Box–Muller pair cache)
 //! u64      adam step
 //! params   count, then per param: name, rows, cols, w/m/v f32 runs
-//! engine   EngineState (ks, norms, schedule — see coordinator/engine.rs)
+//! engines  u32 count, then per engine: EngineState (ks, norms, schedule)
+//! saint    u8 tag; if 1: u64 batch cursor, u32 count, per-subgraph uses
 //! curves   loss f32 run, (epoch, val) pairs, best_val, test_at_best
 //! u64      FNV-1a checksum over every preceding byte
 //! ```
@@ -45,7 +47,7 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"RSCCKPT1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// One parameter's snapshot: identity plus weights and Adam moments.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,6 +58,17 @@ pub struct ParamState {
     pub w: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
+}
+
+/// GraphSAINT-specific resume state: which subgraph the round-robin
+/// cursor points at and how many batches each subgraph has served (the
+/// retirement schedule).  The subgraphs themselves are not serialized —
+/// the sampler is seed-deterministic, so a resumed run rebuilds
+/// bit-identical subgraphs from the run seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SaintState {
+    pub batch_cursor: u64,
+    pub uses: Vec<u64>,
 }
 
 /// A full training snapshot; see the module docs for the wire format.
@@ -73,7 +86,11 @@ pub struct Checkpoint {
     pub rng_spare: Option<f64>,
     pub adam_step: u64,
     pub params: Vec<ParamState>,
-    pub engine: EngineState,
+    /// One engine per training graph: full-batch runs store exactly one,
+    /// GraphSAINT one per subgraph (in subgraph order).
+    pub engines: Vec<EngineState>,
+    /// Present iff the run is GraphSAINT.
+    pub saint: Option<SaintState>,
     pub loss_curve: Vec<f32>,
     pub val_curve: Vec<(u64, f64)>,
     pub best_val: f64,
@@ -225,6 +242,85 @@ impl<'a> Reader<'a> {
     }
 }
 
+fn write_engine(w: &mut Writer, e: &EngineState) {
+    w.u32(e.ks.len() as u32);
+    for &k in &e.ks {
+        w.u64(k as u64);
+    }
+    for n in &e.grad_norms {
+        match n {
+            Some(v) => {
+                w.u8(1);
+                w.f32s(v);
+            }
+            None => w.u8(0),
+        }
+    }
+    w.opt_u64(e.last_alloc);
+    w.u64(e.forced_exact_until);
+    w.u64(e.approx_steps);
+    w.u64(e.exact_steps);
+    for entry in &e.entries {
+        match entry {
+            Some((due, k, rows)) => {
+                w.u8(1);
+                w.u64(*due);
+                w.u64(*k as u64);
+                w.u32s(rows);
+            }
+            None => w.u8(0),
+        }
+    }
+    for p in &e.pending_due {
+        w.opt_u64(*p);
+    }
+}
+
+fn read_engine(r: &mut Reader) -> Result<EngineState> {
+    let sites = r.u32()? as usize;
+    let mut ks = Vec::with_capacity(sites.min(1024));
+    for _ in 0..sites {
+        ks.push(r.u64()? as usize);
+    }
+    let mut grad_norms = Vec::with_capacity(sites.min(1024));
+    for _ in 0..sites {
+        grad_norms.push(match r.u8()? {
+            0 => None,
+            _ => Some(r.f32s()?),
+        });
+    }
+    let last_alloc = r.opt_u64()?;
+    let forced_exact_until = r.u64()?;
+    let approx_steps = r.u64()?;
+    let exact_steps = r.u64()?;
+    let mut entries = Vec::with_capacity(sites.min(1024));
+    for _ in 0..sites {
+        entries.push(match r.u8()? {
+            0 => None,
+            _ => {
+                let due = r.u64()?;
+                let k = r.u64()? as usize;
+                let rows = r.u32s()?;
+                Some((due, k, rows))
+            }
+        });
+    }
+    let mut pending_due = Vec::with_capacity(sites.min(1024));
+    for _ in 0..sites {
+        pending_due.push(r.opt_u64()?);
+    }
+    Ok(EngineState {
+        ks,
+        grad_norms,
+        last_alloc,
+        forced_exact_until,
+        approx_steps,
+        exact_steps,
+        entries,
+        pending_due,
+    })
+}
+
 impl Checkpoint {
     /// Serialize (wire format in the module docs), checksum included.
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -256,37 +352,20 @@ impl Checkpoint {
             w.f32s(&p.m);
             w.f32s(&p.v);
         }
-        let e = &self.engine;
-        w.u32(e.ks.len() as u32);
-        for &k in &e.ks {
-            w.u64(k as u64);
+        w.u32(self.engines.len() as u32);
+        for e in &self.engines {
+            write_engine(&mut w, e);
         }
-        for n in &e.grad_norms {
-            match n {
-                Some(v) => {
-                    w.u8(1);
-                    w.f32s(v);
+        match &self.saint {
+            Some(s) => {
+                w.u8(1);
+                w.u64(s.batch_cursor);
+                w.u32(s.uses.len() as u32);
+                for &u in &s.uses {
+                    w.u64(u);
                 }
-                None => w.u8(0),
             }
-        }
-        w.opt_u64(e.last_alloc);
-        w.u64(e.forced_exact_until);
-        w.u64(e.approx_steps);
-        w.u64(e.exact_steps);
-        for entry in &e.entries {
-            match entry {
-                Some((due, k, rows)) => {
-                    w.u8(1);
-                    w.u64(*due);
-                    w.u64(*k as u64);
-                    w.u32s(rows);
-                }
-                None => w.u8(0),
-            }
-        }
-        for p in &e.pending_due {
-            w.opt_u64(*p);
+            None => w.u8(0),
         }
         w.f32s(&self.loss_curve);
         w.u32(self.val_curve.len() as u32);
@@ -354,38 +433,23 @@ impl Checkpoint {
             let v = r.f32s()?;
             params.push(ParamState { name, rows, cols, w, m, v });
         }
-        let sites = r.u32()? as usize;
-        let mut ks = Vec::with_capacity(sites.min(1024));
-        for _ in 0..sites {
-            ks.push(r.u64()? as usize);
+        let n_engines = r.u32()? as usize;
+        let mut engines = Vec::with_capacity(n_engines.min(1024));
+        for _ in 0..n_engines {
+            engines.push(read_engine(&mut r)?);
         }
-        let mut grad_norms = Vec::with_capacity(sites.min(1024));
-        for _ in 0..sites {
-            grad_norms.push(match r.u8()? {
-                0 => None,
-                _ => Some(r.f32s()?),
-            });
-        }
-        let last_alloc = r.opt_u64()?;
-        let forced_exact_until = r.u64()?;
-        let approx_steps = r.u64()?;
-        let exact_steps = r.u64()?;
-        let mut entries = Vec::with_capacity(sites.min(1024));
-        for _ in 0..sites {
-            entries.push(match r.u8()? {
-                0 => None,
-                _ => {
-                    let due = r.u64()?;
-                    let k = r.u64()? as usize;
-                    let rows = r.u32s()?;
-                    Some((due, k, rows))
+        let saint = match r.u8()? {
+            0 => None,
+            _ => {
+                let batch_cursor = r.u64()?;
+                let n = r.u32()? as usize;
+                let mut uses = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    uses.push(r.u64()?);
                 }
-            });
-        }
-        let mut pending_due = Vec::with_capacity(sites.min(1024));
-        for _ in 0..sites {
-            pending_due.push(r.opt_u64()?);
-        }
+                Some(SaintState { batch_cursor, uses })
+            }
+        };
         let loss_curve = r.f32s()?;
         let n_val = r.u32()? as usize;
         let mut val_curve = Vec::with_capacity(n_val.min(1024));
@@ -411,16 +475,8 @@ impl Checkpoint {
             rng_spare,
             adam_step,
             params,
-            engine: EngineState {
-                ks,
-                grad_norms,
-                last_alloc,
-                forced_exact_until,
-                approx_steps,
-                exact_steps,
-                entries,
-                pending_due,
-            },
+            engines,
+            saint,
             loss_curve,
             val_curve,
             best_val,
@@ -430,6 +486,9 @@ impl Checkpoint {
 
     /// Snapshot the live training state at an epoch boundary
     /// (`next_epoch` = the first epoch a resumed run will execute).
+    /// Full-batch runs pass a single engine (`std::slice::from_ref`) and
+    /// `saint: None`; GraphSAINT passes all per-subgraph engines plus its
+    /// cursor state.
     #[allow(clippy::too_many_arguments)]
     pub fn capture(
         model_kind: ModelKind,
@@ -439,7 +498,8 @@ impl Checkpoint {
         next_epoch: u64,
         model: &GraphModel,
         rng: &Rng,
-        engine: &RscEngine,
+        engines: &[RscEngine],
+        saint: Option<SaintState>,
         loss_curve: &[f32],
         val_curve: &[(usize, f64)],
         best_val: f64,
@@ -471,7 +531,8 @@ impl Checkpoint {
                     }
                 })
                 .collect(),
-            engine: engine.export_state(),
+            engines: engines.iter().map(|e| e.export_state()).collect(),
+            saint,
             loss_curve: loss_curve.to_vec(),
             val_curve: val_curve.iter().map(|&(e, v)| (e as u64, v)).collect(),
             best_val,
@@ -492,7 +553,7 @@ impl Checkpoint {
         epochs: u64,
         model: &mut GraphModel,
         rng: &mut Rng,
-        engine: &mut RscEngine,
+        engines: &mut [RscEngine],
     ) -> Result<()> {
         ensure!(
             self.model == model_kind,
@@ -547,7 +608,25 @@ impl Checkpoint {
         }
         model.params.step = self.adam_step;
         *rng = Rng::from_state(self.rng_s, self.rng_spare);
-        engine.restore_state(&self.engine)?;
+        ensure!(
+            self.engines.len() == engines.len(),
+            "checkpoint has {} engine states, this run has {} engines \
+             (different --saint-subgraphs?)",
+            self.engines.len(),
+            engines.len()
+        );
+        if let Some(s) = &self.saint {
+            ensure!(
+                s.uses.len() == engines.len(),
+                "checkpoint GraphSAINT uses vector covers {} subgraphs, \
+                 this run has {}",
+                s.uses.len(),
+                engines.len()
+            );
+        }
+        for (engine, st) in engines.iter_mut().zip(&self.engines) {
+            engine.restore_state(st)?;
+        }
         Ok(())
     }
 }
@@ -564,6 +643,12 @@ pub fn tmp_path(path: &Path) -> PathBuf {
 /// directory.  A crash at any point leaves either the previous
 /// checkpoint or the new one — never a half-written file at `path`.
 pub fn save(ck: &Checkpoint, path: &Path) -> Result<()> {
+    if fault::fires_any("checkpoint_save_fail").is_some() {
+        // simulate a full save failure (disk full, permissions): nothing
+        // is written, the previous checkpoint at `path` stays intact, and
+        // the caller's health ladder decides whether to tolerate it
+        bail!("fault injected: checkpoint save failed (nothing written)");
+    }
     let bytes = ck.to_bytes();
     let tmp = tmp_path(path);
     {

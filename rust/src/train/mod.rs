@@ -2,10 +2,12 @@
 
 pub mod checkpoint;
 pub mod metrics;
+pub mod soak;
 pub mod trainer;
 
-pub use checkpoint::{graph_fingerprint, Checkpoint, ParamState};
+pub use checkpoint::{graph_fingerprint, Checkpoint, ParamState, SaintState};
 pub use metrics::{accuracy, f1_micro, mean_auc, MetricKind};
+pub use soak::{run_soak, SoakConfig, SoakReport};
 pub use trainer::{
     full_graph_bufs, saint_eval_full_batch, train, train_with_clock, weights_fingerprint,
     TrainConfig, TrainResult,

@@ -1,0 +1,382 @@
+//! Deterministic chaos soak (`rsc soak`; DESIGN.md §Chaos soak & health
+//! ladder): N seeded episodes, each a short training run under a
+//! randomized-but-seeded fault schedule, asserting per-episode
+//! invariants and emitting a versioned `rsc-soak/v1` JSON report.
+//!
+//! Episode 0 is always the fault-free baseline; episodes 1..=N rotate
+//! through the schedule catalog with parameters drawn from the soak
+//! seed, so the same `--seed` replays the same schedules, outcomes and
+//! fingerprints — the report is byte-identical across reruns and thread
+//! counts.  The report deliberately carries only schedule-deterministic
+//! fields (schedule, outcome, fingerprint, invariant verdicts); racy
+//! observability counters (worker panics, stall tallies) are printed to
+//! stdout but kept out of the report bytes.
+//!
+//! Per-episode invariants:
+//! - a recoverable episode completes with finite loss/metric state,
+//! - its final checkpoint on disk loads cleanly,
+//! - a *fingerprint-preserving* schedule (every injected fault sits on a
+//!   bit-identity-preserving recovery path: panicked, stalled or slowed
+//!   refresh workers, failed checkpoint saves) ends with the exact
+//!   fault-free weights fingerprint,
+//! - an episode designed to exhaust the ladder (every checkpoint save
+//!   failing) halts instead of limping on.
+
+use crate::coordinator::RscConfig;
+use crate::data::load_or_generate;
+use crate::graph::{Csr, ReorderKind};
+use crate::model::ops::ModelKind;
+use crate::runtime::NativeBackend;
+use crate::train::checkpoint;
+use crate::train::trainer::{train, TrainConfig};
+use crate::util::fault;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::path::PathBuf;
+
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// Chaos episodes to run on top of the fault-free baseline.
+    pub episodes: usize,
+    /// Soak seed: drives the schedule catalog and the training seed.
+    pub seed: u64,
+    pub dataset: String,
+    pub model: ModelKind,
+}
+
+impl SoakConfig {
+    pub fn new(episodes: usize, seed: u64) -> SoakConfig {
+        SoakConfig {
+            episodes,
+            seed,
+            dataset: "tiny".to_string(),
+            model: ModelKind::Gcn,
+        }
+    }
+}
+
+/// One episode's schedule-deterministic outcome.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub index: usize,
+    /// The armed `RSC_FAULTS`-grammar schedule ("" for the baseline).
+    pub schedule: String,
+    /// Every fault sits on a bit-identity-preserving recovery path, so
+    /// the fingerprint must equal the baseline's.
+    pub preserving: bool,
+    /// This schedule is designed to halt the run (save-failure streak).
+    pub expect_halt: bool,
+    /// "completed" | "halted" | "violation".
+    pub outcome: &'static str,
+    /// Final weights fingerprint (completed episodes only).
+    pub fingerprint: Option<u64>,
+    /// Loss curve and best-val stayed finite (completed episodes only).
+    pub finite: Option<bool>,
+    /// The episode's last checkpoint on disk loads cleanly.
+    pub loadable: Option<bool>,
+    /// Fingerprint equals the baseline's (preserving episodes only).
+    pub matches_baseline: Option<bool>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    pub episodes: Vec<Episode>,
+    /// Human-readable invariant breaches; empty on a clean soak.
+    pub violations: Vec<String>,
+    /// The `corrupt_triple` ingestion probe rejected the poisoned
+    /// triple cleanly.
+    pub ingestion_probe_ok: bool,
+    pub seed: u64,
+}
+
+impl SoakReport {
+    /// Serialize as the versioned `rsc-soak/v1` report.  Keys are
+    /// BTreeMap-sorted and every field is schedule-deterministic, so
+    /// the same seed yields byte-identical bytes at any thread count.
+    pub fn to_json(&self) -> String {
+        let eps: Vec<Json> = self
+            .episodes
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("index", e.index.into()),
+                    ("schedule", e.schedule.as_str().into()),
+                    ("preserving", e.preserving.into()),
+                    ("expect_halt", e.expect_halt.into()),
+                    ("outcome", e.outcome.into()),
+                    (
+                        "fingerprint",
+                        match e.fingerprint {
+                            Some(fp) => Json::Str(format!("{fp:016x}")),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("finite", opt_bool(e.finite)),
+                    ("loadable", opt_bool(e.loadable)),
+                    ("matches_baseline", opt_bool(e.matches_baseline)),
+                ])
+            })
+            .collect();
+        let vs: Vec<Json> = self.violations.iter().map(|v| v.as_str().into()).collect();
+        obj(vec![
+            ("format", "rsc-soak/v1".into()),
+            ("seed", Json::Num(self.seed as f64)),
+            ("episodes", Json::Arr(eps)),
+            ("violations", Json::Arr(vs)),
+            ("ingestion_probe_ok", self.ingestion_probe_ok.into()),
+        ])
+        .to_string()
+    }
+}
+
+fn opt_bool(b: Option<bool>) -> Json {
+    match b {
+        Some(v) => Json::Bool(v),
+        None => Json::Null,
+    }
+}
+
+/// One catalog row: schedule text plus the invariants it is held to.
+struct Scheduled {
+    schedule: String,
+    preserving: bool,
+    expect_halt: bool,
+    checkpoint_every: usize,
+}
+
+/// The seeded schedule catalog.  Parameters (periods, probabilities)
+/// come from the soak rng, so different seeds soak different cadences
+/// while one seed always replays the same schedule sequence.
+fn schedule_for(episode: usize, rng: &mut Rng) -> Scheduled {
+    match (episode - 1) % 6 {
+        0 => Scheduled {
+            // panicked refresh builds: respawned once, then the sync
+            // fallback — bit-identical either way
+            schedule: format!("refresh_panic@every:{}", rng.range(2, 6)),
+            preserving: true,
+            expect_halt: false,
+            checkpoint_every: 4,
+        },
+        1 => Scheduled {
+            // stalled refresh builds: abandoned by the stall watchdog,
+            // refresh lands on the synchronous path
+            schedule: format!("refresh_stall@every:{}", rng.range(2, 5)),
+            preserving: true,
+            expect_halt: false,
+            checkpoint_every: 4,
+        },
+        2 => Scheduled {
+            // slowed (not dead) background workers: late slots fall back
+            schedule: format!("slow_worker@every:{}", rng.range(2, 5)),
+            preserving: true,
+            expect_halt: false,
+            checkpoint_every: 4,
+        },
+        3 => Scheduled {
+            // one failed save: ladder degrades, next cadence retries
+            schedule: "checkpoint_save_fail@at:1".to_string(),
+            preserving: true,
+            expect_halt: false,
+            checkpoint_every: 4,
+        },
+        4 => Scheduled {
+            // probabilistic NaN bursts: the watchdog's exact-path retry
+            // recovers (or training aborts if the exact path is hit too)
+            // — recovery changes the trajectory, so no fingerprint claim
+            schedule: format!("nan_site@p:0.0{}", rng.range(2, 9)),
+            preserving: false,
+            expect_halt: false,
+            checkpoint_every: 4,
+        },
+        _ => Scheduled {
+            // every save fails: three consecutive failures must halt
+            schedule: "checkpoint_save_fail@every:1".to_string(),
+            preserving: false,
+            expect_halt: true,
+            checkpoint_every: 2,
+        },
+    }
+}
+
+fn episode_ckpt_path(index: usize) -> PathBuf {
+    std::env::temp_dir().join(format!("rsc_soak_{}_{index}.ckpt", std::process::id()))
+}
+
+fn cleanup(path: &PathBuf) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(checkpoint::tmp_path(path));
+}
+
+/// The `corrupt_triple` ingestion probe: arm the fault, feed a valid
+/// triple list through the fallible CSR constructor, and require the
+/// poisoned weight to be *rejected* (training never sees a NaN edge).
+fn ingestion_probe() -> bool {
+    fault::clear();
+    fault::arm("corrupt_triple", None);
+    let triples = vec![(0u32, 1u32, 1.0f32), (1, 0, 1.0), (2, 2, 0.5)];
+    let rejected = Csr::try_from_triples(3, triples).is_err();
+    fault::clear();
+    rejected
+}
+
+/// Run the soak: baseline + `cfg.episodes` chaos episodes, invariant
+/// checks, report assembly.  Faults are armed per episode and always
+/// cleared afterwards, even on an episode error.
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
+    ensure!(
+        fault::ENABLED,
+        "rsc soak requires a build with --features fault-inject"
+    );
+    ensure!(cfg.episodes >= 1, "--episodes must be >= 1");
+    let backend = NativeBackend::synthesize(&cfg.dataset)
+        .with_context(|| format!("soak backend for dataset {:?}", cfg.dataset))?;
+    let train_seed = cfg.seed ^ 0x50AC;
+    let ds = load_or_generate(&cfg.dataset, train_seed)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xC4A0_5EED);
+
+    let mut episodes = Vec::with_capacity(cfg.episodes + 1);
+    let mut violations = Vec::new();
+    let mut baseline_fp = None;
+
+    for index in 0..=cfg.episodes {
+        let sched = if index == 0 {
+            Scheduled {
+                schedule: String::new(),
+                preserving: true,
+                expect_halt: false,
+                checkpoint_every: 4,
+            }
+        } else {
+            schedule_for(index, &mut rng)
+        };
+        let path = episode_ckpt_path(index);
+        cleanup(&path);
+
+        fault::clear();
+        fault::seed_stream(cfg.seed.wrapping_add(index as u64));
+        fault::arm_spec(&sched.schedule)?;
+        let tc = TrainConfig {
+            model: cfg.model,
+            epochs: 12,
+            seed: train_seed,
+            rsc: RscConfig {
+                budget_c: 0.3,
+                alloc_every: 3,
+                refresh_every: 4,
+                switch_frac: 1.0,
+                stall_ms: 50,
+                ..Default::default()
+            },
+            eval_every: 5,
+            reorder: ReorderKind::Degree,
+            checkpoint_every: sched.checkpoint_every,
+            checkpoint_path: Some(path.clone()),
+            ..TrainConfig::new(cfg.model)
+        };
+        let run = train(&backend, &ds, &tc);
+        fault::clear();
+
+        let mut ep = Episode {
+            index,
+            schedule: sched.schedule,
+            preserving: sched.preserving,
+            expect_halt: sched.expect_halt,
+            outcome: "violation",
+            fingerprint: None,
+            finite: None,
+            loadable: None,
+            matches_baseline: None,
+        };
+        match run {
+            Ok(res) => {
+                if ep.expect_halt {
+                    violations.push(format!(
+                        "episode {index} ({}): expected a ladder halt but the \
+                         run completed",
+                        ep.schedule
+                    ));
+                } else {
+                    ep.outcome = "completed";
+                }
+                ep.fingerprint = Some(res.weights_fingerprint);
+                let finite =
+                    res.loss_curve.iter().all(|l| l.is_finite()) && res.best_val.is_finite();
+                ep.finite = Some(finite);
+                if !finite {
+                    violations.push(format!(
+                        "episode {index} ({}): non-finite loss/metric state",
+                        ep.schedule
+                    ));
+                    ep.outcome = "violation";
+                }
+                let loadable = checkpoint::load(&path).is_ok();
+                ep.loadable = Some(loadable);
+                if !loadable {
+                    violations.push(format!(
+                        "episode {index} ({}): final checkpoint does not load",
+                        ep.schedule
+                    ));
+                    ep.outcome = "violation";
+                }
+                if index == 0 {
+                    baseline_fp = ep.fingerprint;
+                } else if ep.preserving {
+                    let matches = baseline_fp == ep.fingerprint;
+                    ep.matches_baseline = Some(matches);
+                    if !matches {
+                        violations.push(format!(
+                            "episode {index} ({}): fingerprint diverged from the \
+                             fault-free baseline despite a preserving schedule",
+                            ep.schedule
+                        ));
+                        ep.outcome = "violation";
+                    }
+                }
+            }
+            Err(e) => {
+                if ep.expect_halt || !ep.preserving {
+                    // a halt (or an unrecoverable non-preserving burst)
+                    // is an accepted terminal state — but it must leave
+                    // no half-written checkpoint behind
+                    ep.outcome = "halted";
+                    let loadable =
+                        !path.exists() || checkpoint::load(&path).is_ok();
+                    ep.loadable = Some(loadable);
+                    if !loadable {
+                        violations.push(format!(
+                            "episode {index} ({}): halt left a corrupt \
+                             checkpoint",
+                            ep.schedule
+                        ));
+                        ep.outcome = "violation";
+                    }
+                } else {
+                    violations.push(format!(
+                        "episode {index} ({}): recoverable schedule killed the \
+                         run: {e:#}",
+                        ep.schedule
+                    ));
+                }
+            }
+        }
+        cleanup(&path);
+        episodes.push(ep);
+    }
+
+    let ingestion_probe_ok = ingestion_probe();
+    if !ingestion_probe_ok {
+        violations.push(
+            "ingestion probe: corrupt_triple was not rejected by the CSR \
+             validator"
+                .to_string(),
+        );
+    }
+    Ok(SoakReport {
+        episodes,
+        violations,
+        ingestion_probe_ok,
+        seed: cfg.seed,
+    })
+}

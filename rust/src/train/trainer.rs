@@ -28,13 +28,14 @@ use crate::runtime::{
     autotune_stats, plan_stats, simd, spmm_kernel_stats, tune_plan, AutotuneStats, Backend,
     SpmmKernelStats, Value, Workspace, WorkspaceStats,
 };
-use crate::train::checkpoint::{self, Checkpoint};
+use crate::train::checkpoint::{self, Checkpoint, SaintState};
 use crate::train::metrics::MetricKind;
+use crate::util::health::{HealthEvent, HealthLadder};
 use crate::util::parallel::{self, Parallelism};
 use crate::util::rng::Rng;
 use crate::util::timer::{Clock, Stopwatch, TimeBook, WallClock};
 use crate::Result;
-use anyhow::{ensure, Context};
+use anyhow::{bail, ensure, Context};
 use std::path::PathBuf;
 
 #[derive(Debug, Clone)]
@@ -76,6 +77,10 @@ pub struct TrainConfig {
     /// loss or gradient with all sites forced exact (`--no-watchdog`
     /// restores the old fail-fast behavior).
     pub watchdog: bool,
+    /// Consecutive clean steps before the health ladder promotes one
+    /// rung back toward Healthy (`--promote-after`; DESIGN.md §Chaos
+    /// soak & health ladder).
+    pub health_promote_after: usize,
 }
 
 impl TrainConfig {
@@ -96,6 +101,7 @@ impl TrainConfig {
             checkpoint_path: None,
             resume: None,
             watchdog: true,
+            health_promote_after: 5,
         }
     }
 }
@@ -180,6 +186,16 @@ pub struct TrainResult {
     pub checkpoints_written: u64,
     /// First epoch this run executed when resumed from a checkpoint.
     pub resumed_at: Option<u64>,
+    /// Terminal health-ladder rung ("healthy" | "degraded" |
+    /// "exact-only" | "halted"); Healthy for every fault-free run.
+    pub health_final: &'static str,
+    /// Ladder demotions observed during the run (one per rung dropped).
+    pub health_demotions: u64,
+    /// Ladder re-promotions earned by consecutive clean steps.
+    pub health_repromotions: u64,
+    /// Supervised background refresh builds re-run after a panic
+    /// (process-global counter, so an upper bound under concurrency).
+    pub worker_respawns: u64,
 }
 
 /// Order-sensitive FNV-1a over all parameters' f32 bit patterns; see
@@ -213,6 +229,70 @@ struct Watchdog {
 impl Watchdog {
     fn new(enabled: bool) -> Watchdog {
         Watchdog { enabled, trips: 0, recoveries: 0, escalations: 0, streak: 0 }
+    }
+}
+
+/// Per-step health-ladder bookkeeping shared by both training loops:
+/// folds watchdog trips, worker-panic and refresh-stall counter deltas
+/// into [`HealthLadder`] events, then applies the current rung's
+/// degradation levers to the engine(s).  Every lever is bit-identity
+/// preserving for recoverable faults — disabling prefetch executes the
+/// same refresh jobs synchronously (DESIGN.md §Prefetch parity) — so a
+/// degraded-then-repromoted run still matches the fault-free fingerprint
+/// unless the watchdog itself had to alter the trajectory.
+struct LadderMonitor {
+    ladder: HealthLadder,
+    panics_last: u64,
+    stalled_last: u64,
+}
+
+impl LadderMonitor {
+    fn new(promote_after: usize) -> LadderMonitor {
+        LadderMonitor {
+            ladder: HealthLadder::new(promote_after),
+            panics_last: parallel::worker_panics(),
+            stalled_last: 0,
+        }
+    }
+
+    /// Fold one training step's outcomes into the ladder: the guarded
+    /// step's trip/failure verdict plus panic and stall counter deltas;
+    /// a step with no events counts toward re-promotion.
+    fn after_step(&mut self, step: u64, tripped: bool, failed: bool, stalled_now: u64) {
+        let panics_now = parallel::worker_panics();
+        let mut eventful = false;
+        if failed {
+            self.ladder.observe(step, HealthEvent::ExactRetryFailed);
+            eventful = true;
+        } else if tripped {
+            self.ladder.observe(step, HealthEvent::WatchdogTrip);
+            eventful = true;
+        }
+        if panics_now > self.panics_last {
+            self.ladder.observe(step, HealthEvent::WorkerPanic);
+            eventful = true;
+        }
+        if stalled_now > self.stalled_last {
+            self.ladder.observe(step, HealthEvent::RefreshStall);
+            eventful = true;
+        }
+        self.panics_last = panics_now;
+        self.stalled_last = stalled_now;
+        if !eventful {
+            self.ladder.observe(step, HealthEvent::CleanStep);
+        }
+    }
+
+    /// Apply the current rung to one engine ahead of its next step:
+    /// Degraded or worse builds refreshes synchronously (prefetch off),
+    /// ExactOnly additionally slides a forced-exact window over the
+    /// engine's next step.  At Healthy the configured prefetch setting
+    /// is restored, so a fault-free run never observes the ladder.
+    fn apply(&self, engine: &mut RscEngine, cfg_prefetch: bool, next_step: u64) {
+        engine.set_prefetch(cfg_prefetch && !self.ladder.degraded_or_worse());
+        if self.ladder.exact_only_or_worse() {
+            engine.force_exact_until(next_step + 1);
+        }
     }
 }
 
@@ -346,7 +426,7 @@ pub fn train_with_clock(
 ) -> Result<TrainResult> {
     b.manifest().check_against(&ds.cfg)?;
     match cfg.model {
-        ModelKind::Saint => train_saint(b, ds, cfg),
+        ModelKind::Saint => train_saint(b, ds, cfg, clock),
         _ => train_full_batch(b, ds, cfg, clock),
     }
 }
@@ -422,7 +502,7 @@ fn train_full_batch(
             cfg.epochs as u64,
             &mut model,
             &mut rng,
-            &mut engine,
+            std::slice::from_mut(&mut engine),
         )?;
         loss_curve = ck.loss_curve.clone();
         val_curve = ck.val_curve.iter().map(|&(e, v)| (e as usize, v)).collect();
@@ -436,17 +516,54 @@ fn train_full_batch(
     // save; any save (either trigger) restarts the countdown
     let mut next_wall_ckpt_s = cfg.checkpoint_mins * 60;
     let worker_panics0 = parallel::worker_panics();
+    let worker_respawns0 = parallel::worker_respawns();
     let mut wd = Watchdog::new(cfg.watchdog);
+    let mut hm = LadderMonitor::new(cfg.health_promote_after);
 
     let sw = Stopwatch::start();
     let mut eval_tb = TimeBook::new();
 
     for epoch in start_epoch..cfg.epochs {
         let step = epoch as u64;
-        let loss = guarded_train_step(
+        let trips0 = wd.trips;
+        let step_res = guarded_train_step(
             &mut model, b, &x, &labels, &train_mask, &bufs, &mut engine, step, cfg.lr,
             &mut tb, &mut ws, &mut wd,
-        )?;
+        );
+        hm.after_step(
+            step,
+            wd.trips > trips0,
+            step_res.is_err(),
+            engine.prefetch_stats().stalled,
+        );
+        let loss = match step_res {
+            Ok(l) => l,
+            Err(e) => {
+                // the exact path failed too: the ladder halts.  Leave a
+                // best-effort checkpoint at the last epoch boundary so
+                // the run can be resumed and triaged, then surface the
+                // original error.
+                if let (Some(path), Some(fp)) = (&cfg.checkpoint_path, graph_fp) {
+                    let ck = Checkpoint::capture(
+                        cfg.model,
+                        fp,
+                        cfg.seed,
+                        cfg.epochs as u64,
+                        step,
+                        &model,
+                        &rng,
+                        std::slice::from_ref(&engine),
+                        None,
+                        &loss_curve,
+                        &val_curve,
+                        best_val,
+                        test_at_best,
+                    );
+                    let _ = checkpoint::save(&ck, path);
+                }
+                return Err(e);
+            }
+        };
         ensure!(loss.is_finite(), "loss diverged at epoch {epoch}: {loss}");
         loss_curve.push(loss);
 
@@ -503,19 +620,40 @@ fn train_full_batch(
                 done as u64,
                 &model,
                 &rng,
-                &engine,
+                std::slice::from_ref(&engine),
+                None,
                 &loss_curve,
                 &val_curve,
                 best_val,
                 test_at_best,
             );
             let path = cfg.checkpoint_path.as_ref().context("validated above")?;
-            checkpoint::save(&ck, path)?;
-            checkpoints_written += 1;
-            if cfg.checkpoint_mins > 0 {
-                next_wall_ckpt_s = clock.elapsed_s() + cfg.checkpoint_mins * 60;
+            // a failed save is degradation, not death: the ladder floors
+            // at Degraded, the next cadence retries, and only a streak of
+            // failures halts the run (better a stale snapshot than none)
+            match checkpoint::save(&ck, path) {
+                Ok(()) => {
+                    checkpoints_written += 1;
+                    hm.ladder.observe(step, HealthEvent::CheckpointSaved);
+                    if cfg.checkpoint_mins > 0 {
+                        next_wall_ckpt_s = clock.elapsed_s() + cfg.checkpoint_mins * 60;
+                    }
+                }
+                Err(e) => {
+                    hm.ladder.observe(step, HealthEvent::CheckpointSaveFailed);
+                    if cfg.verbose {
+                        println!("checkpoint save failed at epoch {epoch}: {e:#}");
+                    }
+                }
             }
         }
+        if hm.ladder.is_halted() {
+            bail!(
+                "training halted by the health ladder at epoch {epoch}: \
+                 repeated checkpoint save failures"
+            );
+        }
+        hm.apply(&mut engine, cfg.rsc.prefetch, step + 1);
     }
     ensure!(
         best_val.is_finite(),
@@ -561,6 +699,10 @@ fn train_full_batch(
         worker_panics: parallel::worker_panics().saturating_sub(worker_panics0),
         checkpoints_written,
         resumed_at,
+        health_final: hm.ladder.state().name(),
+        health_demotions: hm.ladder.demotions(),
+        health_repromotions: hm.ladder.repromotions(),
+        worker_respawns: parallel::worker_respawns().saturating_sub(worker_respawns0),
     })
 }
 
@@ -586,13 +728,17 @@ pub fn saint_eval_full_batch(
 
 /// GraphSAINT: pre-sample subgraphs offline (paper footnote 1), train on
 /// padded subgraphs with a per-subgraph RSC engine, evaluate full-batch.
-fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+/// Checkpoints snapshot every per-subgraph engine plus the batch cursor
+/// and per-subgraph use counts ([`SaintState`]); the subgraphs and their
+/// buffers are *not* serialized — sampling is seed-deterministic, so a
+/// resumed run rebuilds them bit-identically before restoring.
+fn train_saint(
+    b: &dyn Backend,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    clock: &mut dyn Clock,
+) -> Result<TrainResult> {
     ensure!(ds.cfg.saint_v > 0, "dataset {} has no SAINT config", ds.cfg.name);
-    ensure!(
-        cfg.resume.is_none() && cfg.checkpoint_every == 0 && cfg.checkpoint_mins == 0,
-        "checkpoint/resume is not supported for graphsaint (per-subgraph engines); \
-         use a full-batch model"
-    );
     let mut rng = Rng::new(cfg.seed ^ 0x5417);
     let metric = MetricKind::for_dataset(ds);
     let (plan_hits0, plan_builds0) = plan_stats();
@@ -686,19 +832,65 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
     let mut val_curve = Vec::new();
     let mut best_val = f64::NEG_INFINITY;
     let mut test_at_best = f64::NAN;
-    let worker_panics0 = parallel::worker_panics();
-    let mut wd = Watchdog::new(cfg.watchdog);
-    let sw = Stopwatch::start();
-    let mut batch_cursor = 0usize;
 
-    for epoch in 0..cfg.epochs {
+    // --- fault tolerance: checkpoint/resume + watchdog + health ladder ---
+    let checkpointing = cfg.checkpoint_every > 0 || cfg.checkpoint_mins > 0;
+    ensure!(
+        !checkpointing || cfg.checkpoint_path.is_some(),
+        "checkpoint_every/checkpoint_mins > 0 needs a checkpoint path"
+    );
+    // the fingerprint is of the *full* eval graph: subgraphs are derived
+    // from it plus the seed, so it pins the dataset identity for resume
+    let graph_fp = (checkpointing || cfg.resume.is_some())
+        .then(|| checkpoint::graph_fingerprint(&eval_bufs.matrix));
+    let mut start_epoch = 0usize;
+    let mut resumed_at = None;
+    let mut batch_cursor = 0usize;
+    if let Some(path) = &cfg.resume {
+        let ck = checkpoint::load(path)?;
+        ck.restore_into(
+            ModelKind::Saint,
+            graph_fp.context("graph_fp is computed when resume is set")?,
+            cfg.seed,
+            cfg.epochs as u64,
+            &mut model,
+            &mut rng,
+            &mut engines,
+        )?;
+        let saint = ck.saint.as_ref().context(
+            "checkpoint carries no GraphSAINT cursor state (written by a \
+             full-batch run?)",
+        )?;
+        batch_cursor = saint.batch_cursor as usize;
+        uses.copy_from_slice(&saint.uses);
+        loss_curve = ck.loss_curve.clone();
+        val_curve = ck.val_curve.iter().map(|&(e, v)| (e as usize, v)).collect();
+        best_val = ck.best_val;
+        test_at_best = ck.test_at_best;
+        start_epoch = ck.next_epoch as usize;
+        resumed_at = Some(ck.next_epoch);
+    }
+    let mut checkpoints_written = 0u64;
+    let mut next_wall_ckpt_s = cfg.checkpoint_mins * 60;
+    let worker_panics0 = parallel::worker_panics();
+    let worker_respawns0 = parallel::worker_respawns();
+    let mut wd = Watchdog::new(cfg.watchdog);
+    let mut hm = LadderMonitor::new(cfg.health_promote_after);
+    let sw = Stopwatch::start();
+
+    for epoch in start_epoch..cfg.epochs {
+        // cursor state as of this epoch's start: the halt checkpoint
+        // below must resume from the epoch boundary, not mid-epoch
+        let epoch_cursor = batch_cursor;
+        let epoch_uses = uses.clone();
         let mut epoch_loss = 0f32;
         for _ in 0..cfg.saint_batches_per_epoch {
             let i = batch_cursor % n_sub;
             batch_cursor += 1;
             let step = uses[i];
             uses[i] += 1;
-            let loss = guarded_train_step(
+            let trips0 = wd.trips;
+            let step_res = guarded_train_step(
                 &mut model,
                 b,
                 &sub_x[i],
@@ -711,9 +903,46 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
                 &mut tb,
                 &mut ws,
                 &mut wd,
-            )?;
+            );
+            let gstep = (batch_cursor - 1) as u64;
+            hm.after_step(
+                gstep,
+                wd.trips > trips0,
+                step_res.is_err(),
+                engines.iter().map(|e| e.prefetch_stats().stalled).sum(),
+            );
+            let loss = match step_res {
+                Ok(l) => l,
+                Err(e) => {
+                    if let (Some(path), Some(fp)) = (&cfg.checkpoint_path, graph_fp) {
+                        let ck = Checkpoint::capture(
+                            ModelKind::Saint,
+                            fp,
+                            cfg.seed,
+                            cfg.epochs as u64,
+                            epoch as u64,
+                            &model,
+                            &rng,
+                            &engines,
+                            Some(SaintState {
+                                batch_cursor: epoch_cursor as u64,
+                                uses: epoch_uses.clone(),
+                            }),
+                            &loss_curve,
+                            &val_curve,
+                            best_val,
+                            test_at_best,
+                        );
+                        let _ = checkpoint::save(&ck, path);
+                    }
+                    return Err(e);
+                }
+            };
             ensure!(loss.is_finite(), "loss diverged at epoch {epoch}");
             epoch_loss += loss;
+            for (j, e) in engines.iter_mut().enumerate() {
+                hm.apply(e, cfg.rsc.prefetch, uses[j]);
+            }
         }
         loss_curve.push(epoch_loss / cfg.saint_batches_per_epoch as f32);
 
@@ -737,6 +966,55 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
             }
             ws.recycle(logits);
             ws.trim_to_high_water();
+        }
+
+        // checkpoint at the epoch boundary, exactly like full-batch; the
+        // snapshot carries every per-subgraph engine plus the cursor
+        let done = epoch + 1;
+        let epoch_due = cfg.checkpoint_every > 0 && done % cfg.checkpoint_every == 0;
+        let wall_due = cfg.checkpoint_mins > 0 && clock.elapsed_s() >= next_wall_ckpt_s;
+        if (epoch_due || wall_due) && done < cfg.epochs {
+            let ck = Checkpoint::capture(
+                ModelKind::Saint,
+                graph_fp.context("graph_fp is computed when checkpointing")?,
+                cfg.seed,
+                cfg.epochs as u64,
+                done as u64,
+                &model,
+                &rng,
+                &engines,
+                Some(SaintState {
+                    batch_cursor: batch_cursor as u64,
+                    uses: uses.clone(),
+                }),
+                &loss_curve,
+                &val_curve,
+                best_val,
+                test_at_best,
+            );
+            let path = cfg.checkpoint_path.as_ref().context("validated above")?;
+            match checkpoint::save(&ck, path) {
+                Ok(()) => {
+                    checkpoints_written += 1;
+                    hm.ladder.observe(batch_cursor as u64, HealthEvent::CheckpointSaved);
+                    if cfg.checkpoint_mins > 0 {
+                        next_wall_ckpt_s = clock.elapsed_s() + cfg.checkpoint_mins * 60;
+                    }
+                }
+                Err(e) => {
+                    hm.ladder
+                        .observe(batch_cursor as u64, HealthEvent::CheckpointSaveFailed);
+                    if cfg.verbose {
+                        println!("checkpoint save failed at epoch {epoch}: {e:#}");
+                    }
+                }
+            }
+        }
+        if hm.ladder.is_halted() {
+            bail!(
+                "training halted by the health ladder at epoch {epoch}: \
+                 repeated checkpoint save failures"
+            );
         }
     }
     ensure!(
@@ -801,7 +1079,11 @@ fn train_saint(b: &dyn Backend, ds: &Dataset, cfg: &TrainConfig) -> Result<Train
         watchdog_recoveries: wd.recoveries,
         watchdog_escalations: wd.escalations,
         worker_panics: parallel::worker_panics().saturating_sub(worker_panics0),
-        checkpoints_written: 0,
-        resumed_at: None,
+        checkpoints_written,
+        resumed_at,
+        health_final: hm.ladder.state().name(),
+        health_demotions: hm.ladder.demotions(),
+        health_repromotions: hm.ladder.repromotions(),
+        worker_respawns: parallel::worker_respawns().saturating_sub(worker_respawns0),
     })
 }

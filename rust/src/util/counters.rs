@@ -159,6 +159,11 @@ pub const REGISTERED: &[GlobalEntry] = &[
         "worker panics since process start; monotonic tally, survives resets"
     ),
     global!(
+        util::parallel::WORKER_RESPAWNS,
+        Monotonic,
+        "supervised background-task re-runs after a panic; monotonic tally"
+    ),
+    global!(
         util::parallel::ARENA_REUSED,
         Counter,
         "scratch-arena buffers served from the per-thread free list",

@@ -1,130 +1,295 @@
 //! Deterministic fault-injection substrate (`fault-inject` feature).
 //!
-//! Named one-shot fault points that the robustness tests arm to prove
-//! each recovery path end-to-end (DESIGN.md §Fault tolerance):
+//! Named fault points that the robustness tests arm to prove each
+//! recovery path end-to-end (DESIGN.md §Fault tolerance).  PR 9 grew the
+//! registry from one-shot points into seeded *schedules* so the chaos
+//! soak (`rsc soak`) can sustain faults across a whole run:
 //!
 //! | fault point               | arg         | fires in                                      |
 //! |---------------------------|-------------|-----------------------------------------------|
 //! | `refresh_panic@step`      | due step    | a background refresh build (worker panic)     |
+//! | `refresh_stall@ms`        | sleep ms    | a background refresh build (sleeps past SLA)  |
+//! | `slow_worker@ms`          | sleep ms    | any supervised background task (slow start)   |
 //! | `nan_site@k`              | site index  | the site's backward-SpMM output (NaN fill)    |
+//! | `corrupt_triple`          | —           | triple ingestion (poisons one edge weight)    |
+//! | `checkpoint_save_fail`    | —           | checkpoint save: fails before writing         |
 //! | `torn_checkpoint_write`   | —           | checkpoint save: half-written temp, no rename |
 //! | `corrupt_checkpoint_byte` | byte offset | checkpoint save: flips one byte after rename  |
 //!
+//! ## Schedule grammar
+//!
+//! Each comma-separated spec is `name` plus an optional `@` suffix:
+//!
+//! | spec            | trigger                                              |
+//! |-----------------|------------------------------------------------------|
+//! | `name`          | one-shot, any argument matches                       |
+//! | `name@123`      | one-shot, only argument `123` matches                |
+//! | `name@every:N`  | recurring: every Nth matching check fires            |
+//! | `name@at:N`     | the Nth matching check fires, then disarms           |
+//! | `name@p:0.05`   | each matching check fires with probability `p`, from |
+//! |                 | a dedicated xoshiro stream (see [`seed_stream`])     |
+//!
+//! Schedule forms (`every:`/`at:`/`p:`) match any argument; only the
+//! plain `name@u64` form pins the argument.  Probabilistic triggers draw
+//! from a stream seeded by [`seed_stream`], so a soak episode that seeds
+//! the stream and arms the same spec replays the same firing pattern.
+//!
 //! Faults are armed programmatically ([`arm`] / [`arm_spec`]) or through
 //! the `RSC_FAULTS` environment variable (comma-separated specs, e.g.
-//! `RSC_FAULTS=refresh_panic@3,torn_checkpoint_write`); the `rsc train
-//! --faults <spec>` flag is the CLI spelling.  Every armed fault fires at
-//! most once, so a recovered run proceeds healthy afterwards — which is
-//! exactly what the recovery tests assert.
+//! `RSC_FAULTS=refresh_panic@3,nan_site@every:5`); the `rsc train
+//! --faults <spec>` flag is the CLI spelling.  `RSC_FAULTS` is validated
+//! once at startup by [`init_from_env`] — a bad spec is a clean CLI
+//! error, never a panic inside the lazy registry init.
 //!
 //! Without the `fault-inject` feature every function here compiles to an
 //! inlined no-op: the hot path carries no cost and production builds
-//! cannot be armed at all (`--faults` reports a clear error instead).
+//! cannot be armed at all (`--faults` and `RSC_FAULTS` report a clear
+//! error instead).
 
 /// True when the crate was built with `--features fault-inject`.
 pub const ENABLED: bool = cfg!(feature = "fault-inject");
 
+/// Stall duration used by [`maybe_stall`] when the armed fault carries
+/// no explicit millisecond argument (the schedule forms).
+pub const DEFAULT_STALL_MS: u64 = 150;
+
 #[cfg(feature = "fault-inject")]
 mod imp {
+    use super::DEFAULT_STALL_MS;
+    use crate::util::rng::Rng;
     use crate::Result;
-    use anyhow::{anyhow, ensure};
+    use anyhow::{anyhow, bail, ensure};
     use std::sync::Mutex;
+
+    #[derive(Debug, Clone)]
+    enum Trigger {
+        /// Fires on the first matching check, then disarms.
+        Once,
+        /// Fires on every `n`th matching check, forever.
+        Every { n: u64, count: u64 },
+        /// Fires on exactly the `n`th matching check, then disarms.
+        At { n: u64, count: u64 },
+        /// Fires each matching check with probability `p` (seeded stream).
+        Prob { p: f64 },
+    }
 
     #[derive(Debug, Clone)]
     struct Fault {
         name: String,
         arg: Option<u64>,
+        trigger: Trigger,
     }
 
-    static ARMED: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
+    struct State {
+        faults: Vec<Fault>,
+        /// Dedicated stream for `@p:` triggers; lazily created, reset by
+        /// `seed_stream` so probabilistic schedules replay byte-for-byte.
+        rng: Option<Rng>,
+        env_done: bool,
+        env_err: Option<String>,
+    }
 
-    fn armed() -> std::sync::MutexGuard<'static, Vec<Fault>> {
+    static STATE: Mutex<State> = Mutex::new(State {
+        faults: Vec::new(),
+        rng: None,
+        env_done: false,
+        env_err: None,
+    });
+
+    fn state() -> std::sync::MutexGuard<'static, State> {
         // a panic while the lock is held is exactly what this harness
         // provokes on purpose; tolerate poisoning instead of compounding
-        ARMED.lock().unwrap_or_else(|e| e.into_inner())
-    }
-
-    fn env_init() {
-        use std::sync::Once;
-        static INIT: Once = Once::new();
-        INIT.call_once(|| {
+        let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+        if !st.env_done {
+            st.env_done = true;
             if let Ok(spec) = std::env::var("RSC_FAULTS") {
-                if let Err(e) = arm_spec(&spec) {
-                    panic!("RSC_FAULTS: {e}");
+                match parse_spec(&spec) {
+                    Ok(fs) => st.faults.extend(fs),
+                    Err(e) => st.env_err = Some(format!("{e:#}")),
                 }
             }
-        });
+        }
+        st
     }
 
-    /// Arm one fault point; `arg` of `None` matches any argument.
-    pub fn arm(name: &str, arg: Option<u64>) {
-        armed().push(Fault {
-            name: name.to_string(),
+    fn parse_one(part: &str) -> Result<Fault> {
+        let fault = |arg, trigger| Fault {
+            name: String::new(),
             arg,
-        });
+            trigger,
+        };
+        let (name, f) = match part.split_once('@') {
+            None => (part, fault(None, Trigger::Once)),
+            Some((name, rest)) => {
+                let f = if let Some(n) = rest.strip_prefix("every:") {
+                    let n = n
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("bad fault spec {part:?}: every:N needs a u64"))?;
+                    ensure!(n >= 1, "bad fault spec {part:?}: every:N needs N >= 1");
+                    fault(None, Trigger::Every { n, count: 0 })
+                } else if let Some(n) = rest.strip_prefix("at:") {
+                    let n = n
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("bad fault spec {part:?}: at:N needs a u64"))?;
+                    ensure!(n >= 1, "bad fault spec {part:?}: at:N needs N >= 1");
+                    fault(None, Trigger::At { n, count: 0 })
+                } else if let Some(p) = rest.strip_prefix("p:") {
+                    let p = p
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("bad fault spec {part:?}: p:X needs a float"))?;
+                    ensure!(
+                        p > 0.0 && p <= 1.0,
+                        "bad fault spec {part:?}: p must be in (0, 1]"
+                    );
+                    fault(None, Trigger::Prob { p })
+                } else {
+                    let arg = rest.parse::<u64>().map_err(|_| {
+                        anyhow!("bad fault spec {part:?}: arg must be a u64, every:N, at:N or p:X")
+                    })?;
+                    fault(Some(arg), Trigger::Once)
+                };
+                (name, f)
+            }
+        };
+        ensure!(!name.is_empty(), "bad fault spec {part:?}: empty name");
+        Ok(Fault {
+            name: name.to_string(),
+            ..f
+        })
     }
 
-    /// Arm a comma-separated list of `name` / `name@arg` specs.
-    pub fn arm_spec(spec: &str) -> Result<()> {
-        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-            match part.split_once('@') {
-                Some((name, arg)) => {
-                    ensure!(!name.is_empty(), "bad fault spec {part:?}: empty name");
-                    let arg = arg
-                        .parse::<u64>()
-                        .map_err(|_| anyhow!("bad fault spec {part:?}: arg must be a u64"))?;
-                    arm(name, Some(arg));
-                }
-                None => arm(part, None),
-            }
+    /// Parse a comma-separated list of schedule specs without arming
+    /// anything (startup validation goes through here).
+    fn parse_spec(spec: &str) -> Result<Vec<Fault>> {
+        spec.split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(parse_one)
+            .collect()
+    }
+
+    /// Validate `RSC_FAULTS` (if set) and surface a parse failure as a
+    /// clean error.  `main` calls this once at startup so a bad spec is
+    /// a CLI diagnostic instead of a panic inside the registry.
+    pub fn init_from_env() -> Result<()> {
+        let st = state();
+        if let Some(e) = &st.env_err {
+            bail!("RSC_FAULTS: {e}");
         }
         Ok(())
     }
 
-    /// Disarm everything (each test starts from a clean slate).
+    /// Arm one one-shot fault point; `arg` of `None` matches any
+    /// argument.
+    pub fn arm(name: &str, arg: Option<u64>) {
+        state().faults.push(Fault {
+            name: name.to_string(),
+            arg,
+            trigger: Trigger::Once,
+        });
+    }
+
+    /// Arm a comma-separated list of schedule specs (see the module doc
+    /// for the grammar).
+    pub fn arm_spec(spec: &str) -> Result<()> {
+        let fs = parse_spec(spec)?;
+        state().faults.extend(fs);
+        Ok(())
+    }
+
+    /// Seed the dedicated stream that drives `@p:` triggers.  Soak
+    /// episodes call this before arming so probabilistic schedules are
+    /// reproducible run-to-run.
+    pub fn seed_stream(seed: u64) {
+        state().rng = Some(Rng::new(seed ^ 0x5EED_FA17));
+    }
+
+    /// Disarm everything (each test / soak episode starts clean).
     pub fn clear() {
-        armed().clear();
+        state().faults.clear();
     }
 
-    /// Number of armed-but-unfired faults (tests pin this to 0 at the
-    /// end to prove the injection actually happened).
+    /// Number of armed faults.  One-shot faults leave the registry when
+    /// they fire (tests pin this to 0 to prove the injection actually
+    /// happened); recurring schedules stay armed.
     pub fn armed_count() -> usize {
-        env_init();
-        armed().len()
+        state().faults.len()
     }
 
-    /// One-shot check: true exactly once for an armed fault whose name
-    /// matches and whose armed arg (if any) equals `arg`.
+    /// Evaluate a trigger for one matching check; returns (fired,
+    /// disarm).
+    fn step_trigger(t: &mut Trigger, rng: &mut Option<Rng>) -> (bool, bool) {
+        match t {
+            Trigger::Once => (true, true),
+            Trigger::Every { n, count } => {
+                *count += 1;
+                (*count % *n == 0, false)
+            }
+            Trigger::At { n, count } => {
+                *count += 1;
+                (*count == *n, *count == *n)
+            }
+            Trigger::Prob { p } => {
+                let r = rng.get_or_insert_with(|| Rng::new(0x5EED_FA17));
+                (r.chance(*p), false)
+            }
+        }
+    }
+
+    /// Check the first armed fault whose name matches and whose armed
+    /// arg (if any) equals `arg`; advances its schedule and reports
+    /// whether it fires on this check.
     pub fn fires(name: &str, arg: u64) -> bool {
-        env_init();
-        let mut a = armed();
-        if let Some(i) = a
+        let mut st = state();
+        let st = &mut *st;
+        let Some(i) = st
+            .faults
             .iter()
             .position(|f| f.name == name && f.arg.is_none_or(|x| x == arg))
-        {
-            a.remove(i);
-            return true;
+        else {
+            return false;
+        };
+        let (fired, disarm) = step_trigger(&mut st.faults[i].trigger, &mut st.rng);
+        if disarm {
+            st.faults.remove(i);
         }
-        false
+        fired
     }
 
-    /// One-shot check ignoring the argument; returns the armed argument
-    /// (itself optional) when the fault fires.
+    /// Like [`fires`] but ignores the argument; returns the armed
+    /// argument (itself optional) when the fault fires on this check.
     pub fn fires_any(name: &str) -> Option<Option<u64>> {
-        env_init();
-        let mut a = armed();
-        let i = a.iter().position(|f| f.name == name)?;
-        Some(a.remove(i).arg)
+        let mut st = state();
+        let st = &mut *st;
+        let i = st.faults.iter().position(|f| f.name == name)?;
+        let (fired, disarm) = step_trigger(&mut st.faults[i].trigger, &mut st.rng);
+        let arg = st.faults[i].arg;
+        if disarm {
+            st.faults.remove(i);
+        }
+        fired.then_some(arg)
     }
 
-    /// Panic on the calling thread if `name@arg` is armed.
+    /// Panic on the calling thread if `name@arg` fires.
     pub fn maybe_panic(name: &str, arg: u64) {
         if fires(name, arg) {
             panic!("fault injected: {name}@{arg}");
         }
     }
 
-    /// Fill `data` with NaN if `name@arg` is armed; the watchdog tests
+    /// Sleep on the calling thread if `name` fires, simulating a stalled
+    /// or slow worker.  The armed argument is the sleep in milliseconds
+    /// ([`DEFAULT_STALL_MS`] for schedule forms, which carry no arg).
+    pub fn maybe_stall(name: &str) -> bool {
+        let Some(arg) = fires_any(name) else {
+            return false;
+        };
+        let ms = arg.unwrap_or(DEFAULT_STALL_MS);
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+        true
+    }
+
+    /// Fill `data` with NaN if `name@arg` fires; the watchdog tests
     /// poison a site's backward-SpMM output through this.
     pub fn poison_f32s(name: &str, arg: u64, data: &mut [f32]) -> bool {
         if !fires(name, arg) {
@@ -141,6 +306,15 @@ mod imp {
 mod imp {
     //! No-op twins: same signatures, nothing armed, nothing fires.
     use crate::Result;
+    use anyhow::bail;
+
+    #[inline(always)]
+    pub fn init_from_env() -> Result<()> {
+        if std::env::var("RSC_FAULTS").is_ok_and(|s| !s.trim().is_empty()) {
+            bail!("RSC_FAULTS requires a build with --features fault-inject");
+        }
+        Ok(())
+    }
 
     #[inline(always)]
     pub fn arm(_name: &str, _arg: Option<u64>) {}
@@ -149,6 +323,9 @@ mod imp {
     pub fn arm_spec(_spec: &str) -> Result<()> {
         Ok(())
     }
+
+    #[inline(always)]
+    pub fn seed_stream(_seed: u64) {}
 
     #[inline(always)]
     pub fn clear() {}
@@ -172,6 +349,11 @@ mod imp {
     pub fn maybe_panic(_name: &str, _arg: u64) {}
 
     #[inline(always)]
+    pub fn maybe_stall(_name: &str) -> bool {
+        false
+    }
+
+    #[inline(always)]
     pub fn poison_f32s(_name: &str, _arg: u64, _data: &mut [f32]) -> bool {
         false
     }
@@ -189,32 +371,95 @@ mod tests {
     fn registry_semantics_match_the_feature_gate() {
         clear();
         if ENABLED {
-            arm("refresh_panic", Some(3));
-            arm_spec(" nan_site@1 , torn_checkpoint_write ").unwrap();
-            assert_eq!(armed_count(), 3);
-            assert!(!fires("refresh_panic", 2), "arg must match");
-            assert!(fires("refresh_panic", 3));
-            assert!(!fires("refresh_panic", 3), "faults are one-shot");
-            let mut buf = [1.0f32, 2.0];
-            assert!(poison_f32s("nan_site", 1, &mut buf));
-            assert!(buf.iter().all(|x| x.is_nan()));
-            assert_eq!(fires_any("torn_checkpoint_write"), Some(None));
-            assert_eq!(fires_any("torn_checkpoint_write"), None);
-            assert_eq!(armed_count(), 0);
-            assert!(arm_spec("nan_site@notanumber").is_err());
-            assert!(arm_spec("@3").is_err());
+            one_shot_semantics();
+            schedule_semantics();
+            probabilistic_replay();
+            parse_errors();
         } else {
             // feature off: arming is inert and nothing ever fires
             arm("refresh_panic", Some(3));
             arm_spec("nan_site@1").unwrap();
+            arm_spec("nan_site@every:2,nan_site@p:0.5").unwrap();
             assert_eq!(armed_count(), 0);
             assert!(!fires("refresh_panic", 3));
             assert_eq!(fires_any("torn_checkpoint_write"), None);
             let mut buf = [1.0f32];
             assert!(!poison_f32s("nan_site", 1, &mut buf));
             assert_eq!(buf, [1.0]);
+            assert!(!maybe_stall("refresh_stall"));
             maybe_panic("refresh_panic", 3); // must not panic
+            seed_stream(7);
         }
         clear();
+    }
+
+    #[cfg(feature = "fault-inject")]
+    fn one_shot_semantics() {
+        arm("refresh_panic", Some(3));
+        arm_spec(" nan_site@1 , torn_checkpoint_write ").unwrap();
+        assert_eq!(armed_count(), 3);
+        assert!(!fires("refresh_panic", 2), "arg must match");
+        assert!(fires("refresh_panic", 3));
+        assert!(!fires("refresh_panic", 3), "faults are one-shot");
+        let mut buf = [1.0f32, 2.0];
+        assert!(poison_f32s("nan_site", 1, &mut buf));
+        assert!(buf.iter().all(|x| x.is_nan()));
+        assert_eq!(fires_any("torn_checkpoint_write"), Some(None));
+        assert_eq!(fires_any("torn_checkpoint_write"), None);
+        assert_eq!(armed_count(), 0);
+    }
+
+    #[cfg(feature = "fault-inject")]
+    fn schedule_semantics() {
+        clear();
+        arm_spec("nan_site@every:3").unwrap();
+        let pattern: Vec<bool> = (0..7).map(|_| fires("nan_site", 0)).collect();
+        assert_eq!(
+            pattern,
+            [false, false, true, false, false, true, false],
+            "every:3 fires on the 3rd and 6th checks"
+        );
+        assert_eq!(armed_count(), 1, "recurring schedules stay armed");
+
+        clear();
+        arm_spec("checkpoint_save_fail@at:2").unwrap();
+        assert_eq!(fires_any("checkpoint_save_fail"), None);
+        assert_eq!(fires_any("checkpoint_save_fail"), Some(None));
+        assert_eq!(fires_any("checkpoint_save_fail"), None, "at:N disarms");
+        assert_eq!(armed_count(), 0);
+
+        clear();
+        arm("refresh_stall", Some(1)); // 1 ms: keep the test fast
+        assert!(maybe_stall("refresh_stall"));
+        assert!(!maybe_stall("refresh_stall"));
+    }
+
+    #[cfg(feature = "fault-inject")]
+    fn probabilistic_replay() {
+        clear();
+        let run = || {
+            seed_stream(7);
+            arm_spec("nan_site@p:0.5").unwrap();
+            let pat: Vec<bool> = (0..32).map(|_| fires("nan_site", 0)).collect();
+            clear();
+            pat
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "seeded p: schedule replays identically");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+    }
+
+    #[cfg(feature = "fault-inject")]
+    fn parse_errors() {
+        assert!(arm_spec("nan_site@notanumber").is_err());
+        assert!(arm_spec("@3").is_err());
+        assert!(arm_spec("@every:2").is_err());
+        assert!(arm_spec("x@every:0").is_err());
+        assert!(arm_spec("x@every:abc").is_err());
+        assert!(arm_spec("x@at:0").is_err());
+        assert!(arm_spec("x@p:0").is_err());
+        assert!(arm_spec("x@p:1.5").is_err());
+        assert!(arm_spec("x@p:abc").is_err());
     }
 }

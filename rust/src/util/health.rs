@@ -1,0 +1,340 @@
+//! Runtime health ladder (DESIGN.md §Chaos soak & health ladder).
+//!
+//! A small state machine the trainer threads through every step to turn
+//! *sustained* fault pressure into graceful degradation — and, crucially,
+//! back into full service once the pressure stops:
+//!
+//! ```text
+//!             clean×K                clean×K
+//!   Healthy <-------- Degraded <-------- ExactOnly      Halted
+//!      |                 ^  |               ^  |           ^
+//!      | trip/panic/     |  | trip streak   |  | retry-on- |
+//!      | stall/save-fail |  | >= 3          |  | exact     |
+//!      +-----------------+  +---------------+  | failed or |
+//!                                              | save-fail |
+//!                                              | streak>=3 |
+//!                                              +-----------+
+//! ```
+//!
+//! - **Healthy** — full pipeline: prefetched background builds, sampled
+//!   sites per the allocator.
+//! - **Degraded** — background prefetch is switched off (builds run on
+//!   the synchronous fallback, which is bit-identical by the prefetch
+//!   parity contract), everything else unchanged.
+//! - **ExactOnly** — additionally every site is forced onto the exact
+//!   path (a sliding `force_exact_until` window), trading speed for a
+//!   numerically conservative regime.
+//! - **Halted** — terminal: training stops with a final checkpoint so
+//!   the run can be resumed after the operator intervenes.
+//!
+//! Re-promotion climbs one rung per `promote_after` consecutive clean
+//! steps, so a burst of faults degrades quickly but the run earns its
+//! way back instead of staying degraded forever.  The ladder itself is
+//! pure bookkeeping — every *effect* (prefetch toggle, forced-exact
+//! window, halting) is applied by the trainer/engine, and each one is
+//! bit-identical to the healthy pipeline by existing contracts, so the
+//! ladder can never change a recoverable run's final weights.
+
+/// Ladder rung, ordered from best to worst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Health {
+    Healthy,
+    Degraded,
+    ExactOnly,
+    Halted,
+}
+
+impl Health {
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::ExactOnly => "exact-only",
+            Health::Halted => "halted",
+        }
+    }
+
+    /// One rung better (promotion target); `Halted` is terminal.
+    fn promoted(self) -> Health {
+        match self {
+            Health::Healthy | Health::Degraded => Health::Healthy,
+            Health::ExactOnly => Health::Degraded,
+            Health::Halted => Health::Halted,
+        }
+    }
+}
+
+/// What the trainer observed during one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthEvent {
+    /// The step completed with finite loss/gradients and no incident.
+    CleanStep,
+    /// The NaN watchdog tripped (non-finite loss or gradients).
+    WatchdogTrip,
+    /// A background refresh worker panicked (past its respawn budget).
+    WorkerPanic,
+    /// The stall watchdog abandoned an overdue background build.
+    RefreshStall,
+    /// A checkpoint save failed.
+    CheckpointSaveFailed,
+    /// A checkpoint save succeeded (resets the save-failure streak).
+    CheckpointSaved,
+    /// Even the exact-path retry produced non-finite gradients.
+    ExactRetryFailed,
+}
+
+/// One recorded rung change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transition {
+    pub step: u64,
+    pub from: Health,
+    pub to: Health,
+    pub cause: HealthEvent,
+}
+
+/// The ladder: feed it one or more [`HealthEvent`]s per step.
+#[derive(Debug, Clone)]
+pub struct HealthLadder {
+    state: Health,
+    /// Consecutive clean steps needed to climb one rung.
+    promote_after: u64,
+    clean_streak: u64,
+    trip_streak: u64,
+    save_fail_streak: u64,
+    demotions: u64,
+    repromotions: u64,
+    transitions: Vec<Transition>,
+}
+
+/// Keep the transition log bounded even under pathological schedules;
+/// oscillation is at most one demotion + one promotion per
+/// `promote_after` steps, so real runs never get near this.
+const MAX_TRANSITIONS: usize = 512;
+
+impl HealthLadder {
+    pub fn new(promote_after: u64) -> Self {
+        HealthLadder {
+            state: Health::Healthy,
+            promote_after: promote_after.max(1),
+            clean_streak: 0,
+            trip_streak: 0,
+            save_fail_streak: 0,
+            demotions: 0,
+            repromotions: 0,
+            transitions: Vec::new(),
+        }
+    }
+
+    pub fn state(&self) -> Health {
+        self.state
+    }
+
+    pub fn is_halted(&self) -> bool {
+        self.state == Health::Halted
+    }
+
+    /// True on `Degraded` or worse: the trainer keeps prefetch off.
+    pub fn degraded_or_worse(&self) -> bool {
+        self.state >= Health::Degraded
+    }
+
+    /// True on `ExactOnly` or worse: the trainer forces the exact path.
+    pub fn exact_only_or_worse(&self) -> bool {
+        self.state >= Health::ExactOnly
+    }
+
+    pub fn demotions(&self) -> u64 {
+        self.demotions
+    }
+
+    pub fn repromotions(&self) -> u64 {
+        self.repromotions
+    }
+
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    fn move_to(&mut self, step: u64, to: Health, cause: HealthEvent) {
+        if to == self.state {
+            return;
+        }
+        if to > self.state {
+            self.demotions += 1;
+        } else {
+            self.repromotions += 1;
+        }
+        if self.transitions.len() < MAX_TRANSITIONS {
+            self.transitions.push(Transition {
+                step,
+                from: self.state,
+                to,
+                cause,
+            });
+        }
+        self.state = to;
+    }
+
+    /// Demote to at least `floor` (never promotes).
+    fn demote_to(&mut self, step: u64, floor: Health, cause: HealthEvent) {
+        self.clean_streak = 0;
+        if floor > self.state {
+            self.move_to(step, floor, cause);
+        }
+    }
+
+    /// Feed one observation; `step` is the trainer's global step counter
+    /// (used only to label transitions).
+    pub fn observe(&mut self, step: u64, event: HealthEvent) {
+        if self.state == Health::Halted {
+            return; // terminal
+        }
+        match event {
+            HealthEvent::CleanStep => {
+                self.trip_streak = 0;
+                self.clean_streak += 1;
+                if self.state != Health::Healthy && self.clean_streak >= self.promote_after {
+                    self.clean_streak = 0;
+                    self.move_to(step, self.state.promoted(), event);
+                }
+            }
+            HealthEvent::WatchdogTrip => {
+                self.trip_streak += 1;
+                let floor = if self.trip_streak >= 3 {
+                    Health::ExactOnly
+                } else {
+                    Health::Degraded
+                };
+                self.demote_to(step, floor, event);
+            }
+            HealthEvent::WorkerPanic | HealthEvent::RefreshStall => {
+                self.demote_to(step, Health::Degraded, event);
+            }
+            HealthEvent::CheckpointSaveFailed => {
+                self.save_fail_streak += 1;
+                let floor = if self.save_fail_streak >= 3 {
+                    Health::Halted
+                } else {
+                    Health::Degraded
+                };
+                self.demote_to(step, floor, event);
+            }
+            HealthEvent::CheckpointSaved => {
+                self.save_fail_streak = 0;
+            }
+            HealthEvent::ExactRetryFailed => {
+                self.demote_to(step, Health::Halted, event);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clean_steps(l: &mut HealthLadder, from: u64, n: u64) {
+        for s in 0..n {
+            l.observe(from + s, HealthEvent::CleanStep);
+        }
+    }
+
+    #[test]
+    fn starts_healthy_and_stays_healthy_on_clean_steps() {
+        let mut l = HealthLadder::new(3);
+        clean_steps(&mut l, 0, 100);
+        assert_eq!(l.state(), Health::Healthy);
+        assert!(l.transitions().is_empty());
+        assert_eq!(l.demotions(), 0);
+        assert_eq!(l.repromotions(), 0);
+    }
+
+    #[test]
+    fn single_trip_degrades_then_repromotes_after_k_clean_steps() {
+        let mut l = HealthLadder::new(3);
+        l.observe(5, HealthEvent::WatchdogTrip);
+        assert_eq!(l.state(), Health::Degraded);
+        clean_steps(&mut l, 6, 2);
+        assert_eq!(l.state(), Health::Degraded, "needs K consecutive");
+        l.observe(8, HealthEvent::CleanStep);
+        assert_eq!(l.state(), Health::Healthy);
+        assert_eq!(l.demotions(), 1);
+        assert_eq!(l.repromotions(), 1);
+        assert_eq!(l.transitions().len(), 2);
+        assert_eq!(l.transitions()[1].from, Health::Degraded);
+        assert_eq!(l.transitions()[1].to, Health::Healthy);
+    }
+
+    #[test]
+    fn trip_streak_escalates_to_exact_only_and_climbs_back_one_rung_at_a_time() {
+        let mut l = HealthLadder::new(2);
+        for s in 0..3 {
+            l.observe(s, HealthEvent::WatchdogTrip);
+        }
+        assert_eq!(l.state(), Health::ExactOnly);
+        clean_steps(&mut l, 3, 2);
+        assert_eq!(l.state(), Health::Degraded, "one rung per K clean steps");
+        clean_steps(&mut l, 5, 2);
+        assert_eq!(l.state(), Health::Healthy);
+        assert_eq!(l.repromotions(), 2);
+    }
+
+    #[test]
+    fn unclean_step_resets_the_promotion_streak() {
+        let mut l = HealthLadder::new(3);
+        l.observe(0, HealthEvent::WorkerPanic);
+        assert_eq!(l.state(), Health::Degraded);
+        clean_steps(&mut l, 1, 2);
+        l.observe(3, HealthEvent::RefreshStall); // resets the streak
+        clean_steps(&mut l, 4, 2);
+        assert_eq!(l.state(), Health::Degraded);
+        l.observe(6, HealthEvent::CleanStep);
+        assert_eq!(l.state(), Health::Healthy);
+    }
+
+    #[test]
+    fn exact_retry_failure_halts_terminally() {
+        let mut l = HealthLadder::new(2);
+        l.observe(7, HealthEvent::ExactRetryFailed);
+        assert!(l.is_halted());
+        clean_steps(&mut l, 8, 50);
+        assert!(l.is_halted(), "halted is terminal");
+        assert_eq!(l.transitions().len(), 1);
+    }
+
+    #[test]
+    fn checkpoint_save_failures_halt_on_a_streak_but_reset_on_success() {
+        let mut l = HealthLadder::new(2);
+        l.observe(0, HealthEvent::CheckpointSaveFailed);
+        l.observe(1, HealthEvent::CheckpointSaveFailed);
+        assert_eq!(l.state(), Health::Degraded);
+        l.observe(2, HealthEvent::CheckpointSaved); // streak resets
+        l.observe(3, HealthEvent::CheckpointSaveFailed);
+        l.observe(4, HealthEvent::CheckpointSaveFailed);
+        assert_eq!(l.state(), Health::Degraded, "streak was reset");
+        l.observe(5, HealthEvent::CheckpointSaveFailed);
+        assert!(l.is_halted(), "3 consecutive save failures halt the run");
+    }
+
+    #[test]
+    fn predicates_follow_the_rung_order() {
+        let mut l = HealthLadder::new(2);
+        assert!(!l.degraded_or_worse());
+        l.observe(0, HealthEvent::WatchdogTrip);
+        assert!(l.degraded_or_worse());
+        assert!(!l.exact_only_or_worse());
+        l.observe(1, HealthEvent::WatchdogTrip);
+        l.observe(2, HealthEvent::WatchdogTrip);
+        assert!(l.exact_only_or_worse());
+        assert!(!l.is_halted());
+        assert_eq!(l.state().name(), "exact-only");
+    }
+
+    #[test]
+    fn promote_after_zero_is_clamped_to_one() {
+        let mut l = HealthLadder::new(0);
+        l.observe(0, HealthEvent::WorkerPanic);
+        l.observe(1, HealthEvent::CleanStep);
+        assert_eq!(l.state(), Health::Healthy);
+    }
+}

@@ -7,6 +7,7 @@
 pub mod cli;
 pub mod counters;
 pub mod fault;
+pub mod health;
 pub mod json;
 pub mod parallel;
 pub mod prop;

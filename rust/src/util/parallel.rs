@@ -178,6 +178,44 @@ pub fn spawn_background(task: impl FnOnce() + Send + 'static) {
     });
 }
 
+/// Background tasks that panicked and were re-run by the supervised
+/// spawn path ([`spawn_background_retry`]); process-global like
+/// [`worker_panics`], snapshot a delta per run.
+static WORKER_RESPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// Total supervised background-task re-runs so far in this process.
+pub fn worker_respawns() -> u64 {
+    WORKER_RESPAWNS.load(Ordering::Relaxed)
+}
+
+/// [`spawn_background`] with a bounded respawn budget: if the task
+/// panics, it is re-run up to `retries` more times with a short linear
+/// backoff (10 ms, 20 ms, ...) between attempts.  The task must be
+/// re-runnable (`Fn`, not `FnOnce`) — refresh builds qualify because
+/// each is a pure function of its captured inputs writing into an
+/// idempotent completion slot.  Every panic still counts in
+/// [`worker_panics`]; each re-run counts in [`worker_respawns`].  A task
+/// that exhausts the budget is abandoned, which downstream consumers
+/// already tolerate (the prefetch slot never fills and the synchronous
+/// bit-identical fallback runs instead).
+pub fn spawn_background_retry(retries: u32, task: impl Fn() + Send + Sync + 'static) {
+    ensure_pool(global().threads());
+    rayon::spawn(move || {
+        for attempt in 0..=retries {
+            crate::util::fault::maybe_stall("slow_worker");
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(&task));
+            if caught.is_ok() {
+                return;
+            }
+            WORKER_PANICS.fetch_add(1, Ordering::Relaxed);
+            if attempt < retries {
+                WORKER_RESPAWNS.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(10 * (attempt as u64 + 1)));
+            }
+        }
+    });
+}
+
 /// The process-wide default; resolves (and caches) [`Parallelism::auto`]
 /// on first use if nothing was set.
 pub fn global() -> Parallelism {
@@ -360,5 +398,29 @@ mod tests {
     fn auto_detects_at_least_one_thread() {
         assert!(Parallelism::auto().threads() >= 1);
         assert!(global().threads() >= 1);
+    }
+
+    #[test]
+    fn supervised_respawn_reruns_a_panicking_task() {
+        use std::sync::Arc;
+        let respawns0 = worker_respawns();
+        let attempts = Arc::new(AtomicU64::new(0));
+        let done = Arc::new(AtomicU64::new(0));
+        let (a, d) = (attempts.clone(), done.clone());
+        spawn_background_retry(2, move || {
+            if a.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("first attempt fails (injected by the test)");
+            }
+            d.store(1, Ordering::SeqCst);
+        });
+        for _ in 0..2000 {
+            if done.load(Ordering::SeqCst) == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 1, "task finished after respawn");
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+        assert!(worker_respawns() > respawns0);
     }
 }

@@ -41,6 +41,14 @@ pub fn unix_time_s() -> u64 {
 pub trait Clock {
     /// Seconds elapsed since the clock's origin (first call or creation).
     fn elapsed_s(&mut self) -> u64;
+
+    /// Milliseconds elapsed since the clock's origin.  The default is
+    /// second-granular (good enough for scripted [`FakeClock`] tests);
+    /// [`WallClock`] overrides it with a precise reading for the stall
+    /// watchdog.
+    fn elapsed_ms(&mut self) -> u64 {
+        self.elapsed_s() * 1000
+    }
 }
 
 /// The real thing: lazily starts a [`Stopwatch`] on first read.
@@ -57,6 +65,11 @@ impl Clock for WallClock {
     fn elapsed_s(&mut self) -> u64 {
         let sw = self.0.get_or_insert_with(Stopwatch::start);
         sw.elapsed().as_secs()
+    }
+
+    fn elapsed_ms(&mut self) -> u64 {
+        let sw = self.0.get_or_insert_with(Stopwatch::start);
+        sw.elapsed().as_millis() as u64
     }
 }
 
@@ -198,6 +211,15 @@ mod tests {
         assert_eq!(empty.elapsed_s(), 0);
         let mut w = WallClock::new();
         assert_eq!(w.elapsed_s(), 0);
+    }
+
+    #[test]
+    fn elapsed_ms_defaults_to_second_granularity() {
+        let mut c = FakeClock::new(&[2, 3]);
+        assert_eq!(c.elapsed_ms(), 2000);
+        assert_eq!(c.elapsed_ms(), 3000);
+        let mut w = WallClock::new();
+        assert!(w.elapsed_ms() < 1000, "wall override reads real ms");
     }
 
     #[test]

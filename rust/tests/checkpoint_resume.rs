@@ -13,7 +13,7 @@ use rsc::graph::ReorderKind;
 use rsc::model::exec::GraphModel;
 use rsc::model::ops::{ModelKind, OpNames};
 use rsc::runtime::NativeBackend;
-use rsc::train::checkpoint::{self, Checkpoint, ParamState};
+use rsc::train::checkpoint::{self, Checkpoint, ParamState, SaintState};
 use rsc::train::{full_graph_bufs, train, train_with_clock, TrainConfig};
 use rsc::util::parallel::Parallelism;
 use rsc::util::timer::FakeClock;
@@ -127,8 +127,8 @@ fn resume_is_bit_identical_with_pending_refreshes_in_flight() {
         assert_eq!(saved.checkpoints_written, 2, "{}", model.name());
         let ck = checkpoint::load(&path).unwrap();
         assert!(
-            ck.engine.pending_due.iter().any(|p| p.is_some())
-                || ck.engine.entries.iter().any(|e| e.is_some()),
+            ck.engines[0].pending_due.iter().any(|p| p.is_some())
+                || ck.engines[0].entries.iter().any(|e| e.is_some()),
             "{}: cadence produced no cache state to restore — the test \
              would not exercise the restore path",
             model.name()
@@ -191,15 +191,63 @@ fn wall_clock_cadence_checkpoints_with_injected_clock() {
     assert_eq!(resumed.loss_curve, reference.loss_curve);
 
     // a cadence with no path is a config error up front, not a panic
-    // deep inside the loop; graphsaint refuses the flag entirely
+    // deep inside the loop
     let mut no_path = cfg(ModelKind::Gcn);
     no_path.checkpoint_mins = 1;
     assert!(train(&b, &ds, &no_path).is_err());
-    let mut saint = cfg(ModelKind::Saint);
-    saint.checkpoint_mins = 1;
-    saint.checkpoint_path = Some(path.clone());
-    let err = train(&b, &ds, &saint).unwrap_err();
-    assert!(format!("{err:#}").contains("graphsaint"), "{err:#}");
+    cleanup(&path);
+}
+
+/// GraphSAINT checkpoint/resume: one [`EngineState`] per subgraph plus
+/// the batch cursor stitch back onto the uninterrupted trajectory bit
+/// for bit.  The subgraphs themselves are not serialized — they rebuild
+/// deterministically from the run seed before the snapshot is applied.
+#[test]
+fn saint_resume_is_bit_identical() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    if b.manifest().dataset.saint_caps.is_empty() {
+        eprintln!("skipping: synthesized catalog has no saint ladder");
+        return;
+    }
+    let ds = rsc::data::load_or_generate("tiny", 42).unwrap();
+    let path = tmp("saint_roundtrip");
+    cleanup(&path);
+    let scfg = |ckpt_every: usize, resume: Option<PathBuf>| TrainConfig {
+        saint_subgraphs: 4,
+        saint_batches_per_epoch: 2,
+        checkpoint_every: ckpt_every,
+        checkpoint_path: (ckpt_every > 0).then(|| path.clone()),
+        resume,
+        ..cfg(ModelKind::Saint)
+    };
+
+    let reference = train(&b, &ds, &scfg(0, None)).unwrap();
+    // checkpoints at epochs 5 and 10 of 12; saving is read-only
+    let saved = train(&b, &ds, &scfg(5, None)).unwrap();
+    assert_eq!(saved.checkpoints_written, 2);
+    assert_eq!(
+        saved.weights_fingerprint, reference.weights_fingerprint,
+        "checkpointing changed the SAINT training result"
+    );
+
+    // the surviving file is the epoch-10 snapshot: 4 engine states and
+    // a cursor that accounts for every batch of the first 10 epochs
+    let ck = checkpoint::load(&path).unwrap();
+    assert_eq!(ck.next_epoch, 10);
+    assert_eq!(ck.engines.len(), 4, "one engine state per subgraph");
+    let saint = ck.saint.as_ref().expect("SAINT checkpoint carries cursor state");
+    assert_eq!(saint.batch_cursor, 20, "10 epochs x 2 batches");
+    assert_eq!(saint.uses.iter().sum::<u64>(), 20);
+
+    let resumed = train(&b, &ds, &scfg(0, Some(path.clone()))).unwrap();
+    assert_eq!(resumed.resumed_at, Some(10));
+    assert_eq!(
+        resumed.weights_fingerprint, reference.weights_fingerprint,
+        "resumed SAINT weights diverged"
+    );
+    assert_eq!(resumed.loss_curve, reference.loss_curve);
+    assert_eq!(resumed.val_curve, reference.val_curve);
+    assert_eq!(resumed.test_metric.to_bits(), reference.test_metric.to_bits());
     cleanup(&path);
 }
 
@@ -227,7 +275,8 @@ fn checkpoint_codec_roundtrips_for_random_states() {
             })
             .collect();
         let sites = rng.range(1, 4);
-        let engine = EngineState {
+        let n_engines = rng.range(1, 4);
+        let mk_engine = |rng: &mut Rng| EngineState {
             ks: (0..sites).map(|_| rng.range(0, 50)).collect(),
             grad_norms: (0..sites)
                 .map(|_| rng.chance(0.5).then(|| mk_f32s(rng, 10)))
@@ -249,6 +298,11 @@ fn checkpoint_codec_roundtrips_for_random_states() {
                 .map(|_| rng.chance(0.5).then(|| rng.range(0, 100) as u64))
                 .collect(),
         };
+        let engines: Vec<EngineState> = (0..n_engines).map(|_| mk_engine(rng)).collect();
+        let saint = rng.chance(0.5).then(|| SaintState {
+            batch_cursor: rng.range(0, 1000) as u64,
+            uses: (0..n_engines).map(|_| rng.range(0, 50) as u64).collect(),
+        });
         let loss_len = rng.range(0, 20);
         let ck = Checkpoint {
             model,
@@ -260,7 +314,8 @@ fn checkpoint_codec_roundtrips_for_random_states() {
             rng_spare: rng.chance(0.5).then(|| rng.normal()),
             adam_step: rng.range(0, 1000) as u64,
             params,
-            engine,
+            engines,
+            saint,
             loss_curve: mk_f32s(rng, loss_len),
             val_curve: (0..rng.range(0, 5))
                 .map(|_| (rng.range(0, 100) as u64, rng.normal()))
@@ -274,7 +329,8 @@ fn checkpoint_codec_roundtrips_for_random_states() {
         // (bit-exact by construction) and the NaN-free fields directly
         assert_eq!(back.to_bytes(), bytes, "canonical bytes changed");
         assert_eq!(back.model, ck.model);
-        assert_eq!(back.engine, ck.engine);
+        assert_eq!(back.engines, ck.engines);
+        assert_eq!(back.saint, ck.saint);
         assert_eq!(back.params, ck.params);
         assert_eq!(back.rng_spare.map(f64::to_bits), ck.rng_spare.map(f64::to_bits));
         assert_eq!(back.test_at_best.to_bits(), ck.test_at_best.to_bits());
@@ -397,15 +453,18 @@ fn bad_checkpoints_are_clean_errors() {
     let err = train(&b, &ds, &wrong_order).unwrap_err();
     assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
 
-    // a missing file is a readable error, and graphsaint refuses the
-    // flags up front instead of failing deep in training
+    // a missing file is a readable error
     let mut missing = cfg(ModelKind::Gcn);
     missing.resume = Some(tmp("never_written"));
     assert!(train(&b, &ds, &missing).is_err());
+
+    // a full-batch gcn checkpoint resumed under graphsaint is a model
+    // mismatch (caught before the missing cursor state could confuse)
     let mut saint = cfg(ModelKind::Saint);
     saint.resume = Some(path.clone());
     let err = train(&b, &ds, &saint).unwrap_err();
-    assert!(format!("{err:#}").contains("graphsaint"), "{err:#}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("gcn") && msg.contains("saint"), "{msg}");
 
     cleanup(&path);
 }

@@ -144,7 +144,7 @@ fn sample_cache_invalidate_all() {
     let caps = vec![m.nnz()];
     let mut c = SampleCache::new(1);
     let job = rsc::cache::RefreshJob { k: 3, norms: std::sync::Arc::new(vec![1.0; 10]) };
-    c.schedule(0, 0, job.clone(), None);
+    c.schedule(0, 0, job.clone(), None, None);
     let r = c.resolve(0, 0, job, |j| rsc::cache::Built {
         scores: vec![0.0; 10],
         selection: Selection::build(&m, (0..j.k as u32).collect(), &caps),

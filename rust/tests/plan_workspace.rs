@@ -440,7 +440,7 @@ fn sample_cache_refresh_drops_the_cached_plan() {
         build_ms: 0.0,
         tuned: None,
     };
-    cache.schedule(0, 0, job.clone(), None);
+    cache.schedule(0, 0, job.clone(), None, None);
     let r = cache.resolve(0, 0, job.clone(), build);
     cache.install(0, 5, r.k, r.built.selection);
     let p0 = cache.peek(0).unwrap().spmm_plan(par);

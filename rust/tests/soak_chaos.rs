@@ -1,0 +1,179 @@
+//! Chaos-soak and health-ladder acceptance (DESIGN.md §Chaos soak &
+//! health ladder): the seeded soak harness replays byte-identically,
+//! the scripted-clock stall watchdog abandons overdue background builds
+//! without moving a bit, and a NaN burst walks the ladder down to
+//! Degraded and back to Healthy once the pressure stops.
+//!
+//! Builds only with `--features fault-inject`; the armed-fault registry
+//! is process-global, so every test serializes on one mutex (and CI runs
+//! this target with `--test-threads=1` on top).
+
+#![cfg(feature = "fault-inject")]
+
+use rsc::coordinator::{RscConfig, RscEngine};
+use rsc::data::load_or_generate;
+use rsc::graph::{Csr, ReorderKind};
+use rsc::model::ops::ModelKind;
+use rsc::runtime::NativeBackend;
+use rsc::sampling::Selection;
+use rsc::train::{run_soak, train, SoakConfig, TrainConfig};
+use rsc::util::fault;
+use rsc::util::rng::Rng;
+use rsc::util::timer::FakeClock;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serialize tests sharing the process-global fault registry, and start
+/// each one disarmed.
+fn serial() -> MutexGuard<'static, ()> {
+    let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    fault::clear();
+    g
+}
+
+/// The whole point of the soak: one seed, one report, byte for byte —
+/// rerunning the same soak (or running it at a different `RSC_THREADS`,
+/// which CI's soak-smoke job covers) may not move the report at all.
+#[test]
+fn soak_reports_are_byte_identical_across_reruns() {
+    let _g = serial();
+    let a = run_soak(&SoakConfig::new(3, 7)).unwrap();
+    let b = run_soak(&SoakConfig::new(3, 7)).unwrap();
+    assert_eq!(a.violations, Vec::<String>::new(), "soak invariants violated");
+    assert_eq!(a.to_json(), b.to_json(), "soak report is not deterministic");
+    assert!(a.to_json().contains("\"format\": \"rsc-soak/v1\""));
+    assert!(a.ingestion_probe_ok, "corrupt_triple was not rejected at ingestion");
+
+    // baseline + episodes 1..=3 (refresh_panic, refresh_stall,
+    // slow_worker — all recoverable, all fingerprint-preserving)
+    assert_eq!(a.episodes.len(), 4);
+    let base = &a.episodes[0];
+    assert_eq!(base.schedule, "");
+    assert!(base.fingerprint.is_some());
+    for ep in &a.episodes {
+        assert_eq!(ep.outcome, "completed", "episode {} ({})", ep.index, ep.schedule);
+        assert_eq!(ep.finite, Some(true), "episode {}", ep.index);
+        assert_eq!(ep.loadable, Some(true), "episode {}", ep.index);
+        if ep.index > 0 {
+            assert!(ep.preserving, "episodes 1-3 are the preserving schedules");
+            assert_eq!(
+                ep.matches_baseline,
+                Some(true),
+                "episode {} ({}) diverged from the baseline fingerprint",
+                ep.index,
+                ep.schedule
+            );
+        }
+    }
+
+    // a different seed draws different schedules but still soaks clean
+    let c = run_soak(&SoakConfig::new(3, 8)).unwrap();
+    assert_eq!(c.violations, Vec::<String>::new());
+    assert_ne!(a.to_json(), c.to_json(), "the seed should steer the schedules");
+}
+
+/// An engine on a scripted clock whose consecutive readings are 100 s
+/// apart: every site-0 background build is past the 2 s SLA by the next
+/// step's stall sweep, so the watchdog abandons it (the armed
+/// `refresh_stall` makes those workers genuinely sleep past the SLA
+/// too).  The refresh then lands on the synchronous fallback — and the
+/// selections must be bit-identical to an unstalled engine's.
+#[test]
+fn stall_watchdog_abandons_overdue_builds_bit_identically() {
+    let _g = serial();
+    let run = |stalled: bool| {
+        fault::clear();
+        if stalled {
+            fault::arm_spec("refresh_stall@every:1").unwrap();
+        }
+        let mut rng = Rng::new(3);
+        let m = Csr::random(40, 160, &mut rng);
+        let caps = vec![m.nnz() / 4, m.nnz() / 2, m.nnz()];
+        let exact = Selection::exact(&m, &caps);
+        let cfg = RscConfig { switch_frac: 1.0, stall_ms: 2000, ..Default::default() };
+        let mut e =
+            RscEngine::new(cfg, Arc::new(m), caps, vec![8, 8], 1000).unwrap();
+        if stalled {
+            let readings: Vec<u64> = (0..500).map(|i| i * 100).collect();
+            e = e.with_clock(Box::new(FakeClock::new(&readings)));
+        }
+        e.observe_norms(0, vec![0.5; 40]);
+        e.observe_norms(1, vec![2.0; 40]);
+        let mut trace: Vec<(bool, Vec<u32>, usize, usize)> = Vec::new();
+        for step in 1..40 {
+            for site in (0..2).rev() {
+                if e.norms_wanted(step) {
+                    let norms: Vec<f32> =
+                        (0..40).map(|i| ((i * 7 + step as usize) % 13) as f32).collect();
+                    e.observe_norms(site, norms);
+                }
+                let p = e.plan(site, step, &exact);
+                let s = p.selection();
+                trace.push((p.is_approx(), s.rows.clone(), s.nnz, s.cap));
+            }
+        }
+        fault::clear();
+        (trace, e.prefetch_stats())
+    };
+    let (clean, _) = run(false);
+    let (stalled, pf) = run(true);
+    assert!(pf.stalled >= 1, "no overdue build was ever abandoned: {pf:?}");
+    assert_eq!(stalled, clean, "abandoning stalled builds changed the selections");
+}
+
+/// A burst of three injected NaNs, spread so each lands on a main pass
+/// (never on a watchdog retry): every one trips the watchdog, demotes
+/// the ladder to Degraded, and — once the burst is over — the run earns
+/// its way back to Healthy within `health_promote_after` clean steps.
+#[test]
+fn nan_burst_degrades_then_repromotes_to_healthy() {
+    let _g = serial();
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+    let cfg = TrainConfig {
+        model: ModelKind::Gcn,
+        epochs: 30,
+        seed: 42,
+        rsc: RscConfig {
+            budget_c: 0.3,
+            alloc_every: 3,
+            refresh_every: 4,
+            switch_frac: 1.0,
+            ..Default::default()
+        },
+        eval_every: 5,
+        reorder: ReorderKind::Degree,
+        health_promote_after: 2,
+        ..TrainConfig::new(ModelKind::Gcn)
+    };
+
+    let baseline = train(&b, &ds, &cfg).unwrap();
+    assert_eq!(baseline.health_final, "healthy");
+    assert_eq!(baseline.health_demotions, 0, "fault-free run observed the ladder");
+    assert_eq!(baseline.health_repromotions, 0);
+
+    // nan_site is checked a few times per backward pass; the margins
+    // between the at: counts are wider than two full passes, so each
+    // fault fires on a fresh main pass regardless of the exact per-pass
+    // check count
+    fault::arm_spec("nan_site@at:1,nan_site@at:13,nan_site@at:25").unwrap();
+    let res = train(&b, &ds, &cfg).unwrap();
+    assert_eq!(fault::armed_count(), 0, "the burst never fully fired");
+    assert_eq!(res.watchdog_trips, 3);
+    assert_eq!(res.watchdog_recoveries, 3);
+    assert!(
+        res.health_demotions >= 2,
+        "three spaced trips must dip the ladder repeatedly: {}",
+        res.health_demotions
+    );
+    assert_eq!(
+        res.health_repromotions, res.health_demotions,
+        "every Degraded dip must climb back out"
+    );
+    assert_eq!(
+        res.health_final, "healthy",
+        "the run must end fully re-promoted after the burst stops"
+    );
+    fault::clear();
+}
