@@ -1,0 +1,201 @@
+//! `shard_scale` — sharded training at 10M-node scale (DESIGN.md
+//! §Sharded execution).
+//!
+//! Synthesizes a power-law graph with the *streaming* generator (two
+//! deterministic RNG passes straight into CSR — peak memory is one CSR,
+//! never a triple list), then trains one full-batch GCN epoch end-to-end
+//! at each `--shards` count and appends a run to `BENCH_shard.json`
+//! (schema `rsc-bench-shard/v1`; one row per shard count with nodes,
+//! edges, wall-clock, sampling/alloc time, merge counters and the
+//! weights fingerprint).  Every row of a run must report the *same*
+//! fingerprint — sharding is a pure execution transformation, so the
+//! bench asserts the bit-identity contract at full scale instead of
+//! trusting the unit suite's small graphs.
+//!
+//! Usage:
+//!   cargo bench --bench shard_scale               # 10M nodes (~6 GB RSS)
+//!   cargo bench --bench shard_scale -- --smoke    # 200k nodes, CI-sized
+//!   RSC_BENCH_NODES=1000000 ...                   # override node count
+//!   RSC_BENCH_OUT=path.json ...                   # redirect the JSON
+
+use rsc::bench::harness::{header, BenchScale};
+use rsc::coordinator::{shard, AllocKind, RscConfig};
+use rsc::data::scale_free;
+use rsc::model::ops::ModelKind;
+use rsc::runtime::{Manifest, NativeBackend};
+use rsc::train::{train, TrainConfig};
+use rsc::util::json::{obj, Json};
+use rsc::util::parallel;
+use rsc::util::stats::Table;
+
+struct ShardRow {
+    shards: usize,
+    train_wall_s: f64,
+    sample_ms: f64,
+    alloc_ms: f64,
+    merges: u64,
+    merge_edges: u64,
+    disagreements: u64,
+    fingerprint: u64,
+}
+
+fn append_bench_shard_json(
+    path: &str,
+    nodes: usize,
+    edges: usize,
+    epochs: usize,
+    rows: &[ShardRow],
+) -> anyhow::Result<()> {
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("shards", Json::from(r.shards)),
+                ("nodes", Json::from(nodes)),
+                ("edges", Json::from(edges)),
+                ("epochs", Json::from(epochs)),
+                ("train_wall_s", Json::from(r.train_wall_s)),
+                ("sample_ms", Json::from(r.sample_ms)),
+                ("alloc_ms", Json::from(r.alloc_ms)),
+                ("merges", Json::from(r.merges as usize)),
+                ("merge_edges", Json::from(r.merge_edges as usize)),
+                ("disagreements", Json::from(r.disagreements as usize)),
+                (
+                    "weights_fingerprint",
+                    Json::from(format!("{:016x}", r.fingerprint).as_str()),
+                ),
+            ])
+        })
+        .collect();
+    let run = obj(vec![
+        ("unix_time", Json::from(rsc::util::timer::unix_time_s() as f64)),
+        ("threads", Json::from(parallel::global().threads())),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(j) => j
+                .opt("runs")
+                .and_then(|r| r.as_arr().ok())
+                .map(|r| r.to_vec())
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    runs.push(run);
+    let doc = obj(vec![
+        ("schema", Json::from("rsc-bench-shard/v1")),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write(path, doc.to_string() + "\n")?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scale = BenchScale::from_env(1, if smoke { 2 } else { 1 });
+    let nodes = std::env::var("RSC_BENCH_NODES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(if smoke { 200_000 } else { 10_000_000 });
+    let epochs = scale.epochs.clamp(1, 5);
+    let shard_counts: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    header(
+        "shard_scale",
+        &format!(
+            "sharded GCN training, {nodes} power-law nodes, {epochs} epoch(s), \
+             {} threads{}",
+            parallel::global().threads(),
+            if smoke { " [smoke]" } else { "" }
+        ),
+    );
+
+    // one synthesis shared by every shard count (narrow features: the
+    // bench measures the sharded sparse backward, not accuracy)
+    let ds = scale_free(nodes, 2, 4, 4, 42)?;
+    let backend = NativeBackend::from_manifest(Manifest::synthesize_full_batch(&ds.cfg));
+    println!(
+        "graph: {} nodes, {} directed edges ({} with self-loops)",
+        ds.cfg.v,
+        ds.cfg.e,
+        ds.cfg.m()
+    );
+
+    let mut rows: Vec<ShardRow> = Vec::new();
+    for &s in shard_counts {
+        shard::reset_shard_stats();
+        let cfg = TrainConfig {
+            epochs,
+            seed: 42,
+            rsc: RscConfig {
+                budget_c: 0.1,
+                allocator: AllocKind::Greedy,
+                ..Default::default()
+            },
+            eval_every: epochs.max(1_000_000), // final eval only
+            shards: s,
+            ..TrainConfig::new(ModelKind::Gcn)
+        };
+        let res = train(&backend, &ds, &cfg)?;
+        let (merges, merge_edges, disagreements) = shard::shard_counter_stats();
+        for st in &res.shard_stats {
+            println!(
+                "  shard {} rows [{}, {}): gather nnz {}  retained {}  sampling {:.1}ms",
+                st.shard, st.rows.0, st.rows.1, st.gather_nnz, st.retained, st.sample_ms
+            );
+        }
+        rows.push(ShardRow {
+            shards: s,
+            train_wall_s: res.train_wall_s,
+            sample_ms: res.sample_ms,
+            alloc_ms: res.alloc_ms,
+            merges,
+            merge_edges,
+            disagreements,
+            fingerprint: res.weights_fingerprint,
+        });
+    }
+
+    let mut t = Table::new(vec![
+        "shards",
+        "epoch wall s",
+        "sampling ms",
+        "alloc ms",
+        "merges",
+        "fingerprint",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.shards.to_string(),
+            format!("{:.2}", r.train_wall_s / epochs as f64),
+            format!("{:.1}", r.sample_ms),
+            format!("{:.1}", r.alloc_ms),
+            r.merges.to_string(),
+            format!("{:016x}", r.fingerprint),
+        ]);
+    }
+    t.print();
+
+    // the contract the whole subsystem hangs on: every shard count
+    // produces bit-identical weights (DESIGN.md §Sharded execution)
+    let fp0 = rows[0].fingerprint;
+    for r in &rows[1..] {
+        anyhow::ensure!(
+            r.fingerprint == fp0,
+            "--shards {} fingerprint {:016x} != --shards {} fingerprint {fp0:016x}",
+            r.shards,
+            r.fingerprint,
+            rows[0].shards
+        );
+    }
+    println!("bit-identity: all {} shard counts agree on {fp0:016x}", rows.len());
+
+    // cargo runs bench binaries with cwd = the package root (rust/), so
+    // the default must target the *repo-root* tracked file explicitly
+    let path = std::env::var("RSC_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_shard.json").into());
+    append_bench_shard_json(&path, ds.cfg.v, ds.cfg.e, epochs, &rows)?;
+    println!("appended run to {path}");
+    Ok(())
+}

@@ -7,7 +7,7 @@
 //! bwd-only matches the baseline (Prop 3.1).
 
 use rsc::bench::harness::{header, BenchScale};
-use rsc::coordinator::{AllocKind, RscConfig, RscEngine};
+use rsc::coordinator::{AllocKind, RscConfig, RscEngine, TrainEngine};
 use rsc::data::{load_or_generate, Split};
 use rsc::model::ops::{ModelKind, OpNames};
 use rsc::model::GraphModel;
@@ -60,8 +60,13 @@ fn run_variant(
     let widths: Vec<usize> = (0..ModelKind::Gcn.n_spmm_bwd(&ds.cfg))
         .map(|s| ModelKind::Gcn.spmm_width(&ds.cfg, s))
         .collect();
-    let mut engine =
-        RscEngine::new(rsc, bufs.matrix.clone(), bufs.caps.clone(), widths, epochs as u64)?;
+    let mut engine = TrainEngine::Single(RscEngine::new(
+        rsc,
+        bufs.matrix.clone(),
+        bufs.caps.clone(),
+        widths,
+        epochs as u64,
+    )?);
     let mut tb = TimeBook::new();
     let mut ws = Workspace::new();
     let mut best_val = f64::NEG_INFINITY;

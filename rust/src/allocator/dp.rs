@@ -213,4 +213,43 @@ mod tests {
         let ks = d.allocate(&layers, 0.55);
         assert_eq!(ks, vec![5]);
     }
+
+    /// Extreme width spread (APPNP class-width vs GCNII d_h regimes): DP
+    /// stays feasible and deterministic, and still dominates the
+    /// width-aware greedy — the oracle check the greedy criterion change
+    /// is tested against.
+    #[test]
+    fn dp_dominates_width_aware_greedy_under_nonuniform_widths() {
+        prop::check("dp-width-optimal", 10, |rng| {
+            let v = rng.range(8, 30);
+            let widths = [1usize, 4, 64, 256];
+            let layers: Vec<LayerScores> = (0..rng.range(2, 4))
+                .map(|_| LayerScores {
+                    scores: (0..v).map(|_| rng.f32()).collect(),
+                    nnz: (0..v).map(|_| rng.below(5) as u32 + 1).collect(),
+                    d: widths[rng.below(widths.len())],
+                })
+                .collect();
+            let c = 0.2 + 0.6 * rng.f64();
+            let alpha = 0.1;
+            let g = GreedyAllocator { alpha, min_frac: 0.1 };
+            let d = DpExact { alpha, min_frac: 0.1, ..Default::default() };
+            let kd = d.allocate(&layers, c);
+            assert_eq!(kd, d.allocate(&layers, c), "dp must be deterministic");
+            let (kept_d, flops_d) = evaluate(&layers, &kd);
+            let budget = crate::allocator::total_budget(&layers, c);
+            let k_min = ((d.min_frac * v as f64).round() as usize).max(1);
+            if kd.iter().any(|&k| k > k_min) {
+                assert!(flops_d <= budget, "dp overspent: {flops_d} > {budget}");
+            }
+            let kg = g.allocate(&layers, c);
+            let (kept_g, flops_g) = evaluate(&layers, &kg);
+            if flops_g <= budget && flops_d <= budget {
+                assert!(
+                    kept_d >= kept_g - 1e-9,
+                    "dp {kept_d} < width-aware greedy {kept_g}"
+                );
+            }
+        });
+    }
 }

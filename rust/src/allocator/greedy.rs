@@ -1,9 +1,19 @@
 //! Algorithm 1: greedy descent.  Start with k_l = |V| everywhere; each
 //! move reduces one layer's k by the step α|V|, choosing the layer whose
-//! dropped (normalized) score mass is minimal; stop once total FLOPs fit
-//! the budget.  With the precomputed prefix sums every move costs O(L),
-//! so a full allocation is O(V log V · L) dominated by the argsort — the
-//! "runs super fast" claim of Section 3.2.1 (verified in Table 11's bench).
+//! dropped (normalized) score mass *per unit of gradient width* is
+//! minimal; stop once total FLOPs fit the budget.  Width enters the move
+//! criterion because a step in a d-wide layer frees d× the FLOPs of the
+//! same step in a 1-wide layer (the budget side already prices edges as
+//! nnz·d) — without it, APPNP class-width sites and GCNII d_h-width sites
+//! are cut as if their edges cost the same.  With the precomputed prefix
+//! sums every move costs O(L), so a full allocation is O(V log V · L)
+//! dominated by the argsort — the "runs super fast" claim of Section
+//! 3.2.1 (verified in Table 11's bench).
+//!
+//! The width-aware comparison is done by exact cross-multiplication
+//! (`dropped_a · d_b` vs `dropped_b · d_a`), falling back to a direct
+//! compare when the widths are equal, so uniform-width allocations are
+//! bit-identical to the historical width-blind criterion.
 
 use crate::allocator::{total_budget, Allocator, LayerPrefix, LayerScores};
 
@@ -35,7 +45,9 @@ impl Allocator for GreedyAllocator {
 
         while flops > budget {
             // pick the layer whose next step drops the least score mass
-            let mut best: Option<(usize, f64)> = None;
+            // per unit width: dropped_l / d_l, compared by exact
+            // cross-multiplication so no division noise enters the order
+            let mut best: Option<(usize, f64, usize)> = None;
             for (l, p) in prefixes.iter().enumerate() {
                 if ks[l] <= k_min {
                     continue;
@@ -45,9 +57,16 @@ impl Allocator for GreedyAllocator {
                 // tie-break toward the layer freeing more FLOPs
                 let better = match best {
                     None => true,
-                    Some((bl, bd)) => {
-                        dropped < bd
-                            || (dropped == bd
+                    Some((bl, bd, bdim)) => {
+                        let (lhs, rhs) = if p.d == bdim {
+                            // equal widths: direct compare, bit-identical
+                            // to the width-blind criterion
+                            (dropped, bd)
+                        } else {
+                            (dropped * bdim as f64, bd * p.d as f64)
+                        };
+                        lhs < rhs
+                            || (lhs == rhs
                                 && p.flops(ks[l]) - p.flops(next)
                                     > prefixes[bl].flops(ks[bl])
                                         - prefixes[bl].flops(
@@ -56,9 +75,10 @@ impl Allocator for GreedyAllocator {
                     }
                 };
                 if better {
-                    best = Some((l, dropped));
+                    best = Some((l, dropped, p.d));
                 }
             }
+            let best = best.map(|(l, d, _)| (l, d));
             let Some((l, _)) = best else {
                 break; // every layer at floor; budget unreachable
             };
@@ -175,5 +195,76 @@ mod tests {
         let (kept_lo, _) = evaluate(&layers, &a.allocate(&layers, 0.1));
         let (kept_hi, _) = evaluate(&layers, &a.allocate(&layers, 0.5));
         assert!(kept_hi >= kept_lo);
+    }
+
+    /// Extreme width spread (1 vs 256, the APPNP-class-width vs GCNII-d_h
+    /// regime): feasibility and determinism must survive the width-aware
+    /// move criterion.
+    #[test]
+    fn respects_budget_and_determinism_under_nonuniform_widths() {
+        prop::check("greedy-width-budget", 25, |rng| {
+            let nv = rng.range(10, 120);
+            let widths = [1usize, 4, 64, 256];
+            let layers: Vec<LayerScores> = (0..rng.range(2, 5))
+                .map(|_| LayerScores {
+                    scores: (0..nv).map(|_| rng.f32()).collect(),
+                    nnz: (0..nv).map(|_| rng.below(9) as u32 + 1).collect(),
+                    d: widths[rng.below(widths.len())],
+                })
+                .collect();
+            let c = 0.05 + 0.9 * rng.f64();
+            let alloc = GreedyAllocator::default();
+            let ks = alloc.allocate(&layers, c);
+            assert_eq!(ks, alloc.allocate(&layers, c), "width-aware greedy must be deterministic");
+            let (_, flops) = evaluate(&layers, &ks);
+            let budget = total_budget(&layers, c);
+            let k_min = ((alloc.min_frac * nv as f64).round() as usize).max(1);
+            if ks.iter().any(|&k| k > k_min) {
+                assert!(flops <= budget, "flops {flops} > budget {budget} with ks {ks:?}");
+            }
+        });
+    }
+
+    /// Two layers identical except width: the wide layer's edges cost d×
+    /// more FLOPs per unit of score, so it must be cut at least as hard.
+    #[test]
+    fn width_aware_cuts_wide_layers_harder() {
+        let mk = |d: usize| LayerScores {
+            scores: (0..100).map(|i| 100.0 - i as f32).collect(),
+            nnz: vec![5; 100],
+            d,
+        };
+        let layers = vec![mk(1), mk(32)];
+        let ks = GreedyAllocator::default().allocate(&layers, 0.3);
+        assert!(ks[1] < ks[0], "wide layer should be cut harder: {ks:?}");
+    }
+
+    /// Uniform widths reduce to the historical width-blind criterion:
+    /// scaling every layer's d by the same factor scales budget and cost
+    /// identically, so the allocation cannot move.
+    #[test]
+    fn uniform_width_scaling_is_invariant() {
+        prop::check("greedy-width-invariance", 15, |rng| {
+            let nv = rng.range(10, 80);
+            let nl = rng.range(1, 5);
+            let base: Vec<LayerScores> = (0..nl)
+                .map(|_| LayerScores {
+                    scores: (0..nv).map(|_| rng.f32()).collect(),
+                    nnz: (0..nv).map(|_| rng.below(9) as u32 + 1).collect(),
+                    d: 1,
+                })
+                .collect();
+            let scaled: Vec<LayerScores> = base
+                .iter()
+                .map(|l| LayerScores { d: 16, ..l.clone() })
+                .collect();
+            let c = 0.05 + 0.9 * rng.f64();
+            let a = GreedyAllocator::default();
+            assert_eq!(
+                a.allocate(&base, c),
+                a.allocate(&scaled, c),
+                "uniform width scaling changed the allocation"
+            );
+        });
     }
 }

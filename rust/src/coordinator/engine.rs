@@ -305,10 +305,39 @@ impl RscEngine {
         widths: Vec<usize>,
         total_steps: u64,
     ) -> Result<RscEngine> {
+        let full = Arc::clone(&matrix);
+        RscEngine::new_sharded(cfg, &full, matrix, caps, widths, total_steps)
+    }
+
+    /// A shard-replica engine: *decision* inputs — pair column-norms,
+    /// pair costs nnz_i, degree diagnostics, the initial k_l — come from
+    /// the `full` matrix, while the cache's edge *gathers* run against
+    /// `gather`, a column-sliced shard of it ([`Csr::slice_columns`],
+    /// which keeps `n`).  Replicas fed identical gradient norms therefore
+    /// make identical global decisions (scores, top-k rows, allocations,
+    /// schedules) but each materializes only the edges whose destination
+    /// row falls in its shard — the "replicated decision plane, sharded
+    /// data plane" design of DESIGN.md §Sharded execution.  `new` is the
+    /// degenerate single-shard case (`gather == full`).
+    pub fn new_sharded(
+        cfg: RscConfig,
+        full: &Csr,
+        gather: Arc<Csr>,
+        caps: Vec<usize>,
+        widths: Vec<usize>,
+        total_steps: u64,
+    ) -> Result<RscEngine> {
         cfg.validate()?;
+        ensure!(
+            gather.n == full.n,
+            "shard gather matrix has {} rows, the full matrix {}",
+            gather.n,
+            full.n
+        );
+        let matrix = gather;
         let sites = widths.len();
-        let col_norms = Arc::new(matrix.row_norms());
-        let nnz: Vec<u32> = (0..matrix.n).map(|r| matrix.row_nnz(r) as u32).collect();
+        let col_norms = Arc::new(full.row_norms());
+        let nnz: Vec<u32> = (0..full.n).map(|r| full.row_nnz(r) as u32).collect();
         Ok(RscEngine {
             total_steps,
             widths,
@@ -674,6 +703,13 @@ impl RscEngine {
 
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
+    }
+
+    /// Edge count of the matrix this engine's cache gathers from — the
+    /// full adjacency for an unsharded engine, the column-sliced shard
+    /// for a replica built via [`RscEngine::new_sharded`].
+    pub fn matrix_nnz(&self) -> usize {
+        self.matrix.nnz()
     }
 
     pub fn prefetch_stats(&self) -> PrefetchStats {

@@ -7,5 +7,7 @@
 //! * exact-switchback for the final training stage (Section 3.3.2).
 
 pub mod engine;
+pub mod shard;
 
 pub use engine::{AllocKind, EngineState, Plan, RscConfig, RscEngine};
+pub use shard::{ShardPlan, ShardStat, ShardedEngine, TrainEngine};

@@ -1,0 +1,677 @@
+//! Sharded layer-graph execution: row-range shards with per-shard RSC
+//! state (DESIGN.md §Sharded execution).
+//!
+//! The layer-graph IR makes shard planning a pure graph transformation:
+//! a [`ShardPlan`] cuts the destination rows of every sparse node into S
+//! contiguous, nnz-balanced ranges, and each shard gets a column-sliced
+//! copy of the adjacency ([`Csr::slice_columns`], which keeps `n`) plus
+//! its own [`RscEngine`] — site registry, sample cache, allocator state
+//! and prefetch pipeline included.
+//!
+//! # Replicated decision plane, sharded data plane
+//!
+//! Every replica receives the *same* decision inputs (full-matrix column
+//! norms and pair costs via [`RscEngine::new_sharded`], plus the same
+//! observed gradient norms), runs the same deterministic allocator, and
+//! therefore selects the same top-k rows on the same schedule.  What
+//! differs is the *data plane*: each replica's cache gathers only the
+//! edges whose destination row falls in its shard.  The global edge
+//! budget thus splits across shards exactly proportional to per-shard
+//! nnz — not by an explicit split step, but because each shard
+//! materializes its share of one globally-allocated selection.
+//!
+//! # Reduction points and bit-identity
+//!
+//! Dense nodes (weights, grads, Adam state) stay replicated at the
+//! trainer level; the only cross-shard reduction is the merge of the
+//! per-shard edge gathers into one executable [`Selection`]
+//! ([`Selection::concat_sharded`]).  That merge is index-disjoint — a
+//! destination row belongs to exactly one shard, and within a shard the
+//! gather preserves selection-row order — so the merged SpMM accumulates
+//! every output row in exactly the order the unsharded gather would.
+//! No floating-point cross-shard reduction exists anywhere on the path,
+//! which is why `--shards N` is bit-identical to `--shards 1` rather
+//! than merely close.
+
+use crate::cache::PrefetchStats;
+use crate::coordinator::engine::{Plan, RscConfig, RscEngine};
+use crate::graph::Csr;
+use crate::runtime::autotune;
+use crate::sampling::Selection;
+use crate::util::parallel::{self, Parallelism};
+use crate::util::timer::Stopwatch;
+use crate::Result;
+use anyhow::ensure;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cross-shard selection merges performed (one per site refresh under
+/// `--shards N`).
+static SHARD_MERGES: AtomicU64 = AtomicU64::new(0);
+/// Total retained edges across all merged selections.
+static SHARD_MERGE_EDGES: AtomicU64 = AtomicU64::new(0);
+/// Steps where shard replicas disagreed on exact-vs-approx (defensive:
+/// replicas are deterministic copies, so this should stay 0; a non-zero
+/// count means the decision plane desynchronized and the step was served
+/// exact).
+static SHARD_DISAGREEMENTS: AtomicU64 = AtomicU64::new(0);
+
+/// (merges, merged retained edges, replica disagreements) since process
+/// start or the last [`reset_shard_stats`].
+pub fn shard_counter_stats() -> (u64, u64, u64) {
+    (
+        SHARD_MERGES.load(Ordering::Relaxed),
+        SHARD_MERGE_EDGES.load(Ordering::Relaxed),
+        SHARD_DISAGREEMENTS.load(Ordering::Relaxed),
+    )
+}
+
+pub fn reset_shard_stats() {
+    SHARD_MERGES.store(0, Ordering::Relaxed);
+    SHARD_MERGE_EDGES.store(0, Ordering::Relaxed);
+    SHARD_DISAGREEMENTS.store(0, Ordering::Relaxed);
+}
+
+/// Deterministic nnz-balanced partition of a matrix's destination rows
+/// (its columns: the backward transposed SpMM writes output row `u` from
+/// the edges in column `u`) into S contiguous ranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// `bounds[s]..bounds[s+1]` is shard s's destination-row range;
+    /// `bounds[0] == 0`, `bounds.last() == n`, monotone non-decreasing
+    /// (a range may be empty when shards outnumber the edge mass).
+    pub bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Cut `0..matrix.n` into `shards` contiguous ranges of roughly equal
+    /// per-column nnz — the same greedy prefix cutter the parallel
+    /// runtime's `balance_rows` uses, applied to column counts.  Purely a
+    /// function of the matrix, so every run (and every resume) computes
+    /// the identical plan.
+    pub fn nnz_balanced(matrix: &Csr, shards: usize) -> ShardPlan {
+        let n = matrix.n;
+        let s = shards.max(1);
+        let mut cum = vec![0u64; n + 1];
+        for &c in &matrix.col {
+            cum[c as usize + 1] += 1;
+        }
+        for i in 0..n {
+            cum[i + 1] += cum[i];
+        }
+        let per = cum[n] as f64 / s as f64;
+        let mut bounds = Vec::with_capacity(s + 1);
+        bounds.push(0usize);
+        for c in 0..n {
+            if bounds.len() < s && cum[c + 1] as f64 >= per * bounds.len() as f64 {
+                bounds.push(c + 1);
+            }
+        }
+        while bounds.len() < s {
+            bounds.push(n);
+        }
+        bounds.push(n);
+        ShardPlan { bounds }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Shard s's destination-row range.
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Column keep-mask for shard s (input to [`Csr::slice_columns`]).
+    pub fn keep_mask(&self, s: usize, n: usize) -> Vec<bool> {
+        let r = self.range(s);
+        (0..n).map(|c| r.contains(&c)).collect()
+    }
+}
+
+/// Per-shard observability for the `rsc train` stats line.
+#[derive(Debug, Clone)]
+pub struct ShardStat {
+    pub shard: usize,
+    /// Destination-row range this shard owns.
+    pub rows: (usize, usize),
+    /// Edge count of the shard's column-sliced gather matrix.
+    pub gather_nnz: usize,
+    /// Retained edges across the shard's currently-cached selections —
+    /// the shard's live slice of the global edge budget.
+    pub retained: usize,
+    /// Sample-cache (hits, misses) of the shard's replica.
+    pub cache: (u64, u64),
+    pub prefetch: PrefetchStats,
+    /// Hot-path sampling ms the replica spent.
+    pub sample_ms: f64,
+}
+
+/// S shard replicas plus the merge layer that turns their per-shard
+/// gathers into the one executable selection per site (see module docs).
+pub struct ShardedEngine {
+    /// The run's *original* config (the replicas run a derived config
+    /// with plan caching and autotuning off — their selections are merge
+    /// inputs, never executed; the merge layer owns the executable plan
+    /// and its kernel decision).
+    cfg: RscConfig,
+    plan: ShardPlan,
+    replicas: Vec<RscEngine>,
+    widths: Vec<usize>,
+    caps: Arc<Vec<usize>>,
+    parallelism: Parallelism,
+    /// Per site: the merged selection plus the per-shard selection tags
+    /// it was built from (tags are fresh per build, so a changed tag
+    /// vector is exactly "some shard refreshed").
+    merged: Vec<Option<(Vec<u64>, Selection)>>,
+    /// Wall-time spent concatenating + planning merged selections (hot
+    /// path; folded into the sample_ms the trainer reports).
+    pub merge_ms: f64,
+    /// (site, step, "variant @ d=w") per merged-plan kernel decision.
+    pub tuned_kernels: Vec<(usize, u64, String)>,
+}
+
+impl ShardedEngine {
+    pub fn new(
+        cfg: RscConfig,
+        matrix: Arc<Csr>,
+        caps: Vec<usize>,
+        widths: Vec<usize>,
+        total_steps: u64,
+        shards: usize,
+    ) -> Result<ShardedEngine> {
+        cfg.validate()?;
+        ensure!(shards >= 1, "need at least one shard, got {shards}");
+        ensure!(
+            shards <= matrix.n.max(1),
+            "{shards} shards on a {}-node graph",
+            matrix.n
+        );
+        let par = parallel::global();
+        let plan = ShardPlan::nnz_balanced(&matrix, shards);
+        // replicas never execute their selections: skip their eager plan
+        // builds and autotune races, the merge layer pays those once
+        let replica_cfg = RscConfig { plan_cache: false, autotune: false, ..cfg.clone() };
+        let mut replicas = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let gather = if shards == 1 {
+                Arc::clone(&matrix)
+            } else {
+                let keep = plan.keep_mask(s, matrix.n);
+                Arc::new(matrix.slice_columns_with(&keep, par))
+            };
+            replicas.push(RscEngine::new_sharded(
+                replica_cfg.clone(),
+                &matrix,
+                gather,
+                caps.clone(),
+                widths.clone(),
+                total_steps,
+            )?);
+        }
+        let sites = widths.len();
+        Ok(ShardedEngine {
+            cfg,
+            plan,
+            replicas,
+            widths,
+            caps: Arc::new(caps),
+            parallelism: par,
+            merged: (0..sites).map(|_| None).collect(),
+            merge_ms: 0.0,
+            tuned_kernels: Vec::new(),
+        })
+    }
+
+    pub fn shard_plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The parallelism the merge layer plans with (captured from the
+    /// global setting at construction, like the replicas').
+    pub fn parallelism(&self) -> Parallelism {
+        self.parallelism
+    }
+
+    pub fn replicas(&self) -> &[RscEngine] {
+        &self.replicas
+    }
+
+    pub fn replicas_mut(&mut self) -> &mut [RscEngine] {
+        &mut self.replicas
+    }
+
+    /// Decide the plan for backward-SpMM `site` at `step`: drive every
+    /// replica in fixed shard order, then serve the merged selection iff
+    /// all replicas serve approx.  A disagreement (impossible while the
+    /// replicas stay deterministic copies; counted defensively) serves
+    /// exact — never wrong, only slower.
+    pub fn plan<'a>(&'a mut self, site: usize, step: u64, exact: &'a Selection) -> Plan<'a> {
+        let mut approx = 0usize;
+        for e in self.replicas.iter_mut() {
+            if e.plan(site, step, exact).is_approx() {
+                approx += 1;
+            }
+        }
+        if approx == 0 {
+            return Plan::Exact(exact);
+        }
+        if approx != self.replicas.len() {
+            SHARD_DISAGREEMENTS.fetch_add(1, Ordering::Relaxed);
+            return Plan::Exact(exact);
+        }
+        let mut tags = Vec::with_capacity(self.replicas.len());
+        for e in &self.replicas {
+            match e.peek_selection(site) {
+                Some(s) => tags.push(s.tag),
+                None => {
+                    SHARD_DISAGREEMENTS.fetch_add(1, Ordering::Relaxed);
+                    return Plan::Exact(exact);
+                }
+            }
+        }
+        let stale = !matches!(&self.merged[site], Some((t, _)) if *t == tags);
+        if stale {
+            let sw = Stopwatch::start();
+            let sel = {
+                let mut parts = Vec::with_capacity(self.replicas.len());
+                for e in &self.replicas {
+                    // the None arm was ruled out while collecting tags
+                    if let Some(s) = e.peek_selection(site) {
+                        parts.push(s);
+                    }
+                }
+                Selection::concat_sharded(&parts, &self.caps)
+            };
+            SHARD_MERGES.fetch_add(1, Ordering::Relaxed);
+            SHARD_MERGE_EDGES.fetch_add(sel.nnz as u64, Ordering::Relaxed);
+            if self.cfg.plan_cache {
+                let plan = sel.spmm_plan_aligned(self.parallelism, &self.plan.bounds);
+                let w = self.widths[site];
+                let choice = if self.cfg.autotune {
+                    autotune::tune_plan(&plan, sel.src(), sel.w(), w)
+                } else {
+                    plan.kernel_for(w)
+                };
+                self.tuned_kernels
+                    .push((site, step, format!("{} @ d={w}", choice.describe())));
+            }
+            self.merge_ms += sw.ms();
+            self.merged[site] = Some((tags, sel));
+        }
+        match &self.merged[site] {
+            Some((_, sel)) => Plan::Approx(sel),
+            None => Plan::Exact(exact),
+        }
+    }
+
+    /// Per-shard observability rows for the trainer's stats line.
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(s, e)| {
+                let r = self.plan.range(s);
+                let retained = (0..self.widths.len())
+                    .filter_map(|site| e.peek_selection(site))
+                    .map(|sel| sel.nnz)
+                    .sum();
+                ShardStat {
+                    shard: s,
+                    rows: (r.start, r.end),
+                    gather_nnz: e.matrix_nnz(),
+                    retained,
+                    cache: e.cache_stats(),
+                    prefetch: e.prefetch_stats(),
+                    sample_ms: e.sample_ms,
+                }
+            })
+            .collect()
+    }
+}
+
+/// The engine the trainer drives: one [`RscEngine`] (`--shards 1`, and
+/// every SAINT subgraph engine) or a [`ShardedEngine`].  Decision
+/// queries (`norms_wanted`, `in_exact_phase`, `ks`, histories) answer
+/// from shard 0 — the replicas are deterministic copies, so shard 0 *is*
+/// the global decision state; cost tallies (`alloc_ms`, `sample_ms`,
+/// cache/prefetch stats) sum over shards, because replicated work is
+/// real work.
+pub enum TrainEngine {
+    Single(RscEngine),
+    Sharded(ShardedEngine),
+}
+
+impl TrainEngine {
+    /// Shard count (1 for `Single`).
+    pub fn shards(&self) -> usize {
+        match self {
+            TrainEngine::Single(_) => 1,
+            TrainEngine::Sharded(se) => se.replicas.len(),
+        }
+    }
+
+    /// The run's RSC config (the original, not a replica's derived one).
+    pub fn cfg(&self) -> &RscConfig {
+        match self {
+            TrainEngine::Single(e) => &e.cfg,
+            TrainEngine::Sharded(se) => &se.cfg,
+        }
+    }
+
+    /// The per-shard engines, in shard order (a one-element slice for
+    /// `Single`) — the checkpoint capture/restore surface.
+    pub fn engines(&self) -> &[RscEngine] {
+        match self {
+            TrainEngine::Single(e) => std::slice::from_ref(e),
+            TrainEngine::Sharded(se) => &se.replicas,
+        }
+    }
+
+    pub fn engines_mut(&mut self) -> &mut [RscEngine] {
+        match self {
+            TrainEngine::Single(e) => std::slice::from_mut(e),
+            TrainEngine::Sharded(se) => &mut se.replicas,
+        }
+    }
+
+    fn decider(&self) -> &RscEngine {
+        match self {
+            TrainEngine::Single(e) => e,
+            // constructor guarantees >= 1 shard
+            TrainEngine::Sharded(se) => &se.replicas[0],
+        }
+    }
+
+    pub fn norms_wanted(&self, step: u64) -> bool {
+        self.decider().norms_wanted(step)
+    }
+
+    pub fn parallelism(&self) -> Parallelism {
+        self.decider().parallelism()
+    }
+
+    pub fn in_exact_phase(&self, step: u64) -> bool {
+        self.decider().in_exact_phase(step)
+    }
+
+    pub fn ks(&self) -> &[usize] {
+        self.decider().ks()
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.decider().n_sites()
+    }
+
+    pub fn alloc_history(&self) -> &[(u64, Vec<usize>)] {
+        &self.decider().alloc_history
+    }
+
+    pub fn picked_degrees(&self) -> &[(usize, u64, f64)] {
+        &self.decider().picked_degrees
+    }
+
+    pub fn overlap_samples(&self) -> &[(usize, u64, f64)] {
+        self.decider().overlap.samples.as_slice()
+    }
+
+    pub fn approx_steps(&self) -> u64 {
+        self.decider().approx_steps
+    }
+
+    pub fn exact_steps(&self) -> u64 {
+        self.decider().exact_steps
+    }
+
+    /// Cumulative allocator wall-time, summed over shards (each replica
+    /// runs the allocator; replicated decisions cost replicated time).
+    pub fn alloc_ms(&self) -> f64 {
+        self.engines().iter().map(|e| e.alloc_ms).sum()
+    }
+
+    /// Hot-path sampling wall-time: per-shard gathers plus the merge.
+    pub fn sample_ms(&self) -> f64 {
+        let base: f64 = self.engines().iter().map(|e| e.sample_ms).sum();
+        match self {
+            TrainEngine::Single(_) => base,
+            TrainEngine::Sharded(se) => base + se.merge_ms,
+        }
+    }
+
+    pub fn prefetch_build_ms(&self) -> f64 {
+        self.engines().iter().map(|e| e.prefetch_build_ms).sum()
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let mut hits = 0;
+        let mut misses = 0;
+        for e in self.engines() {
+            let (h, m) = e.cache_stats();
+            hits += h;
+            misses += m;
+        }
+        (hits, misses)
+    }
+
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        let mut acc = PrefetchStats::default();
+        for e in self.engines() {
+            acc.absorb(&e.prefetch_stats());
+        }
+        acc
+    }
+
+    /// Kernel decisions recorded for executable plans: the single
+    /// engine's refresh decisions, or the merge layer's (replica
+    /// selections are never executed, so their engines record none).
+    pub fn tuned_kernels(&self) -> &[(usize, u64, String)] {
+        match self {
+            TrainEngine::Single(e) => &e.tuned_kernels,
+            TrainEngine::Sharded(se) => &se.tuned_kernels,
+        }
+    }
+
+    /// Per-shard stats rows (empty for `Single` — there is no shard
+    /// breakdown to report).
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        match self {
+            TrainEngine::Single(_) => Vec::new(),
+            TrainEngine::Sharded(se) => se.shard_stats(),
+        }
+    }
+
+    pub fn observe_norms(&mut self, site: usize, norms: Vec<f32>) {
+        match self {
+            TrainEngine::Single(e) => e.observe_norms(site, norms),
+            TrainEngine::Sharded(se) => {
+                // every replica sees the identical observation — the
+                // replicated decision plane's one input from the trainer
+                for e in se.replicas.iter_mut() {
+                    e.observe_norms(site, norms.clone());
+                }
+            }
+        }
+    }
+
+    pub fn plan<'a>(&'a mut self, site: usize, step: u64, exact: &'a Selection) -> Plan<'a> {
+        match self {
+            TrainEngine::Single(e) => e.plan(site, step, exact),
+            TrainEngine::Sharded(se) => se.plan(site, step, exact),
+        }
+    }
+
+    pub fn set_prefetch(&mut self, on: bool) {
+        for e in self.engines_mut() {
+            e.set_prefetch(on);
+        }
+    }
+
+    pub fn force_exact_until(&mut self, until: u64) {
+        for e in self.engines_mut() {
+            e.force_exact_until(until);
+        }
+    }
+
+    pub fn quarantine(&mut self) {
+        for e in self.engines_mut() {
+            e.quarantine();
+        }
+        if let TrainEngine::Sharded(se) = self {
+            // merged selections are caches over replica state; drop them
+            // with the state they mirror
+            for m in se.merged.iter_mut() {
+                *m = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, nnz: usize) -> (Arc<Csr>, Vec<usize>, Selection) {
+        let mut rng = Rng::new(11);
+        let m = Csr::random(n, nnz, &mut rng);
+        let caps = vec![m.nnz() / 4, m.nnz() / 2, m.nnz()];
+        let exact = Selection::exact(&m, &caps);
+        (Arc::new(m), caps, exact)
+    }
+
+    #[test]
+    fn shard_plan_covers_and_balances() {
+        let (m, _caps, _exact) = setup(60, 600);
+        for s in [1usize, 2, 3, 4, 7] {
+            let p = ShardPlan::nnz_balanced(&m, s);
+            assert_eq!(p.shards(), s);
+            assert_eq!(p.bounds[0], 0);
+            assert_eq!(*p.bounds.last().unwrap(), m.n);
+            assert!(p.bounds.windows(2).all(|w| w[0] <= w[1]));
+            // per-shard column nnz within 2x of even for this dense-ish
+            // random graph (the greedy cutter can't split a column)
+            if s > 1 {
+                let mut col_nnz = vec![0usize; m.n];
+                for &c in &m.col {
+                    col_nnz[c as usize] += 1;
+                }
+                let per = m.nnz() as f64 / s as f64;
+                for sh in 0..s {
+                    let got: usize = col_nnz[p.range(sh)].iter().sum();
+                    assert!(
+                        (got as f64) < 2.5 * per + 32.0,
+                        "shard {sh} holds {got} of {} edges over {s} shards",
+                        m.nnz()
+                    );
+                }
+            }
+            // deterministic
+            assert_eq!(p, ShardPlan::nnz_balanced(&m, s));
+        }
+    }
+
+    #[test]
+    fn sharded_serves_selections_identical_to_single() {
+        // the tentpole contract, at engine level: for every shard count
+        // the merged selection must carry the same rows/nnz/cap and the
+        // same per-destination-row accumulation order as the unsharded
+        // engine's selection
+        let (m, caps, exact) = setup(40, 320);
+        let norms_at = |step: u64, site: usize| -> Vec<f32> {
+            (0..40)
+                .map(|i| ((i * 7 + step as usize * 3 + site) % 13) as f32)
+                .collect()
+        };
+        let drive = |eng: &mut TrainEngine| {
+            let mut trace: Vec<(bool, Vec<u32>, usize, usize, Vec<Vec<(i32, u32)>>)> =
+                Vec::new();
+            for step in 0..30 {
+                for site in (0..2usize).rev() {
+                    if eng.norms_wanted(step) {
+                        eng.observe_norms(site, norms_at(step, site));
+                    }
+                    let p = eng.plan(site, step, &exact);
+                    let s = p.selection();
+                    // per-destination-row (src, w-bits) sequences: the
+                    // SpMM accumulation order, i.e. the actual bits
+                    let plan = s.spmm_plan(Parallelism::sequential());
+                    let grouped: Vec<Vec<(i32, u32)>> = (0..s.vout)
+                        .map(|t| {
+                            plan.row_edges(t)
+                                .iter()
+                                .map(|&e| {
+                                    (s.src()[e as usize], s.w()[e as usize].to_bits())
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    trace.push((p.is_approx(), s.rows.clone(), s.nnz, s.cap, grouped));
+                }
+            }
+            trace
+        };
+        let cfg = RscConfig { switch_frac: 0.8, ..Default::default() };
+        let mut single = TrainEngine::Single(
+            RscEngine::new(cfg.clone(), Arc::clone(&m), caps.clone(), vec![8, 8], 30)
+                .unwrap(),
+        );
+        let reference = drive(&mut single);
+        assert!(reference.iter().any(|(a, ..)| *a), "reference never went approx");
+        for shards in [1usize, 2, 3, 4] {
+            let mut sharded = TrainEngine::Sharded(
+                ShardedEngine::new(
+                    cfg.clone(),
+                    Arc::clone(&m),
+                    caps.clone(),
+                    vec![8, 8],
+                    30,
+                    shards,
+                )
+                .unwrap(),
+            );
+            assert_eq!(sharded.shards(), shards);
+            let got = drive(&mut sharded);
+            assert_eq!(got, reference, "shards={shards} diverged from single");
+            let stats = sharded.shard_stats();
+            assert_eq!(stats.len(), shards);
+            let retained: usize = stats.iter().map(|s| s.retained).sum();
+            assert!(retained > 0, "no shard retained any edges");
+        }
+        let (merges, edges, disagreements) = shard_counter_stats();
+        assert!(merges > 0);
+        assert!(edges > 0);
+        assert_eq!(disagreements, 0, "deterministic replicas must agree");
+    }
+
+    #[test]
+    fn quarantine_clears_merged_selections() {
+        let (m, caps, exact) = setup(30, 240);
+        let cfg = RscConfig { switch_frac: 1.0, ..Default::default() };
+        let mut eng = TrainEngine::Sharded(
+            ShardedEngine::new(cfg, Arc::clone(&m), caps, vec![8], 1000, 2).unwrap(),
+        );
+        eng.observe_norms(0, vec![1.0; 30]);
+        let _ = eng.plan(0, 0, &exact);
+        let approx1 = eng.plan(0, 1, &exact).is_approx();
+        let approx2 = eng.plan(0, 2, &exact).is_approx();
+        assert!(approx1 || approx2, "sharded engine never went approx");
+        eng.quarantine();
+        if let TrainEngine::Sharded(se) = &eng {
+            assert!(se.merged.iter().all(|m| m.is_none()));
+        }
+        assert!(!eng.plan(0, 3, &exact).is_approx(), "quarantine must serve exact");
+    }
+
+    #[test]
+    fn sharded_rejects_bad_shapes() {
+        let (m, caps, _exact) = setup(10, 40);
+        let cfg = RscConfig::default();
+        assert!(ShardedEngine::new(cfg.clone(), Arc::clone(&m), caps.clone(), vec![8], 10, 0)
+            .is_err());
+        assert!(
+            ShardedEngine::new(cfg, Arc::clone(&m), caps, vec![8], 10, 11).is_err(),
+            "more shards than nodes must be rejected"
+        );
+    }
+}

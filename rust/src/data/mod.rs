@@ -7,4 +7,4 @@ pub mod synth;
 
 pub use dataset::{Dataset, DatasetCfg, Labels, Split};
 pub use saint::{SaintSampler, Subgraph};
-pub use synth::{dataset_cfg, load_or_generate, ALL_DATASETS};
+pub use synth::{dataset_cfg, load_or_generate, scale_free, ALL_DATASETS};

@@ -12,9 +12,9 @@
 //! DATASETS` — the runtime cross-checks against the artifact manifest.
 
 use crate::data::dataset::{Dataset, DatasetCfg, Labels, Split};
-use crate::graph::{generate_sbm, SbmConfig};
+use crate::graph::{generate_power_law, generate_sbm, PowerLawConfig, SbmConfig};
 use crate::util::rng::Rng;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 pub const ALL_DATASETS: [&str; 5] =
     ["tiny", "reddit-sim", "yelp-sim", "proteins-sim", "products-sim"];
@@ -159,6 +159,87 @@ pub fn load_or_generate(name: &str, seed: u64) -> Result<Dataset> {
     Ok(ds)
 }
 
+/// Synthetic power-law dataset at arbitrary scale — the `shard_scale`
+/// bench's 10M-node input (DESIGN.md §Sharded execution).  Unlike the
+/// fixed-size table above, every dimension is a parameter, and the
+/// graph comes from the *streaming* generator
+/// ([`crate::graph::generate_power_law`]): two deterministic RNG passes
+/// straight into CSR, so peak memory is the final footprint, never a
+/// second triple-list copy.  Every scale-sensitive product is
+/// checked-multiplied so a mis-typed `--nodes` fails with a clear error
+/// instead of wrapping at >= 10M nodes.
+///
+/// Features/labels are deliberately narrow (caller picks `d`): the
+/// bench measures sharded sparse backward throughput, not accuracy.
+pub fn scale_free(v: usize, avg_degree: usize, d: usize, n_class: usize, seed: u64) -> Result<Dataset> {
+    ensure!(v >= 16, "scale-free dataset needs >= 16 nodes, got {v}");
+    ensure!(avg_degree >= 1, "avg_degree must be >= 1");
+    ensure!(d >= 1 && n_class >= 2, "need d >= 1 and n_class >= 2");
+    let e_draws = v
+        .checked_mul(avg_degree)
+        .and_then(|x| x.checked_mul(2))
+        .ok_or_else(|| anyhow!("v={v} x avg_degree={avg_degree} overflows the edge count"))?;
+    let feat_len = v
+        .checked_mul(d)
+        .ok_or_else(|| anyhow!("v={v} x d={d} overflows the feature buffer"))?;
+
+    let mut rng = Rng::new(seed ^ 0x5CA1E);
+    let g = generate_power_law(&PowerLawConfig {
+        v,
+        e_directed: e_draws,
+        skew: 0.8,
+        seed: rng.next_u64(),
+    })?;
+    let e = g.adj.nnz(); // dedup makes this <= e_draws; cfg records the real count
+
+    let mut features = vec![0f32; feat_len];
+    rng.fill_normal_f32(&mut features, 0.0, 1.0);
+    let labels = Labels::MultiClass((0..v).map(|_| rng.below(n_class) as i32).collect());
+    // fixed 1/8 train, 1/8 val stride split: O(1) memory beyond the
+    // vector itself (a shuffled permutation would add 8 bytes/node)
+    let split = (0..v)
+        .map(|i| match i % 8 {
+            0 => Split::Train,
+            1 => Split::Val,
+            _ => Split::Test,
+        })
+        .collect();
+
+    let ds = Dataset {
+        cfg: DatasetCfg {
+            name: format!("scale-free-{v}"),
+            v,
+            e,
+            d_in: d,
+            d_h: d,
+            n_class,
+            multilabel: false,
+            layers: 3,
+            gcnii_layers: 4,
+            gcnii_alpha: 0.1,
+            gcnii_lambda: 0.5,
+            appnp_layers: 8,
+            appnp_alpha: 0.1,
+            gin_eps: 0.0,
+            saint_v: 0,
+            saint_m: 0,
+            clusters: n_class,
+            p_intra: 0.0,
+            skew: 0.8,
+            train_frac: 0.125,
+            feature_strength: 0.0,
+            label_noise: 1.0,
+        },
+        adj: g.adj,
+        features,
+        labels,
+        split,
+        cluster: vec![0usize; v],
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,6 +303,48 @@ mod tests {
             assert!(c.v > 0);
         }
         assert!(dataset_cfg("nope").is_err());
+    }
+
+    #[test]
+    fn scale_free_generates_and_validates() {
+        let ds = scale_free(50_000, 4, 8, 4, 11).unwrap();
+        assert_eq!(ds.cfg.v, 50_000);
+        assert_eq!(ds.adj.nnz(), ds.cfg.e);
+        assert!(ds.cfg.e > 0 && ds.cfg.e <= 50_000 * 8);
+        assert!(ds.count(Split::Train) > 0 && ds.count(Split::Val) > 0);
+        let again = scale_free(50_000, 4, 8, 4, 11).unwrap();
+        assert_eq!(ds.adj, again.adj);
+        assert_eq!(ds.features, again.features);
+        // overflow guards fire as clean errors, not wraps
+        assert!(scale_free(usize::MAX, 2, 8, 4, 0).is_err());
+        assert!(scale_free(1 << 40, usize::MAX / 2, 8, 4, 0).is_err());
+    }
+
+    /// The satellite's scale witness: a 10M-node power-law graph builds
+    /// with peak memory pinned to the closed-form streaming bound —
+    /// rowptr + one col array + values — i.e. the triples are never
+    /// materialized alongside the CSR (that alone would add 12 bytes x
+    /// nnz, blowing the asserted ceiling).
+    #[test]
+    fn ten_million_node_graph_builds_with_bounded_peak_memory() {
+        let cfg = crate::graph::PowerLawConfig {
+            v: 10_000_000,
+            e_directed: 2_000_000,
+            skew: 0.8,
+            seed: 42,
+        };
+        let g = generate_power_law(&cfg).unwrap();
+        assert_eq!(g.adj.n, 10_000_000);
+        assert!(g.adj.nnz() > 1_000_000, "nnz {} lost too much to dedup", g.adj.nnz());
+        let bound = cfg.peak_bound_bytes().unwrap();
+        assert!(
+            g.peak_alloc_bytes <= bound,
+            "peak {} exceeds the streaming bound {bound}",
+            g.peak_alloc_bytes
+        );
+        // sanity: the bound itself is ~one CSR, not a multiple of it
+        let csr_bytes = (g.adj.n + 1) * std::mem::size_of::<usize>() + g.adj.nnz() * 8;
+        assert!(bound < csr_bytes + cfg.e_directed * 8);
     }
 
     #[test]

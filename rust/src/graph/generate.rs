@@ -13,6 +13,7 @@
 
 use crate::graph::csr::Csr;
 use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
 use std::collections::HashSet;
 
 #[derive(Debug, Clone)]
@@ -123,6 +124,160 @@ pub fn generate_sbm(cfg: &SbmConfig) -> SbmGraph {
     SbmGraph { adj, cluster }
 }
 
+// ---------------------------------------------------------------------
+// Streaming power-law generator (shard_scale's 10M-node graph)
+// ---------------------------------------------------------------------
+
+/// Config for [`generate_power_law`]: a Chung-Lu-style power-law graph
+/// built *streaming* — two deterministic RNG passes straight into CSR,
+/// never materializing a triple list.  That is what lets the
+/// `shard_scale` bench synthesize a 10M-node graph whose peak memory is
+/// the final CSR footprint plus the rowptr array, not 2-3x it.
+#[derive(Debug, Clone)]
+pub struct PowerLawConfig {
+    pub v: usize,
+    /// Directed edge *draws* (must be even; each undirected draw expands
+    /// to two directed edges).  Self-loop draws are skipped and per-row
+    /// duplicates are merged, so the built graph has `nnz() <=
+    /// e_directed` — callers that need the exact count read it back from
+    /// the result (unlike the SBM, nothing downstream here bakes the
+    /// edge count into AOT shapes).
+    pub e_directed: usize,
+    /// Degree skew in `[0, 0.95]`: node `k` is drawn with Zipf-ish
+    /// weight `(k+1)^-skew` (0 = uniform), matching [`SbmConfig::skew`]
+    /// semantics.  Sampled by inverse CDF — `floor(v * x^(1/(1-skew)))`
+    /// for uniform `x` — so no per-node weight table is ever allocated.
+    pub skew: f64,
+    pub seed: u64,
+}
+
+/// Output of [`generate_power_law`]: symmetric unweighted adjacency (no
+/// self-loops, strictly sorted rows) plus the builder's self-accounted
+/// peak allocation, which tests pin against the closed-form bound.
+pub struct PowerLawGraph {
+    pub adj: Csr,
+    /// Peak bytes the builder held at once: `(v+1)` usize rowptr slots,
+    /// `e_directed` u32 column slots and the deduped f32 values.  The
+    /// streaming design makes this a closed form — see
+    /// [`PowerLawConfig::peak_bound_bytes`].
+    pub peak_alloc_bytes: usize,
+}
+
+impl PowerLawConfig {
+    /// The documented ceiling on [`PowerLawGraph::peak_alloc_bytes`]:
+    /// rowptr + column ids + values, each allocated exactly once.
+    pub fn peak_bound_bytes(&self) -> Option<usize> {
+        let ptr = self.v.checked_add(1)?.checked_mul(std::mem::size_of::<usize>())?;
+        // col (u32) at e_directed entries + val (f32) at <= e_directed
+        ptr.checked_add(self.e_directed.checked_mul(8)?)
+    }
+}
+
+/// Power-law endpoint via inverse CDF: uniform `x` in `[0,1)` maps to
+/// `floor(v * x^a)` with `a = 1/(1-skew)`, giving node `k` probability
+/// density proportional to `(k+1)^-skew`.
+#[inline]
+fn power_law_endpoint(x: f64, vf: f64, a: f64, v: usize) -> u32 {
+    ((vf * x.powf(a)) as usize).min(v - 1) as u32
+}
+
+pub fn generate_power_law(cfg: &PowerLawConfig) -> Result<PowerLawGraph> {
+    ensure!(cfg.v >= 2, "power-law graph needs >= 2 nodes, got {}", cfg.v);
+    ensure!(
+        cfg.v <= u32::MAX as usize,
+        "node ids are stored as u32: v={} exceeds {}",
+        cfg.v,
+        u32::MAX
+    );
+    ensure!(cfg.e_directed % 2 == 0, "e_directed must be even (undirected pairs x 2)");
+    ensure!(
+        (0.0..=0.95).contains(&cfg.skew),
+        "skew must be in [0, 0.95], got {} (1.0 makes the inverse-CDF exponent blow up)",
+        cfg.skew
+    );
+    let bound = cfg
+        .peak_bound_bytes()
+        .ok_or_else(|| anyhow::anyhow!("v={} e={} overflows the byte budget", cfg.v, cfg.e_directed))?;
+
+    let pairs = cfg.e_directed / 2;
+    let a = 1.0 / (1.0 - cfg.skew);
+    let vf = cfg.v as f64;
+
+    // Pass 1: count degrees into rowptr[1..] (self-loop draws are
+    // skipped deterministically, so pass 2 replays bit-identically).
+    let mut rowptr = vec![0usize; cfg.v + 1];
+    let mut rng = Rng::new(cfg.seed);
+    for _ in 0..pairs {
+        let s = power_law_endpoint(rng.f64(), vf, a, cfg.v);
+        let d = power_law_endpoint(rng.f64(), vf, a, cfg.v);
+        if s == d {
+            continue;
+        }
+        rowptr[s as usize + 1] += 1;
+        rowptr[d as usize + 1] += 1;
+    }
+    for i in 0..cfg.v {
+        rowptr[i + 1] += rowptr[i];
+    }
+    let total = rowptr[cfg.v];
+
+    // Pass 2: replay the identical draw sequence, scattering column ids
+    // counting-sort style with rowptr[r] as row r's write cursor.
+    let mut col = vec![0u32; total];
+    let mut rng = Rng::new(cfg.seed);
+    for _ in 0..pairs {
+        let s = power_law_endpoint(rng.f64(), vf, a, cfg.v);
+        let d = power_law_endpoint(rng.f64(), vf, a, cfg.v);
+        if s == d {
+            continue;
+        }
+        col[rowptr[s as usize]] = d;
+        rowptr[s as usize] += 1;
+        col[rowptr[d as usize]] = s;
+        rowptr[d as usize] += 1;
+    }
+    // Every cursor advanced to its row's end (pass 1 counted the same
+    // draws), so rowptr[r] == old rowptr[r+1]; shift right to restore.
+    for i in (1..=cfg.v).rev() {
+        rowptr[i] = rowptr[i - 1];
+    }
+    rowptr[0] = 0;
+
+    // Sort each row and merge duplicate pairs in place (the compaction
+    // cursor w never passes the read cursor, since dedup only shrinks).
+    // A duplicate undirected draw put copies in BOTH endpoint rows, so
+    // symmetric dedup keeps the adjacency symmetric.
+    let mut w = 0usize;
+    let mut s = 0usize;
+    for r in 0..cfg.v {
+        let e = rowptr[r + 1];
+        col[s..e].sort_unstable();
+        let ws = w;
+        let mut last: Option<u32> = None;
+        for i in s..e {
+            let c = col[i];
+            if last != Some(c) {
+                col[w] = c;
+                w += 1;
+                last = Some(c);
+            }
+        }
+        rowptr[r] = ws;
+        s = e;
+    }
+    rowptr[cfg.v] = w;
+    col.truncate(w);
+    let val = vec![1.0f32; w];
+
+    let peak_alloc_bytes =
+        rowptr.capacity() * std::mem::size_of::<usize>() + col.capacity() * 4 + val.capacity() * 4;
+    debug_assert!(peak_alloc_bytes <= bound, "peak {peak_alloc_bytes} > bound {bound}");
+    col.shrink_to_fit();
+    let adj = Csr { n: cfg.v, rowptr, col, val };
+    debug_assert!(adj.validate());
+    Ok(PowerLawGraph { adj, peak_alloc_bytes })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +344,63 @@ mod tests {
         c2.seed = 43;
         let c = generate_sbm(&c2);
         assert_ne!(a.adj, c.adj);
+    }
+
+    #[test]
+    fn power_law_is_symmetric_skewed_and_deterministic() {
+        let cfg = PowerLawConfig { v: 5000, e_directed: 40_000, skew: 0.8, seed: 7 };
+        let g = generate_power_law(&cfg).unwrap();
+        assert!(g.adj.validate());
+        assert_eq!(g.adj.n, 5000);
+        assert!(g.adj.nnz() > 0 && g.adj.nnz() <= 40_000);
+        assert_eq!(g.adj.transpose(), g.adj, "must stay symmetric after dedup");
+        for r in 0..g.adj.n {
+            let (cs, _) = g.adj.row(r);
+            assert!(!cs.contains(&(r as u32)), "self loop at {r}");
+        }
+        // heavy head: the top-1% of nodes out-carry the bottom half
+        let mut degs: Vec<usize> = (0..g.adj.n).map(|r| g.adj.row_nnz(r)).collect();
+        degs.sort_unstable();
+        let top1pct: usize = degs[degs.len() - 50..].iter().sum();
+        let bot50pct: usize = degs[..degs.len() / 2].iter().sum();
+        assert!(top1pct > bot50pct, "top1%={top1pct} bot50%={bot50pct}");
+        let g2 = generate_power_law(&cfg).unwrap();
+        assert_eq!(g.adj, g2.adj);
+        let g3 = generate_power_law(&PowerLawConfig { seed: 8, ..cfg }).unwrap();
+        assert_ne!(g.adj, g3.adj);
+    }
+
+    #[test]
+    fn power_law_rejects_bad_configs() {
+        let ok = PowerLawConfig { v: 100, e_directed: 400, skew: 0.5, seed: 1 };
+        assert!(generate_power_law(&ok).is_ok());
+        for bad in [
+            PowerLawConfig { v: 1, ..ok.clone() },
+            PowerLawConfig { e_directed: 401, ..ok.clone() },
+            PowerLawConfig { skew: 0.99, ..ok.clone() },
+            PowerLawConfig { skew: -0.1, ..ok.clone() },
+            PowerLawConfig { v: u32::MAX as usize + 2, ..ok.clone() },
+        ] {
+            assert!(generate_power_law(&bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn prop_power_law_invariants() {
+        prop::check("power-law-invariants", 10, |rng| {
+            let v = rng.range(10, 400);
+            let cfg = PowerLawConfig {
+                v,
+                e_directed: 2 * rng.range(v, 4 * v),
+                skew: rng.f64() * 0.95,
+                seed: rng.next_u64(),
+            };
+            let g = generate_power_law(&cfg).unwrap();
+            assert!(g.adj.validate());
+            assert!(g.adj.nnz() <= cfg.e_directed);
+            assert_eq!(g.adj.transpose(), g.adj);
+            assert!(g.peak_alloc_bytes <= cfg.peak_bound_bytes().unwrap());
+        });
     }
 
     #[test]

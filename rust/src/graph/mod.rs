@@ -7,5 +7,5 @@ pub mod generate;
 pub mod reorder;
 
 pub use csr::{Csr, EdgeList};
-pub use generate::{generate_sbm, SbmConfig};
+pub use generate::{generate_power_law, generate_sbm, PowerLawConfig, PowerLawGraph, SbmConfig};
 pub use reorder::{degree_order, rcm_order, Permutation, ReorderKind};

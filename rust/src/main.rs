@@ -21,7 +21,11 @@
 //! candidate is bit-identical, so only timing can change — DESIGN.md
 //! §Autotuned kernel selection), and `--reorder degree|rcm|none` /
 //! `--no-reorder` controls the one-shot locality-aware node reordering
-//! (ULP-equivalent per node; metrics unchanged).
+//! (ULP-equivalent per node; metrics unchanged).  `--shards N` splits
+//! every backward SpMM site into N destination-row ranges, each with its
+//! own RSC engine, sample cache and share of the edge budget; weights
+//! are bit-identical for every N (DESIGN.md §Sharded execution;
+//! full-batch models only).
 //!
 //! Fault tolerance (DESIGN.md §Fault tolerance): `--checkpoint-every N`
 //! writes an atomic, checksummed training snapshot every N epochs to
@@ -222,6 +226,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         verbose: args.bool_or("verbose", true)?,
         saint_subgraphs: args.usize_or("saint-subgraphs", 8)?,
         saint_batches_per_epoch: args.usize_or("saint-batches", 4)?,
+        shards: args.usize_or("shards", 1)?,
         reorder: reorder_flag(args)?,
         checkpoint_every,
         checkpoint_mins,
@@ -305,6 +310,30 @@ fn cmd_train(args: &Args) -> Result<()> {
         "health ladder: final {}  demotions {}  re-promotions {}",
         res.health_final, res.health_demotions, res.health_repromotions
     );
+    if res.shards > 1 {
+        let (merges, merge_edges, disagreements) =
+            rsc::coordinator::shard::shard_counter_stats();
+        println!(
+            "shards: {}  selection merges {} ({} edges)  disagreements {}",
+            res.shards, merges, merge_edges, disagreements
+        );
+        for s in &res.shard_stats {
+            println!(
+                "  shard {} rows [{}, {}): gather nnz {}  retained {}  \
+                 cache {}/{}  prefetch hits {}/{}  sampling {:.1}ms",
+                s.shard,
+                s.rows.0,
+                s.rows.1,
+                s.gather_nnz,
+                s.retained,
+                s.cache.0,
+                s.cache.0 + s.cache.1,
+                s.prefetch.hits,
+                s.prefetch.hits + s.prefetch.sync_fallbacks,
+                s.sample_ms
+            );
+        }
+    }
     // stable, greppable line the CI kill-and-resume job asserts on
     println!("weights fingerprint: {:016x}", res.weights_fingerprint);
     println!("op-class time (ms total):");

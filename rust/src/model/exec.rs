@@ -8,7 +8,7 @@
 //! from the tape: nodes are visited in reverse, each kind applies its VJP
 //! rule (the same fused backward executables the hand-written models
 //! dispatched), every auto-discovered sampling site routes its transposed
-//! SpMM through [`RscEngine::plan`] — norms observed first, sites planned
+//! SpMM through [`TrainEngine::plan`] — norms observed first, sites planned
 //! in descending order so site 0 is planned last, exactly the engine
 //! contract the bespoke models followed — and gradient fan-in uses the
 //! zeroed-accumulator + `add` scheme.  Retired activations are recycled
@@ -21,7 +21,7 @@
 //! bit-for-bit at any thread count (`tests/tape_parity.rs` pins this
 //! against frozen copies of the legacy implementations).
 
-use crate::coordinator::RscEngine;
+use crate::coordinator::TrainEngine;
 use crate::data::DatasetCfg;
 use crate::model::graph::{LayerGraph, Node, NodeOp, Slot};
 use crate::model::ops::{GraphBufs, ModelKind, OpNames};
@@ -327,7 +327,7 @@ impl GraphModel {
         labels: &Value,
         mask: &Value,
         bufs: &GraphBufs,
-        engine: &mut RscEngine,
+        engine: &mut TrainEngine,
         step: u64,
         tb: &mut TimeBook,
         ws: &mut Workspace,
@@ -405,7 +405,7 @@ impl GraphModel {
         labels: &Value,
         mask: &Value,
         bufs: &GraphBufs,
-        engine: &mut RscEngine,
+        engine: &mut TrainEngine,
         step: u64,
         lr: f32,
         tb: &mut TimeBook,
@@ -464,7 +464,7 @@ impl GraphModel {
     fn observe_site_norms(
         &self,
         b: &dyn Backend,
-        engine: &mut RscEngine,
+        engine: &mut TrainEngine,
         step: u64,
         site: usize,
         g: &Value,
@@ -496,7 +496,7 @@ impl GraphModel {
         b: &dyn Backend,
         x: &Value,
         bufs: &GraphBufs,
-        engine: &mut RscEngine,
+        engine: &mut TrainEngine,
         step: u64,
         tb: &mut TimeBook,
         ws: &mut Workspace,
@@ -728,13 +728,13 @@ impl GraphModel {
 /// owns the matrix and bucket ladder since the prefetch pipeline: its
 /// background builds need them independent of the caller's borrow.)
 pub(crate) fn plan_edges<'a>(
-    engine: &'a mut RscEngine,
+    engine: &'a mut TrainEngine,
     site: usize,
     step: u64,
     exact: &'a Selection,
 ) -> (usize, &'a (Value, Value, Value), u64, Option<Arc<SpmmPlan>>) {
     let par = engine.parallelism();
-    let plan_cache = engine.cfg.plan_cache;
+    let plan_cache = engine.cfg().plan_cache;
     let plan = engine.plan(site, step, exact);
     let sel = plan.selection();
     if std::env::var_os("RSC_DEBUG_PLAN").is_some() {

@@ -178,6 +178,11 @@ pub struct SpmmPlan {
     order: Vec<u32>,
     /// Contiguous output-row ranges with roughly equal retained nnz.
     chunks: Vec<std::ops::Range<usize>>,
+    /// Shard boundaries the chunks were aligned to (`bounds[s]..bounds[s+1]`
+    /// is shard s's output-row range); empty for unsharded plans.  Chunking
+    /// never moves a single output bit — alignment only pins each parallel
+    /// chunk inside one shard so per-shard work attribution is exact.
+    bounds: Vec<usize>,
 }
 
 impl SpmmPlan {
@@ -222,7 +227,51 @@ impl SpmmPlan {
             rowptr,
             order,
             chunks,
+            bounds: Vec::new(),
         }
+    }
+
+    /// [`SpmmPlan::build`] with parallel chunks aligned to the shard
+    /// boundaries in `bounds` (monotone, `bounds[0] == 0`,
+    /// `bounds.last() == vout`): no chunk ever straddles a boundary, and
+    /// each shard's row range is cut into its own nnz-balanced chunks
+    /// sized by its share of the retained edges.  The grouping (and thus
+    /// every output bit) is identical to an unaligned build — only where
+    /// the parallel cuts fall differs — so sharded and unsharded
+    /// executions of the same edge list agree bitwise by construction.
+    pub fn build_aligned(
+        dst: &[i32],
+        w: &[f32],
+        vout: usize,
+        bounds: &[usize],
+        par: Parallelism,
+    ) -> SpmmPlan {
+        let mut p = SpmmPlan::build(dst, w, vout, par);
+        if bounds.len() > 2 {
+            debug_assert!(bounds[0] == 0 && *bounds.last().unwrap_or(&0) == vout);
+            let target = (par.threads() * 4).max(1);
+            let total = p.rowptr[vout].max(1);
+            let mut chunks = Vec::new();
+            for s in 0..bounds.len() - 1 {
+                let (lo, hi) = (bounds[s], bounds[s + 1]);
+                if hi <= lo {
+                    continue;
+                }
+                let seg = p.rowptr[hi] - p.rowptr[lo];
+                let seg_target =
+                    ((target as f64 * seg as f64 / total as f64).ceil() as usize).max(1);
+                chunks.extend(balance_rows_range(&p.rowptr, lo, hi, seg_target));
+            }
+            p.chunks = chunks;
+            p.bounds = bounds.to_vec();
+        }
+        p
+    }
+
+    /// The shard boundaries this plan's chunks are aligned to (empty for
+    /// unsharded plans).
+    pub fn shard_bounds(&self) -> &[usize] {
+        &self.bounds
     }
 
     /// Stamp the plan with the immutability tag of the src edge input it
@@ -334,23 +383,37 @@ fn balance_rows(
     vout: usize,
     target: usize,
 ) -> Vec<std::ops::Range<usize>> {
-    if vout == 0 {
+    balance_rows_range(rowptr, 0, vout, target)
+}
+
+/// [`balance_rows`] over the row subrange `lo..hi` (the per-shard segment
+/// of an aligned build); cuts are relative to the segment's own retained
+/// nnz, so `lo == 0, hi == vout` reproduces the unsharded chunking
+/// exactly.
+fn balance_rows_range(
+    rowptr: &[usize],
+    lo: usize,
+    hi: usize,
+    target: usize,
+) -> Vec<std::ops::Range<usize>> {
+    if hi <= lo {
         return Vec::new();
     }
-    let total = rowptr[vout];
+    let base = rowptr[lo];
+    let total = rowptr[hi] - base;
     let per = (total as f64 / target as f64).max(1.0);
-    let mut chunks = Vec::with_capacity(target.min(vout));
-    let mut start = 0usize;
-    for t in 0..vout {
+    let mut chunks = Vec::with_capacity(target.min(hi - lo));
+    let mut start = lo;
+    for t in lo..hi {
         // close the chunk once cumulative nnz crosses the next cut; keep
         // the last chunk open so every row is covered
         let cut = per * (chunks.len() + 1) as f64;
-        if chunks.len() + 1 < target && t + 1 < vout && rowptr[t + 1] as f64 >= cut {
+        if chunks.len() + 1 < target && t + 1 < hi && (rowptr[t + 1] - base) as f64 >= cut {
             chunks.push(start..t + 1);
             start = t + 1;
         }
     }
-    chunks.push(start..vout);
+    chunks.push(start..hi);
     chunks
 }
 
@@ -383,6 +446,31 @@ impl PlanCell {
         let p = self.cell.get_or_init(|| {
             built = true;
             Arc::new(SpmmPlan::build(dst, w, vout, par).with_tag(tag))
+        });
+        if !built {
+            PLAN_HITS.fetch_add(1, Ordering::Relaxed);
+        }
+        p.clone()
+    }
+
+    /// [`PlanCell::get_or_build`] building a shard-aligned plan
+    /// ([`SpmmPlan::build_aligned`]) on first use.  First build wins: if an
+    /// unaligned plan is already cached the cached one is returned — the
+    /// two differ only in where the parallel cuts fall, never in a bit of
+    /// output.
+    pub fn get_or_build_aligned(
+        &self,
+        dst: &[i32],
+        w: &[f32],
+        vout: usize,
+        tag: u64,
+        par: Parallelism,
+        bounds: &[usize],
+    ) -> Arc<SpmmPlan> {
+        let mut built = false;
+        let p = self.cell.get_or_init(|| {
+            built = true;
+            Arc::new(SpmmPlan::build_aligned(dst, w, vout, bounds, par).with_tag(tag))
         });
         if !built {
             PLAN_HITS.fetch_add(1, Ordering::Relaxed);
@@ -502,6 +590,52 @@ mod tests {
             select_kernel(p.avg_nnz_per_row(), 2)
         );
         assert!(!ChoiceSource::Tuned.name().is_empty());
+    }
+
+    #[test]
+    fn aligned_chunks_respect_shard_bounds() {
+        // 100 rows, heavy head; shard cut at 30 and 70
+        let mut dst = vec![0i32; 500];
+        dst.extend((1..100).map(|t| t as i32));
+        let w = vec![1.0f32; dst.len()];
+        let bounds = [0usize, 30, 70, 100];
+        let p = SpmmPlan::build_aligned(&dst, &w, 100, &bounds, par4());
+        assert_eq!(p.shard_bounds(), &bounds);
+        // same grouping as the unaligned build
+        let q = SpmmPlan::build(&dst, &w, 100, par4());
+        for t in 0..100 {
+            assert_eq!(p.row_edges(t), q.row_edges(t), "row {t} grouping moved");
+        }
+        // chunks cover every row once and never straddle a boundary
+        let mut covered = 0;
+        for c in p.chunks() {
+            assert_eq!(c.start, covered);
+            assert!(c.end > c.start);
+            let shard = bounds.iter().position(|&b| b > c.start).unwrap() - 1;
+            assert!(
+                c.start >= bounds[shard] && c.end <= bounds[shard + 1],
+                "chunk {c:?} straddles shard {shard}"
+            );
+            covered = c.end;
+        }
+        assert_eq!(covered, 100);
+        // trivial bounds degrade to the unaligned chunking
+        let t = SpmmPlan::build_aligned(&dst, &w, 100, &[0, 100], par4());
+        assert_eq!(t.chunks(), q.chunks());
+        assert!(t.shard_bounds().is_empty());
+        // per-shard retained nnz is readable off the plan
+        assert_eq!(p.range_nnz(&(0..30)), 500 + 29);
+    }
+
+    #[test]
+    fn aligned_cell_builds_once_and_is_first_build_wins() {
+        let dst = vec![0, 1, 1, 2];
+        let w = vec![1.0f32; 4];
+        let cell = PlanCell::new();
+        let a = cell.get_or_build_aligned(&dst, &w, 4, 3, par4(), &[0, 2, 4]);
+        assert_eq!(a.shard_bounds(), &[0, 2, 4]);
+        let b = cell.get_or_build(&dst, &w, 4, 3, par4());
+        assert!(Arc::ptr_eq(&a, &b), "aligned plan must be reused");
     }
 
     #[test]

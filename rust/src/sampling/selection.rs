@@ -93,6 +93,49 @@ impl Selection {
         Selection::build(adj, rows, caps)
     }
 
+    /// Merge per-shard selections into the one executable selection.
+    ///
+    /// Each part was gathered from a column-sliced shard matrix
+    /// (`Csr::slice_columns`, which keeps `n`), so every part carries the
+    /// *same* selected rows and `vout` but only the edges whose
+    /// destination falls in its shard's row range.  Concatenating the
+    /// unpadded edge prefixes in fixed shard order and padding once to
+    /// the global bucket reproduces, per destination row, exactly the
+    /// edge order a single unsharded gather would produce: a destination
+    /// row belongs to exactly one shard, and within a shard the gather
+    /// preserves selection-row order.  The merged selection is therefore
+    /// bit-identical in execution to its `--shards 1` counterpart (see
+    /// DESIGN.md §Sharded execution for the full argument).
+    pub fn concat_sharded(parts: &[&Selection], caps: &[usize]) -> Selection {
+        assert!(!parts.is_empty(), "concat_sharded needs at least one shard");
+        let first = parts[0];
+        let nnz: usize = parts.iter().map(|p| p.nnz).sum();
+        let cap = pick_bucket(caps, nnz);
+        let mut src = Vec::with_capacity(cap);
+        let mut dst = Vec::with_capacity(cap);
+        let mut w = Vec::with_capacity(cap);
+        for p in parts {
+            debug_assert_eq!(p.vout, first.vout, "shards disagree on vout");
+            debug_assert_eq!(p.rows, first.rows, "shards disagree on rows");
+            src.extend_from_slice(&p.src()[..p.nnz]);
+            dst.extend_from_slice(&p.dst()[..p.nnz]);
+            w.extend_from_slice(&p.w()[..p.nnz]);
+        }
+        src.resize(cap, 0);
+        dst.resize(cap, 0);
+        w.resize(cap, 0.0);
+        let vals = (Value::vec_i32(src), Value::vec_i32(dst), Value::vec_f32(w));
+        Selection {
+            rows: first.rows.clone(),
+            vals,
+            nnz,
+            cap,
+            vout: first.vout,
+            tag: fresh_tags(),
+            plan: PlanCell::new(),
+        }
+    }
+
     /// Edge sources (pair rows), padded to `cap`.
     pub fn src(&self) -> &[i32] {
         self.vals.0.i32s().expect("selection src is i32")
@@ -122,6 +165,20 @@ impl Selection {
     pub fn spmm_plan(&self, par: Parallelism) -> Arc<SpmmPlan> {
         self.plan
             .get_or_build(self.dst(), self.w(), self.vout, self.tag, par)
+    }
+
+    /// [`Selection::spmm_plan`] with parallel chunks aligned to the shard
+    /// boundaries in `bounds` (see [`SpmmPlan::build_aligned`]); identical
+    /// output bits, shard-exact work attribution.
+    pub fn spmm_plan_aligned(&self, par: Parallelism, bounds: &[usize]) -> Arc<SpmmPlan> {
+        self.plan.get_or_build_aligned(
+            self.dst(),
+            self.w(),
+            self.vout,
+            self.tag,
+            par,
+            bounds,
+        )
     }
 
     /// The plan if one has already been built (no build on miss).
@@ -227,6 +284,72 @@ mod tests {
         // a clone (e.g. a cached entry handed out) keeps the built plan
         let cloned = sel.clone();
         assert!(cloned.peek_plan().is_some());
+    }
+
+    #[test]
+    fn prop_concat_sharded_matches_unsharded_grouping() {
+        // the bit-identity witness: merging per-shard gathers (column-
+        // sliced matrices, fixed shard order) must group, per destination
+        // row, exactly the (src, w) sequence the unsharded gather groups —
+        // the SpMM accumulation order, hence every output bit, is then
+        // identical by construction
+        prop::check("concat-sharded", 20, |rng| {
+            let n = rng.range(4, 40);
+            let adj = Csr::random(n, 4 * n, rng);
+            let k = rng.below(n) + 1;
+            let rows: Vec<u32> = rng
+                .sample_distinct(n, k)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            let caps = vec![adj.nnz().max(1)];
+            let whole = Selection::build(&adj, rows.clone(), &caps);
+            let s = rng.range(2, 5).min(n);
+            let bounds: Vec<usize> = (0..=s).map(|i| i * n / s).collect();
+            let parts: Vec<Selection> = (0..s)
+                .map(|i| {
+                    let keep: Vec<bool> =
+                        (0..n).map(|c| c >= bounds[i] && c < bounds[i + 1]).collect();
+                    Selection::build(&adj.slice_columns(&keep), rows.clone(), &caps)
+                })
+                .collect();
+            let refs: Vec<&Selection> = parts.iter().collect();
+            let merged = Selection::concat_sharded(&refs, &caps);
+            assert_eq!(merged.nnz, whole.nnz);
+            assert_eq!(merged.cap, whole.cap);
+            assert_eq!(merged.vout, whole.vout);
+            assert_eq!(merged.rows, whole.rows);
+            assert_ne!(merged.tag, whole.tag, "merged selection needs fresh tags");
+            let par = Parallelism::sequential();
+            let pw = whole.spmm_plan(par);
+            let pm = merged.spmm_plan_aligned(par, &bounds);
+            for t in 0..n {
+                let row = |p: &SpmmPlan, src: &[i32], w: &[f32]| -> Vec<(i32, u32)> {
+                    p.row_edges(t)
+                        .iter()
+                        .map(|&e| (src[e as usize], w[e as usize].to_bits()))
+                        .collect()
+                };
+                assert_eq!(
+                    row(&pw, whole.src(), whole.w()),
+                    row(&pm, merged.src(), merged.w()),
+                    "row {t}: sharded gather changed the accumulation order"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn concat_single_shard_is_identity_up_to_tag() {
+        let mut rng = Rng::new(4);
+        let adj = Csr::random(10, 30, &mut rng);
+        let caps = vec![adj.nnz().max(1)];
+        let sel = Selection::exact(&adj, &caps);
+        let merged = Selection::concat_sharded(&[&sel], &caps);
+        assert_eq!(merged.src(), sel.src());
+        assert_eq!(merged.dst(), sel.dst());
+        assert_eq!(merged.w(), sel.w());
+        assert_eq!(merged.nnz, sel.nnz);
     }
 
     #[test]

@@ -16,14 +16,17 @@
 //!
 //! ```text
 //! magic    b"RSCCKPT1"
-//! u32      format version (2)
+//! u32      format version (3)
 //! str      model kind name
 //! u64      graph fingerprint (FNV over the normalized matrix)
 //! u64      seed              u64 epochs (total)     u64 next_epoch
+//! u32      shards (--shards of the writing run; 1 = unsharded)
 //! rng      4×u64 state + spare tag/f64 (Box–Muller pair cache)
 //! u64      adam step
 //! params   count, then per param: name, rows, cols, w/m/v f32 runs
 //! engines  u32 count, then per engine: EngineState (ks, norms, schedule)
+//!          (count = shards for a sharded full-batch run, one state per
+//!          replica in shard order; GraphSAINT: one per subgraph)
 //! saint    u8 tag; if 1: u64 batch cursor, u32 count, per-subgraph uses
 //! curves   loss f32 run, (epoch, val) pairs, best_val, test_at_best
 //! u64      FNV-1a checksum over every preceding byte
@@ -35,7 +38,7 @@
 //! `torn_checkpoint_write` / `corrupt_checkpoint_byte` fault points
 //! (`util/fault.rs`) simulate exactly those crashes in the tests.
 
-use crate::coordinator::{EngineState, RscEngine};
+use crate::coordinator::{EngineState, TrainEngine};
 use crate::graph::Csr;
 use crate::model::exec::GraphModel;
 use crate::model::ops::ModelKind;
@@ -47,7 +50,7 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"RSCCKPT1";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// One parameter's snapshot: identity plus weights and Adam moments.
 #[derive(Debug, Clone, PartialEq)]
@@ -82,6 +85,11 @@ pub struct Checkpoint {
     pub epochs: u64,
     /// First epoch the resumed run executes.
     pub next_epoch: u64,
+    /// `--shards` of the writing run (1 = unsharded).  Resume must match:
+    /// the engine-state vector carries one state per shard replica, and a
+    /// different shard count would pair states with the wrong gather
+    /// matrices.
+    pub shards: u32,
     pub rng_s: [u64; 4],
     pub rng_spare: Option<f64>,
     pub adam_step: u64,
@@ -332,6 +340,7 @@ impl Checkpoint {
         w.u64(self.seed);
         w.u64(self.epochs);
         w.u64(self.next_epoch);
+        w.u32(self.shards);
         for s in self.rng_s {
             w.u64(s);
         }
@@ -416,6 +425,8 @@ impl Checkpoint {
         let seed = r.u64()?;
         let epochs = r.u64()?;
         let next_epoch = r.u64()?;
+        let shards = r.u32()?;
+        ensure!(shards >= 1, "checkpoint declares {shards} shards");
         let rng_s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
         let rng_spare = match r.u8()? {
             0 => None,
@@ -471,6 +482,7 @@ impl Checkpoint {
             seed,
             epochs,
             next_epoch,
+            shards,
             rng_s,
             rng_spare,
             adam_step,
@@ -486,9 +498,10 @@ impl Checkpoint {
 
     /// Snapshot the live training state at an epoch boundary
     /// (`next_epoch` = the first epoch a resumed run will execute).
-    /// Full-batch runs pass a single engine (`std::slice::from_ref`) and
-    /// `saint: None`; GraphSAINT passes all per-subgraph engines plus its
-    /// cursor state.
+    /// Full-batch runs pass a single engine (`std::slice::from_ref`) —
+    /// sharded or not; a sharded engine contributes one [`EngineState`]
+    /// per shard replica — and `saint: None`; GraphSAINT passes all
+    /// per-subgraph engines plus its cursor state.
     #[allow(clippy::too_many_arguments)]
     pub fn capture(
         model_kind: ModelKind,
@@ -498,7 +511,7 @@ impl Checkpoint {
         next_epoch: u64,
         model: &GraphModel,
         rng: &Rng,
-        engines: &[RscEngine],
+        engines: &[TrainEngine],
         saint: Option<SaintState>,
         loss_curve: &[f32],
         val_curve: &[(usize, f64)],
@@ -512,6 +525,7 @@ impl Checkpoint {
             seed,
             epochs,
             next_epoch,
+            shards: engines.first().map_or(1, |t| t.shards()) as u32,
             rng_s,
             rng_spare,
             adam_step: model.params.step,
@@ -531,7 +545,11 @@ impl Checkpoint {
                     }
                 })
                 .collect(),
-            engines: engines.iter().map(|e| e.export_state()).collect(),
+            engines: engines
+                .iter()
+                .flat_map(|t| t.engines())
+                .map(|e| e.export_state())
+                .collect(),
             saint,
             loss_curve: loss_curve.to_vec(),
             val_curve: val_curve.iter().map(|&(e, v)| (e as u64, v)).collect(),
@@ -553,7 +571,7 @@ impl Checkpoint {
         epochs: u64,
         model: &mut GraphModel,
         rng: &mut Rng,
-        engines: &mut [RscEngine],
+        engines: &mut [TrainEngine],
     ) -> Result<()> {
         ensure!(
             self.model == model_kind,
@@ -608,12 +626,23 @@ impl Checkpoint {
         }
         model.params.step = self.adam_step;
         *rng = Rng::from_state(self.rng_s, self.rng_spare);
+        let run_shards = engines.first().map_or(1, |t| t.shards()) as u32;
         ensure!(
-            self.engines.len() == engines.len(),
-            "checkpoint has {} engine states, this run has {} engines \
-             (different --saint-subgraphs?)",
+            self.shards == run_shards,
+            "checkpoint was written with --shards {} but this run uses \
+             --shards {run_shards}: per-shard engine states cannot be \
+             re-paired across shard counts (results would stay identical, \
+             but the schedule state is per replica) — resume with --shards {}",
+            self.shards,
+            self.shards
+        );
+        let n_replicas: usize = engines.iter().map(|t| t.engines().len()).sum();
+        ensure!(
+            self.engines.len() == n_replicas,
+            "checkpoint has {} engine states, this run has {} \
+             (different --saint-subgraphs or --shards?)",
             self.engines.len(),
-            engines.len()
+            n_replicas
         );
         if let Some(s) = &self.saint {
             ensure!(
@@ -624,7 +653,11 @@ impl Checkpoint {
                 engines.len()
             );
         }
-        for (engine, st) in engines.iter_mut().zip(&self.engines) {
+        for (engine, st) in engines
+            .iter_mut()
+            .flat_map(|t| t.engines_mut())
+            .zip(&self.engines)
+        {
             engine.restore_state(st)?;
         }
         Ok(())

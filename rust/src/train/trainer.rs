@@ -19,7 +19,7 @@
 //! (Table 11).
 
 use crate::cache::PrefetchStats;
-use crate::coordinator::{RscConfig, RscEngine};
+use crate::coordinator::{RscConfig, RscEngine, ShardStat, ShardedEngine, TrainEngine};
 use crate::data::{Dataset, Labels, SaintSampler, Split};
 use crate::graph::{Permutation, ReorderKind};
 use crate::model::exec::GraphModel;
@@ -81,6 +81,12 @@ pub struct TrainConfig {
     /// rung back toward Healthy (`--promote-after`; DESIGN.md §Chaos
     /// soak & health ladder).
     pub health_promote_after: usize,
+    /// Shard the backward sampling path into N destination-row ranges,
+    /// each with its own engine replica and column-sliced gather matrix
+    /// (`--shards N`; DESIGN.md §Sharded execution).  Results are
+    /// bit-identical for every N; full-batch models only (GraphSAINT
+    /// already partitions work by subgraph and rejects N > 1).
+    pub shards: usize,
 }
 
 impl TrainConfig {
@@ -102,6 +108,7 @@ impl TrainConfig {
             resume: None,
             watchdog: true,
             health_promote_after: 5,
+            shards: 1,
         }
     }
 }
@@ -196,6 +203,13 @@ pub struct TrainResult {
     /// Supervised background refresh builds re-run after a panic
     /// (process-global counter, so an upper bound under concurrency).
     pub worker_respawns: u64,
+    /// Destination-row shards the backward sampling path ran with
+    /// (`--shards`; 1 = unsharded).
+    pub shards: usize,
+    /// Per-shard observability rows (empty when `shards == 1`): row
+    /// range, gather-matrix nnz, live retained edges, cache/prefetch
+    /// counters, hot-path sampling ms.
+    pub shard_stats: Vec<ShardStat>,
 }
 
 /// Order-sensitive FNV-1a over all parameters' f32 bit patterns; see
@@ -288,7 +302,7 @@ impl LadderMonitor {
     /// ExactOnly additionally slides a forced-exact window over the
     /// engine's next step.  At Healthy the configured prefetch setting
     /// is restored, so a fault-free run never observes the ladder.
-    fn apply(&self, engine: &mut RscEngine, cfg_prefetch: bool, next_step: u64) {
+    fn apply(&self, engine: &mut TrainEngine, cfg_prefetch: bool, next_step: u64) {
         engine.set_prefetch(cfg_prefetch && !self.ladder.degraded_or_worse());
         if self.ladder.exact_only_or_worse() {
             engine.force_exact_until(next_step + 1);
@@ -320,7 +334,7 @@ fn guarded_train_step(
     labels: &Value,
     mask: &Value,
     bufs: &GraphBufs,
-    engine: &mut RscEngine,
+    engine: &mut TrainEngine,
     step: u64,
     lr: f32,
     tb: &mut TimeBook,
@@ -344,7 +358,7 @@ fn guarded_train_step(
         // fresh finite norms rebuild the schedule
         engine.quarantine();
         if wd.streak >= WATCHDOG_ESCALATE_AFTER {
-            let until = step + 1 + engine.cfg.alloc_every;
+            let until = step + 1 + engine.cfg().alloc_every;
             engine.force_exact_until(until);
             wd.escalations += 1;
         }
@@ -463,13 +477,36 @@ fn train_full_batch(
     // one executor for every architecture: the model is a layer graph,
     // and the engine's site registry is read off that same graph
     let mut model = GraphModel::new(cfg.model, &ds.cfg, names, &mut rng);
-    let mut engine = RscEngine::new(
-        cfg.rsc.clone(),
-        bufs.matrix.clone(),
-        bufs.caps.clone(),
-        model.graph.site_widths(),
-        cfg.epochs as u64,
-    )?;
+    ensure!(cfg.shards >= 1, "--shards must be >= 1, got {}", cfg.shards);
+    let mut engine = if cfg.shards > 1 {
+        TrainEngine::Sharded(ShardedEngine::new(
+            cfg.rsc.clone(),
+            bufs.matrix.clone(),
+            bufs.caps.clone(),
+            model.graph.site_widths(),
+            cfg.epochs as u64,
+            cfg.shards,
+        )?)
+    } else {
+        TrainEngine::Single(RscEngine::new(
+            cfg.rsc.clone(),
+            bufs.matrix.clone(),
+            bufs.caps.clone(),
+            model.graph.site_widths(),
+            cfg.epochs as u64,
+        )?)
+    };
+    if cfg.rsc.plan_cache {
+        if let TrainEngine::Sharded(se) = &engine {
+            // first build wins: seeding the exact selection's plan with
+            // shard-aligned chunks here means every later spmm_plan call
+            // (tuning warmup included) reuses chunks that attribute work
+            // to shards without changing any output bit
+            let _ = bufs
+                .exact
+                .spmm_plan_aligned(se.parallelism(), &se.shard_plan().bounds);
+        }
+    }
     if cfg.rsc.plan_cache && cfg.rsc.autotune {
         tune_static_plans(&bufs, &model.graph.site_widths(), engine.parallelism());
     }
@@ -673,12 +710,12 @@ fn train_full_batch(
         val_curve,
         train_wall_s,
         tb,
-        alloc_history: engine.alloc_history.clone(),
-        picked_degrees: engine.picked_degrees.clone(),
-        overlap_samples: engine.overlap.samples.clone(),
-        alloc_ms: engine.alloc_ms,
-        sample_ms: engine.sample_ms,
-        prefetch_build_ms: engine.prefetch_build_ms,
+        alloc_history: engine.alloc_history().to_vec(),
+        picked_degrees: engine.picked_degrees().to_vec(),
+        overlap_samples: engine.overlap_samples().to_vec(),
+        alloc_ms: engine.alloc_ms(),
+        sample_ms: engine.sample_ms(),
+        prefetch_build_ms: engine.prefetch_build_ms(),
         prefetch: engine.prefetch_stats(),
         cache_hits,
         cache_misses,
@@ -691,7 +728,7 @@ fn train_full_batch(
         kernels: spmm_kernel_stats().since(&kernels0),
         fwd_kernel: fwd_kernel_label(&bufs),
         autotune: autotune_stats().since(&autotune0),
-        tuned_kernels: engine.tuned_kernels.clone(),
+        tuned_kernels: engine.tuned_kernels().to_vec(),
         weights_fingerprint: weights_fingerprint(&model),
         watchdog_trips: wd.trips,
         watchdog_recoveries: wd.recoveries,
@@ -703,6 +740,8 @@ fn train_full_batch(
         health_demotions: hm.ladder.demotions(),
         health_repromotions: hm.ladder.repromotions(),
         worker_respawns: parallel::worker_respawns().saturating_sub(worker_respawns0),
+        shards: cfg.shards,
+        shard_stats: engine.shard_stats(),
     })
 }
 
@@ -739,6 +778,12 @@ fn train_saint(
     clock: &mut dyn Clock,
 ) -> Result<TrainResult> {
     ensure!(ds.cfg.saint_v > 0, "dataset {} has no SAINT config", ds.cfg.name);
+    ensure!(
+        cfg.shards <= 1,
+        "--shards {} is not supported with GraphSAINT: mini-batch training \
+         already partitions work by subgraph (use a full-batch model)",
+        cfg.shards
+    );
     let mut rng = Rng::new(cfg.seed ^ 0x5417);
     let metric = MetricKind::for_dataset(ds);
     let (plan_hits0, plan_builds0) = plan_stats();
@@ -797,7 +842,7 @@ fn train_saint(
     let total_uses =
         (cfg.epochs * cfg.saint_batches_per_epoch).div_ceil(n_sub) as u64;
     let widths: Vec<usize> = model.graph.site_widths();
-    let mut engines: Vec<RscEngine> = sub_bufs
+    let mut engines: Vec<TrainEngine> = sub_bufs
         .iter()
         .map(|bufs| {
             RscEngine::new(
@@ -807,6 +852,7 @@ fn train_saint(
                 widths.clone(),
                 total_uses,
             )
+            .map(TrainEngine::Single)
         })
         .collect::<Result<_>>()?;
     let mut uses = vec![0u64; n_sub];
@@ -1033,17 +1079,17 @@ fn train_saint(
     let mut prefetch_build_ms = 0.0;
     let mut tuned_kernels = Vec::new();
     for e in &engines {
-        alloc_history.extend(e.alloc_history.iter().cloned());
-        picked.extend(e.picked_degrees.iter().cloned());
-        overlap.extend(e.overlap.samples.iter().cloned());
-        tuned_kernels.extend(e.tuned_kernels.iter().cloned());
+        alloc_history.extend(e.alloc_history().iter().cloned());
+        picked.extend(e.picked_degrees().iter().cloned());
+        overlap.extend(e.overlap_samples().iter().cloned());
+        tuned_kernels.extend(e.tuned_kernels().iter().cloned());
         let (h, m) = e.cache_stats();
         hits += h;
         misses += m;
-        alloc_ms += e.alloc_ms;
-        sample_ms += e.sample_ms;
+        alloc_ms += e.alloc_ms();
+        sample_ms += e.sample_ms();
         prefetch.absorb(&e.prefetch_stats());
-        prefetch_build_ms += e.prefetch_build_ms;
+        prefetch_build_ms += e.prefetch_build_ms();
     }
     let (plan_hits1, plan_builds1) = plan_stats();
     Ok(TrainResult {
@@ -1085,5 +1131,7 @@ fn train_saint(
         health_demotions: hm.ladder.demotions(),
         health_repromotions: hm.ladder.repromotions(),
         worker_respawns: parallel::worker_respawns().saturating_sub(worker_respawns0),
+        shards: 1,
+        shard_stats: Vec::new(),
     })
 }

@@ -144,6 +144,24 @@ pub const REGISTERED: &[GlobalEntry] = &[
         "cached hardware AVX probe; immutable for the process lifetime"
     ),
     global!(
+        coordinator::shard::SHARD_MERGES,
+        Counter,
+        "merged per-shard selections built by the sharded engine",
+        crate::coordinator::shard::reset_shard_stats
+    ),
+    global!(
+        coordinator::shard::SHARD_MERGE_EDGES,
+        Counter,
+        "edges concatenated across shard replicas into merged selections",
+        crate::coordinator::shard::reset_shard_stats
+    ),
+    global!(
+        coordinator::shard::SHARD_DISAGREEMENTS,
+        Counter,
+        "defensive exact-fallbacks when shard replicas' plan decisions split",
+        crate::coordinator::shard::reset_shard_stats
+    ),
+    global!(
         sampling::selection::TAG_COUNTER,
         Monotonic,
         "immutability-tag allocator; reset would alias tags and poison buffer caches"

@@ -310,6 +310,7 @@ fn checkpoint_codec_roundtrips_for_random_states() {
             seed: rng.next_u64(),
             epochs: rng.range(1, 100) as u64,
             next_epoch: rng.range(0, 100) as u64,
+            shards: rng.range(1, 5) as u32,
             rng_s: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
             rng_spare: rng.chance(0.5).then(|| rng.normal()),
             adam_step: rng.range(0, 1000) as u64,
@@ -375,7 +376,7 @@ fn restored_selections_are_identical_at_1_2_4_threads() {
             )
             .unwrap()
             .with_parallelism(Parallelism::with_threads(t));
-            e.restore_state(&ck.engine).unwrap();
+            e.restore_state(&ck.engines[0]).unwrap();
             e
         })
         .collect();

@@ -1,0 +1,187 @@
+//! Sharded-execution acceptance (DESIGN.md §Sharded execution): training
+//! with `--shards N` must be *bit-identical* to `--shards 1` — same loss
+//! curve, same weights fingerprint — for every full-batch architecture,
+//! every shard count, every thread count, and across checkpoint/resume.
+//! Sharding is a pure execution transformation: each destination row's
+//! retained edges and their reduction order never change, only which
+//! shard's gather matrix serves them.
+//!
+//! Runs on the synthesized op catalog, so it needs no AOT artifacts
+//! (this file is what the CI shard-parity job executes).
+
+use rsc::coordinator::RscConfig;
+use rsc::data::load_or_generate;
+use rsc::graph::ReorderKind;
+use rsc::model::ops::ModelKind;
+use rsc::runtime::NativeBackend;
+use rsc::train::{train, TrainConfig};
+use rsc::util::parallel::{self, Parallelism};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rsc_shard_{}_{name}", std::process::id()))
+}
+
+fn cleanup(path: &PathBuf) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(rsc::train::checkpoint::tmp_path(path));
+}
+
+/// The default mechanism stack (allocation + caching + switching +
+/// prefetch + plan cache) at a budget that keeps several sites approx.
+fn cfg(model: ModelKind, epochs: usize, shards: usize) -> TrainConfig {
+    TrainConfig {
+        model,
+        epochs,
+        seed: 1,
+        rsc: RscConfig { budget_c: 0.3, ..Default::default() },
+        eval_every: 10,
+        reorder: ReorderKind::Degree,
+        shards,
+        ..TrainConfig::new(model)
+    }
+}
+
+#[test]
+fn every_full_batch_model_is_bit_identical_across_shard_counts() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+    for model in ModelKind::FULL_BATCH {
+        let reference = train(&b, &ds, &cfg(model, 25, 1)).unwrap();
+        assert!(reference.shard_stats.is_empty(), "{}", model.name());
+        for shards in [2usize, 4] {
+            let sharded = train(&b, &ds, &cfg(model, 25, shards)).unwrap();
+            assert_eq!(
+                sharded.weights_fingerprint,
+                reference.weights_fingerprint,
+                "{} diverged at --shards {shards}",
+                model.name()
+            );
+            assert_eq!(sharded.loss_curve, reference.loss_curve, "{}", model.name());
+            assert_eq!(sharded.val_curve, reference.val_curve, "{}", model.name());
+            assert_eq!(
+                sharded.test_metric.to_bits(),
+                reference.test_metric.to_bits(),
+                "{}",
+                model.name()
+            );
+            assert_eq!(sharded.shards, shards);
+        }
+    }
+}
+
+#[test]
+fn shard_and_thread_counts_never_change_the_trajectory() {
+    let ds = load_or_generate("tiny", 7).unwrap();
+    let mut reference: Option<(Vec<f32>, u64)> = None;
+    for threads in [1usize, 4] {
+        parallel::set_global(Parallelism::with_threads(threads));
+        let b = NativeBackend::synthesize("tiny").unwrap();
+        for shards in [1usize, 2, 4] {
+            let res = train(&b, &ds, &cfg(ModelKind::Gcn, 30, shards)).unwrap();
+            match &reference {
+                Some((curve, fp)) => {
+                    assert_eq!(
+                        &res.loss_curve, curve,
+                        "threads={threads} shards={shards} moved the loss curve"
+                    );
+                    assert_eq!(
+                        res.weights_fingerprint, *fp,
+                        "threads={threads} shards={shards} moved the weights"
+                    );
+                }
+                None => reference = Some((res.loss_curve.clone(), res.weights_fingerprint)),
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_stats_cover_the_matrix_and_report_work() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 3).unwrap();
+    let res = train(&b, &ds, &cfg(ModelKind::Gcn, 20, 3)).unwrap();
+    assert_eq!(res.shards, 3);
+    assert_eq!(res.shard_stats.len(), 3);
+    // contiguous row ranges covering [0, v)
+    let mut prev_end = 0usize;
+    for (i, s) in res.shard_stats.iter().enumerate() {
+        assert_eq!(s.shard, i);
+        assert_eq!(s.rows.0, prev_end, "gap before shard {i}");
+        assert!(s.rows.1 >= s.rows.0);
+        prev_end = s.rows.1;
+    }
+    assert_eq!(prev_end, ds.cfg.v);
+    // every edge of the (self-loop augmented) matrix is owned by exactly
+    // one shard, and the engines actually sampled
+    let gathered: usize = res.shard_stats.iter().map(|s| s.gather_nnz).sum();
+    assert_eq!(gathered, ds.cfg.m(), "shard gathers must partition the matrix");
+    assert!(res.shard_stats.iter().any(|s| s.retained > 0), "no shard retained edges");
+    // merge counters moved (process-global, so only lower bounds hold)
+    let (merges, merge_edges, _) = rsc::coordinator::shard::shard_counter_stats();
+    assert!(merges > 0, "sharded run built no merged selections");
+    assert!(merge_edges > 0);
+}
+
+#[test]
+fn saint_rejects_sharding_with_a_clear_error() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 5).unwrap();
+    let err = train(&b, &ds, &cfg(ModelKind::Saint, 4, 2));
+    let msg = format!("{:#}", err.err().expect("SAINT + --shards must be rejected"));
+    assert!(msg.contains("--shards"), "diagnostic should name the flag: {msg}");
+}
+
+#[test]
+fn resume_is_bit_identical_under_sharding() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+    let path = tmp("resume2");
+    cleanup(&path);
+
+    let reference = train(&b, &ds, &cfg(ModelKind::Sage, 12, 2)).unwrap();
+
+    let mut with_ckpt = cfg(ModelKind::Sage, 12, 2);
+    with_ckpt.checkpoint_every = 5;
+    with_ckpt.checkpoint_path = Some(path.clone());
+    let saved = train(&b, &ds, &with_ckpt).unwrap();
+    assert_eq!(saved.weights_fingerprint, reference.weights_fingerprint);
+
+    // the snapshot carries one EngineState per shard replica
+    let ck = rsc::train::checkpoint::load(&path).unwrap();
+    assert_eq!(ck.shards, 2);
+    assert_eq!(ck.engines.len(), 2, "one engine state per shard");
+
+    let mut resumed_cfg = cfg(ModelKind::Sage, 12, 2);
+    resumed_cfg.resume = Some(path.clone());
+    let resumed = train(&b, &ds, &resumed_cfg).unwrap();
+    assert_eq!(resumed.resumed_at, Some(10));
+    assert_eq!(resumed.weights_fingerprint, reference.weights_fingerprint);
+    assert_eq!(resumed.loss_curve, reference.loss_curve);
+    cleanup(&path);
+}
+
+#[test]
+fn resume_with_mismatched_shard_count_is_a_clear_error() {
+    let b = NativeBackend::synthesize("tiny").unwrap();
+    let ds = load_or_generate("tiny", 42).unwrap();
+    let path = tmp("mismatch");
+    cleanup(&path);
+
+    let mut with_ckpt = cfg(ModelKind::Gcn, 12, 4);
+    with_ckpt.checkpoint_every = 5;
+    with_ckpt.checkpoint_path = Some(path.clone());
+    train(&b, &ds, &with_ckpt).unwrap();
+
+    for wrong in [1usize, 2] {
+        let mut resumed_cfg = cfg(ModelKind::Gcn, 12, wrong);
+        resumed_cfg.resume = Some(path.clone());
+        let err = train(&b, &ds, &resumed_cfg);
+        let msg = format!("{:#}", err.err().expect("shard-count mismatch must error"));
+        assert!(
+            msg.contains("--shards 4"),
+            "diagnostic should say which count to resume with: {msg}"
+        );
+    }
+    cleanup(&path);
+}

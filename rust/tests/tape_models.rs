@@ -9,7 +9,7 @@
 //!   learns tiny under the full RSC mechanism, with the allocator seeing
 //!   the graph's auto-discovered site list.
 
-use rsc::coordinator::{RscConfig, RscEngine};
+use rsc::coordinator::{RscConfig, RscEngine, TrainEngine};
 use rsc::data::load_or_generate;
 use rsc::graph::ReorderKind;
 use rsc::model::ops::{ModelKind, OpNames};
@@ -38,14 +38,16 @@ fn finite_difference_gradients_for_every_model() {
         let bufs = full_graph_bufs(&b, &ds, kind);
         let mut rng = Rng::new(0xFD ^ kind.name().len() as u64);
         let mut model = GraphModel::new(kind, &ds.cfg, OpNames::full(), &mut rng);
-        let mut engine = RscEngine::new(
-            RscConfig::baseline(),
-            bufs.matrix.clone(),
-            bufs.caps.clone(),
-            model.graph.site_widths(),
-            8,
-        )
-        .unwrap();
+        let mut engine = TrainEngine::Single(
+            RscEngine::new(
+                RscConfig::baseline(),
+                bufs.matrix.clone(),
+                bufs.caps.clone(),
+                model.graph.site_widths(),
+                8,
+            )
+            .unwrap(),
+        );
         // the engine's site registry is exactly the graph's site list
         assert_eq!(engine.n_sites(), model.graph.sites.len(), "{kind:?}");
         let mut tb = TimeBook::new();

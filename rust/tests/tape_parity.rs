@@ -9,7 +9,7 @@
 //! trains under both implementations from the same seed and engine
 //! config; per-epoch losses and final weights must be identical f32s.
 
-use rsc::coordinator::{RscConfig, RscEngine};
+use rsc::coordinator::{RscConfig, RscEngine, TrainEngine};
 use rsc::data::{load_or_generate, Dataset, Split};
 use rsc::model::ops::{GraphBufs, ModelKind, OpNames};
 use rsc::model::GraphModel;
@@ -59,7 +59,7 @@ fn run_tape(kind: ModelKind, ds: &Dataset, threads: usize) -> Run {
     let bufs = bufs_for(&b, ds, kind, par);
     let mut rng = Rng::new(SEED);
     let mut model = GraphModel::new(kind, &ds.cfg, OpNames::full(), &mut rng);
-    let mut engine = engine_for(&bufs, model.graph.site_widths(), par);
+    let mut engine = TrainEngine::Single(engine_for(&bufs, model.graph.site_widths(), par));
     let x = Value::mat_f32(ds.cfg.v, ds.cfg.d_in, ds.features.clone());
     let labels = Value::vec_i32(ds.labels_i32().unwrap().to_vec());
     let mask = Value::vec_f32(ds.mask(Split::Train));
